@@ -1,0 +1,71 @@
+//! FPOP/APEX equation-of-state flow (paper Fig. 3): preprocessing →
+//! prepfp → concurrent runfp tasks → postprocessing, then an APEX "joint"
+//! job computing the property table.
+//!
+//! Demonstrates the reusable `preprunfp` super-OP consumed by two different
+//! workflows (FPOP's core reusability claim, §3.1) and the restart
+//! mechanism: the EOS flow is resubmitted with all `fp-*` steps reused.
+//!
+//! Run: `make artifacts && cargo run --release --example eos_workflow`
+
+use dflow::apps::{apex, fpop};
+use dflow::engine::Engine;
+use dflow::runtime::Runtime;
+
+fn main() {
+    let Some(rt) = Runtime::global() else {
+        eprintln!("artifacts/ not built — run `make artifacts` first");
+        std::process::exit(1);
+    };
+    let engine = Engine::builder().runtime(rt).build();
+    let scales = [0.85, 0.9, 0.95, 1.0, 1.05, 1.1, 1.15];
+
+    // -- Fig. 3: EOS flow ----------------------------------------------------
+    println!("FPOP EOS flow: 1 relax + {} concurrent FP tasks", scales.len());
+    let wf = fpop::eos_workflow(7, &scales, 2);
+    let t0 = std::time::Instant::now();
+    let r = engine.run(&wf).expect("validation");
+    assert!(r.succeeded(), "{:?}", r.error);
+    let cold = t0.elapsed();
+
+    println!("\n  scale^3 (V/V_ref)    E_total");
+    let es = r.outputs.params["energies"].as_list().unwrap();
+    for (i, s) in scales.iter().enumerate() {
+        println!(
+            "  {:>8.4}          {:>10.4}",
+            s * s * s,
+            es[i].as_float().unwrap_or(f64::NAN)
+        );
+    }
+    let (v0, e0, b0) = (
+        r.outputs.params["v0"].as_float().unwrap(),
+        r.outputs.params["e0"].as_float().unwrap(),
+        r.outputs.params["b0"].as_float().unwrap(),
+    );
+    println!("\n  EOS fit: V0/Vref = {v0:.4}, E0 = {e0:.3}, B0 = {b0:.3}");
+    assert!(b0 > 0.0 && e0 < 0.0);
+
+    // -- §2.5 restart: resubmit reusing all completed FP tasks ---------------
+    let t1 = std::time::Instant::now();
+    let r2 = engine.run_with_reuse(&wf, r.run.all_keyed()).expect("validation");
+    let warm = t1.elapsed();
+    assert!(r2.succeeded());
+    println!(
+        "\n  restart with reuse: {} steps reused, {:.2}s -> {:.2}s",
+        r2.run.metrics.steps_reused.get(),
+        cold.as_secs_f64(),
+        warm.as_secs_f64()
+    );
+
+    // -- Fig. 4: APEX joint job over the same preprunfp super-OP -------------
+    println!("\nAPEX joint job (relaxation + property DAG):");
+    let r3 = engine.run(&apex::joint_workflow(7, &scales)).expect("validation");
+    assert!(r3.succeeded(), "{:?}", r3.error);
+    for key in ["relax_energy", "v0", "e0", "b0", "e_cohesive"] {
+        println!(
+            "  {key:<14} = {:.4}",
+            r3.outputs.params[key].as_float().unwrap()
+        );
+    }
+    println!("\neos_workflow OK");
+}

@@ -1,0 +1,66 @@
+//! Perf probe for EXPERIMENTS.md §Perf: isolates the L3 per-step cost at
+//! width 5000 under different engine knobs (trace on/off, parallelism).
+//!
+//! Run: `cargo run --release --example perf_probe`
+
+use std::sync::Arc;
+
+use dflow::core::{
+    ContainerTemplate, FnOp, ParamType, Signature, Slices, Step, Steps, Value, Workflow,
+};
+use dflow::engine::{Engine, EngineConfig};
+
+fn fan(width: usize, parallelism: usize) -> Workflow {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_param("o", ParamType::Int),
+        |ctx| {
+            ctx.set("o", ctx.get_int("i")?);
+            Ok(())
+        },
+    ));
+    Workflow::new("fan")
+        .container(ContainerTemplate::new("op", op))
+        .steps(
+            Steps::new("main").then(
+                Step::new("fan", "op")
+                    .param("i", Value::ints(0..width as i64))
+                    .slices(Slices::over("i").stack("o").parallelism(parallelism)),
+            ),
+        )
+        .entrypoint("main")
+}
+
+fn time_case(name: &str, engine: &Engine, wf: &Workflow, width: usize) {
+    // warm
+    engine.run(wf).unwrap();
+    let n = 3;
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        let r = engine.run(wf).unwrap();
+        assert!(r.succeeded());
+    }
+    let per = t0.elapsed().as_secs_f64() * 1e6 / (n as f64 * width as f64);
+    println!("{name:<48} {per:>8.2} µs/step");
+}
+
+fn main() {
+    let width = 5000;
+    for parallelism in [64usize, 256] {
+        let wf = fan(width, parallelism);
+        let default_engine = Engine::builder().parallelism(parallelism).build();
+        time_case(
+            &format!("baseline (trace on, par {parallelism})"),
+            &default_engine,
+            &wf,
+            width,
+        );
+        let cfg = EngineConfig { trace_cap: 0, ..Default::default() };
+        let no_trace = Engine::builder().parallelism(parallelism).config(cfg).build();
+        time_case(
+            &format!("trace disabled (cap=0, par {parallelism})"),
+            &no_trace,
+            &wf,
+            width,
+        );
+    }
+}

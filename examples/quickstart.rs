@@ -1,0 +1,125 @@
+//! Quickstart: a guided tour of the workflow language (paper §2).
+//!
+//! Builds and runs a small workflow exercising every §2 feature: typed OPs,
+//! steps + DAG super-OPs, slices map/reduce, conditions, retry policies,
+//! keys, and artifact passing — no AOT artifacts needed.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use dflow::core::{
+    ContainerTemplate, Dag, Expr, FnOp, OpError, Operand, ParamType, Signature, Slices, Step,
+    StepPolicy, Steps, Value, Workflow,
+};
+use dflow::engine::Engine;
+
+fn main() {
+    // -- 1. define OPs: signature + body, strictly typed (paper §2.1) ------
+    let square = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        |ctx| {
+            let x = ctx.get_int("x")?;
+            ctx.set("y", x * x);
+            Ok(())
+        },
+    ));
+
+    let sum = Arc::new(FnOp::new(
+        Signature::new().in_param("xs", ParamType::List).out_param("total", ParamType::Int),
+        |ctx| {
+            let total: i64 = ctx.get_list("xs")?.iter().filter_map(Value::as_int).sum();
+            ctx.set("total", total);
+            Ok(())
+        },
+    ));
+
+    // an OP that fails transiently on its first attempts (to show retries)
+    let attempts = Arc::new(std::sync::atomic::AtomicU32::new(0));
+    let a2 = attempts.clone();
+    let flaky_report = Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("total", ParamType::Int)
+            .out_param("report", ParamType::Str)
+            .out_artifact("report.txt"),
+        move |ctx| {
+            if a2.fetch_add(1, std::sync::atomic::Ordering::SeqCst) < 2 {
+                return Err(OpError::Transient("simulated network blip".into()));
+            }
+            let total = ctx.get_int("total")?;
+            let report = format!("sum of squares = {total}");
+            ctx.write_artifact("report.txt", report.as_bytes())?;
+            ctx.set("report", report);
+            Ok(())
+        },
+    ));
+
+    // -- 2. map/reduce with Slices (§2.3) inside a DAG super-OP (§2.2) -----
+    let mut retry = StepPolicy::default();
+    retry.retries = 5;
+    let analysis = Dag::new("analysis")
+        .signature(
+            Signature::new()
+                .in_param("values", ParamType::List)
+                .out_param("report", ParamType::Str),
+        )
+        .task(
+            Step::new("map", "square")
+                .param("x", dflow::core::ParamSrc::Input("values".into()))
+                .slices(Slices::over("x").stack("y").parallelism(4))
+                .key("square-{{item}}"),
+        )
+        .task(Step::new("reduce", "sum").param_from_step("xs", "map", "y"))
+        .task(
+            Step::new("report", "report")
+                .param_from_step("total", "reduce", "total")
+                .policy(retry),
+        )
+        .out_param_from("report", "report", "report");
+
+    // -- 3. a conditional step (§2.2) in the top-level Steps ----------------
+    let celebrate = Arc::new(FnOp::new(
+        Signature::new().out_param("msg", ParamType::Str),
+        |ctx| {
+            ctx.set("msg", "big result! 🎉");
+            Ok(())
+        },
+    ));
+    let main = Steps::new("main")
+        .then(Step::new("analyze", "analysis").param("values", Value::ints(1..=10)))
+        .then(
+            Step::new("celebrate", "celebrate").when(Expr::gt(
+                // condition on a sibling's output, evaluated at runtime
+                Operand::StepOutput { step: "analyze".into(), name: "report".into() },
+                Operand::Const(Value::Str(String::new())),
+            )),
+        )
+        .out_param_from("report", "analyze", "report");
+
+    let wf = Workflow::new("quickstart")
+        .container(ContainerTemplate::new("square", square))
+        .container(ContainerTemplate::new("sum", sum))
+        .container(ContainerTemplate::new("report", flaky_report))
+        .container(ContainerTemplate::new("celebrate", celebrate))
+        .dag(analysis)
+        .steps(main)
+        .entrypoint("main");
+
+    // -- 4. run and observe (§2.1 "real-time status tracking") --------------
+    let engine = Engine::local();
+    let result = engine.run(&wf).expect("validation");
+    println!("phase: {:?}", result.run.phase());
+    println!("report: {}", result.outputs.params["report"].display());
+    println!(
+        "steps: {} succeeded, {} retried, {} reused",
+        result.run.metrics.steps_succeeded.get(),
+        result.run.metrics.retries.get(),
+        result.run.metrics.steps_reused.get(),
+    );
+    // every keyed step is queryable for reuse in a future submission (§2.5)
+    let reusable = result.run.all_keyed();
+    println!("{} keyed steps available for reuse, e.g. {:?}", reusable.len(), reusable[0].key);
+    assert!(result.succeeded());
+    assert_eq!(result.outputs.params["report"], Value::Str("sum of squares = 385".into()));
+    println!("quickstart OK");
+}

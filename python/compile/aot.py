@@ -1,0 +1,116 @@
+"""AOT lowering: every L2 entry point → artifacts/*.hlo.txt (+ metadata).
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Also emits:
+  * ``params_init.bin``  — deterministic initial NN parameters (raw f32 LE),
+    plus three perturbed ensemble members for model-deviation screening.
+  * ``manifest.json``    — shapes + constants the Rust side sanity-checks
+    against rust/src/runtime/shapes.rs at startup.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entry_points():
+    """name -> (fn, example_args). Shapes are the single source of truth."""
+    n, k, b = M.N_ATOMS, M.N_DESC, M.BATCH
+    p = M.PARAM_DIM
+    return {
+        "lj_ef": (M.lj_ef, (f32(n, 3),)),
+        "md_step": (M.md_step, (f32(n, 3), f32(n, 3))),
+        "descriptor": (M.descriptor, (f32(n, 3),)),
+        "nn_ef": (M.nn_ef, (f32(p), f32(n, 3))),
+        "train_step": (
+            M.train_step,
+            (f32(p), f32(p), f32(p), f32(), f32(b, n, 3), f32(b), f32(b, n, 3)),
+        ),
+        "eos_batch": (M.eos_batch, (f32(M.EOS_POINTS, n, 3),)),
+        "dock_score": (M.dock_score, (f32(M.DOCK_BATCH, M.DOCK_FEATS),)),
+    }
+
+
+def manifest():
+    return {
+        "n_atoms": M.N_ATOMS,
+        "n_desc": M.N_DESC,
+        "hidden": M.HIDDEN,
+        "batch": M.BATCH,
+        "eos_points": M.EOS_POINTS,
+        "dock_batch": M.DOCK_BATCH,
+        "dock_feats": M.DOCK_FEATS,
+        "param_dim": int(M.PARAM_DIM),
+        "md_substeps": M.MD_SUBSTEPS,
+        "md_dt": M.MD_DT,
+        "ensemble": 4,
+        "artifacts": sorted(entry_points().keys()),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None,
+                    help="artifact directory (default: <repo>/artifacts)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of entry points")
+    args = ap.parse_args()
+
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    out_dir = args.out_dir or os.path.join(repo, "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+
+    eps = entry_points()
+    names = args.only.split(",") if args.only else sorted(eps.keys())
+    for name in names:
+        fn, ex = eps[name]
+        lowered = jax.jit(fn).lower(*ex)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] {name}: {len(text)} chars -> {path}")
+
+    # NN parameter ensemble (member 0 = canonical init; 1..3 = reseeded)
+    members = [np.asarray(M.init_params(seed)) for seed in range(4)]
+    blob = np.stack(members).astype("<f4")
+    pi = os.path.join(out_dir, "params_init.bin")
+    blob.tofile(pi)
+    print(f"[aot] params ensemble {blob.shape} -> {pi}")
+
+    mf = os.path.join(out_dir, "manifest.json")
+    with open(mf, "w") as f:
+        json.dump(manifest(), f, indent=2, sort_keys=True)
+    print(f"[aot] manifest -> {mf}")
+
+
+if __name__ == "__main__":
+    main()

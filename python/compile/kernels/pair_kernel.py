@@ -1,0 +1,201 @@
+"""L1 Pallas kernels: tiled O(N^2) pairwise interactions.
+
+This is the compute hot-spot of every payload in the paper's application
+section (MD exploration, first-principles labeling surrogate, descriptor
+featurization for the NN potential). The CUDA-era formulation of this kernel
+is a threadblock-tiled pair loop staging atom coordinates through shared
+memory; the TPU re-think (DESIGN.md §Hardware-Adaptation) tiles atoms into
+(TILE_I, TILE_J) position blocks staged through VMEM via BlockSpec, with the
+J-tile accumulation expressed as the second (sequential) grid dimension.
+
+All kernels are lowered with interpret=True: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and correctness is what we validate here; TPU
+performance is estimated analytically in EXPERIMENTS.md §Perf.
+
+Physics: Lennard-Jones (sigma=1, epsilon=1) with a smooth C^1 switching
+function so MD forces are continuous at the cutoff, plus Behler-style
+Gaussian radial symmetry functions as per-atom descriptors.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# -- physics constants (shared with ref.py and model.py) ---------------------
+
+SIGMA = 1.0
+EPSILON = 1.0
+R_CUT = 2.5  # LJ cutoff (in units of sigma)
+R_ON = 2.0   # switching function turn-on radius
+
+# descriptor radial basis
+N_DESC = 16
+DESC_MU_LO = 0.8
+DESC_MU_HI = 2.5
+DESC_SIGMA = 0.30
+
+# default tiling; must divide the atom count
+TILE_I = 32
+TILE_J = 32
+
+
+def _switch(r2):
+    """C^1 switching function in r^2: 1 below R_ON, 0 above R_CUT."""
+    on2, cut2 = R_ON * R_ON, R_CUT * R_CUT
+    t = jnp.clip((cut2 - r2) / (cut2 - on2), 0.0, 1.0)
+    # cubic smoothstep (C^1 at both ends)
+    return t * t * (3.0 - 2.0 * t)
+
+
+def _switch_grad_r2(r2):
+    """d switch / d r2 (piecewise; zero outside the switching window)."""
+    on2, cut2 = R_ON * R_ON, R_CUT * R_CUT
+    t = (cut2 - r2) / (cut2 - on2)
+    inside = (t > 0.0) & (t < 1.0)
+    dt = jnp.where(inside, 6.0 * t * (1.0 - t), 0.0)
+    return dt * (-1.0 / (cut2 - on2))
+
+
+def _pair_terms(r2, mask):
+    """LJ pair energy and dU/dr2 for masked squared distances.
+
+    Returns (u, du_dr2), both zeroed where mask is False. r2 is clamped away
+    from zero before any reciprocal so masked self-pairs never produce NaNs
+    (NaN * 0 is still NaN, so `where` on the *inputs* is mandatory).
+    """
+    r2s = jnp.where(mask, r2, 1.0)
+    inv_r2 = 1.0 / r2s
+    s6 = (SIGMA * SIGMA * inv_r2) ** 3
+    s12 = s6 * s6
+    u_raw = 4.0 * EPSILON * (s12 - s6)
+    # d u_raw / d r2 = 4 eps (-6 s12 + 3 s6) / r2
+    du_raw = 4.0 * EPSILON * (-6.0 * s12 + 3.0 * s6) * inv_r2
+    sw = _switch(r2s)
+    dsw = _switch_grad_r2(r2s)
+    u = u_raw * sw
+    du = du_raw * sw + u_raw * dsw
+    return jnp.where(mask, u, 0.0), jnp.where(mask, du, 0.0)
+
+
+def _pair_mask(r2, i_idx, j_idx):
+    """Valid-pair mask: within cutoff and not the self pair."""
+    not_self = i_idx[:, None] != j_idx[None, :]
+    return not_self & (r2 < R_CUT * R_CUT)
+
+
+# -- LJ energy + forces kernel ------------------------------------------------
+
+
+def _lj_kernel(xi_ref, xj_ref, e_ref, f_ref, *, tile_i, tile_j):
+    """One (I,J) tile: accumulate per-atom-I energies and forces from J atoms."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        e_ref[...] = jnp.zeros_like(e_ref)
+        f_ref[...] = jnp.zeros_like(f_ref)
+
+    xi = xi_ref[...]  # (TILE_I, 3)
+    xj = xj_ref[...]  # (TILE_J, 3)
+    disp = xi[:, None, :] - xj[None, :, :]          # (TI, TJ, 3)
+    r2 = jnp.sum(disp * disp, axis=-1)              # (TI, TJ)
+
+    gi = i * tile_i + jax.lax.iota(jnp.int32, tile_i)
+    gj = j * tile_j + jax.lax.iota(jnp.int32, tile_j)
+    mask = _pair_mask(r2, gi, gj)
+
+    u, du = _pair_terms(r2, mask)
+    # per-atom energy: half of each pair (each pair counted from both sides)
+    e_ref[...] += 0.5 * jnp.sum(u, axis=1)
+    # F_i = -dU/dx_i = -sum_j 2 * du_dr2 * (x_i - x_j)
+    f_ref[...] += jnp.sum(-2.0 * du[:, :, None] * disp, axis=1)
+
+
+def lj_energy_forces(x, *, tile_i=TILE_I, tile_j=TILE_J):
+    """Per-atom LJ energies (n,) and forces (n,3) via the tiled Pallas kernel."""
+    n = x.shape[0]
+    assert n % tile_i == 0 and n % tile_j == 0, (n, tile_i, tile_j)
+    grid = (n // tile_i, n // tile_j)
+    kernel = functools.partial(_lj_kernel, tile_i=tile_i, tile_j=tile_j)
+    e, f = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_i, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_j, 3), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_i,), lambda i, j: (i,)),
+            pl.BlockSpec((tile_i, 3), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((n, 3), x.dtype),
+        ],
+        interpret=True,
+    )(x, x)
+    return e, f
+
+
+# -- descriptor kernel --------------------------------------------------------
+
+
+def _desc_kernel(xi_ref, xj_ref, d_ref, *, tile_i, tile_j, inv_two_s2):
+    """One (I,J) tile of Behler-style radial symmetry functions."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    # radial basis centers, built in-kernel (pallas_call forbids captured
+    # constants; an iota is free anyway)
+    mu = DESC_MU_LO + jax.lax.iota(jnp.float32, N_DESC) * (
+        (DESC_MU_HI - DESC_MU_LO) / (N_DESC - 1)
+    )
+
+    @pl.when(j == 0)
+    def _init():
+        d_ref[...] = jnp.zeros_like(d_ref)
+
+    xi = xi_ref[...]
+    xj = xj_ref[...]
+    disp = xi[:, None, :] - xj[None, :, :]
+    r2 = jnp.sum(disp * disp, axis=-1)
+
+    gi = i * tile_i + jax.lax.iota(jnp.int32, tile_i)
+    gj = j * tile_j + jax.lax.iota(jnp.int32, tile_j)
+    mask = _pair_mask(r2, gi, gj)
+
+    r2s = jnp.where(mask, r2, 1.0)
+    r = jnp.sqrt(r2s)
+    sw = jnp.where(mask, _switch(r2s), 0.0)         # (TI, TJ)
+    # (TI, TJ, K) Gaussian basis, masked by the switching function
+    g = jnp.exp(-((r[:, :, None] - mu[None, None, :]) ** 2) * inv_two_s2)
+    d_ref[...] += jnp.sum(g * sw[:, :, None], axis=1)
+
+
+def descriptors(x, *, tile_i=TILE_I, tile_j=TILE_J):
+    """Per-atom radial symmetry-function descriptors, shape (n, N_DESC)."""
+    n = x.shape[0]
+    assert n % tile_i == 0 and n % tile_j == 0, (n, tile_i, tile_j)
+    grid = (n // tile_i, n // tile_j)
+    kernel = functools.partial(
+        _desc_kernel,
+        tile_i=tile_i,
+        tile_j=tile_j,
+        inv_two_s2=1.0 / (2.0 * DESC_SIGMA * DESC_SIGMA),
+    )
+    (d,) = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_i, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_j, 3), lambda i, j: (j, 0)),
+        ],
+        out_specs=[pl.BlockSpec((tile_i, N_DESC), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, N_DESC), x.dtype)],
+        interpret=True,
+    )(x, x)
+    return d

@@ -1,0 +1,68 @@
+"""Pure-jnp correctness oracle for the Pallas pair kernels.
+
+Dense O(N^2) formulations with no tiling; `python/tests/test_kernel.py`
+sweeps shapes/dtypes with hypothesis and asserts allclose between these and
+`pair_kernel.py`. These are also the *differentiable* path used by the L2
+model for force predictions (pallas_call has no transpose rule; the forward
+descriptor featurization in the training loss uses the Pallas kernel, the
+-dE/dx force head uses this oracle — numerics are identical by these tests).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .pair_kernel import (
+    DESC_MU_HI,
+    DESC_MU_LO,
+    DESC_SIGMA,
+    N_DESC,
+    R_CUT,
+    _pair_mask,
+    _pair_terms,
+    _switch,
+)
+
+
+def _pair_geometry(x):
+    n = x.shape[0]
+    disp = x[:, None, :] - x[None, :, :]
+    r2 = jnp.sum(disp * disp, axis=-1)
+    idx = jnp.arange(n)
+    mask = _pair_mask(r2, idx, idx)
+    return disp, r2, mask
+
+
+def lj_energy_forces_ref(x):
+    """Per-atom LJ energies (n,) and forces (n,3), dense reference."""
+    disp, r2, mask = _pair_geometry(x)
+    u, du = _pair_terms(r2, mask)
+    e = 0.5 * jnp.sum(u, axis=1)
+    f = jnp.sum(-2.0 * du[:, :, None] * disp, axis=1)
+    return e, f
+
+
+def lj_total_energy_ref(x):
+    """Total potential energy (scalar), dense reference."""
+    e, _ = lj_energy_forces_ref(x)
+    return jnp.sum(e)
+
+
+def descriptors_ref(x):
+    """Per-atom radial symmetry-function descriptors (n, N_DESC), dense."""
+    _, r2, mask = _pair_geometry(x)
+    r2s = jnp.where(mask, r2, 1.0)
+    r = jnp.sqrt(r2s)
+    sw = jnp.where(mask, _switch(r2s), 0.0)
+    mu = jnp.linspace(DESC_MU_LO, DESC_MU_HI, N_DESC, dtype=x.dtype)
+    g = jnp.exp(-((r[:, :, None] - mu[None, None, :]) ** 2)
+                / (2.0 * DESC_SIGMA * DESC_SIGMA))
+    return jnp.sum(g * sw[:, :, None], axis=1)
+
+
+__all__ = [
+    "lj_energy_forces_ref",
+    "lj_total_energy_ref",
+    "descriptors_ref",
+    "R_CUT",
+]

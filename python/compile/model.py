@@ -1,0 +1,227 @@
+"""L2: JAX compute graphs for the science payloads orchestrated by dflow-rs.
+
+Every public entry point here is AOT-lowered by `aot.py` to HLO text with
+*fixed shapes* (the artifact inventory in DESIGN.md) and executed from the
+Rust coordinator via PJRT. Python never runs on the request path.
+
+Payloads (mapping to the paper's §3 applications):
+  * ``lj_ef``        — Lennard-Jones energies/forces (Pallas kernel). This is
+                       the "first-principles labeling" surrogate (DFT→LJ
+                       substitution, DESIGN.md).
+  * ``md_step``      — velocity-Verlet NVE integrator with LJ forces +
+                       confinement, SUBSTEPS at a time (exploration OP).
+  * ``descriptor``   — per-atom symmetry functions (Pallas kernel).
+  * ``nn_ef``        — NN-potential energy + forces (differentiable path).
+  * ``train_step``   — one Adam step on the energy+force matching loss.
+  * ``eos_batch``    — total energies over a volume scan (FPOP/APEX EOS).
+  * ``dock_score``   — synthetic docking-score model (VSW funnel).
+
+The NN potential is a per-atom MLP on radial symmetry functions, i.e. a
+miniature Behler–Parrinello/DeePMD-style model; parameters travel as a single
+flat f32 vector so the Rust side handles exactly one buffer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pair_kernel as pk
+from .kernels import ref
+
+# -- fixed problem shapes (must match rust/src/runtime/shapes.rs) -------------
+
+N_ATOMS = 64
+N_DESC = pk.N_DESC          # 16
+HIDDEN = 64
+BATCH = 8                   # training batch (configurations)
+EOS_POINTS = 7              # volume-scan points
+DOCK_BATCH = 256            # molecules per docking shard
+DOCK_FEATS = 8
+
+MD_SUBSTEPS = 20
+MD_DT = 0.005
+CONFINE_R0 = 4.0            # confinement shell radius
+CONFINE_K = 5.0
+
+# descriptor whitening constants (fixed so the graph is static; values chosen
+# from the typical scale of the radial symmetry functions at LJ density ~1.0)
+DESC_SHIFT = 6.0
+DESC_SCALE = 4.0
+
+# Adam
+ADAM_LR = 1e-3
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+FORCE_LOSS_WEIGHT = 1.0
+
+# flat parameter layout: [W1(16x64), b1(64), W2(64x64), b2(64), W3(64x1), b3(1)]
+_SHAPES = [
+    (N_DESC, HIDDEN),
+    (HIDDEN,),
+    (HIDDEN, HIDDEN),
+    (HIDDEN,),
+    (HIDDEN, 1),
+    (1,),
+]
+PARAM_DIM = sum(
+    int(jnp.prod(jnp.array(s, dtype=jnp.int32))) for s in _SHAPES
+)
+
+
+def unpack_params(theta):
+    """Split the flat parameter vector into the MLP weight list."""
+    out, off = [], 0
+    for s in _SHAPES:
+        size = 1
+        for d in s:
+            size *= d
+        out.append(theta[off:off + size].reshape(s))
+        off += size
+    return out
+
+
+def init_params(seed: int = 0):
+    """Deterministic He-style init, returned as the flat vector."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for s in _SHAPES:
+        key, sub = jax.random.split(key)
+        if len(s) == 2:
+            scale = jnp.sqrt(2.0 / s[0])
+            chunks.append(scale * jax.random.normal(sub, s, jnp.float32))
+        else:
+            chunks.append(jnp.zeros(s, jnp.float32))
+    return jnp.concatenate([c.reshape(-1) for c in chunks])
+
+
+# -- NN potential ----------------------------------------------------------------
+
+
+def _atom_energies(theta, d):
+    """Per-atom energies from whitened descriptors d (n, N_DESC)."""
+    w1, b1, w2, b2, w3, b3 = unpack_params(theta)
+    h = (d - DESC_SHIFT) / DESC_SCALE
+    h = jnp.tanh(h @ w1 + b1)
+    h = jnp.tanh(h @ w2 + b2)
+    return (h @ w3 + b3)[:, 0]
+
+
+def nn_energy(theta, x):
+    """Total NN-potential energy. Differentiable in both args (uses the
+    dense descriptor oracle; identical numerics to the Pallas kernel —
+    asserted by python/tests/test_kernel.py)."""
+    return jnp.sum(_atom_energies(theta, ref.descriptors_ref(x)))
+
+
+def nn_ef(theta, x):
+    """(total energy, forces) of the NN potential."""
+    e, negf = jax.value_and_grad(nn_energy, argnums=1)(theta, x)
+    return e, -negf
+
+
+# -- training --------------------------------------------------------------------
+
+
+def _loss(theta, xs, e_labels, f_labels):
+    """Energy+force matching loss over a batch of configurations."""
+    es, fs = jax.vmap(lambda x: nn_ef(theta, x))(xs)
+    le = jnp.mean((es - e_labels) ** 2) / N_ATOMS
+    lf = jnp.mean((fs - f_labels) ** 2)
+    return le + FORCE_LOSS_WEIGHT * lf
+
+
+def train_step(theta, m, v, step, xs, e_labels, f_labels):
+    """One Adam step. All state travels as flat f32 vectors (+ scalar step).
+
+    Returns (theta', m', v', step+1, loss).
+    """
+    loss, g = jax.value_and_grad(_loss)(theta, xs, e_labels, f_labels)
+    t = step + 1.0
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m / (1.0 - ADAM_B1 ** t)
+    vhat = v / (1.0 - ADAM_B2 ** t)
+    theta = theta - ADAM_LR * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return theta, m, v, t, loss
+
+
+# -- LJ labeling / MD --------------------------------------------------------------
+
+
+def lj_ef(x):
+    """(total energy, per-atom energies, forces) via the Pallas pair kernel."""
+    e, f = pk.lj_energy_forces(x)
+    return jnp.sum(e), e, f
+
+
+def descriptor(x):
+    """Per-atom descriptors via the Pallas kernel (forward/inference path)."""
+    return pk.descriptors(x)
+
+
+def _confinement_force(x):
+    """Harmonic shell keeping the cluster from evaporating (no PBC)."""
+    r = jnp.sqrt(jnp.sum(x * x, axis=-1) + 1e-12)
+    over = jnp.maximum(r - CONFINE_R0, 0.0)
+    return -CONFINE_K * over[:, None] * (x / r[:, None])
+
+
+def _total_force(x):
+    _, f = pk.lj_energy_forces(x)
+    return f + _confinement_force(x)
+
+
+def md_step(x, v):
+    """MD_SUBSTEPS of velocity-Verlet NVE (LJ + confinement), unit mass.
+
+    Returns (x', v', potential energy, kinetic energy).
+    """
+    def body(carry, _):
+        x, v, f = carry
+        v_half = v + 0.5 * MD_DT * f
+        x_new = x + MD_DT * v_half
+        f_new = _total_force(x_new)
+        v_new = v_half + 0.5 * MD_DT * f_new
+        return (x_new, v_new, f_new), None
+
+    f0 = _total_force(x)
+    (x, v, _), _ = jax.lax.scan(body, (x, v, f0), None, length=MD_SUBSTEPS)
+    e, _, _ = lj_ef(x)
+    ke = 0.5 * jnp.sum(v * v)
+    return x, v, e, ke
+
+
+# -- EOS (FPOP / APEX) --------------------------------------------------------------
+
+
+def eos_batch(xs):
+    """Total LJ energies for EOS_POINTS volume-scaled configurations."""
+    es = []
+    for i in range(EOS_POINTS):
+        e, _, _ = lj_ef(xs[i])
+        es.append(e)
+    return jnp.stack(es)
+
+
+# -- docking surrogate (VSW) -----------------------------------------------------------
+
+
+def _pocket():
+    """Fixed pseudo-random "pocket" interaction matrix (deterministic)."""
+    key = jax.random.PRNGKey(1234)
+    return jax.random.normal(key, (DOCK_FEATS, DOCK_FEATS), jnp.float32) * 0.5
+
+
+def dock_score(feats):
+    """Synthetic docking-score model over molecule feature vectors.
+
+    score = saturating quadratic pocket interaction minus a bulk penalty —
+    smooth, deterministic, with a realistic left tail so top-k screening
+    behaves like a funnel.
+    """
+    a = _pocket()
+    inter = jnp.einsum("bi,ij,bj->b", feats, a, feats)
+    bulk = jnp.sum(feats * feats, axis=-1)
+    return -jnp.tanh(inter) * 5.0 - 0.3 * bulk

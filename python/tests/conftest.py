@@ -1,0 +1,29 @@
+"""Shared fixtures: physically-sane atomic configurations."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def lattice(n=64, a=1.2, jitter=0.05, seed=0):
+    """Perturbed simple-cubic cluster of n atoms (n must be a cube)."""
+    g = int(round(n ** (1.0 / 3.0)))
+    assert g * g * g == n, f"n={n} is not a cube"
+    pts = np.stack(
+        np.meshgrid(*[np.arange(g)] * 3, indexing="ij"), -1
+    ).reshape(-1, 3).astype(np.float32)
+    pts = (pts - (g - 1) / 2.0) * a
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(pts + rng.normal(0, jitter, pts.shape).astype(np.float32))
+
+
+@pytest.fixture
+def x64():
+    return lattice(64)
+
+
+@pytest.fixture
+def x64_hot():
+    return lattice(64, jitter=0.12, seed=7)

@@ -1,0 +1,55 @@
+"""AOT self-check: every entry point lowers to parseable HLO text and the
+manifest agrees with the model constants the Rust side will assert on."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+ART = os.path.join(REPO, "artifacts")
+
+
+class TestLowering:
+    @pytest.mark.parametrize("name", sorted(aot.entry_points().keys()))
+    def test_entry_point_lowers_to_hlo_text(self, name):
+        import jax
+
+        fn, ex = aot.entry_points()[name]
+        text = aot.to_hlo_text(jax.jit(fn).lower(*ex))
+        assert text.startswith("HloModule"), text[:80]
+        assert "ENTRY" in text
+
+    def test_entry_point_count_matches_design(self):
+        # DESIGN.md artifact inventory has 7 entries
+        assert len(aot.entry_points()) == 7
+
+
+class TestManifest:
+    def test_manifest_contents(self):
+        m = aot.manifest()
+        assert m["n_atoms"] == M.N_ATOMS == 64
+        assert m["param_dim"] == M.PARAM_DIM
+        assert m["ensemble"] == 4
+        assert set(m["artifacts"]) == set(aot.entry_points().keys())
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="run `make artifacts` first")
+class TestBuiltArtifacts:
+    def test_all_artifacts_present(self):
+        m = json.load(open(os.path.join(ART, "manifest.json")))
+        for name in m["artifacts"]:
+            p = os.path.join(ART, f"{name}.hlo.txt")
+            assert os.path.isfile(p), p
+            head = open(p).read(64)
+            assert head.startswith("HloModule")
+
+    def test_params_blob_size(self):
+        m = json.load(open(os.path.join(ART, "manifest.json")))
+        size = os.path.getsize(os.path.join(ART, "params_init.bin"))
+        assert size == m["ensemble"] * m["param_dim"] * 4

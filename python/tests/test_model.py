@@ -1,0 +1,171 @@
+"""L2 correctness: NN potential, training step, MD integrator, EOS, docking."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+from .conftest import lattice
+
+
+class TestParams:
+    def test_param_dim_matches_layout(self):
+        expected = (
+            M.N_DESC * M.HIDDEN + M.HIDDEN
+            + M.HIDDEN * M.HIDDEN + M.HIDDEN
+            + M.HIDDEN * 1 + 1
+        )
+        assert M.PARAM_DIM == expected
+
+    def test_init_deterministic(self):
+        a, b = M.init_params(3), M.init_params(3)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_init_seeds_differ(self):
+        assert not np.allclose(np.asarray(M.init_params(0)),
+                               np.asarray(M.init_params(1)))
+
+    def test_pack_unpack_roundtrip(self):
+        theta = M.init_params(0)
+        parts = M.unpack_params(theta)
+        flat = jnp.concatenate([p.reshape(-1) for p in parts])
+        np.testing.assert_allclose(np.asarray(flat), np.asarray(theta))
+
+
+class TestNNPotential:
+    def test_forces_are_minus_gradient(self, x64):
+        theta = M.init_params(0)
+        e, f = M.nn_ef(theta, x64)
+        g = jax.grad(M.nn_energy, argnums=1)(theta, x64)
+        np.testing.assert_allclose(np.asarray(f), -np.asarray(g), rtol=1e-5)
+
+    def test_energy_extensive_under_separation(self):
+        # two far-apart copies of a cluster => energy adds
+        theta = M.init_params(0)
+        x = lattice(64, a=1.1)
+        shift = jnp.zeros((64, 3)).at[:, 0].set(1e3)
+        e1 = M.nn_energy(theta, x)
+        # NOTE: model shapes are fixed at 64 atoms; evaluate the shifted copy
+        # separately and compare the sum against the "two clusters" intuition
+        e2 = M.nn_energy(theta, x + shift)
+        np.testing.assert_allclose(float(e1), float(e2), rtol=1e-4)
+
+    def test_ensemble_members_disagree(self, x64):
+        es = [float(M.nn_ef(M.init_params(s), x64)[0]) for s in range(4)]
+        assert len({round(e, 3) for e in es}) > 1
+
+
+class TestTrainStep:
+    def _batch(self):
+        xs = jnp.stack([lattice(64, jitter=0.06, seed=s) for s in range(M.BATCH)])
+        es, fs = [], []
+        for i in range(M.BATCH):
+            e, f = ref.lj_energy_forces_ref(xs[i])
+            es.append(jnp.sum(e))
+            fs.append(f)
+        return xs, jnp.stack(es), jnp.stack(fs)
+
+    def test_loss_decreases(self):
+        xs, es, fs = self._batch()
+        theta = M.init_params(0)
+        m = jnp.zeros_like(theta)
+        v = jnp.zeros_like(theta)
+        step = jnp.float32(0.0)
+        losses = []
+        fn = jax.jit(M.train_step)
+        for _ in range(30):
+            theta, m, v, step, loss = fn(theta, m, v, step, xs, es, fs)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
+
+    def test_step_counter_increments(self):
+        xs, es, fs = self._batch()
+        theta = M.init_params(0)
+        z = jnp.zeros_like(theta)
+        _, _, _, t1, _ = M.train_step(theta, z, z, jnp.float32(0.0), xs, es, fs)
+        assert float(t1) == 1.0
+
+    def test_finite_outputs(self):
+        xs, es, fs = self._batch()
+        theta = M.init_params(0)
+        z = jnp.zeros_like(theta)
+        out = M.train_step(theta, z, z, jnp.float32(0.0), xs, es, fs)
+        for o in out:
+            assert bool(jnp.all(jnp.isfinite(o)))
+
+
+class TestMDStep:
+    def test_energy_roughly_conserved(self, x64):
+        x, v = x64, jnp.zeros_like(x64)
+        e0, _, _ = M.lj_ef(x)
+        tot0 = None
+        for _ in range(10):
+            x, v, pe, ke = M.md_step(x, v)
+            tot = float(pe) + float(ke)
+            if tot0 is None:
+                tot0 = tot
+        # NVE with dt=0.005 from a near-lattice start: drift well under 5%
+        assert abs(tot - tot0) < 0.05 * abs(tot0) + 1.0
+
+    def test_positions_stay_confined(self, x64_hot):
+        x, v = x64_hot, jnp.zeros_like(x64_hot)
+        for _ in range(20):
+            x, v, _, _ = M.md_step(x, v)
+        r = np.linalg.norm(np.asarray(x), axis=1)
+        assert r.max() < M.CONFINE_R0 + 2.0
+
+    def test_static_lattice_stays_cold(self):
+        # perfect separation = no forces = nothing moves
+        x = jnp.zeros((64, 3), jnp.float32).at[:, 0].set(
+            jnp.arange(64, dtype=jnp.float32) * 3.0
+        )
+        # keep everything inside confinement by centering
+        x = x - jnp.mean(x, axis=0)
+        xs, vs, pe, ke = M.md_step(x, jnp.zeros_like(x))
+        # far-flung line exceeds the confinement shell, so just check finite
+        assert bool(jnp.all(jnp.isfinite(xs))) and bool(jnp.all(jnp.isfinite(vs)))
+
+
+class TestEOS:
+    def test_eos_has_minimum_inside_scan(self, x64):
+        # equilibrium sc-lattice spacing for this LJ is ~1.07; base a=1.2
+        scales = jnp.linspace(0.82, 1.18, M.EOS_POINTS)
+        xs = jnp.stack([x64 * s for s in scales])
+        es = M.eos_batch(xs)
+        i = int(jnp.argmin(es))
+        assert 0 < i < M.EOS_POINTS - 1, np.asarray(es)
+
+    def test_matches_single_evals(self, x64):
+        scales = jnp.linspace(0.9, 1.3, M.EOS_POINTS)
+        xs = jnp.stack([x64 * s for s in scales])
+        es = M.eos_batch(xs)
+        for i in range(M.EOS_POINTS):
+            e, _, _ = M.lj_ef(xs[i])
+            np.testing.assert_allclose(float(es[i]), float(e), rtol=1e-5)
+
+
+class TestDockScore:
+    def _feats(self, seed=0):
+        rng = np.random.default_rng(seed)
+        return jnp.asarray(rng.normal(0, 1, (M.DOCK_BATCH, M.DOCK_FEATS))
+                           .astype(np.float32))
+
+    def test_shape(self):
+        s = M.dock_score(self._feats())
+        assert s.shape == (M.DOCK_BATCH,)
+
+    def test_deterministic(self):
+        f = self._feats()
+        np.testing.assert_array_equal(np.asarray(M.dock_score(f)),
+                                      np.asarray(M.dock_score(f)))
+
+    def test_scores_spread(self):
+        s = np.asarray(M.dock_score(self._feats()))
+        assert s.std() > 0.1
+        # funnel shape: a distinct top tail exists
+        assert np.quantile(s, 0.99) - np.quantile(s, 0.5) > 0.5

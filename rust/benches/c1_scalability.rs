@@ -1,0 +1,148 @@
+//! C1 — "Dflow ... can scale to thousands of concurrent nodes per
+//! workflow" (abstract). Slice fan-out ramp with trivially-small OPs over a
+//! large simulated cluster; the interesting numbers are the per-step
+//! scheduler overhead (should stay flat) and the peak concurrency actually
+//! achieved (should track min(width, parallelism, cluster)).
+//!
+//! No AOT artifacts needed — this isolates the L3 coordinator.
+
+use std::sync::Arc;
+
+use dflow::bench_util::Bench;
+use dflow::cluster::{Cluster, Resources};
+use dflow::core::{
+    ContainerTemplate, FnOp, ParamType, Signature, Slices, Step, Steps, Value, Workflow,
+};
+use dflow::engine::Engine;
+
+fn fan_workflow(width: usize, parallelism: usize) -> Workflow {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_param("o", ParamType::Int),
+        |ctx| {
+            ctx.set("o", ctx.get_int("i")?);
+            Ok(())
+        },
+    ));
+    Workflow::new("fan")
+        .container(ContainerTemplate::new("op", op).resources(Resources::cpu(100)))
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "op")
+                        .param("i", Value::ints(0..width as i64))
+                        .slices(Slices::over("i").stack("o").parallelism(parallelism)),
+                )
+                .out_param_from("os", "fan", "o"),
+        )
+        .entrypoint("main")
+}
+
+fn sleepy_fan_workflow(width: usize, parallelism: usize) -> Workflow {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_param("o", ParamType::Int),
+        |ctx| {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            ctx.set("o", ctx.get_int("i")?);
+            Ok(())
+        },
+    ));
+    Workflow::new("fan")
+        .container(ContainerTemplate::new("op", op).resources(Resources::cpu(100)))
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "op")
+                        .param("i", Value::ints(0..width as i64))
+                        .slices(Slices::over("i").stack("o").parallelism(parallelism)),
+                )
+                .out_param_from("os", "fan", "o"),
+        )
+        .entrypoint("main")
+}
+
+fn main() {
+    let mut b = Bench::new("c1: scalability — slice fan-out ramp (no-op payload)");
+
+    // engine-only (no cluster): raw coordinator throughput
+    for width in [100usize, 500, 1000, 5000] {
+        let engine = Engine::builder().parallelism(256).build();
+        let wf = fan_workflow(width, 256);
+        let (r, t) = b.case(&format!("engine only, width {width}"), || {
+            let r = engine.run(&wf).unwrap();
+            assert!(r.succeeded(), "{:?}", r.error);
+            r
+        });
+        let per_step = t.as_secs_f64() * 1e6 / width as f64;
+        b.metric("  coordinator cost/step", per_step, "µs (expect ~flat)");
+        assert_eq!(r.outputs.params["os"].as_list().unwrap().len(), width);
+    }
+
+    // with the cluster simulator: thousands of pods through bin-packing.
+    // the payload sleeps 20ms (latency-bound, like a remote job) so
+    // hundreds of pods are genuinely concurrent even on one core
+    for width in [1000usize, 2000] {
+        // 128 nodes x 4 slots of 100 mCPU = 512 concurrent pods
+        let cluster = Arc::new(Cluster::uniform(128, Resources::cpu(400), 1));
+        let engine = Engine::builder().cluster(cluster.clone()).parallelism(512).build();
+        let wf = sleepy_fan_workflow(width, 512);
+        let (_, t) = b.case(&format!("with cluster sim, width {width}"), || {
+            let r = engine.run(&wf).unwrap();
+            assert!(r.succeeded(), "{:?}", r.error);
+            r
+        });
+        let (bound, released, peak) = cluster.stats();
+        assert_eq!(bound, width as u64);
+        assert_eq!(released, width as u64);
+        b.metric("  pods scheduled", bound as f64, "");
+        b.metric("  peak concurrent pods", peak as f64, "(cluster cap 512)");
+        assert!(peak >= 128, "concurrency did not materialize: {peak}");
+        // ideal makespan = width x 20ms / 512 concurrent
+        let ideal = width as f64 * 0.020 / 512.0;
+        b.metric("  makespan vs ideal", t.as_secs_f64() / ideal, "x (expect ~1-2)");
+        b.metric("  pod schedule+run cost", t.as_secs_f64() * 1e6 / width as f64, "µs/pod");
+    }
+
+    // deep recursion: a 200-iteration dynamic loop (serial scaling)
+    let inc = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_param("next", ParamType::Int),
+        |ctx| {
+            ctx.set("next", ctx.get_int("i")? + 1);
+            Ok(())
+        },
+    ));
+    let wf = Workflow::new("deep")
+        .container(ContainerTemplate::new("inc", inc))
+        .steps(
+            Steps::new("loop")
+                .signature(Signature::new().in_param("i", ParamType::Int))
+                .then(Step::new("body", "inc").param_from_input("i", "i"))
+                .then(
+                    Step::new("again", "loop")
+                        .param_from_step("i", "body", "next")
+                        .when(dflow::core::Expr::lt(
+                            dflow::core::Operand::StepOutput {
+                                step: "body".into(),
+                                name: "next".into(),
+                            },
+                            dflow::core::Operand::Const(Value::Int(200)),
+                        )),
+                ),
+        )
+        .entrypoint("loop")
+        .arg("i", 0i64);
+    let engine = Engine::local();
+    let (r, t) = b.case("200-deep recursive loop", || {
+        let r = engine.run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        r
+    });
+    b.metric("  cost per iteration", t.as_secs_f64() * 1e6 / 200.0, "µs");
+    assert_eq!(
+        r.run
+            .nodes()
+            .iter()
+            .filter(|n| n.path.ends_with("/body"))
+            .count(),
+        200
+    );
+}

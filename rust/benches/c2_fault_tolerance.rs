@@ -1,0 +1,138 @@
+//! C2 — §2.4 fault-tolerance policies: retries on transient errors,
+//! timeouts, and `continue_on` thresholds under swept failure rates.
+//!
+//! Expected shape: success probability of the whole workflow stays ~1 while
+//! the per-attempt failure rate rises (retries absorb it), at a makespan
+//! overhead ≈ 1/(1-p) per affected step; success-ratio policies keep sliced
+//! steps alive with zero retry cost.
+
+use std::sync::Arc;
+
+use dflow::bench_util::Bench;
+use dflow::core::{
+    ContainerTemplate, ContinueOn, FnOp, OpError, ParamType, Signature, Slices, Step,
+    StepPolicy, Steps, Value, Workflow,
+};
+use dflow::engine::Engine;
+use dflow::executor::FlakyExecutor;
+
+fn sliced_workflow(width: usize, policy: StepPolicy, continue_on: Option<ContinueOn>) -> Workflow {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_param("o", ParamType::Int),
+        |ctx| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            ctx.set("o", ctx.get_int("i")?);
+            Ok(())
+        },
+    ));
+    let mut slices = Slices::over("i").stack("o").parallelism(32);
+    if let Some(c) = continue_on {
+        slices = slices.continue_on(c);
+    }
+    Workflow::new("ft")
+        .container(ContainerTemplate::new("op", op))
+        .steps(Steps::new("main").then(
+            Step::new("fan", "op")
+                .param("i", Value::ints(0..width as i64))
+                .slices(slices)
+                .policy(policy),
+        ))
+        .entrypoint("main")
+}
+
+fn main() {
+    let mut b = Bench::new("c2: fault tolerance — retries / ratios / timeouts");
+    let width = 200usize;
+
+    // baseline
+    let engine = Engine::local();
+    let (_, t0) = b.case("0% failure baseline", || {
+        let r = engine.run(&sliced_workflow(width, StepPolicy::default(), None)).unwrap();
+        assert!(r.succeeded());
+    });
+
+    // retries absorb rising transient-failure rates
+    for rate in [0.1f64, 0.3, 0.5] {
+        let flaky = Arc::new(FlakyExecutor::new(rate, 99));
+        let engine = Engine::builder().executor("local", flaky.clone()).build();
+        let mut policy = StepPolicy::default();
+        policy.retries = 25;
+        let (r, t) = b.case(&format!("{:.0}% transient failures + retries", rate * 100.0), || {
+            let r = engine.run(&sliced_workflow(width, policy.clone(), None)).unwrap();
+            assert!(r.succeeded(), "{:?}", r.error);
+            r
+        });
+        // with spare slice parallelism, retries fill scheduling slack and
+        // the makespan stays ~flat; a fully-loaded serial system would pay
+        // ~1/(1-p)
+        b.metric("  retries consumed", r.run.metrics.retries.get() as f64, "");
+        b.metric(
+            "  makespan overhead",
+            t.as_secs_f64() / t0.as_secs_f64(),
+            "x (expect ~1 with spare parallelism)",
+        );
+    }
+
+    // success-ratio policy: fatal failures tolerated with zero retries
+    let fatal_op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_param("o", ParamType::Int),
+        |ctx| {
+            let i = ctx.get_int("i")?;
+            if i % 4 == 0 {
+                return Err(OpError::Fatal("hard shard failure".into()));
+            }
+            ctx.set("o", i);
+            Ok(())
+        },
+    ));
+    let wf = Workflow::new("ratio")
+        .container(ContainerTemplate::new("op", fatal_op))
+        .steps(Steps::new("main").then(
+            Step::new("fan", "op")
+                .param("i", Value::ints(0..width as i64))
+                .slices(
+                    Slices::over("i")
+                        .stack("o")
+                        .parallelism(32)
+                        .continue_on(ContinueOn::SuccessRatio(0.7)),
+                ),
+        ))
+        .entrypoint("main");
+    let engine = Engine::local();
+    let (r, _) = b.case("25% fatal failures, success_ratio=0.7", || {
+        let r = engine.run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        r
+    });
+    b.metric("  slices failed (tolerated)", r.run.metrics.steps_failed.get() as f64, "");
+    assert_eq!(r.run.metrics.retries.get(), 0);
+
+    // timeout policy: slow steps killed and (optionally) retried
+    let slow_once = {
+        let hit = Arc::new(std::sync::atomic::AtomicU32::new(0));
+        Arc::new(FnOp::new(
+            Signature::new().out_param("ok", ParamType::Bool),
+            move |ctx| {
+                if hit.fetch_add(1, std::sync::atomic::Ordering::SeqCst) == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(500));
+                }
+                ctx.set("ok", true);
+                Ok(())
+            },
+        ))
+    };
+    let mut policy = StepPolicy::default();
+    policy.timeout = Some(std::time::Duration::from_millis(50));
+    policy.timeout_transient = true;
+    policy.retries = 2;
+    let wf = Workflow::new("timeout")
+        .container(ContainerTemplate::new("op", slow_once))
+        .steps(Steps::new("main").then(Step::new("s", "op").policy(policy)))
+        .entrypoint("main");
+    let (r, _) = b.case("timeout kill + retry succeeds", || {
+        let r = Engine::local().run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        r
+    });
+    b.metric("  timeouts fired", r.run.metrics.timeouts.get() as f64, "(expect 1)");
+}

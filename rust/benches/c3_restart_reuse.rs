@@ -1,0 +1,101 @@
+//! C3 — §2.5 restart/reuse: speedup of resubmission vs cold run as the
+//! reusable fraction grows, plus the modify-outputs path.
+//!
+//! Expected shape: warm makespan ≈ (1 - reuse_fraction) x cold makespan
+//! (reuse lookups are ~free next to step bodies).
+
+use std::sync::Arc;
+
+use dflow::bench_util::Bench;
+use dflow::core::{
+    ContainerTemplate, FnOp, ParamType, Signature, Slices, Step, Steps, Value, Workflow,
+};
+use dflow::engine::{Engine, ReusedStep, StepOutputs};
+
+fn expensive_workflow(width: usize) -> Workflow {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_param("o", ParamType::Int),
+        |ctx| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            ctx.set("o", ctx.get_int("i")? * 10)
+                ;
+            Ok(())
+        },
+    ));
+    Workflow::new("exp")
+        .container(ContainerTemplate::new("op", op))
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "op")
+                        .param("i", Value::ints(0..width as i64))
+                        .slices(Slices::over("i").stack("o").parallelism(8))
+                        .key("step-{{item}}"),
+                )
+                .out_param_from("os", "fan", "o"),
+        )
+        .entrypoint("main")
+}
+
+fn main() {
+    let mut b = Bench::new("c3: restart/reuse — warm-start speedups");
+    let width = 64usize;
+    let engine = Engine::local();
+    let wf = expensive_workflow(width);
+
+    let (r_cold, t_cold) = b.case("cold run (64 x 5ms steps, parallelism 8)", || {
+        let r = engine.run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        r
+    });
+
+    for frac in [0.25f64, 0.5, 0.75, 1.0] {
+        let keep = (width as f64 * frac) as usize;
+        let reuse: Vec<ReusedStep> =
+            r_cold.run.all_keyed().into_iter().take(keep).collect();
+        let (r, t) = b.case(&format!("warm run, {:.0}% reusable", frac * 100.0), || {
+            let r = engine.run_with_reuse(&wf, reuse.clone()).unwrap();
+            assert!(r.succeeded(), "{:?}", r.error);
+            r
+        });
+        assert_eq!(r.run.metrics.steps_reused.get() as usize, keep);
+        let ideal = 1.0 / (1.0 - frac + 1e-3);
+        b.metric(
+            "  speedup",
+            t_cold.as_secs_f64() / t.as_secs_f64().max(1e-9),
+            &format!("x (ideal ~{ideal:.1})"),
+        );
+    }
+
+    // modify_output_parameter before reuse (paper: fix up results, resume)
+    let patched: Vec<ReusedStep> = r_cold
+        .run
+        .all_keyed()
+        .into_iter()
+        .map(|r| {
+            if r.key == "step-0" {
+                r.modify_output_parameter("o", 9999i64)
+            } else {
+                r
+            }
+        })
+        .collect();
+    let (r, _) = b.case("reuse with modified outputs", || {
+        engine.run_with_reuse(&wf, patched.clone()).unwrap()
+    });
+    assert_eq!(
+        r.outputs.params["os"].as_list().unwrap()[0],
+        Value::Int(9999),
+        "modified output did not propagate"
+    );
+    b.row("  modify_output_parameter", "patched value propagated downstream");
+
+    // reuse-lookup microcost
+    let mut out = StepOutputs::default();
+    out.params.insert("o".into(), Value::Int(1));
+    let reuse_all: Vec<ReusedStep> =
+        (0..width).map(|i| ReusedStep::new(format!("step-{i}"), out.clone())).collect();
+    b.case_n("full-reuse run (lookup cost only)", 10, || {
+        engine.run_with_reuse(&wf, reuse_all.clone()).unwrap()
+    });
+}

@@ -1,0 +1,59 @@
+//! F4 — Fig. 4 APEX job types: relaxation, property, joint.
+//!
+//! Expected shape: property ≈ the dominant cost (concurrent FP tasks);
+//! joint ≈ relaxation + property (streamlined, no manual handoff); the
+//! computed properties are physically sane and consistent across job types.
+
+use dflow::apps::apex;
+use dflow::bench_util::{artifacts_available, skip, Bench};
+use dflow::engine::Engine;
+use dflow::runtime::Runtime;
+
+fn main() {
+    if !artifacts_available() {
+        skip("fig4: APEX job types");
+        return;
+    }
+    let rt = Runtime::global().unwrap();
+    dflow::bench_util::warmup(&rt, &["lj_ef"]);
+    let engine = Engine::builder().runtime(rt).build();
+    let mut b = Bench::new("fig4: APEX relaxation / property / joint jobs");
+    let scales = [0.85, 0.9, 0.95, 1.0, 1.05, 1.1, 1.15];
+
+    let (r_relax, t_relax) = b.case("relaxation job", || {
+        let r = engine.run(&apex::relaxation_workflow(3)).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        r
+    });
+    b.metric("  relaxed energy", r_relax.outputs.params["energy"].as_float().unwrap(), "eps");
+    b.metric("  residual fmax", r_relax.outputs.params["fmax"].as_float().unwrap(), "eps/sigma");
+
+    // property job consumes the relaxation's output artifact
+    let relaxed = r_relax.outputs.artifacts["relaxed"].clone();
+    let (r_prop, t_prop) = b.case("property job (concurrent DAG)", || {
+        let wf = apex::property_workflow(&scales).input_artifact("relaxed", relaxed.clone());
+        let r = engine.run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        r
+    });
+    for key in ["v0", "e0", "b0", "e_cohesive"] {
+        b.metric(&format!("  {key}"), r_prop.outputs.params[key].as_float().unwrap(), "");
+    }
+
+    let (r_joint, t_joint) = b.case("joint job (relax + property)", || {
+        let r = engine.run(&apex::joint_workflow(3, &scales)).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        r
+    });
+    // joint must agree with property-after-relaxation
+    let d = (r_joint.outputs.params["e_cohesive"].as_float().unwrap()
+        - r_prop.outputs.params["e_cohesive"].as_float().unwrap())
+    .abs();
+    b.metric("joint vs staged e_cohesive delta", d, "(expect ~0)");
+    b.metric(
+        "joint ~= relax + property (time ratio)",
+        t_joint.as_secs_f64() / (t_relax + t_prop).as_secs_f64(),
+        "(expect <= ~1)",
+    );
+    assert!(d < 0.5, "job types disagree: {d}");
+}

@@ -1,0 +1,77 @@
+//! F5 — Fig. 5 Rid-kit Block loop: Exploration → Selection → Labeling →
+//! Training, with the paper's parallelism knobs (labeling default 10,
+//! training default 4).
+//!
+//! Expected shape: labeling dominates when serialized; raising its slice
+//! parallelism (1 → 4 → 10) shrinks the block walltime with diminishing
+//! returns past the number of selected conformations.
+
+use dflow::apps::rid::{self, RidConfig};
+use dflow::bench_util::{artifacts_available, skip, Bench};
+use dflow::engine::Engine;
+use dflow::runtime::Runtime;
+
+fn main() {
+    if !artifacts_available() {
+        skip("fig5: Rid-kit Block loop");
+        return;
+    }
+    let rt = Runtime::global().unwrap();
+    dflow::bench_util::warmup(&rt, &["lj_ef", "md_step", "nn_ef", "train_step"]);
+    let engine = Engine::builder().runtime(rt).build();
+    let mut b = Bench::new("fig5: Rid-kit Block (explore/select/label/train)");
+
+    // ablation: labeling parallelism (the paper's default is 10)
+    let mut t_prev = None;
+    for label_par in [1usize, 4, 10] {
+        let cfg = RidConfig {
+            n_walkers: 4,
+            md_calls: 3,
+            n_train: 4,
+            train_steps: 40,
+            iterations: 1,
+            label_parallelism: label_par,
+            ..Default::default()
+        };
+        let (r, t) = b.case(&format!("block iteration, labeling parallelism={label_par}"), || {
+            let r = engine.run(&rid::workflow(&cfg, 5)).unwrap();
+            assert!(r.succeeded(), "{:?}", r.error);
+            r
+        });
+        assert!(r.query_step("train-0-3").is_some(), "ensemble incomplete");
+        if let Some(prev) = t_prev {
+            b.metric(
+                &format!("  speedup vs previous"),
+                prev as f64 / t.as_secs_f64(),
+                "x",
+            );
+        }
+        t_prev = Some(t.as_secs_f64());
+    }
+
+    // two chained blocks: the loop carries dataset + models forward
+    let cfg2 = RidConfig {
+        n_walkers: 4,
+        md_calls: 2,
+        n_train: 4,
+        train_steps: 30,
+        iterations: 2,
+        label_parallelism: 10,
+        ..Default::default()
+    };
+    let (r, _) = b.case("2-iteration RiD loop", || {
+        let r = engine.run(&rid::workflow(&cfg2, 6)).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        r
+    });
+    // both blocks trained their ensembles
+    for iter in 0..2 {
+        for m in 0..4 {
+            assert!(
+                r.query_step(&format!("train-{iter}-{m}")).is_some(),
+                "missing train-{iter}-{m}"
+            );
+        }
+    }
+    b.row("loop", "2 blocks complete, models updated each iteration");
+}

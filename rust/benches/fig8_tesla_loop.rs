@@ -1,0 +1,79 @@
+//! F8 — Fig. 8 TESLA concurrent-learning loop: per-phase cost breakdown and
+//! the convergence trace (model deviation shrinking as data accumulates).
+
+use dflow::apps::tesla::{self, TeslaConfig};
+use dflow::bench_util::{artifacts_available, skip, Bench};
+use dflow::engine::{Engine, NodePhase};
+use dflow::runtime::Runtime;
+
+fn main() {
+    if !artifacts_available() {
+        skip("fig8: TESLA loop");
+        return;
+    }
+    let rt = Runtime::global().unwrap();
+    dflow::bench_util::warmup(&rt, &["lj_ef", "md_step", "nn_ef", "train_step"]);
+    let engine = Engine::builder().runtime(rt).build();
+    let mut b = Bench::new("fig8: TESLA train/explore/screen/label loop");
+
+    let cfg = TeslaConfig {
+        n_models: 4,
+        n_walkers: 4,
+        md_calls: 3,
+        train_steps: 80,
+        max_iters: 3,
+        init_configs: 8,
+        conv_devi: 0.01, // effectively never converges -> full budget
+        ..Default::default()
+    };
+    let (r, total) = b.case("3-iteration loop (4 models, 4 walkers)", || {
+        let r = engine.run(&tesla::workflow(&cfg, 7)).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        r
+    });
+
+    // convergence trace
+    let trace = tesla::convergence_trace(&r.run, &cfg);
+    for it in &trace {
+        b.row(
+            &format!("  iter {}", it.iter),
+            &format!(
+                "loss {:>9.4}   max_devi {:>7.4}   selected {:>3}",
+                it.mean_loss, it.max_devi, it.n_selected
+            ),
+        );
+    }
+    assert!(trace.len() >= 2);
+    assert!(
+        trace.last().unwrap().max_devi <= trace[0].max_devi,
+        "deviation should shrink: {trace:?}"
+    );
+
+    // phase cost breakdown from node timings
+    let mut phase_ms: std::collections::BTreeMap<&str, u64> = Default::default();
+    for n in r.run.nodes() {
+        if n.phase != NodePhase::Succeeded || n.ended_ms < n.started_ms {
+            continue;
+        }
+        let dur = n.ended_ms - n.started_ms;
+        for (tag, pat) in [
+            ("train", "/train["),
+            ("explore", "/explore["),
+            ("screen", "/devi"),
+            ("label", "/label"),
+        ] {
+            if n.path.contains(pat) {
+                *phase_ms.entry(tag).or_default() += dur;
+            }
+        }
+    }
+    for (tag, ms) in &phase_ms {
+        b.metric(&format!("  {tag} span (incl. queue wait)"), *ms as f64, "ms");
+    }
+    b.metric("loop wall time", total.as_secs_f64(), "s");
+    b.metric(
+        "scheduler overhead (dispatch mean)",
+        r.run.metrics.dispatch.mean().as_secs_f64() * 1e6,
+        "µs",
+    );
+}

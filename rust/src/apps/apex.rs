@@ -1,0 +1,194 @@
+//! APEX (paper §3.2, Fig. 4): Alloy Property EXplorer on top of Dflow +
+//! FPOP. Three predefined job types — "relaxation", "property", "joint" —
+//! each structured prep → concurrent DFT/MD execution → post-processing.
+//!
+//! Properties on the LJ substrate: equation of state (V0/E0/B0), cohesive
+//! energy per atom, and bulk modulus (the elastic-constant analogue the
+//! volume scan supports); each property is a DAG task so they run
+//! concurrently, as in APEX's modular architecture.
+
+use std::sync::Arc;
+
+use crate::core::{
+    ArtSrc, ContainerTemplate, Dag, FnOp, Op, OpError, ParamType, Signature, Step, Steps, Value,
+    Workflow,
+};
+
+/// Cohesive-energy post-processing: per-atom energy of the relaxed cell.
+pub fn cohesive_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("energy", ParamType::Float)
+            .in_param("n_atoms", ParamType::Int)
+            .out_param("e_cohesive", ParamType::Float),
+        |ctx| {
+            let e = ctx.get_float("energy")?;
+            let n = ctx.get_int("n_atoms")?;
+            if n <= 0 {
+                return Err(OpError::Fatal("n_atoms must be positive".into()));
+            }
+            ctx.set("e_cohesive", e / n as f64);
+            Ok(())
+        },
+    ))
+}
+
+fn register_common(wf: Workflow) -> Workflow {
+    let wf = crate::apps::fpop::register(wf);
+    wf.container(ContainerTemplate::new("gen-config", crate::science::ops::gen_configs_op()))
+        .container(ContainerTemplate::new("pick-first", crate::apps::fpop::pick_first_op()))
+        .container(ContainerTemplate::new("relax", crate::science::ops::relax_op()))
+        .container(ContainerTemplate::new("eos-fit", crate::science::ops::eos_fit_op()))
+        .container(ContainerTemplate::new("cohesive", cohesive_op()))
+}
+
+/// The "relaxation" job type: structure optimization only.
+pub fn relaxation_workflow(seed: i64) -> Workflow {
+    let wf = register_common(Workflow::new("apex-relaxation"));
+    wf.steps(
+        Steps::new("main")
+            .then(
+                Step::new("gen", "gen-config")
+                    .param("count", 1i64)
+                    .param("seed", seed)
+                    .param("jitter", 0.08f64),
+            )
+            .then(Step::new("pick", "pick-first").artifact(
+                "configs",
+                ArtSrc::StepOutput { step: "gen".into(), name: "configs".into() },
+            ))
+            .then(
+                Step::new("relax", "relax")
+                    .param("steps", 120i64)
+                    .artifact_from_step("config", "pick", "config")
+                    .key("relax"),
+            )
+            .out_param_from("energy", "relax", "energy")
+            .out_param_from("fmax", "relax", "fmax")
+            .out_artifact_from("relaxed", "relax", "config"),
+    )
+    .entrypoint("main")
+}
+
+/// The "property" job type: concurrent property DAG over a relaxed
+/// structure artifact (bound as workflow input artifact `relaxed`).
+pub fn property_workflow(scales: &[f64]) -> Workflow {
+    let wf = register_common(Workflow::new("apex-property"));
+    let wf = wf.steps(crate::apps::fpop::preprunfp_steps(scales.len(), 2));
+    wf.dag(property_dag(scales))
+        .entrypoint("props")
+}
+
+/// The property DAG shared by "property" and "joint" jobs.
+fn property_dag(scales: &[f64]) -> Dag {
+    Dag::new("props")
+        .signature(
+            Signature::new()
+                .in_artifact("relaxed")
+                .out_param("v0", ParamType::Float)
+                .out_param("e0", ParamType::Float)
+                .out_param("b0", ParamType::Float)
+                .out_param("e_cohesive", ParamType::Float),
+        )
+        .task(
+            Step::new("eos-scan", "preprunfp")
+                .param("scales", Value::floats(scales.iter().copied()))
+                .artifact("config", ArtSrc::Input("relaxed".into())),
+        )
+        .task(
+            Step::new("eos-fit", "eos-fit")
+                .param_from_step("vols", "eos-scan", "vols")
+                .param_from_step("energies", "eos-scan", "energies"),
+        )
+        .task(
+            Step::new("cohesive", "cohesive")
+                .param_from_step("energy", "eos-fit", "e0")
+                .param("n_atoms", crate::runtime::shapes::N_ATOMS as i64),
+        )
+        .out_param_from("v0", "eos-fit", "v0")
+        .out_param_from("e0", "eos-fit", "e0")
+        .out_param_from("b0", "eos-fit", "b0")
+        .out_param_from("e_cohesive", "cohesive", "e_cohesive")
+}
+
+/// The "joint" job type: relaxation then the property DAG (paper: "combines
+/// relaxation and property to streamline the process").
+pub fn joint_workflow(seed: i64, scales: &[f64]) -> Workflow {
+    let wf = register_common(Workflow::new("apex-joint"));
+    let wf = wf.steps(crate::apps::fpop::preprunfp_steps(scales.len(), 2));
+    let wf = wf.dag(property_dag(scales));
+    wf.steps(
+        Steps::new("main")
+            .then(
+                Step::new("gen", "gen-config")
+                    .param("count", 1i64)
+                    .param("seed", seed)
+                    .param("jitter", 0.08f64),
+            )
+            .then(Step::new("pick", "pick-first").artifact(
+                "configs",
+                ArtSrc::StepOutput { step: "gen".into(), name: "configs".into() },
+            ))
+            .then(
+                Step::new("relaxation", "relax")
+                    .param("steps", 120i64)
+                    .artifact_from_step("config", "pick", "config")
+                    .key("relax"),
+            )
+            .then(
+                Step::new("property", "props")
+                    .artifact_from_step("relaxed", "relaxation", "config"),
+            )
+            .out_param_from("v0", "property", "v0")
+            .out_param_from("e0", "property", "e0")
+            .out_param_from("b0", "property", "b0")
+            .out_param_from("e_cohesive", "property", "e_cohesive")
+            .out_param_from("relax_energy", "relaxation", "energy"),
+    )
+    .entrypoint("main")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SCALES: [f64; 7] = [0.85, 0.9, 0.95, 1.0, 1.05, 1.1, 1.15];
+
+    #[test]
+    fn relaxation_validates() {
+        relaxation_workflow(1).validate().unwrap();
+    }
+
+    #[test]
+    fn property_validates() {
+        let wf = property_workflow(&SCALES)
+            .input_artifact("relaxed", crate::core::ArtifactRef::new("x"));
+        wf.validate().unwrap();
+    }
+
+    #[test]
+    fn joint_validates() {
+        joint_workflow(1, &SCALES).validate().unwrap();
+    }
+
+    #[test]
+    fn cohesive_divides() {
+        use crate::core::OpCtx;
+        use crate::storage::MemStorage;
+        let mut c = OpCtx::bare(Arc::new(MemStorage::new()));
+        c.inputs.insert("energy".into(), Value::Float(-320.0));
+        c.inputs.insert("n_atoms".into(), Value::Int(64));
+        cohesive_op().execute(&mut c).unwrap();
+        assert_eq!(c.outputs["e_cohesive"], Value::Float(-5.0));
+    }
+
+    #[test]
+    fn cohesive_rejects_zero_atoms() {
+        use crate::core::OpCtx;
+        use crate::storage::MemStorage;
+        let mut c = OpCtx::bare(Arc::new(MemStorage::new()));
+        c.inputs.insert("energy".into(), Value::Float(-1.0));
+        c.inputs.insert("n_atoms".into(), Value::Int(0));
+        assert!(cohesive_op().execute(&mut c).is_err());
+    }
+}

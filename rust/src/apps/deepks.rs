@@ -1,0 +1,222 @@
+//! DeePKS flow (paper §3.4, Fig. 6): self-consistent iterations alternating
+//! an **SCF** section (independent computations on numerous configurations,
+//! CPU-intensive, fault-tolerant — "a certain proportion of SCF calculations
+//! [may] fail without affecting the overall process") and a **TRAIN**
+//! section (single GPU task). The loop breaks when the training error drops
+//! below a convergence threshold — "loop-breaking criteria are dynamically
+//! determined based on the current iteration".
+//!
+//! The SCF super-OP is prep → sliced calculation → post (paper: "the SCF OP
+//! is constructed as a super OP consisting of smaller OPs for preparation,
+//! calculation and post-processing"). The Kohn–Sham solve is surrogated by
+//! the `lj_ef` labeling artifact per DESIGN.md.
+
+use crate::core::{
+    ArtSrc, CmpOp, ContainerTemplate, ContinueOn, Expr, Operand, ParamSrc, ParamType, Signature,
+    Slices, Step, StepPolicy, Steps, Workflow,
+};
+use crate::science::ops;
+
+/// DeePKS flow knobs.
+#[derive(Debug, Clone)]
+pub struct DeepksConfig {
+    /// Configurations per SCF section.
+    pub n_systems: usize,
+    /// SCF slice parallelism.
+    pub scf_parallelism: usize,
+    /// Minimum SCF success ratio (fault tolerance, §2.4).
+    pub scf_success_ratio: f64,
+    /// Adam steps per TRAIN section.
+    pub train_steps: usize,
+    /// Convergence threshold on the training loss.
+    pub conv_loss: f64,
+    /// Iteration budget.
+    pub max_iters: usize,
+}
+
+impl Default for DeepksConfig {
+    fn default() -> Self {
+        DeepksConfig {
+            n_systems: 8,
+            scf_parallelism: 8,
+            scf_success_ratio: 0.7,
+            train_steps: 150,
+            conv_loss: 1e-4,
+            max_iters: 3,
+        }
+    }
+}
+
+/// The SCF super-OP: prep (generate/perturb systems) → run (sliced,
+/// fault-tolerant) → post (merge into a dataset).
+fn scf_steps(cfg: &DeepksConfig) -> Steps {
+    let mut retry = StepPolicy::default();
+    retry.retries = 1;
+    Steps::new("deepks-scf")
+        .signature(
+            Signature::new()
+                .in_param("iter", ParamType::Int)
+                .out_param("n_done", ParamType::Int)
+                .out_artifact("dataset"),
+        )
+        .then(
+            Step::new("prep", "dk-gen")
+                .param("count", cfg.n_systems as i64)
+                .param_from_input("seed", "iter")
+                .param("jitter", 0.07f64),
+        )
+        .then(
+            Step::new("run-scf", "dk-scf-one")
+                .param("conf_id", crate::apps::index_list(cfg.n_systems))
+                .param("tag", ParamSrc::Input("iter".into()))
+                .artifact(
+                    "config",
+                    ArtSrc::StepOutput { step: "prep".into(), name: "configs".into() },
+                )
+                .slices(
+                    Slices::over("conf_id")
+                        .artifact("config")
+                        .stack("energy")
+                        .stack_artifact("labeled")
+                        .parallelism(cfg.scf_parallelism)
+                        .continue_on(ContinueOn::SuccessRatio(cfg.scf_success_ratio)),
+                )
+                .key("scf-{{inputs.parameters.tag}}-{{item}}")
+                .policy(retry),
+        )
+        .then(Step::new("post", "dk-merge").artifact(
+            "datasets",
+            ArtSrc::StepOutput { step: "run-scf".into(), name: "labeled".into() },
+        ))
+        .out_param_from("n_done", "post", "count")
+        .out_artifact_from("dataset", "post", "dataset")
+}
+
+/// The full DeePKS loop (recursive steps template with a dynamic breaking
+/// condition on the training loss).
+pub fn workflow(cfg: &DeepksConfig) -> Workflow {
+    let wf = Workflow::new("deepks")
+        .container(ContainerTemplate::new("dk-gen", ops::gen_configs_op()))
+        .container(
+            ContainerTemplate::new("dk-scf-one", deepks_scf_one_op())
+                .image("abacus/scf:1")
+                .resources(crate::cluster::Resources::cpu(4000)),
+        )
+        .container(ContainerTemplate::new("dk-merge", ops::merge_datasets_op()))
+        .container(
+            ContainerTemplate::new("dk-train", ops::train_op())
+                .image("deepks/train:1")
+                .resources(crate::cluster::Resources::new(1000, 2000, 1)),
+        )
+        .container(ContainerTemplate::new("dk-inc", crate::apps::inc_op()));
+
+    let iter_steps = Steps::new("deepks-iter")
+        .signature(
+            Signature::new()
+                .in_param("iter", ParamType::Int)
+                .in_param("max_iters", ParamType::Int)
+                .in_param("conv_loss", ParamType::Float),
+        )
+        // SCF section (super-OP)
+        .then(Step::new("scf", "deepks-scf").param_from_input("iter", "iter"))
+        // TRAIN section (single task, GPU)
+        .then(
+            Step::new("train", "dk-train")
+                .param("steps", cfg.train_steps as i64)
+                .param("member", 0i64)
+                .param("tag", ParamSrc::Input("iter".into()))
+                .artifact(
+                    "dataset",
+                    ArtSrc::StepOutput { step: "scf".into(), name: "dataset".into() },
+                )
+                .key("train-{{inputs.parameters.tag}}"),
+        )
+        .then(Step::new("bump", "dk-inc").param_from_input("i", "iter"))
+        // loop-breaking criteria evaluated dynamically (Fig. 6)
+        .then(
+            Step::new("again", "deepks-iter")
+                .param_from_step("iter", "bump", "next")
+                .param_from_input("max_iters", "max_iters")
+                .param_from_input("conv_loss", "conv_loss")
+                .when(Expr::And(
+                    Box::new(Expr::Cmp {
+                        lhs: Operand::StepOutput { step: "train".into(), name: "final_loss".into() },
+                        op: CmpOp::Ge,
+                        rhs: Operand::Input("conv_loss".into()),
+                    }),
+                    Box::new(Expr::Cmp {
+                        lhs: Operand::StepOutput { step: "bump".into(), name: "next".into() },
+                        op: CmpOp::Lt,
+                        rhs: Operand::Input("max_iters".into()),
+                    }),
+                )),
+        );
+
+    let main = Steps::new("main").then(
+        Step::new("loop", "deepks-iter")
+            .param("iter", 0i64)
+            .param("max_iters", cfg.max_iters as i64)
+            .param("conv_loss", cfg.conv_loss),
+    );
+
+    wf.steps(scf_steps(cfg)).steps(iter_steps).steps(main).entrypoint("main")
+}
+
+/// One SCF task: solve the (surrogate) generalized Kohn–Sham problem for a
+/// single configuration — `lj_ef` plus a simulated convergence failure mode
+/// (SCF divergence) so the fault-tolerance ratio is actually exercised.
+pub fn deepks_scf_one_op() -> std::sync::Arc<dyn crate::core::Op> {
+    use crate::core::{FnOp, OpError, Value};
+    std::sync::Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("conf_id", ParamType::Int)
+            .in_param_default("tag", ParamType::Any, Value::Null)
+            .in_param_default("fail_rate", ParamType::Float, Value::Float(0.1))
+            .in_artifact("config")
+            .out_param("energy", ParamType::Float)
+            .out_artifact("labeled"),
+        |ctx| {
+            let rt = ctx.runtime()?;
+            let conf_id = ctx.get_int("conf_id")? as u64;
+            let fail_rate = ctx.get_float("fail_rate")?;
+            let tag = ctx.inputs.get("tag").and_then(Value::as_int).unwrap_or(0) as u64;
+            // deterministic simulated SCF divergence
+            let mut rng = crate::util::Rng::new(0x5CF ^ (tag << 20) ^ conf_id);
+            if rng.chance(fail_rate) {
+                return Err(OpError::Fatal("SCF failed to converge".into()));
+            }
+            let x = crate::runtime::Tensor::from_bytes(&ctx.read_artifact("config")?)
+                .map_err(|e| OpError::Fatal(e.to_string()))?;
+            let out = rt
+                .exec("lj_ef", &[x.clone()])
+                .map_err(|e| OpError::Transient(format!("runtime: {e}")))?;
+            let ds = crate::science::data::Dataset {
+                frames: vec![crate::science::data::Frame {
+                    x,
+                    energy: out[0].item(),
+                    f: out[2].clone(),
+                }],
+            };
+            ctx.set("energy", out[0].item() as f64);
+            ctx.write_artifact("labeled", &ds.to_bytes())?;
+            Ok(())
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deepks_workflow_validates() {
+        workflow(&DeepksConfig::default()).validate().unwrap();
+    }
+
+    #[test]
+    fn scf_super_op_shape() {
+        let s = scf_steps(&DeepksConfig::default());
+        assert_eq!(s.groups.len(), 3); // prep / run / post
+        assert!(s.io.output_artifacts.contains_key("dataset"));
+    }
+}

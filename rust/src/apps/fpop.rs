@@ -1,0 +1,257 @@
+//! FPOP (paper §3.1, Fig. 3): a collection of reusable first-principles OPs
+//! and the `preprunfp` super-OP.
+//!
+//! The abstract flow is `preprocessing → prepfp → runfp (concurrent) →
+//! post`; `prepfp + runfp` are wrapped into the reusable super-OP
+//! `preprunfp` "which can be directly used to assemble various workflows"
+//! (APEX and DPGEN2 both consume it — here, [`apex`](crate::apps::apex) and
+//! the EOS flow below do).
+
+use std::sync::Arc;
+
+use crate::core::{
+    ArtSrc, ContainerTemplate, FnOp, Op, OpError, ParamSrc, ParamType, Signature, Slices, Step,
+    StepPolicy, Steps, Value, Workflow,
+};
+use crate::runtime::Tensor;
+use crate::science::lj;
+
+/// prepfp: expand one relaxed configuration into a list artifact of
+/// volume-scaled copies (the per-task input files of Fig. 3).
+pub fn prep_fp_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("scales", ParamType::List)
+            .in_artifact("config")
+            .out_param("vols", ParamType::List)
+            .out_param("n_tasks", ParamType::Int)
+            .out_artifact("fp_inputs"),
+        |ctx| {
+            let scales: Vec<f64> =
+                ctx.get_list("scales")?.iter().filter_map(Value::as_float).collect();
+            let x = Tensor::from_bytes(&ctx.read_artifact("config")?)
+                .map_err(|e| OpError::Fatal(e.to_string()))?;
+            let items: Vec<Vec<u8>> = scales
+                .iter()
+                .map(|s| {
+                    Tensor::new(x.shape.clone(), lj::scale_config(&x.data, *s))
+                        .unwrap()
+                        .to_bytes()
+                })
+                .collect();
+            ctx.set(
+                "vols",
+                Value::floats(scales.iter().map(|s| s * s * s)),
+            );
+            ctx.set("n_tasks", items.len() as i64);
+            ctx.write_artifact_slices("fp_inputs", &items)?;
+            Ok(())
+        },
+    ))
+}
+
+/// runfp: one first-principles task (LJ surrogate via the `lj_ef`
+/// artifact). Sliced by the `preprunfp` super-OP.
+pub fn run_fp_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("task_id", ParamType::Int)
+            .in_artifact("fp_input")
+            .out_param("energy", ParamType::Float)
+            .out_artifact("fp_output"),
+        |ctx| {
+            let rt = ctx.runtime()?;
+            let x = Tensor::from_bytes(&ctx.read_artifact("fp_input")?)
+                .map_err(|e| OpError::Fatal(e.to_string()))?;
+            let out = rt
+                .exec("lj_ef", &[x.clone()])
+                .map_err(|e| OpError::Transient(format!("runtime: {e}")))?;
+            let ds = crate::science::data::Dataset {
+                frames: vec![crate::science::data::Frame {
+                    x,
+                    energy: out[0].item(),
+                    f: out[2].clone(),
+                }],
+            };
+            ctx.set("energy", out[0].item() as f64);
+            ctx.write_artifact("fp_output", &ds.to_bytes())?;
+            Ok(())
+        },
+    ))
+}
+
+/// The `preprunfp` super-OP (Steps): prepfp then a sliced, keyed, retried
+/// runfp fan-out. `n_tasks` fixes the fan-out width (must equal the length
+/// of `scales`).
+///
+/// Exposed knobs mirror FPOP's design (§3.1): calculation parameters
+/// (`scales`), workflow logic (retries), runtime environment (the image on
+/// the container templates).
+pub fn preprunfp_steps(n_tasks: usize, retries: u32) -> Steps {
+    let mut policy = StepPolicy::default();
+    policy.retries = retries;
+    Steps::new("preprunfp")
+        .signature(
+            Signature::new()
+                .in_param("scales", ParamType::List)
+                .in_artifact("config")
+                .out_param("vols", ParamType::List)
+                .out_param("energies", ParamType::List)
+                .out_artifact("fp_outputs"),
+        )
+        .then(
+            Step::new("prepfp", "fpop-prep")
+                .param("scales", ParamSrc::Input("scales".into()))
+                .artifact("config", ArtSrc::Input("config".into())),
+        )
+        .then(
+            Step::new("runfp", "fpop-run")
+                .param("task_id", Value::ints(0..n_tasks as i64))
+                .artifact(
+                    "fp_input",
+                    ArtSrc::StepOutput { step: "prepfp".into(), name: "fp_inputs".into() },
+                )
+                .slices(
+                    Slices::over("task_id")
+                        .artifact("fp_input")
+                        .stack("energy")
+                        .stack_artifact("fp_output"),
+                )
+                .key("fp-{{item}}")
+                .policy(policy),
+        )
+        .out_param_from("vols", "prepfp", "vols")
+        .out_param_from("energies", "runfp", "energy")
+        .out_artifact_from("fp_outputs", "runfp", "fp_output")
+}
+
+/// Register the FPOP container templates on a workflow.
+pub fn register(wf: Workflow) -> Workflow {
+    wf.container(
+        ContainerTemplate::new("fpop-prep", prep_fp_op()).image("fpop/prep:1"),
+    )
+    .container(
+        ContainerTemplate::new("fpop-run", run_fp_op())
+            .image("fpop/vasp-surrogate:1")
+            .resources(crate::cluster::Resources::cpu(2000)),
+    )
+}
+
+/// The complete Fig. 3 EOS flow: preprocessing (gen + relax) → preprunfp →
+/// postprocessing (EOS fit).
+pub fn eos_workflow(seed: i64, scales: &[f64], retries: u32) -> Workflow {
+    let wf = Workflow::new("fpop-eos")
+        .container(ContainerTemplate::new(
+            "gen-config",
+            crate::science::ops::gen_configs_op(),
+        ))
+        .container(ContainerTemplate::new("relax", crate::science::ops::relax_op()))
+        .container(ContainerTemplate::new("eos-fit", crate::science::ops::eos_fit_op()));
+    let wf = register(wf);
+    // preprocessing produces a single relaxed config; gen writes a list
+    // artifact, so relax takes slice 0 via an ItemOf-style sub-key
+    let first_config = |step: &str| ArtSrc::StepOutput {
+        step: step.into(),
+        name: "configs".into(),
+    };
+    let main = Steps::new("main")
+        .then(
+            Step::new("preprocess", "gen-config")
+                .param("count", 1i64)
+                .param("seed", seed)
+                .param("jitter", 0.03f64),
+        )
+        .then(
+            Step::new("relax", "first-config-relax")
+                .artifact("configs", first_config("preprocess")),
+        )
+        .then(
+            Step::new("fp", "preprunfp")
+                .param("scales", Value::floats(scales.iter().copied()))
+                .artifact_from_step("config", "relax", "config"),
+        )
+        .then(
+            Step::new("post", "eos-fit")
+                .param_from_step("vols", "fp", "vols")
+                .param_from_step("energies", "fp", "energies"),
+        )
+        .out_param_from("v0", "post", "v0")
+        .out_param_from("e0", "post", "e0")
+        .out_param_from("b0", "post", "b0")
+        .out_param_from("energies", "fp", "energies");
+    // adapter: take slice 0 of the generated configs list then relax
+    let first_relax = Steps::new("first-config-relax")
+        .signature(
+            Signature::new()
+                .in_artifact("configs")
+                .out_param("energy", ParamType::Float)
+                .out_artifact("config"),
+        )
+        .then(
+            Step::new("pick", "pick-first")
+                .artifact("configs", ArtSrc::Input("configs".into())),
+        )
+        .then(Step::new("descend", "relax").artifact_from_step("config", "pick", "config"))
+        .out_param_from("energy", "descend", "energy")
+        .out_artifact_from("config", "descend", "config");
+    wf.steps(preprunfp_steps(scales.len(), retries))
+        .container(ContainerTemplate::new("pick-first", pick_first_op()))
+        .steps(first_relax)
+        .steps(main)
+        .entrypoint("main")
+}
+
+/// Take slice 0 of a list artifact as a single-config artifact.
+pub fn pick_first_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new().in_artifact("configs").out_artifact("config"),
+        |ctx| {
+            let slices = ctx.read_artifact_slices("configs")?;
+            let first = slices
+                .into_iter()
+                .next()
+                .ok_or_else(|| OpError::Fatal("empty configs list".into()))?;
+            ctx.write_artifact("config", &first)?;
+            Ok(())
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eos_workflow_validates() {
+        let wf = eos_workflow(7, &[0.85, 0.9, 0.95, 1.0, 1.05, 1.1, 1.15], 2);
+        wf.validate().unwrap();
+    }
+
+    #[test]
+    fn preprunfp_exposes_fpop_interface() {
+        let s = preprunfp_steps(7, 1);
+        assert_eq!(s.groups.len(), 2);
+        assert!(s.io.output_params.contains_key("energies"));
+        assert!(s.io.output_artifacts.contains_key("fp_outputs"));
+    }
+
+    #[test]
+    fn prep_fp_scales_configs() {
+        use crate::core::OpCtx;
+        use crate::storage::MemStorage;
+        let mut c = OpCtx::bare(Arc::new(MemStorage::new()));
+        let x = Tensor::new(vec![64, 3], lj::lattice(64, 1.2, 0.0, 0)).unwrap();
+        c.storage.upload("cfg", &x.to_bytes()).unwrap();
+        c.input_artifacts.insert("config".into(), crate::core::ArtifactRef::new("cfg"));
+        c.inputs.insert("scales".into(), Value::floats([0.9, 1.0, 1.1]));
+        prep_fp_op().execute(&mut c).unwrap();
+        assert_eq!(c.outputs["n_tasks"], Value::Int(3));
+        let arts = c.output_artifacts["fp_inputs"].clone();
+        c.input_artifacts.insert("fp_inputs".into(), arts);
+        let items = c.read_artifact_slices("fp_inputs").unwrap();
+        let t0 = Tensor::from_bytes(&items[0]).unwrap();
+        let t2 = Tensor::from_bytes(&items[2]).unwrap();
+        // scaled by 0.9 vs 1.1
+        assert!((t2.data[0] / t0.data[0] - (1.1 / 0.9) as f32).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,107 @@
+//! The paper's §3 applications as reusable workflow builders:
+//!
+//! * [`fpop`] — FPOP (§3.1): prep/run first-principles super-OP + EOS flow
+//!   (Fig. 3).
+//! * [`apex`] — APEX (§3.2): relaxation / property / joint job types
+//!   (Fig. 4).
+//! * [`rid`] — Rid-kit (§3.3): the Block super-OP loop (Fig. 5).
+//! * [`deepks`] — DeePKS flow (§3.4): SCF ⇄ train self-consistent loop with
+//!   fault-tolerant SCF slices (Fig. 6).
+//! * [`vsw`] — Virtual Screening Workflow (§3.5): the multi-stage docking
+//!   funnel with sharded Slices, `continue_on_success_ratio` and restart
+//!   (Fig. 7).
+//! * [`tesla`] — TESLA / dflow-galaxy (§3.6): the
+//!   train→explore→screen→label concurrent-learning loop (Fig. 8).
+
+pub mod apex;
+pub mod deepks;
+pub mod fpop;
+pub mod rid;
+pub mod tesla;
+pub mod vsw;
+
+use std::sync::Arc;
+
+use crate::core::{FnOp, Op, OpError, ParamType, Signature, Value};
+use crate::science::data::Dataset;
+
+/// Tiny arithmetic OP: `next = i + 1` (iteration counters for dynamic
+/// loops — parameters are data, so increments are OPs, as in Dflow).
+pub fn inc_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("i", ParamType::Int)
+            .out_param("next", ParamType::Int),
+        |ctx| {
+            let i = ctx.get_int("i")?;
+            ctx.set("next", i + 1);
+            Ok(())
+        },
+    ))
+}
+
+/// Merge two dataset artifacts into one (`base` + `update`).
+pub fn merge2_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_artifact("base")
+            .in_artifact("update")
+            .out_param("count", ParamType::Int)
+            .out_artifact("dataset"),
+        |ctx| {
+            let mut ds = Dataset::from_bytes(&ctx.read_artifact("base")?)
+                .map_err(|e| OpError::Fatal(e.to_string()))?;
+            let up = Dataset::from_bytes(&ctx.read_artifact("update")?)
+                .map_err(|e| OpError::Fatal(e.to_string()))?;
+            ds.extend(up);
+            ctx.set("count", ds.len() as i64);
+            ctx.write_artifact("dataset", &ds.to_bytes())?;
+            Ok(())
+        },
+    ))
+}
+
+/// A `[0, 1, .., n)` int list (slice fan-out widths fixed at build time).
+pub fn index_list(n: usize) -> Value {
+    Value::ints(0..n as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::OpCtx;
+    use crate::storage::MemStorage;
+
+    #[test]
+    fn inc_op_increments() {
+        let mut c = OpCtx::bare(Arc::new(MemStorage::new()));
+        c.inputs.insert("i".into(), Value::Int(41));
+        inc_op().execute(&mut c).unwrap();
+        assert_eq!(c.outputs["next"], Value::Int(42));
+    }
+
+    #[test]
+    fn merge2_concatenates() {
+        use crate::runtime::Tensor;
+        use crate::science::data::Frame;
+        let mut c = OpCtx::bare(Arc::new(MemStorage::new()));
+        let fr = |s| Frame {
+            x: Tensor::new(vec![1, 3], vec![s; 3]).unwrap(),
+            energy: s,
+            f: Tensor::new(vec![1, 3], vec![0.0; 3]).unwrap(),
+        };
+        let a = Dataset { frames: vec![fr(1.0)] };
+        let b = Dataset { frames: vec![fr(2.0), fr(3.0)] };
+        c.storage.upload("a", &a.to_bytes()).unwrap();
+        c.storage.upload("b", &b.to_bytes()).unwrap();
+        c.input_artifacts.insert("base".into(), crate::core::ArtifactRef::new("a"));
+        c.input_artifacts.insert("update".into(), crate::core::ArtifactRef::new("b"));
+        merge2_op().execute(&mut c).unwrap();
+        assert_eq!(c.outputs["count"], Value::Int(3));
+    }
+
+    #[test]
+    fn index_list_shape() {
+        assert_eq!(index_list(3), Value::ints([0, 1, 2]));
+    }
+}

@@ -1,0 +1,261 @@
+//! Rid-kit (paper §3.3, Fig. 5): reinforced dynamics as a cyclic workflow.
+//!
+//! The core is the **Block** super-OP executed once per iteration:
+//! Exploration (sliced biased MD on GPUs) → Selection (uncertainty) →
+//! Labeling (restrained MD per conformation, default parallelism 10) →
+//! Training (default 4 parallel tasks). Block updates the neural networks
+//! and produces the next iteration's starting conformations — here the
+//! networks are the NN-potential ensemble and "mean forces" come from the
+//! LJ reference (the substitution table in DESIGN.md).
+
+use crate::core::{
+    ArtSrc, ContainerTemplate, ParamSrc, ParamType, Signature, Slices, Step, StepPolicy, Steps,
+    Workflow,
+};
+use crate::science::ops;
+
+/// Rid-kit knobs (paper defaults: labeling parallelism 10, training 4).
+#[derive(Debug, Clone)]
+pub struct RidConfig {
+    /// Concurrent walkers in Exploration.
+    pub n_walkers: usize,
+    /// `md_step` calls per walker.
+    pub md_calls: usize,
+    /// Parallelism of the Labeling slices (paper default 10).
+    pub label_parallelism: usize,
+    /// Training tasks (paper default 4).
+    pub n_train: usize,
+    /// Adam steps per training task.
+    pub train_steps: usize,
+    /// Selection trust interval.
+    pub devi_lo: f64,
+    pub devi_hi: f64,
+    /// Block iterations.
+    pub iterations: usize,
+}
+
+impl Default for RidConfig {
+    fn default() -> Self {
+        RidConfig {
+            n_walkers: 4,
+            md_calls: 4,
+            label_parallelism: 10,
+            n_train: 4,
+            train_steps: 80,
+            devi_lo: 0.0,
+            devi_hi: 10.0,
+            iterations: 2,
+        }
+    }
+}
+
+/// The Block super-OP: one RiD iteration (Fig. 5).
+///
+/// Inputs: `iter` + the accumulated `dataset` and previous `models` (list
+/// artifact). Outputs: updated `dataset` and `models`.
+fn block_steps(cfg: &RidConfig) -> Steps {
+    let mut retry = StepPolicy::default();
+    retry.retries = 2;
+    Steps::new("rid-block")
+        .signature(
+            Signature::new()
+                .in_param("iter", ParamType::Int)
+                .in_artifact("dataset")
+                .in_artifact("dataset_models")
+                .in_artifact("conformations")
+                .out_param("n_labeled", ParamType::Int)
+                .out_artifact("dataset")
+                .out_artifact("models")
+                .out_artifact("conformations"),
+        )
+        // 1. Exploration: biased MD on different GPUs concurrently (Slices)
+        .then(
+            Step::new("exploration", "rid-explore")
+                .param("n_calls", cfg.md_calls as i64)
+                .param("seed", crate::apps::index_list(cfg.n_walkers))
+                .param("temp", 0.4f64)
+                .param("tag", ParamSrc::Input("iter".into()))
+                .artifact("config", ArtSrc::Input("conformations".into()))
+                .slices(
+                    Slices::over("seed")
+                        .artifact("config")
+                        .stack("final_pe")
+                        .stack_artifact("trajectory")
+                        .parallelism(cfg.n_walkers),
+                )
+                .key("explore-{{inputs.parameters.tag}}-{{item}}")
+                .policy(retry.clone()),
+        )
+        .then(Step::new("gather", "rid-collect").artifact(
+            "trajectories",
+            ArtSrc::StepOutput { step: "exploration".into(), name: "trajectory".into() },
+        ))
+        // 2. Selection: cluster/uncertainty filter (cheap, 1-2 CPU cores)
+        .then(
+            Step::new("devi", "rid-devi")
+                .artifact("params", ArtSrc::Input("dataset_models".into()))
+                .artifact(
+                    "configs",
+                    ArtSrc::StepOutput { step: "gather".into(), name: "configs".into() },
+                ),
+        )
+        .then(
+            Step::new("selection", "rid-select")
+                .param_from_step("max_devis", "devi", "max_devis")
+                .param("lo", cfg.devi_lo)
+                .param("hi", cfg.devi_hi)
+                .param("cap", cfg.n_walkers as i64 * 4)
+                .param("tag", ParamSrc::Input("iter".into()))
+                .artifact(
+                    "configs",
+                    ArtSrc::StepOutput { step: "gather".into(), name: "configs".into() },
+                )
+                .key("select-{{inputs.parameters.tag}}"),
+        )
+        // 3. Labeling: restrained MD per conformation, parallelism 10
+        .then(
+            Step::new("labeling", "rid-label")
+                .param("conf_id", crate::apps::index_list(cfg.n_walkers * 4))
+                .artifact(
+                    "config",
+                    ArtSrc::StepOutput { step: "selection".into(), name: "selected".into() },
+                )
+                .slices(
+                    Slices::over("conf_id")
+                        .artifact("config")
+                        .stack("energy")
+                        .stack_artifact("labeled")
+                        .parallelism(cfg.label_parallelism)
+                        .continue_on(crate::core::ContinueOn::SuccessRatio(0.5)),
+                )
+                .policy(retry.clone()),
+        )
+        .then(Step::new("collect-labels", "rid-merge-list").artifact(
+            "datasets",
+            ArtSrc::StepOutput { step: "labeling".into(), name: "labeled".into() },
+        ).artifact("base", ArtSrc::Input("dataset".into())))
+        // 4. Training: 4 parallel tasks on GPUs (Slices)
+        .then(
+            Step::new("training", "rid-train")
+                .param("steps", cfg.train_steps as i64)
+                .param("member", crate::apps::index_list(cfg.n_train))
+                .param("tag", ParamSrc::Input("iter".into()))
+                .artifact(
+                    "dataset",
+                    ArtSrc::StepOutput { step: "collect-labels".into(), name: "dataset".into() },
+                )
+                .slices(
+                    Slices::over("member")
+                        .stack("final_loss")
+                        .stack_artifact("params")
+                        .parallelism(cfg.n_train),
+                )
+                .key("train-{{inputs.parameters.tag}}-{{item}}")
+                .policy(retry),
+        )
+        .out_param_from("n_labeled", "collect-labels", "count")
+        .out_artifact_from("dataset", "collect-labels", "dataset")
+        .out_artifact_from("models", "training", "params")
+        .out_artifact_from("conformations", "selection", "selected")
+}
+
+/// Full Rid-kit workflow: bootstrap conformations + labels, then
+/// `iterations` Block executions chained serially (Fig. 5's cycle).
+pub fn workflow(cfg: &RidConfig, seed: i64) -> Workflow {
+    let wf = Workflow::new("rid-kit")
+        .container(ContainerTemplate::new("rid-gen", ops::gen_configs_op()))
+        .container(
+            ContainerTemplate::new("rid-explore", ops::md_explore_op())
+                .image("rid/gromacs:1")
+                .resources(crate::cluster::Resources::new(2000, 2000, 1)),
+        )
+        .container(ContainerTemplate::new("rid-collect", ops::collect_trajectories_op()))
+        .container(ContainerTemplate::new("rid-devi", ops::model_devi_op()))
+        .container(
+            ContainerTemplate::new("rid-select", ops::select_op())
+                .resources(crate::cluster::Resources::cpu(1000)),
+        )
+        .container(
+            ContainerTemplate::new("rid-label", ops::label_one_op())
+                .image("rid/label:1")
+                .resources(crate::cluster::Resources::cpu(2000)),
+        )
+        .container(ContainerTemplate::new("rid-merge-list", ops::merge_datasets_op()))
+        .container(
+            ContainerTemplate::new("rid-train", ops::train_op())
+                .image("rid/train:1")
+                .resources(crate::cluster::Resources::new(2000, 2000, 1)),
+        )
+        .container(ContainerTemplate::new("rid-init-label", ops::label_op()));
+
+    // Block needs a models list-artifact; iteration 0 trains from the
+    // bootstrap labels, so main runs: gen → label → train0 → block^n
+    let mut main = Steps::new("main")
+        .then(
+            Step::new("gen-confs", "rid-gen")
+                .param("count", cfg.n_walkers as i64)
+                .param("seed", seed)
+                .param("jitter", 0.08f64),
+        )
+        .then(Step::new("init-label", "rid-init-label").artifact(
+            "configs",
+            ArtSrc::StepOutput { step: "gen-confs".into(), name: "configs".into() },
+        ))
+        .then(
+            Step::new("init-train", "rid-train")
+                .param("steps", cfg.train_steps as i64)
+                .param("member", crate::apps::index_list(cfg.n_train))
+                .param("tag", "init")
+                .artifact(
+                    "dataset",
+                    ArtSrc::StepOutput { step: "init-label".into(), name: "dataset".into() },
+                )
+                .slices(
+                    Slices::over("member")
+                        .stack_artifact("params")
+                        .stack("final_loss")
+                        .parallelism(cfg.n_train),
+                )
+                .key("train-init-{{item}}"),
+        );
+    let mut prev = ("init-label".to_string(), "init-train".to_string(), "gen-confs".to_string());
+    for i in 0..cfg.iterations {
+        let name = format!("block-{i}");
+        main = main.then(
+            Step::new(&name, "rid-block")
+                .param("iter", i as i64)
+                .artifact(
+                    "dataset",
+                    ArtSrc::StepOutput { step: prev.0.clone(), name: "dataset".into() },
+                )
+                .artifact(
+                    "dataset_models",
+                    ArtSrc::StepOutput { step: prev.1.clone(), name: if i == 0 { "params".into() } else { "models".into() } },
+                )
+                .artifact(
+                    "conformations",
+                    ArtSrc::StepOutput { step: prev.2.clone(), name: if i == 0 { "configs".into() } else { "conformations".into() } },
+                ),
+        );
+        prev = (name.clone(), name.clone(), name);
+    }
+    wf.steps(block_steps(cfg)).steps(main).entrypoint("main")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rid_workflow_validates() {
+        workflow(&RidConfig::default(), 3).validate().unwrap();
+    }
+
+    #[test]
+    fn rid_block_has_four_phases() {
+        let b = block_steps(&RidConfig::default());
+        // exploration, gather, devi, selection, labeling, collect, training
+        assert!(b.groups.len() >= 6);
+        assert!(b.io.output_artifacts.contains_key("models"));
+    }
+}

@@ -1,0 +1,335 @@
+//! TESLA / dflow-galaxy (paper §3.6, Fig. 8): the
+//! Train → Explore → Screen → Label concurrent-learning loop, the same
+//! shape as DP-GEN/DP-GEN2.
+//!
+//! Per iteration:
+//! 1. **Train** — 4 NN-potential ensemble members, sliced in parallel
+//!    (`train-<iter>-<member>` keys make every member reusable on restart);
+//! 2. **Explore** — MD walkers fan out from fresh starting configurations
+//!    (sliced `md_explore`, trajectories stacked);
+//! 3. **Screen** — ensemble force deviation per candidate, then trust-
+//!    interval selection;
+//! 4. **Label** — the selected configurations get reference energies/forces
+//!    (`lj_ef` = the DFT surrogate) and are merged into the dataset.
+//!
+//! The loop recurses (a steps template instantiating itself) while the max
+//! model deviation stays above the convergence threshold and the iteration
+//! budget remains — Dflow's "dynamic loop via recursion + breaking
+//! condition" (§2.2).
+
+use crate::core::{
+    ArtSrc, CmpOp, ContainerTemplate, Expr, Operand, ParamSrc, ParamType, Signature, Slices,
+    Step, StepPolicy, Steps, Value, Workflow,
+};
+use crate::science::ops;
+
+/// Tunables for the loop.
+#[derive(Debug, Clone)]
+pub struct TeslaConfig {
+    /// Ensemble size (paper default 4).
+    pub n_models: usize,
+    /// MD walkers per iteration.
+    pub n_walkers: usize,
+    /// `md_step` calls per walker (each = 20 substeps).
+    pub md_calls: usize,
+    /// Adam steps per training task.
+    pub train_steps: usize,
+    /// Trust interval for selection.
+    pub devi_lo: f64,
+    pub devi_hi: f64,
+    /// Convergence: stop when max deviation < this.
+    pub conv_devi: f64,
+    /// Iteration budget.
+    pub max_iters: usize,
+    /// Initial labeled configurations.
+    pub init_configs: usize,
+    /// Retries on transient failures.
+    pub retries: u32,
+}
+
+impl Default for TeslaConfig {
+    fn default() -> Self {
+        TeslaConfig {
+            n_models: 4,
+            n_walkers: 6,
+            md_calls: 5,
+            train_steps: 120,
+            devi_lo: 0.05,
+            devi_hi: 5.0,
+            conv_devi: 0.30,
+            max_iters: 3,
+            init_configs: 8,
+            retries: 2,
+        }
+    }
+}
+
+/// Build the TESLA workflow. Per-iteration observables are reachable after
+/// the run through keyed steps: `screen-<iter>` (params `max_devi`,
+/// `n_selected`... on `select`), `train-<iter>-<member>` (`final_loss`).
+pub fn workflow(cfg: &TeslaConfig, seed: i64) -> Workflow {
+    let mut retry = StepPolicy::default();
+    retry.retries = cfg.retries;
+
+    let wf = Workflow::new("tesla")
+        .container(ContainerTemplate::new("gen-configs", ops::gen_configs_op()))
+        .container(ContainerTemplate::new("label", ops::label_op()).image("deepmd/dft:1"))
+        .container(
+            ContainerTemplate::new("train", ops::train_op())
+                .image("deepmd/train:1")
+                .resources(crate::cluster::Resources::new(2000, 4000, 1))
+                .select_node("accel", "gpu"),
+        )
+        .container(
+            ContainerTemplate::new("explore", ops::md_explore_op())
+                .image("deepmd/lammps:1")
+                .resources(crate::cluster::Resources::new(2000, 2000, 1))
+                .select_node("accel", "gpu"),
+        )
+        .container(ContainerTemplate::new("collect", ops::collect_trajectories_op()))
+        .container(ContainerTemplate::new("model-devi", ops::model_devi_op()))
+        .container(ContainerTemplate::new("select", ops::select_op()))
+        .container(ContainerTemplate::new("merge", crate::apps::merge2_op()))
+        .container(ContainerTemplate::new("inc", crate::apps::inc_op()));
+
+    // train needs a per-iteration tag for reuse keys: member is {{item}} and
+    // the iteration arrives via the template input "tag" rendered into the key
+    let iter_steps = Steps::new("tesla-iter")
+        .signature(
+            Signature::new()
+                .in_param("iter", ParamType::Int)
+                .in_param("max_iters", ParamType::Int)
+                .in_param("conv_devi", ParamType::Float)
+                .in_artifact("dataset"),
+        )
+        // 1. TRAIN: ensemble members in parallel slices
+        .then(
+            Step::new("train", "train")
+                .param("steps", cfg.train_steps as i64)
+                .param("member", crate::apps::index_list(cfg.n_models))
+                .param("tag", ParamSrc::Input("iter".into()))
+                .artifact("dataset", ArtSrc::Input("dataset".into()))
+                .slices(
+                    Slices::over("member")
+                        .stack("final_loss")
+                        .stack_artifact("params")
+                        .parallelism(cfg.n_models),
+                )
+                .key("train-{{inputs.parameters.tag}}-{{item}}")
+                .policy(retry.clone()),
+        )
+        // 2. EXPLORE: fresh walkers seeded by the iteration
+        .then(
+            Step::new("gen-walkers", "gen-configs")
+                .param("count", cfg.n_walkers as i64)
+                .param_from_input("seed", "iter")
+                .param("jitter", 0.10f64),
+        )
+        .then(
+            Step::new("explore", "explore")
+                .param("n_calls", cfg.md_calls as i64)
+                .param("seed", crate::apps::index_list(cfg.n_walkers))
+                .param("temp", 0.3f64)
+                .param("tag", ParamSrc::Input("iter".into()))
+                .artifact(
+                    "config",
+                    ArtSrc::StepOutput { step: "gen-walkers".into(), name: "configs".into() },
+                )
+                .slices(
+                    Slices::over("seed")
+                        .artifact("config")
+                        .stack("final_pe")
+                        .stack_artifact("trajectory")
+                        .parallelism(cfg.n_walkers),
+                )
+                .key("explore-{{inputs.parameters.tag}}-{{item}}")
+                .policy(retry.clone()),
+        )
+        .then(Step::new("collect", "collect").artifact(
+            "trajectories",
+            ArtSrc::StepOutput { step: "explore".into(), name: "trajectory".into() },
+        ))
+        // 3. SCREEN: ensemble deviation + trust-interval selection
+        .then(
+            Step::new("devi", "model-devi")
+                .artifact(
+                    "params",
+                    ArtSrc::StepOutput { step: "train".into(), name: "params".into() },
+                )
+                .artifact(
+                    "configs",
+                    ArtSrc::StepOutput { step: "collect".into(), name: "configs".into() },
+                ),
+        )
+        .then(
+            Step::new("select", "select")
+                .param_from_step("max_devis", "devi", "max_devis")
+                .param("lo", cfg.devi_lo)
+                .param("hi", cfg.devi_hi)
+                .param("cap", 16i64)
+                .param("tag", ParamSrc::Input("iter".into()))
+                .artifact(
+                    "configs",
+                    ArtSrc::StepOutput { step: "collect".into(), name: "configs".into() },
+                )
+                .key("screen-{{inputs.parameters.tag}}"),
+        )
+        // 4. LABEL new data and merge into the dataset
+        .then(
+            Step::new("label", "label")
+                .artifact(
+                    "configs",
+                    ArtSrc::StepOutput { step: "select".into(), name: "selected".into() },
+                )
+                .policy(retry.clone())
+                // only label when something was selected
+                .when(Expr::gt(
+                    Operand::StepOutput { step: "select".into(), name: "n_selected".into() },
+                    Operand::Const(Value::Int(0)),
+                )),
+        )
+        .then(
+            Step::new("merge", "merge")
+                .artifact("base", ArtSrc::Input("dataset".into()))
+                .artifact(
+                    "update",
+                    ArtSrc::StepOutput { step: "label".into(), name: "dataset".into() },
+                )
+                .when(Expr::gt(
+                    Operand::StepOutput { step: "select".into(), name: "n_selected".into() },
+                    Operand::Const(Value::Int(0)),
+                )),
+        )
+        .then(Step::new("bump", "inc").param_from_input("i", "iter"))
+        // 5. RECURSE while not converged and under budget and new data came in
+        .then(
+            Step::new("again", "tesla-iter")
+                .param_from_step("iter", "bump", "next")
+                .param_from_input("max_iters", "max_iters")
+                .param_from_input("conv_devi", "conv_devi")
+                .artifact(
+                    "dataset",
+                    ArtSrc::StepOutput { step: "merge".into(), name: "dataset".into() },
+                )
+                .when(Expr::And(
+                    Box::new(Expr::And(
+                        Box::new(Expr::Cmp {
+                            lhs: Operand::StepOutput {
+                                step: "select".into(),
+                                name: "max_devi".into(),
+                            },
+                            op: CmpOp::Ge,
+                            rhs: Operand::Input("conv_devi".into()),
+                        }),
+                        Box::new(Expr::Cmp {
+                            lhs: Operand::StepOutput {
+                                step: "bump".into(),
+                                name: "next".into(),
+                            },
+                            op: CmpOp::Lt,
+                            rhs: Operand::Input("max_iters".into()),
+                        }),
+                    )),
+                    Box::new(Expr::gt(
+                        Operand::StepOutput { step: "select".into(), name: "n_selected".into() },
+                        Operand::Const(Value::Int(0)),
+                    )),
+                )),
+        );
+
+    // bootstrap: initial configurations + labels, then iteration 0
+    let main = Steps::new("main")
+        .then(
+            Step::new("init-configs", "gen-configs")
+                .param("count", cfg.init_configs as i64)
+                .param("seed", seed)
+                .param("jitter", 0.06f64),
+        )
+        .then(
+            Step::new("init-label", "label")
+                .artifact(
+                    "configs",
+                    ArtSrc::StepOutput { step: "init-configs".into(), name: "configs".into() },
+                )
+                .policy(retry)
+                .key("init-label"),
+        )
+        .then(
+            Step::new("loop", "tesla-iter")
+                .param("iter", 0i64)
+                .param("max_iters", cfg.max_iters as i64)
+                .param("conv_devi", cfg.conv_devi)
+                .artifact(
+                    "dataset",
+                    ArtSrc::StepOutput { step: "init-label".into(), name: "dataset".into() },
+                ),
+        );
+
+    wf.steps(iter_steps).steps(main).entrypoint("main")
+}
+
+/// One iteration's observables, extracted from keyed steps after a run.
+#[derive(Debug, Clone)]
+pub struct IterStats {
+    pub iter: usize,
+    /// Mean final training loss over the ensemble.
+    pub mean_loss: f64,
+    /// Max model deviation over explored candidates.
+    pub max_devi: f64,
+    /// Candidates selected for labeling.
+    pub n_selected: i64,
+}
+
+/// Extract the per-iteration convergence trace from a finished run via
+/// keyed steps (`train-<iter>-<member>`, `screen-<iter>`) — exactly the
+/// paper's `query_step` pattern (§2.5).
+pub fn convergence_trace(run: &crate::engine::WorkflowRun, cfg: &TeslaConfig) -> Vec<IterStats> {
+    let mut out = Vec::new();
+    for iter in 0..cfg.max_iters {
+        let mut losses = Vec::new();
+        for member in 0..cfg.n_models {
+            if let Some(s) = run.query_step(&format!("train-{iter}-{member}")) {
+                if let Some(l) = s.outputs.params.get("final_loss").and_then(Value::as_float) {
+                    losses.push(l);
+                }
+            }
+        }
+        let Some(screen) = run.query_step(&format!("screen-{iter}")) else { break };
+        if losses.is_empty() {
+            break;
+        }
+        out.push(IterStats {
+            iter,
+            mean_loss: losses.iter().sum::<f64>() / losses.len() as f64,
+            max_devi: screen
+                .outputs
+                .params
+                .get("max_devi")
+                .and_then(Value::as_float)
+                .unwrap_or(f64::NAN),
+            n_selected: screen
+                .outputs
+                .params
+                .get("n_selected")
+                .and_then(Value::as_int)
+                .unwrap_or(0),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tesla_workflow_validates() {
+        workflow(&TeslaConfig::default(), 42).validate().unwrap();
+    }
+
+    #[test]
+    fn tesla_small_config_validates() {
+        let cfg = TeslaConfig { n_models: 2, n_walkers: 2, max_iters: 1, ..Default::default() };
+        workflow(&cfg, 1).validate().unwrap();
+    }
+}

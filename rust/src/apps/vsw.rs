@@ -1,0 +1,198 @@
+//! Virtual Screening Workflow (paper §3.5, Fig. 7): the multi-stage
+//! screening funnel of the Hermite platform.
+//!
+//! Stages (each its own OP / container image, "rendering each runtime
+//! environment more streamlined and agile"):
+//!
+//! 1. **Molecular docking** (Uni-Dock surrogate) in Fast mode over the full
+//!    sharded library — Slices segment the library so "the computational
+//!    load on any given node is completed within a half-hour window";
+//!    `continue_on_success_ratio` keeps the funnel alive under partial
+//!    failure, and per-shard keys (`dock-<i>`) let a restart "selectively
+//!    address and recompute the problematic molecules without redundantly
+//!    reprocessing successful nodes".
+//! 2. **Conformation optimization + filtering** (OpenMM/TorsionLibrary
+//!    surrogate): Balance-mode re-dock of the top-K.
+//! 3. **Free-energy rescoring** (Uni-GBSA surrogate): Detail-mode pass.
+//! 4. **Interaction analysis** (ProLIF surrogate): statistics for decision
+//!    support.
+
+use crate::core::{
+    ArtSrc, ContainerTemplate, ContinueOn, ParamSrc, ParamType, Signature, Slices, Step,
+    StepPolicy, Steps, Workflow,
+};
+use crate::science::ops;
+
+/// Funnel configuration.
+#[derive(Debug, Clone)]
+pub struct VswConfig {
+    /// Library shards (molecules = shards × 256).
+    pub n_shards: usize,
+    /// Survivors after stage 1 / stage 2 (molecule counts).
+    pub k1: usize,
+    pub k2: usize,
+    /// Minimum shard success ratio per stage.
+    pub success_ratio: f64,
+    /// Slice parallelism (≈ concurrent "nodes"; paper: 600+).
+    pub parallelism: usize,
+    /// Retries on transient failures.
+    pub retries: u32,
+}
+
+impl Default for VswConfig {
+    fn default() -> Self {
+        VswConfig {
+            n_shards: 12,
+            k1: 768,
+            k2: 256,
+            success_ratio: 0.8,
+            parallelism: 64,
+            retries: 2,
+        }
+    }
+}
+
+fn dock_stage(
+    name: &str,
+    template: &str,
+    n_shards: usize,
+    mode: &str,
+    library_from: ArtSrc,
+    cfg: &VswConfig,
+) -> Step {
+    let mut retry = StepPolicy::default();
+    retry.retries = cfg.retries;
+    Step::new(name, template)
+        .param("mode", mode)
+        .param("noise_seed", crate::apps::index_list(n_shards))
+        .artifact("shard", library_from)
+        .slices(
+            Slices::over("noise_seed")
+                .artifact("shard")
+                .stack("scores")
+                .stack("best")
+                .parallelism(cfg.parallelism)
+                .continue_on(ContinueOn::SuccessRatio(cfg.success_ratio)),
+        )
+        .key(&format!("{name}-{{{{item}}}}"))
+        .policy(retry)
+}
+
+/// Build the VSW funnel workflow.
+///
+/// Stage shard counts shrink as the funnel narrows: `n_shards` →
+/// `ceil(k1/256)` → `ceil(k2/256)`.
+pub fn workflow(cfg: &VswConfig, seed: i64) -> Workflow {
+    let s1 = cfg.n_shards;
+    let s2 = cfg.k1.div_ceil(crate::runtime::shapes::DOCK_BATCH).max(1);
+    let s3 = cfg.k2.div_ceil(crate::runtime::shapes::DOCK_BATCH).max(1);
+
+    let wf = Workflow::new("vsw")
+        .container(ContainerTemplate::new("vsw-gen", ops::gen_library_op()))
+        .container(
+            ContainerTemplate::new("vsw-dock", ops::dock_shard_op())
+                .image("unidock/gpu:1")
+                .resources(crate::cluster::Resources::new(1000, 2000, 1)),
+        )
+        .container(
+            ContainerTemplate::new("vsw-reshard", ops::topk_reshard_op())
+                .image("vsw/tools:1"),
+        )
+        .container(ContainerTemplate::new("vsw-analysis", ops::analysis_op()));
+
+    let mut retry = StepPolicy::default();
+    retry.retries = cfg.retries;
+    let main = Steps::new("main")
+        .signature(Signature::new().out_param("best", ParamType::Float))
+        .then(
+            Step::new("gen-library", "vsw-gen")
+                .param("n_shards", s1 as i64)
+                .param("seed", ParamSrc::Const(crate::core::Value::Int(seed)))
+                .policy(retry.clone()),
+        )
+        // stage 1: Fast docking over the whole library
+        .then(dock_stage(
+            "dock",
+            "vsw-dock",
+            s1,
+            "fast",
+            ArtSrc::StepOutput { step: "gen-library".into(), name: "library".into() },
+            cfg,
+        ))
+        .then(
+            Step::new("top1", "vsw-reshard")
+                .param_from_step("scores", "dock", "scores")
+                .param("k", cfg.k1 as i64)
+                .policy(retry.clone())
+                .artifact(
+                    "library",
+                    ArtSrc::StepOutput { step: "gen-library".into(), name: "library".into() },
+                ),
+        )
+        // stage 2: conformation optimization + filtering (Balance mode)
+        .then(dock_stage(
+            "optimize",
+            "vsw-dock",
+            s2,
+            "balance",
+            ArtSrc::StepOutput { step: "top1".into(), name: "library".into() },
+            cfg,
+        ))
+        .then(
+            Step::new("top2", "vsw-reshard")
+                .param_from_step("scores", "optimize", "scores")
+                .param("k", cfg.k2 as i64)
+                .policy(retry.clone())
+                .artifact(
+                    "library",
+                    ArtSrc::StepOutput { step: "top1".into(), name: "library".into() },
+                ),
+        )
+        // stage 3: free-energy rescoring (Detail mode ≙ MM-GB/PBSA)
+        .then(dock_stage(
+            "gbsa",
+            "vsw-dock",
+            s3,
+            "detail",
+            ArtSrc::StepOutput { step: "top2".into(), name: "library".into() },
+            cfg,
+        ))
+        // stage 4: interaction analysis
+        .then(
+            Step::new("analysis", "vsw-analysis")
+                .param_from_step("scores", "gbsa", "scores")
+                .policy(retry),
+        )
+        .out_param_from("best", "analysis", "best")
+        .out_param_from("mean", "analysis", "mean")
+        .out_param_from("n_final", "analysis", "n")
+        .out_param_from("cutoff1", "top1", "cutoff")
+        .out_param_from("cutoff2", "top2", "cutoff");
+
+    wf.steps(main).entrypoint("main")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vsw_workflow_validates() {
+        workflow(&VswConfig::default(), 11).validate().unwrap();
+    }
+
+    #[test]
+    fn vsw_scales_to_paper_shape() {
+        // paper: ~1,500 OPs, >1,200 concurrent nodes — representable
+        let cfg = VswConfig { n_shards: 1400, parallelism: 1300, ..Default::default() };
+        workflow(&cfg, 1).validate().unwrap();
+    }
+
+    #[test]
+    fn funnel_narrows() {
+        let cfg = VswConfig::default();
+        assert!(cfg.k1 > cfg.k2);
+        let s2 = cfg.k1.div_ceil(256);
+        assert!(s2 < cfg.n_shards);
+    }
+}

@@ -1,0 +1,135 @@
+//! Minimal benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Each `rust/benches/*.rs` target is `harness = false` and uses
+//! [`Bench`] to run timed cases and print aligned result rows; the rows are
+//! what EXPERIMENTS.md records per paper figure/claim.
+
+use std::time::{Duration, Instant};
+
+/// A named benchmark group printing aligned rows.
+pub struct Bench {
+    title: String,
+    rows: Vec<(String, String)>,
+}
+
+impl Bench {
+    /// Start a group.
+    pub fn new(title: &str) -> Bench {
+        println!("\n=== {title} ===");
+        Bench { title: title.to_string(), rows: Vec::new() }
+    }
+
+    /// Time one case (single run — end-to-end workflow benches are
+    /// long-running and deterministic enough).
+    pub fn case<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> (T, Duration) {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed();
+        self.row(name, &format!("{:>10.2} ms", dt.as_secs_f64() * 1e3));
+        (out, dt)
+    }
+
+    /// Time a case repeated `n` times, reporting mean per-iteration time.
+    pub fn case_n<T>(&mut self, name: &str, n: usize, mut f: impl FnMut() -> T) -> Duration {
+        let t0 = Instant::now();
+        for _ in 0..n {
+            std::hint::black_box(f());
+        }
+        let per = t0.elapsed() / n as u32;
+        self.row(name, &format!("{:>10.2} µs/iter (n={n})", per.as_secs_f64() * 1e6));
+        per
+    }
+
+    /// Record an arbitrary result row.
+    pub fn row(&mut self, name: &str, value: &str) {
+        println!("{:<48} {}", name, value);
+        self.rows.push((name.to_string(), value.to_string()));
+    }
+
+    /// Record a float metric row.
+    pub fn metric(&mut self, name: &str, value: f64, unit: &str) {
+        self.row(name, &format!("{value:>12.4} {unit}"));
+    }
+
+    /// Group title.
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+}
+
+/// True when AOT artifacts are present (benches needing PJRT skip
+/// gracefully otherwise).
+pub fn artifacts_available() -> bool {
+    crate::runtime::Runtime::global().is_some()
+}
+
+/// Print a standard skip message.
+pub fn skip(title: &str) {
+    println!("\n=== {title} ===\nSKIPPED: artifacts/ not built (run `make artifacts`)");
+}
+
+/// Warm the PJRT executable caches so first-case timings don't pay lazy
+/// compilation. Execs each named artifact once per pool worker (dispatch is
+/// round-robin, so `2 x pool` sends cover every worker).
+pub fn warmup(rt: &crate::runtime::Runtime, names: &[&str]) {
+    use crate::runtime::{shapes, Tensor};
+    let x = Tensor::new(
+        vec![shapes::N_ATOMS, 3],
+        crate::science::lj::lattice(shapes::N_ATOMS, 1.2, 0.05, 0),
+    )
+    .unwrap();
+    let p = Tensor::new(vec![shapes::PARAM_DIM], rt.initial_params(0).to_vec()).unwrap();
+    for _ in 0..16 {
+        for name in names {
+            let inputs: Vec<Tensor> = match *name {
+                "lj_ef" | "descriptor" => vec![x.clone()],
+                "md_step" => vec![x.clone(), Tensor::zeros(vec![shapes::N_ATOMS, 3])],
+                "nn_ef" => vec![p.clone(), x.clone()],
+                "train_step" => vec![
+                    p.clone(),
+                    Tensor::zeros(vec![shapes::PARAM_DIM]),
+                    Tensor::zeros(vec![shapes::PARAM_DIM]),
+                    Tensor::scalar(0.0),
+                    Tensor::new(
+                        vec![shapes::BATCH, shapes::N_ATOMS, 3],
+                        x.data.repeat(shapes::BATCH),
+                    )
+                    .unwrap(),
+                    Tensor::zeros(vec![shapes::BATCH]),
+                    Tensor::zeros(vec![shapes::BATCH, shapes::N_ATOMS, 3]),
+                ],
+                "eos_batch" => vec![Tensor::new(
+                    vec![shapes::EOS_POINTS, shapes::N_ATOMS, 3],
+                    x.data.repeat(shapes::EOS_POINTS),
+                )
+                .unwrap()],
+                "dock_score" => {
+                    vec![Tensor::zeros(vec![shapes::DOCK_BATCH, shapes::DOCK_FEATS])]
+                }
+                other => panic!("warmup: unknown artifact {other}"),
+            };
+            rt.exec(name, &inputs).expect("warmup exec");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_returns_value_and_duration() {
+        let mut b = Bench::new("t");
+        let (v, d) = b.case("x", || 42);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn case_n_reports_per_iter() {
+        let mut b = Bench::new("t");
+        let per = b.case_n("x", 10, || std::thread::sleep(Duration::from_millis(1)));
+        assert!(per >= Duration::from_millis(1));
+        assert!(per < Duration::from_millis(20));
+    }
+}

@@ -1,0 +1,127 @@
+//! Mini property-testing framework.
+//!
+//! `proptest` is not in the offline vendor set (DESIGN.md substitution
+//! table), so coordinator invariants are checked with this self-contained
+//! harness: seeded generators over [`crate::util::Rng`], N-case `forall`
+//! runs, and failing-seed reporting so any counterexample is reproducible
+//! with `CHECK_SEED=<seed>`.
+
+use crate::util::Rng;
+
+/// Number of cases per property (override with env `CHECK_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("CHECK_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Root seed (override with env `CHECK_SEED` to replay a failure).
+pub fn root_seed() -> u64 {
+    std::env::var("CHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xDF10_57EE_Du64)
+}
+
+/// Run `prop` for `default_cases()` seeded cases; panic with the failing
+/// case seed on the first failure.
+///
+/// ```no_run
+/// dflow::check::forall("abs is nonneg", |rng| {
+///     let x = rng.next_f64() - 0.5;
+///     assert!(x.abs() >= 0.0);
+/// });
+/// ```
+/// (`no_run`: doctest binaries lack the xla rpath in this build image.)
+pub fn forall(name: &str, mut prop: impl FnMut(&mut Rng)) {
+    let cases = default_cases();
+    let mut root = Rng::new(root_seed());
+    for case in 0..cases {
+        let seed = root.next_u64();
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with CHECK_SEED={seed} CHECK_CASES=1): {msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers over [`Rng`].
+pub mod gen {
+    use crate::util::Rng;
+
+    /// Vec of length in [lo, hi) with elements from `f`.
+    pub fn vec_of<T>(rng: &mut Rng, lo: usize, hi: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        let n = lo + rng.below((hi - lo).max(1) as u64) as usize;
+        (0..n).map(|_| f(rng)).collect()
+    }
+
+    /// Identifier-ish short string.
+    pub fn ident(rng: &mut Rng) -> String {
+        let n = 1 + rng.below(8) as usize;
+        (0..n)
+            .map(|_| (b'a' + rng.below(26) as u8) as char)
+            .collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(rng: &mut Rng, items: &'a [T]) -> &'a T {
+        &items[rng.below(items.len() as u64) as usize]
+    }
+
+    /// Random permutation of 0..n (Fisher–Yates).
+    pub fn permutation(rng: &mut Rng, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = rng.below((i + 1) as u64) as usize;
+            v.swap(i, j);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u64 parity roundtrip", |rng| {
+            let x = rng.next_u64();
+            assert_eq!(x, x);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with CHECK_SEED=")]
+    fn forall_reports_seed_on_failure() {
+        forall("always fails", |_| panic!("boom"));
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        forall("permutation", |rng| {
+            let n = 1 + rng.below(50) as usize;
+            let mut p = gen::permutation(rng, n);
+            p.sort_unstable();
+            assert_eq!(p, (0..n).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn ident_is_nonempty_ascii() {
+        forall("ident", |rng| {
+            let s = gen::ident(rng);
+            assert!(!s.is_empty() && s.bytes().all(|b| b.is_ascii_lowercase()));
+        });
+    }
+}

@@ -1,0 +1,472 @@
+//! Kubernetes-like cluster simulator.
+//!
+//! Dflow delegates pod scheduling to Kubernetes; this module is the
+//! from-scratch substitute (DESIGN.md substitution table): typed nodes with
+//! cpu/mem/gpu capacity, pod objects with resource requests, a first-fit
+//! bin-packing scheduler with label selectors, pod lifecycle accounting, and
+//! failure injection (flaky nodes → transient pod failures, which the
+//! engine's §2.4 policies must absorb).
+//!
+//! It also models the paper's §2.6 *virtual node* technique (wlm-operator):
+//! an HPC partition surfaces as a `virtual` node whose capacity mirrors the
+//! partition, letting the same scheduler place jobs on HPC resources.
+
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
+
+use crate::jsonx::Json;
+use crate::util::{next_id, Rng};
+
+/// Resource vector: milli-CPUs, MiB of memory, whole GPUs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Resources {
+    pub cpu_milli: u64,
+    pub mem_mb: u64,
+    pub gpu: u64,
+}
+
+impl Resources {
+    /// CPU-only request.
+    pub fn cpu(milli: u64) -> Self {
+        Resources { cpu_milli: milli, ..Default::default() }
+    }
+
+    /// Convenience constructor.
+    pub fn new(cpu_milli: u64, mem_mb: u64, gpu: u64) -> Self {
+        Resources { cpu_milli, mem_mb, gpu }
+    }
+
+    /// Component-wise `self >= other`.
+    pub fn fits(&self, other: &Resources) -> bool {
+        self.cpu_milli >= other.cpu_milli && self.mem_mb >= other.mem_mb && self.gpu >= other.gpu
+    }
+
+    fn sub(&mut self, other: &Resources) {
+        self.cpu_milli -= other.cpu_milli;
+        self.mem_mb -= other.mem_mb;
+        self.gpu -= other.gpu;
+    }
+
+    fn add(&mut self, other: &Resources) {
+        self.cpu_milli += other.cpu_milli;
+        self.mem_mb += other.mem_mb;
+        self.gpu += other.gpu;
+    }
+}
+
+/// A schedulable node. `virtual_of` marks wlm-operator-style virtual nodes
+/// backed by an HPC partition (paper §2.6).
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    pub capacity: Resources,
+    pub labels: BTreeMap<String, String>,
+    pub virtual_of: Option<String>,
+    /// Probability that a pod bound to this node fails transiently.
+    pub flake_rate: f64,
+}
+
+impl NodeSpec {
+    /// A plain worker node.
+    pub fn worker(name: impl Into<String>, capacity: Resources) -> Self {
+        NodeSpec {
+            name: name.into(),
+            capacity,
+            labels: BTreeMap::new(),
+            virtual_of: None,
+            flake_rate: 0.0,
+        }
+    }
+
+    /// Attach a label.
+    pub fn label(mut self, k: &str, v: &str) -> Self {
+        self.labels.insert(k.to_string(), v.to_string());
+        self
+    }
+
+    /// Mark as a virtual node backed by an HPC partition.
+    pub fn virtual_node(mut self, partition: &str) -> Self {
+        self.virtual_of = Some(partition.to_string());
+        self.labels.insert("dflow/partition".into(), partition.to_string());
+        self
+    }
+
+    /// Set the transient failure rate for pods on this node.
+    pub fn flaky(mut self, rate: f64) -> Self {
+        self.flake_rate = rate;
+        self
+    }
+}
+
+/// Pod resource request + node selector.
+#[derive(Debug, Clone, Default)]
+pub struct PodSpec {
+    pub name: String,
+    pub request: Resources,
+    pub selector: BTreeMap<String, String>,
+}
+
+impl PodSpec {
+    /// Pod requesting `request` with no selector.
+    pub fn new(name: impl Into<String>, request: Resources) -> Self {
+        PodSpec { name: name.into(), request, selector: BTreeMap::new() }
+    }
+
+    /// Require a node label.
+    pub fn select(mut self, k: &str, v: &str) -> Self {
+        self.selector.insert(k.to_string(), v.to_string());
+        self
+    }
+}
+
+/// A successful binding; release it back with [`Cluster::release`].
+#[derive(Debug, Clone)]
+pub struct PodBinding {
+    pub pod_id: u64,
+    pub node: String,
+    pub request: Resources,
+    /// Pre-sampled: whether this pod will flake (consumers decide what a
+    /// flake means — usually a transient OP failure).
+    pub flake: bool,
+}
+
+/// Scheduling outcome for a non-blocking attempt.
+#[derive(Debug)]
+pub enum ScheduleResult {
+    Bound(PodBinding),
+    /// No node currently fits; caller may block via [`Cluster::bind_blocking`].
+    Unschedulable,
+    /// No node can *ever* fit this request (capacity or selector mismatch).
+    Infeasible,
+}
+
+struct NodeState {
+    spec: NodeSpec,
+    free: Resources,
+    running: u64,
+}
+
+struct ClusterState {
+    nodes: Vec<NodeState>,
+    rng: Rng,
+    pods_bound: u64,
+    pods_released: u64,
+    peak_running: u64,
+}
+
+/// The cluster: shared, thread-safe. Binding blocks (condvar) when full —
+/// this is exactly the backpressure the engine relies on to avoid
+/// overcommitting compute.
+pub struct Cluster {
+    state: Mutex<ClusterState>,
+    freed: Condvar,
+}
+
+impl Cluster {
+    /// Build a cluster from node specs.
+    pub fn new(nodes: Vec<NodeSpec>, seed: u64) -> Self {
+        Cluster {
+            state: Mutex::new(ClusterState {
+                nodes: nodes
+                    .into_iter()
+                    .map(|spec| NodeState { free: spec.capacity, spec, running: 0 })
+                    .collect(),
+                rng: Rng::new(seed),
+                pods_bound: 0,
+                pods_released: 0,
+                peak_running: 0,
+            }),
+            freed: Condvar::new(),
+        }
+    }
+
+    /// Homogeneous helper: `n` workers with `capacity` each.
+    pub fn uniform(n: usize, capacity: Resources, seed: u64) -> Self {
+        Cluster::new(
+            (0..n).map(|i| NodeSpec::worker(format!("node-{i}"), capacity)).collect(),
+            seed,
+        )
+    }
+
+    fn selector_matches(spec: &NodeSpec, pod: &PodSpec) -> bool {
+        pod.selector.iter().all(|(k, v)| spec.labels.get(k) == Some(v))
+    }
+
+    fn try_bind_locked(state: &mut ClusterState, pod: &PodSpec) -> ScheduleResult {
+        let mut feasible = false;
+        // first-fit-decreasing on free CPU: scan nodes, prefer the first that
+        // fits; cheap and deterministic (docs: a real k8s scheduler scores
+        // nodes — first-fit preserves the semantics the engine depends on)
+        let mut chosen: Option<usize> = None;
+        for (i, n) in state.nodes.iter().enumerate() {
+            if !Self::selector_matches(&n.spec, pod) {
+                continue;
+            }
+            if n.spec.capacity.fits(&pod.request) {
+                feasible = true;
+            }
+            if n.free.fits(&pod.request) {
+                chosen = Some(i);
+                break;
+            }
+        }
+        match chosen {
+            Some(i) => {
+                let n = &mut state.nodes[i];
+                n.free.sub(&pod.request);
+                n.running += 1;
+                state.pods_bound += 1;
+                let running_total: u64 = state.nodes.iter().map(|n| n.running).sum();
+                state.peak_running = state.peak_running.max(running_total);
+                let flake = {
+                    let rate = state.nodes[i].spec.flake_rate;
+                    rate > 0.0 && state.rng.chance(rate)
+                };
+                ScheduleResult::Bound(PodBinding {
+                    pod_id: next_id(),
+                    node: state.nodes[i].spec.name.clone(),
+                    request: pod.request,
+                    flake,
+                })
+            }
+            None if feasible => ScheduleResult::Unschedulable,
+            None => ScheduleResult::Infeasible,
+        }
+    }
+
+    /// Non-blocking bind attempt.
+    pub fn try_bind(&self, pod: &PodSpec) -> ScheduleResult {
+        let mut state = self.state.lock().unwrap();
+        Self::try_bind_locked(&mut state, pod)
+    }
+
+    /// Bind, blocking until capacity frees up. Returns `None` if the request
+    /// is infeasible (would never fit).
+    pub fn bind_blocking(&self, pod: &PodSpec) -> Option<PodBinding> {
+        let mut state = self.state.lock().unwrap();
+        loop {
+            match Self::try_bind_locked(&mut state, pod) {
+                ScheduleResult::Bound(b) => return Some(b),
+                ScheduleResult::Infeasible => return None,
+                ScheduleResult::Unschedulable => {
+                    state = self.freed.wait(state).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Return a pod's resources to its node.
+    pub fn release(&self, binding: &PodBinding) {
+        let mut state = self.state.lock().unwrap();
+        if let Some(n) = state.nodes.iter_mut().find(|n| n.spec.name == binding.node) {
+            n.free.add(&binding.request);
+            n.running = n.running.saturating_sub(1);
+        }
+        state.pods_released += 1;
+        drop(state);
+        self.freed.notify_all();
+    }
+
+    /// (bound, released, peak concurrent) counters.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        let s = self.state.lock().unwrap();
+        (s.pods_bound, s.pods_released, s.peak_running)
+    }
+
+    /// Number of nodes.
+    pub fn node_count(&self) -> usize {
+        self.state.lock().unwrap().nodes.len()
+    }
+
+    /// Sum of free CPU milli across nodes (utilization probe).
+    pub fn free_cpu_milli(&self) -> u64 {
+        self.state.lock().unwrap().nodes.iter().map(|n| n.free.cpu_milli).sum()
+    }
+
+    /// Total CPU milli capacity.
+    pub fn total_cpu_milli(&self) -> u64 {
+        self.state
+            .lock()
+            .unwrap()
+            .nodes
+            .iter()
+            .map(|n| n.spec.capacity.cpu_milli)
+            .sum()
+    }
+
+    /// Cluster status as JSON (CLI `dflow cluster`).
+    pub fn to_json(&self) -> Json {
+        let s = self.state.lock().unwrap();
+        Json::Arr(
+            s.nodes
+                .iter()
+                .map(|n| {
+                    Json::obj(vec![
+                        ("name", Json::s(n.spec.name.clone())),
+                        ("cpu_free_milli", Json::n(n.free.cpu_milli as f64)),
+                        ("cpu_cap_milli", Json::n(n.spec.capacity.cpu_milli as f64)),
+                        ("gpu_free", Json::n(n.free.gpu as f64)),
+                        ("running", Json::n(n.running as f64)),
+                        (
+                            "virtual_of",
+                            n.spec
+                                .virtual_of
+                                .clone()
+                                .map(Json::s)
+                                .unwrap_or(Json::Null),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn bind_and_release_roundtrip() {
+        let c = Cluster::uniform(1, Resources::cpu(1000), 0);
+        let b = match c.try_bind(&PodSpec::new("p", Resources::cpu(600))) {
+            ScheduleResult::Bound(b) => b,
+            other => panic!("{other:?}"),
+        };
+        assert!(matches!(
+            c.try_bind(&PodSpec::new("q", Resources::cpu(600))),
+            ScheduleResult::Unschedulable
+        ));
+        c.release(&b);
+        assert!(matches!(
+            c.try_bind(&PodSpec::new("q", Resources::cpu(600))),
+            ScheduleResult::Bound(_)
+        ));
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let c = Cluster::uniform(2, Resources::cpu(1000), 0);
+        assert!(matches!(
+            c.try_bind(&PodSpec::new("big", Resources::cpu(2000))),
+            ScheduleResult::Infeasible
+        ));
+        assert!(c.bind_blocking(&PodSpec::new("big", Resources::cpu(2000))).is_none());
+    }
+
+    #[test]
+    fn selector_restricts_nodes() {
+        let c = Cluster::new(
+            vec![
+                NodeSpec::worker("cpu-0", Resources::cpu(1000)),
+                NodeSpec::worker("gpu-0", Resources::new(1000, 0, 1)).label("accel", "gpu"),
+            ],
+            0,
+        );
+        let pod = PodSpec::new("p", Resources::cpu(100)).select("accel", "gpu");
+        match c.try_bind(&pod) {
+            ScheduleResult::Bound(b) => assert_eq!(b.node, "gpu-0"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn virtual_node_labels() {
+        let n = NodeSpec::worker("v", Resources::cpu(64_000)).virtual_node("slurm-main");
+        assert_eq!(n.labels.get("dflow/partition").unwrap(), "slurm-main");
+        assert_eq!(n.virtual_of.as_deref(), Some("slurm-main"));
+    }
+
+    #[test]
+    fn gpu_requests_respect_capacity() {
+        let c = Cluster::new(vec![NodeSpec::worker("g", Resources::new(4000, 8000, 2))], 0);
+        let p = PodSpec::new("train", Resources::new(1000, 1000, 1));
+        let b1 = match c.try_bind(&p) {
+            ScheduleResult::Bound(b) => b,
+            o => panic!("{o:?}"),
+        };
+        let _b2 = match c.try_bind(&p) {
+            ScheduleResult::Bound(b) => b,
+            o => panic!("{o:?}"),
+        };
+        assert!(matches!(c.try_bind(&p), ScheduleResult::Unschedulable));
+        c.release(&b1);
+        assert!(matches!(c.try_bind(&p), ScheduleResult::Bound(_)));
+    }
+
+    #[test]
+    fn blocking_bind_wakes_on_release() {
+        let c = Arc::new(Cluster::uniform(1, Resources::cpu(100), 0));
+        let b = match c.try_bind(&PodSpec::new("hold", Resources::cpu(100))) {
+            ScheduleResult::Bound(b) => b,
+            o => panic!("{o:?}"),
+        };
+        let c2 = c.clone();
+        let waiter = std::thread::spawn(move || {
+            c2.bind_blocking(&PodSpec::new("wait", Resources::cpu(100))).unwrap()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        c.release(&b);
+        let got = waiter.join().unwrap();
+        assert_eq!(got.node, "node-0");
+    }
+
+    #[test]
+    fn flaky_node_flakes_at_rate() {
+        let c = Cluster::new(
+            vec![NodeSpec::worker("f", Resources::cpu(1_000_000)).flaky(0.5)],
+            42,
+        );
+        let mut flakes = 0;
+        for i in 0..1000 {
+            match c.try_bind(&PodSpec::new(format!("p{i}"), Resources::cpu(1))) {
+                ScheduleResult::Bound(b) => {
+                    if b.flake {
+                        flakes += 1;
+                    }
+                }
+                o => panic!("{o:?}"),
+            }
+        }
+        assert!((400..600).contains(&flakes), "flakes={flakes}");
+    }
+
+    #[test]
+    fn never_exceeds_capacity_property() {
+        crate::check::forall("capacity invariant", |rng| {
+            let cap = 100 + rng.below(900);
+            let c = Cluster::uniform(1 + rng.below(4) as usize, Resources::cpu(cap), rng.next_u64());
+            let total = c.total_cpu_milli();
+            let mut held = Vec::new();
+            let mut used = 0u64;
+            for i in 0..40 {
+                if rng.chance(0.6) {
+                    let req = 1 + rng.below(cap);
+                    if let ScheduleResult::Bound(b) =
+                        c.try_bind(&PodSpec::new(format!("p{i}"), Resources::cpu(req)))
+                    {
+                        used += req;
+                        held.push(b);
+                    }
+                } else if let Some(b) = held.pop() {
+                    used -= b.request.cpu_milli;
+                    c.release(&b);
+                }
+                assert!(used <= total, "over-committed: {used} > {total}");
+                assert_eq!(c.free_cpu_milli(), total - used);
+            }
+        });
+    }
+
+    #[test]
+    fn stats_track_peak() {
+        let c = Cluster::uniform(2, Resources::cpu(1000), 0);
+        let b1 = c.bind_blocking(&PodSpec::new("a", Resources::cpu(1000))).unwrap();
+        let b2 = c.bind_blocking(&PodSpec::new("b", Resources::cpu(1000))).unwrap();
+        c.release(&b1);
+        c.release(&b2);
+        let (bound, released, peak) = c.stats();
+        assert_eq!((bound, released, peak), (2, 2, 2));
+    }
+}

@@ -1,0 +1,1049 @@
+//! Workflow structure (paper §2.1–2.5): steps, super-OPs, slices,
+//! conditions, recursion, fault-tolerance policies and keys.
+//!
+//! Templates are *named* and steps reference templates **by name** — the
+//! same indirection Argo uses — which is what makes recursion ("use a
+//! steps/dag as the template of a building block within itself to achieve
+//! dynamic loop") representable without reference cycles.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cluster::Resources;
+use crate::core::op::{Op, Signature};
+use crate::core::value::{ArtifactRef, Value};
+
+// -- sources ---------------------------------------------------------------------
+
+/// Where a step input parameter's value comes from.
+#[derive(Clone)]
+pub enum ParamSrc {
+    /// A literal value.
+    Const(Value),
+    /// An input parameter of the enclosing template.
+    Input(String),
+    /// An output parameter of a sibling step (implies a dependency).
+    StepOutput { step: String, name: String },
+    /// The current slice item (only valid under [`Slices`]).
+    Item,
+}
+
+impl From<Value> for ParamSrc {
+    fn from(v: Value) -> Self {
+        ParamSrc::Const(v)
+    }
+}
+impl From<i64> for ParamSrc {
+    fn from(v: i64) -> Self {
+        ParamSrc::Const(Value::Int(v))
+    }
+}
+impl From<f64> for ParamSrc {
+    fn from(v: f64) -> Self {
+        ParamSrc::Const(Value::Float(v))
+    }
+}
+impl From<bool> for ParamSrc {
+    fn from(v: bool) -> Self {
+        ParamSrc::Const(Value::Bool(v))
+    }
+}
+impl From<&str> for ParamSrc {
+    fn from(v: &str) -> Self {
+        ParamSrc::Const(Value::Str(v.to_string()))
+    }
+}
+impl From<String> for ParamSrc {
+    fn from(v: String) -> Self {
+        ParamSrc::Const(Value::Str(v))
+    }
+}
+
+/// Where a step input artifact comes from.
+#[derive(Clone)]
+pub enum ArtSrc {
+    /// A fixed reference (e.g. an uploaded input).
+    Const(ArtifactRef),
+    /// An input artifact of the enclosing template.
+    Input(String),
+    /// An output artifact of a sibling step (implies a dependency).
+    StepOutput { step: String, name: String },
+    /// The current slice of a sliced input artifact list.
+    ItemOf(String),
+}
+
+// -- conditions --------------------------------------------------------------------
+
+/// Comparison operator for conditions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// One side of a comparison.
+#[derive(Clone)]
+pub enum Operand {
+    Const(Value),
+    /// Input parameter of the enclosing template.
+    Input(String),
+    /// Output parameter of a sibling step.
+    StepOutput { step: String, name: String },
+}
+
+/// Condition expression for `when` (paper §2.2: "a step ... will be executed
+/// when an expression is evaluated to be true in the runtime, skipped
+/// otherwise"). Also used as the breaking condition of recursive steps.
+#[derive(Clone)]
+pub enum Expr {
+    Cmp { lhs: Operand, op: CmpOp, rhs: Operand },
+    And(Box<Expr>, Box<Expr>),
+    Or(Box<Expr>, Box<Expr>),
+    Not(Box<Expr>),
+}
+
+impl Expr {
+    /// `lhs == rhs`.
+    pub fn eq(lhs: Operand, rhs: Operand) -> Expr {
+        Expr::Cmp { lhs, op: CmpOp::Eq, rhs }
+    }
+
+    /// `lhs < rhs`.
+    pub fn lt(lhs: Operand, rhs: Operand) -> Expr {
+        Expr::Cmp { lhs, op: CmpOp::Lt, rhs }
+    }
+
+    /// `lhs > rhs`.
+    pub fn gt(lhs: Operand, rhs: Operand) -> Expr {
+        Expr::Cmp { lhs, op: CmpOp::Gt, rhs }
+    }
+
+    /// Evaluate against resolved operand values.
+    pub fn eval(&self, resolve: &dyn Fn(&Operand) -> Option<Value>) -> Option<bool> {
+        match self {
+            Expr::Cmp { lhs, op, rhs } => {
+                let l = resolve(lhs)?;
+                let r = resolve(rhs)?;
+                compare(&l, &r, *op)
+            }
+            Expr::And(a, b) => Some(a.eval(resolve)? && b.eval(resolve)?),
+            Expr::Or(a, b) => Some(a.eval(resolve)? || b.eval(resolve)?),
+            Expr::Not(a) => Some(!a.eval(resolve)?),
+        }
+    }
+
+    /// Steps referenced by the expression (for dependency derivation).
+    pub fn referenced_steps(&self, out: &mut BTreeSet<String>) {
+        match self {
+            Expr::Cmp { lhs, rhs, .. } => {
+                for o in [lhs, rhs] {
+                    if let Operand::StepOutput { step, .. } = o {
+                        out.insert(step.clone());
+                    }
+                }
+            }
+            Expr::And(a, b) | Expr::Or(a, b) => {
+                a.referenced_steps(out);
+                b.referenced_steps(out);
+            }
+            Expr::Not(a) => a.referenced_steps(out),
+        }
+    }
+}
+
+fn compare(l: &Value, r: &Value, op: CmpOp) -> Option<bool> {
+    use std::cmp::Ordering as O;
+    let ord = match (l, r) {
+        (Value::Str(a), Value::Str(b)) => a.cmp(b),
+        (Value::Bool(a), Value::Bool(b)) => a.cmp(b),
+        _ => {
+            let (a, b) = (l.as_float()?, r.as_float()?);
+            a.partial_cmp(&b)?
+        }
+    };
+    Some(match op {
+        CmpOp::Eq => ord == O::Equal,
+        CmpOp::Ne => ord != O::Equal,
+        CmpOp::Lt => ord == O::Less,
+        CmpOp::Le => ord != O::Greater,
+        CmpOp::Gt => ord == O::Greater,
+        CmpOp::Ge => ord != O::Less,
+    })
+}
+
+// -- slices -----------------------------------------------------------------------
+
+/// Fault-tolerance threshold for a sliced step group (paper §2.4: "the
+/// workflow can be configured to continue when certain number/ratio of
+/// parallel steps succeed").
+#[derive(Debug, Clone, Copy)]
+pub enum ContinueOn {
+    /// Succeed if at least this many slices succeed.
+    SuccessNumber(usize),
+    /// Succeed if at least this ratio of slices succeed.
+    SuccessRatio(f64),
+}
+
+/// Map/reduce over parallel steps (paper §2.3): sliced inputs are lists fed
+/// element-wise to parallel instantiations of the same template; sliced
+/// outputs are stacked back into lists in input order.
+#[derive(Clone, Default)]
+pub struct Slices {
+    /// Input parameters to slice (each must resolve to a `Value::List`).
+    pub input_params: Vec<String>,
+    /// Input artifacts to slice (each must resolve to a list-artifact whose
+    /// slices live under `key/<i>`).
+    pub input_artifacts: Vec<String>,
+    /// Output parameters to stack into lists.
+    pub output_params: Vec<String>,
+    /// Output artifacts to stack under a common prefix.
+    pub output_artifacts: Vec<String>,
+    /// Maximum concurrent slices (None = engine default).
+    pub parallelism: Option<usize>,
+    /// Success threshold; None means all slices must succeed.
+    pub continue_on: Option<ContinueOn>,
+}
+
+impl Slices {
+    /// Slice one input parameter, stack listed outputs.
+    pub fn over(param: &str) -> Slices {
+        Slices { input_params: vec![param.to_string()], ..Default::default() }
+    }
+
+    /// Also slice another input parameter.
+    pub fn and(mut self, param: &str) -> Slices {
+        self.input_params.push(param.to_string());
+        self
+    }
+
+    /// Also slice an input artifact list.
+    pub fn artifact(mut self, name: &str) -> Slices {
+        self.input_artifacts.push(name.to_string());
+        self
+    }
+
+    /// Stack an output parameter.
+    pub fn stack(mut self, name: &str) -> Slices {
+        self.output_params.push(name.to_string());
+        self
+    }
+
+    /// Stack an output artifact.
+    pub fn stack_artifact(mut self, name: &str) -> Slices {
+        self.output_artifacts.push(name.to_string());
+        self
+    }
+
+    /// Cap slice concurrency.
+    pub fn parallelism(mut self, n: usize) -> Slices {
+        self.parallelism = Some(n);
+        self
+    }
+
+    /// Set the success threshold.
+    pub fn continue_on(mut self, c: ContinueOn) -> Slices {
+        self.continue_on = Some(c);
+        self
+    }
+}
+
+// -- step policy --------------------------------------------------------------------
+
+/// Per-step fault-tolerance policy (paper §2.4).
+#[derive(Debug, Clone)]
+pub struct StepPolicy {
+    /// Max retries on [`crate::core::OpError::Transient`].
+    pub retries: u32,
+    /// Delay between retries.
+    pub backoff: Duration,
+    /// Wall-time limit for one attempt.
+    pub timeout: Option<Duration>,
+    /// Treat a timeout as transient (retry) instead of fatal.
+    pub timeout_transient: bool,
+    /// Let the enclosing template continue when this step fails.
+    pub continue_on_failed: bool,
+}
+
+impl Default for StepPolicy {
+    fn default() -> Self {
+        StepPolicy {
+            retries: 0,
+            backoff: Duration::from_millis(0),
+            timeout: None,
+            timeout_transient: false,
+            continue_on_failed: false,
+        }
+    }
+}
+
+// -- step ----------------------------------------------------------------------------
+
+/// A step: an instantiation of a named template with bound inputs (paper
+/// §2.1: "Central to Dflow's workflow management is the Step").
+#[derive(Clone)]
+pub struct Step {
+    pub name: String,
+    /// Name of the template to instantiate (registry lookup — recursion OK).
+    pub template: String,
+    pub parameters: BTreeMap<String, ParamSrc>,
+    pub artifacts: BTreeMap<String, ArtSrc>,
+    /// Condition: run only when this evaluates true (§2.2).
+    pub when: Option<Expr>,
+    /// Map/reduce fan-out (§2.3).
+    pub slices: Option<Slices>,
+    /// Unique-key template for restart/reuse (§2.5). Supports
+    /// `{{item}}` and `{{inputs.parameters.NAME}}` substitutions.
+    pub key: Option<String>,
+    /// Extra explicit dependencies (DAG templates; §2.2 "users retaining
+    /// the option to specify additional dependencies").
+    pub dependencies: Vec<String>,
+    pub policy: StepPolicy,
+    /// Executor override (§2.6); None uses the engine default.
+    pub executor: Option<String>,
+}
+
+impl Step {
+    /// New step instantiating `template`.
+    pub fn new(name: &str, template: &str) -> Step {
+        Step {
+            name: name.to_string(),
+            template: template.to_string(),
+            parameters: BTreeMap::new(),
+            artifacts: BTreeMap::new(),
+            when: None,
+            slices: None,
+            key: None,
+            dependencies: Vec::new(),
+            policy: StepPolicy::default(),
+            executor: None,
+        }
+    }
+
+    /// Bind an input parameter.
+    pub fn param(mut self, name: &str, src: impl Into<ParamSrc>) -> Step {
+        self.parameters.insert(name.to_string(), src.into());
+        self
+    }
+
+    /// Bind an input parameter to an enclosing-template input.
+    pub fn param_from_input(self, name: &str, input: &str) -> Step {
+        self.param(name, ParamSrc::Input(input.to_string()))
+    }
+
+    /// Bind an input parameter to a sibling step's output.
+    pub fn param_from_step(self, name: &str, step: &str, output: &str) -> Step {
+        self.param(
+            name,
+            ParamSrc::StepOutput { step: step.to_string(), name: output.to_string() },
+        )
+    }
+
+    /// Bind an input artifact.
+    pub fn artifact(mut self, name: &str, src: ArtSrc) -> Step {
+        self.artifacts.insert(name.to_string(), src);
+        self
+    }
+
+    /// Bind an input artifact to a sibling step's output artifact.
+    pub fn artifact_from_step(self, name: &str, step: &str, output: &str) -> Step {
+        self.artifact(
+            name,
+            ArtSrc::StepOutput { step: step.to_string(), name: output.to_string() },
+        )
+    }
+
+    /// Set the condition.
+    pub fn when(mut self, e: Expr) -> Step {
+        self.when = Some(e);
+        self
+    }
+
+    /// Set slices.
+    pub fn slices(mut self, s: Slices) -> Step {
+        self.slices = Some(s);
+        self
+    }
+
+    /// Set the reuse key template.
+    pub fn key(mut self, k: &str) -> Step {
+        self.key = Some(k.to_string());
+        self
+    }
+
+    /// Add an explicit dependency (DAG).
+    pub fn depends_on(mut self, step: &str) -> Step {
+        self.dependencies.push(step.to_string());
+        self
+    }
+
+    /// Set the fault-tolerance policy.
+    pub fn policy(mut self, p: StepPolicy) -> Step {
+        self.policy = p;
+        self
+    }
+
+    /// Select an executor plugin by registered name.
+    pub fn executor(mut self, name: &str) -> Step {
+        self.executor = Some(name.to_string());
+        self
+    }
+
+    /// All sibling steps this step depends on (explicit + implied by
+    /// sources + referenced in `when`).
+    pub fn implied_dependencies(&self) -> BTreeSet<String> {
+        let mut deps: BTreeSet<String> = self.dependencies.iter().cloned().collect();
+        for src in self.parameters.values() {
+            if let ParamSrc::StepOutput { step, .. } = src {
+                deps.insert(step.clone());
+            }
+        }
+        for src in self.artifacts.values() {
+            if let ArtSrc::StepOutput { step, .. } = src {
+                deps.insert(step.clone());
+            }
+        }
+        if let Some(w) = &self.when {
+            w.referenced_steps(&mut deps);
+        }
+        deps
+    }
+}
+
+// -- templates ------------------------------------------------------------------------
+
+/// Where a super-OP's declared output comes from (paper §2.2: "declare
+/// output parameters/artifacts for a steps/dag and their source").
+#[derive(Clone)]
+pub enum OutputSrc {
+    /// Output of an inner step.
+    StepOutput { step: String, name: String },
+    /// Forward one of the template's own inputs.
+    Input(String),
+}
+
+/// Container OP template: a leaf operation executed "in a container" (here:
+/// in-process or through an executor plugin), with resource requests the
+/// cluster scheduler enforces.
+#[derive(Clone)]
+pub struct ContainerTemplate {
+    pub name: String,
+    /// Container image (metadata; preserved for observability/reproducibility).
+    pub image: String,
+    pub op: Arc<dyn Op>,
+    /// Pod resource request.
+    pub resources: Resources,
+    /// Node selector labels (virtual HPC nodes etc.).
+    pub node_selector: BTreeMap<String, String>,
+}
+
+impl ContainerTemplate {
+    /// New container template around an OP.
+    pub fn new(name: &str, op: Arc<dyn Op>) -> Self {
+        ContainerTemplate {
+            name: name.to_string(),
+            image: "dflow/base:latest".to_string(),
+            op,
+            resources: Resources::cpu(1000),
+            node_selector: BTreeMap::new(),
+        }
+    }
+
+    /// Set the image tag.
+    pub fn image(mut self, image: &str) -> Self {
+        self.image = image.to_string();
+        self
+    }
+
+    /// Set the pod resource request.
+    pub fn resources(mut self, r: Resources) -> Self {
+        self.resources = r;
+        self
+    }
+
+    /// Require a node label.
+    pub fn select_node(mut self, k: &str, v: &str) -> Self {
+        self.node_selector.insert(k.to_string(), v.to_string());
+        self
+    }
+}
+
+/// Declared interface of a super-OP template.
+#[derive(Clone, Default)]
+pub struct TemplateIo {
+    pub signature: Signature,
+    pub output_params: BTreeMap<String, OutputSrc>,
+    pub output_artifacts: BTreeMap<String, OutputSrc>,
+}
+
+/// Steps super-OP: groups run serially; steps inside a group run in
+/// parallel (Argo semantics, paper Fig. 2).
+#[derive(Clone)]
+pub struct Steps {
+    pub name: String,
+    pub io: TemplateIo,
+    pub groups: Vec<Vec<Step>>,
+}
+
+impl Steps {
+    /// Empty steps template.
+    pub fn new(name: &str) -> Self {
+        Steps { name: name.to_string(), io: TemplateIo::default(), groups: Vec::new() }
+    }
+
+    /// Declare the template signature.
+    pub fn signature(mut self, sig: Signature) -> Self {
+        self.io.signature = sig;
+        self
+    }
+
+    /// Append a serial group with one step.
+    pub fn then(mut self, step: Step) -> Self {
+        self.groups.push(vec![step]);
+        self
+    }
+
+    /// Append a serial group of parallel steps.
+    pub fn then_parallel(mut self, steps: Vec<Step>) -> Self {
+        self.groups.push(steps);
+        self
+    }
+
+    /// Declare an output parameter sourced from an inner step.
+    pub fn out_param_from(mut self, name: &str, step: &str, inner: &str) -> Self {
+        self.io.output_params.insert(
+            name.to_string(),
+            OutputSrc::StepOutput { step: step.to_string(), name: inner.to_string() },
+        );
+        self
+    }
+
+    /// Declare an output artifact sourced from an inner step.
+    pub fn out_artifact_from(mut self, name: &str, step: &str, inner: &str) -> Self {
+        self.io.output_artifacts.insert(
+            name.to_string(),
+            OutputSrc::StepOutput { step: step.to_string(), name: inner.to_string() },
+        );
+        self
+    }
+
+    /// Declare an output parameter forwarding a template input.
+    pub fn out_param_from_input(mut self, name: &str, input: &str) -> Self {
+        self.io
+            .output_params
+            .insert(name.to_string(), OutputSrc::Input(input.to_string()));
+        self
+    }
+
+    /// All steps in declaration order.
+    pub fn all_steps(&self) -> impl Iterator<Item = &Step> {
+        self.groups.iter().flatten()
+    }
+}
+
+/// DAG super-OP: tasks execute as their dependencies complete; dependencies
+/// are auto-derived from input/output relationships plus any explicit ones
+/// (paper §2.2).
+#[derive(Clone)]
+pub struct Dag {
+    pub name: String,
+    pub io: TemplateIo,
+    pub tasks: Vec<Step>,
+}
+
+impl Dag {
+    /// Empty DAG template.
+    pub fn new(name: &str) -> Self {
+        Dag { name: name.to_string(), io: TemplateIo::default(), tasks: Vec::new() }
+    }
+
+    /// Declare the template signature.
+    pub fn signature(mut self, sig: Signature) -> Self {
+        self.io.signature = sig;
+        self
+    }
+
+    /// Add a task.
+    pub fn task(mut self, step: Step) -> Self {
+        self.tasks.push(step);
+        self
+    }
+
+    /// Declare an output parameter sourced from an inner task.
+    pub fn out_param_from(mut self, name: &str, step: &str, inner: &str) -> Self {
+        self.io.output_params.insert(
+            name.to_string(),
+            OutputSrc::StepOutput { step: step.to_string(), name: inner.to_string() },
+        );
+        self
+    }
+
+    /// Declare an output artifact sourced from an inner task.
+    pub fn out_artifact_from(mut self, name: &str, step: &str, inner: &str) -> Self {
+        self.io.output_artifacts.insert(
+            name.to_string(),
+            OutputSrc::StepOutput { step: step.to_string(), name: inner.to_string() },
+        );
+        self
+    }
+}
+
+/// Any OP template (paper Fig. 2: "an OP can be implemented by executing a
+/// script within a container, as well as through several steps or a DAG").
+#[derive(Clone)]
+pub enum OpTemplate {
+    Container(ContainerTemplate),
+    Steps(Steps),
+    Dag(Dag),
+}
+
+impl OpTemplate {
+    /// Template name.
+    pub fn name(&self) -> &str {
+        match self {
+            OpTemplate::Container(t) => &t.name,
+            OpTemplate::Steps(t) => &t.name,
+            OpTemplate::Dag(t) => &t.name,
+        }
+    }
+
+    /// Template signature.
+    pub fn signature(&self) -> Signature {
+        match self {
+            OpTemplate::Container(t) => t.op.signature(),
+            OpTemplate::Steps(t) => t.io.signature.clone(),
+            OpTemplate::Dag(t) => t.io.signature.clone(),
+        }
+    }
+}
+
+// -- workflow --------------------------------------------------------------------------
+
+/// A workflow: a named-template registry, an entrypoint, and argument
+/// bindings.
+#[derive(Clone)]
+pub struct Workflow {
+    pub name: String,
+    pub templates: BTreeMap<String, OpTemplate>,
+    pub entrypoint: String,
+    pub arguments: BTreeMap<String, Value>,
+    pub input_artifacts: BTreeMap<String, ArtifactRef>,
+    /// Workflow-wide parallelism cap (None = engine default).
+    pub parallelism: Option<usize>,
+}
+
+impl Workflow {
+    /// New empty workflow.
+    pub fn new(name: &str) -> Workflow {
+        Workflow {
+            name: name.to_string(),
+            templates: BTreeMap::new(),
+            entrypoint: String::new(),
+            arguments: BTreeMap::new(),
+            input_artifacts: BTreeMap::new(),
+            parallelism: None,
+        }
+    }
+
+    /// Register a container template.
+    pub fn container(mut self, t: ContainerTemplate) -> Workflow {
+        self.templates.insert(t.name.clone(), OpTemplate::Container(t));
+        self
+    }
+
+    /// Register a steps template.
+    pub fn steps(mut self, t: Steps) -> Workflow {
+        self.templates.insert(t.name.clone(), OpTemplate::Steps(t));
+        self
+    }
+
+    /// Register a DAG template.
+    pub fn dag(mut self, t: Dag) -> Workflow {
+        self.templates.insert(t.name.clone(), OpTemplate::Dag(t));
+        self
+    }
+
+    /// Set the entrypoint template name.
+    pub fn entrypoint(mut self, name: &str) -> Workflow {
+        self.entrypoint = name.to_string();
+        self
+    }
+
+    /// Bind a workflow argument.
+    pub fn arg(mut self, name: &str, v: impl Into<Value>) -> Workflow {
+        self.arguments.insert(name.to_string(), v.into());
+        self
+    }
+
+    /// Bind a workflow input artifact.
+    pub fn input_artifact(mut self, name: &str, a: ArtifactRef) -> Workflow {
+        self.input_artifacts.insert(name.to_string(), a);
+        self
+    }
+
+    /// Cap total concurrent leaf executions.
+    pub fn parallelism(mut self, n: usize) -> Workflow {
+        self.parallelism = Some(n);
+        self
+    }
+
+    /// Static validation: entrypoint exists, every referenced template
+    /// exists, step-output references point at declared outputs, DAG
+    /// dependencies reference sibling tasks, and required template inputs
+    /// are bound by each step.
+    pub fn validate(&self) -> Result<(), String> {
+        let tpl = self
+            .templates
+            .get(&self.entrypoint)
+            .ok_or_else(|| format!("entrypoint template '{}' not found", self.entrypoint))?;
+        // check workflow arguments against entrypoint signature
+        self.check_bound_inputs(tpl, &self.arguments, &self.input_artifacts)?;
+        for t in self.templates.values() {
+            match t {
+                OpTemplate::Container(_) => {}
+                OpTemplate::Steps(s) => {
+                    for group in &s.groups {
+                        for step in group {
+                            self.validate_step(step, t.name())?;
+                        }
+                    }
+                    // step-output deps must point to *earlier* groups
+                    let mut seen: BTreeSet<&str> = BTreeSet::new();
+                    for group in &s.groups {
+                        for step in group {
+                            for dep in step.implied_dependencies() {
+                                if !seen.contains(dep.as_str()) {
+                                    return Err(format!(
+                                        "steps '{}': step '{}' depends on '{}' which is not in an earlier group",
+                                        s.name, step.name, dep
+                                    ));
+                                }
+                            }
+                        }
+                        for step in group {
+                            seen.insert(&step.name);
+                        }
+                    }
+                }
+                OpTemplate::Dag(d) => {
+                    let names: BTreeSet<&str> =
+                        d.tasks.iter().map(|t| t.name.as_str()).collect();
+                    for task in &d.tasks {
+                        self.validate_step(task, t.name())?;
+                        for dep in task.implied_dependencies() {
+                            if !names.contains(dep.as_str()) {
+                                return Err(format!(
+                                    "dag '{}': task '{}' depends on unknown task '{}'",
+                                    d.name, task.name, dep
+                                ));
+                            }
+                        }
+                    }
+                    // cycle check (Kahn)
+                    let mut indeg: BTreeMap<&str, usize> =
+                        names.iter().map(|n| (*n, 0)).collect();
+                    let deps: Vec<(String, BTreeSet<String>)> = d
+                        .tasks
+                        .iter()
+                        .map(|t| (t.name.clone(), t.implied_dependencies()))
+                        .collect();
+                    for (_, ds) in &deps {
+                        let _ = ds;
+                    }
+                    for (name, ds) in &deps {
+                        let _ = name;
+                        for _d in ds {
+                            // indegree counts below
+                        }
+                    }
+                    for (name, ds) in &deps {
+                        *indeg.get_mut(name.as_str()).unwrap() += ds.len();
+                    }
+                    let mut ready: Vec<&str> = indeg
+                        .iter()
+                        .filter(|(_, c)| **c == 0)
+                        .map(|(n, _)| *n)
+                        .collect();
+                    let mut done = 0;
+                    while let Some(n) = ready.pop() {
+                        done += 1;
+                        for (name, ds) in &deps {
+                            if ds.contains(n) {
+                                let c = indeg.get_mut(name.as_str()).unwrap();
+                                *c -= 1;
+                                if *c == 0 {
+                                    ready.push(name.as_str());
+                                }
+                            }
+                        }
+                    }
+                    if done != d.tasks.len() {
+                        return Err(format!("dag '{}' contains a cycle", d.name));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_step(&self, step: &Step, owner: &str) -> Result<(), String> {
+        let tpl = self.templates.get(&step.template).ok_or_else(|| {
+            format!(
+                "template '{owner}': step '{}' references unknown template '{}'",
+                step.name, step.template
+            )
+        })?;
+        let sig = tpl.signature();
+        // every required input param must be bound (or have a default)
+        for p in &sig.input_params {
+            if !p.optional && p.default.is_none() && !step.parameters.contains_key(&p.name) {
+                return Err(format!(
+                    "step '{}': required input parameter '{}' of template '{}' is not bound",
+                    step.name, p.name, step.template
+                ));
+            }
+        }
+        for a in &sig.input_artifacts {
+            if !a.optional && !step.artifacts.contains_key(&a.name) {
+                return Err(format!(
+                    "step '{}': required input artifact '{}' of template '{}' is not bound",
+                    step.name, a.name, step.template
+                ));
+            }
+        }
+        // sliced inputs must exist in the target signature
+        if let Some(sl) = &step.slices {
+            for p in &sl.input_params {
+                if !sig.input_params.iter().any(|s| &s.name == p) {
+                    return Err(format!(
+                        "step '{}': sliced parameter '{p}' is not an input of '{}'",
+                        step.name, step.template
+                    ));
+                }
+            }
+            for p in &sl.output_params {
+                if !sig.output_params.iter().any(|s| &s.name == p) {
+                    return Err(format!(
+                        "step '{}': stacked output '{p}' is not an output of '{}'",
+                        step.name, step.template
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn check_bound_inputs(
+        &self,
+        tpl: &OpTemplate,
+        args: &BTreeMap<String, Value>,
+        arts: &BTreeMap<String, ArtifactRef>,
+    ) -> Result<(), String> {
+        let sig = tpl.signature();
+        for p in &sig.input_params {
+            match args.get(&p.name) {
+                Some(v) => {
+                    if !v.check_type(p.ty) {
+                        return Err(format!(
+                            "workflow argument '{}' has type {} but template declares {}",
+                            p.name,
+                            v.type_of(),
+                            p.ty
+                        ));
+                    }
+                }
+                None if p.optional || p.default.is_some() => {}
+                None => {
+                    return Err(format!("workflow argument '{}' is required", p.name));
+                }
+            }
+        }
+        for a in &sig.input_artifacts {
+            if !a.optional && !arts.contains_key(&a.name) {
+                return Err(format!("workflow input artifact '{}' is required", a.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::op::{FnOp, Signature};
+    use crate::core::value::ParamType;
+
+    fn noop_template(name: &str) -> ContainerTemplate {
+        ContainerTemplate::new(
+            name,
+            Arc::new(FnOp::new(
+                Signature::new()
+                    .in_param("x", ParamType::Int)
+                    .out_param("y", ParamType::Int),
+                |ctx| {
+                    let x = ctx.get_int("x")?;
+                    ctx.set("y", x);
+                    Ok(())
+                },
+            )),
+        )
+    }
+
+    #[test]
+    fn expr_eval_numeric_and_string() {
+        let resolve = |o: &Operand| match o {
+            Operand::Const(v) => Some(v.clone()),
+            _ => None,
+        };
+        let e = Expr::lt(Operand::Const(Value::Int(2)), Operand::Const(Value::Float(2.5)));
+        assert_eq!(e.eval(&resolve), Some(true));
+        let e = Expr::eq(
+            Operand::Const(Value::Str("a".into())),
+            Operand::Const(Value::Str("a".into())),
+        );
+        assert_eq!(e.eval(&resolve), Some(true));
+        let e = Expr::Not(Box::new(Expr::gt(
+            Operand::Const(Value::Int(1)),
+            Operand::Const(Value::Int(0)),
+        )));
+        assert_eq!(e.eval(&resolve), Some(false));
+    }
+
+    #[test]
+    fn expr_collects_step_refs() {
+        let e = Expr::And(
+            Box::new(Expr::eq(
+                Operand::StepOutput { step: "a".into(), name: "o".into() },
+                Operand::Const(Value::Int(1)),
+            )),
+            Box::new(Expr::eq(
+                Operand::StepOutput { step: "b".into(), name: "o".into() },
+                Operand::Const(Value::Int(2)),
+            )),
+        );
+        let mut refs = BTreeSet::new();
+        e.referenced_steps(&mut refs);
+        assert_eq!(refs.len(), 2);
+    }
+
+    #[test]
+    fn implied_dependencies_from_sources() {
+        let s = Step::new("c", "t")
+            .param_from_step("x", "a", "y")
+            .artifact_from_step("f", "b", "g")
+            .depends_on("d");
+        let deps = s.implied_dependencies();
+        assert_eq!(deps, ["a", "b", "d"].iter().map(|s| s.to_string()).collect());
+    }
+
+    #[test]
+    fn workflow_validate_ok() {
+        let wf = Workflow::new("w")
+            .container(noop_template("t"))
+            .dag(
+                Dag::new("main")
+                    .task(Step::new("a", "t").param("x", Value::Int(1)))
+                    .task(Step::new("b", "t").param_from_step("x", "a", "y")),
+            )
+            .entrypoint("main");
+        wf.validate().unwrap();
+    }
+
+    #[test]
+    fn workflow_validate_rejects_unknown_template() {
+        let wf = Workflow::new("w")
+            .dag(Dag::new("main").task(Step::new("a", "missing")))
+            .entrypoint("main");
+        assert!(wf.validate().unwrap_err().contains("unknown template"));
+    }
+
+    #[test]
+    fn workflow_validate_rejects_unbound_required_param() {
+        let wf = Workflow::new("w")
+            .container(noop_template("t"))
+            .dag(Dag::new("main").task(Step::new("a", "t")))
+            .entrypoint("main");
+        assert!(wf.validate().unwrap_err().contains("not bound"));
+    }
+
+    #[test]
+    fn workflow_validate_rejects_cycle() {
+        let wf = Workflow::new("w")
+            .container(noop_template("t"))
+            .dag(
+                Dag::new("main")
+                    .task(Step::new("a", "t").param("x", Value::Int(1)).depends_on("b"))
+                    .task(Step::new("b", "t").param("x", Value::Int(1)).depends_on("a")),
+            )
+            .entrypoint("main");
+        assert!(wf.validate().unwrap_err().contains("cycle"));
+    }
+
+    #[test]
+    fn workflow_validate_rejects_forward_ref_in_steps() {
+        let wf = Workflow::new("w")
+            .container(noop_template("t"))
+            .steps(
+                Steps::new("main")
+                    .then(Step::new("a", "t").param_from_step("x", "b", "y"))
+                    .then(Step::new("b", "t").param("x", Value::Int(1))),
+            )
+            .entrypoint("main");
+        assert!(wf.validate().unwrap_err().contains("earlier group"));
+    }
+
+    #[test]
+    fn workflow_validate_checks_arg_types() {
+        let steps = Steps::new("main")
+            .signature(Signature::new().in_param("n", ParamType::Int))
+            .then(Step::new("a", "t").param("x", Value::Int(1)));
+        let wf = Workflow::new("w")
+            .container(noop_template("t"))
+            .steps(steps)
+            .entrypoint("main")
+            .arg("n", "not-an-int");
+        assert!(wf.validate().unwrap_err().contains("type"));
+    }
+
+    #[test]
+    fn workflow_validate_checks_sliced_names() {
+        let wf = Workflow::new("w")
+            .container(noop_template("t"))
+            .steps(
+                Steps::new("main").then(
+                    Step::new("a", "t")
+                        .param("x", Value::ints([1, 2]))
+                        .slices(Slices::over("nope")),
+                ),
+            )
+            .entrypoint("main");
+        assert!(wf.validate().unwrap_err().contains("sliced parameter"));
+    }
+
+    #[test]
+    fn recursion_is_representable() {
+        // template "loop" contains a step that references template "loop"
+        let wf = Workflow::new("w")
+            .container(noop_template("t"))
+            .steps(
+                Steps::new("loop")
+                    .signature(Signature::new().in_param("i", ParamType::Int))
+                    .then(Step::new("body", "t").param_from_input("x", "i"))
+                    .then(
+                        Step::new("next", "loop")
+                            .param_from_input("i", "i")
+                            .when(Expr::lt(
+                                Operand::Input("i".into()),
+                                Operand::Const(Value::Int(3)),
+                            )),
+                    ),
+            )
+            .entrypoint("loop")
+            .arg("i", 0i64);
+        wf.validate().unwrap();
+    }
+}

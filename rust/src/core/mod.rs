@@ -1,0 +1,16 @@
+//! The workflow language (paper §2): values, OPs, steps, super-OPs,
+//! slices, conditions and workflows. See the module docs of [`value`],
+//! [`op`] and [`flow`].
+
+pub mod flow;
+pub mod op;
+pub mod value;
+
+pub use flow::{
+    ArtSrc, CmpOp, ContainerTemplate, ContinueOn, Dag, Expr, OpTemplate, Operand, OutputSrc,
+    ParamSrc, Slices, Step, StepPolicy, Steps, TemplateIo, Workflow,
+};
+pub use op::{
+    ArtifactSpec, CancelToken, FnOp, Op, OpCtx, OpError, ParamSpec, ShellOp, Signature,
+};
+pub use value::{ArtifactRef, ParamType, Value};

@@ -1,0 +1,578 @@
+//! The OP abstraction (paper §2.1): signatures, the `Op` trait, execution
+//! context, and the built-in OP kinds.
+//!
+//! Dflow's OP template "defines a particular operation to be executed given
+//! the input structure and the expected output structure", with strict type
+//! checking "implemented before and after the execute method". The Rust
+//! analogues:
+//!
+//! * [`Signature`] — `get_input_sign`/`get_output_sign` in one declaration.
+//! * [`Op`] — the class-style OP: `signature()` + `execute(&mut OpCtx)`.
+//! * [`FnOp`] — the function-style OP: a closure plus a signature.
+//! * [`ShellOp`] — the `ShellOPTemplate` analogue: a real `/bin/sh` script
+//!   run in a scratch workdir with parameters as environment variables and
+//!   artifacts staged as files (this is exactly Dflow's debug-mode
+//!   semantics; the "image" is carried as metadata by the container
+//!   template).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::core::value::{ArtifactRef, ParamType, Value};
+use crate::storage::{StorageClient, StorageError};
+
+/// OP failure. `Transient` maps to `dflow.TransientError` — the engine
+/// retries it per the step policy (§2.4); `Fatal` fails the step at once.
+#[derive(Debug, Clone)]
+pub enum OpError {
+    Transient(String),
+    Fatal(String),
+}
+
+impl OpError {
+    /// Message payload.
+    pub fn message(&self) -> &str {
+        match self {
+            OpError::Transient(m) | OpError::Fatal(m) => m,
+        }
+    }
+
+    /// Is this retryable?
+    pub fn is_transient(&self) -> bool {
+        matches!(self, OpError::Transient(_))
+    }
+}
+
+impl fmt::Display for OpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OpError::Transient(m) => write!(f, "transient: {m}"),
+            OpError::Fatal(m) => write!(f, "fatal: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for OpError {}
+
+impl From<StorageError> for OpError {
+    fn from(e: StorageError) -> Self {
+        match e {
+            StorageError::Transient(m) => OpError::Transient(m),
+            other => OpError::Fatal(other.to_string()),
+        }
+    }
+}
+
+/// Declared input/output parameter.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub ty: ParamType,
+    pub optional: bool,
+    pub default: Option<Value>,
+}
+
+impl ParamSpec {
+    /// Required parameter.
+    pub fn required(name: &str, ty: ParamType) -> Self {
+        ParamSpec { name: name.into(), ty, optional: false, default: None }
+    }
+
+    /// Optional parameter with a default.
+    pub fn with_default(name: &str, ty: ParamType, default: Value) -> Self {
+        ParamSpec { name: name.into(), ty, optional: true, default: Some(default) }
+    }
+}
+
+/// Declared input/output artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub optional: bool,
+}
+
+impl ArtifactSpec {
+    /// Required artifact.
+    pub fn required(name: &str) -> Self {
+        ArtifactSpec { name: name.into(), optional: false }
+    }
+
+    /// Optional artifact.
+    pub fn optional(name: &str) -> Self {
+        ArtifactSpec { name: name.into(), optional: true }
+    }
+}
+
+/// Full OP signature: `get_input_sign` + `get_output_sign`.
+#[derive(Debug, Clone, Default)]
+pub struct Signature {
+    pub input_params: Vec<ParamSpec>,
+    pub input_artifacts: Vec<ArtifactSpec>,
+    pub output_params: Vec<ParamSpec>,
+    pub output_artifacts: Vec<ArtifactSpec>,
+}
+
+impl Signature {
+    /// Empty signature builder root.
+    pub fn new() -> Self {
+        Signature::default()
+    }
+
+    /// Add a required input parameter.
+    pub fn in_param(mut self, name: &str, ty: ParamType) -> Self {
+        self.input_params.push(ParamSpec::required(name, ty));
+        self
+    }
+
+    /// Add an optional input parameter with a default.
+    pub fn in_param_default(mut self, name: &str, ty: ParamType, default: Value) -> Self {
+        self.input_params.push(ParamSpec::with_default(name, ty, default));
+        self
+    }
+
+    /// Add a required input artifact.
+    pub fn in_artifact(mut self, name: &str) -> Self {
+        self.input_artifacts.push(ArtifactSpec::required(name));
+        self
+    }
+
+    /// Add an optional input artifact.
+    pub fn in_artifact_optional(mut self, name: &str) -> Self {
+        self.input_artifacts.push(ArtifactSpec::optional(name));
+        self
+    }
+
+    /// Add an output parameter.
+    pub fn out_param(mut self, name: &str, ty: ParamType) -> Self {
+        self.output_params.push(ParamSpec::required(name, ty));
+        self
+    }
+
+    /// Add an output artifact.
+    pub fn out_artifact(mut self, name: &str) -> Self {
+        self.output_artifacts.push(ArtifactSpec::required(name));
+        self
+    }
+}
+
+/// Cooperative cancellation flag handed to OPs (set on timeout).
+#[derive(Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// Fresh, un-cancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Signal cancellation.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    /// Has cancellation been requested?
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Execution context handed to [`Op::execute`]: resolved typed inputs,
+/// artifact I/O through the engine's storage client, output collection, and
+/// a handle to the PJRT runtime for executive science OPs.
+pub struct OpCtx {
+    /// Resolved input parameters (type-checked against the signature).
+    pub inputs: BTreeMap<String, Value>,
+    /// Resolved input artifacts.
+    pub input_artifacts: BTreeMap<String, ArtifactRef>,
+    /// Output parameters set by the OP.
+    pub outputs: BTreeMap<String, Value>,
+    /// Output artifacts set by the OP.
+    pub output_artifacts: BTreeMap<String, ArtifactRef>,
+    /// Engine storage client (artifact repository).
+    pub storage: Arc<dyn StorageClient>,
+    /// PJRT runtime when the engine has one (science OPs need it).
+    pub runtime: Option<Arc<crate::runtime::Runtime>>,
+    /// Scratch directory unique to this execution.
+    pub workdir: PathBuf,
+    /// Namespace prefix for output artifact keys (set by the engine).
+    pub artifact_prefix: String,
+    /// Cooperative cancellation (timeouts).
+    pub cancel: CancelToken,
+}
+
+impl OpCtx {
+    /// Minimal context for tests / direct invocation.
+    pub fn bare(storage: Arc<dyn StorageClient>) -> OpCtx {
+        OpCtx {
+            inputs: BTreeMap::new(),
+            input_artifacts: BTreeMap::new(),
+            outputs: BTreeMap::new(),
+            output_artifacts: BTreeMap::new(),
+            storage,
+            runtime: None,
+            workdir: std::env::temp_dir().join(format!("dflow-op-{}", crate::util::next_id())),
+            artifact_prefix: format!("test/{}", crate::util::next_id()),
+            cancel: CancelToken::new(),
+        }
+    }
+
+    /// Typed getter: i64.
+    pub fn get_int(&self, name: &str) -> Result<i64, OpError> {
+        self.get(name)?
+            .as_int()
+            .ok_or_else(|| OpError::Fatal(format!("parameter '{name}' is not an int")))
+    }
+
+    /// Typed getter: f64.
+    pub fn get_float(&self, name: &str) -> Result<f64, OpError> {
+        self.get(name)?
+            .as_float()
+            .ok_or_else(|| OpError::Fatal(format!("parameter '{name}' is not a float")))
+    }
+
+    /// Typed getter: str.
+    pub fn get_str(&self, name: &str) -> Result<&str, OpError> {
+        self.get(name)?
+            .as_str()
+            .ok_or_else(|| OpError::Fatal(format!("parameter '{name}' is not a string")))
+    }
+
+    /// Typed getter: bool.
+    pub fn get_bool(&self, name: &str) -> Result<bool, OpError> {
+        self.get(name)?
+            .as_bool()
+            .ok_or_else(|| OpError::Fatal(format!("parameter '{name}' is not a bool")))
+    }
+
+    /// Typed getter: list.
+    pub fn get_list(&self, name: &str) -> Result<&[Value], OpError> {
+        self.get(name)?
+            .as_list()
+            .ok_or_else(|| OpError::Fatal(format!("parameter '{name}' is not a list")))
+    }
+
+    /// Raw getter.
+    pub fn get(&self, name: &str) -> Result<&Value, OpError> {
+        self.inputs
+            .get(name)
+            .ok_or_else(|| OpError::Fatal(format!("missing input parameter '{name}'")))
+    }
+
+    /// Set an output parameter.
+    pub fn set(&mut self, name: &str, value: impl Into<Value>) {
+        self.outputs.insert(name.to_string(), value.into());
+    }
+
+    /// Read the bytes of an input artifact.
+    pub fn read_artifact(&self, name: &str) -> Result<Vec<u8>, OpError> {
+        let a = self
+            .input_artifacts
+            .get(name)
+            .ok_or_else(|| OpError::Fatal(format!("missing input artifact '{name}'")))?;
+        Ok(self.storage.download(&a.key)?)
+    }
+
+    /// Write bytes as an output artifact; key is namespaced per execution.
+    pub fn write_artifact(&mut self, name: &str, data: &[u8]) -> Result<ArtifactRef, OpError> {
+        let key = format!("{}/{}", self.artifact_prefix, name);
+        self.storage.upload(&key, data)?;
+        let art = ArtifactRef { key, md5: Some(crate::util::md5_hex(data)) };
+        self.output_artifacts.insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+
+    /// Write a *list artifact*: items stored under `prefix/<i>`, compatible
+    /// with [`Slices`](crate::core::Slices) sliced-artifact inputs.
+    pub fn write_artifact_slices(
+        &mut self,
+        name: &str,
+        items: &[Vec<u8>],
+    ) -> Result<ArtifactRef, OpError> {
+        let prefix = format!("{}/{}", self.artifact_prefix, name);
+        for (i, data) in items.iter().enumerate() {
+            self.storage.upload(&format!("{prefix}/{i}"), data)?;
+        }
+        let art = ArtifactRef::new(prefix);
+        self.output_artifacts.insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+
+    /// Read all slices of a list artifact in index order.
+    pub fn read_artifact_slices(&self, name: &str) -> Result<Vec<Vec<u8>>, OpError> {
+        let a = self
+            .input_artifacts
+            .get(name)
+            .ok_or_else(|| OpError::Fatal(format!("missing input artifact '{name}'")))?;
+        let prefix = format!("{}/", a.key);
+        let mut keys: Vec<(usize, String)> = self
+            .storage
+            .list(&prefix)?
+            .into_iter()
+            .filter_map(|k| {
+                k.strip_prefix(&prefix)
+                    .and_then(|rest| rest.parse::<usize>().ok())
+                    .map(|i| (i, k))
+            })
+            .collect();
+        keys.sort();
+        keys.into_iter()
+            .map(|(_, k)| self.storage.download(&k).map_err(OpError::from))
+            .collect()
+    }
+
+    /// Reference an input artifact without reading it (for pass-through).
+    pub fn artifact_ref(&self, name: &str) -> Result<&ArtifactRef, OpError> {
+        self.input_artifacts
+            .get(name)
+            .ok_or_else(|| OpError::Fatal(format!("missing input artifact '{name}'")))
+    }
+
+    /// Forward an input artifact as an output (zero-copy: same key).
+    pub fn forward_artifact(&mut self, input: &str, output: &str) -> Result<(), OpError> {
+        let a = self.artifact_ref(input)?.clone();
+        self.output_artifacts.insert(output.to_string(), a);
+        Ok(())
+    }
+
+    /// The PJRT runtime handle (owning `Arc`, so the borrow on `self` ends
+    /// immediately), or a fatal error if the engine has none.
+    pub fn runtime(&self) -> Result<std::sync::Arc<crate::runtime::Runtime>, OpError> {
+        self.runtime
+            .clone()
+            .ok_or_else(|| OpError::Fatal("engine has no PJRT runtime attached".into()))
+    }
+
+    /// Fail fast if this execution was cancelled (long OPs should call this
+    /// periodically).
+    pub fn checkpoint(&self) -> Result<(), OpError> {
+        if self.cancel.is_cancelled() {
+            Err(OpError::Fatal("cancelled".into()))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// A reusable operation: the fundamental building block of a workflow.
+pub trait Op: Send + Sync {
+    /// Input/output declaration (checked strictly by the engine).
+    fn signature(&self) -> Signature;
+    /// Perform the operation.
+    fn execute(&self, ctx: &mut OpCtx) -> Result<(), OpError>;
+}
+
+/// Function-style OP: signature + closure (paper: "scientists define
+/// operations either as classes or functions").
+pub struct FnOp {
+    sig: Signature,
+    f: Box<dyn Fn(&mut OpCtx) -> Result<(), OpError> + Send + Sync>,
+}
+
+impl FnOp {
+    /// Wrap a closure.
+    pub fn new(
+        sig: Signature,
+        f: impl Fn(&mut OpCtx) -> Result<(), OpError> + Send + Sync + 'static,
+    ) -> Self {
+        FnOp { sig, f: Box::new(f) }
+    }
+}
+
+impl Op for FnOp {
+    fn signature(&self) -> Signature {
+        self.sig.clone()
+    }
+
+    fn execute(&self, ctx: &mut OpCtx) -> Result<(), OpError> {
+        (self.f)(ctx)
+    }
+}
+
+/// Shell-script OP (`ShellOPTemplate`): runs a real `/bin/sh -e` script in
+/// the scratch workdir. Input parameters are exported as `DF_PARAM_<NAME>`
+/// env vars; input artifacts are staged as files/directories named after the
+/// artifact; files the script writes under `outputs/` become output
+/// artifacts; lines it prints as `DF_OUT name=value` become output
+/// parameters.
+pub struct ShellOp {
+    sig: Signature,
+    script: String,
+}
+
+impl ShellOp {
+    /// Create from a script body.
+    pub fn new(sig: Signature, script: impl Into<String>) -> Self {
+        ShellOp { sig, script: script.into() }
+    }
+
+    fn stage_inputs(&self, ctx: &OpCtx, dir: &Path) -> Result<(), OpError> {
+        std::fs::create_dir_all(dir.join("outputs"))
+            .map_err(|e| OpError::Fatal(e.to_string()))?;
+        for (name, art) in &ctx.input_artifacts {
+            let data = ctx.storage.download(&art.key)?;
+            std::fs::write(dir.join(name), data).map_err(|e| OpError::Fatal(e.to_string()))?;
+        }
+        Ok(())
+    }
+}
+
+impl Op for ShellOp {
+    fn signature(&self) -> Signature {
+        self.sig.clone()
+    }
+
+    fn execute(&self, ctx: &mut OpCtx) -> Result<(), OpError> {
+        let dir = &ctx.workdir.clone();
+        std::fs::create_dir_all(dir).map_err(|e| OpError::Fatal(e.to_string()))?;
+        self.stage_inputs(ctx, dir)?;
+
+        let mut cmd = std::process::Command::new("/bin/sh");
+        cmd.arg("-e").arg("-c").arg(&self.script).current_dir(dir);
+        for (k, v) in &ctx.inputs {
+            cmd.env(format!("DF_PARAM_{}", k.to_uppercase()), v.display());
+        }
+        let out = cmd.output().map_err(|e| OpError::Transient(format!("spawn: {e}")))?;
+        if !out.status.success() {
+            return Err(OpError::Fatal(format!(
+                "script exited with {}: {}",
+                out.status,
+                String::from_utf8_lossy(&out.stderr)
+            )));
+        }
+        // output params from stdout markers
+        for line in String::from_utf8_lossy(&out.stdout).lines() {
+            if let Some(rest) = line.strip_prefix("DF_OUT ") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    ctx.set(k.trim(), v.trim());
+                }
+            }
+        }
+        // output artifacts from outputs/
+        let out_dir = dir.join("outputs");
+        if let Ok(entries) = std::fs::read_dir(&out_dir) {
+            for e in entries.flatten() {
+                let p = e.path();
+                if p.is_file() {
+                    let name = p.file_name().unwrap().to_string_lossy().to_string();
+                    let data = std::fs::read(&p).map_err(|e| OpError::Fatal(e.to_string()))?;
+                    ctx.write_artifact(&name, &data)?;
+                }
+            }
+        }
+        std::fs::remove_dir_all(dir).ok();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStorage;
+
+    fn ctx() -> OpCtx {
+        OpCtx::bare(Arc::new(MemStorage::new()))
+    }
+
+    #[test]
+    fn typed_getters() {
+        let mut c = ctx();
+        c.inputs.insert("i".into(), Value::Int(3));
+        c.inputs.insert("f".into(), Value::Float(2.5));
+        c.inputs.insert("s".into(), Value::Str("x".into()));
+        c.inputs.insert("b".into(), Value::Bool(true));
+        assert_eq!(c.get_int("i").unwrap(), 3);
+        assert_eq!(c.get_float("f").unwrap(), 2.5);
+        assert_eq!(c.get_float("i").unwrap(), 3.0); // widening
+        assert_eq!(c.get_str("s").unwrap(), "x");
+        assert!(c.get_bool("b").unwrap());
+        assert!(c.get_int("missing").is_err());
+        assert!(c.get_int("s").is_err());
+    }
+
+    #[test]
+    fn artifact_roundtrip_through_ctx() {
+        let mut c = ctx();
+        let art = c.write_artifact("data", b"payload").unwrap();
+        assert!(art.md5.is_some());
+        c.input_artifacts.insert("data".into(), art);
+        assert_eq!(c.read_artifact("data").unwrap(), b"payload");
+    }
+
+    #[test]
+    fn forward_artifact_shares_key() {
+        let mut c = ctx();
+        let art = ArtifactRef::new("some/key");
+        c.input_artifacts.insert("in".into(), art.clone());
+        c.forward_artifact("in", "out").unwrap();
+        assert_eq!(c.output_artifacts["out"], art);
+    }
+
+    #[test]
+    fn fn_op_executes() {
+        let op = FnOp::new(
+            Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+            |ctx| {
+                let x = ctx.get_int("x")?;
+                ctx.set("y", x * 2);
+                Ok(())
+            },
+        );
+        let mut c = ctx();
+        c.inputs.insert("x".into(), Value::Int(21));
+        op.execute(&mut c).unwrap();
+        assert_eq!(c.outputs["y"], Value::Int(42));
+    }
+
+    #[test]
+    fn shell_op_params_env_and_outputs() {
+        let op = ShellOp::new(
+            Signature::new()
+                .in_param("msg", ParamType::Str)
+                .out_param("len", ParamType::Str)
+                .out_artifact("copy.txt"),
+            r#"
+printf '%s' "$DF_PARAM_MSG" > outputs/copy.txt
+echo "DF_OUT len=${#DF_PARAM_MSG}"
+"#,
+        );
+        let mut c = ctx();
+        c.inputs.insert("msg".into(), Value::Str("hello".into()));
+        op.execute(&mut c).unwrap();
+        assert_eq!(c.outputs["len"], Value::Str("5".into()));
+        let stored = c.storage.download(&c.output_artifacts["copy.txt"].key).unwrap();
+        assert_eq!(stored, b"hello");
+    }
+
+    #[test]
+    fn shell_op_stages_input_artifacts() {
+        let mut c = ctx();
+        c.storage.upload("in/k", b"abc").unwrap();
+        c.input_artifacts.insert("infile".into(), ArtifactRef::new("in/k"));
+        let op = ShellOp::new(
+            Signature::new().in_artifact("infile").out_artifact("out.txt"),
+            "cat infile infile > outputs/out.txt",
+        );
+        op.execute(&mut c).unwrap();
+        let out = c.storage.download(&c.output_artifacts["out.txt"].key).unwrap();
+        assert_eq!(out, b"abcabc");
+    }
+
+    #[test]
+    fn shell_op_failure_is_fatal() {
+        let op = ShellOp::new(Signature::new(), "exit 3");
+        let mut c = ctx();
+        let err = op.execute(&mut c).unwrap_err();
+        assert!(!err.is_transient());
+    }
+
+    #[test]
+    fn cancel_token_checkpoint() {
+        let c = ctx();
+        assert!(c.checkpoint().is_ok());
+        c.cancel.cancel();
+        assert!(c.checkpoint().is_err());
+    }
+}

@@ -1,0 +1,298 @@
+//! Parameters, artifacts and the strict type system (paper §2.1).
+//!
+//! "Parameters are saved as text which can be displayed in the UI, while
+//! artifacts are stored as files. Parameters are passed to an OP with their
+//! values, while artifacts are passed by paths." Here parameters are
+//! [`Value`]s (JSON-convertible, so the CLI can display them) and artifacts
+//! are [`ArtifactRef`]s pointing into a [`crate::storage::StorageClient`].
+//!
+//! Dflow "enforces strict type checking for Python OPs"; [`ParamType`] plus
+//! [`Value::check_type`] reproduce that: inputs are checked before
+//! `execute`, outputs after (see `engine`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::jsonx::Json;
+
+/// A parameter value. The subset of JSON Dflow parameters need, with `Int`
+/// kept separate from `Float` so type checking is strict.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    List(Vec<Value>),
+    Map(BTreeMap<String, Value>),
+}
+
+/// Declared type of a parameter in an OP signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamType {
+    Bool,
+    Int,
+    Float,
+    Str,
+    List,
+    Map,
+    /// Accepts anything (the escape hatch for custom serializable objects).
+    Any,
+}
+
+impl fmt::Display for ParamType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl Value {
+    /// Runtime type of this value.
+    pub fn type_of(&self) -> ParamType {
+        match self {
+            Value::Null => ParamType::Any,
+            Value::Bool(_) => ParamType::Bool,
+            Value::Int(_) => ParamType::Int,
+            Value::Float(_) => ParamType::Float,
+            Value::Str(_) => ParamType::Str,
+            Value::List(_) => ParamType::List,
+            Value::Map(_) => ParamType::Map,
+        }
+    }
+
+    /// Strict check against a declared type (`Int` is accepted where `Float`
+    /// is declared — the one widening Dflow users expect).
+    pub fn check_type(&self, ty: ParamType) -> bool {
+        match (ty, self) {
+            (ParamType::Any, _) => true,
+            (ParamType::Float, Value::Int(_)) => true,
+            _ => self.type_of() == ty,
+        }
+    }
+
+    /// As i64 (also narrows from Float when integral).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    /// As f64 (widens from Int).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As &str.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As list slice.
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(l) => Some(l),
+            _ => None,
+        }
+    }
+
+    /// As map.
+    pub fn as_map(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Display string for the UI/CLI ("parameters are saved as text").
+    pub fn display(&self) -> String {
+        match self {
+            Value::Str(s) => s.clone(),
+            other => other.to_json().to_string_compact(),
+        }
+    }
+
+    /// Convert to JSON for persistence.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Value::Null => Json::Null,
+            Value::Bool(b) => Json::Bool(*b),
+            Value::Int(i) => Json::Num(*i as f64),
+            Value::Float(f) => Json::Num(*f),
+            Value::Str(s) => Json::Str(s.clone()),
+            Value::List(l) => Json::Arr(l.iter().map(Value::to_json).collect()),
+            Value::Map(m) => {
+                Json::Obj(m.iter().map(|(k, v)| (k.clone(), v.to_json())).collect())
+            }
+        }
+    }
+
+    /// Convert from JSON (numbers become Int when integral).
+    pub fn from_json(j: &Json) -> Value {
+        match j {
+            Json::Null => Value::Null,
+            Json::Bool(b) => Value::Bool(*b),
+            Json::Num(n) if n.fract() == 0.0 && n.abs() < 9.0e15 => Value::Int(*n as i64),
+            Json::Num(n) => Value::Float(*n),
+            Json::Str(s) => Value::Str(s.clone()),
+            Json::Arr(a) => Value::List(a.iter().map(Value::from_json).collect()),
+            Json::Obj(o) => {
+                Value::Map(o.iter().map(|(k, v)| (k.clone(), Value::from_json(v))).collect())
+            }
+        }
+    }
+
+    /// Build a list of ints.
+    pub fn ints(v: impl IntoIterator<Item = i64>) -> Value {
+        Value::List(v.into_iter().map(Value::Int).collect())
+    }
+
+    /// Build a list of floats.
+    pub fn floats(v: impl IntoIterator<Item = f64>) -> Value {
+        Value::List(v.into_iter().map(Value::Float).collect())
+    }
+
+    /// Build a list of strings.
+    pub fn strs<S: Into<String>>(v: impl IntoIterator<Item = S>) -> Value {
+        Value::List(v.into_iter().map(|s| Value::Str(s.into())).collect())
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Int(v)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Float(v)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Str(v)
+    }
+}
+
+/// A handle to stored artifact data ("artifacts are passed by paths"); `key`
+/// addresses the object (or object prefix, for sliced artifact lists) in the
+/// engine's [`crate::storage::StorageClient`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactRef {
+    pub key: String,
+    pub md5: Option<String>,
+}
+
+impl ArtifactRef {
+    /// Reference an object by key.
+    pub fn new(key: impl Into<String>) -> Self {
+        ArtifactRef { key: key.into(), md5: None }
+    }
+
+    /// The sub-key of slice `i` of a sliced artifact.
+    pub fn slice(&self, i: usize) -> ArtifactRef {
+        ArtifactRef { key: format!("{}/{}", self.key, i), md5: None }
+    }
+
+    /// Persist to JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("key", Json::s(self.key.clone())),
+            ("md5", self.md5.clone().map(Json::s).unwrap_or(Json::Null)),
+        ])
+    }
+
+    /// Restore from JSON.
+    pub fn from_json(j: &Json) -> Option<ArtifactRef> {
+        Some(ArtifactRef {
+            key: j.get("key")?.as_str()?.to_string(),
+            md5: j.get("md5").and_then(|m| m.as_str()).map(str::to_string),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn type_of_and_check() {
+        assert!(Value::Int(3).check_type(ParamType::Int));
+        assert!(Value::Int(3).check_type(ParamType::Float)); // widening
+        assert!(!Value::Float(3.5).check_type(ParamType::Int));
+        assert!(Value::Str("x".into()).check_type(ParamType::Str));
+        assert!(Value::Null.check_type(ParamType::Any));
+        assert!(Value::List(vec![]).check_type(ParamType::List));
+        assert!(!Value::Bool(true).check_type(ParamType::Str));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let v = Value::Map(
+            [
+                ("a".to_string(), Value::ints([1, 2, 3])),
+                ("b".to_string(), Value::Str("x".into())),
+                ("c".to_string(), Value::Float(1.5)),
+                ("d".to_string(), Value::Bool(false)),
+                ("e".to_string(), Value::Null),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        let j = v.to_json();
+        assert_eq!(Value::from_json(&j), v);
+    }
+
+    #[test]
+    fn display_strings_are_bare() {
+        assert_eq!(Value::Str("hi".into()).display(), "hi");
+        assert_eq!(Value::Int(5).display(), "5");
+        assert_eq!(Value::ints([1, 2]).display(), "[1,2]");
+    }
+
+    #[test]
+    fn numeric_accessors_widen_and_narrow() {
+        assert_eq!(Value::Int(3).as_float(), Some(3.0));
+        assert_eq!(Value::Float(3.0).as_int(), Some(3));
+        assert_eq!(Value::Float(3.5).as_int(), None);
+    }
+
+    #[test]
+    fn artifact_slicing() {
+        let a = ArtifactRef::new("wf/step/out");
+        assert_eq!(a.slice(4).key, "wf/step/out/4");
+    }
+
+    #[test]
+    fn artifact_json_roundtrip() {
+        let a = ArtifactRef { key: "k".into(), md5: Some("d41d8".into()) };
+        assert_eq!(ArtifactRef::from_json(&a.to_json()).unwrap(), a);
+    }
+}

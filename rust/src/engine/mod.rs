@@ -1,0 +1,1628 @@
+//! The workflow engine: an Argo-equivalent scheduler for [`Workflow`]s.
+//!
+//! Responsibilities (paper §2):
+//! * instantiate templates into a dynamic node tree (recursion expands at
+//!   runtime, so dynamic loops terminate on their `when` conditions);
+//! * run steps-groups serially with intra-group parallelism, and DAG tasks
+//!   event-driven as dependencies complete (§2.2);
+//! * expand [`Slices`] into parallel sub-executions with bounded
+//!   parallelism, stack their outputs, and apply `continue_on`
+//!   success-number/ratio policies (§2.3–2.4);
+//! * enforce retries/timeouts per [`StepPolicy`] (§2.4);
+//! * honor step keys: matching keys in the reuse set skip execution and
+//!   splice in previous outputs (§2.5);
+//! * route leaf executions through [`Executor`] plugins and, when a
+//!   [`Cluster`] is attached, acquire a pod (with resource request + node
+//!   selector) for the duration of each attempt (§2.6) — cluster capacity
+//!   is the backpressure;
+//! * strict type checking of inputs before and outputs after every OP.
+
+pub mod run;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use crate::cluster::{Cluster, PodSpec};
+use crate::core::{
+    ArtSrc, ArtifactRef, ContainerTemplate, ContinueOn, OpCtx, OpError, OpTemplate, Operand,
+    ParamSrc, Slices, Step, StepPolicy, Value, Workflow,
+};
+use crate::executor::{Executor, LocalExecutor};
+use crate::metrics::EventKind;
+use crate::storage::{MemStorage, StorageClient};
+use crate::util::Stopwatch;
+
+pub use run::{NodePhase, NodeStatus, ReusedStep, RunPhase, Semaphore, StepOutputs, WorkflowRun};
+
+/// Engine-level configuration.
+#[derive(Clone)]
+pub struct EngineConfig {
+    /// Default cap on concurrent leaf executions per run.
+    pub parallelism: usize,
+    /// Name of the default executor (must be registered).
+    pub default_executor: String,
+    /// Event-trace capacity per run.
+    pub trace_cap: usize,
+    /// Root for OP scratch directories.
+    pub workdir_root: std::path::PathBuf,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            parallelism: 64,
+            default_executor: "local".to_string(),
+            trace_cap: 100_000,
+            workdir_root: std::env::temp_dir().join("dflow-work"),
+        }
+    }
+}
+
+/// The engine. Build with [`Engine::builder`].
+pub struct Engine {
+    pub storage: Arc<dyn StorageClient>,
+    pub cluster: Option<Arc<Cluster>>,
+    pub runtime: Option<Arc<crate::runtime::Runtime>>,
+    executors: BTreeMap<String, Arc<dyn Executor>>,
+    pub config: EngineConfig,
+}
+
+/// Builder for [`Engine`].
+pub struct EngineBuilder {
+    storage: Arc<dyn StorageClient>,
+    cluster: Option<Arc<Cluster>>,
+    runtime: Option<Arc<crate::runtime::Runtime>>,
+    executors: BTreeMap<String, Arc<dyn Executor>>,
+    config: EngineConfig,
+}
+
+impl EngineBuilder {
+    /// Use a specific storage client (default: in-memory).
+    pub fn storage(mut self, s: Arc<dyn StorageClient>) -> Self {
+        self.storage = s;
+        self
+    }
+
+    /// Attach a cluster simulator; leaf steps then acquire pods.
+    pub fn cluster(mut self, c: Arc<Cluster>) -> Self {
+        self.cluster = Some(c);
+        self
+    }
+
+    /// Attach the PJRT runtime (science OPs require it).
+    pub fn runtime(mut self, r: Arc<crate::runtime::Runtime>) -> Self {
+        self.runtime = Some(r);
+        self
+    }
+
+    /// Register an executor plugin under a name.
+    pub fn executor(mut self, name: &str, e: Arc<dyn Executor>) -> Self {
+        self.executors.insert(name.to_string(), e);
+        self
+    }
+
+    /// Override the configuration.
+    pub fn config(mut self, c: EngineConfig) -> Self {
+        self.config = c;
+        self
+    }
+
+    /// Cap default leaf parallelism.
+    pub fn parallelism(mut self, n: usize) -> Self {
+        self.config.parallelism = n;
+        self
+    }
+
+    /// Finalize.
+    pub fn build(self) -> Engine {
+        Engine {
+            storage: self.storage,
+            cluster: self.cluster,
+            runtime: self.runtime,
+            executors: self.executors,
+            config: self.config,
+        }
+    }
+}
+
+/// Handle to an asynchronously submitted run: watch `run` live, `wait()`
+/// for the outcome.
+pub struct Submitted {
+    pub run: Arc<WorkflowRun>,
+    handle: std::thread::JoinHandle<RunResult>,
+}
+
+impl Submitted {
+    /// Block until the workflow finishes.
+    pub fn wait(self) -> RunResult {
+        self.handle.join().expect("workflow driver panicked")
+    }
+
+    /// Has the workflow reached a terminal phase?
+    pub fn is_finished(&self) -> bool {
+        !matches!(self.run.phase(), RunPhase::Running)
+    }
+}
+
+/// Result of a finished run.
+pub struct RunResult {
+    pub run: Arc<WorkflowRun>,
+    /// Entrypoint outputs when succeeded.
+    pub outputs: StepOutputs,
+    /// Failure message when failed.
+    pub error: Option<String>,
+}
+
+impl RunResult {
+    /// Did the run succeed?
+    pub fn succeeded(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// `query_step` on the underlying run (paper §2.5).
+    pub fn query_step(&self, key: &str) -> Option<ReusedStep> {
+        self.run.query_step(key)
+    }
+}
+
+impl Engine {
+    /// Start building an engine.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder {
+            storage: Arc::new(MemStorage::new()),
+            cluster: None,
+            runtime: None,
+            executors: [(
+                "local".to_string(),
+                Arc::new(LocalExecutor) as Arc<dyn Executor>,
+            )]
+            .into_iter()
+            .collect(),
+            config: EngineConfig::default(),
+        }
+    }
+
+    /// Minimal engine (in-memory storage, local executor).
+    pub fn local() -> Engine {
+        Engine::builder().build()
+    }
+
+    /// Validate and execute a workflow to completion (blocking).
+    pub fn run(&self, wf: &Workflow) -> Result<RunResult, String> {
+        self.run_with_reuse(wf, Vec::new())
+    }
+
+    /// Like [`Engine::run`] but splicing in reused steps by key (§2.5).
+    pub fn run_with_reuse(
+        &self,
+        wf: &Workflow,
+        reuse: Vec<ReusedStep>,
+    ) -> Result<RunResult, String> {
+        wf.validate()?;
+        let parallelism = wf.parallelism.unwrap_or(self.config.parallelism);
+        let run = Arc::new(WorkflowRun::new(
+            &wf.name,
+            parallelism,
+            reuse.into_iter().map(|r| (r.key, r.outputs)).collect(),
+            self.config.trace_cap,
+        ));
+        self.drive(wf, run)
+    }
+
+    /// Submit a workflow for asynchronous execution: returns immediately
+    /// with a live [`WorkflowRun`] handle for status watching (the paper's
+    /// "real-time status tracking"); call [`Submitted::wait`] for the
+    /// result.
+    pub fn submit(self: &Arc<Self>, wf: Workflow) -> Result<Submitted, String> {
+        self.submit_with_reuse(wf, Vec::new())
+    }
+
+    /// Async submit with reused steps.
+    pub fn submit_with_reuse(
+        self: &Arc<Self>,
+        wf: Workflow,
+        reuse: Vec<ReusedStep>,
+    ) -> Result<Submitted, String> {
+        wf.validate()?;
+        let parallelism = wf.parallelism.unwrap_or(self.config.parallelism);
+        let run = Arc::new(WorkflowRun::new(
+            &wf.name,
+            parallelism,
+            reuse.into_iter().map(|r| (r.key, r.outputs)).collect(),
+            self.config.trace_cap,
+        ));
+        let engine = self.clone();
+        let run2 = run.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("dflow-run-{}", run.id))
+            .spawn(move || engine.drive(&wf, run2).expect("workflow was pre-validated"))
+            .map_err(|e| e.to_string())?;
+        Ok(Submitted { run, handle })
+    }
+
+    fn drive(&self, wf: &Workflow, run: Arc<WorkflowRun>) -> Result<RunResult, String> {
+        run.trace.push(EventKind::WorkflowStarted, "", "");
+        let exec = Exec { engine: self, wf, run: &run };
+        let bindings = Bindings {
+            params: wf.arguments.clone(),
+            artifacts: wf.input_artifacts.clone(),
+        };
+        let result =
+            exec.execute_template(&wf.entrypoint, bindings, "main", &StepPolicy::default(), None);
+        let (outputs, error) = match result {
+            Ok(o) => {
+                *run.phase.lock().unwrap() = RunPhase::Succeeded;
+                run.trace.push(EventKind::WorkflowSucceeded, "", "");
+                (o, None)
+            }
+            Err(e) => {
+                *run.phase.lock().unwrap() = RunPhase::Failed;
+                run.trace.push(EventKind::WorkflowFailed, "", e.clone());
+                (StepOutputs::default(), Some(e))
+            }
+        };
+        Ok(RunResult { run, outputs, error })
+    }
+
+    fn executor_named(&self, name: &str) -> Result<Arc<dyn Executor>, String> {
+        self.executors
+            .get(name)
+            .cloned()
+            .ok_or_else(|| format!("executor '{name}' is not registered"))
+    }
+}
+
+/// Resolved inputs of a template instance.
+#[derive(Clone, Default)]
+struct Bindings {
+    params: BTreeMap<String, Value>,
+    artifacts: BTreeMap<String, ArtifactRef>,
+}
+
+/// Outcome of one step within a group/DAG.
+enum StepOutcome {
+    Succeeded(StepOutputs),
+    Skipped,
+    /// Failed, but its policy lets the template continue (message kept for
+    /// observability/debugging).
+    FailedContinue(#[allow(dead_code)] String),
+    Failed(String),
+}
+
+struct Exec<'e> {
+    engine: &'e Engine,
+    wf: &'e Workflow,
+    run: &'e WorkflowRun,
+}
+
+impl<'e> Exec<'e> {
+    // -- template dispatch ------------------------------------------------------
+
+    fn execute_template(
+        &self,
+        name: &str,
+        bindings: Bindings,
+        path: &str,
+        policy: &StepPolicy,
+        executor_override: Option<&str>,
+    ) -> Result<StepOutputs, String> {
+        let tpl = self
+            .wf
+            .templates
+            .get(name)
+            .ok_or_else(|| format!("{path}: unknown template '{name}'"))?;
+        match tpl {
+            OpTemplate::Container(ct) => {
+                self.execute_container(ct, bindings, path, policy, executor_override)
+            }
+            OpTemplate::Steps(st) => {
+                let mut siblings: BTreeMap<String, StepOutputs> = BTreeMap::new();
+                for group in &st.groups {
+                    self.execute_group(group, &bindings, &mut siblings, path)?;
+                }
+                self.collect_template_outputs(&st.io, &bindings, &siblings, path)
+            }
+            OpTemplate::Dag(dag) => {
+                let siblings = self.execute_dag(&dag.tasks, &bindings, path)?;
+                self.collect_template_outputs(&dag.io, &bindings, &siblings, path)
+            }
+        }
+    }
+
+    fn collect_template_outputs(
+        &self,
+        io: &crate::core::TemplateIo,
+        bindings: &Bindings,
+        siblings: &BTreeMap<String, StepOutputs>,
+        path: &str,
+    ) -> Result<StepOutputs, String> {
+        use crate::core::OutputSrc;
+        let mut out = StepOutputs::default();
+        for (name, src) in &io.output_params {
+            let v = match src {
+                OutputSrc::StepOutput { step, name: inner } => siblings
+                    .get(step)
+                    .and_then(|o| o.params.get(inner))
+                    .cloned()
+                    .ok_or_else(|| {
+                        format!("{path}: output param '{name}' source {step}.{inner} missing")
+                    })?,
+                OutputSrc::Input(i) => bindings
+                    .params
+                    .get(i)
+                    .cloned()
+                    .ok_or_else(|| format!("{path}: output param '{name}' input '{i}' missing"))?,
+            };
+            out.params.insert(name.clone(), v);
+        }
+        for (name, src) in &io.output_artifacts {
+            let a = match src {
+                OutputSrc::StepOutput { step, name: inner } => siblings
+                    .get(step)
+                    .and_then(|o| o.artifacts.get(inner))
+                    .cloned()
+                    .ok_or_else(|| {
+                        format!("{path}: output artifact '{name}' source {step}.{inner} missing")
+                    })?,
+                OutputSrc::Input(i) => bindings.artifacts.get(i).cloned().ok_or_else(|| {
+                    format!("{path}: output artifact '{name}' input '{i}' missing")
+                })?,
+            };
+            out.artifacts.insert(name.clone(), a);
+        }
+        Ok(out)
+    }
+
+    // -- steps groups -----------------------------------------------------------
+
+    fn execute_group(
+        &self,
+        group: &[Step],
+        bindings: &Bindings,
+        siblings: &mut BTreeMap<String, StepOutputs>,
+        path: &str,
+    ) -> Result<(), String> {
+        let outcomes: Vec<(String, StepOutcome)> = if group.len() == 1 {
+            let step = &group[0];
+            vec![(step.name.clone(), self.execute_step(step, bindings, siblings, path))]
+        } else {
+            let shared = &*siblings; // immutable view for parallel children
+            std::thread::scope(|s| {
+                let handles: Vec<_> = group
+                    .iter()
+                    .map(|step| {
+                        s.spawn(move || {
+                            (step.name.clone(), self.execute_step(step, bindings, shared, path))
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("step thread panicked")).collect()
+            })
+        };
+        let mut first_err: Option<String> = None;
+        for (name, outcome) in outcomes {
+            match outcome {
+                StepOutcome::Succeeded(o) => {
+                    siblings.insert(name, o);
+                }
+                StepOutcome::Skipped | StepOutcome::FailedContinue(_) => {
+                    siblings.insert(name, StepOutputs::default());
+                }
+                StepOutcome::Failed(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    // -- DAG --------------------------------------------------------------------
+
+    fn execute_dag(
+        &self,
+        tasks: &[Step],
+        bindings: &Bindings,
+        path: &str,
+    ) -> Result<BTreeMap<String, StepOutputs>, String> {
+        let n = tasks.len();
+        let name_to_idx: BTreeMap<&str, usize> =
+            tasks.iter().enumerate().map(|(i, t)| (t.name.as_str(), i)).collect();
+        let deps: Vec<BTreeSet<usize>> = tasks
+            .iter()
+            .map(|t| {
+                t.implied_dependencies()
+                    .iter()
+                    .filter_map(|d| name_to_idx.get(d.as_str()).copied())
+                    .collect()
+            })
+            .collect();
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, ds) in deps.iter().enumerate() {
+            for d in ds {
+                dependents[*d].push(i);
+            }
+        }
+        let siblings = Arc::new(Mutex::new(BTreeMap::<String, StepOutputs>::new()));
+        let mut remaining: Vec<usize> = deps.iter().map(BTreeSet::len).collect();
+        let mut first_err: Option<String> = None;
+        let failed = AtomicBool::new(false);
+        let mut ready: Vec<usize> = (0..n).filter(|i| remaining[*i] == 0).collect();
+
+        std::thread::scope(|s| {
+            let (tx, rx) = mpsc::channel::<(usize, StepOutcome)>();
+            let mut launched = 0usize;
+            let mut done = 0usize;
+            loop {
+                for idx in ready.drain(..) {
+                    let tx = tx.clone();
+                    let siblings = Arc::clone(&siblings);
+                    let task = &tasks[idx];
+                    let failed = &failed;
+                    let this = &*self;
+                    s.spawn(move || {
+                        if failed.load(Ordering::Relaxed) {
+                            // template already failing: don't start new work
+                            tx.send((idx, StepOutcome::Skipped)).ok();
+                            return;
+                        }
+                        let snapshot = siblings.lock().unwrap().clone();
+                        let outcome = this.execute_step(task, bindings, &snapshot, path);
+                        tx.send((idx, outcome)).ok();
+                    });
+                    launched += 1;
+                }
+                if done == launched {
+                    break;
+                }
+                let (idx, outcome) = rx.recv().expect("dag channel closed");
+                done += 1;
+                let task_name = tasks[idx].name.clone();
+                match outcome {
+                    StepOutcome::Succeeded(o) => {
+                        siblings.lock().unwrap().insert(task_name, o);
+                    }
+                    StepOutcome::Skipped | StepOutcome::FailedContinue(_) => {
+                        siblings.lock().unwrap().insert(task_name, StepOutputs::default());
+                    }
+                    StepOutcome::Failed(e) => {
+                        failed.store(true, Ordering::Relaxed);
+                        first_err.get_or_insert(e);
+                    }
+                }
+                if !failed.load(Ordering::Relaxed) {
+                    for &dep_idx in &dependents[idx] {
+                        remaining[dep_idx] -= 1;
+                        if remaining[dep_idx] == 0 {
+                            ready.push(dep_idx);
+                        }
+                    }
+                }
+            }
+        });
+
+        match first_err {
+            Some(e) => Err(e),
+            None => {
+                let map = Arc::try_unwrap(siblings)
+                    .map(|m| m.into_inner().unwrap())
+                    .unwrap_or_else(|arc| arc.lock().unwrap().clone());
+                Ok(map)
+            }
+        }
+    }
+
+    // -- one step ---------------------------------------------------------------
+
+    fn execute_step(
+        &self,
+        step: &Step,
+        bindings: &Bindings,
+        siblings: &BTreeMap<String, StepOutputs>,
+        parent_path: &str,
+    ) -> StepOutcome {
+        let path = format!("{parent_path}/{}", step.name);
+        // condition (§2.2)
+        if let Some(when) = &step.when {
+            let resolve = |o: &Operand| -> Option<Value> {
+                match o {
+                    Operand::Const(v) => Some(v.clone()),
+                    Operand::Input(name) => bindings.params.get(name).cloned(),
+                    Operand::StepOutput { step, name } => {
+                        siblings.get(step).and_then(|o| o.params.get(name)).cloned()
+                    }
+                }
+            };
+            match when.eval(&resolve) {
+                Some(true) => {}
+                Some(false) => {
+                    self.run.set_node(&path, &step.template, NodePhase::Skipped, None);
+                    self.run.metrics.steps_skipped.inc();
+                    self.run.trace.push(EventKind::StepSkipped, &path, "when=false");
+                    return StepOutcome::Skipped;
+                }
+                None => {
+                    return self.fail_step(
+                        step,
+                        &path,
+                        "condition references unavailable value".to_string(),
+                    );
+                }
+            }
+        }
+
+        if let Some(slices) = &step.slices {
+            return self.execute_sliced_step(step, slices, bindings, siblings, &path);
+        }
+
+        // resolve inputs
+        let child = match self.resolve_step_bindings(step, bindings, siblings, None, &path) {
+            Ok(b) => b,
+            Err(e) => return self.fail_step(step, &path, e),
+        };
+        let key = step.key.as_ref().map(|k| render_key(k, &child, None));
+        self.run_child(step, child, &path, key)
+    }
+
+    /// Execute the step's template with resolved bindings, honoring reuse.
+    fn run_child(
+        &self,
+        step: &Step,
+        child: Bindings,
+        path: &str,
+        key: Option<String>,
+    ) -> StepOutcome {
+        // reuse (§2.5)
+        if let Some(k) = &key {
+            if let Some(prev) = self.run.reuse.get(k) {
+                self.run.set_node(path, &step.template, NodePhase::Reused, Some(k));
+                self.run.metrics.steps_reused.inc();
+                self.run.trace.push(EventKind::StepReused, path, k.clone());
+                self.run.record_keyed(k, prev);
+                return StepOutcome::Succeeded(prev.clone());
+            }
+        }
+        self.run.set_node(path, &step.template, NodePhase::Running, key.as_deref());
+        self.run.trace.push(EventKind::StepRunning, path, "");
+        let result = self.execute_template(
+            &step.template,
+            child,
+            path,
+            &step.policy,
+            step.executor.as_deref(),
+        );
+        match result {
+            Ok(outputs) => {
+                self.run.set_node(path, &step.template, NodePhase::Succeeded, key.as_deref());
+                self.run.metrics.steps_succeeded.inc();
+                self.run.trace.push(EventKind::StepSucceeded, path, "");
+                if let Some(k) = &key {
+                    self.run.record_keyed(k, &outputs);
+                }
+                StepOutcome::Succeeded(outputs)
+            }
+            Err(e) => self.fail_step(step, path, e),
+        }
+    }
+
+    fn fail_step(&self, step: &Step, path: &str, err: String) -> StepOutcome {
+        self.run.set_node(path, &step.template, NodePhase::Failed, None);
+        self.run.node_message(path, &err);
+        self.run.metrics.steps_failed.inc();
+        self.run.trace.push(EventKind::StepFailed, path, err.clone());
+        if step.policy.continue_on_failed {
+            StepOutcome::FailedContinue(err)
+        } else {
+            StepOutcome::Failed(format!("{path}: {err}"))
+        }
+    }
+
+    // -- slices (§2.3) ----------------------------------------------------------
+
+    fn execute_sliced_step(
+        &self,
+        step: &Step,
+        slices: &Slices,
+        bindings: &Bindings,
+        siblings: &BTreeMap<String, StepOutputs>,
+        path: &str,
+    ) -> StepOutcome {
+        // determine slice count from the sliced parameter lists
+        let mut count: Option<usize> = None;
+        for p in &slices.input_params {
+            let src = match step.parameters.get(p) {
+                Some(s) => s,
+                None => return self.fail_step(step, path, format!("sliced param '{p}' unbound")),
+            };
+            let v = match self.resolve_param(src, bindings, siblings, None) {
+                Ok(v) => v,
+                Err(e) => return self.fail_step(step, path, e),
+            };
+            let list = match v.as_list() {
+                Some(l) => l.len(),
+                None => {
+                    return self.fail_step(
+                        step,
+                        path,
+                        format!("sliced param '{p}' did not resolve to a list"),
+                    )
+                }
+            };
+            match count {
+                None => count = Some(list),
+                Some(c) if c == list => {}
+                Some(c) => {
+                    return self.fail_step(
+                        step,
+                        path,
+                        format!("sliced lists disagree in length: {c} vs {list}"),
+                    )
+                }
+            }
+        }
+        let k = match count {
+            Some(k) => k,
+            None => {
+                return self.fail_step(step, path, "slices with no sliced parameters".to_string())
+            }
+        };
+        if k == 0 {
+            // empty fan-out: succeed with empty stacks
+            let mut out = StepOutputs::default();
+            for name in &slices.output_params {
+                out.params.insert(name.clone(), Value::List(Vec::new()));
+            }
+            self.run.set_node(path, &step.template, NodePhase::Succeeded, None);
+            return StepOutcome::Succeeded(out);
+        }
+
+        // run slices with bounded parallelism: W worker threads pull indices
+        let parallelism = slices.parallelism.unwrap_or(self.engine.config.parallelism).max(1);
+        let workers = parallelism.min(k);
+        let next = AtomicUsize::new(0);
+        let results: Vec<Mutex<Option<StepOutcome>>> =
+            (0..k).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= k {
+                        break;
+                    }
+                    let slice_path = format!("{path}[{i}]");
+                    let outcome = match self.resolve_step_bindings(
+                        step,
+                        bindings,
+                        siblings,
+                        Some((slices, i)),
+                        &slice_path,
+                    ) {
+                        Ok(child) => {
+                            let key =
+                                step.key.as_ref().map(|t| render_key(t, &child, Some(i)));
+                            self.run_child(step, child, &slice_path, key)
+                        }
+                        Err(e) => self.fail_step(step, &slice_path, e),
+                    };
+                    *results[i].lock().unwrap() = Some(outcome);
+                });
+            }
+        });
+
+        // aggregate per continue_on (§2.4)
+        let outcomes: Vec<StepOutcome> = results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("slice not executed"))
+            .collect();
+        let succeeded = outcomes
+            .iter()
+            .filter(|o| matches!(o, StepOutcome::Succeeded(_)))
+            .count();
+        let ok = match slices.continue_on {
+            None => succeeded == k,
+            Some(ContinueOn::SuccessNumber(n)) => succeeded >= n,
+            Some(ContinueOn::SuccessRatio(r)) => (succeeded as f64) >= r * (k as f64),
+        };
+        if !ok {
+            return self.fail_step(
+                step,
+                path,
+                format!("slices: only {succeeded}/{k} slices succeeded"),
+            );
+        }
+
+        // stack outputs in input order; failed slices contribute Null
+        let mut out = StepOutputs::default();
+        for name in &slices.output_params {
+            let vals: Vec<Value> = outcomes
+                .iter()
+                .map(|o| match o {
+                    StepOutcome::Succeeded(so) => {
+                        so.params.get(name).cloned().unwrap_or(Value::Null)
+                    }
+                    _ => Value::Null,
+                })
+                .collect();
+            out.params.insert(name.clone(), Value::List(vals));
+        }
+        for name in &slices.output_artifacts {
+            // stacked artifact = prefix; copy each slice's artifact under it
+            // (server-side copies; transient storage blips retried here since
+            // this is engine work, not OP work)
+            let prefix = format!("run{}/{}/{}", self.run.id, path.replace('/', "."), name);
+            for (i, o) in outcomes.iter().enumerate() {
+                if let StepOutcome::Succeeded(so) = o {
+                    if let Some(a) = so.artifacts.get(name) {
+                        let dst = format!("{prefix}/{i}");
+                        if let Err(e) = copy_with_retry(&*self.engine.storage, &a.key, &dst) {
+                            return self.fail_step(
+                                step,
+                                path,
+                                format!("stacking artifact '{name}': {e}"),
+                            );
+                        }
+                    }
+                }
+            }
+            out.artifacts.insert(name.clone(), ArtifactRef::new(prefix));
+        }
+        // also surface per-slice success mask for callers that need it
+        out.params.insert(
+            "dflow.slices_succeeded".to_string(),
+            Value::Int(succeeded as i64),
+        );
+        self.run.set_node(path, &step.template, NodePhase::Succeeded, None);
+        self.run.metrics.steps_succeeded.inc();
+        StepOutcome::Succeeded(out)
+    }
+
+    // -- input resolution ---------------------------------------------------------
+
+    fn resolve_param(
+        &self,
+        src: &ParamSrc,
+        bindings: &Bindings,
+        siblings: &BTreeMap<String, StepOutputs>,
+        item: Option<(usize, &Slices)>,
+    ) -> Result<Value, String> {
+        match src {
+            ParamSrc::Const(v) => Ok(v.clone()),
+            ParamSrc::Input(name) => bindings
+                .params
+                .get(name)
+                .cloned()
+                .ok_or_else(|| format!("input parameter '{name}' is not bound")),
+            ParamSrc::StepOutput { step, name } => siblings
+                .get(step)
+                .and_then(|o| o.params.get(name))
+                .cloned()
+                .ok_or_else(|| format!("output '{name}' of step '{step}' is unavailable")),
+            ParamSrc::Item => match item {
+                Some((i, _)) => Ok(Value::Int(i as i64)),
+                None => Err("'item' used outside slices".to_string()),
+            },
+        }
+    }
+
+    fn resolve_artifact(
+        &self,
+        src: &ArtSrc,
+        bindings: &Bindings,
+        siblings: &BTreeMap<String, StepOutputs>,
+    ) -> Result<ArtifactRef, String> {
+        match src {
+            ArtSrc::Const(a) => Ok(a.clone()),
+            ArtSrc::Input(name) => bindings
+                .artifacts
+                .get(name)
+                .cloned()
+                .ok_or_else(|| format!("input artifact '{name}' is not bound")),
+            ArtSrc::StepOutput { step, name } => siblings
+                .get(step)
+                .and_then(|o| o.artifacts.get(name))
+                .cloned()
+                .ok_or_else(|| format!("artifact '{name}' of step '{step}' is unavailable")),
+            ArtSrc::ItemOf(name) => bindings
+                .artifacts
+                .get(name)
+                .cloned()
+                .ok_or_else(|| format!("input artifact '{name}' is not bound")),
+        }
+    }
+
+    /// Borrow a parameter source without cloning, where possible (the hot
+    /// path for sliced steps: cloning a width-N list per slice would make
+    /// fan-out O(N²) — measured 45 µs/step at width 5000 before this).
+    fn resolve_param_ref<'a>(
+        src: &'a ParamSrc,
+        bindings: &'a Bindings,
+        siblings: &'a BTreeMap<String, StepOutputs>,
+    ) -> Option<&'a Value> {
+        match src {
+            ParamSrc::Const(v) => Some(v),
+            ParamSrc::Input(name) => bindings.params.get(name),
+            ParamSrc::StepOutput { step, name } => {
+                siblings.get(step).and_then(|o| o.params.get(name))
+            }
+            ParamSrc::Item => None,
+        }
+    }
+
+    /// Resolve all inputs of a step into bindings for its template. With
+    /// `slice = Some((slices, i))`, sliced params take element `i` and
+    /// sliced artifacts take sub-key `i`.
+    fn resolve_step_bindings(
+        &self,
+        step: &Step,
+        bindings: &Bindings,
+        siblings: &BTreeMap<String, StepOutputs>,
+        slice: Option<(&Slices, usize)>,
+        path: &str,
+    ) -> Result<Bindings, String> {
+        let mut child = Bindings::default();
+        for (name, src) in &step.parameters {
+            // sliced param: borrow the list and clone only element i
+            if let Some((slices, i)) = slice {
+                if slices.input_params.contains(name) {
+                    let whole = Self::resolve_param_ref(src, bindings, siblings)
+                        .ok_or_else(|| format!("{path}: sliced param '{name}' unavailable"))?;
+                    let list = whole
+                        .as_list()
+                        .ok_or_else(|| format!("{path}: sliced param '{name}' is not a list"))?;
+                    let v = list
+                        .get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("{path}: slice {i} out of bounds for '{name}'"))?;
+                    child.params.insert(name.clone(), v);
+                    continue;
+                }
+            }
+            let item = slice.map(|(s, i)| (i, s));
+            let v = self
+                .resolve_param(src, bindings, siblings, item)
+                .map_err(|e| format!("{path}: {e}"))?;
+            child.params.insert(name.clone(), v);
+        }
+        for (name, src) in &step.artifacts {
+            let mut a = self
+                .resolve_artifact(src, bindings, siblings)
+                .map_err(|e| format!("{path}: {e}"))?;
+            if let Some((slices, i)) = slice {
+                if slices.input_artifacts.contains(name) {
+                    a = a.slice(i);
+                }
+            }
+            child.artifacts.insert(name.clone(), a);
+        }
+        Ok(child)
+    }
+
+    // -- container (leaf) execution -------------------------------------------------
+
+    fn execute_container(
+        &self,
+        ct: &ContainerTemplate,
+        bindings: Bindings,
+        path: &str,
+        policy: &StepPolicy,
+        executor_override: Option<&str>,
+    ) -> Result<StepOutputs, String> {
+        let sig = ct.op.signature();
+        // strict input type checking (before execute)
+        let mut inputs = bindings.params;
+        for p in &sig.input_params {
+            match inputs.get(&p.name) {
+                Some(v) => {
+                    if !v.check_type(p.ty) {
+                        return Err(format!(
+                            "{path}: input '{}' has type {} but signature declares {}",
+                            p.name,
+                            v.type_of(),
+                            p.ty
+                        ));
+                    }
+                }
+                None => {
+                    if let Some(d) = &p.default {
+                        inputs.insert(p.name.clone(), d.clone());
+                    } else if !p.optional {
+                        return Err(format!("{path}: required input '{}' missing", p.name));
+                    }
+                }
+            }
+        }
+        for a in &sig.input_artifacts {
+            if !a.optional && !bindings.artifacts.contains_key(&a.name) {
+                return Err(format!("{path}: required input artifact '{}' missing", a.name));
+            }
+        }
+
+        let executor_name =
+            executor_override.unwrap_or(self.engine.config.default_executor.as_str());
+        let executor = self.engine.executor_named(executor_name).map_err(|e| format!("{path}: {e}"))?;
+
+        let ready_at = Instant::now();
+        let mut attempt = 0u32;
+        loop {
+            let err = match self.one_attempt(
+                ct,
+                &inputs,
+                &bindings.artifacts,
+                path,
+                policy,
+                &executor,
+                ready_at,
+                attempt,
+            ) {
+                Ok(outputs) => {
+                    // strict output checking (after execute)
+                    for p in &sig.output_params {
+                        match outputs.params.get(&p.name) {
+                            Some(v) if !v.check_type(p.ty) => {
+                                return Err(format!(
+                                    "{path}: output '{}' has type {} but signature declares {}",
+                                    p.name,
+                                    v.type_of(),
+                                    p.ty
+                                ));
+                            }
+                            Some(_) => {}
+                            None if p.optional => {}
+                            None => {
+                                return Err(format!(
+                                    "{path}: OP did not produce declared output '{}'",
+                                    p.name
+                                ))
+                            }
+                        }
+                    }
+                    for a in &sig.output_artifacts {
+                        if !a.optional && !outputs.artifacts.contains_key(&a.name) {
+                            return Err(format!(
+                                "{path}: OP did not produce declared output artifact '{}'",
+                                a.name
+                            ));
+                        }
+                    }
+                    return Ok(outputs);
+                }
+                Err(e) => e,
+            };
+            let retryable = err.is_transient() && attempt < policy.retries;
+            if !retryable {
+                return Err(format!("{path}: {err}"));
+            }
+            attempt += 1;
+            self.run.node_retry(path);
+            self.run.metrics.retries.inc();
+            self.run.trace.push(EventKind::StepRetrying, path, err.message().to_string());
+            if !policy.backoff.is_zero() {
+                std::thread::sleep(policy.backoff);
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn one_attempt(
+        &self,
+        ct: &ContainerTemplate,
+        inputs: &BTreeMap<String, Value>,
+        input_artifacts: &BTreeMap<String, ArtifactRef>,
+        path: &str,
+        policy: &StepPolicy,
+        executor: &Arc<dyn Executor>,
+        ready_at: Instant,
+        attempt: u32,
+    ) -> Result<StepOutputs, OpError> {
+        self.run.sem.acquire();
+        // pod acquisition — the cluster is the backpressure (§2.6)
+        let binding = if let Some(cluster) = &self.engine.cluster {
+            let mut pod = PodSpec::new(path.to_string(), ct.resources);
+            for (k, v) in &ct.node_selector {
+                pod = pod.select(k, v);
+            }
+            match cluster.bind_blocking(&pod) {
+                Some(b) => {
+                    self.run.metrics.pods_scheduled.inc();
+                    self.run.trace.push(EventKind::PodBound, path, b.node.clone());
+                    Some(b)
+                }
+                None => {
+                    self.run.sem.release();
+                    self.run.metrics.pods_rejected.inc();
+                    return Err(OpError::Fatal(format!(
+                        "pod request {:?} (selector {:?}) is infeasible on this cluster",
+                        ct.resources, ct.node_selector
+                    )));
+                }
+            }
+        } else {
+            None
+        };
+        if attempt == 0 {
+            self.run.metrics.dispatch.observe(ready_at.elapsed());
+        }
+
+        let finish = |outcome: Result<StepOutputs, OpError>| {
+            if let Some(b) = &binding {
+                self.engine.cluster.as_ref().unwrap().release(b);
+                self.run.trace.push(EventKind::PodReleased, path, b.node.clone());
+            }
+            self.run.sem.release();
+            outcome
+        };
+
+        // node flake injected by the cluster → transient failure (§2.4)
+        if binding.as_ref().map(|b| b.flake).unwrap_or(false) {
+            return finish(Err(OpError::Transient(format!(
+                "node {} flaked during execution",
+                binding.as_ref().unwrap().node
+            ))));
+        }
+
+        let mut ctx = OpCtx {
+            inputs: inputs.clone(),
+            input_artifacts: input_artifacts.clone(),
+            outputs: BTreeMap::new(),
+            output_artifacts: BTreeMap::new(),
+            storage: self.engine.storage.clone(),
+            runtime: self.engine.runtime.clone(),
+            workdir: self
+                .engine
+                .config
+                .workdir_root
+                .join(format!("run{}-{}", self.run.id, crate::util::next_id())),
+            artifact_prefix: format!(
+                "run{}/{}/a{}",
+                self.run.id,
+                path.replace('/', "."),
+                attempt
+            ),
+            cancel: crate::core::CancelToken::new(),
+        };
+
+        let sw = Stopwatch::start();
+        let result = match policy.timeout {
+            None => {
+                let r = executor.execute(ct, &mut ctx);
+                self.run.metrics.op_exec.observe(sw.elapsed());
+                r.map(|()| StepOutputs {
+                    params: ctx.outputs,
+                    artifacts: ctx.output_artifacts,
+                })
+            }
+            Some(limit) => {
+                // run the attempt on a watchdog thread so the wall-time
+                // limit can fire even for non-cooperative OPs
+                let cancel = ctx.cancel.clone();
+                let exec = executor.clone();
+                let ct2 = ct.clone();
+                let (tx, rx) = mpsc::channel();
+                std::thread::spawn(move || {
+                    let r = exec.execute(&ct2, &mut ctx);
+                    tx.send(r.map(|()| StepOutputs {
+                        params: ctx.outputs,
+                        artifacts: ctx.output_artifacts,
+                    }))
+                    .ok();
+                });
+                match rx.recv_timeout(limit) {
+                    Ok(r) => {
+                        self.run.metrics.op_exec.observe(sw.elapsed());
+                        r
+                    }
+                    Err(_) => {
+                        cancel.cancel();
+                        self.run.metrics.timeouts.inc();
+                        self.run.trace.push(
+                            EventKind::StepTimedOut,
+                            path,
+                            format!("{limit:?}"),
+                        );
+                        let msg = format!("step timed out after {limit:?}");
+                        if policy.timeout_transient {
+                            Err(OpError::Transient(msg))
+                        } else {
+                            Err(OpError::Fatal(msg))
+                        }
+                    }
+                }
+            }
+        };
+        finish(result)
+    }
+}
+
+/// Server-side copy with bounded retry on transient storage failures.
+fn copy_with_retry(
+    storage: &dyn StorageClient,
+    src: &str,
+    dst: &str,
+) -> Result<(), crate::storage::StorageError> {
+    let mut last = None;
+    for attempt in 0..8 {
+        match storage.copy(src, dst) {
+            Ok(()) => return Ok(()),
+            Err(crate::storage::StorageError::Transient(m)) => {
+                last = Some(crate::storage::StorageError::Transient(m));
+                std::thread::sleep(std::time::Duration::from_millis(1 << attempt));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last.unwrap())
+}
+
+/// Render a step key template: `{{item}}` → slice index,
+/// `{{inputs.parameters.NAME}}` → the resolved input parameter display
+/// value (paper §2.5: "the key of a step may depend on ... the iteration of
+/// a dynamic loop").
+fn render_key(template: &str, child: &Bindings, item: Option<usize>) -> String {
+    let mut out = template.to_string();
+    if let Some(i) = item {
+        out = out.replace("{{item}}", &i.to_string());
+    }
+    while let Some(start) = out.find("{{inputs.parameters.") {
+        let Some(end) = out[start..].find("}}") else { break };
+        let name = &out[start + "{{inputs.parameters.".len()..start + end];
+        let val = child
+            .params
+            .get(name)
+            .map(Value::display)
+            .unwrap_or_else(|| "?".to_string());
+        out = format!("{}{}{}", &out[..start], val, &out[start + end + 2..]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Dag, Expr, FnOp, ParamType, Signature, Steps};
+    use std::time::Duration;
+
+    fn add_op() -> Arc<dyn crate::core::Op> {
+        Arc::new(FnOp::new(
+            Signature::new()
+                .in_param("a", ParamType::Int)
+                .in_param("b", ParamType::Int)
+                .out_param("sum", ParamType::Int),
+            |ctx| {
+                let s = ctx.get_int("a")? + ctx.get_int("b")?;
+                ctx.set("sum", s);
+                Ok(())
+            },
+        ))
+    }
+
+    fn engine() -> Engine {
+        Engine::local()
+    }
+
+    #[test]
+    fn single_container_entrypoint() {
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("add", add_op()))
+            .steps(
+                Steps::new("main")
+                    .then(Step::new("s", "add").param("a", 1i64).param("b", 2i64))
+                    .out_param_from("total", "s", "sum"),
+            )
+            .entrypoint("main");
+        let r = engine().run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        assert_eq!(r.outputs.params["total"], Value::Int(3));
+    }
+
+    #[test]
+    fn dag_dependency_order_and_dataflow() {
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("add", add_op()))
+            .dag(
+                Dag::new("main")
+                    .task(Step::new("x", "add").param("a", 1i64).param("b", 1i64))
+                    .task(
+                        Step::new("y", "add")
+                            .param_from_step("a", "x", "sum")
+                            .param("b", 10i64),
+                    )
+                    .task(
+                        Step::new("z", "add")
+                            .param_from_step("a", "y", "sum")
+                            .param_from_step("b", "x", "sum"),
+                    )
+                    .out_param_from("r", "z", "sum"),
+            )
+            .entrypoint("main");
+        let r = engine().run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        assert_eq!(r.outputs.params["r"], Value::Int(14)); // (2+10)+2
+    }
+
+    #[test]
+    fn condition_skips_step() {
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("add", add_op()))
+            .steps(
+                Steps::new("main")
+                    .then(Step::new("a", "add").param("a", 1i64).param("b", 1i64))
+                    .then(
+                        Step::new("b", "add")
+                            .param("a", 1i64)
+                            .param("b", 1i64)
+                            .when(Expr::gt(
+                                Operand::StepOutput { step: "a".into(), name: "sum".into() },
+                                Operand::Const(Value::Int(100)),
+                            )),
+                    ),
+            )
+            .entrypoint("main");
+        let r = engine().run(&wf).unwrap();
+        assert!(r.succeeded());
+        assert_eq!(r.run.count_phase(NodePhase::Skipped), 1);
+    }
+
+    #[test]
+    fn slices_map_reduce_order_preserved() {
+        let sq = Arc::new(FnOp::new(
+            Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+            |ctx| {
+                let x = ctx.get_int("x")?;
+                ctx.set("y", x * x);
+                Ok(())
+            },
+        ));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("sq", sq))
+            .steps(
+                Steps::new("main")
+                    .then(
+                        Step::new("fan", "sq")
+                            .param("x", Value::ints(0..10))
+                            .slices(Slices::over("x").stack("y").parallelism(4)),
+                    )
+                    .out_param_from("ys", "fan", "y"),
+            )
+            .entrypoint("main");
+        let r = engine().run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        let ys = r.outputs.params["ys"].as_list().unwrap();
+        let expect: Vec<Value> = (0..10).map(|i| Value::Int(i * i)).collect();
+        assert_eq!(ys, &expect[..]);
+    }
+
+    #[test]
+    fn recursion_dynamic_loop_terminates() {
+        // count up to 5 via a recursive steps template
+        let inc = Arc::new(FnOp::new(
+            Signature::new().in_param("i", ParamType::Int).out_param("next", ParamType::Int),
+            |ctx| {
+                let i = ctx.get_int("i")?;
+                ctx.set("next", i + 1);
+                Ok(())
+            },
+        ));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("inc", inc))
+            .steps(
+                Steps::new("loop")
+                    .signature(Signature::new().in_param("i", ParamType::Int))
+                    .then(Step::new("body", "inc").param_from_input("i", "i"))
+                    .then(
+                        Step::new("again", "loop")
+                            .param_from_step("i", "body", "next")
+                            .when(Expr::lt(
+                                Operand::StepOutput { step: "body".into(), name: "next".into() },
+                                Operand::Const(Value::Int(5)),
+                            )),
+                    ),
+            )
+            .entrypoint("loop")
+            .arg("i", 0i64);
+        let r = engine().run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        // 5 body executions: i=0..4
+        let bodies = r
+            .run
+            .nodes()
+            .into_iter()
+            .filter(|n| n.path.ends_with("/body") && n.phase == NodePhase::Succeeded)
+            .count();
+        assert_eq!(bodies, 5);
+    }
+
+    #[test]
+    fn retries_on_transient_error() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let tries = Arc::new(AtomicU32::new(0));
+        let t2 = tries.clone();
+        let flaky = Arc::new(FnOp::new(
+            Signature::new().out_param("ok", ParamType::Bool),
+            move |ctx| {
+                if t2.fetch_add(1, Ordering::SeqCst) < 2 {
+                    return Err(OpError::Transient("not yet".into()));
+                }
+                ctx.set("ok", true);
+                Ok(())
+            },
+        ));
+        let mut policy = StepPolicy::default();
+        policy.retries = 3;
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("flaky", flaky))
+            .steps(Steps::new("main").then(Step::new("s", "flaky").policy(policy)))
+            .entrypoint("main");
+        let r = engine().run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        assert_eq!(tries.load(Ordering::SeqCst), 3);
+        assert_eq!(r.run.metrics.retries.get(), 2);
+    }
+
+    #[test]
+    fn fatal_error_fails_immediately() {
+        let boom = Arc::new(FnOp::new(Signature::new(), |_| {
+            Err(OpError::Fatal("broken".into()))
+        }));
+        let mut policy = StepPolicy::default();
+        policy.retries = 5;
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("boom", boom))
+            .steps(Steps::new("main").then(Step::new("s", "boom").policy(policy)))
+            .entrypoint("main");
+        let r = engine().run(&wf).unwrap();
+        assert!(!r.succeeded());
+        assert_eq!(r.run.metrics.retries.get(), 0);
+    }
+
+    #[test]
+    fn timeout_fires() {
+        let slow = Arc::new(FnOp::new(Signature::new(), |_| {
+            std::thread::sleep(Duration::from_millis(300));
+            Ok(())
+        }));
+        let mut policy = StepPolicy::default();
+        policy.timeout = Some(Duration::from_millis(30));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("slow", slow))
+            .steps(Steps::new("main").then(Step::new("s", "slow").policy(policy)))
+            .entrypoint("main");
+        let r = engine().run(&wf).unwrap();
+        assert!(!r.succeeded());
+        assert!(r.error.unwrap().contains("timed out"));
+        assert_eq!(r.run.metrics.timeouts.get(), 1);
+    }
+
+    #[test]
+    fn continue_on_failed_lets_workflow_proceed() {
+        let boom = Arc::new(FnOp::new(Signature::new(), |_| {
+            Err(OpError::Fatal("broken".into()))
+        }));
+        let mut policy = StepPolicy::default();
+        policy.continue_on_failed = true;
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("boom", boom))
+            .container(ContainerTemplate::new("add", add_op()))
+            .steps(
+                Steps::new("main")
+                    .then(Step::new("bad", "boom").policy(policy))
+                    .then(Step::new("good", "add").param("a", 1i64).param("b", 1i64))
+                    .out_param_from("r", "good", "sum"),
+            )
+            .entrypoint("main");
+        let r = engine().run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        assert_eq!(r.outputs.params["r"], Value::Int(2));
+        assert_eq!(r.run.count_phase(NodePhase::Failed), 1);
+    }
+
+    #[test]
+    fn slices_continue_on_success_ratio() {
+        let sometimes = Arc::new(FnOp::new(
+            Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+            |ctx| {
+                let x = ctx.get_int("x")?;
+                if x % 3 == 0 {
+                    return Err(OpError::Fatal("multiple of three".into()));
+                }
+                ctx.set("y", x);
+                Ok(())
+            },
+        ));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("maybe", sometimes))
+            .steps(
+                Steps::new("main")
+                    .then(
+                        Step::new("fan", "maybe")
+                            .param("x", Value::ints(0..9))
+                            .slices(
+                                Slices::over("x")
+                                    .stack("y")
+                                    .continue_on(ContinueOn::SuccessRatio(0.5)),
+                            ),
+                    )
+                    .out_param_from("ys", "fan", "y"),
+            )
+            .entrypoint("main");
+        let r = engine().run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error); // 6/9 ≥ 0.5
+        let ys = r.outputs.params["ys"].as_list().unwrap();
+        assert_eq!(ys[0], Value::Null); // failed slice → Null
+        assert_eq!(ys[1], Value::Int(1));
+    }
+
+    #[test]
+    fn slices_fail_without_quorum() {
+        let never = Arc::new(FnOp::new(
+            Signature::new().in_param("x", ParamType::Int),
+            |_| Err(OpError::Fatal("no".into())),
+        ));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("never", never))
+            .steps(Steps::new("main").then(
+                Step::new("fan", "never").param("x", Value::ints(0..4)).slices(
+                    Slices::over("x").continue_on(ContinueOn::SuccessNumber(1)),
+                ),
+            ))
+            .entrypoint("main");
+        let r = engine().run(&wf).unwrap();
+        assert!(!r.succeeded());
+        assert!(r.error.unwrap().contains("0/4"));
+    }
+
+    #[test]
+    fn reuse_skips_execution() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let count = Arc::new(AtomicU32::new(0));
+        let c2 = count.clone();
+        let op = Arc::new(FnOp::new(
+            Signature::new().out_param("v", ParamType::Int),
+            move |ctx| {
+                c2.fetch_add(1, Ordering::SeqCst);
+                ctx.set("v", 7i64);
+                Ok(())
+            },
+        ));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("op", op))
+            .steps(
+                Steps::new("main")
+                    .then(Step::new("s", "op").key("expensive-step"))
+                    .out_param_from("v", "s", "v"),
+            )
+            .entrypoint("main");
+        let e = engine();
+        let r1 = e.run(&wf).unwrap();
+        assert!(r1.succeeded());
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+        // second run reusing the step: no new execution
+        let reused = r1.query_step("expensive-step").unwrap();
+        let r2 = e.run_with_reuse(&wf, vec![reused]).unwrap();
+        assert!(r2.succeeded());
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+        assert_eq!(r2.outputs.params["v"], Value::Int(7));
+        assert_eq!(r2.run.metrics.steps_reused.get(), 1);
+    }
+
+    #[test]
+    fn reuse_with_modified_output() {
+        let op = Arc::new(FnOp::new(
+            Signature::new().out_param("v", ParamType::Int),
+            |ctx| {
+                ctx.set("v", 7i64);
+                Ok(())
+            },
+        ));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("op", op))
+            .steps(
+                Steps::new("main")
+                    .then(Step::new("s", "op").key("k"))
+                    .out_param_from("v", "s", "v"),
+            )
+            .entrypoint("main");
+        let e = engine();
+        let r1 = e.run(&wf).unwrap();
+        let reused = r1.query_step("k").unwrap().modify_output_parameter("v", 99i64);
+        let r2 = e.run_with_reuse(&wf, vec![reused]).unwrap();
+        assert_eq!(r2.outputs.params["v"], Value::Int(99));
+    }
+
+    #[test]
+    fn key_rendering_with_item_and_params() {
+        let mut b = Bindings::default();
+        b.params.insert("iter".into(), Value::Int(3));
+        assert_eq!(
+            render_key("explore-{{inputs.parameters.iter}}-{{item}}", &b, Some(7)),
+            "explore-3-7"
+        );
+    }
+
+    #[test]
+    fn strict_type_check_rejects_bad_input() {
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("add", add_op()))
+            .steps(
+                Steps::new("main")
+                    .then(Step::new("s", "add").param("a", "oops").param("b", 2i64)),
+            )
+            .entrypoint("main");
+        let r = engine().run(&wf).unwrap();
+        assert!(!r.succeeded());
+        assert!(r.error.unwrap().contains("type"));
+    }
+
+    #[test]
+    fn strict_output_check_rejects_missing_output() {
+        let lazy = Arc::new(FnOp::new(
+            Signature::new().out_param("required", ParamType::Int),
+            |_| Ok(()),
+        ));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("lazy", lazy))
+            .steps(Steps::new("main").then(Step::new("s", "lazy")))
+            .entrypoint("main");
+        let r = engine().run(&wf).unwrap();
+        assert!(!r.succeeded());
+        assert!(r.error.unwrap().contains("did not produce"));
+    }
+
+    #[test]
+    fn cluster_backpressure_and_accounting() {
+        use crate::cluster::Resources;
+        let cluster = Arc::new(Cluster::uniform(2, Resources::cpu(1000), 0));
+        let op = Arc::new(FnOp::new(
+            Signature::new().in_param("i", ParamType::Int),
+            |_| {
+                std::thread::sleep(Duration::from_millis(20));
+                Ok(())
+            },
+        ));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("op", op).resources(Resources::cpu(1000)))
+            .steps(Steps::new("main").then(
+                Step::new("fan", "op").param("i", Value::ints(0..6)).slices(
+                    Slices::over("i").parallelism(6),
+                ),
+            ))
+            .entrypoint("main");
+        let e = Engine::builder().cluster(cluster.clone()).build();
+        let r = e.run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        let (bound, released, peak) = cluster.stats();
+        assert_eq!(bound, 6);
+        assert_eq!(released, 6);
+        assert!(peak <= 2, "peak={peak}"); // only 2 nodes fit
+    }
+
+    #[test]
+    fn executor_override_is_used() {
+        use crate::executor::FlakyExecutor;
+        let flaky = Arc::new(FlakyExecutor::new(1.0, 1));
+        let op = Arc::new(FnOp::new(Signature::new(), |_| Ok(())));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("op", op))
+            .steps(Steps::new("main").then(Step::new("s", "op").executor("flaky")))
+            .entrypoint("main");
+        let e = Engine::builder().executor("flaky", flaky.clone()).build();
+        let r = e.run(&wf).unwrap();
+        assert!(!r.succeeded());
+        assert_eq!(flaky.attempts.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn unknown_executor_is_an_error() {
+        let op = Arc::new(FnOp::new(Signature::new(), |_| Ok(())));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("op", op))
+            .steps(Steps::new("main").then(Step::new("s", "op").executor("ghost")))
+            .entrypoint("main");
+        let r = Engine::local().run(&wf).unwrap();
+        assert!(!r.succeeded());
+        assert!(r.error.unwrap().contains("not registered"));
+    }
+}

@@ -1,0 +1,416 @@
+//! Workflow run state: node statuses, outputs, reuse records, the
+//! observable surface behind `dflow get/watch` and `query_step` (§2.5).
+
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
+
+use crate::core::{ArtifactRef, Value};
+use crate::jsonx::Json;
+use crate::metrics::{Registry, Trace};
+use crate::util::epoch_ms;
+
+/// Argo-style node phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodePhase {
+    Pending,
+    Running,
+    Succeeded,
+    Failed,
+    Skipped,
+    /// Outputs came from a reused step of a previous run (§2.5).
+    Reused,
+}
+
+/// Status of one node (an instantiated step) in the run tree. Node paths
+/// are slash-joined: `main/iter-0/explore[3]`.
+#[derive(Debug, Clone)]
+pub struct NodeStatus {
+    pub path: String,
+    pub template: String,
+    pub phase: NodePhase,
+    pub key: Option<String>,
+    pub started_ms: u64,
+    pub ended_ms: u64,
+    pub retries: u32,
+    pub message: String,
+}
+
+/// Outputs of a completed step: parameters + artifacts.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepOutputs {
+    pub params: BTreeMap<String, Value>,
+    pub artifacts: BTreeMap<String, ArtifactRef>,
+}
+
+impl StepOutputs {
+    /// Persist to JSON (restart files).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "params",
+                Json::Obj(self.params.iter().map(|(k, v)| (k.clone(), v.to_json())).collect()),
+            ),
+            (
+                "artifacts",
+                Json::Obj(
+                    self.artifacts.iter().map(|(k, v)| (k.clone(), v.to_json())).collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Restore from JSON.
+    pub fn from_json(j: &Json) -> Option<StepOutputs> {
+        let mut out = StepOutputs::default();
+        if let Some(Json::Obj(p)) = j.get("params") {
+            for (k, v) in p {
+                out.params.insert(k.clone(), Value::from_json(v));
+            }
+        }
+        if let Some(Json::Obj(a)) = j.get("artifacts") {
+            for (k, v) in a {
+                out.artifacts.insert(k.clone(), ArtifactRef::from_json(v)?);
+            }
+        }
+        Some(out)
+    }
+}
+
+/// A step retrieved from a previous run for reuse (paper §2.5). Build via
+/// [`crate::engine::RunResult::query_step`], optionally modify outputs, and
+/// pass to `run_with_reuse`.
+#[derive(Debug, Clone)]
+pub struct ReusedStep {
+    pub key: String,
+    pub outputs: StepOutputs,
+}
+
+impl ReusedStep {
+    /// Manual constructor.
+    pub fn new(key: impl Into<String>, outputs: StepOutputs) -> Self {
+        ReusedStep { key: key.into(), outputs }
+    }
+
+    /// `modify_output_parameter` (paper §2.5).
+    pub fn modify_output_parameter(mut self, name: &str, v: impl Into<Value>) -> Self {
+        self.outputs.params.insert(name.to_string(), v.into());
+        self
+    }
+
+    /// `modify_output_artifact` (paper §2.5).
+    pub fn modify_output_artifact(mut self, name: &str, a: ArtifactRef) -> Self {
+        self.outputs.artifacts.insert(name.to_string(), a);
+        self
+    }
+}
+
+/// Terminal phase of a whole run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunPhase {
+    Running,
+    Succeeded,
+    Failed,
+}
+
+/// Counting semaphore (leaf-execution concurrency cap).
+pub struct Semaphore {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    /// With `n` permits.
+    pub fn new(n: usize) -> Self {
+        Semaphore { permits: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    /// Block until a permit is available, then take it.
+    pub fn acquire(&self) {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+    }
+
+    /// Return a permit.
+    pub fn release(&self) {
+        *self.permits.lock().unwrap() += 1;
+        self.cv.notify_one();
+    }
+
+    /// Run `f` holding a permit.
+    pub fn with<T>(&self, f: impl FnOnce() -> T) -> T {
+        self.acquire();
+        let out = f();
+        self.release();
+        out
+    }
+}
+
+/// Live, shared state of one workflow run.
+pub struct WorkflowRun {
+    pub id: u64,
+    pub workflow_name: String,
+    pub trace: Trace,
+    pub metrics: Registry,
+    pub(crate) nodes: Mutex<BTreeMap<String, NodeStatus>>,
+    pub(crate) phase: Mutex<RunPhase>,
+    /// key → outputs of completed keyed steps (feeds `query_step`).
+    pub(crate) keyed: Mutex<BTreeMap<String, StepOutputs>>,
+    /// key → outputs injected from previous runs (`reuse_step`).
+    pub(crate) reuse: BTreeMap<String, StepOutputs>,
+    pub(crate) sem: Semaphore,
+}
+
+impl WorkflowRun {
+    pub(crate) fn new(
+        workflow_name: &str,
+        parallelism: usize,
+        reuse: BTreeMap<String, StepOutputs>,
+        trace_cap: usize,
+    ) -> Self {
+        WorkflowRun {
+            id: crate::util::next_id(),
+            workflow_name: workflow_name.to_string(),
+            trace: Trace::new(trace_cap),
+            metrics: Registry::default(),
+            nodes: Mutex::new(BTreeMap::new()),
+            phase: Mutex::new(RunPhase::Running),
+            keyed: Mutex::new(BTreeMap::new()),
+            reuse,
+            sem: Semaphore::new(parallelism),
+        }
+    }
+
+    pub(crate) fn set_node(&self, path: &str, template: &str, phase: NodePhase, key: Option<&str>) {
+        let mut nodes = self.nodes.lock().unwrap();
+        let now = epoch_ms();
+        let entry = nodes.entry(path.to_string()).or_insert_with(|| NodeStatus {
+            path: path.to_string(),
+            template: template.to_string(),
+            phase,
+            key: key.map(str::to_string),
+            started_ms: now,
+            ended_ms: 0,
+            retries: 0,
+            message: String::new(),
+        });
+        entry.phase = phase;
+        if matches!(phase, NodePhase::Running) {
+            entry.started_ms = now;
+        }
+        if matches!(
+            phase,
+            NodePhase::Succeeded | NodePhase::Failed | NodePhase::Skipped | NodePhase::Reused
+        ) {
+            entry.ended_ms = now;
+        }
+    }
+
+    pub(crate) fn node_message(&self, path: &str, msg: &str) {
+        if let Some(n) = self.nodes.lock().unwrap().get_mut(path) {
+            msg.clone_into(&mut n.message);
+        }
+    }
+
+    pub(crate) fn node_retry(&self, path: &str) {
+        if let Some(n) = self.nodes.lock().unwrap().get_mut(path) {
+            n.retries += 1;
+        }
+    }
+
+    pub(crate) fn record_keyed(&self, key: &str, outputs: &StepOutputs) {
+        self.keyed.lock().unwrap().insert(key.to_string(), outputs.clone());
+    }
+
+    /// Current phase.
+    pub fn phase(&self) -> RunPhase {
+        *self.phase.lock().unwrap()
+    }
+
+    /// Snapshot of all node statuses (sorted by path).
+    pub fn nodes(&self) -> Vec<NodeStatus> {
+        self.nodes.lock().unwrap().values().cloned().collect()
+    }
+
+    /// Count nodes in a phase.
+    pub fn count_phase(&self, phase: NodePhase) -> usize {
+        self.nodes.lock().unwrap().values().filter(|n| n.phase == phase).count()
+    }
+
+    /// `query_step` (paper §2.5): retrieve a completed keyed step.
+    pub fn query_step(&self, key: &str) -> Option<ReusedStep> {
+        self.keyed
+            .lock()
+            .unwrap()
+            .get(key)
+            .map(|o| ReusedStep { key: key.to_string(), outputs: o.clone() })
+    }
+
+    /// All keyed outputs (for bulk reuse of a previous run).
+    pub fn all_keyed(&self) -> Vec<ReusedStep> {
+        self.keyed
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, o)| ReusedStep { key: k.clone(), outputs: o.clone() })
+            .collect()
+    }
+
+    /// Write the paper §2.7 debug-mode directory layout: a workflow
+    /// directory whose top level holds the run status and one directory per
+    /// step — named by its key when present, by its path otherwise — each
+    /// containing the step's phase, template ("type") and timings.
+    pub fn dump_debug_dir(&self, root: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        let wf_dir = root.join(format!("{}-{}", self.workflow_name, self.id));
+        std::fs::create_dir_all(&wf_dir)?;
+        std::fs::write(
+            wf_dir.join("status"),
+            format!("{:?}\n", self.phase()),
+        )?;
+        std::fs::write(wf_dir.join("status.json"), self.to_json().to_string_pretty())?;
+        for n in self.nodes() {
+            let name = n
+                .key
+                .clone()
+                .unwrap_or_else(|| n.path.trim_start_matches("main/").replace('/', "."));
+            let safe: String = name
+                .chars()
+                .map(|c| if c.is_alphanumeric() || "-_.[]".contains(c) { c } else { '_' })
+                .collect();
+            let step_dir = wf_dir.join(safe);
+            std::fs::create_dir_all(&step_dir)?;
+            std::fs::write(step_dir.join("phase"), format!("{:?}\n", n.phase))?;
+            std::fs::write(step_dir.join("type"), format!("{}\n", n.template))?;
+            std::fs::write(
+                step_dir.join("timing"),
+                format!("started_ms={}\nended_ms={}\nretries={}\n", n.started_ms, n.ended_ms, n.retries),
+            )?;
+            if !n.message.is_empty() {
+                std::fs::write(step_dir.join("message"), &n.message)?;
+            }
+        }
+        Ok(wf_dir)
+    }
+
+    /// Status document (what `dflow get` prints).
+    pub fn to_json(&self) -> Json {
+        let nodes = self.nodes.lock().unwrap();
+        Json::obj(vec![
+            ("id", Json::n(self.id as f64)),
+            ("workflow", Json::s(self.workflow_name.clone())),
+            ("phase", Json::s(format!("{:?}", self.phase()))),
+            (
+                "nodes",
+                Json::Arr(
+                    nodes
+                        .values()
+                        .map(|n| {
+                            Json::obj(vec![
+                                ("path", Json::s(n.path.clone())),
+                                ("template", Json::s(n.template.clone())),
+                                ("phase", Json::s(format!("{:?}", n.phase))),
+                                ("key", n.key.clone().map(Json::s).unwrap_or(Json::Null)),
+                                ("retries", Json::n(n.retries as f64)),
+                                ("message", Json::s(n.message.clone())),
+                                ("started_ms", Json::n(n.started_ms as f64)),
+                                ("ended_ms", Json::n(n.ended_ms as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn semaphore_caps_concurrency() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let sem = Arc::new(Semaphore::new(2));
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let (sem, live, peak) = (sem.clone(), live.clone(), peak.clone());
+            handles.push(std::thread::spawn(move || {
+                sem.with(|| {
+                    let cur = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(cur, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    live.fetch_sub(1, Ordering::SeqCst);
+                });
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2);
+    }
+
+    #[test]
+    fn step_outputs_json_roundtrip() {
+        let mut o = StepOutputs::default();
+        o.params.insert("a".into(), Value::Int(1));
+        o.artifacts.insert("f".into(), ArtifactRef::new("k/1"));
+        assert_eq!(StepOutputs::from_json(&o.to_json()).unwrap(), o);
+    }
+
+    #[test]
+    fn reused_step_modification() {
+        let r = ReusedStep::new("k", StepOutputs::default())
+            .modify_output_parameter("p", 9i64)
+            .modify_output_artifact("a", ArtifactRef::new("x"));
+        assert_eq!(r.outputs.params["p"], Value::Int(9));
+        assert_eq!(r.outputs.artifacts["a"].key, "x");
+    }
+
+    #[test]
+    fn debug_dir_layout_matches_section_2_7() {
+        let run = WorkflowRun::new("wf", 4, BTreeMap::new(), 1000);
+        run.set_node("main/a", "tpl-a", NodePhase::Succeeded, Some("key-a"));
+        run.set_node("main/sub/b", "tpl-b", NodePhase::Failed, None);
+        run.node_message("main/sub/b", "boom");
+        *run.phase.lock().unwrap() = RunPhase::Failed;
+        let root = std::env::temp_dir().join(format!("dflow-dbg-{}", crate::util::next_id()));
+        let dir = run.dump_debug_dir(&root).unwrap();
+        assert!(dir.join("status").exists());
+        assert!(dir.join("status.json").exists());
+        // keyed step dir named by key; unkeyed by path
+        assert_eq!(
+            std::fs::read_to_string(dir.join("key-a/phase")).unwrap().trim(),
+            "Succeeded"
+        );
+        assert_eq!(
+            std::fs::read_to_string(dir.join("sub.b/type")).unwrap().trim(),
+            "tpl-b"
+        );
+        assert_eq!(
+            std::fs::read_to_string(dir.join("sub.b/message")).unwrap(),
+            "boom"
+        );
+        std::fs::remove_dir_all(root).ok();
+    }
+
+    #[test]
+    fn run_tracks_nodes_and_keys() {
+        let run = WorkflowRun::new("w", 4, BTreeMap::new(), 1000);
+        run.set_node("main/a", "t", NodePhase::Running, Some("k1"));
+        run.set_node("main/a", "t", NodePhase::Succeeded, Some("k1"));
+        let mut out = StepOutputs::default();
+        out.params.insert("y".into(), Value::Int(2));
+        run.record_keyed("k1", &out);
+        assert_eq!(run.count_phase(NodePhase::Succeeded), 1);
+        assert_eq!(run.query_step("k1").unwrap().outputs.params["y"], Value::Int(2));
+        assert!(run.query_step("nope").is_none());
+        let j = run.to_json();
+        assert_eq!(j.get("workflow").unwrap().as_str().unwrap(), "w");
+    }
+}

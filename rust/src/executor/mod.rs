@@ -1,0 +1,308 @@
+//! Executor plugins (paper §2.6): "an extension point for executive steps".
+//!
+//! Dflow's `Executor` transforms a step so its script runs somewhere else
+//! (an HPC scheduler via DPDispatcher, a remote environment, ...). The Rust
+//! analogue executes the already-resolved OP through a chosen backend:
+//!
+//! * [`LocalExecutor`] — run in-process (the default "inside the container").
+//! * [`DispatcherExecutor`] — the DPDispatcher analogue: submit the OP as a
+//!   job to a [`crate::hpc::HpcScheduler`] partition, poll until terminal,
+//!   map walltime kills to transient/fatal step failures.
+//! * [`FlakyExecutor`] — test/bench helper injecting transient failures.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::core::{ContainerTemplate, OpCtx, OpError, Value};
+use crate::hpc::{HpcScheduler, JobState};
+use crate::jsonx::Json;
+use crate::util::Rng;
+
+/// Executes a container step's OP against some backend.
+pub trait Executor: Send + Sync {
+    /// Run the OP of `tpl` with the resolved context.
+    fn execute(&self, tpl: &ContainerTemplate, ctx: &mut OpCtx) -> Result<(), OpError>;
+    /// Human-readable backend name (observability).
+    fn describe(&self) -> String {
+        "executor".into()
+    }
+}
+
+/// Default executor: run the OP in-process.
+#[derive(Default)]
+pub struct LocalExecutor;
+
+impl Executor for LocalExecutor {
+    fn execute(&self, tpl: &ContainerTemplate, ctx: &mut OpCtx) -> Result<(), OpError> {
+        tpl.op.execute(ctx)
+    }
+
+    fn describe(&self) -> String {
+        "local".into()
+    }
+}
+
+/// DPDispatcher analogue: ship the OP to an HPC partition and wait.
+///
+/// The OP context is moved into the job (the "job script"), outputs come
+/// back serialized — mirroring how DPDispatcher stages files to the cluster
+/// and collects results. Walltime kills surface as
+/// [`OpError::Transient`]/[`OpError::Fatal`] per `timeout_transient`.
+pub struct DispatcherExecutor {
+    sched: Arc<HpcScheduler>,
+    partition: String,
+    /// Map walltime kills to transient (retryable) errors.
+    pub timeout_transient: bool,
+}
+
+impl DispatcherExecutor {
+    /// Target `partition` on `sched`.
+    pub fn new(sched: Arc<HpcScheduler>, partition: &str) -> Self {
+        DispatcherExecutor { sched, partition: partition.to_string(), timeout_transient: true }
+    }
+}
+
+fn outputs_to_json(ctx: &OpCtx) -> Json {
+    Json::obj(vec![
+        (
+            "params",
+            Json::Obj(ctx.outputs.iter().map(|(k, v)| (k.clone(), v.to_json())).collect()),
+        ),
+        (
+            "artifacts",
+            Json::Obj(
+                ctx.output_artifacts
+                    .iter()
+                    .map(|(k, v)| (k.clone(), v.to_json()))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn outputs_from_json(j: &Json, ctx: &mut OpCtx) -> Result<(), OpError> {
+    if let Some(Json::Obj(params)) = j.get("params") {
+        for (k, v) in params {
+            ctx.outputs.insert(k.clone(), Value::from_json(v));
+        }
+    }
+    if let Some(Json::Obj(arts)) = j.get("artifacts") {
+        for (k, v) in arts {
+            let a = crate::core::ArtifactRef::from_json(v)
+                .ok_or_else(|| OpError::Fatal("bad artifact in job output".into()))?;
+            ctx.output_artifacts.insert(k.clone(), a);
+        }
+    }
+    Ok(())
+}
+
+impl Executor for DispatcherExecutor {
+    fn execute(&self, tpl: &ContainerTemplate, ctx: &mut OpCtx) -> Result<(), OpError> {
+        // move a clone of the context into the job; artifacts go through the
+        // shared storage client exactly as they would through a cluster FS
+        let op = tpl.op.clone();
+        let mut job_ctx = OpCtx {
+            inputs: ctx.inputs.clone(),
+            input_artifacts: ctx.input_artifacts.clone(),
+            outputs: BTreeMap::new(),
+            output_artifacts: BTreeMap::new(),
+            storage: ctx.storage.clone(),
+            runtime: ctx.runtime.clone(),
+            workdir: ctx.workdir.clone(),
+            artifact_prefix: ctx.artifact_prefix.clone(),
+            cancel: ctx.cancel.clone(),
+        };
+        let (tx, rx) = mpsc::channel::<Json>();
+        let id = self
+            .sched
+            .submit(&self.partition, move || {
+                op.execute(&mut job_ctx)
+                    .map_err(|e| {
+                        // encode transiency in the message so it survives
+                        // the job boundary
+                        match e {
+                            OpError::Transient(m) => format!("TRANSIENT:{m}"),
+                            OpError::Fatal(m) => format!("FATAL:{m}"),
+                        }
+                    })
+                    .map(|()| {
+                        let j = outputs_to_json(&job_ctx);
+                        tx.send(j).ok();
+                        Vec::new()
+                    })
+            })
+            .map_err(OpError::Fatal)?;
+        let (state, _, msg) = self.sched.wait(id);
+        match state {
+            JobState::Completed => {
+                let j = rx
+                    .try_recv()
+                    .map_err(|_| OpError::Fatal("job completed without outputs".into()))?;
+                outputs_from_json(&j, ctx)
+            }
+            JobState::TimedOut => {
+                let e = format!("hpc walltime exceeded on '{}': {msg}", self.partition);
+                if self.timeout_transient {
+                    Err(OpError::Transient(e))
+                } else {
+                    Err(OpError::Fatal(e))
+                }
+            }
+            JobState::Failed => {
+                if let Some(m) = msg.strip_prefix("TRANSIENT:") {
+                    Err(OpError::Transient(m.to_string()))
+                } else if let Some(m) = msg.strip_prefix("FATAL:") {
+                    Err(OpError::Fatal(m.to_string()))
+                } else {
+                    Err(OpError::Fatal(msg))
+                }
+            }
+            other => Err(OpError::Fatal(format!("unexpected job state {other:?}"))),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("dispatcher({})", self.partition)
+    }
+}
+
+/// Test/bench executor: fails transiently with probability `rate` before
+/// delegating to [`LocalExecutor`]. Counts attempts.
+pub struct FlakyExecutor {
+    rate: f64,
+    rng: Mutex<Rng>,
+    /// Total execute calls.
+    pub attempts: AtomicU64,
+    /// Calls that failed transiently.
+    pub injected: AtomicU64,
+}
+
+impl FlakyExecutor {
+    /// Fail with probability `rate` (deterministic from `seed`).
+    pub fn new(rate: f64, seed: u64) -> Self {
+        FlakyExecutor {
+            rate,
+            rng: Mutex::new(Rng::new(seed)),
+            attempts: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Executor for FlakyExecutor {
+    fn execute(&self, tpl: &ContainerTemplate, ctx: &mut OpCtx) -> Result<(), OpError> {
+        self.attempts.fetch_add(1, Ordering::Relaxed);
+        if self.rng.lock().unwrap().chance(self.rate) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return Err(OpError::Transient("injected executor failure".into()));
+        }
+        LocalExecutor.execute(tpl, ctx)
+    }
+
+    fn describe(&self) -> String {
+        format!("flaky({})", self.rate)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{FnOp, ParamType, Signature};
+    use crate::hpc::PartitionSpec;
+    use crate::storage::MemStorage;
+    use std::time::Duration;
+
+    fn doubler() -> ContainerTemplate {
+        ContainerTemplate::new(
+            "double",
+            Arc::new(FnOp::new(
+                Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+                |ctx| {
+                    let x = ctx.get_int("x")?;
+                    ctx.set("y", x * 2);
+                    Ok(())
+                },
+            )),
+        )
+    }
+
+    fn ctx_with_x(x: i64) -> OpCtx {
+        let mut c = OpCtx::bare(Arc::new(MemStorage::new()));
+        c.inputs.insert("x".into(), Value::Int(x));
+        c
+    }
+
+    #[test]
+    fn local_executor_runs_op() {
+        let mut ctx = ctx_with_x(4);
+        LocalExecutor.execute(&doubler(), &mut ctx).unwrap();
+        assert_eq!(ctx.outputs["y"], Value::Int(8));
+    }
+
+    #[test]
+    fn dispatcher_executor_roundtrips_outputs() {
+        let sched = HpcScheduler::new(vec![PartitionSpec::new("cpu", 2, Duration::from_secs(5))]);
+        let ex = DispatcherExecutor::new(sched, "cpu");
+        let mut ctx = ctx_with_x(21);
+        ex.execute(&doubler(), &mut ctx).unwrap();
+        assert_eq!(ctx.outputs["y"], Value::Int(42));
+    }
+
+    #[test]
+    fn dispatcher_executor_propagates_fatal() {
+        let sched = HpcScheduler::new(vec![PartitionSpec::new("cpu", 1, Duration::from_secs(5))]);
+        let ex = DispatcherExecutor::new(sched, "cpu");
+        let tpl = ContainerTemplate::new(
+            "boom",
+            Arc::new(FnOp::new(Signature::new(), |_| Err(OpError::Fatal("nope".into())))),
+        );
+        let mut ctx = OpCtx::bare(Arc::new(MemStorage::new()));
+        let err = ex.execute(&tpl, &mut ctx).unwrap_err();
+        assert!(!err.is_transient());
+        assert_eq!(err.message(), "nope");
+    }
+
+    #[test]
+    fn dispatcher_executor_maps_walltime_to_transient() {
+        let sched =
+            HpcScheduler::new(vec![PartitionSpec::new("tiny", 1, Duration::from_millis(20))]);
+        let ex = DispatcherExecutor::new(sched, "tiny");
+        let tpl = ContainerTemplate::new(
+            "slow",
+            Arc::new(FnOp::new(Signature::new(), |_| {
+                std::thread::sleep(Duration::from_millis(80));
+                Ok(())
+            })),
+        );
+        let mut ctx = OpCtx::bare(Arc::new(MemStorage::new()));
+        let err = ex.execute(&tpl, &mut ctx).unwrap_err();
+        assert!(err.is_transient());
+        assert!(err.message().contains("walltime"));
+    }
+
+    #[test]
+    fn dispatcher_executor_unknown_partition() {
+        let sched = HpcScheduler::new(vec![PartitionSpec::new("cpu", 1, Duration::from_secs(5))]);
+        let ex = DispatcherExecutor::new(sched, "gone");
+        let mut ctx = ctx_with_x(1);
+        assert!(ex.execute(&doubler(), &mut ctx).is_err());
+    }
+
+    #[test]
+    fn flaky_executor_injects() {
+        let ex = FlakyExecutor::new(1.0, 1);
+        let mut ctx = ctx_with_x(1);
+        let err = ex.execute(&doubler(), &mut ctx).unwrap_err();
+        assert!(err.is_transient());
+        assert_eq!(ex.injected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn flaky_executor_zero_rate_is_local() {
+        let ex = FlakyExecutor::new(0.0, 1);
+        let mut ctx = ctx_with_x(3);
+        ex.execute(&doubler(), &mut ctx).unwrap();
+        assert_eq!(ctx.outputs["y"], Value::Int(6));
+    }
+}

@@ -1,0 +1,372 @@
+//! Slurm-like HPC scheduler simulator.
+//!
+//! Dflow reaches HPC resources through DPDispatcher (generate a
+//! Slurm/PBS/LSF script, submit, poll until done — paper §2.6). This module
+//! is the from-scratch substitute: named partitions with node/CPU capacity
+//! and walltime limits, a FIFO queue per partition, and job states matching
+//! a batch scheduler's (`Queued → Running → Completed/Failed/TimedOut`).
+//!
+//! Jobs carry a closure (the "job script"); walltime is enforced for real —
+//! a job that overruns is marked `TimedOut` and its result discarded, which
+//! upstream surfaces as a (possibly transient) step failure.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::next_id;
+
+/// Batch-scheduler job states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Completed,
+    Failed,
+    TimedOut,
+}
+
+/// One HPC partition (queue), paper §2.6.
+#[derive(Debug, Clone)]
+pub struct PartitionSpec {
+    pub name: String,
+    /// Concurrent job slots (≈ nodes).
+    pub slots: usize,
+    /// Maximum job walltime.
+    pub walltime: Duration,
+}
+
+impl PartitionSpec {
+    /// Convenience constructor.
+    pub fn new(name: impl Into<String>, slots: usize, walltime: Duration) -> Self {
+        PartitionSpec { name: name.into(), slots, walltime }
+    }
+}
+
+type JobFn = Box<dyn FnOnce() -> Result<Vec<u8>, String> + Send>;
+
+struct Job {
+    id: u64,
+    func: JobFn,
+}
+
+struct PartitionState {
+    spec: PartitionSpec,
+    queue: VecDeque<Job>,
+    running: usize,
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+    timed_out: u64,
+}
+
+struct SchedState {
+    partitions: BTreeMap<String, PartitionState>,
+    results: BTreeMap<u64, (JobState, Option<Vec<u8>>, String)>,
+    shutdown: bool,
+}
+
+/// The scheduler. Spawns one dispatcher thread per partition slot pool.
+pub struct HpcScheduler {
+    state: Arc<Mutex<SchedState>>,
+    wake: Arc<Condvar>,
+    done: Arc<Condvar>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    jobs_inflight: Arc<AtomicU64>,
+}
+
+impl HpcScheduler {
+    /// Create a scheduler with the given partitions; starts `slots` worker
+    /// threads per partition (jobs run for real, walltime enforced).
+    pub fn new(partitions: Vec<PartitionSpec>) -> Arc<Self> {
+        let state = Arc::new(Mutex::new(SchedState {
+            partitions: partitions
+                .iter()
+                .map(|p| {
+                    (
+                        p.name.clone(),
+                        PartitionState {
+                            spec: p.clone(),
+                            queue: VecDeque::new(),
+                            running: 0,
+                            submitted: 0,
+                            completed: 0,
+                            failed: 0,
+                            timed_out: 0,
+                        },
+                    )
+                })
+                .collect(),
+            results: BTreeMap::new(),
+            shutdown: false,
+        }));
+        let sched = Arc::new(HpcScheduler {
+            state,
+            wake: Arc::new(Condvar::new()),
+            done: Arc::new(Condvar::new()),
+            workers: Mutex::new(Vec::new()),
+            jobs_inflight: Arc::new(AtomicU64::new(0)),
+        });
+        // worker threads: each serves one slot of one partition
+        let mut workers = Vec::new();
+        for p in &partitions {
+            for slot in 0..p.slots {
+                let st = sched.state.clone();
+                let wake = sched.wake.clone();
+                let done = sched.done.clone();
+                let part = p.name.clone();
+                let inflight = sched.jobs_inflight.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("hpc-{part}-{slot}"))
+                        .spawn(move || loop {
+                            let (job, walltime) = {
+                                let mut s = st.lock().unwrap();
+                                loop {
+                                    if s.shutdown {
+                                        return;
+                                    }
+                                    let ps = s.partitions.get_mut(&part).unwrap();
+                                    if let Some(job) = ps.queue.pop_front() {
+                                        ps.running += 1;
+                                        let wt = ps.spec.walltime;
+                                        break (job, wt);
+                                    }
+                                    s = wake.wait(s).unwrap();
+                                }
+                            };
+                            let started = Instant::now();
+                            let result = (job.func)();
+                            let elapsed = started.elapsed();
+                            let mut s = st.lock().unwrap();
+                            let ps = s.partitions.get_mut(&part).unwrap();
+                            ps.running -= 1;
+                            let (jstate, data, msg) = if elapsed > walltime {
+                                ps.timed_out += 1;
+                                (JobState::TimedOut, None, format!("walltime exceeded ({elapsed:?})"))
+                            } else {
+                                match result {
+                                    Ok(d) => {
+                                        ps.completed += 1;
+                                        (JobState::Completed, Some(d), String::new())
+                                    }
+                                    Err(e) => {
+                                        ps.failed += 1;
+                                        (JobState::Failed, None, e)
+                                    }
+                                }
+                            };
+                            s.results.insert(job.id, (jstate, data, msg));
+                            inflight.fetch_sub(1, Ordering::Relaxed);
+                            drop(s);
+                            done.notify_all();
+                        })
+                        .expect("spawn hpc worker"),
+                );
+            }
+        }
+        *sched.workers.lock().unwrap() = workers;
+        sched
+    }
+
+    /// Submit a job script to a partition; returns the job id (like `sbatch`).
+    pub fn submit(
+        &self,
+        partition: &str,
+        func: impl FnOnce() -> Result<Vec<u8>, String> + Send + 'static,
+    ) -> Result<u64, String> {
+        let id = next_id();
+        let mut s = self.state.lock().unwrap();
+        let ps = s
+            .partitions
+            .get_mut(partition)
+            .ok_or_else(|| format!("unknown partition '{partition}'"))?;
+        ps.submitted += 1;
+        ps.queue.push_back(Job { id, func: Box::new(func) });
+        self.jobs_inflight.fetch_add(1, Ordering::Relaxed);
+        drop(s);
+        self.wake.notify_all();
+        Ok(id)
+    }
+
+    /// Poll a job (like `squeue`/`sacct`): state only.
+    pub fn poll(&self, id: u64) -> JobState {
+        let s = self.state.lock().unwrap();
+        match s.results.get(&id) {
+            Some((st, _, _)) => *st,
+            None => {
+                // still queued or running; cheap approximation: if any
+                // partition queue holds the id it's Queued, else Running
+                for ps in s.partitions.values() {
+                    if ps.queue.iter().any(|j| j.id == id) {
+                        return JobState::Queued;
+                    }
+                }
+                JobState::Running
+            }
+        }
+    }
+
+    /// Block until the job reaches a terminal state; return its output.
+    pub fn wait(&self, id: u64) -> (JobState, Option<Vec<u8>>, String) {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some((st, data, msg)) = s.results.get(&id) {
+                return (*st, data.clone(), msg.clone());
+            }
+            s = self.done.wait(s).unwrap();
+        }
+    }
+
+    /// Per-partition counters: (submitted, completed, failed, timed_out).
+    pub fn partition_stats(&self, partition: &str) -> Option<(u64, u64, u64, u64)> {
+        let s = self.state.lock().unwrap();
+        s.partitions
+            .get(partition)
+            .map(|p| (p.submitted, p.completed, p.failed, p.timed_out))
+    }
+
+    /// Names of all partitions.
+    pub fn partitions(&self) -> Vec<String> {
+        self.state.lock().unwrap().partitions.keys().cloned().collect()
+    }
+
+    /// Jobs submitted but not yet terminal.
+    pub fn inflight(&self) -> u64 {
+        self.jobs_inflight.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for HpcScheduler {
+    fn drop(&mut self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.wake.notify_all();
+        for w in self.workers.lock().unwrap().drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> Arc<HpcScheduler> {
+        HpcScheduler::new(vec![
+            PartitionSpec::new("cpu", 2, Duration::from_secs(5)),
+            PartitionSpec::new("gpu", 1, Duration::from_millis(50)),
+        ])
+    }
+
+    #[test]
+    fn submit_and_wait_success() {
+        let s = sched();
+        let id = s.submit("cpu", || Ok(b"out".to_vec())).unwrap();
+        let (st, data, _) = s.wait(id);
+        assert_eq!(st, JobState::Completed);
+        assert_eq!(data.unwrap(), b"out");
+    }
+
+    #[test]
+    fn job_failure_propagates() {
+        let s = sched();
+        let id = s.submit("cpu", || Err("script exit 1".into())).unwrap();
+        let (st, data, msg) = s.wait(id);
+        assert_eq!(st, JobState::Failed);
+        assert!(data.is_none());
+        assert!(msg.contains("exit 1"));
+    }
+
+    #[test]
+    fn walltime_enforced() {
+        let s = sched();
+        let id = s
+            .submit("gpu", || {
+                std::thread::sleep(Duration::from_millis(120));
+                Ok(vec![])
+            })
+            .unwrap();
+        let (st, _, msg) = s.wait(id);
+        assert_eq!(st, JobState::TimedOut);
+        assert!(msg.contains("walltime"));
+    }
+
+    #[test]
+    fn unknown_partition_rejected() {
+        let s = sched();
+        assert!(s.submit("nope", || Ok(vec![])).is_err());
+    }
+
+    #[test]
+    fn queue_respects_slot_limit() {
+        let s = HpcScheduler::new(vec![PartitionSpec::new("p1", 1, Duration::from_secs(5))]);
+        let t0 = Instant::now();
+        let ids: Vec<u64> = (0..3)
+            .map(|_| {
+                s.submit("p1", || {
+                    std::thread::sleep(Duration::from_millis(40));
+                    Ok(vec![])
+                })
+                .unwrap()
+            })
+            .collect();
+        for id in ids {
+            assert_eq!(s.wait(id).0, JobState::Completed);
+        }
+        // 3 jobs x 40ms through 1 slot must be serialized
+        assert!(t0.elapsed() >= Duration::from_millis(110), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn parallel_slots_overlap() {
+        let s = HpcScheduler::new(vec![PartitionSpec::new("p2", 4, Duration::from_secs(5))]);
+        let t0 = Instant::now();
+        let ids: Vec<u64> = (0..4)
+            .map(|_| {
+                s.submit("p2", || {
+                    std::thread::sleep(Duration::from_millis(60));
+                    Ok(vec![])
+                })
+                .unwrap()
+            })
+            .collect();
+        for id in ids {
+            s.wait(id);
+        }
+        assert!(t0.elapsed() < Duration::from_millis(200), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn stats_count_outcomes() {
+        let s = sched();
+        let a = s.submit("cpu", || Ok(vec![])).unwrap();
+        let b = s.submit("cpu", || Err("x".into())).unwrap();
+        s.wait(a);
+        s.wait(b);
+        let (sub, ok, fail, to) = s.partition_stats("cpu").unwrap();
+        assert_eq!((sub, ok, fail, to), (2, 1, 1, 0));
+    }
+
+    #[test]
+    fn poll_reaches_terminal() {
+        let s = sched();
+        let id = s.submit("cpu", || Ok(vec![1])).unwrap();
+        s.wait(id);
+        assert_eq!(s.poll(id), JobState::Completed);
+    }
+
+    #[test]
+    fn many_jobs_all_complete() {
+        let s = HpcScheduler::new(vec![PartitionSpec::new("p", 8, Duration::from_secs(10))]);
+        let ids: Vec<u64> = (0..100)
+            .map(|i| s.submit("p", move || Ok(vec![i as u8])).unwrap())
+            .collect();
+        for (i, id) in ids.into_iter().enumerate() {
+            let (st, data, _) = s.wait(id);
+            assert_eq!(st, JobState::Completed);
+            assert_eq!(data.unwrap(), vec![i as u8]);
+        }
+        assert_eq!(s.inflight(), 0);
+    }
+}

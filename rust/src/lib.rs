@@ -1,0 +1,47 @@
+//! # dflow-rs
+//!
+//! A from-scratch reproduction of **Dflow** (Liu et al., 2024): a
+//! cloud-native-style workflow engine for AI-for-Science computing, built as
+//! the L3 coordinator of a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate provides:
+//!
+//! * [`core`] — the workflow language: OP templates, typed
+//!   parameters/artifacts, `Step`, `Steps`/`Dag` super-OPs, recursion,
+//!   conditions and `Slices` (map/reduce over parallel steps).
+//! * [`engine`] — the scheduler: an Argo-equivalent state machine with
+//!   retries, timeouts, `continue_on` fault-tolerance policies, and the
+//!   key/reuse restart mechanism (§2.4–2.5 of the paper).
+//! * [`cluster`] — a Kubernetes-like cluster simulator (typed nodes, pods,
+//!   bin-packing, virtual HPC nodes à la wlm-operator).
+//! * [`hpc`] — a Slurm-like partition/queue/job simulator reachable through
+//!   the `DispatcherExecutor` plugin (§2.6).
+//! * [`executor`] — the `Executor` plugin surface (§2.6).
+//! * [`storage`] — the 5-method `StorageClient` artifact-store plugin
+//!   surface (§2.8) with local, in-memory and latency-modelled backends.
+//! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt` produced by
+//!   the python compile path and executes them on the request path.
+//! * [`science`] — the AOT compute payloads (MD, NN-potential training,
+//!   EOS, docking) plus pure-rust reference implementations.
+//! * [`apps`] — the paper's §3 applications (FPOP, APEX, Rid-kit, DeePKS,
+//!   VSW, TESLA) as reusable workflow builders.
+//!
+//! Python runs only at build time (`make artifacts`); the engine and every
+//! example/bench in this crate are a self-contained Rust binary afterwards.
+
+pub mod apps;
+pub mod bench_util;
+pub mod check;
+pub mod cluster;
+pub mod core;
+pub mod engine;
+pub mod executor;
+pub mod hpc;
+pub mod jsonx;
+pub mod metrics;
+pub mod runtime;
+pub mod science;
+pub mod storage;
+pub mod util;
+
+// Re-exports of the most-used API surface (populated as modules land).

@@ -1,0 +1,284 @@
+//! Observability: metrics registry + workflow event trace.
+//!
+//! The paper emphasizes that Dflow is "highly observable" (web UI, CLI,
+//! status tracking). In library form that means: every engine action emits a
+//! [`Event`] into a bounded trace, and hot-path counters/timers live in a
+//! lock-free [`Registry`]. The CLI (`dflow get/watch`) and the benches read
+//! these; `timeline_json` exports a Gantt-style view per step.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::jsonx::Json;
+use crate::util::epoch_ms;
+
+/// A monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Nanosecond-resolution duration accumulator (sum + count → mean).
+#[derive(Default)]
+pub struct Timer {
+    total_ns: AtomicU64,
+    count: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Timer {
+    /// Record one observation.
+    pub fn observe(&self, d: Duration) {
+        let ns = d.as_nanos() as u64;
+        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean observation, or zero if empty.
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.total_ns.load(Ordering::Relaxed) / c)
+    }
+
+    /// Maximum observation.
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns.load(Ordering::Relaxed))
+    }
+
+    /// Total accumulated time.
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(self.total_ns.load(Ordering::Relaxed))
+    }
+}
+
+/// Engine-level metrics. One instance per [`crate::engine::Engine`].
+#[derive(Default)]
+pub struct Registry {
+    /// Steps that reached a terminal phase.
+    pub steps_succeeded: Counter,
+    pub steps_failed: Counter,
+    pub steps_skipped: Counter,
+    /// Steps whose outputs were reused from a previous run (§2.5).
+    pub steps_reused: Counter,
+    /// Retry attempts consumed (§2.4).
+    pub retries: Counter,
+    /// Steps killed by timeout (§2.4).
+    pub timeouts: Counter,
+    /// Pods that went through the cluster simulator.
+    pub pods_scheduled: Counter,
+    pub pods_rejected: Counter,
+    /// Engine dispatch latency (ready → running).
+    pub dispatch: Timer,
+    /// OP execution wall time.
+    pub op_exec: Timer,
+    /// PJRT execute calls on the request path.
+    pub pjrt_calls: Counter,
+    pub pjrt_time: Timer,
+}
+
+impl Registry {
+    /// Dump all metrics as JSON (for `dflow get` and EXPERIMENTS.md).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("steps_succeeded", Json::n(self.steps_succeeded.get() as f64)),
+            ("steps_failed", Json::n(self.steps_failed.get() as f64)),
+            ("steps_skipped", Json::n(self.steps_skipped.get() as f64)),
+            ("steps_reused", Json::n(self.steps_reused.get() as f64)),
+            ("retries", Json::n(self.retries.get() as f64)),
+            ("timeouts", Json::n(self.timeouts.get() as f64)),
+            ("pods_scheduled", Json::n(self.pods_scheduled.get() as f64)),
+            ("pods_rejected", Json::n(self.pods_rejected.get() as f64)),
+            ("dispatch_mean_us", Json::n(self.dispatch.mean().as_secs_f64() * 1e6)),
+            ("dispatch_max_us", Json::n(self.dispatch.max().as_secs_f64() * 1e6)),
+            ("op_exec_mean_ms", Json::n(self.op_exec.mean().as_secs_f64() * 1e3)),
+            ("pjrt_calls", Json::n(self.pjrt_calls.get() as f64)),
+            ("pjrt_mean_ms", Json::n(self.pjrt_time.mean().as_secs_f64() * 1e3)),
+        ])
+    }
+}
+
+/// What happened, when, to which step. The phase names mirror Argo's.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EventKind {
+    WorkflowStarted,
+    WorkflowSucceeded,
+    WorkflowFailed,
+    StepPending,
+    StepRunning,
+    StepSucceeded,
+    StepFailed,
+    StepSkipped,
+    StepReused,
+    StepRetrying,
+    StepTimedOut,
+    PodBound,
+    PodReleased,
+}
+
+/// One trace record.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub at_ms: u64,
+    pub kind: EventKind,
+    pub step: String,
+    pub detail: String,
+}
+
+/// Bounded, thread-safe event trace.
+pub struct Trace {
+    events: Mutex<Vec<Event>>,
+    cap: usize,
+}
+
+impl Trace {
+    /// Create a trace holding at most `cap` events (older dropped).
+    pub fn new(cap: usize) -> Self {
+        Trace { events: Mutex::new(Vec::new()), cap }
+    }
+
+    /// Append an event. `cap == 0` disables tracing entirely (hot-path
+    /// fast-out: no lock, no allocation).
+    pub fn push(&self, kind: EventKind, step: &str, detail: impl Into<String>) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut ev = self.events.lock().unwrap();
+        if ev.len() == self.cap {
+            ev.remove(0);
+        }
+        ev.push(Event { at_ms: epoch_ms(), kind, step: step.to_string(), detail: detail.into() });
+    }
+
+    /// Snapshot of current events.
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Number of stored events.
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    /// True when no events are stored.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Export a Gantt-style timeline: for each step, start/end/phase.
+    pub fn timeline_json(&self) -> Json {
+        let ev = self.events.lock().unwrap();
+        let mut spans: BTreeMap<String, (u64, u64, String)> = BTreeMap::new();
+        for e in ev.iter() {
+            match e.kind {
+                EventKind::StepRunning => {
+                    spans.entry(e.step.clone()).or_insert((e.at_ms, e.at_ms, "Running".into())).0 =
+                        e.at_ms;
+                }
+                EventKind::StepSucceeded | EventKind::StepFailed | EventKind::StepSkipped => {
+                    let s = spans.entry(e.step.clone()).or_insert((e.at_ms, e.at_ms, String::new()));
+                    s.1 = e.at_ms;
+                    s.2 = format!("{:?}", e.kind);
+                }
+                _ => {}
+            }
+        }
+        Json::Arr(
+            spans
+                .into_iter()
+                .map(|(step, (start, end, phase))| {
+                    Json::obj(vec![
+                        ("step", Json::s(step)),
+                        ("start_ms", Json::n(start as f64)),
+                        ("end_ms", Json::n(end as f64)),
+                        ("phase", Json::s(phase)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Trace::new(100_000)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn timer_mean_and_max() {
+        let t = Timer::default();
+        t.observe(Duration::from_millis(10));
+        t.observe(Duration::from_millis(30));
+        assert_eq!(t.count(), 2);
+        assert_eq!(t.mean(), Duration::from_millis(20));
+        assert_eq!(t.max(), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn trace_bounded() {
+        let tr = Trace::new(3);
+        for i in 0..5 {
+            tr.push(EventKind::StepRunning, &format!("s{i}"), "");
+        }
+        let ev = tr.snapshot();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].step, "s2");
+    }
+
+    #[test]
+    fn timeline_builds_spans() {
+        let tr = Trace::default();
+        tr.push(EventKind::StepRunning, "a", "");
+        tr.push(EventKind::StepSucceeded, "a", "");
+        let tl = tr.timeline_json();
+        let arr = tl.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("phase").unwrap().as_str().unwrap(), "StepSucceeded");
+    }
+
+    #[test]
+    fn registry_json_has_keys() {
+        let r = Registry::default();
+        r.steps_succeeded.add(2);
+        let j = r.to_json();
+        assert_eq!(j.get("steps_succeeded").unwrap().as_i64(), Some(2));
+    }
+}

@@ -1,0 +1,374 @@
+//! PJRT runtime: the request-path bridge to the AOT-compiled compute.
+//!
+//! `make artifacts` (python, build-time only) lowers every L2 entry point to
+//! HLO **text** under `artifacts/`; this module loads them with
+//! `HloModuleProto::from_text_file`, compiles each once per worker on a
+//! `PjRtClient::cpu()`, and exposes a typed `exec(name, inputs)` used by the
+//! science OPs on the hot path.
+//!
+//! Threading: the `xla` crate's client wrappers are `Rc`-based (`!Send`), so
+//! the runtime owns a small pool of **service threads**, each with its own
+//! PJRT client and executable cache; [`Runtime::exec`] is a `Send + Sync`
+//! handle that dispatches requests round-robin over the pool and waits for
+//! the reply. This both satisfies the borrow rules and gives genuine
+//! parallel execution across workers (profiled in EXPERIMENTS.md §Perf).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex, OnceLock};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonx::Json;
+
+/// Fixed shapes shared with `python/compile/model.py` (asserted against
+/// `artifacts/manifest.json` at load).
+pub mod shapes {
+    /// Atoms per configuration.
+    pub const N_ATOMS: usize = 64;
+    /// Descriptor features per atom.
+    pub const N_DESC: usize = 16;
+    /// Training batch (configurations).
+    pub const BATCH: usize = 8;
+    /// EOS volume-scan points.
+    pub const EOS_POINTS: usize = 7;
+    /// Molecules per docking shard.
+    pub const DOCK_BATCH: usize = 256;
+    /// Features per molecule.
+    pub const DOCK_FEATS: usize = 8;
+    /// Flat NN parameter vector length.
+    pub const PARAM_DIM: usize = 16 * 64 + 64 + 64 * 64 + 64 + 64 + 1;
+    /// NN ensemble size shipped in `params_init.bin`.
+    pub const ENSEMBLE: usize = 4;
+    /// MD integrator substeps per `md_step` call.
+    pub const MD_SUBSTEPS: usize = 20;
+}
+
+/// A host-side f32 tensor (row-major) moving in/out of PJRT.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Construct, checking element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    /// Zero-filled tensor.
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// First (or only) element.
+    pub fn item(&self) -> f32 {
+        self.data[0]
+    }
+
+    /// Serialize as raw little-endian f32 bytes prefixed by a shape header
+    /// (u32 rank, then u64 dims) — the artifact wire format for tensors.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 + self.shape.len() * 8 + self.data.len() * 4);
+        out.extend_from_slice(&(self.shape.len() as u32).to_le_bytes());
+        for d in &self.shape {
+            out.extend_from_slice(&(*d as u64).to_le_bytes());
+        }
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Inverse of [`Tensor::to_bytes`].
+    pub fn from_bytes(b: &[u8]) -> Result<Tensor> {
+        if b.len() < 4 {
+            bail!("tensor blob too short");
+        }
+        let rank = u32::from_le_bytes(b[..4].try_into().unwrap()) as usize;
+        let mut off = 4;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            if off + 8 > b.len() {
+                bail!("tensor blob truncated in shape");
+            }
+            shape.push(u64::from_le_bytes(b[off..off + 8].try_into().unwrap()) as usize);
+            off += 8;
+        }
+        let n: usize = shape.iter().product();
+        if b.len() != off + n * 4 {
+            bail!("tensor blob wrong size: {} vs {}", b.len(), off + n * 4);
+        }
+        let data = b[off..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Tensor { shape, data })
+    }
+}
+
+struct Request {
+    name: String,
+    inputs: Vec<Tensor>,
+    reply: mpsc::Sender<Result<Vec<Tensor>>>,
+}
+
+/// One PJRT service thread: owns a client + executable cache.
+fn worker_main(dir: PathBuf, rx: mpsc::Receiver<Request>, compile_ms: Arc<Mutex<BTreeMap<String, f64>>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // fail every request with the construction error
+            while let Ok(req) = rx.recv() {
+                req.reply.send(Err(anyhow!("PJRT client failed to start: {e:?}"))).ok();
+            }
+            return;
+        }
+    };
+    let mut cache: BTreeMap<String, xla::PjRtLoadedExecutable> = BTreeMap::new();
+    while let Ok(req) = rx.recv() {
+        let result = (|| -> Result<Vec<Tensor>> {
+            if !cache.contains_key(&req.name) {
+                let path = dir.join(format!("{}.hlo.txt", req.name));
+                let t0 = Instant::now();
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling '{}': {e:?}", req.name))?;
+                compile_ms
+                    .lock()
+                    .unwrap()
+                    .insert(req.name.clone(), t0.elapsed().as_secs_f64() * 1e3);
+                cache.insert(req.name.clone(), exe);
+            }
+            let exe = cache.get(&req.name).unwrap();
+            let lits: Vec<xla::Literal> = req
+                .inputs
+                .iter()
+                .map(|t| {
+                    let lit = xla::Literal::vec1(&t.data);
+                    let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
+                    lit.reshape(&dims).map_err(|e| anyhow!("{e:?}"))
+                })
+                .collect::<Result<_>>()?;
+            let result = exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| anyhow!("executing '{}': {e:?}", req.name))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            // AOT path lowers with return_tuple=True: always a tuple
+            let parts = result.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+            parts
+                .into_iter()
+                .map(|lit| {
+                    let shape = lit.array_shape().map_err(|e| anyhow!("{e:?}"))?;
+                    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+                    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+                    Tensor::new(dims, data)
+                })
+                .collect()
+        })();
+        req.reply.send(result).ok();
+    }
+}
+
+/// The runtime handle: `Send + Sync`, dispatches to the service pool.
+pub struct Runtime {
+    dir: PathBuf,
+    senders: Vec<Mutex<mpsc::Sender<Request>>>,
+    next: AtomicUsize,
+    compile_ms: Arc<Mutex<BTreeMap<String, f64>>>,
+    params_ensemble: Vec<Vec<f32>>,
+}
+
+static GLOBAL: OnceLock<Option<Arc<Runtime>>> = OnceLock::new();
+
+impl Runtime {
+    /// Open the artifact directory, verify the manifest, load the parameter
+    /// ensemble, and start the service pool (size from `DFLOW_RT_WORKERS`,
+    /// default 2). Compilation is lazy, per worker, per entry point.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        // floor of 2 so host-side marshaling overlaps execution even on
+        // single-core testbeds; cap of 8 bounds per-worker compile cost
+        let default_workers = std::thread::available_parallelism()
+            .map(|n| n.get().clamp(2, 8))
+            .unwrap_or(2);
+        let workers = std::env::var("DFLOW_RT_WORKERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default_workers)
+            .max(1);
+        Runtime::open_with_workers(dir, workers)
+    }
+
+    /// Like [`Runtime::open`] with an explicit pool size.
+    pub fn open_with_workers(dir: impl AsRef<Path>, workers: usize) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let manifest = Json::parse(
+            &std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?,
+        )?;
+        // strict shape agreement between python and rust
+        let expect = [
+            ("n_atoms", shapes::N_ATOMS),
+            ("n_desc", shapes::N_DESC),
+            ("batch", shapes::BATCH),
+            ("eos_points", shapes::EOS_POINTS),
+            ("dock_batch", shapes::DOCK_BATCH),
+            ("dock_feats", shapes::DOCK_FEATS),
+            ("param_dim", shapes::PARAM_DIM),
+            ("ensemble", shapes::ENSEMBLE),
+            ("md_substeps", shapes::MD_SUBSTEPS),
+        ];
+        for (key, want) in expect {
+            let got = manifest
+                .get(key)
+                .and_then(Json::as_i64)
+                .ok_or_else(|| anyhow!("manifest missing '{key}'"))?;
+            if got as usize != want {
+                bail!("manifest {key}={got} but rust expects {want}; re-run `make artifacts`");
+            }
+        }
+        let blob = std::fs::read(dir.join("params_init.bin"))?;
+        let want = shapes::ENSEMBLE * shapes::PARAM_DIM * 4;
+        if blob.len() != want {
+            bail!("params_init.bin has {} bytes, want {want}", blob.len());
+        }
+        let params_ensemble = blob
+            .chunks_exact(shapes::PARAM_DIM * 4)
+            .map(|m| {
+                m.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            })
+            .collect();
+
+        let compile_ms = Arc::new(Mutex::new(BTreeMap::new()));
+        let mut senders = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = mpsc::channel::<Request>();
+            let d = dir.clone();
+            let cms = compile_ms.clone();
+            std::thread::Builder::new()
+                .name(format!("pjrt-{i}"))
+                .spawn(move || worker_main(d, rx, cms))
+                .expect("spawn pjrt worker");
+            senders.push(Mutex::new(tx));
+        }
+        Ok(Runtime { dir, senders, next: AtomicUsize::new(0), compile_ms, params_ensemble })
+    }
+
+    /// Process-wide shared runtime for the default `artifacts/` directory
+    /// (override with `DFLOW_ARTIFACTS`); `None` when artifacts are absent
+    /// so artifact-less tests degrade gracefully.
+    pub fn global() -> Option<Arc<Runtime>> {
+        GLOBAL
+            .get_or_init(|| {
+                let dir =
+                    std::env::var("DFLOW_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+                Runtime::open(&dir).ok().map(Arc::new)
+            })
+            .clone()
+    }
+
+    /// Initial NN parameters for ensemble member `i`.
+    pub fn initial_params(&self, i: usize) -> &[f32] {
+        &self.params_ensemble[i % self.params_ensemble.len()]
+    }
+
+    /// Execute an artifact by name with host tensors; returns the tuple of
+    /// outputs as host tensors. Thread-safe; requests fan out over the pool.
+    pub fn exec(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.senders.len();
+        self.senders[i]
+            .lock()
+            .unwrap()
+            .send(Request { name: name.to_string(), inputs: inputs.to_vec(), reply: reply_tx })
+            .map_err(|_| anyhow!("runtime worker {i} is gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("runtime worker {i} dropped the request"))?
+    }
+
+    /// Artifact names available on disk.
+    pub fn available(&self) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.flatten()
+                    .filter_map(|e| {
+                        e.file_name()
+                            .to_string_lossy()
+                            .strip_suffix(".hlo.txt")
+                            .map(str::to_string)
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        names.sort();
+        names
+    }
+
+    /// (name, compile ms) pairs for everything compiled so far.
+    pub fn compile_times(&self) -> Vec<(String, f64)> {
+        self.compile_ms.lock().unwrap().clone().into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_check() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn tensor_bytes_roundtrip() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, -2.5, 3.25, 0.0]).unwrap();
+        let b = t.to_bytes();
+        assert_eq!(Tensor::from_bytes(&b).unwrap(), t);
+        // scalar
+        let s = Tensor::scalar(7.0);
+        assert_eq!(Tensor::from_bytes(&s.to_bytes()).unwrap(), s);
+    }
+
+    #[test]
+    fn tensor_from_bytes_rejects_garbage() {
+        assert!(Tensor::from_bytes(b"xx").is_err());
+        let t = Tensor::scalar(1.0);
+        let mut b = t.to_bytes();
+        b.pop();
+        assert!(Tensor::from_bytes(&b).is_err());
+    }
+
+    // Artifact-dependent tests live in rust/tests/ and skip when artifacts/
+    // is absent.
+}

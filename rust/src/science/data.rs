@@ -1,0 +1,200 @@
+//! Labeled-dataset representation shared by the labeling/training OPs.
+//!
+//! A dataset is a list of configurations with total energies and per-atom
+//! forces — exactly the training data a DP-GEN/TESLA loop accumulates. The
+//! wire format (artifact bytes) is a small length-prefixed concatenation of
+//! [`Tensor`] blobs.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Tensor;
+
+/// One labeled configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    /// Positions, shape `[n, 3]`.
+    pub x: Tensor,
+    /// Total potential energy.
+    pub energy: f32,
+    /// Forces, shape `[n, 3]`.
+    pub f: Tensor,
+}
+
+/// A labeled dataset.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Dataset {
+    pub frames: Vec<Frame>,
+}
+
+impl Dataset {
+    /// Number of frames.
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// True when the dataset holds no frames.
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    /// Append another dataset.
+    pub fn extend(&mut self, other: Dataset) {
+        self.frames.extend(other.frames);
+    }
+
+    /// Mean energy across frames.
+    pub fn mean_energy(&self) -> f64 {
+        if self.frames.is_empty() {
+            return 0.0;
+        }
+        self.frames.iter().map(|f| f.energy as f64).sum::<f64>() / self.frames.len() as f64
+    }
+
+    /// Serialize to artifact bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&(self.frames.len() as u64).to_le_bytes());
+        for fr in &self.frames {
+            let xb = fr.x.to_bytes();
+            let fb = fr.f.to_bytes();
+            out.extend_from_slice(&(xb.len() as u64).to_le_bytes());
+            out.extend_from_slice(&xb);
+            out.extend_from_slice(&fr.energy.to_le_bytes());
+            out.extend_from_slice(&(fb.len() as u64).to_le_bytes());
+            out.extend_from_slice(&fb);
+        }
+        out
+    }
+
+    /// Parse artifact bytes.
+    pub fn from_bytes(b: &[u8]) -> Result<Dataset> {
+        let take_u64 = |b: &[u8], off: &mut usize| -> Result<u64> {
+            if *off + 8 > b.len() {
+                bail!("dataset blob truncated");
+            }
+            let v = u64::from_le_bytes(b[*off..*off + 8].try_into().unwrap());
+            *off += 8;
+            Ok(v)
+        };
+        let mut off = 0usize;
+        let count = take_u64(b, &mut off)? as usize;
+        let mut frames = Vec::with_capacity(count);
+        for _ in 0..count {
+            let xl = take_u64(b, &mut off)? as usize;
+            if off + xl > b.len() {
+                bail!("dataset blob truncated in x");
+            }
+            let x = Tensor::from_bytes(&b[off..off + xl])?;
+            off += xl;
+            if off + 4 > b.len() {
+                bail!("dataset blob truncated in energy");
+            }
+            let energy = f32::from_le_bytes(b[off..off + 4].try_into().unwrap());
+            off += 4;
+            let fl = take_u64(b, &mut off)? as usize;
+            if off + fl > b.len() {
+                bail!("dataset blob truncated in f");
+            }
+            let f = Tensor::from_bytes(&b[off..off + fl])?;
+            off += fl;
+            frames.push(Frame { x, energy, f });
+        }
+        if off != b.len() {
+            bail!("dataset blob has {} trailing bytes", b.len() - off);
+        }
+        Ok(Dataset { frames })
+    }
+}
+
+/// Serialize a plain list of tensors (e.g. a trajectory).
+pub fn tensors_to_bytes(ts: &[Tensor]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(ts.len() as u64).to_le_bytes());
+    for t in ts {
+        let b = t.to_bytes();
+        out.extend_from_slice(&(b.len() as u64).to_le_bytes());
+        out.extend_from_slice(&b);
+    }
+    out
+}
+
+/// Inverse of [`tensors_to_bytes`].
+pub fn tensors_from_bytes(b: &[u8]) -> Result<Vec<Tensor>> {
+    if b.len() < 8 {
+        bail!("tensor list blob too short");
+    }
+    let count = u64::from_le_bytes(b[..8].try_into().unwrap()) as usize;
+    let mut off = 8usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        if off + 8 > b.len() {
+            bail!("tensor list truncated");
+        }
+        let l = u64::from_le_bytes(b[off..off + 8].try_into().unwrap()) as usize;
+        off += 8;
+        if off + l > b.len() {
+            bail!("tensor list truncated");
+        }
+        out.push(Tensor::from_bytes(&b[off..off + l])?);
+        off += l;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(seed: u64) -> Frame {
+        let x = crate::science::lj::lattice(8, 1.2, 0.05, seed);
+        let (e, f) = crate::science::lj::lj_energy_forces(&x);
+        Frame {
+            x: Tensor::new(vec![8, 3], x).unwrap(),
+            energy: e.iter().sum(),
+            f: Tensor::new(vec![8, 3], f).unwrap(),
+        }
+    }
+
+    #[test]
+    fn dataset_roundtrip() {
+        let ds = Dataset { frames: vec![frame(0), frame(1), frame(2)] };
+        let b = ds.to_bytes();
+        assert_eq!(Dataset::from_bytes(&b).unwrap(), ds);
+    }
+
+    #[test]
+    fn empty_dataset_roundtrip() {
+        let ds = Dataset::default();
+        assert_eq!(Dataset::from_bytes(&ds.to_bytes()).unwrap(), ds);
+        assert!(ds.is_empty());
+    }
+
+    #[test]
+    fn dataset_rejects_truncation() {
+        let ds = Dataset { frames: vec![frame(0)] };
+        let mut b = ds.to_bytes();
+        b.truncate(b.len() - 3);
+        assert!(Dataset::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn dataset_extend_and_stats() {
+        let mut a = Dataset { frames: vec![frame(0)] };
+        let b = Dataset { frames: vec![frame(1), frame(2)] };
+        a.extend(b);
+        assert_eq!(a.len(), 3);
+        assert!(a.mean_energy() < 0.0);
+    }
+
+    #[test]
+    fn tensor_list_roundtrip() {
+        let ts = vec![Tensor::scalar(1.0), Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap()];
+        let b = tensors_to_bytes(&ts);
+        assert_eq!(tensors_from_bytes(&b).unwrap(), ts);
+    }
+
+    #[test]
+    fn tensor_list_rejects_garbage() {
+        assert!(tensors_from_bytes(b"bad").is_err());
+    }
+}

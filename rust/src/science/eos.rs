@@ -1,0 +1,192 @@
+//! Equation-of-state fitting (APEX/FPOP property analysis).
+//!
+//! Fits E(V) with a cubic polynomial via least squares (normal equations +
+//! Gaussian elimination — no external linear algebra in the vendor set) and
+//! extracts the equilibrium volume, cohesive energy and bulk modulus:
+//! `B0 = V0 * d²E/dV²|V0`.
+
+/// Result of an EOS fit.
+#[derive(Debug, Clone, Copy)]
+pub struct EosFit {
+    /// Equilibrium volume (per configuration, same unit as the input).
+    pub v0: f64,
+    /// Energy at the minimum.
+    pub e0: f64,
+    /// Bulk modulus `V0 * E''(V0)`.
+    pub b0: f64,
+    /// RMS residual of the fit.
+    pub rms: f64,
+}
+
+/// Solve `A x = b` for a small dense system (Gaussian elimination with
+/// partial pivoting). Returns `None` for singular systems.
+pub fn solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let mut best = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[best][col].abs() {
+                best = r;
+            }
+        }
+        if a[best][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, best);
+        b.swap(col, best);
+        // eliminate
+        for r in col + 1..n {
+            let factor = a[r][col] / a[col][col];
+            for c in col..n {
+                a[r][c] -= factor * a[col][c];
+            }
+            b[r] -= factor * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for r in (0..n).rev() {
+        let mut s = b[r];
+        for c in r + 1..n {
+            s -= a[r][c] * x[c];
+        }
+        x[r] = s / a[r][r];
+    }
+    Some(x)
+}
+
+/// Least-squares polynomial fit of degree `deg`; returns coefficients
+/// `c[0] + c[1] x + ...`.
+pub fn polyfit(xs: &[f64], ys: &[f64], deg: usize) -> Option<Vec<f64>> {
+    let m = deg + 1;
+    let mut ata = vec![vec![0.0; m]; m];
+    let mut atb = vec![0.0; m];
+    for (&x, &y) in xs.iter().zip(ys) {
+        let mut pow = vec![1.0; m];
+        for i in 1..m {
+            pow[i] = pow[i - 1] * x;
+        }
+        for i in 0..m {
+            atb[i] += pow[i] * y;
+            for j in 0..m {
+                ata[i][j] += pow[i] * pow[j];
+            }
+        }
+    }
+    solve(&mut ata, &mut atb)
+}
+
+fn polyval(c: &[f64], x: f64) -> f64 {
+    c.iter().rev().fold(0.0, |acc, ci| acc * x + ci)
+}
+
+/// Fit E(V) and extract (V0, E0, B0). `vols` and `energies` must have equal
+/// length ≥ 4 and the minimum should be interior to the scan.
+pub fn fit_eos(vols: &[f64], energies: &[f64]) -> Option<EosFit> {
+    if vols.len() != energies.len() || vols.len() < 4 {
+        return None;
+    }
+    let c = polyfit(vols, energies, 3)?;
+    // E'(V) = c1 + 2 c2 V + 3 c3 V^2 = 0
+    let (c1, c2, c3) = (c[1], c[2], c[3]);
+    let v0 = if c3.abs() < 1e-12 {
+        if c2.abs() < 1e-12 {
+            return None;
+        }
+        -c1 / (2.0 * c2)
+    } else {
+        let disc = 4.0 * c2 * c2 - 12.0 * c3 * c1;
+        if disc < 0.0 {
+            return None;
+        }
+        let r1 = (-2.0 * c2 + disc.sqrt()) / (6.0 * c3);
+        let r2 = (-2.0 * c2 - disc.sqrt()) / (6.0 * c3);
+        // pick the root with positive curvature inside the scan range
+        let inside = |v: f64| v > vols.iter().cloned().fold(f64::MAX, f64::min) * 0.5
+            && v < vols.iter().cloned().fold(f64::MIN, f64::max) * 1.5;
+        let curv = |v: f64| 2.0 * c2 + 6.0 * c3 * v;
+        match (curv(r1) > 0.0 && inside(r1), curv(r2) > 0.0 && inside(r2)) {
+            (true, _) => r1,
+            (_, true) => r2,
+            _ => return None,
+        }
+    };
+    let e0 = polyval(&c, v0);
+    let b0 = v0 * (2.0 * c2 + 6.0 * c3 * v0);
+    let rms = {
+        let ss: f64 = vols
+            .iter()
+            .zip(energies)
+            .map(|(&v, &e)| {
+                let d = polyval(&c, v) - e;
+                d * d
+            })
+            .sum();
+        (ss / vols.len() as f64).sqrt()
+    };
+    Some(EosFit { v0, e0, b0, rms })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_identity() {
+        let mut a = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let mut b = vec![3.0, 4.0];
+        assert_eq!(solve(&mut a, &mut b).unwrap(), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn solve_rejects_singular() {
+        let mut a = vec![vec![1.0, 2.0], vec![2.0, 4.0]];
+        let mut b = vec![1.0, 2.0];
+        assert!(solve(&mut a, &mut b).is_none());
+    }
+
+    #[test]
+    fn polyfit_recovers_polynomial() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64 * 0.3).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 1.0 - 2.0 * x + 0.5 * x * x).collect();
+        let c = polyfit(&xs, &ys, 2).unwrap();
+        assert!((c[0] - 1.0).abs() < 1e-8);
+        assert!((c[1] + 2.0).abs() < 1e-8);
+        assert!((c[2] - 0.5).abs() < 1e-8);
+    }
+
+    #[test]
+    fn eos_fit_recovers_parabola_minimum() {
+        // E(V) = 2 + 0.1 (V - 50)^2  → V0=50, E0=2, B0 = 50 * 0.2 = 10
+        let vols: Vec<f64> = (40..=60).step_by(2).map(|v| v as f64).collect();
+        let es: Vec<f64> = vols.iter().map(|v| 2.0 + 0.1 * (v - 50.0) * (v - 50.0)).collect();
+        let fit = fit_eos(&vols, &es).unwrap();
+        assert!((fit.v0 - 50.0).abs() < 1e-6, "{fit:?}");
+        assert!((fit.e0 - 2.0).abs() < 1e-6);
+        assert!((fit.b0 - 10.0).abs() < 1e-5);
+        assert!(fit.rms < 1e-8);
+    }
+
+    #[test]
+    fn eos_fit_on_lj_volume_scan() {
+        // real LJ data: energy vs volume for a scaled cluster
+        let base = crate::science::lj::lattice(64, 1.2, 0.0, 0);
+        let scales: Vec<f64> = (0..9).map(|i| 0.84 + 0.04 * i as f64).collect();
+        let vols: Vec<f64> = scales.iter().map(|s| (1.2 * s).powi(3) * 64.0).collect();
+        let es: Vec<f64> = scales
+            .iter()
+            .map(|s| crate::science::lj::lj_total_energy(&crate::science::lj::scale_config(&base, *s)))
+            .collect();
+        let fit = fit_eos(&vols, &es).unwrap();
+        // minimum should be interior and bulk modulus positive
+        assert!(fit.v0 > vols[0] && fit.v0 < vols[8], "{fit:?}");
+        assert!(fit.b0 > 0.0);
+        assert!(fit.e0 < -100.0);
+    }
+
+    #[test]
+    fn eos_fit_rejects_bad_input() {
+        assert!(fit_eos(&[1.0, 2.0], &[1.0, 2.0]).is_none());
+        assert!(fit_eos(&[1.0, 2.0, 3.0, 4.0], &[1.0, 2.0, 3.0, 4.0, 5.0]).is_none());
+    }
+}

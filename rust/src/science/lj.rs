@@ -1,0 +1,200 @@
+//! Pure-rust Lennard-Jones reference + configuration generators.
+//!
+//! Mirrors `python/compile/kernels/pair_kernel.py` constant-for-constant
+//! (sigma/epsilon/cutoff/switching); `rust/tests/runtime_integration.rs`
+//! asserts the PJRT artifacts and this implementation agree to f32
+//! tolerance, which is what lets artifact-less unit tests and benches use
+//! this as a stand-in for the compiled kernels.
+
+/// LJ sigma (length unit).
+pub const SIGMA: f64 = 1.0;
+/// LJ epsilon (energy unit).
+pub const EPSILON: f64 = 1.0;
+/// Interaction cutoff.
+pub const R_CUT: f64 = 2.5;
+/// Switching turn-on radius.
+pub const R_ON: f64 = 2.0;
+
+/// C^1 smoothstep switching function in r^2 (identical to the kernel's).
+fn switch(r2: f64) -> (f64, f64) {
+    let (on2, cut2) = (R_ON * R_ON, R_CUT * R_CUT);
+    let t = ((cut2 - r2) / (cut2 - on2)).clamp(0.0, 1.0);
+    let s = t * t * (3.0 - 2.0 * t);
+    let ds_dt = if t > 0.0 && t < 1.0 { 6.0 * t * (1.0 - t) } else { 0.0 };
+    (s, ds_dt * (-1.0 / (cut2 - on2)))
+}
+
+/// Per-atom energies and forces of an LJ cluster. `x` is flat `[n*3]`.
+pub fn lj_energy_forces(x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let n = x.len() / 3;
+    let mut e = vec![0.0f32; n];
+    let mut f = vec![0.0f32; n * 3];
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let dx = (x[3 * i] - x[3 * j]) as f64;
+            let dy = (x[3 * i + 1] - x[3 * j + 1]) as f64;
+            let dz = (x[3 * i + 2] - x[3 * j + 2]) as f64;
+            let r2 = dx * dx + dy * dy + dz * dz;
+            if r2 >= R_CUT * R_CUT {
+                continue;
+            }
+            let inv_r2 = 1.0 / r2;
+            let s6 = (SIGMA * SIGMA * inv_r2).powi(3);
+            let s12 = s6 * s6;
+            let u_raw = 4.0 * EPSILON * (s12 - s6);
+            let du_raw = 4.0 * EPSILON * (-6.0 * s12 + 3.0 * s6) * inv_r2;
+            let (sw, dsw) = switch(r2);
+            let u = u_raw * sw;
+            let du = du_raw * sw + u_raw * dsw;
+            e[i] += (0.5 * u) as f32;
+            f[3 * i] += (-2.0 * du * dx) as f32;
+            f[3 * i + 1] += (-2.0 * du * dy) as f32;
+            f[3 * i + 2] += (-2.0 * du * dz) as f32;
+        }
+    }
+    (e, f)
+}
+
+/// Total LJ energy.
+pub fn lj_total_energy(x: &[f32]) -> f64 {
+    lj_energy_forces(x).0.iter().map(|v| *v as f64).sum()
+}
+
+/// Perturbed simple-cubic cluster of `n` atoms (must be a cube), spacing
+/// `a`, Gaussian jitter, centered at the origin. Flat `[n*3]`.
+pub fn lattice(n: usize, a: f64, jitter: f64, seed: u64) -> Vec<f32> {
+    let g = (n as f64).cbrt().round() as usize;
+    assert_eq!(g * g * g, n, "n={n} is not a cube");
+    let mut rng = crate::util::Rng::new(seed);
+    let mut out = Vec::with_capacity(n * 3);
+    let half = (g as f64 - 1.0) / 2.0;
+    for i in 0..g {
+        for j in 0..g {
+            for k in 0..g {
+                for (axis, idx) in [(i, 0), (j, 1), (k, 2)] {
+                    let _ = idx;
+                    out.push(((axis as f64 - half) * a + jitter * rng.normal()) as f32);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Uniformly rescale a configuration about the origin (volume scan).
+pub fn scale_config(x: &[f32], s: f64) -> Vec<f32> {
+    x.iter().map(|v| (*v as f64 * s) as f32).collect()
+}
+
+/// Max per-atom force deviation across an ensemble of force predictions —
+/// the "model deviation" criterion used by DP-GEN/TESLA-style screening.
+/// Each entry of `forces` is flat `[n*3]`.
+pub fn max_force_deviation(forces: &[Vec<f32>]) -> f64 {
+    if forces.is_empty() {
+        return 0.0;
+    }
+    let m = forces.len();
+    let n = forces[0].len() / 3;
+    let mut worst = 0.0f64;
+    for atom in 0..n {
+        // std of force vectors across models, as the norm of the
+        // component-wise std
+        let mut var = 0.0f64;
+        for c in 0..3 {
+            let vals: Vec<f64> = (0..m).map(|k| forces[k][3 * atom + c] as f64).collect();
+            let mean = vals.iter().sum::<f64>() / m as f64;
+            var += vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / m as f64;
+        }
+        worst = worst.max(var.sqrt());
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lattice_shape_and_determinism() {
+        let a = lattice(64, 1.2, 0.05, 7);
+        let b = lattice(64, 1.2, 0.05, 7);
+        assert_eq!(a.len(), 192);
+        assert_eq!(a, b);
+        assert_ne!(a, lattice(64, 1.2, 0.05, 8));
+    }
+
+    #[test]
+    fn lattice_is_centered() {
+        let x = lattice(27, 1.0, 0.0, 0);
+        let cx: f32 = x.iter().step_by(3).sum::<f32>() / 27.0;
+        assert!(cx.abs() < 1e-5);
+    }
+
+    #[test]
+    fn bound_cluster_has_negative_energy() {
+        let x = lattice(64, 1.2, 0.05, 0);
+        assert!(lj_total_energy(&x) < -50.0);
+    }
+
+    #[test]
+    fn forces_sum_to_zero() {
+        let x = lattice(64, 1.2, 0.08, 3);
+        let (_, f) = lj_energy_forces(&x);
+        for c in 0..3 {
+            let s: f64 = f.iter().skip(c).step_by(3).map(|v| *v as f64).sum();
+            assert!(s.abs() < 1e-3, "axis {c}: {s}");
+        }
+    }
+
+    #[test]
+    fn dimer_minimum_energy() {
+        // two atoms at the LJ minimum distance
+        let r0 = 2f64.powf(1.0 / 6.0);
+        let x = vec![0.0, 0.0, 0.0, r0 as f32, 0.0, 0.0];
+        let (e, f) = lj_energy_forces(&x);
+        let total: f64 = e.iter().map(|v| *v as f64).sum();
+        assert!((total + EPSILON).abs() < 1e-5, "{total}");
+        assert!(f.iter().all(|v| v.abs() < 1e-4));
+    }
+
+    #[test]
+    fn beyond_cutoff_no_interaction() {
+        let x = vec![0.0, 0.0, 0.0, 3.0, 0.0, 0.0];
+        assert_eq!(lj_total_energy(&x), 0.0);
+    }
+
+    #[test]
+    fn force_is_minus_numeric_gradient() {
+        let x = lattice(27, 1.15, 0.03, 5);
+        let (_, f) = lj_energy_forces(&x);
+        let h = 1e-3;
+        for idx in [0usize, 10, 40] {
+            let mut xp = x.clone();
+            xp[idx] += h;
+            let mut xm = x.clone();
+            xm[idx] -= h;
+            let num = -(lj_total_energy(&xp) - lj_total_energy(&xm)) / (2.0 * h as f64);
+            assert!(
+                (num - f[idx] as f64).abs() < 2e-2 * (1.0 + num.abs()),
+                "idx {idx}: numeric {num} vs analytic {}",
+                f[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn deviation_zero_for_identical_models() {
+        let f = vec![vec![1.0f32; 12]; 4];
+        assert_eq!(max_force_deviation(&f), 0.0);
+    }
+
+    #[test]
+    fn deviation_detects_disagreement() {
+        let mut f = vec![vec![0.0f32; 12]; 2];
+        f[1][0] = 2.0; // one model disagrees on one component
+        assert!(max_force_deviation(&f) > 0.5);
+    }
+}

@@ -1,0 +1,8 @@
+//! Science payloads: pure-rust reference math ([`lj`], [`eos`]), labeled
+//! datasets ([`data`]) and the executive OPs ([`ops`]) whose compute runs
+//! through the PJRT runtime.
+
+pub mod data;
+pub mod eos;
+pub mod lj;
+pub mod ops;

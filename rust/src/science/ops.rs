@@ -1,0 +1,805 @@
+//! Executive science OPs: the leaf operations the §3 application workflows
+//! schedule. Each one is a [`FnOp`]-style `Op` whose compute goes through
+//! the PJRT runtime (`artifacts/*.hlo.txt`) — Rust orchestrates, XLA
+//! executes the AOT-compiled JAX/Pallas payloads.
+//!
+//! Paper mapping: `label_*` ≙ first-principles labeling (VASP→LJ
+//! substitution), `md_explore` ≙ LAMMPS/GROMACS exploration, `train` ≙ DP
+//! model training, `dock_shard`/`rescore` ≙ Uni-Dock/Uni-GBSA stages of the
+//! VSW funnel.
+
+use std::sync::Arc;
+
+use crate::core::{FnOp, Op, OpError, ParamType, Signature, Value};
+use crate::runtime::{shapes, Tensor};
+use crate::science::data::{tensors_from_bytes, tensors_to_bytes, Dataset, Frame};
+use crate::science::{eos, lj};
+use crate::util::Rng;
+
+fn rt_err(e: anyhow::Error) -> OpError {
+    // PJRT failures are infrastructure failures: retryable
+    OpError::Transient(format!("runtime: {e}"))
+}
+
+fn config_tensor(x: Vec<f32>) -> Result<Tensor, OpError> {
+    Tensor::new(vec![shapes::N_ATOMS, 3], x).map_err(|e| OpError::Fatal(e.to_string()))
+}
+
+/// Generate `count` perturbed-lattice configurations as a list artifact
+/// `configs`; the seed makes workloads reproducible.
+pub fn gen_configs_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("count", ParamType::Int)
+            .in_param("seed", ParamType::Int)
+            .in_param_default("spacing", ParamType::Float, Value::Float(1.2))
+            .in_param_default("jitter", ParamType::Float, Value::Float(0.05))
+            .out_param("count", ParamType::Int)
+            .out_artifact("configs"),
+        |ctx| {
+            let count = ctx.get_int("count")? as usize;
+            let seed = ctx.get_int("seed")? as u64;
+            let spacing = ctx.get_float("spacing")?;
+            let jitter = ctx.get_float("jitter")?;
+            let items: Vec<Vec<u8>> = (0..count)
+                .map(|i| {
+                    let x = lj::lattice(shapes::N_ATOMS, spacing, jitter, seed ^ (i as u64) << 17);
+                    config_tensor(x).map(|t| t.to_bytes())
+                })
+                .collect::<Result<_, _>>()?;
+            ctx.write_artifact_slices("configs", &items)?;
+            ctx.set("count", count as i64);
+            Ok(())
+        },
+    ))
+}
+
+/// Explore from one starting configuration: chain `n_calls` executions of
+/// the `md_step` artifact (each = 20 velocity-Verlet substeps), collecting a
+/// trajectory snapshot per call.
+pub fn md_explore_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("n_calls", ParamType::Int)
+            .in_param("seed", ParamType::Int)
+            .in_param_default("temp", ParamType::Float, Value::Float(0.1))
+            // key-only tag (e.g. the iteration of a dynamic loop, §2.5)
+            .in_param_default("tag", ParamType::Any, Value::Null)
+            .in_artifact("config")
+            .out_param("final_pe", ParamType::Float)
+            .out_param("n_frames", ParamType::Int)
+            .out_artifact("trajectory"),
+        |ctx| {
+            let rt = ctx.runtime()?;
+            let n_calls = ctx.get_int("n_calls")? as usize;
+            let seed = ctx.get_int("seed")? as u64;
+            let temp = ctx.get_float("temp")?;
+            let x = Tensor::from_bytes(&ctx.read_artifact("config")?)
+                .map_err(|e| OpError::Fatal(e.to_string()))?;
+            // Maxwell-ish initial velocities at the requested temperature
+            let mut rng = Rng::new(seed);
+            let v: Vec<f32> =
+                (0..x.len()).map(|_| (rng.normal() * temp.sqrt()) as f32).collect();
+            let mut state = (x, Tensor::new(vec![shapes::N_ATOMS, 3], v).unwrap());
+            let mut traj = Vec::with_capacity(n_calls);
+            let mut pe = 0.0f32;
+            for _ in 0..n_calls {
+                ctx.checkpoint()?;
+                let out = rt.exec("md_step", &[state.0.clone(), state.1.clone()]).map_err(rt_err)?;
+                let [x2, v2, pe_t, _ke]: [Tensor; 4] = out
+                    .try_into()
+                    .map_err(|_| OpError::Fatal("md_step returned wrong arity".into()))?;
+                pe = pe_t.item();
+                traj.push(x2.clone());
+                state = (x2, v2);
+            }
+            ctx.set("final_pe", pe as f64);
+            ctx.set("n_frames", traj.len() as i64);
+            let blob = tensors_to_bytes(&traj);
+            ctx.write_artifact("trajectory", &blob)?;
+            Ok(())
+        },
+    ))
+}
+
+/// Label every configuration of a list artifact with LJ energy/forces via
+/// the `lj_ef` artifact (the "first-principles" surrogate), producing a
+/// [`Dataset`] artifact.
+pub fn label_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_artifact("configs")
+            .out_param("count", ParamType::Int)
+            .out_param("mean_energy", ParamType::Float)
+            .out_artifact("dataset"),
+        |ctx| {
+            let rt = ctx.runtime()?;
+            let blobs = ctx.read_artifact_slices("configs")?;
+            let mut ds = Dataset::default();
+            for b in &blobs {
+                ctx.checkpoint()?;
+                let x = Tensor::from_bytes(b).map_err(|e| OpError::Fatal(e.to_string()))?;
+                let out = rt.exec("lj_ef", &[x.clone()]).map_err(rt_err)?;
+                let e_tot = out[0].item();
+                let f = out[2].clone();
+                ds.frames.push(Frame { x, energy: e_tot, f });
+            }
+            ctx.set("count", ds.len() as i64);
+            ctx.set("mean_energy", ds.mean_energy());
+            ctx.write_artifact("dataset", &ds.to_bytes())?;
+            Ok(())
+        },
+    ))
+}
+
+/// Label a *single* configuration (the sliced labeling path used by RiD
+/// with parallelism 10 — one restrained simulation per conformation).
+pub fn label_one_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            // slice driver: index of the conformation being labeled
+            .in_param_default("conf_id", ParamType::Int, Value::Int(0))
+            .in_artifact("config")
+            .out_param("energy", ParamType::Float)
+            .out_artifact("labeled"),
+        |ctx| {
+            let rt = ctx.runtime()?;
+            let x = Tensor::from_bytes(&ctx.read_artifact("config")?)
+                .map_err(|e| OpError::Fatal(e.to_string()))?;
+            let out = rt.exec("lj_ef", &[x.clone()]).map_err(rt_err)?;
+            let energy = out[0].item();
+            let ds = Dataset { frames: vec![Frame { x, energy, f: out[2].clone() }] };
+            ctx.set("energy", energy as f64);
+            ctx.write_artifact("labeled", &ds.to_bytes())?;
+            Ok(())
+        },
+    ))
+}
+
+/// Merge dataset artifacts (list artifact of datasets → one dataset).
+pub fn merge_datasets_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_artifact("datasets")
+            .in_artifact_optional("base")
+            .out_param("count", ParamType::Int)
+            .out_artifact("dataset"),
+        |ctx| {
+            let mut ds = Dataset::default();
+            if ctx.input_artifacts.contains_key("base") {
+                let b = ctx.read_artifact("base")?;
+                ds.extend(Dataset::from_bytes(&b).map_err(|e| OpError::Fatal(e.to_string()))?);
+            }
+            for b in ctx.read_artifact_slices("datasets")? {
+                ds.extend(Dataset::from_bytes(&b).map_err(|e| OpError::Fatal(e.to_string()))?);
+            }
+            ctx.set("count", ds.len() as i64);
+            ctx.write_artifact("dataset", &ds.to_bytes())?;
+            Ok(())
+        },
+    ))
+}
+
+/// Train one NN-potential ensemble member for `steps` Adam steps on a
+/// dataset artifact via the `train_step` artifact. `member` seeds both the
+/// initial parameters (when no `init_params` artifact is given) and the
+/// batch sampler.
+pub fn train_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("steps", ParamType::Int)
+            .in_param("member", ParamType::Int)
+            // key-only tag (e.g. the iteration of a dynamic loop, §2.5)
+            .in_param_default("tag", ParamType::Any, Value::Null)
+            .in_artifact("dataset")
+            .in_artifact_optional("init_params")
+            .out_param("final_loss", ParamType::Float)
+            .out_param("losses", ParamType::List)
+            .out_artifact("params"),
+        |ctx| {
+            let rt = ctx.runtime()?;
+            let steps = ctx.get_int("steps")? as usize;
+            let member = ctx.get_int("member")? as usize;
+            let ds = Dataset::from_bytes(&ctx.read_artifact("dataset")?)
+                .map_err(|e| OpError::Fatal(e.to_string()))?;
+            if ds.is_empty() {
+                return Err(OpError::Fatal("training on an empty dataset".into()));
+            }
+            let mut theta = if ctx.input_artifacts.contains_key("init_params") {
+                Tensor::from_bytes(&ctx.read_artifact("init_params")?)
+                    .map_err(|e| OpError::Fatal(e.to_string()))?
+            } else {
+                Tensor::new(vec![shapes::PARAM_DIM], rt.initial_params(member).to_vec()).unwrap()
+            };
+            let mut m = Tensor::zeros(vec![shapes::PARAM_DIM]);
+            let mut v = Tensor::zeros(vec![shapes::PARAM_DIM]);
+            let mut t = Tensor::scalar(0.0);
+            let mut rng = Rng::new(0xBEEF ^ member as u64);
+            let mut losses = Vec::new();
+            let b = shapes::BATCH;
+            for step in 0..steps {
+                ctx.checkpoint()?;
+                // sample a batch (with replacement) from the dataset
+                let mut xs = Vec::with_capacity(b * shapes::N_ATOMS * 3);
+                let mut es = Vec::with_capacity(b);
+                let mut fs = Vec::with_capacity(b * shapes::N_ATOMS * 3);
+                for _ in 0..b {
+                    let fr = &ds.frames[rng.below(ds.frames.len() as u64) as usize];
+                    xs.extend_from_slice(&fr.x.data);
+                    es.push(fr.energy);
+                    fs.extend_from_slice(&fr.f.data);
+                }
+                let out = rt
+                    .exec(
+                        "train_step",
+                        &[
+                            theta,
+                            m,
+                            v,
+                            t,
+                            Tensor::new(vec![b, shapes::N_ATOMS, 3], xs).unwrap(),
+                            Tensor::new(vec![b], es).unwrap(),
+                            Tensor::new(vec![b, shapes::N_ATOMS, 3], fs).unwrap(),
+                        ],
+                    )
+                    .map_err(rt_err)?;
+                let [theta2, m2, v2, t2, loss]: [Tensor; 5] = out
+                    .try_into()
+                    .map_err(|_| OpError::Fatal("train_step returned wrong arity".into()))?;
+                theta = theta2;
+                m = m2;
+                v = v2;
+                t = t2;
+                if step % 10 == 0 || step + 1 == steps {
+                    losses.push(Value::Float(loss.item() as f64));
+                }
+                if step + 1 == steps {
+                    ctx.set("final_loss", loss.item() as f64);
+                }
+            }
+            ctx.set("losses", Value::List(losses));
+            ctx.write_artifact("params", &theta.to_bytes())?;
+            Ok(())
+        },
+    ))
+}
+
+/// Model-deviation screening (DP-GEN/TESLA "screen" step): evaluate every
+/// candidate configuration under each ensemble member's parameters (via
+/// `nn_ef`) and report the max per-atom force deviation per configuration.
+pub fn model_devi_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_artifact("params")
+            .in_artifact("configs")
+            .out_param("max_devis", ParamType::List)
+            .out_param("n_configs", ParamType::Int),
+        |ctx| {
+            let rt = ctx.runtime()?;
+            let params: Vec<Tensor> = ctx
+                .read_artifact_slices("params")?
+                .iter()
+                .map(|b| Tensor::from_bytes(b))
+                .collect::<Result<_, _>>()
+                .map_err(|e| OpError::Fatal(e.to_string()))?;
+            if params.is_empty() {
+                return Err(OpError::Fatal("no ensemble parameters given".into()));
+            }
+            let configs = ctx.read_artifact_slices("configs")?;
+            let mut devis = Vec::with_capacity(configs.len());
+            for b in &configs {
+                ctx.checkpoint()?;
+                let x = Tensor::from_bytes(b).map_err(|e| OpError::Fatal(e.to_string()))?;
+                let mut forces = Vec::with_capacity(params.len());
+                for p in &params {
+                    let out = rt.exec("nn_ef", &[p.clone(), x.clone()]).map_err(rt_err)?;
+                    forces.push(out[1].data.clone());
+                }
+                devis.push(Value::Float(lj::max_force_deviation(&forces)));
+            }
+            ctx.set("n_configs", configs.len() as i64);
+            ctx.set("max_devis", Value::List(devis));
+            Ok(())
+        },
+    ))
+}
+
+/// Select candidate configurations whose deviation falls in `[lo, hi)` —
+/// the DP-GEN trust-interval selection. Inputs: stacked candidate configs +
+/// their deviations; outputs the selected subset as a list artifact.
+pub fn select_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("max_devis", ParamType::List)
+            .in_param("lo", ParamType::Float)
+            .in_param("hi", ParamType::Float)
+            .in_param_default("cap", ParamType::Int, Value::Int(64))
+            .in_param_default("tag", ParamType::Any, Value::Null)
+            .in_artifact("configs")
+            .out_param("n_selected", ParamType::Int)
+            .out_param("max_devi", ParamType::Float)
+            .out_artifact("selected"),
+        |ctx| {
+            let devis: Vec<f64> = ctx
+                .get_list("max_devis")?
+                .iter()
+                .map(|v| v.as_float().unwrap_or(0.0))
+                .collect();
+            let lo = ctx.get_float("lo")?;
+            let hi = ctx.get_float("hi")?;
+            let cap = ctx.get_int("cap")? as usize;
+            let configs = ctx.read_artifact_slices("configs")?;
+            if devis.len() != configs.len() {
+                return Err(OpError::Fatal(format!(
+                    "{} deviations for {} configs",
+                    devis.len(),
+                    configs.len()
+                )));
+            }
+            let mut picked: Vec<(f64, &Vec<u8>)> = devis
+                .iter()
+                .zip(&configs)
+                .filter(|(d, _)| **d >= lo && **d < hi)
+                .map(|(d, c)| (*d, c))
+                .collect();
+            // prefer the most uncertain candidates when capped
+            picked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            picked.truncate(cap);
+            let items: Vec<Vec<u8>> = picked.iter().map(|(_, c)| (*c).clone()).collect();
+            ctx.set("n_selected", items.len() as i64);
+            ctx.set(
+                "max_devi",
+                devis.iter().cloned().fold(0.0f64, f64::max),
+            );
+            ctx.write_artifact_slices("selected", &items)?;
+            Ok(())
+        },
+    ))
+}
+
+/// Flatten trajectory artifacts (list artifact of tensor-list blobs) into a
+/// configs list artifact for screening.
+pub fn collect_trajectories_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_artifact("trajectories")
+            .out_param("n_configs", ParamType::Int)
+            .out_artifact("configs"),
+        |ctx| {
+            let mut items = Vec::new();
+            for blob in ctx.read_artifact_slices("trajectories")? {
+                for t in
+                    tensors_from_bytes(&blob).map_err(|e| OpError::Fatal(e.to_string()))?
+                {
+                    items.push(t.to_bytes());
+                }
+            }
+            ctx.set("n_configs", items.len() as i64);
+            ctx.write_artifact_slices("configs", &items)?;
+            Ok(())
+        },
+    ))
+}
+
+/// EOS volume scan of one configuration via the `eos_batch` artifact:
+/// evaluates `EOS_POINTS` uniformly-scaled copies in one call.
+pub fn eos_scan_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_param_default("scale_lo", ParamType::Float, Value::Float(0.85))
+            .in_param_default("scale_hi", ParamType::Float, Value::Float(1.15))
+            .in_artifact("config")
+            .out_param("vols", ParamType::List)
+            .out_param("energies", ParamType::List),
+        |ctx| {
+            let rt = ctx.runtime()?;
+            let lo = ctx.get_float("scale_lo")?;
+            let hi = ctx.get_float("scale_hi")?;
+            let x = Tensor::from_bytes(&ctx.read_artifact("config")?)
+                .map_err(|e| OpError::Fatal(e.to_string()))?;
+            let k = shapes::EOS_POINTS;
+            let mut stacked = Vec::with_capacity(k * x.len());
+            let mut vols = Vec::with_capacity(k);
+            for i in 0..k {
+                let s = lo + (hi - lo) * i as f64 / (k - 1) as f64;
+                stacked.extend(lj::scale_config(&x.data, s));
+                // volume proxy: s^3 x reference cell volume (a^3 per atom)
+                vols.push(Value::Float(s * s * s));
+            }
+            let xs = Tensor::new(vec![k, shapes::N_ATOMS, 3], stacked).unwrap();
+            let out = rt.exec("eos_batch", &[xs]).map_err(rt_err)?;
+            let energies: Vec<Value> =
+                out[0].data.iter().map(|e| Value::Float(*e as f64)).collect();
+            ctx.set("vols", Value::List(vols));
+            ctx.set("energies", Value::List(energies));
+            Ok(())
+        },
+    ))
+}
+
+/// Fit the EOS scan (pure rust post-processing): outputs V0/E0/B0.
+pub fn eos_fit_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("vols", ParamType::List)
+            .in_param("energies", ParamType::List)
+            .out_param("v0", ParamType::Float)
+            .out_param("e0", ParamType::Float)
+            .out_param("b0", ParamType::Float),
+        |ctx| {
+            let vols: Vec<f64> =
+                ctx.get_list("vols")?.iter().filter_map(Value::as_float).collect();
+            let es: Vec<f64> =
+                ctx.get_list("energies")?.iter().filter_map(Value::as_float).collect();
+            let fit = eos::fit_eos(&vols, &es)
+                .ok_or_else(|| OpError::Fatal("EOS fit failed (no interior minimum?)".into()))?;
+            ctx.set("v0", fit.v0);
+            ctx.set("e0", fit.e0);
+            ctx.set("b0", fit.b0);
+            Ok(())
+        },
+    ))
+}
+
+/// Structure relaxation by damped steepest descent on `lj_ef` forces (the
+/// APEX "relaxation" job type).
+pub fn relax_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_param_default("steps", ParamType::Int, Value::Int(200))
+            .in_param_default("lr", ParamType::Float, Value::Float(0.02))
+            .in_artifact("config")
+            .out_param("energy", ParamType::Float)
+            .out_param("fmax", ParamType::Float)
+            .out_artifact("config"),
+        |ctx| {
+            let rt = ctx.runtime()?;
+            let steps = ctx.get_int("steps")? as usize;
+            let lr = ctx.get_float("lr")? as f32;
+            let mut x = Tensor::from_bytes(&ctx.read_artifact("config")?)
+                .map_err(|e| OpError::Fatal(e.to_string()))?;
+            let mut energy = f32::MAX;
+            let mut fmax = 0.0f32;
+            let mut trust = lr; // adaptive per-component trust radius
+            for _ in 0..steps {
+                ctx.checkpoint()?;
+                let out = rt.exec("lj_ef", &[x.clone()]).map_err(rt_err)?;
+                let e_new = out[0].item();
+                let f = &out[2].data;
+                fmax = f.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+                if fmax < 1e-3 {
+                    energy = e_new;
+                    break;
+                }
+                // backtracking: energy went up -> shrink the trust radius
+                if e_new > energy {
+                    trust = (trust * 0.5).max(1e-4);
+                } else {
+                    trust = (trust * 1.1).min(lr);
+                }
+                energy = e_new;
+                for (xi, fi) in x.data.iter_mut().zip(f) {
+                    *xi += (lr * fi).clamp(-trust, trust);
+                }
+            }
+            ctx.set("energy", energy as f64);
+            ctx.set("fmax", fmax as f64);
+            ctx.write_artifact("config", &x.to_bytes())?;
+            Ok(())
+        },
+    ))
+}
+
+// -- VSW (virtual screening) -----------------------------------------------------
+
+/// Generate a synthetic molecule library as shards of `DOCK_BATCH` feature
+/// vectors (list artifact `library`).
+pub fn gen_library_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("n_shards", ParamType::Int)
+            .in_param("seed", ParamType::Int)
+            .out_param("n_shards", ParamType::Int)
+            .out_param("n_molecules", ParamType::Int)
+            .out_artifact("library"),
+        |ctx| {
+            let n_shards = ctx.get_int("n_shards")? as usize;
+            let seed = ctx.get_int("seed")? as u64;
+            let mut items = Vec::with_capacity(n_shards);
+            for s in 0..n_shards {
+                let mut rng = Rng::new(seed ^ (s as u64).wrapping_mul(0x9E3779B9));
+                let data: Vec<f32> = (0..shapes::DOCK_BATCH * shapes::DOCK_FEATS)
+                    .map(|_| rng.normal() as f32)
+                    .collect();
+                items.push(
+                    Tensor::new(vec![shapes::DOCK_BATCH, shapes::DOCK_FEATS], data)
+                        .unwrap()
+                        .to_bytes(),
+                );
+            }
+            ctx.set("n_shards", n_shards as i64);
+            ctx.set("n_molecules", (n_shards * shapes::DOCK_BATCH) as i64);
+            ctx.write_artifact_slices("library", &items)?;
+            Ok(())
+        },
+    ))
+}
+
+/// Dock one shard via the `dock_score` artifact. `mode` controls the number
+/// of scoring passes (Fast/Balance/Detail in Uni-Dock terms): higher modes
+/// average more perturbed evaluations = more compute, less noise.
+pub fn dock_shard_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_param_default("mode", ParamType::Str, Value::Str("fast".into()))
+            .in_param_default("noise_seed", ParamType::Int, Value::Int(0))
+            .in_artifact("shard")
+            .out_param("scores", ParamType::List)
+            .out_param("best", ParamType::Float),
+        |ctx| {
+            let rt = ctx.runtime()?;
+            let mode = ctx.get_str("mode")?.to_string();
+            let seed = ctx.get_int("noise_seed")? as u64;
+            let passes = match mode.as_str() {
+                "fast" => 1,
+                "balance" => 3,
+                "detail" => 8,
+                other => return Err(OpError::Fatal(format!("unknown docking mode '{other}'"))),
+            };
+            let shard = Tensor::from_bytes(&ctx.read_artifact("shard")?)
+                .map_err(|e| OpError::Fatal(e.to_string()))?;
+            let mut acc = vec![0.0f64; shapes::DOCK_BATCH];
+            let mut rng = Rng::new(seed);
+            for p in 0..passes {
+                ctx.checkpoint()?;
+                let feats = if p == 0 {
+                    shard.clone()
+                } else {
+                    // pose perturbation: jitter features slightly
+                    let data: Vec<f32> = shard
+                        .data
+                        .iter()
+                        .map(|v| v + (rng.normal() * 0.02) as f32)
+                        .collect();
+                    Tensor::new(shard.shape.clone(), data).unwrap()
+                };
+                let out = rt.exec("dock_score", &[feats]).map_err(rt_err)?;
+                for (a, s) in acc.iter_mut().zip(&out[0].data) {
+                    *a += *s as f64;
+                }
+            }
+            let scores: Vec<f64> = acc.into_iter().map(|a| a / passes as f64).collect();
+            let best = scores.iter().cloned().fold(f64::MAX, f64::min);
+            ctx.set("best", best);
+            ctx.set(
+                "scores",
+                Value::List(scores.into_iter().map(Value::Float).collect()),
+            );
+            Ok(())
+        },
+    ))
+}
+
+/// Funnel filter: given stacked per-shard score lists and the library,
+/// keep the global top-`k` molecules (lowest scores) and re-shard them into
+/// full `DOCK_BATCH`-sized shards for the next stage (paper Fig. 7: "the
+/// subsequent rounds use the top-ranked results from the previous round").
+pub fn topk_reshard_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("scores", ParamType::List)
+            .in_param("k", ParamType::Int)
+            .in_artifact("library")
+            .out_param("n_shards", ParamType::Int)
+            .out_param("cutoff", ParamType::Float)
+            .out_artifact("library"),
+        |ctx| {
+            let k = ctx.get_int("k")? as usize;
+            let shard_scores = ctx.get_list("scores")?.to_vec();
+            let shards = ctx.read_artifact_slices("library")?;
+            // gather (score, shard, idx); Null entries (failed shards under
+            // continue_on) are skipped — restart handles them separately
+            let mut all: Vec<(f64, usize, usize)> = Vec::new();
+            for (si, entry) in shard_scores.iter().enumerate() {
+                if let Value::List(scores) = entry {
+                    for (mi, s) in scores.iter().enumerate() {
+                        if let Some(f) = s.as_float() {
+                            all.push((f, si, mi));
+                        }
+                    }
+                }
+            }
+            all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            all.truncate(k);
+            let cutoff = all.last().map(|t| t.0).unwrap_or(f64::MAX);
+            // pull the selected molecules' features
+            let tensors: Vec<Tensor> = shards
+                .iter()
+                .map(|b| Tensor::from_bytes(b))
+                .collect::<Result<_, _>>()
+                .map_err(|e| OpError::Fatal(e.to_string()))?;
+            let d = shapes::DOCK_FEATS;
+            let mut feats: Vec<f32> = Vec::with_capacity(all.len() * d);
+            for (_, si, mi) in &all {
+                if *si >= tensors.len() {
+                    return Err(OpError::Fatal(format!("shard index {si} out of range")));
+                }
+                let t = &tensors[*si];
+                feats.extend_from_slice(&t.data[mi * d..(mi + 1) * d]);
+            }
+            // re-shard, padding the tail with copies of the last molecule so
+            // every shard is exactly DOCK_BATCH (fixed AOT shape)
+            let per = shapes::DOCK_BATCH;
+            let n_mol = feats.len() / d;
+            let n_shards = n_mol.div_ceil(per).max(1);
+            while feats.len() < n_shards * per * d {
+                let tail = feats[feats.len() - d..].to_vec();
+                feats.extend(tail);
+            }
+            let items: Vec<Vec<u8>> = (0..n_shards)
+                .map(|s| {
+                    Tensor::new(
+                        vec![per, d],
+                        feats[s * per * d..(s + 1) * per * d].to_vec(),
+                    )
+                    .unwrap()
+                    .to_bytes()
+                })
+                .collect();
+            ctx.set("n_shards", n_shards as i64);
+            ctx.set("cutoff", cutoff);
+            ctx.write_artifact_slices("library", &items)?;
+            Ok(())
+        },
+    ))
+}
+
+/// Interaction analysis (ProLIF stand-in): summary statistics over final
+/// scores — pure rust post-processing.
+pub fn analysis_op() -> Arc<dyn Op> {
+    Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("scores", ParamType::List)
+            .out_param("n", ParamType::Int)
+            .out_param("best", ParamType::Float)
+            .out_param("mean", ParamType::Float)
+            .out_param("p99_gap", ParamType::Float),
+        |ctx| {
+            let mut scores: Vec<f64> = Vec::new();
+            for entry in ctx.get_list("scores")? {
+                match entry {
+                    Value::List(inner) => {
+                        scores.extend(inner.iter().filter_map(Value::as_float))
+                    }
+                    v => {
+                        if let Some(f) = v.as_float() {
+                            scores.push(f);
+                        }
+                    }
+                }
+            }
+            if scores.is_empty() {
+                return Err(OpError::Fatal("no scores to analyze".into()));
+            }
+            scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let n = scores.len();
+            let mean = scores.iter().sum::<f64>() / n as f64;
+            let p99 = scores[(n as f64 * 0.01) as usize];
+            ctx.set("n", n as i64);
+            ctx.set("best", scores[0]);
+            ctx.set("mean", mean);
+            ctx.set("p99_gap", mean - p99);
+            Ok(())
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::OpCtx;
+    use crate::storage::MemStorage;
+
+    fn ctx() -> OpCtx {
+        OpCtx::bare(Arc::new(MemStorage::new()))
+    }
+
+    #[test]
+    fn gen_configs_writes_list_artifact() {
+        let op = gen_configs_op();
+        let mut c = ctx();
+        c.inputs.insert("count".into(), Value::Int(3));
+        c.inputs.insert("seed".into(), Value::Int(7));
+        c.inputs.insert("spacing".into(), Value::Float(1.2));
+        c.inputs.insert("jitter".into(), Value::Float(0.05));
+        op.execute(&mut c).unwrap();
+        assert_eq!(c.outputs["count"], Value::Int(3));
+        let art = c.output_artifacts["configs"].clone();
+        c.input_artifacts.insert("configs".into(), art);
+        let slices = c.read_artifact_slices("configs").unwrap();
+        assert_eq!(slices.len(), 3);
+        let t = Tensor::from_bytes(&slices[0]).unwrap();
+        assert_eq!(t.shape, vec![shapes::N_ATOMS, 3]);
+    }
+
+    #[test]
+    fn select_op_filters_by_interval() {
+        let op = select_op();
+        let mut c = ctx();
+        // three fake configs
+        let items: Vec<Vec<u8>> = (0..3)
+            .map(|s| config_tensor(lj::lattice(64, 1.2, 0.01, s)).unwrap().to_bytes())
+            .collect();
+        c.write_artifact_slices("configs", &items).unwrap();
+        let art = c.output_artifacts["configs"].clone();
+        c.input_artifacts.insert("configs".into(), art);
+        c.inputs.insert(
+            "max_devis".into(),
+            Value::floats([0.01, 0.5, 2.0]),
+        );
+        c.inputs.insert("lo".into(), Value::Float(0.1));
+        c.inputs.insert("hi".into(), Value::Float(1.0));
+        c.inputs.insert("cap".into(), Value::Int(10));
+        op.execute(&mut c).unwrap();
+        assert_eq!(c.outputs["n_selected"], Value::Int(1));
+        assert_eq!(c.outputs["max_devi"], Value::Float(2.0));
+    }
+
+    #[test]
+    fn select_op_rejects_mismatched_lengths() {
+        let op = select_op();
+        let mut c = ctx();
+        c.write_artifact_slices("configs", &[vec![0u8; 4]]).unwrap();
+        let art = c.output_artifacts["configs"].clone();
+        c.input_artifacts.insert("configs".into(), art);
+        c.inputs.insert("max_devis".into(), Value::floats([0.1, 0.2]));
+        c.inputs.insert("lo".into(), Value::Float(0.0));
+        c.inputs.insert("hi".into(), Value::Float(1.0));
+        c.inputs.insert("cap".into(), Value::Int(10));
+        assert!(op.execute(&mut c).is_err());
+    }
+
+    #[test]
+    fn eos_fit_op_pure_rust() {
+        let op = eos_fit_op();
+        let mut c = ctx();
+        let vols: Vec<f64> = (0..7).map(|i| 40.0 + 4.0 * i as f64).collect();
+        let es: Vec<f64> = vols.iter().map(|v| 1.0 + 0.05 * (v - 52.0) * (v - 52.0)).collect();
+        c.inputs.insert("vols".into(), Value::floats(vols));
+        c.inputs.insert("energies".into(), Value::floats(es));
+        op.execute(&mut c).unwrap();
+        let v0 = c.outputs["v0"].as_float().unwrap();
+        assert!((v0 - 52.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn analysis_op_stats() {
+        let op = analysis_op();
+        let mut c = ctx();
+        c.inputs.insert(
+            "scores".into(),
+            Value::List(vec![
+                Value::floats([-3.0, -1.0]),
+                Value::floats([0.0, 2.0]),
+                Value::Null, // failed shard
+            ]),
+        );
+        op.execute(&mut c).unwrap();
+        assert_eq!(c.outputs["n"], Value::Int(4));
+        assert_eq!(c.outputs["best"], Value::Float(-3.0));
+    }
+
+    #[test]
+    fn science_ops_without_runtime_fail_transparently() {
+        // runtime-dependent ops must error, not panic, when no runtime
+        let op = label_one_op();
+        let mut c = ctx();
+        c.storage.upload("k", &Tensor::zeros(vec![64, 3]).to_bytes()).unwrap();
+        c.input_artifacts.insert("config".into(), crate::core::ArtifactRef::new("k"));
+        let err = op.execute(&mut c).unwrap_err();
+        assert!(err.message().contains("runtime"));
+    }
+
+    // Runtime-dependent op tests live in rust/tests/ (skip when artifacts
+    // are absent).
+}

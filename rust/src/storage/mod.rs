@@ -1,0 +1,429 @@
+//! Artifact storage plugins (paper §2.8).
+//!
+//! Dflow's artifact store is "a MinIO server ... seamlessly replaceable with
+//! various artifact storages" through a `StorageClient` implementing exactly
+//! five methods: `upload`, `download`, `list`, `copy`, `get_md5`. This
+//! module reproduces that plugin surface:
+//!
+//! * [`MemStorage`] — in-memory object map (unit tests, debug mode).
+//! * [`LocalStorage`] — directory-backed store (the debug-mode default).
+//! * [`ObjectStoreSim`] — MinIO/S3 stand-in with injected latency and
+//!   transient-failure rate, for fault-tolerance benches.
+//!
+//! Directories are packed into a single object with [`pack_dir`] (a simple
+//! length-prefixed archive) so an artifact is always one object, as in S3.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::{md5_hex, Rng};
+
+/// Storage-layer failure. `Transient` failures are retried by the engine's
+/// fault-tolerance policy; `Fatal` ones are not.
+#[derive(Debug, Clone)]
+pub enum StorageError {
+    /// Key does not exist.
+    NotFound(String),
+    /// Retryable failure (network blip, throttling) — maps to
+    /// `dflow.TransientError` semantics.
+    Transient(String),
+    /// Non-retryable failure.
+    Fatal(String),
+}
+
+impl fmt::Display for StorageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StorageError::NotFound(k) => write!(f, "key not found: {k}"),
+            StorageError::Transient(m) => write!(f, "transient storage error: {m}"),
+            StorageError::Fatal(m) => write!(f, "storage error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for StorageError {}
+
+/// The paper's 5-method artifact storage plugin interface.
+pub trait StorageClient: Send + Sync {
+    /// Store `data` under `key` (overwrites).
+    fn upload(&self, key: &str, data: &[u8]) -> Result<(), StorageError>;
+    /// Fetch the object at `key`.
+    fn download(&self, key: &str) -> Result<Vec<u8>, StorageError>;
+    /// All keys starting with `prefix`, sorted.
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StorageError>;
+    /// Server-side copy.
+    fn copy(&self, src: &str, dst: &str) -> Result<(), StorageError>;
+    /// MD5 hex digest of the object (optional in the paper; we always
+    /// provide it).
+    fn get_md5(&self, key: &str) -> Result<String, StorageError> {
+        Ok(md5_hex(&self.download(key)?))
+    }
+}
+
+/// In-memory object store.
+#[derive(Default)]
+pub struct MemStorage {
+    objects: Mutex<BTreeMap<String, Arc<Vec<u8>>>>,
+}
+
+impl MemStorage {
+    /// Empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of stored objects.
+    pub fn len(&self) -> usize {
+        self.objects.lock().unwrap().len()
+    }
+
+    /// True when the store holds no objects.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl StorageClient for MemStorage {
+    fn upload(&self, key: &str, data: &[u8]) -> Result<(), StorageError> {
+        self.objects
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), Arc::new(data.to_vec()));
+        Ok(())
+    }
+
+    fn download(&self, key: &str) -> Result<Vec<u8>, StorageError> {
+        self.objects
+            .lock()
+            .unwrap()
+            .get(key)
+            .map(|v| v.as_ref().clone())
+            .ok_or_else(|| StorageError::NotFound(key.to_string()))
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StorageError> {
+        Ok(self
+            .objects
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect())
+    }
+
+    fn copy(&self, src: &str, dst: &str) -> Result<(), StorageError> {
+        let mut map = self.objects.lock().unwrap();
+        let v = map
+            .get(src)
+            .cloned()
+            .ok_or_else(|| StorageError::NotFound(src.to_string()))?;
+        map.insert(dst.to_string(), v);
+        Ok(())
+    }
+}
+
+/// Directory-backed store. Keys map to file paths under the root; `/` in
+/// keys becomes a directory separator.
+pub struct LocalStorage {
+    root: PathBuf,
+}
+
+impl LocalStorage {
+    /// Create (and mkdir -p) a store rooted at `root`.
+    pub fn new(root: impl Into<PathBuf>) -> std::io::Result<Self> {
+        let root = root.into();
+        fs::create_dir_all(&root)?;
+        Ok(LocalStorage { root })
+    }
+
+    fn path_of(&self, key: &str) -> PathBuf {
+        self.root.join(key)
+    }
+}
+
+impl StorageClient for LocalStorage {
+    fn upload(&self, key: &str, data: &[u8]) -> Result<(), StorageError> {
+        let p = self.path_of(key);
+        if let Some(parent) = p.parent() {
+            fs::create_dir_all(parent).map_err(|e| StorageError::Fatal(e.to_string()))?;
+        }
+        fs::write(&p, data).map_err(|e| StorageError::Fatal(e.to_string()))
+    }
+
+    fn download(&self, key: &str) -> Result<Vec<u8>, StorageError> {
+        let p = self.path_of(key);
+        if !p.exists() {
+            return Err(StorageError::NotFound(key.to_string()));
+        }
+        fs::read(&p).map_err(|e| StorageError::Fatal(e.to_string()))
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StorageError> {
+        fn walk(dir: &Path, root: &Path, out: &mut Vec<String>) {
+            if let Ok(entries) = fs::read_dir(dir) {
+                for e in entries.flatten() {
+                    let p = e.path();
+                    if p.is_dir() {
+                        walk(&p, root, out);
+                    } else if let Ok(rel) = p.strip_prefix(root) {
+                        out.push(rel.to_string_lossy().replace('\\', "/"));
+                    }
+                }
+            }
+        }
+        let mut out = Vec::new();
+        walk(&self.root, &self.root, &mut out);
+        out.retain(|k| k.starts_with(prefix));
+        out.sort();
+        Ok(out)
+    }
+
+    fn copy(&self, src: &str, dst: &str) -> Result<(), StorageError> {
+        let data = self.download(src)?;
+        self.upload(dst, &data)
+    }
+}
+
+/// MinIO/S3 stand-in: an in-memory store with injected per-op latency and a
+/// transient failure rate, used by the fault-tolerance benches (C2) and the
+/// storage-retry tests.
+pub struct ObjectStoreSim {
+    inner: MemStorage,
+    latency: Duration,
+    fail_rate: f64,
+    rng: Mutex<Rng>,
+    /// Total ops attempted (including failed ones).
+    pub ops: AtomicU64,
+    /// Ops that failed transiently.
+    pub failures: AtomicU64,
+}
+
+impl ObjectStoreSim {
+    /// `latency` is added to every op; `fail_rate` in [0,1] is the chance an
+    /// op fails with [`StorageError::Transient`].
+    pub fn new(latency: Duration, fail_rate: f64, seed: u64) -> Self {
+        ObjectStoreSim {
+            inner: MemStorage::new(),
+            latency,
+            fail_rate,
+            rng: Mutex::new(Rng::new(seed)),
+            ops: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+        }
+    }
+
+    fn gate(&self) -> Result<(), StorageError> {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        if !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
+        let fail = self.rng.lock().unwrap().chance(self.fail_rate);
+        if fail {
+            self.failures.fetch_add(1, Ordering::Relaxed);
+            return Err(StorageError::Transient("injected object-store failure".into()));
+        }
+        Ok(())
+    }
+}
+
+impl StorageClient for ObjectStoreSim {
+    fn upload(&self, key: &str, data: &[u8]) -> Result<(), StorageError> {
+        self.gate()?;
+        self.inner.upload(key, data)
+    }
+
+    fn download(&self, key: &str) -> Result<Vec<u8>, StorageError> {
+        self.gate()?;
+        self.inner.download(key)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StorageError> {
+        self.gate()?;
+        self.inner.list(prefix)
+    }
+
+    fn copy(&self, src: &str, dst: &str) -> Result<(), StorageError> {
+        self.gate()?;
+        self.inner.copy(src, dst)
+    }
+}
+
+// -- directory packing ---------------------------------------------------------
+
+const PACK_MAGIC: &[u8; 4] = b"DAR1";
+
+/// Pack a directory into a single object: `DAR1` then, per file,
+/// `u32 path_len | path | u64 data_len | data` (paths relative, sorted).
+pub fn pack_dir(dir: &Path) -> std::io::Result<Vec<u8>> {
+    let mut files = Vec::new();
+    fn walk(d: &Path, root: &Path, out: &mut Vec<(String, PathBuf)>) -> std::io::Result<()> {
+        let mut entries: Vec<_> = fs::read_dir(d)?.collect::<Result<_, _>>()?;
+        entries.sort_by_key(|e| e.path());
+        for e in entries {
+            let p = e.path();
+            if p.is_dir() {
+                walk(&p, root, out)?;
+            } else {
+                let rel = p.strip_prefix(root).unwrap().to_string_lossy().replace('\\', "/");
+                out.push((rel, p));
+            }
+        }
+        Ok(())
+    }
+    walk(dir, dir, &mut files)?;
+    let mut out = Vec::new();
+    out.extend_from_slice(PACK_MAGIC);
+    for (rel, path) in files {
+        let mut data = Vec::new();
+        fs::File::open(&path)?.read_to_end(&mut data)?;
+        out.extend_from_slice(&(rel.len() as u32).to_le_bytes());
+        out.extend_from_slice(rel.as_bytes());
+        out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        out.extend_from_slice(&data);
+    }
+    Ok(out)
+}
+
+/// Inverse of [`pack_dir`]: write the archive contents under `dir`.
+pub fn unpack_dir(archive: &[u8], dir: &Path) -> std::io::Result<()> {
+    use std::io::{Error, ErrorKind};
+    if archive.len() < 4 || &archive[..4] != PACK_MAGIC {
+        return Err(Error::new(ErrorKind::InvalidData, "bad archive magic"));
+    }
+    let mut i = 4usize;
+    while i < archive.len() {
+        let take = |i: &mut usize, n: usize| -> std::io::Result<&[u8]> {
+            if *i + n > archive.len() {
+                return Err(Error::new(ErrorKind::UnexpectedEof, "truncated archive"));
+            }
+            let s = &archive[*i..*i + n];
+            *i += n;
+            Ok(s)
+        };
+        let plen = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
+        let path = String::from_utf8(take(&mut i, plen)?.to_vec())
+            .map_err(|_| Error::new(ErrorKind::InvalidData, "bad path"))?;
+        if path.contains("..") {
+            return Err(Error::new(ErrorKind::InvalidData, "path escapes root"));
+        }
+        let dlen = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap()) as usize;
+        let data = take(&mut i, dlen)?;
+        let full = dir.join(&path);
+        if let Some(parent) = full.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::File::create(&full)?.write_all(data)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("dflow-test-{}-{}", name, crate::util::next_id()));
+        fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn exercise_client(c: &dyn StorageClient) {
+        c.upload("a/x", b"hello").unwrap();
+        c.upload("a/y", b"world").unwrap();
+        c.upload("b/z", b"!").unwrap();
+        assert_eq!(c.download("a/x").unwrap(), b"hello");
+        assert_eq!(c.list("a/").unwrap(), vec!["a/x".to_string(), "a/y".to_string()]);
+        c.copy("a/x", "c/x").unwrap();
+        assert_eq!(c.download("c/x").unwrap(), b"hello");
+        assert_eq!(c.get_md5("a/x").unwrap(), md5_hex(b"hello"));
+        assert!(matches!(c.download("missing"), Err(StorageError::NotFound(_))));
+        assert!(matches!(c.copy("missing", "d"), Err(StorageError::NotFound(_))));
+    }
+
+    #[test]
+    fn mem_storage_contract() {
+        exercise_client(&MemStorage::new());
+    }
+
+    #[test]
+    fn local_storage_contract() {
+        let dir = tmp("local");
+        exercise_client(&LocalStorage::new(&dir).unwrap());
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn object_store_sim_no_failures_behaves_like_mem() {
+        exercise_client(&ObjectStoreSim::new(Duration::ZERO, 0.0, 1));
+    }
+
+    #[test]
+    fn object_store_sim_injects_failures() {
+        let s = ObjectStoreSim::new(Duration::ZERO, 1.0, 1);
+        assert!(matches!(s.upload("k", b"v"), Err(StorageError::Transient(_))));
+        assert_eq!(s.failures.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn object_store_sim_failure_rate_roughly_holds() {
+        let s = ObjectStoreSim::new(Duration::ZERO, 0.3, 7);
+        let mut failed = 0;
+        for i in 0..1000 {
+            if s.upload(&format!("k{i}"), b"v").is_err() {
+                failed += 1;
+            }
+        }
+        assert!((200..400).contains(&failed), "failed={failed}");
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let src = tmp("pack-src");
+        fs::create_dir_all(src.join("sub")).unwrap();
+        fs::write(src.join("a.txt"), b"alpha").unwrap();
+        fs::write(src.join("sub/b.bin"), [0u8, 1, 2, 255]).unwrap();
+        let ar = pack_dir(&src).unwrap();
+
+        let dst = tmp("pack-dst");
+        unpack_dir(&ar, &dst).unwrap();
+        assert_eq!(fs::read(dst.join("a.txt")).unwrap(), b"alpha");
+        assert_eq!(fs::read(dst.join("sub/b.bin")).unwrap(), vec![0u8, 1, 2, 255]);
+        fs::remove_dir_all(src).ok();
+        fs::remove_dir_all(dst).ok();
+    }
+
+    #[test]
+    fn unpack_rejects_escaping_paths() {
+        let mut ar = Vec::new();
+        ar.extend_from_slice(PACK_MAGIC);
+        let path = b"../evil";
+        ar.extend_from_slice(&(path.len() as u32).to_le_bytes());
+        ar.extend_from_slice(path);
+        ar.extend_from_slice(&(0u64).to_le_bytes());
+        let dst = tmp("escape");
+        assert!(unpack_dir(&ar, &dst).is_err());
+        fs::remove_dir_all(dst).ok();
+    }
+
+    #[test]
+    fn unpack_rejects_bad_magic() {
+        assert!(unpack_dir(b"NOPE", &std::env::temp_dir()).is_err());
+    }
+
+    #[test]
+    fn md5_storage_consistency_property() {
+        crate::check::forall("md5 of stored equals md5 of source", |rng| {
+            let s = MemStorage::new();
+            let data: Vec<u8> = (0..rng.below(256)).map(|_| rng.next_u64() as u8).collect();
+            s.upload("k", &data).unwrap();
+            assert_eq!(s.get_md5("k").unwrap(), md5_hex(&data));
+        });
+    }
+}

@@ -1,0 +1,378 @@
+//! Property tests on coordinator invariants (in-repo mini framework —
+//! replay failures with `CHECK_SEED=<seed>`).
+//!
+//! Invariants:
+//! * slices preserve input order in stacked outputs for ANY width/parallelism;
+//! * random DAGs execute every task exactly once, respecting dependencies;
+//! * the cluster never over-commits under random workflow load;
+//! * retry counts never exceed the policy bound;
+//! * reuse never re-executes a matched key;
+//! * random recursion depths terminate at exactly the requested depth.
+
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use dflow::check::{forall, gen};
+use dflow::cluster::{Cluster, Resources};
+use dflow::core::{
+    CmpOp, ContainerTemplate, Dag, Expr, FnOp, OpError, Operand, ParamType, Signature, Slices,
+    Step, StepPolicy, Steps, Value, Workflow,
+};
+use dflow::engine::Engine;
+
+#[test]
+fn prop_slices_preserve_order() {
+    forall("slices preserve order", |rng| {
+        let width = 1 + rng.below(40) as usize;
+        let parallelism = 1 + rng.below(16) as usize;
+        let op = Arc::new(FnOp::new(
+            Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+            |ctx| {
+                // jitter completion order
+                std::thread::sleep(std::time::Duration::from_micros(50));
+                ctx.set("y", ctx.get_int("x")? * 3);
+                Ok(())
+            },
+        ));
+        let xs: Vec<i64> = (0..width as i64).map(|i| i * 7 - 3).collect();
+        let wf = Workflow::new("p")
+            .container(ContainerTemplate::new("op", op))
+            .steps(
+                Steps::new("main")
+                    .then(
+                        Step::new("fan", "op")
+                            .param("x", Value::ints(xs.clone()))
+                            .slices(Slices::over("x").stack("y").parallelism(parallelism)),
+                    )
+                    .out_param_from("ys", "fan", "y"),
+            )
+            .entrypoint("main");
+        let r = Engine::local().run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        let ys = r.outputs.params["ys"].as_list().unwrap();
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(ys[i], Value::Int(x * 3), "slot {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_random_dags_execute_once_in_order() {
+    forall("random dag executes once respecting deps", |rng| {
+        let n = 2 + rng.below(10) as usize;
+        // random DAG: each task depends on a random subset of earlier tasks
+        let mut deps: Vec<Vec<usize>> = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut d = Vec::new();
+            for j in 0..i {
+                if rng.chance(0.4) {
+                    d.push(j);
+                }
+            }
+            deps.push(d);
+        }
+        let log: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut dag = Dag::new("main");
+        let mut wf = Workflow::new("p");
+        for (i, d) in deps.iter().enumerate() {
+            let log2 = log.clone();
+            let op = Arc::new(FnOp::new(
+                Signature::new().out_param("done", ParamType::Int),
+                move |ctx| {
+                    log2.lock().unwrap().push(i);
+                    ctx.set("done", i as i64);
+                    Ok(())
+                },
+            ));
+            let mut task = Step::new(&format!("t{i}"), &format!("op{i}"));
+            for j in d {
+                task = task.depends_on(&format!("t{j}"));
+            }
+            dag = dag.task(task);
+            // one template per task so each op closure is distinct
+            wf = wf.container(ContainerTemplate::new(&format!("op{i}"), op));
+        }
+        let wf = wf.dag(dag).entrypoint("main");
+        let r = Engine::local().run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        let order = log.lock().unwrap().clone();
+        assert_eq!(order.len(), n, "each task exactly once");
+        let pos: std::collections::HashMap<usize, usize> =
+            order.iter().enumerate().map(|(p, t)| (*t, p)).collect();
+        for (i, d) in deps.iter().enumerate() {
+            for j in d {
+                assert!(pos[j] < pos[&i], "dep {j} must precede {i}: {order:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cluster_never_overcommits_under_load() {
+    forall("cluster never overcommits", |rng| {
+        let nodes = 1 + rng.below(4) as usize;
+        let cap = 1000 + rng.below(3000);
+        let cluster = Arc::new(Cluster::uniform(nodes, Resources::cpu(cap), rng.next_u64()));
+        let total = cluster.total_cpu_milli();
+        // request must be feasible on a single node: req in [100, cap)
+        let req = 100 + rng.below(cap - 100);
+        let width = 1 + rng.below(20) as usize;
+        let max_free = Arc::new(AtomicUsize::new(0));
+        let c2 = cluster.clone();
+        let m2 = max_free.clone();
+        let op = Arc::new(FnOp::new(
+            Signature::new().in_param("i", ParamType::Int),
+            move |_| {
+                // free CPU may never exceed capacity nor go "negative"
+                // (u64 underflow would show as a huge number)
+                let free = c2.free_cpu_milli();
+                m2.fetch_max(free as usize, Ordering::Relaxed);
+                Ok(())
+            },
+        ));
+        let wf = Workflow::new("p")
+            .container(ContainerTemplate::new("op", op).resources(Resources::cpu(req)))
+            .steps(Steps::new("main").then(
+                Step::new("fan", "op")
+                    .param("i", Value::ints(0..width as i64))
+                    .slices(Slices::over("i")),
+            ))
+            .entrypoint("main");
+        let engine = Engine::builder().cluster(cluster.clone()).build();
+        let r = engine.run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        assert!(max_free.load(Ordering::Relaxed) as u64 <= total);
+        assert_eq!(cluster.free_cpu_milli(), total, "all pods released");
+        let (bound, released, _) = cluster.stats();
+        assert_eq!(bound, released);
+        assert_eq!(bound, width as u64);
+    });
+}
+
+#[test]
+fn prop_retry_counts_bounded_by_policy() {
+    forall("retries bounded", |rng| {
+        let retries = rng.below(5) as u32;
+        let attempts = Arc::new(AtomicU32::new(0));
+        let a2 = attempts.clone();
+        let op = Arc::new(FnOp::new(
+            Signature::new(),
+            move |_| {
+                a2.fetch_add(1, Ordering::SeqCst);
+                Err(OpError::Transient("always".into()))
+            },
+        ));
+        let mut policy = StepPolicy::default();
+        policy.retries = retries;
+        let wf = Workflow::new("p")
+            .container(ContainerTemplate::new("op", op))
+            .steps(Steps::new("main").then(Step::new("s", "op").policy(policy)))
+            .entrypoint("main");
+        let r = Engine::local().run(&wf).unwrap();
+        assert!(!r.succeeded());
+        assert_eq!(attempts.load(Ordering::SeqCst), retries + 1);
+        assert_eq!(r.run.metrics.retries.get(), retries as u64);
+    });
+}
+
+#[test]
+fn prop_reuse_never_reexecutes_matched_keys() {
+    forall("reuse never re-executes", |rng| {
+        let width = 1 + rng.below(12) as usize;
+        let reused_subset: Vec<usize> =
+            (0..width).filter(|_| rng.chance(0.5)).collect();
+        let executed: Arc<Mutex<Vec<i64>>> = Arc::new(Mutex::new(Vec::new()));
+        let e2 = executed.clone();
+        let op = Arc::new(FnOp::new(
+            Signature::new().in_param("i", ParamType::Int).out_param("o", ParamType::Int),
+            move |ctx| {
+                let i = ctx.get_int("i")?;
+                e2.lock().unwrap().push(i);
+                ctx.set("o", i);
+                Ok(())
+            },
+        ));
+        let wf = Workflow::new("p")
+            .container(ContainerTemplate::new("op", op))
+            .steps(Steps::new("main").then(
+                Step::new("fan", "op")
+                    .param("i", Value::ints(0..width as i64))
+                    .slices(Slices::over("i").stack("o"))
+                    .key("k-{{item}}"),
+            ))
+            .entrypoint("main");
+        let reuse: Vec<dflow::engine::ReusedStep> = reused_subset
+            .iter()
+            .map(|i| {
+                let mut o = dflow::engine::StepOutputs::default();
+                o.params.insert("o".into(), Value::Int(*i as i64));
+                dflow::engine::ReusedStep::new(format!("k-{i}"), o)
+            })
+            .collect();
+        let r = Engine::local().run_with_reuse(&wf, reuse).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        let executed = executed.lock().unwrap().clone();
+        for i in &reused_subset {
+            assert!(
+                !executed.contains(&(*i as i64)),
+                "slice {i} was reused but also executed"
+            );
+        }
+        assert_eq!(executed.len(), width - reused_subset.len());
+        assert_eq!(r.run.metrics.steps_reused.get(), reused_subset.len() as u64);
+    });
+}
+
+#[test]
+fn prop_recursion_terminates_at_requested_depth() {
+    forall("recursion depth exact", |rng| {
+        let depth = 1 + rng.below(12) as i64;
+        let count = Arc::new(AtomicU32::new(0));
+        let c2 = count.clone();
+        let op = Arc::new(FnOp::new(
+            Signature::new().in_param("i", ParamType::Int).out_param("next", ParamType::Int),
+            move |ctx| {
+                c2.fetch_add(1, Ordering::SeqCst);
+                ctx.set("next", ctx.get_int("i")? + 1);
+                Ok(())
+            },
+        ));
+        let wf = Workflow::new("p")
+            .container(ContainerTemplate::new("inc", op))
+            .steps(
+                Steps::new("loop")
+                    .signature(
+                        Signature::new()
+                            .in_param("i", ParamType::Int)
+                            .in_param("depth", ParamType::Int),
+                    )
+                    .then(Step::new("body", "inc").param_from_input("i", "i"))
+                    .then(
+                        Step::new("again", "loop")
+                            .param_from_step("i", "body", "next")
+                            .param_from_input("depth", "depth")
+                            .when(Expr::Cmp {
+                                lhs: Operand::StepOutput {
+                                    step: "body".into(),
+                                    name: "next".into(),
+                                },
+                                op: CmpOp::Lt,
+                                rhs: Operand::Input("depth".into()),
+                            }),
+                    ),
+            )
+            .entrypoint("loop")
+            .arg("i", 0i64)
+            .arg("depth", depth);
+        let r = Engine::local().run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        assert_eq!(count.load(Ordering::SeqCst) as i64, depth);
+    });
+}
+
+#[test]
+fn prop_continue_on_ratio_threshold_is_exact() {
+    forall("success ratio threshold exact", |rng| {
+        let width = 2 + rng.below(12) as usize;
+        let fail_every = 2 + rng.below(4) as i64;
+        let op = Arc::new(FnOp::new(
+            Signature::new().in_param("i", ParamType::Int).out_param("o", ParamType::Int),
+            move |ctx| {
+                let i = ctx.get_int("i")?;
+                if i % fail_every == 0 {
+                    return Err(OpError::Fatal("planned".into()));
+                }
+                ctx.set("o", i);
+                Ok(())
+            },
+        ));
+        let succeeding = (0..width as i64).filter(|i| i % fail_every != 0).count();
+        let ratio = succeeding as f64 / width as f64;
+        // threshold just below the achieved ratio -> succeed;
+        // just above -> fail
+        for (delta, expect_ok) in [(-0.01, true), (0.01, false)] {
+            let wf = Workflow::new("p")
+                .container(ContainerTemplate::new("op", op.clone()))
+                .steps(Steps::new("main").then(
+                    Step::new("fan", "op")
+                        .param("i", Value::ints(0..width as i64))
+                        .slices(Slices::over("i").stack("o").continue_on(
+                            dflow::core::ContinueOn::SuccessRatio(ratio + delta),
+                        )),
+                ))
+                .entrypoint("main");
+            let r = Engine::local().run(&wf).unwrap();
+            assert_eq!(
+                r.succeeded(),
+                expect_ok,
+                "width={width} fail_every={fail_every} ratio={ratio} delta={delta}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_storage_artifact_flow_is_lossless() {
+    forall("artifact bytes flow lossless through steps", |rng| {
+        let payload: Vec<u8> = (0..rng.below(4096)).map(|_| rng.next_u64() as u8).collect();
+        let p2 = payload.clone();
+        let writer = Arc::new(FnOp::new(
+            Signature::new().out_artifact("data"),
+            move |ctx| {
+                ctx.write_artifact("data", &p2)?;
+                Ok(())
+            },
+        ));
+        let p3 = payload.clone();
+        let reader = Arc::new(FnOp::new(
+            Signature::new().in_artifact("data").out_param("ok", ParamType::Bool),
+            move |ctx| {
+                let got = ctx.read_artifact("data")?;
+                ctx.set("ok", got == p3);
+                Ok(())
+            },
+        ));
+        let wf = Workflow::new("p")
+            .container(ContainerTemplate::new("w", writer))
+            .container(ContainerTemplate::new("r", reader))
+            .steps(
+                Steps::new("main")
+                    .then(Step::new("w", "w"))
+                    .then(Step::new("r", "r").artifact_from_step("data", "w", "data"))
+                    .out_param_from("ok", "r", "ok"),
+            )
+            .entrypoint("main");
+        let r = Engine::local().run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        assert_eq!(r.outputs.params["ok"], Value::Bool(true));
+    });
+}
+
+#[test]
+fn prop_group_parallel_steps_all_complete() {
+    forall("parallel group completes all steps", |rng| {
+        let width = 1 + rng.below(8) as usize;
+        let names: Vec<String> = (0..width).map(|i| format!("s{}-{}", i, gen::ident(rng))).collect();
+        let op = Arc::new(FnOp::new(
+            Signature::new().out_param("v", ParamType::Int),
+            |ctx| {
+                ctx.set("v", 1i64);
+                Ok(())
+            },
+        ));
+        let mut steps = Vec::new();
+        for n in &names {
+            steps.push(Step::new(n, "op"));
+        }
+        let wf = Workflow::new("p")
+            .container(ContainerTemplate::new("op", op))
+            .steps(Steps::new("main").then_parallel(steps))
+            .entrypoint("main");
+        let r = Engine::local().run(&wf).unwrap();
+        assert!(r.succeeded());
+        assert_eq!(
+            r.run.count_phase(dflow::engine::NodePhase::Succeeded) as usize,
+            width
+        );
+    });
+}

@@ -1,0 +1,650 @@
+//! Integration: engine + cluster + HPC + storage composition, no artifacts
+//! required (runs everywhere).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use dflow::cluster::{Cluster, NodeSpec, Resources};
+use dflow::core::{
+    ContainerTemplate, ContinueOn, Dag, Expr, FnOp, OpError, Operand, ParamType, ShellOp,
+    Signature, Slices, Step, StepPolicy, Steps, Value, Workflow,
+};
+use dflow::engine::{Engine, NodePhase};
+use dflow::executor::{DispatcherExecutor, FlakyExecutor};
+use dflow::hpc::{HpcScheduler, PartitionSpec};
+use dflow::storage::{LocalStorage, ObjectStoreSim};
+
+#[test]
+fn shell_pipeline_over_local_storage() {
+    // a real /bin/sh two-step pipeline with artifact handoff through a
+    // directory-backed store (debug-mode semantics, paper §2.7)
+    let dir = std::env::temp_dir().join(format!("dflow-it-{}", dflow::util::next_id()));
+    let storage = Arc::new(LocalStorage::new(&dir).unwrap());
+    let gen = ShellOp::new(
+        Signature::new().in_param("n", ParamType::Str).out_artifact("numbers.txt"),
+        r#"seq 1 "$DF_PARAM_N" > outputs/numbers.txt"#,
+    );
+    let sum = ShellOp::new(
+        Signature::new()
+            .in_artifact("numbers")
+            .out_param("total", ParamType::Str),
+        r#"total=$(awk '{s+=$1} END {print s}' numbers); echo "DF_OUT total=$total""#,
+    );
+    let wf = Workflow::new("shell-pipe")
+        .container(ContainerTemplate::new("gen", Arc::new(gen)))
+        .container(ContainerTemplate::new("sum", Arc::new(sum)))
+        .steps(
+            Steps::new("main")
+                .then(Step::new("g", "gen").param("n", "10"))
+                .then(Step::new("s", "sum").artifact_from_step("numbers", "g", "numbers.txt"))
+                .out_param_from("total", "s", "total"),
+        )
+        .entrypoint("main");
+    let engine = Engine::builder().storage(storage).build();
+    let r = engine.run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert_eq!(r.outputs.params["total"], Value::Str("55".into()));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn dispatcher_executor_runs_steps_on_hpc_sim() {
+    // §2.6: DispatcherExecutor submits executive steps to a Slurm-like queue
+    let sched =
+        HpcScheduler::new(vec![PartitionSpec::new("slurm-cpu", 2, Duration::from_secs(10))]);
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        |ctx| {
+            let x = ctx.get_int("x")?;
+            ctx.set("y", x + 100);
+            Ok(())
+        },
+    ));
+    let wf = Workflow::new("hpc")
+        .container(ContainerTemplate::new("op", op))
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "op")
+                        .param("x", Value::ints(0..8))
+                        .slices(Slices::over("x").stack("y"))
+                        .executor("dispatcher"),
+                )
+                .out_param_from("ys", "fan", "y"),
+        )
+        .entrypoint("main");
+    let engine = Engine::builder()
+        .executor("dispatcher", Arc::new(DispatcherExecutor::new(sched.clone(), "slurm-cpu")))
+        .build();
+    let r = engine.run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    let ys = r.outputs.params["ys"].as_list().unwrap();
+    assert_eq!(ys[7], Value::Int(107));
+    let (submitted, completed, _, _) = sched.partition_stats("slurm-cpu").unwrap();
+    assert_eq!(submitted, 8);
+    assert_eq!(completed, 8);
+}
+
+#[test]
+fn virtual_hpc_nodes_schedule_via_selector() {
+    // §2.6 wlm-operator: HPC partitions as labeled virtual nodes
+    let cluster = Arc::new(Cluster::new(
+        vec![
+            NodeSpec::worker("k8s-0", Resources::cpu(4000)),
+            NodeSpec::worker("vnode-slurm", Resources::cpu(64_000)).virtual_node("slurm-main"),
+        ],
+        0,
+    ));
+    let op = Arc::new(FnOp::new(Signature::new().in_param("i", ParamType::Int), |_| Ok(())));
+    let wf = Workflow::new("vnode")
+        .container(
+            ContainerTemplate::new("hpc-op", op)
+                .resources(Resources::cpu(8000)) // only fits the virtual node
+                .select_node("dflow/partition", "slurm-main"),
+        )
+        .steps(Steps::new("main").then(
+            Step::new("fan", "hpc-op").param("i", Value::ints(0..4)).slices(Slices::over("i")),
+        ))
+        .entrypoint("main");
+    let engine = Engine::builder().cluster(cluster.clone()).build();
+    let r = engine.run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    let (bound, ..) = cluster.stats();
+    assert_eq!(bound, 4);
+}
+
+#[test]
+fn retries_absorb_flaky_object_store() {
+    // storage transient failures surface as OP transient errors and are
+    // absorbed by retry policy (§2.4 + §2.8)
+    let storage = Arc::new(ObjectStoreSim::new(Duration::ZERO, 0.25, 42));
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_artifact("blob"),
+        |ctx| {
+            let i = ctx.get_int("i")?;
+            ctx.write_artifact("blob", format!("payload-{i}").as_bytes())?;
+            Ok(())
+        },
+    ));
+    let mut policy = StepPolicy::default();
+    policy.retries = 12;
+    let wf = Workflow::new("flaky-store")
+        .container(ContainerTemplate::new("op", op))
+        .steps(Steps::new("main").then(
+            Step::new("fan", "op")
+                .param("i", Value::ints(0..12))
+                .slices(Slices::over("i").stack_artifact("blob"))
+                .policy(policy),
+        ))
+        .entrypoint("main");
+    let engine = Engine::builder().storage(storage.clone()).build();
+    let r = engine.run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert!(storage.failures.load(Ordering::Relaxed) > 0, "no failures were injected");
+}
+
+#[test]
+fn flaky_cluster_nodes_retried() {
+    let cluster = Arc::new(Cluster::new(
+        vec![NodeSpec::worker("shaky", Resources::cpu(64_000)).flaky(0.4)],
+        7,
+    ));
+    let op = Arc::new(FnOp::new(Signature::new().in_param("i", ParamType::Int), |_| Ok(())));
+    let mut policy = StepPolicy::default();
+    policy.retries = 20;
+    let wf = Workflow::new("flaky-nodes")
+        .container(ContainerTemplate::new("op", op))
+        .steps(Steps::new("main").then(
+            Step::new("fan", "op")
+                .param("i", Value::ints(0..20))
+                .slices(Slices::over("i"))
+                .policy(policy),
+        ))
+        .entrypoint("main");
+    let engine = Engine::builder().cluster(cluster).build();
+    let r = engine.run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert!(r.run.metrics.retries.get() > 0);
+}
+
+#[test]
+fn restart_reruns_only_failed_slices() {
+    // §2.5 + VSW §3.5: first run fails some shards; resubmission with
+    // reuse re-executes only the failed ones
+    let executions = Arc::new(AtomicU32::new(0));
+    let e2 = executions.clone();
+    let sometimes = Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("i", ParamType::Int)
+            .in_param("fail_mask", ParamType::Int)
+            .out_param("r", ParamType::Int),
+        move |ctx| {
+            e2.fetch_add(1, Ordering::SeqCst);
+            let i = ctx.get_int("i")?;
+            let mask = ctx.get_int("fail_mask")?;
+            if mask != 0 && i % 3 == 0 {
+                return Err(OpError::Fatal("shard crashed".into()));
+            }
+            ctx.set("r", i * 2);
+            Ok(())
+        },
+    ));
+    let build = |mask: i64| {
+        Workflow::new("restartable")
+            .container(ContainerTemplate::new("shard", sometimes.clone()))
+            .steps(
+                Steps::new("main")
+                    .then(
+                        Step::new("fan", "shard")
+                            .param("i", Value::ints(0..9))
+                            .param("fail_mask", mask)
+                            .slices(
+                                Slices::over("i")
+                                    .stack("r")
+                                    .continue_on(ContinueOn::SuccessRatio(0.5)),
+                            )
+                            .key("shard-{{item}}"),
+                    )
+                    .out_param_from("rs", "fan", "r"),
+            )
+            .entrypoint("main")
+    };
+    let engine = Engine::local();
+    let r1 = engine.run(&build(1)).unwrap();
+    assert!(r1.succeeded(), "{:?}", r1.error); // 6/9 ≥ 0.5
+    assert_eq!(executions.load(Ordering::SeqCst), 9);
+    // collect successes, rerun with failures fixed
+    let reuse = r1.run.all_keyed();
+    assert_eq!(reuse.len(), 6);
+    let r2 = engine.run_with_reuse(&build(0), reuse).unwrap();
+    assert!(r2.succeeded());
+    // only the 3 failed shards re-executed
+    assert_eq!(executions.load(Ordering::SeqCst), 12);
+    assert_eq!(r2.run.metrics.steps_reused.get(), 6);
+    let rs = r2.outputs.params["rs"].as_list().unwrap();
+    assert_eq!(rs[3], Value::Int(6));
+    assert_eq!(rs[4], Value::Int(8));
+}
+
+#[test]
+fn dag_diamond_runs_concurrently() {
+    // B and C must overlap in a diamond A -> (B, C) -> D
+    let slow = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        move |ctx| {
+            std::thread::sleep(Duration::from_millis(80));
+            ctx.set("y", ctx.get_int("x")? + 1);
+            Ok(())
+        },
+    ));
+    let wf = Workflow::new("diamond")
+        .container(ContainerTemplate::new("op", slow))
+        .dag(
+            Dag::new("main")
+                .task(Step::new("a", "op").param("x", 0i64))
+                .task(Step::new("b", "op").param_from_step("x", "a", "y"))
+                .task(Step::new("c", "op").param_from_step("x", "a", "y"))
+                .task(
+                    Step::new("d", "op")
+                        .param_from_step("x", "b", "y")
+                        .depends_on("c"),
+                )
+                .out_param_from("r", "d", "y"),
+        )
+        .entrypoint("main");
+    let t0 = std::time::Instant::now();
+    let r = Engine::local().run(&wf).unwrap();
+    let dt = t0.elapsed();
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert_eq!(r.outputs.params["r"], Value::Int(3));
+    // serial would be 4*80ms; diamond should be ~3*80ms
+    assert!(dt < Duration::from_millis(320), "{dt:?}");
+}
+
+#[test]
+fn conditional_branching_workflow() {
+    // two branches, one skipped based on a computed value
+    let classify = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("big", ParamType::Bool),
+        |ctx| {
+            let x = ctx.get_int("x")?;
+            ctx.set("big", x > 10);
+            Ok(())
+        },
+    ));
+    let tagger = |tag: &'static str| {
+        Arc::new(FnOp::new(
+            Signature::new().out_param("tag", ParamType::Str),
+            move |ctx| {
+                ctx.set("tag", tag);
+                Ok(())
+            },
+        ))
+    };
+    let wf = Workflow::new("branch")
+        .container(ContainerTemplate::new("classify", classify))
+        .container(ContainerTemplate::new("big-path", tagger("big")))
+        .container(ContainerTemplate::new("small-path", tagger("small")))
+        .steps(
+            Steps::new("main")
+                .then(Step::new("c", "classify").param("x", 42i64))
+                .then_parallel(vec![
+                    Step::new("big", "big-path").when(Expr::eq(
+                        Operand::StepOutput { step: "c".into(), name: "big".into() },
+                        Operand::Const(Value::Bool(true)),
+                    )),
+                    Step::new("small", "small-path").when(Expr::eq(
+                        Operand::StepOutput { step: "c".into(), name: "big".into() },
+                        Operand::Const(Value::Bool(false)),
+                    )),
+                ]),
+        )
+        .entrypoint("main");
+    let r = Engine::local().run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert_eq!(r.run.count_phase(NodePhase::Skipped), 1);
+    let nodes = r.run.nodes();
+    let big = nodes.iter().find(|n| n.path.ends_with("/big")).unwrap();
+    let small = nodes.iter().find(|n| n.path.ends_with("/small")).unwrap();
+    assert_eq!(big.phase, NodePhase::Succeeded);
+    assert_eq!(small.phase, NodePhase::Skipped);
+}
+
+#[test]
+fn nested_super_ops_three_levels() {
+    // container inside steps inside dag inside steps — Fig. 2 composability
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        |ctx| {
+            ctx.set("y", ctx.get_int("x")? + 1);
+            Ok(())
+        },
+    ));
+    let inner = Steps::new("inner")
+        .signature(
+            Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        )
+        .then(Step::new("s", "op").param_from_input("x", "x"))
+        .out_param_from("y", "s", "y");
+    let mid = Dag::new("mid")
+        .signature(
+            Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        )
+        .task(Step::new("a", "inner").param_from_input("x", "x"))
+        .task(Step::new("b", "inner").param_from_step("x", "a", "y"))
+        .out_param_from("y", "b", "y");
+    let wf = Workflow::new("nested")
+        .container(ContainerTemplate::new("op", op))
+        .steps(inner)
+        .dag(mid)
+        .steps(
+            Steps::new("main")
+                .then(Step::new("m", "mid").param("x", 10i64))
+                .out_param_from("r", "m", "y"),
+        )
+        .entrypoint("main");
+    let r = Engine::local().run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert_eq!(r.outputs.params["r"], Value::Int(12));
+}
+
+#[test]
+fn flaky_executor_with_retries_converges() {
+    let flaky = Arc::new(FlakyExecutor::new(0.5, 3));
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_param("o", ParamType::Int),
+        |ctx| {
+            ctx.set("o", ctx.get_int("i")?);
+            Ok(())
+        },
+    ));
+    let mut policy = StepPolicy::default();
+    policy.retries = 30;
+    let wf = Workflow::new("flaky-exec")
+        .container(ContainerTemplate::new("op", op))
+        .steps(Steps::new("main").then(
+            Step::new("fan", "op")
+                .param("i", Value::ints(0..10))
+                .slices(Slices::over("i").stack("o"))
+                .executor("flaky")
+                .policy(policy),
+        ))
+        .entrypoint("main");
+    let engine = Engine::builder().executor("flaky", flaky.clone()).build();
+    let r = engine.run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert!(flaky.injected.load(Ordering::Relaxed) > 0);
+}
+
+#[test]
+fn observability_trace_and_status_json() {
+    let op = Arc::new(FnOp::new(Signature::new().in_param("i", ParamType::Int), |_| Ok(())));
+    let wf = Workflow::new("observed")
+        .container(ContainerTemplate::new("op", op))
+        .steps(Steps::new("main").then(
+            Step::new("fan", "op").param("i", Value::ints(0..5)).slices(Slices::over("i")),
+        ))
+        .entrypoint("main");
+    let r = Engine::local().run(&wf).unwrap();
+    assert!(r.succeeded());
+    // trace has per-slice running/succeeded events
+    assert!(r.run.trace.len() >= 10);
+    // status json parses back and contains all nodes
+    let j = dflow::jsonx::Json::parse(&r.run.to_json().to_string_pretty()).unwrap();
+    let nodes = j.get("nodes").unwrap().as_arr().unwrap();
+    assert!(nodes.len() >= 6); // 5 slices + parent
+    // timeline export is well-formed
+    let tl = r.run.trace.timeline_json();
+    assert!(!tl.as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn workflow_parallelism_cap_respected() {
+    use std::sync::atomic::AtomicUsize;
+    let live = Arc::new(AtomicUsize::new(0));
+    let peak = Arc::new(AtomicUsize::new(0));
+    let (l2, p2) = (live.clone(), peak.clone());
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int),
+        move |_| {
+            let cur = l2.fetch_add(1, Ordering::SeqCst) + 1;
+            p2.fetch_max(cur, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(15));
+            l2.fetch_sub(1, Ordering::SeqCst);
+            Ok(())
+        },
+    ));
+    let wf = Workflow::new("capped")
+        .container(ContainerTemplate::new("op", op))
+        .steps(Steps::new("main").then(
+            Step::new("fan", "op").param("i", Value::ints(0..16)).slices(Slices::over("i")),
+        ))
+        .parallelism(3)
+        .entrypoint("main");
+    let r = Engine::local().run(&wf).unwrap();
+    assert!(r.succeeded());
+    assert!(peak.load(Ordering::SeqCst) <= 3, "peak {}", peak.load(Ordering::SeqCst));
+}
+
+#[test]
+fn sliced_super_op_steps_template() {
+    // §2.3: "Both Python OP and super OP (Steps/DAG) are supported to
+    // construct a sliced step" — slice over a Steps template
+    let double = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        |ctx| {
+            ctx.set("y", ctx.get_int("x")? * 2);
+            Ok(())
+        },
+    ));
+    let addone = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        |ctx| {
+            ctx.set("y", ctx.get_int("x")? + 1);
+            Ok(())
+        },
+    ));
+    // the sliced unit is itself a two-step pipeline: y = 2x + 1
+    let unit = Steps::new("unit")
+        .signature(
+            Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        )
+        .then(Step::new("d", "double").param_from_input("x", "x"))
+        .then(Step::new("a", "addone").param_from_step("x", "d", "y"))
+        .out_param_from("y", "a", "y");
+    let wf = Workflow::new("sliced-super")
+        .container(ContainerTemplate::new("double", double))
+        .container(ContainerTemplate::new("addone", addone))
+        .steps(unit)
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "unit")
+                        .param("x", Value::ints(0..6))
+                        .slices(Slices::over("x").stack("y").parallelism(3))
+                        .key("unit-{{item}}"),
+                )
+                .out_param_from("ys", "fan", "y"),
+        )
+        .entrypoint("main");
+    let r = Engine::local().run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    let ys = r.outputs.params["ys"].as_list().unwrap();
+    let expect: Vec<Value> = (0..6).map(|i| Value::Int(i * 2 + 1)).collect();
+    assert_eq!(ys, &expect[..]);
+    // keyed sliced super-ops are reusable
+    assert!(r.run.query_step("unit-3").is_some());
+}
+
+#[test]
+fn sliced_dag_template() {
+    // slice over a DAG super-OP
+    let sq = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        |ctx| {
+            let x = ctx.get_int("x")?;
+            ctx.set("y", x * x);
+            Ok(())
+        },
+    ));
+    let dag = Dag::new("unit")
+        .signature(
+            Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        )
+        .task(Step::new("s", "sq").param_from_input("x", "x"))
+        .out_param_from("y", "s", "y");
+    let wf = Workflow::new("sliced-dag")
+        .container(ContainerTemplate::new("sq", sq))
+        .dag(dag)
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "unit")
+                        .param("x", Value::ints(0..5))
+                        .slices(Slices::over("x").stack("y")),
+                )
+                .out_param_from("ys", "fan", "y"),
+        )
+        .entrypoint("main");
+    let r = Engine::local().run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert_eq!(
+        r.outputs.params["ys"].as_list().unwrap()[4],
+        Value::Int(16)
+    );
+}
+
+#[test]
+fn empty_slice_fanout_succeeds_with_empty_stacks() {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        |ctx| {
+            ctx.set("y", ctx.get_int("x")?);
+            Ok(())
+        },
+    ));
+    let wf = Workflow::new("empty-fan")
+        .container(ContainerTemplate::new("op", op))
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "op")
+                        .param("x", Value::List(vec![]))
+                        .slices(Slices::over("x").stack("y")),
+                )
+                .out_param_from("ys", "fan", "y"),
+        )
+        .entrypoint("main");
+    let r = Engine::local().run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert_eq!(r.outputs.params["ys"], Value::List(vec![]));
+}
+
+#[test]
+fn hpc_dispatcher_inside_cluster_virtual_node() {
+    // compose §2.6's two paths: a pod bound to a wlm-operator-style virtual
+    // node whose execution goes through the Slurm-sim dispatcher
+    let sched = HpcScheduler::new(vec![PartitionSpec::new("pbatch", 4, Duration::from_secs(10))]);
+    let cluster = Arc::new(Cluster::new(
+        vec![NodeSpec::worker("vnode", Resources::cpu(64_000)).virtual_node("pbatch")],
+        0,
+    ));
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_param("o", ParamType::Int),
+        |ctx| {
+            ctx.set("o", ctx.get_int("i")? + 1);
+            Ok(())
+        },
+    ));
+    let wf = Workflow::new("vnode-hpc")
+        .container(
+            ContainerTemplate::new("op", op)
+                .resources(Resources::cpu(8000))
+                .select_node("dflow/partition", "pbatch"),
+        )
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "op")
+                        .param("i", Value::ints(0..6))
+                        .slices(Slices::over("i").stack("o"))
+                        .executor("slurm"),
+                )
+                .out_param_from("os", "fan", "o"),
+        )
+        .entrypoint("main");
+    let engine = Engine::builder()
+        .cluster(cluster.clone())
+        .executor("slurm", Arc::new(DispatcherExecutor::new(sched.clone(), "pbatch")))
+        .build();
+    let r = engine.run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    let (submitted, completed, _, _) = sched.partition_stats("pbatch").unwrap();
+    assert_eq!((submitted, completed), (6, 6));
+    let (bound, ..) = cluster.stats();
+    assert_eq!(bound, 6);
+}
+
+#[test]
+fn async_submit_watch_and_wait() {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_param("o", ParamType::Int),
+        |ctx| {
+            std::thread::sleep(Duration::from_millis(10));
+            ctx.set("o", ctx.get_int("i")?);
+            Ok(())
+        },
+    ));
+    let wf = Workflow::new("async")
+        .container(ContainerTemplate::new("op", op))
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "op")
+                        .param("i", Value::ints(0..8))
+                        .slices(Slices::over("i").stack("o").parallelism(2)),
+                )
+                .out_param_from("os", "fan", "o"),
+        )
+        .entrypoint("main");
+    let engine = Arc::new(Engine::local());
+    let submitted = engine.submit(wf).unwrap();
+    // watch it live: the run handle is observable before completion
+    assert!(!submitted.is_finished() || submitted.run.nodes().is_empty() == false);
+    let seen_running = (0..100)
+        .any(|_| {
+            std::thread::sleep(Duration::from_millis(2));
+            submitted.run.count_phase(NodePhase::Running) > 0 || submitted.is_finished()
+        });
+    assert!(seen_running);
+    let result = submitted.wait();
+    assert!(result.succeeded(), "{:?}", result.error);
+    assert_eq!(result.outputs.params["os"].as_list().unwrap().len(), 8);
+}
+
+#[test]
+fn debug_dir_dump_end_to_end() {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_param("o", ParamType::Int),
+        |ctx| {
+            ctx.set("o", ctx.get_int("i")?);
+            Ok(())
+        },
+    ));
+    let wf = Workflow::new("dbg")
+        .container(ContainerTemplate::new("op", op))
+        .steps(Steps::new("main").then(
+            Step::new("s", "op").param("i", 1i64).key("the-step"),
+        ))
+        .entrypoint("main");
+    let r = Engine::local().run(&wf).unwrap();
+    let root = std::env::temp_dir().join(format!("dflow-dbg-it-{}", dflow::util::next_id()));
+    let dir = r.run.dump_debug_dir(&root).unwrap();
+    assert_eq!(
+        std::fs::read_to_string(dir.join("status")).unwrap().trim(),
+        "Succeeded"
+    );
+    assert!(dir.join("the-step/phase").exists());
+    std::fs::remove_dir_all(root).ok();
+}
