@@ -1,0 +1,30 @@
+# Repo CI entrypoints. `make ci` is what a gate should run.
+
+.PHONY: ci fmt-check fmt clippy build test bench
+
+ci: fmt-check clippy test
+
+fmt-check:
+	cargo fmt --check
+
+fmt:
+	cargo fmt
+
+clippy:
+	cargo clippy -- -D warnings
+
+build:
+	cargo build --release
+
+# tier-1 verify (ROADMAP.md)
+test: build
+	cargo test -q
+
+bench:
+	cargo bench
+
+# AOT-lower the python/compile entry points to artifacts/*.hlo.txt
+# (needed by PJRT-dependent workflows/benches; see python/compile/aot.py)
+.PHONY: artifacts
+artifacts:
+	cd python && python3 -m compile.aot

@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use dflow::bench_util::Bench;
+use dflow::bench_util::{diamond_chain_workflow, Bench};
 use dflow::cluster::{Cluster, Resources};
 use dflow::core::{
     ContainerTemplate, FnOp, ParamType, Signature, Slices, Step, Steps, Value, Workflow,
@@ -145,4 +145,28 @@ fn main() {
             .count(),
         200
     );
+
+    // 2000-node diamond-chain DAG on the bounded step scheduler: the whole
+    // dependency graph multiplexes onto `parallelism` pool workers instead
+    // of one thread per ready task
+    for parallelism in [8usize, 64] {
+        let (wf, probe, nodes) = diamond_chain_workflow(2002, parallelism);
+        let engine = Engine::builder().parallelism(parallelism).build();
+        let (r, t) = b.case(
+            &format!("{nodes}-node dag chain, pool {parallelism}"),
+            || {
+                let r = engine.run(&wf).unwrap();
+                assert!(r.succeeded(), "{:?}", r.error);
+                r
+            },
+        );
+        assert_eq!(r.run.nodes().len(), nodes);
+        assert!(
+            probe.peak() <= parallelism,
+            "peak {} exceeds pool {parallelism}",
+            probe.peak()
+        );
+        b.metric("  peak live workers", probe.peak() as f64, &format!("(cap {parallelism})"));
+        b.metric("  scheduler cost/task", t.as_secs_f64() * 1e6 / nodes as f64, "µs");
+    }
 }

@@ -4,6 +4,8 @@
 //! [`Bench`] to run timed cases and print aligned result rows; the rows are
 //! what EXPERIMENTS.md records per paper figure/claim.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// A named benchmark group printing aligned rows.
@@ -55,6 +57,99 @@ impl Bench {
     pub fn title(&self) -> &str {
         &self.title
     }
+}
+
+/// Live/peak concurrency tracker for OP bodies (the peak-tracking pattern
+/// from the engine's semaphore test, shared by scheduler stress tests and
+/// the scalability bench): call [`ConcurrencyProbe::with`] around the
+/// payload, read [`ConcurrencyProbe::peak`] afterwards.
+#[derive(Default)]
+pub struct ConcurrencyProbe {
+    live: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl ConcurrencyProbe {
+    /// Fresh shared probe.
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Mark one execution as live; returns the current live count.
+    pub fn enter(&self) -> usize {
+        let cur = self.live.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(cur, Ordering::SeqCst);
+        cur
+    }
+
+    /// Mark one execution as finished.
+    pub fn exit(&self) {
+        self.live.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Run `f` counted as one live execution.
+    pub fn with<T>(&self, f: impl FnOnce() -> T) -> T {
+        self.enter();
+        let out = f();
+        self.exit();
+        out
+    }
+
+    /// Highest concurrent live count observed so far.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::SeqCst)
+    }
+}
+
+/// Build a ~`target_nodes`-node diamond-chain DAG workflow (head, then
+/// repeated `left/right -> join` diamonds, every op incrementing its input
+/// by one) instrumented with a [`ConcurrencyProbe`]. Returns the workflow,
+/// the probe and the exact node count; the final output parameter `r`
+/// equals `1 + 2 * diamonds`. Used by the scheduler stress test and the C1
+/// scalability bench to prove a huge DAG runs on a bounded worker pool.
+pub fn diamond_chain_workflow(
+    target_nodes: usize,
+    parallelism: usize,
+) -> (crate::core::Workflow, Arc<ConcurrencyProbe>, usize) {
+    use crate::core::{ContainerTemplate, Dag, FnOp, ParamType, Signature, Step, Workflow};
+    let probe = ConcurrencyProbe::new();
+    let p = probe.clone();
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        move |ctx| {
+            p.with(|| {
+                let x = ctx.get_int("x")?;
+                ctx.set("y", x + 1);
+                Ok(())
+            })
+        },
+    ));
+    let mut dag = Dag::new("main").task(Step::new("head", "op").param("x", 0i64));
+    let mut prev = "head".to_string();
+    let mut count = 1usize;
+    while count + 3 <= target_nodes {
+        let i = count;
+        let left = format!("l{i}");
+        let right = format!("r{i}");
+        let join = format!("j{i}");
+        dag = dag
+            .task(Step::new(&left, "op").param_from_step("x", &prev, "y"))
+            .task(Step::new(&right, "op").param_from_step("x", &prev, "y"))
+            .task(
+                Step::new(&join, "op")
+                    .param_from_step("x", &left, "y")
+                    .depends_on(&right),
+            );
+        prev = join;
+        count += 3;
+    }
+    let dag = dag.out_param_from("r", &prev, "y");
+    let wf = Workflow::new("diamond-chain")
+        .container(ContainerTemplate::new("op", op))
+        .dag(dag)
+        .entrypoint("main")
+        .parallelism(parallelism);
+    (wf, probe, count)
 }
 
 /// True when AOT artifacts are present (benches needing PJRT skip

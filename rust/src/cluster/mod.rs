@@ -273,6 +273,14 @@ impl Cluster {
         (s.pods_bound, s.pods_released, s.peak_running)
     }
 
+    /// Pods currently bound and not yet released. Zero means pod
+    /// accounting is balanced — the timeout-cleanup tests assert this
+    /// returns to zero after a step timeout.
+    pub fn pods_in_flight(&self) -> u64 {
+        let s = self.state.lock().unwrap();
+        s.nodes.iter().map(|n| n.running).sum()
+    }
+
     /// Number of nodes.
     pub fn node_count(&self) -> usize {
         self.state.lock().unwrap().nodes.len()

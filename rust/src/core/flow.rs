@@ -261,7 +261,13 @@ pub struct StepPolicy {
     pub retries: u32,
     /// Delay between retries.
     pub backoff: Duration,
-    /// Wall-time limit for one attempt.
+    /// Wall-time limit for one attempt. The step fails (and its scheduling
+    /// permit frees) the moment the limit fires, but a cluster pod stays
+    /// bound until the OP actually stops: the engine signals the attempt's
+    /// cancel token and relies on the OP observing it (`ctx.checkpoint()`)
+    /// — long-running OPs under a timeout policy should checkpoint
+    /// periodically, otherwise the pod reads busy (honestly: the compute
+    /// is still burning) until the OP returns on its own.
     pub timeout: Option<Duration>,
     /// Treat a timeout as transient (retry) instead of fatal.
     pub timeout_transient: bool,

@@ -387,6 +387,9 @@ impl Op for FnOp {
     }
 
     fn execute(&self, ctx: &mut OpCtx) -> Result<(), OpError> {
+        // a cancelled (timed-out) attempt must not start; long-running
+        // closures should additionally call `ctx.checkpoint()` themselves
+        ctx.checkpoint()?;
         (self.f)(ctx)
     }
 }
@@ -425,6 +428,7 @@ impl Op for ShellOp {
     }
 
     fn execute(&self, ctx: &mut OpCtx) -> Result<(), OpError> {
+        ctx.checkpoint()?;
         let dir = &ctx.workdir.clone();
         std::fs::create_dir_all(dir).map_err(|e| OpError::Fatal(e.to_string()))?;
         self.stage_inputs(ctx, dir)?;

@@ -18,13 +18,14 @@
 //! * strict type checking of inputs before and outputs after every OP.
 
 pub mod run;
+pub(crate) mod sched;
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
-use crate::cluster::{Cluster, PodSpec};
+use crate::cluster::{Cluster, PodBinding, PodSpec};
 use crate::core::{
     ArtSrc, ArtifactRef, ContainerTemplate, ContinueOn, OpCtx, OpError, OpTemplate, Operand,
     ParamSrc, Slices, Step, StepPolicy, Value, Workflow,
@@ -35,6 +36,13 @@ use crate::storage::{MemStorage, StorageClient};
 use crate::util::Stopwatch;
 
 pub use run::{NodePhase, NodeStatus, ReusedStep, RunPhase, Semaphore, StepOutputs, WorkflowRun};
+
+use sched::{ScopeHandle, StepScheduler};
+
+/// Sibling-output view handed to steps: names map to shared (`Arc`) step
+/// outputs, so propagating a completed step's outputs to a dependent is one
+/// pointer clone per edge instead of a deep copy of the whole map.
+type SiblingMap = BTreeMap<String, Arc<StepOutputs>>;
 
 /// Engine-level configuration.
 #[derive(Clone)]
@@ -67,6 +75,9 @@ pub struct Engine {
     pub runtime: Option<Arc<crate::runtime::Runtime>>,
     executors: BTreeMap<String, Arc<dyn Executor>>,
     pub config: EngineConfig,
+    /// Engine-wide bounded worker pool; all DAG tasks, group steps and
+    /// slices run as jobs on it (at most `config.parallelism` threads).
+    pub(crate) sched: StepScheduler,
 }
 
 /// Builder for [`Engine`].
@@ -117,12 +128,14 @@ impl EngineBuilder {
 
     /// Finalize.
     pub fn build(self) -> Engine {
+        let sched = StepScheduler::new(self.config.parallelism);
         Engine {
             storage: self.storage,
             cluster: self.cluster,
             runtime: self.runtime,
             executors: self.executors,
             config: self.config,
+            sched,
         }
     }
 }
@@ -143,6 +156,12 @@ impl Submitted {
     /// Has the workflow reached a terminal phase?
     pub fn is_finished(&self) -> bool {
         !matches!(self.run.phase(), RunPhase::Running)
+    }
+
+    /// Block until the run reaches a terminal phase without consuming the
+    /// handle (condvar-notified — no sleep-polling).
+    pub fn wait_finished(&self) -> RunPhase {
+        self.run.wait_finished()
     }
 }
 
@@ -253,12 +272,12 @@ impl Engine {
             exec.execute_template(&wf.entrypoint, bindings, "main", &StepPolicy::default(), None);
         let (outputs, error) = match result {
             Ok(o) => {
-                *run.phase.lock().unwrap() = RunPhase::Succeeded;
+                run.set_phase(RunPhase::Succeeded);
                 run.trace.push(EventKind::WorkflowSucceeded, "", "");
                 (o, None)
             }
             Err(e) => {
-                *run.phase.lock().unwrap() = RunPhase::Failed;
+                run.set_phase(RunPhase::Failed);
                 run.trace.push(EventKind::WorkflowFailed, "", e.clone());
                 (StepOutputs::default(), Some(e))
             }
@@ -291,10 +310,31 @@ enum StepOutcome {
     Failed(String),
 }
 
+/// Shared state of one in-flight DAG execution (ready-queue dependency
+/// tracking with per-task delta-propagated input views).
+struct DagState<'a> {
+    tasks: &'a [Step],
+    /// Edge list: `dependents[i]` = tasks waiting on task `i`.
+    dependents: Vec<Vec<usize>>,
+    /// Unmet dependency count per task; the decrement that hits zero
+    /// submits the task.
+    remaining: Vec<AtomicUsize>,
+    /// Per-task input view, filled with each completed dependency's
+    /// outputs (`Arc` per edge — the delta, never the whole map).
+    inputs: Vec<Mutex<SiblingMap>>,
+    /// Accumulated outputs of all completed tasks (the template's final
+    /// siblings map, used for declared template outputs).
+    done: Mutex<SiblingMap>,
+    failed: AtomicBool,
+    first_err: Mutex<Option<String>>,
+}
+
 struct Exec<'e> {
     engine: &'e Engine,
     wf: &'e Workflow,
-    run: &'e WorkflowRun,
+    /// `Arc` (not a plain reference) so attempt guards can be moved into
+    /// watchdog threads that may outlive a timed-out step.
+    run: &'e Arc<WorkflowRun>,
 }
 
 impl<'e> Exec<'e> {
@@ -318,7 +358,7 @@ impl<'e> Exec<'e> {
                 self.execute_container(ct, bindings, path, policy, executor_override)
             }
             OpTemplate::Steps(st) => {
-                let mut siblings: BTreeMap<String, StepOutputs> = BTreeMap::new();
+                let mut siblings = SiblingMap::new();
                 for group in &st.groups {
                     self.execute_group(group, &bindings, &mut siblings, path)?;
                 }
@@ -335,7 +375,7 @@ impl<'e> Exec<'e> {
         &self,
         io: &crate::core::TemplateIo,
         bindings: &Bindings,
-        siblings: &BTreeMap<String, StepOutputs>,
+        siblings: &SiblingMap,
         path: &str,
     ) -> Result<StepOutputs, String> {
         use crate::core::OutputSrc;
@@ -381,34 +421,44 @@ impl<'e> Exec<'e> {
         &self,
         group: &[Step],
         bindings: &Bindings,
-        siblings: &mut BTreeMap<String, StepOutputs>,
+        siblings: &mut SiblingMap,
         path: &str,
     ) -> Result<(), String> {
         let outcomes: Vec<(String, StepOutcome)> = if group.len() == 1 {
             let step = &group[0];
             vec![(step.name.clone(), self.execute_step(step, bindings, siblings, path))]
         } else {
+            // parallel steps become jobs on the shared bounded pool; the
+            // scope waits (helping) until all of them finished
             let shared = &*siblings; // immutable view for parallel children
-            std::thread::scope(|s| {
-                let handles: Vec<_> = group
-                    .iter()
-                    .map(|step| {
-                        s.spawn(move || {
-                            (step.name.clone(), self.execute_step(step, bindings, shared, path))
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("step thread panicked")).collect()
-            })
+            let slots: Vec<Mutex<Option<StepOutcome>>> =
+                group.iter().map(|_| Mutex::new(None)).collect();
+            self.engine.sched.scope(|scope| {
+                for (step, slot) in group.iter().zip(&slots) {
+                    scope.submit(move || {
+                        *slot.lock().unwrap() =
+                            Some(self.execute_step(step, bindings, shared, path));
+                    });
+                }
+            });
+            group
+                .iter()
+                .zip(slots)
+                .map(|(step, slot)| {
+                    let outcome =
+                        slot.into_inner().unwrap().expect("group step was not executed");
+                    (step.name.clone(), outcome)
+                })
+                .collect()
         };
         let mut first_err: Option<String> = None;
         for (name, outcome) in outcomes {
             match outcome {
                 StepOutcome::Succeeded(o) => {
-                    siblings.insert(name, o);
+                    siblings.insert(name, Arc::new(o));
                 }
                 StepOutcome::Skipped | StepOutcome::FailedContinue(_) => {
-                    siblings.insert(name, StepOutputs::default());
+                    siblings.insert(name, Arc::new(StepOutputs::default()));
                 }
                 StepOutcome::Failed(e) => {
                     first_err.get_or_insert(e);
@@ -423,95 +473,128 @@ impl<'e> Exec<'e> {
 
     // -- DAG --------------------------------------------------------------------
 
+    /// Event-driven DAG execution on the shared bounded pool: each task
+    /// carries an atomic `remaining`-dependencies counter plus a private
+    /// input map; completions push **only their own outputs delta** (one
+    /// `Arc` clone per dependent edge) and the thread that drops a counter
+    /// to zero submits that task — no polling loop, no global siblings-map
+    /// cloning per launch. See `engine::sched` module docs for the design.
     fn execute_dag(
         &self,
         tasks: &[Step],
         bindings: &Bindings,
         path: &str,
-    ) -> Result<BTreeMap<String, StepOutputs>, String> {
+    ) -> Result<SiblingMap, String> {
         let n = tasks.len();
         let name_to_idx: BTreeMap<&str, usize> =
             tasks.iter().enumerate().map(|(i, t)| (t.name.as_str(), i)).collect();
-        let deps: Vec<BTreeSet<usize>> = tasks
-            .iter()
-            .map(|t| {
-                t.implied_dependencies()
-                    .iter()
-                    .filter_map(|d| name_to_idx.get(d.as_str()).copied())
-                    .collect()
-            })
-            .collect();
+        let mut deps: Vec<BTreeSet<usize>> = Vec::with_capacity(n);
+        for t in tasks {
+            let mut ds = BTreeSet::new();
+            for d in t.implied_dependencies() {
+                match name_to_idx.get(d.as_str()) {
+                    Some(i) => {
+                        ds.insert(*i);
+                    }
+                    None => {
+                        // a dropped edge would let the dependent launch
+                        // immediately — make it a hard validation error
+                        return Err(format!(
+                            "{path}: task '{}' depends on unknown task '{d}' \
+                             (not a task of this DAG)",
+                            t.name
+                        ));
+                    }
+                }
+            }
+            deps.push(ds);
+        }
         let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
         for (i, ds) in deps.iter().enumerate() {
             for d in ds {
                 dependents[*d].push(i);
             }
         }
-        let siblings = Arc::new(Mutex::new(BTreeMap::<String, StepOutputs>::new()));
-        let mut remaining: Vec<usize> = deps.iter().map(BTreeSet::len).collect();
-        let mut first_err: Option<String> = None;
-        let failed = AtomicBool::new(false);
-        let mut ready: Vec<usize> = (0..n).filter(|i| remaining[*i] == 0).collect();
-
-        std::thread::scope(|s| {
-            let (tx, rx) = mpsc::channel::<(usize, StepOutcome)>();
-            let mut launched = 0usize;
-            let mut done = 0usize;
-            loop {
-                for idx in ready.drain(..) {
-                    let tx = tx.clone();
-                    let siblings = Arc::clone(&siblings);
-                    let task = &tasks[idx];
-                    let failed = &failed;
-                    let this = &*self;
-                    s.spawn(move || {
-                        if failed.load(Ordering::Relaxed) {
-                            // template already failing: don't start new work
-                            tx.send((idx, StepOutcome::Skipped)).ok();
-                            return;
-                        }
-                        let snapshot = siblings.lock().unwrap().clone();
-                        let outcome = this.execute_step(task, bindings, &snapshot, path);
-                        tx.send((idx, outcome)).ok();
-                    });
-                    launched += 1;
-                }
-                if done == launched {
-                    break;
-                }
-                let (idx, outcome) = rx.recv().expect("dag channel closed");
-                done += 1;
-                let task_name = tasks[idx].name.clone();
-                match outcome {
-                    StepOutcome::Succeeded(o) => {
-                        siblings.lock().unwrap().insert(task_name, o);
-                    }
-                    StepOutcome::Skipped | StepOutcome::FailedContinue(_) => {
-                        siblings.lock().unwrap().insert(task_name, StepOutputs::default());
-                    }
-                    StepOutcome::Failed(e) => {
-                        failed.store(true, Ordering::Relaxed);
-                        first_err.get_or_insert(e);
-                    }
-                }
-                if !failed.load(Ordering::Relaxed) {
-                    for &dep_idx in &dependents[idx] {
-                        remaining[dep_idx] -= 1;
-                        if remaining[dep_idx] == 0 {
-                            ready.push(dep_idx);
-                        }
-                    }
-                }
+        let state = DagState {
+            tasks,
+            dependents,
+            remaining: deps.iter().map(|d| AtomicUsize::new(d.len())).collect(),
+            inputs: (0..n).map(|_| Mutex::new(SiblingMap::new())).collect(),
+            done: Mutex::new(SiblingMap::new()),
+            failed: AtomicBool::new(false),
+            first_err: Mutex::new(None),
+        };
+        let ready: Vec<usize> =
+            deps.iter().enumerate().filter(|(_, d)| d.is_empty()).map(|(i, _)| i).collect();
+        self.engine.sched.scope(|scope| {
+            for idx in ready {
+                self.spawn_dag_task(&scope, &state, bindings, path, idx);
             }
         });
-
-        match first_err {
+        let err = state.first_err.lock().unwrap().take();
+        match err {
             Some(e) => Err(e),
-            None => {
-                let map = Arc::try_unwrap(siblings)
-                    .map(|m| m.into_inner().unwrap())
-                    .unwrap_or_else(|arc| arc.lock().unwrap().clone());
-                Ok(map)
+            None => Ok(std::mem::take(&mut *state.done.lock().unwrap())),
+        }
+    }
+
+    /// Submit one ready DAG task to the pool.
+    fn spawn_dag_task<'env>(
+        &'env self,
+        scope: &ScopeHandle<'env>,
+        state: &'env DagState<'env>,
+        bindings: &'env Bindings,
+        path: &'env str,
+        idx: usize,
+    ) {
+        let scope2 = scope.clone();
+        scope.submit(move || {
+            let outcome = if state.failed.load(Ordering::SeqCst) {
+                // template already failing: don't start new work
+                StepOutcome::Skipped
+            } else {
+                let siblings = std::mem::take(&mut *state.inputs[idx].lock().unwrap());
+                self.execute_step(&state.tasks[idx], bindings, &siblings, path)
+            };
+            self.complete_dag_task(&scope2, state, bindings, path, idx, outcome);
+        });
+    }
+
+    /// Record a task's outcome and propagate its outputs delta to its
+    /// dependents, submitting any that became ready.
+    fn complete_dag_task<'env>(
+        &'env self,
+        scope: &ScopeHandle<'env>,
+        state: &'env DagState<'env>,
+        bindings: &'env Bindings,
+        path: &'env str,
+        idx: usize,
+        outcome: StepOutcome,
+    ) {
+        let name = state.tasks[idx].name.clone();
+        let outputs = match outcome {
+            StepOutcome::Succeeded(o) => Arc::new(o),
+            StepOutcome::Skipped | StepOutcome::FailedContinue(_) => {
+                Arc::new(StepOutputs::default())
+            }
+            StepOutcome::Failed(e) => {
+                state.failed.store(true, Ordering::SeqCst);
+                state.first_err.lock().unwrap().get_or_insert(e);
+                return;
+            }
+        };
+        state.done.lock().unwrap().insert(name.clone(), Arc::clone(&outputs));
+        if state.failed.load(Ordering::SeqCst) {
+            // template failing: stop readiness propagation (mirrors the
+            // previous behavior of not decrementing dependents on failure)
+            return;
+        }
+        for &dep in &state.dependents[idx] {
+            state.inputs[dep].lock().unwrap().insert(name.clone(), Arc::clone(&outputs));
+            // the insert above happens-before this decrement; the AcqRel
+            // RMW chain makes the final decrementer see every insert
+            if state.remaining[dep].fetch_sub(1, Ordering::AcqRel) == 1 {
+                self.spawn_dag_task(scope, state, bindings, path, dep);
             }
         }
     }
@@ -522,7 +605,7 @@ impl<'e> Exec<'e> {
         &self,
         step: &Step,
         bindings: &Bindings,
-        siblings: &BTreeMap<String, StepOutputs>,
+        siblings: &SiblingMap,
         parent_path: &str,
     ) -> StepOutcome {
         let path = format!("{parent_path}/{}", step.name);
@@ -628,7 +711,7 @@ impl<'e> Exec<'e> {
         step: &Step,
         slices: &Slices,
         bindings: &Bindings,
-        siblings: &BTreeMap<String, StepOutputs>,
+        siblings: &SiblingMap,
         path: &str,
     ) -> StepOutcome {
         // determine slice count from the sliced parameter lists
@@ -680,15 +763,18 @@ impl<'e> Exec<'e> {
             return StepOutcome::Succeeded(out);
         }
 
-        // run slices with bounded parallelism: W worker threads pull indices
+        // run slices with bounded parallelism: W puller jobs on the shared
+        // pool draw indices from an atomic counter (slice order preserved
+        // via the indexed result slots)
         let parallelism = slices.parallelism.unwrap_or(self.engine.config.parallelism).max(1);
         let workers = parallelism.min(k);
         let next = AtomicUsize::new(0);
         let results: Vec<Mutex<Option<StepOutcome>>> =
             (0..k).map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|s| {
+        self.engine.sched.scope(|scope| {
             for _ in 0..workers {
-                s.spawn(|| loop {
+                let (next, results) = (&next, &results);
+                scope.submit(move || loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= k {
                         break;
@@ -786,7 +872,7 @@ impl<'e> Exec<'e> {
         &self,
         src: &ParamSrc,
         bindings: &Bindings,
-        siblings: &BTreeMap<String, StepOutputs>,
+        siblings: &SiblingMap,
         item: Option<(usize, &Slices)>,
     ) -> Result<Value, String> {
         match src {
@@ -812,7 +898,7 @@ impl<'e> Exec<'e> {
         &self,
         src: &ArtSrc,
         bindings: &Bindings,
-        siblings: &BTreeMap<String, StepOutputs>,
+        siblings: &SiblingMap,
     ) -> Result<ArtifactRef, String> {
         match src {
             ArtSrc::Const(a) => Ok(a.clone()),
@@ -840,7 +926,7 @@ impl<'e> Exec<'e> {
     fn resolve_param_ref<'a>(
         src: &'a ParamSrc,
         bindings: &'a Bindings,
-        siblings: &'a BTreeMap<String, StepOutputs>,
+        siblings: &'a SiblingMap,
     ) -> Option<&'a Value> {
         match src {
             ParamSrc::Const(v) => Some(v),
@@ -859,7 +945,7 @@ impl<'e> Exec<'e> {
         &self,
         step: &Step,
         bindings: &Bindings,
-        siblings: &BTreeMap<String, StepOutputs>,
+        siblings: &SiblingMap,
         slice: Option<(&Slices, usize)>,
         path: &str,
     ) -> Result<Bindings, String> {
@@ -1019,8 +1105,16 @@ impl<'e> Exec<'e> {
         attempt: u32,
     ) -> Result<StepOutputs, OpError> {
         self.run.sem.acquire();
-        // pod acquisition — the cluster is the backpressure (§2.6)
-        let binding = if let Some(cluster) = &self.engine.cluster {
+        // the scheduling permit stays with THIS frame: on timeout the step
+        // has officially failed and the workflow must keep making progress
+        // (seed semantics), so the permit frees when one_attempt returns
+        let _sem = SemGuard { run: &**self.run };
+        // pod acquisition — the cluster is the backpressure (§2.6). The pod
+        // guard, by contrast, follows the OP itself (into the watchdog
+        // thread on the timeout path): physical capacity is only returned
+        // when the OP actually stops.
+        let mut pod_guard: Option<PodGuard> = None;
+        if let Some(cluster) = &self.engine.cluster {
             let mut pod = PodSpec::new(path.to_string(), ct.resources);
             for (k, v) in &ct.node_selector {
                 pod = pod.select(k, v);
@@ -1029,10 +1123,14 @@ impl<'e> Exec<'e> {
                 Some(b) => {
                     self.run.metrics.pods_scheduled.inc();
                     self.run.trace.push(EventKind::PodBound, path, b.node.clone());
-                    Some(b)
+                    pod_guard = Some(PodGuard {
+                        run: Arc::clone(self.run),
+                        cluster: Arc::clone(cluster),
+                        binding: b,
+                        path: path.to_string(),
+                    });
                 }
                 None => {
-                    self.run.sem.release();
                     self.run.metrics.pods_rejected.inc();
                     return Err(OpError::Fatal(format!(
                         "pod request {:?} (selector {:?}) is infeasible on this cluster",
@@ -1040,28 +1138,17 @@ impl<'e> Exec<'e> {
                     )));
                 }
             }
-        } else {
-            None
-        };
+        }
         if attempt == 0 {
             self.run.metrics.dispatch.observe(ready_at.elapsed());
         }
 
-        let finish = |outcome: Result<StepOutputs, OpError>| {
-            if let Some(b) = &binding {
-                self.engine.cluster.as_ref().unwrap().release(b);
-                self.run.trace.push(EventKind::PodReleased, path, b.node.clone());
-            }
-            self.run.sem.release();
-            outcome
-        };
-
         // node flake injected by the cluster → transient failure (§2.4)
-        if binding.as_ref().map(|b| b.flake).unwrap_or(false) {
-            return finish(Err(OpError::Transient(format!(
+        if pod_guard.as_ref().map(|g| g.binding.flake).unwrap_or(false) {
+            return Err(OpError::Transient(format!(
                 "node {} flaked during execution",
-                binding.as_ref().unwrap().node
-            ))));
+                pod_guard.as_ref().unwrap().binding.node
+            )));
         }
 
         let mut ctx = OpCtx {
@@ -1086,7 +1173,7 @@ impl<'e> Exec<'e> {
         };
 
         let sw = Stopwatch::start();
-        let result = match policy.timeout {
+        match policy.timeout {
             None => {
                 let r = executor.execute(ct, &mut ctx);
                 self.run.metrics.op_exec.observe(sw.elapsed());
@@ -1097,25 +1184,42 @@ impl<'e> Exec<'e> {
             }
             Some(limit) => {
                 // run the attempt on a watchdog thread so the wall-time
-                // limit can fire even for non-cooperative OPs
+                // limit can fire even for non-cooperative OPs. The POD
+                // guard moves INTO that thread: if the limit fires, the
+                // cancel token stops the OP at its next checkpoint and the
+                // pod is returned when the OP truly stops — never leaked,
+                // never released while compute is still burning. (The
+                // scheduling permit, held by the caller, frees at timeout
+                // so the workflow keeps progressing.)
                 let cancel = ctx.cancel.clone();
                 let exec = executor.clone();
                 let ct2 = ct.clone();
                 let (tx, rx) = mpsc::channel();
-                std::thread::spawn(move || {
-                    let r = exec.execute(&ct2, &mut ctx);
-                    tx.send(r.map(|()| StepOutputs {
-                        params: ctx.outputs,
-                        artifacts: ctx.output_artifacts,
-                    }))
-                    .ok();
-                });
+                std::thread::Builder::new()
+                    .name(format!("dflow-watchdog-{}", self.run.id))
+                    .spawn(move || {
+                        let r = exec.execute(&ct2, &mut ctx);
+                        drop(pod_guard); // OP finished (or aborted): free the pod
+                        tx.send(r.map(|()| StepOutputs {
+                            params: ctx.outputs,
+                            artifacts: ctx.output_artifacts,
+                        }))
+                        .ok();
+                    })
+                    .expect("spawn attempt watchdog");
                 match rx.recv_timeout(limit) {
                     Ok(r) => {
                         self.run.metrics.op_exec.observe(sw.elapsed());
                         r
                     }
-                    Err(_) => {
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        // the watchdog thread unwound without sending: the
+                        // OP panicked (its pod was released by the unwind).
+                        // Don't misreport this as a timeout.
+                        self.run.metrics.op_exec.observe(sw.elapsed());
+                        Err(OpError::Fatal("OP attempt panicked".into()))
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
                         cancel.cancel();
                         self.run.metrics.timeouts.inc();
                         self.run.trace.push(
@@ -1132,8 +1236,41 @@ impl<'e> Exec<'e> {
                     }
                 }
             }
-        };
-        finish(result)
+        }
+    }
+}
+
+/// Frees the per-run scheduling permit when an attempt frame exits —
+/// including the timeout path, where the step has already been reported
+/// failed and the workflow must keep making progress.
+struct SemGuard<'a> {
+    run: &'a WorkflowRun,
+}
+
+impl Drop for SemGuard<'_> {
+    fn drop(&mut self) {
+        self.run.sem.release();
+    }
+}
+
+/// Releases an attempt's cluster pod when the OP *actually* stops. For
+/// timed-out steps the guard lives inside the watchdog thread, so pod
+/// accounting returns to zero exactly when the cancelled OP exits — the
+/// timeout path can no longer leak a pod binding to an orphan thread, and
+/// it can no longer pretend capacity is free while compute still burns.
+struct PodGuard {
+    run: Arc<WorkflowRun>,
+    cluster: Arc<Cluster>,
+    binding: PodBinding,
+    path: String,
+}
+
+impl Drop for PodGuard {
+    fn drop(&mut self) {
+        self.cluster.release(&self.binding);
+        self.run
+            .trace
+            .push(EventKind::PodReleased, &self.path, self.binding.node.clone());
     }
 }
 
@@ -1241,6 +1378,79 @@ mod tests {
         let r = engine().run(&wf).unwrap();
         assert!(r.succeeded(), "{:?}", r.error);
         assert_eq!(r.outputs.params["r"], Value::Int(14)); // (2+10)+2
+    }
+
+    #[test]
+    fn dag_unknown_dependency_is_hard_error_at_runtime() {
+        // bypass Workflow::validate (drive directly) to prove the engine
+        // itself rejects a dangling `depends_on` instead of silently
+        // dropping the edge and launching the dependent immediately
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("add", add_op()))
+            .dag(
+                Dag::new("main").task(
+                    Step::new("a", "add")
+                        .param("a", 1i64)
+                        .param("b", 1i64)
+                        .depends_on("ghost"),
+                ),
+            )
+            .entrypoint("main");
+        let e = engine();
+        let run = Arc::new(WorkflowRun::new("w", 4, BTreeMap::new(), 1000));
+        let r = e.drive(&wf, run).unwrap();
+        assert!(!r.succeeded());
+        let msg = r.error.unwrap();
+        assert!(msg.contains("ghost"), "error must name the missing task: {msg}");
+        assert!(msg.contains("unknown task"), "{msg}");
+    }
+
+    #[test]
+    fn dag_validate_also_rejects_unknown_dependency() {
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("add", add_op()))
+            .dag(
+                Dag::new("main").task(
+                    Step::new("a", "add")
+                        .param("a", 1i64)
+                        .param("b", 1i64)
+                        .depends_on("ghost"),
+                ),
+            )
+            .entrypoint("main");
+        let err = engine().run(&wf).err().expect("validation should reject unknown dep");
+        assert!(err.contains("ghost"), "{err}");
+    }
+
+    #[test]
+    fn dag_wide_fanout_runs_on_bounded_pool() {
+        // 64 independent tasks on a parallelism-4 engine: the pool must
+        // multiplex them onto at most 4 workers (+ nothing leaking)
+        let probe = crate::bench_util::ConcurrencyProbe::new();
+        let p = probe.clone();
+        let op = Arc::new(FnOp::new(
+            Signature::new().out_param("v", ParamType::Int),
+            move |ctx| {
+                p.with(|| {
+                    std::thread::sleep(Duration::from_millis(2));
+                    ctx.set("v", 1i64);
+                    Ok(())
+                })
+            },
+        ));
+        let mut dag = Dag::new("main");
+        for i in 0..64 {
+            dag = dag.task(Step::new(&format!("t{i}"), "op"));
+        }
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("op", op))
+            .dag(dag)
+            .entrypoint("main");
+        let e = Engine::builder().parallelism(4).build();
+        let r = e.run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        assert_eq!(r.run.count_phase(NodePhase::Succeeded), 64);
+        assert!(probe.peak() <= 4, "peak {} exceeds parallelism 4", probe.peak());
     }
 
     #[test]

@@ -156,6 +156,8 @@ pub struct WorkflowRun {
     pub metrics: Registry,
     pub(crate) nodes: Mutex<BTreeMap<String, NodeStatus>>,
     pub(crate) phase: Mutex<RunPhase>,
+    /// Notified on terminal phase transitions (event-driven waiting).
+    pub(crate) phase_cv: Condvar,
     /// key → outputs of completed keyed steps (feeds `query_step`).
     pub(crate) keyed: Mutex<BTreeMap<String, StepOutputs>>,
     /// key → outputs injected from previous runs (`reuse_step`).
@@ -177,6 +179,7 @@ impl WorkflowRun {
             metrics: Registry::default(),
             nodes: Mutex::new(BTreeMap::new()),
             phase: Mutex::new(RunPhase::Running),
+            phase_cv: Condvar::new(),
             keyed: Mutex::new(BTreeMap::new()),
             reuse,
             sem: Semaphore::new(parallelism),
@@ -227,6 +230,22 @@ impl WorkflowRun {
     /// Current phase.
     pub fn phase(&self) -> RunPhase {
         *self.phase.lock().unwrap()
+    }
+
+    /// Set the phase and wake anyone blocked in [`Self::wait_finished`].
+    pub(crate) fn set_phase(&self, p: RunPhase) {
+        *self.phase.lock().unwrap() = p;
+        self.phase_cv.notify_all();
+    }
+
+    /// Block until the run reaches a terminal phase (condvar wait — woken
+    /// by the driver on completion, no sleep-polling).
+    pub fn wait_finished(&self) -> RunPhase {
+        let mut p = self.phase.lock().unwrap();
+        while matches!(*p, RunPhase::Running) {
+            p = self.phase_cv.wait(p).unwrap();
+        }
+        *p
     }
 
     /// Snapshot of all node statuses (sorted by path).

@@ -1,0 +1,394 @@
+//! Bounded, event-driven step scheduler.
+//!
+//! Before this module the engine spawned **one OS thread per ready DAG
+//! task / group step / slice**, so a 5k-node fan-out meant 5k threads, and
+//! per-task launches cloned the entire siblings-output map (O(n²) for wide
+//! DAGs). The scheduler replaces that with one engine-wide worker pool:
+//!
+//! * **Fixed pool, lazy spawn.** At most [`EngineConfig::parallelism`]
+//!   worker threads exist per engine (`StepScheduler::new(n)`); workers are
+//!   spawned on demand the first time a job arrives with nobody idle, so a
+//!   two-step test workflow never pays for a 64-thread pool.
+//! * **Scoped submission.** [`StepScheduler::scope`] hands the caller a
+//!   cloneable [`ScopeHandle`]; every job submitted through it is guaranteed
+//!   to finish before `scope` returns, which is what makes it sound for
+//!   jobs to borrow the caller's stack (the internal lifetime transmute is
+//!   justified exactly by that wait — same contract as `std::thread::scope`
+//!   and rayon's `scope`).
+//! * **Help-while-wait.** When a scope waits for its jobs — including a
+//!   *worker* whose job opened a nested scope (a DAG task whose template is
+//!   itself a Steps/DAG) — the waiting thread drains queued jobs instead of
+//!   parking. This is the property that makes nested templates deadlock-free
+//!   on a fixed-size pool: a blocked parent lends its thread to its own
+//!   children (or anyone else's).
+//! * **Event-driven completion.** Waiters sleep on a condvar and are woken
+//!   by job completion or new work — step-completion latency is
+//!   microseconds, not a sleep-poll interval.
+//!
+//! ## Ready-queue / delta-propagation design (used by `execute_dag`)
+//!
+//! The DAG executor keeps, per task, an atomic `remaining` dependency count
+//! and a private input map of `Arc<StepOutputs>`. When a task completes, it
+//! inserts **only its own outputs delta** (one `Arc` clone per dependent
+//! edge) into each dependent's input map and decrements the dependent's
+//! counter; the thread that drops a counter to zero submits that dependent
+//! to this pool. Each insert happens-before its decrement and the AcqRel
+//! RMW chain orders the final decrement after every predecessor's insert,
+//! so a task always observes the complete set of its dependencies' outputs
+//! — without ever cloning (or even locking) a global siblings map.
+//!
+//! Leaf-execution concurrency is still capped by the per-run semaphore
+//! (`WorkflowRun::sem`), so a workflow-level `parallelism` below the pool
+//! size is honored, and a helper thread draining jobs can never push live
+//! OP concurrency above the configured cap.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+#[allow(unused_imports)] // doc links
+use super::EngineConfig;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// One queued unit of work plus the batch it belongs to.
+struct QueuedJob {
+    run: Job,
+    batch: Arc<Batch>,
+}
+
+/// Completion state of one scope's submissions.
+#[derive(Default)]
+struct Batch {
+    pending: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+struct QueueState {
+    jobs: VecDeque<QueuedJob>,
+    /// Workers currently parked on the condvar.
+    idle: usize,
+    /// Workers spawned so far (never exceeds the pool size).
+    spawned: usize,
+    shutdown: bool,
+}
+
+struct PoolInner {
+    state: Mutex<QueueState>,
+    /// Woken on: new job, job completion, shutdown.
+    cv: Condvar,
+    size: usize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl PoolInner {
+    fn push(inner: &Arc<PoolInner>, job: QueuedJob) {
+        let mut st = inner.state.lock().unwrap();
+        st.jobs.push_back(job);
+        // spawn when the backlog exceeds the parked workers — comparing
+        // against `idle == 0` alone would let a single parked worker
+        // absorb a whole burst of pushes and serve it at concurrency 1
+        if st.jobs.len() > st.idle && st.spawned < inner.size {
+            st.spawned += 1;
+            let id = st.spawned;
+            let pool = Arc::clone(inner);
+            let handle = std::thread::Builder::new()
+                .name(format!("dflow-sched-{id}"))
+                .spawn(move || pool.worker_loop())
+                .expect("spawn scheduler worker");
+            inner.handles.lock().unwrap().push(handle);
+        }
+        drop(st);
+        inner.cv.notify_all();
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let job = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    if let Some(j) = st.jobs.pop_front() {
+                        break j;
+                    }
+                    st.idle += 1;
+                    st = self.cv.wait(st).unwrap();
+                    st.idle -= 1;
+                }
+            };
+            self.run_job(job);
+        }
+    }
+
+    /// Execute one job and publish its completion. Panics are caught so a
+    /// worker survives a panicking task; the batch re-raises in `scope`.
+    fn run_job(&self, job: QueuedJob) {
+        let QueuedJob { run, batch } = job;
+        if catch_unwind(AssertUnwindSafe(run)).is_err() {
+            batch.panicked.store(true, Ordering::SeqCst);
+        }
+        // decrement under the lock so a waiter that just checked `pending`
+        // cannot miss the wakeup
+        let guard = self.state.lock().unwrap();
+        batch.pending.fetch_sub(1, Ordering::SeqCst);
+        drop(guard);
+        self.cv.notify_all();
+    }
+}
+
+/// Handle for submitting jobs inside one [`StepScheduler::scope`] call.
+/// Cloneable so completion callbacks running on workers can submit
+/// newly-ready work into the same scope.
+///
+/// **Crate-internal contract:** the handle (and every clone of it) must
+/// not escape the scope body — don't return it from the closure or stash
+/// it in longer-lived state. Jobs may borrow `'env` data precisely
+/// because `scope` drains the batch before returning; a handle used after
+/// that drain could enqueue a job whose borrows are dead. This is why the
+/// module is `pub(crate)` rather than part of the public API (a public
+/// version would need `std::thread::scope`-style lifetime branding).
+pub struct ScopeHandle<'env> {
+    pool: Arc<PoolInner>,
+    batch: Arc<Batch>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl Clone for ScopeHandle<'_> {
+    fn clone(&self) -> Self {
+        ScopeHandle {
+            pool: Arc::clone(&self.pool),
+            batch: Arc::clone(&self.batch),
+            _env: PhantomData,
+        }
+    }
+}
+
+impl<'env> ScopeHandle<'env> {
+    /// Queue a job on the pool. The job may borrow anything that outlives
+    /// `'env`; `scope` does not return until it has run to completion.
+    pub fn submit<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        self.batch.pending.fetch_add(1, Ordering::SeqCst);
+        let boxed: Box<dyn FnOnce() + Send + 'env> = Box::new(f);
+        // SAFETY: the scope guard drains this batch before `scope` returns,
+        // so the job never outlives the `'env` borrows it captures.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(boxed)
+        };
+        PoolInner::push(&self.pool, QueuedJob { run: job, batch: Arc::clone(&self.batch) });
+    }
+
+    /// Block until every job of this batch has completed, running queued
+    /// jobs **of this batch** while waiting — the help-while-wait rule
+    /// that keeps nested scopes deadlock-free on a bounded pool.
+    ///
+    /// Helping is restricted to the waiter's own batch: popping an
+    /// unrelated batch's job here could capture this thread under a long
+    /// OP after its own batch already finished, stalling the caller
+    /// arbitrarily. Restriction stays deadlock-free because every queued
+    /// job's batch has a live drainer (its scope guard) that will pick it
+    /// up, and pool workers pop from any batch.
+    fn drain(&self) {
+        let mut st = self.pool.state.lock().unwrap();
+        loop {
+            if self.batch.pending.load(Ordering::SeqCst) == 0 {
+                break;
+            }
+            let own = st.jobs.iter().position(|j| Arc::ptr_eq(&j.batch, &self.batch));
+            if let Some(i) = own {
+                let job = st.jobs.remove(i).expect("indexed job vanished");
+                drop(st);
+                self.pool.run_job(job);
+                st = self.pool.state.lock().unwrap();
+            } else {
+                st = self.pool.cv.wait(st).unwrap();
+            }
+        }
+    }
+}
+
+/// Drains the scope on drop so borrowed job data stays valid even if the
+/// scope body panics; re-raises task panics on the normal path.
+struct ScopeGuard<'env> {
+    handle: ScopeHandle<'env>,
+}
+
+impl Drop for ScopeGuard<'_> {
+    fn drop(&mut self) {
+        self.handle.drain();
+        if self.handle.batch.panicked.load(Ordering::SeqCst) && !std::thread::panicking() {
+            panic!("step scheduler: a scheduled task panicked");
+        }
+    }
+}
+
+/// The engine-wide bounded worker pool. See the module docs.
+pub struct StepScheduler {
+    inner: Arc<PoolInner>,
+}
+
+impl StepScheduler {
+    /// Pool with at most `workers` threads (min 1), spawned lazily.
+    pub fn new(workers: usize) -> Self {
+        StepScheduler {
+            inner: Arc::new(PoolInner {
+                state: Mutex::new(QueueState {
+                    jobs: VecDeque::new(),
+                    idle: 0,
+                    spawned: 0,
+                    shutdown: false,
+                }),
+                cv: Condvar::new(),
+                size: workers.max(1),
+                handles: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// Maximum number of worker threads this pool will ever spawn.
+    pub fn worker_cap(&self) -> usize {
+        self.inner.size
+    }
+
+    /// Run `f` with a submission handle; returns only after every job
+    /// submitted through the handle (or its clones) has completed.
+    pub fn scope<'env, T, F>(&self, f: F) -> T
+    where
+        F: FnOnce(ScopeHandle<'env>) -> T + 'env,
+    {
+        let handle = ScopeHandle {
+            pool: Arc::clone(&self.inner),
+            batch: Arc::new(Batch::default()),
+            _env: PhantomData,
+        };
+        let guard = ScopeGuard { handle: handle.clone() };
+        let out = f(handle);
+        drop(guard);
+        out
+    }
+}
+
+impl Drop for StepScheduler {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.cv.notify_all();
+        for h in self.inner.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn scope_runs_all_jobs() {
+        let sched = StepScheduler::new(4);
+        let count = AtomicUsize::new(0);
+        sched.scope(|scope| {
+            for _ in 0..100 {
+                let count = &count;
+                scope.submit(move || {
+                    count.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn jobs_can_submit_more_jobs_into_the_scope() {
+        let sched = StepScheduler::new(2);
+        let count = AtomicUsize::new(0);
+        sched.scope(|scope| {
+            let count = &count;
+            let scope2 = scope.clone();
+            scope.submit(move || {
+                count.fetch_add(1, Ordering::SeqCst);
+                for _ in 0..10 {
+                    let scope3 = scope2.clone();
+                    scope2.submit(move || {
+                        count.fetch_add(1, Ordering::SeqCst);
+                        scope3.submit(move || {
+                            count.fetch_add(1, Ordering::SeqCst);
+                        });
+                    });
+                }
+            });
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 21);
+    }
+
+    #[test]
+    fn nested_scopes_on_single_worker_do_not_deadlock() {
+        // a worker whose job opens a nested scope must help-drain instead of
+        // parking, otherwise a 1-worker pool would deadlock here
+        let sched = Arc::new(StepScheduler::new(1));
+        let count = AtomicUsize::new(0);
+        let s2 = Arc::clone(&sched);
+        sched.scope(|scope| {
+            let count = &count;
+            let s2 = &s2;
+            scope.submit(move || {
+                s2.scope(|inner| {
+                    for _ in 0..4 {
+                        inner.submit(move || {
+                            count.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn worker_count_stays_bounded() {
+        let sched = StepScheduler::new(3);
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        sched.scope(|scope| {
+            for _ in 0..24 {
+                let (live, peak) = (&live, &peak);
+                scope.submit(move || {
+                    let cur = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(cur, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(5));
+                    live.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+        });
+        // 3 pool workers + the scope owner helping while it waits
+        assert!(peak.load(Ordering::SeqCst) <= 4, "peak {}", peak.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let sched = StepScheduler::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            sched.scope(|scope| {
+                scope.submit(|| panic!("boom"));
+            });
+        }));
+        assert!(r.is_err());
+        // the pool is still usable afterwards
+        let ok = AtomicBool::new(false);
+        sched.scope(|scope| {
+            let ok = &ok;
+            scope.submit(move || ok.store(true, Ordering::SeqCst));
+        });
+        assert!(ok.load(Ordering::SeqCst));
+    }
+}

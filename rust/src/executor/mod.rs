@@ -35,6 +35,8 @@ pub struct LocalExecutor;
 
 impl Executor for LocalExecutor {
     fn execute(&self, tpl: &ContainerTemplate, ctx: &mut OpCtx) -> Result<(), OpError> {
+        // a cancelled (timed-out) attempt must not start new work
+        ctx.checkpoint()?;
         tpl.op.execute(ctx)
     }
 
@@ -49,6 +51,14 @@ impl Executor for LocalExecutor {
 /// back serialized — mirroring how DPDispatcher stages files to the cluster
 /// and collects results. Walltime kills surface as
 /// [`OpError::Transient`]/[`OpError::Fatal`] per `timeout_transient`.
+///
+/// Cancellation: the cancel token is checked before submit and at job
+/// start, and the job's ctx shares the token so cooperative OPs stop at
+/// their next checkpoint. `execute` deliberately blocks until the job is
+/// *terminal* even when cancelled mid-run — the engine's pod guard is
+/// released when this call returns, and capacity must not read as free
+/// while the HPC worker is still executing; partition walltime is the
+/// backstop for non-cooperative OPs.
 pub struct DispatcherExecutor {
     sched: Arc<HpcScheduler>,
     partition: String,
@@ -99,6 +109,8 @@ fn outputs_from_json(j: &Json, ctx: &mut OpCtx) -> Result<(), OpError> {
 
 impl Executor for DispatcherExecutor {
     fn execute(&self, tpl: &ContainerTemplate, ctx: &mut OpCtx) -> Result<(), OpError> {
+        // a cancelled (timed-out) attempt must not submit a job at all
+        ctx.checkpoint()?;
         // move a clone of the context into the job; artifacts go through the
         // shared storage client exactly as they would through a cluster FS
         let op = tpl.op.clone();
@@ -117,6 +129,10 @@ impl Executor for DispatcherExecutor {
         let id = self
             .sched
             .submit(&self.partition, move || {
+                if job_ctx.cancel.is_cancelled() {
+                    // step timed out while the job sat in the queue
+                    return Err("FATAL:cancelled before start".to_string());
+                }
                 op.execute(&mut job_ctx)
                     .map_err(|e| {
                         // encode transiency in the message so it survives
@@ -133,7 +149,17 @@ impl Executor for DispatcherExecutor {
                     })
             })
             .map_err(OpError::Fatal)?;
+        // block until the job is terminal (condvar — no sleep-polling).
+        // Deliberately NOT abandoned on cancellation: the engine's attempt
+        // guard (pod + permit) is released when this call returns, and it
+        // must only be released once the OP has actually stopped. The job
+        // closure and cooperative OPs observe the shared cancel token, so
+        // a cancelled attempt still terminates promptly; walltime is the
+        // backstop for non-cooperative OPs.
         let (state, _, msg) = self.sched.wait(id);
+        if ctx.cancel.is_cancelled() {
+            return Err(OpError::Fatal("cancelled during HPC job execution".into()));
+        }
         match state {
             JobState::Completed => {
                 let j = rx

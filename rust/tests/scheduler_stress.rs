@@ -1,0 +1,177 @@
+//! Regression + stress tests for the bounded step scheduler:
+//! * a 2000-node diamond-chain DAG completes correctly on `parallelism(8)`
+//!   with peak live workers ≤ 8 (no thread-per-node explosion);
+//! * `depends_on` naming an unknown task is a hard error carrying the name;
+//! * a step timeout cancels the attempt and cluster pod accounting returns
+//!   to zero (no orphan thread keeps a pod bound).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use dflow::bench_util::diamond_chain_workflow;
+use dflow::cluster::{Cluster, Resources};
+use dflow::core::{
+    ContainerTemplate, Dag, FnOp, OpError, ParamType, Signature, Step, StepPolicy, Steps, Value,
+    Workflow,
+};
+use dflow::engine::{Engine, NodePhase};
+
+#[test]
+fn two_thousand_node_dag_runs_on_eight_workers() {
+    let (wf, probe, nodes) = diamond_chain_workflow(2002, 8);
+    assert!(nodes >= 2000, "builder produced only {nodes} nodes");
+    let engine = Engine::builder().parallelism(8).build();
+    let r = engine.run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    // chain of diamonds, every op is +1: r = 1 + 2 * diamonds
+    let expect = 1 + 2 * ((nodes - 1) / 3) as i64;
+    assert_eq!(r.outputs.params["r"], Value::Int(expect));
+    assert_eq!(r.run.count_phase(NodePhase::Succeeded), nodes);
+    assert!(
+        probe.peak() <= 8,
+        "peak live workers {} exceeded parallelism 8",
+        probe.peak()
+    );
+}
+
+#[test]
+fn deep_linear_chain_dag_completes() {
+    // 500 strictly serial tasks: exercises ready-queue propagation depth
+    // (each completion readies exactly one dependent)
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        |ctx| {
+            ctx.set("y", ctx.get_int("x")? + 1);
+            Ok(())
+        },
+    ));
+    let mut dag = Dag::new("main").task(Step::new("n0", "op").param("x", 0i64));
+    for i in 1..500 {
+        dag = dag.task(
+            Step::new(&format!("n{i}"), "op").param_from_step("x", &format!("n{}", i - 1), "y"),
+        );
+    }
+    let dag = dag.out_param_from("r", "n499", "y");
+    let wf = Workflow::new("chain")
+        .container(ContainerTemplate::new("op", op))
+        .dag(dag)
+        .entrypoint("main");
+    let r = Engine::builder().parallelism(4).build().run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert_eq!(r.outputs.params["r"], Value::Int(500));
+}
+
+#[test]
+fn unknown_dag_dependency_is_hard_error_with_task_name() {
+    let op = Arc::new(FnOp::new(Signature::new(), |_| Ok(())));
+    let wf = Workflow::new("w")
+        .container(ContainerTemplate::new("op", op))
+        .dag(Dag::new("main").task(Step::new("a", "op").depends_on("does-not-exist")))
+        .entrypoint("main");
+    let err = Engine::local()
+        .run(&wf)
+        .err()
+        .expect("validation should reject the unknown dependency");
+    assert!(
+        err.contains("does-not-exist"),
+        "error must name the missing dependency: {err}"
+    );
+}
+
+#[test]
+fn timeout_cancels_op_and_pod_accounting_returns_to_zero() {
+    let cluster = Arc::new(Cluster::uniform(1, Resources::cpu(1000), 0));
+    let observed_cancel = Arc::new(AtomicBool::new(false));
+    let ran_to_completion = Arc::new(AtomicBool::new(false));
+    let (oc, rc) = (observed_cancel.clone(), ran_to_completion.clone());
+    // a cooperative OP: checks its cancel token between work quanta
+    let op = Arc::new(FnOp::new(
+        Signature::new().out_param("ok", ParamType::Bool),
+        move |ctx| {
+            for _ in 0..400 {
+                if ctx.cancel.is_cancelled() {
+                    oc.store(true, Ordering::SeqCst);
+                    return Err(OpError::Fatal("cancelled".into()));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            rc.store(true, Ordering::SeqCst);
+            ctx.set("ok", true);
+            Ok(())
+        },
+    ));
+    let mut policy = StepPolicy::default();
+    policy.timeout = Some(Duration::from_millis(40));
+    let wf = Workflow::new("timeout")
+        .container(ContainerTemplate::new("slow", op).resources(Resources::cpu(1000)))
+        .steps(Steps::new("main").then(Step::new("s", "slow").policy(policy)))
+        .entrypoint("main");
+    let engine = Engine::builder().cluster(cluster.clone()).build();
+    let r = engine.run(&wf).unwrap();
+    assert!(!r.succeeded());
+    assert!(r.error.unwrap().contains("timed out"));
+    assert_eq!(r.run.metrics.timeouts.get(), 1);
+
+    // the cancelled attempt must stop and hand its pod back: accounting
+    // returns to zero shortly after the cancel token fires
+    let mut drained = false;
+    for _ in 0..400 {
+        if cluster.pods_in_flight() == 0 {
+            drained = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(drained, "pod still bound after timeout — orphan attempt leaked it");
+    let (bound, released, _) = cluster.stats();
+    assert_eq!(bound, released, "bound {bound} != released {released}");
+    assert!(
+        observed_cancel.load(Ordering::SeqCst),
+        "OP never observed the cancel token"
+    );
+    assert!(
+        !ran_to_completion.load(Ordering::SeqCst),
+        "OP ran to completion despite the timeout"
+    );
+}
+
+#[test]
+fn timeout_with_queued_retries_keeps_accounting_balanced() {
+    // timeout marked transient + retries: every attempt's pod must be
+    // returned, including the cancelled ones
+    let cluster = Arc::new(Cluster::uniform(1, Resources::cpu(1000), 0));
+    let op = Arc::new(FnOp::new(
+        Signature::new().out_param("ok", ParamType::Bool),
+        move |ctx| {
+            for _ in 0..200 {
+                ctx.checkpoint()?;
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            ctx.set("ok", true);
+            Ok(())
+        },
+    ));
+    let mut policy = StepPolicy::default();
+    policy.timeout = Some(Duration::from_millis(30));
+    policy.timeout_transient = true;
+    policy.retries = 2;
+    let wf = Workflow::new("timeout-retry")
+        .container(ContainerTemplate::new("slow", op).resources(Resources::cpu(1000)))
+        .steps(Steps::new("main").then(Step::new("s", "slow").policy(policy)))
+        .entrypoint("main");
+    let engine = Engine::builder().cluster(cluster.clone()).build();
+    let r = engine.run(&wf).unwrap();
+    assert!(!r.succeeded());
+    assert_eq!(r.run.metrics.timeouts.get(), 3); // initial + 2 retries
+    let mut drained = false;
+    for _ in 0..400 {
+        let (bound, released, _) = cluster.stats();
+        if bound == released && cluster.pods_in_flight() == 0 {
+            drained = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(drained, "pod accounting never rebalanced: {:?}", cluster.stats());
+}
