@@ -1,7 +1,9 @@
 # Repo CI entrypoints. `make ci` is what a gate should run.
 
-.PHONY: ci fmt-check fmt clippy build test bench
+.PHONY: ci fmt-check fmt clippy build test test-placement bench
 
+# `test` runs the full suite (placement + scheduler_stress included via
+# their Cargo.toml [[test]] entries), so `ci` covers the placement battery.
 ci: fmt-check clippy test
 
 fmt-check:
@@ -19,6 +21,11 @@ build:
 # tier-1 verify (ROADMAP.md)
 test: build
 	cargo test -q
+
+# multi-backend placement battery only (property + fault-injection +
+# 3-backend stress split)
+test-placement: build
+	cargo test -q --test placement --test scheduler_stress
 
 bench:
 	cargo bench

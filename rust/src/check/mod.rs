@@ -34,8 +34,19 @@ pub fn root_seed() -> u64 {
 /// });
 /// ```
 /// (`no_run`: doctest binaries lack the xla rpath in this build image.)
-pub fn forall(name: &str, mut prop: impl FnMut(&mut Rng)) {
-    let cases = default_cases();
+pub fn forall(name: &str, prop: impl FnMut(&mut Rng)) {
+    forall_cases(name, default_cases(), prop);
+}
+
+/// [`forall`] with an explicit case count (for properties whose contract
+/// requires more cases than the default). The `CHECK_CASES` env var still
+/// wins when set, so the `CHECK_SEED=<seed> CHECK_CASES=1` replay recipe
+/// printed on failure keeps working.
+pub fn forall_cases(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    let cases = std::env::var("CHECK_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
     let mut root = Rng::new(root_seed());
     for case in 0..cases {
         let seed = root.next_u64();

@@ -13,6 +13,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 use crate::jsonx::Json;
 use crate::util::{next_id, Rng};
@@ -144,6 +145,11 @@ struct NodeState {
     spec: NodeSpec,
     free: Resources,
     running: u64,
+    /// Cordoned (drained) nodes accept no new pods; existing pods keep
+    /// running until released. A cordon can flip a pending request from
+    /// merely unschedulable to permanently infeasible, so cordoning wakes
+    /// every blocked binder for re-evaluation.
+    cordoned: bool,
 }
 
 struct ClusterState {
@@ -169,7 +175,12 @@ impl Cluster {
             state: Mutex::new(ClusterState {
                 nodes: nodes
                     .into_iter()
-                    .map(|spec| NodeState { free: spec.capacity, spec, running: 0 })
+                    .map(|spec| NodeState {
+                        free: spec.capacity,
+                        spec,
+                        running: 0,
+                        cordoned: false,
+                    })
                     .collect(),
                 rng: Rng::new(seed),
                 pods_bound: 0,
@@ -199,7 +210,7 @@ impl Cluster {
         // nodes — first-fit preserves the semantics the engine depends on)
         let mut chosen: Option<usize> = None;
         for (i, n) in state.nodes.iter().enumerate() {
-            if !Self::selector_matches(&n.spec, pod) {
+            if n.cordoned || !Self::selector_matches(&n.spec, pod) {
                 continue;
             }
             if n.spec.capacity.fits(&pod.request) {
@@ -242,17 +253,88 @@ impl Cluster {
 
     /// Bind, blocking until capacity frees up. Returns `None` if the request
     /// is infeasible (would never fit).
+    ///
+    /// Feasibility is re-evaluated on **every** wakeup, not just on entry:
+    /// a request that was merely unschedulable when the wait began can
+    /// become permanently unsatisfiable while it waits (the last fitting
+    /// node gets cordoned/drained). [`Cluster::cordon`] notifies this
+    /// wait precisely so such a request returns `None` instead of hanging
+    /// forever on a condvar nobody will ever signal usefully again.
     pub fn bind_blocking(&self, pod: &PodSpec) -> Option<PodBinding> {
+        self.bind_within(pod, None)
+    }
+
+    /// [`Cluster::bind_blocking`] with an optional deadline: returns `None`
+    /// once `deadline` passes without a successful bind. `None` deadline
+    /// means wait indefinitely (while the request stays feasible).
+    pub fn bind_within(&self, pod: &PodSpec, deadline: Option<Instant>) -> Option<PodBinding> {
         let mut state = self.state.lock().unwrap();
         loop {
             match Self::try_bind_locked(&mut state, pod) {
                 ScheduleResult::Bound(b) => return Some(b),
                 ScheduleResult::Infeasible => return None,
-                ScheduleResult::Unschedulable => {
-                    state = self.freed.wait(state).unwrap();
-                }
+                ScheduleResult::Unschedulable => match deadline {
+                    None => state = self.freed.wait(state).unwrap(),
+                    Some(d) => {
+                        let now = Instant::now();
+                        if now >= d {
+                            return None;
+                        }
+                        let (st, _) = self.freed.wait_timeout(state, d - now).unwrap();
+                        state = st;
+                    }
+                },
             }
         }
+    }
+
+    /// Non-mutating feasibility probe: could this request *ever* bind on
+    /// the current node set (capacity + selector, ignoring current load and
+    /// skipping cordoned nodes)? This is what lets the engine fail an
+    /// infeasible step fast — before it occupies a scheduling permit or a
+    /// pool worker blocked in [`Cluster::bind_blocking`].
+    pub fn check_feasible(&self, pod: &PodSpec) -> bool {
+        let state = self.state.lock().unwrap();
+        state.nodes.iter().any(|n| {
+            !n.cordoned
+                && Self::selector_matches(&n.spec, pod)
+                && n.spec.capacity.fits(&pod.request)
+        })
+    }
+
+    /// Cordon (drain) a node: no new pods schedule onto it; running pods
+    /// finish normally. Wakes all blocked binders so requests whose only
+    /// fitting node this was fail out of [`Cluster::bind_blocking`] instead
+    /// of waiting forever. Returns false if the node is unknown.
+    pub fn cordon(&self, node: &str) -> bool {
+        let mut state = self.state.lock().unwrap();
+        let found = match state.nodes.iter_mut().find(|n| n.spec.name == node) {
+            Some(n) => {
+                n.cordoned = true;
+                true
+            }
+            None => false,
+        };
+        drop(state);
+        // a cordon can only *remove* options: waiters must re-check
+        // feasibility, some of them to discover they are now infeasible
+        self.freed.notify_all();
+        found
+    }
+
+    /// Undo a cordon; wakes blocked binders so they can use the node again.
+    pub fn uncordon(&self, node: &str) -> bool {
+        let mut state = self.state.lock().unwrap();
+        let found = match state.nodes.iter_mut().find(|n| n.spec.name == node) {
+            Some(n) => {
+                n.cordoned = false;
+                true
+            }
+            None => false,
+        };
+        drop(state);
+        self.freed.notify_all();
+        found
     }
 
     /// Return a pod's resources to its node.
@@ -323,6 +405,7 @@ impl Cluster {
                                 .map(Json::s)
                                 .unwrap_or(Json::Null),
                         ),
+                        ("cordoned", Json::Bool(n.cordoned)),
                     ])
                 })
                 .collect(),
@@ -465,6 +548,103 @@ mod tests {
                 assert_eq!(c.free_cpu_milli(), total - used);
             }
         });
+    }
+
+    #[test]
+    fn bind_blocking_returns_none_fast_on_infeasible_shapes() {
+        // every shape here would previously have to rely on the Infeasible
+        // arm alone; a watchdog bounds the test so a regression hangs the
+        // assertion, not CI
+        let shapes: Vec<(Cluster, PodSpec)> = vec![
+            // request exceeds every node's capacity
+            (
+                Cluster::uniform(2, Resources::cpu(1000), 0),
+                PodSpec::new("big", Resources::cpu(2000)),
+            ),
+            // selector matches no node
+            (
+                Cluster::uniform(2, Resources::cpu(1000), 0),
+                PodSpec::new("sel", Resources::cpu(100)).select("accel", "tpu"),
+            ),
+            // multi-resource: cpu fits node A, gpu fits node B, neither both
+            (
+                Cluster::new(
+                    vec![
+                        NodeSpec::worker("cpu", Resources::new(4000, 1000, 0)),
+                        NodeSpec::worker("gpu", Resources::new(500, 1000, 2)),
+                    ],
+                    0,
+                ),
+                PodSpec::new("both", Resources::new(1000, 100, 1)),
+            ),
+            // zero-node cluster
+            (Cluster::new(vec![], 0), PodSpec::new("any", Resources::cpu(1))),
+        ];
+        for (c, pod) in shapes {
+            let c = Arc::new(c);
+            let (c2, p2) = (c.clone(), pod.clone());
+            let t = std::thread::spawn(move || c2.bind_blocking(&p2));
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+            while !t.is_finished() {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "bind_blocking hung on infeasible request {pod:?}"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            assert!(t.join().unwrap().is_none(), "{pod:?} bound somewhere");
+        }
+    }
+
+    #[test]
+    fn cordon_wakes_blocked_binder_into_none() {
+        // request is feasible only on node-0; a binder waits for capacity;
+        // cordoning node-0 makes the request permanently unsatisfiable and
+        // must wake the waiter into None (previously: hang forever)
+        let c = Arc::new(Cluster::uniform(1, Resources::cpu(100), 0));
+        let hold = match c.try_bind(&PodSpec::new("hold", Resources::cpu(100))) {
+            ScheduleResult::Bound(b) => b,
+            o => panic!("{o:?}"),
+        };
+        let c2 = c.clone();
+        let waiter =
+            std::thread::spawn(move || c2.bind_blocking(&PodSpec::new("w", Resources::cpu(100))));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!waiter.is_finished(), "waiter should be blocked while node is full");
+        assert!(c.cordon("node-0"));
+        let got = waiter.join().unwrap();
+        assert!(got.is_none(), "cordoned-away request must resolve to None");
+        // the held pod still releases cleanly, and uncordon restores binds
+        c.release(&hold);
+        assert!(c.bind_blocking(&PodSpec::new("x", Resources::cpu(100))).is_none());
+        assert!(c.uncordon("node-0"));
+        assert!(c.bind_blocking(&PodSpec::new("x", Resources::cpu(100))).is_some());
+    }
+
+    #[test]
+    fn bind_within_deadline_expires() {
+        let c = Cluster::uniform(1, Resources::cpu(100), 0);
+        let _hold = c.try_bind(&PodSpec::new("hold", Resources::cpu(100)));
+        let t0 = std::time::Instant::now();
+        let got = c.bind_within(
+            &PodSpec::new("late", Resources::cpu(100)),
+            Some(std::time::Instant::now() + std::time::Duration::from_millis(30)),
+        );
+        assert!(got.is_none());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(25));
+    }
+
+    #[test]
+    fn check_feasible_probes_capacity_selector_and_cordon() {
+        let c = Cluster::new(
+            vec![NodeSpec::worker("n", Resources::cpu(1000)).label("zone", "a")],
+            0,
+        );
+        assert!(c.check_feasible(&PodSpec::new("ok", Resources::cpu(1000))));
+        assert!(!c.check_feasible(&PodSpec::new("big", Resources::cpu(1001))));
+        assert!(!c.check_feasible(&PodSpec::new("sel", Resources::cpu(1)).select("zone", "b")));
+        c.cordon("n");
+        assert!(!c.check_feasible(&PodSpec::new("ok", Resources::cpu(1))));
     }
 
     #[test]

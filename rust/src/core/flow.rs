@@ -287,6 +287,58 @@ impl Default for StepPolicy {
     }
 }
 
+// -- backend selection ----------------------------------------------------------------
+
+/// Which execution backends a step may be placed on (engine placement
+/// layer). Empty selector = any registered backend. A selector is satisfied
+/// by a backend when the name matches (if set) **and** every label pair is
+/// present on the backend.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BackendSelector {
+    /// Pin to one backend by registered name.
+    pub name: Option<String>,
+    /// Require backend labels (all must match).
+    pub labels: BTreeMap<String, String>,
+}
+
+impl BackendSelector {
+    /// Selector matching any backend.
+    pub fn any() -> Self {
+        Self::default()
+    }
+
+    /// Selector pinned to a backend name.
+    pub fn named(name: impl Into<String>) -> Self {
+        BackendSelector { name: Some(name.into()), labels: BTreeMap::new() }
+    }
+
+    /// Require a backend label.
+    pub fn label(mut self, k: &str, v: &str) -> Self {
+        self.labels.insert(k.to_string(), v.to_string());
+        self
+    }
+
+    /// True when nothing is constrained.
+    pub fn is_any(&self) -> bool {
+        self.name.is_none() && self.labels.is_empty()
+    }
+
+    /// Human-readable form for error messages.
+    pub fn display(&self) -> String {
+        if self.is_any() {
+            return "any".to_string();
+        }
+        let mut parts = Vec::new();
+        if let Some(n) = &self.name {
+            parts.push(format!("name={n}"));
+        }
+        for (k, v) in &self.labels {
+            parts.push(format!("{k}={v}"));
+        }
+        parts.join(",")
+    }
+}
+
 // -- step ----------------------------------------------------------------------------
 
 /// A step: an instantiation of a named template with bound inputs (paper
@@ -311,6 +363,11 @@ pub struct Step {
     pub policy: StepPolicy,
     /// Executor override (§2.6); None uses the engine default.
     pub executor: Option<String>,
+    /// Backend placement constraint for this step's leaf execution
+    /// (engine placement layer). None = any registered backend. Applies
+    /// when the step's template is a container template — steps inside a
+    /// referenced super-OP carry their own selectors, mirroring `executor`.
+    pub backend: Option<BackendSelector>,
 }
 
 impl Step {
@@ -327,6 +384,7 @@ impl Step {
             dependencies: Vec::new(),
             policy: StepPolicy::default(),
             executor: None,
+            backend: None,
         }
     }
 
@@ -396,6 +454,27 @@ impl Step {
     /// Select an executor plugin by registered name.
     pub fn executor(mut self, name: &str) -> Step {
         self.executor = Some(name.to_string());
+        self
+    }
+
+    /// Pin this step to a backend by registered name.
+    pub fn on_backend(mut self, name: &str) -> Step {
+        self.backend.get_or_insert_with(BackendSelector::default).name = Some(name.to_string());
+        self
+    }
+
+    /// Constrain this step to backends carrying a label.
+    pub fn backend_where(mut self, k: &str, v: &str) -> Step {
+        self.backend
+            .get_or_insert_with(BackendSelector::default)
+            .labels
+            .insert(k.to_string(), v.to_string());
+        self
+    }
+
+    /// Set the full backend selector.
+    pub fn backend(mut self, sel: BackendSelector) -> Step {
+        self.backend = Some(sel);
         self
     }
 

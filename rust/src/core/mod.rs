@@ -7,8 +7,8 @@ pub mod op;
 pub mod value;
 
 pub use flow::{
-    ArtSrc, CmpOp, ContainerTemplate, ContinueOn, Dag, Expr, OpTemplate, Operand, OutputSrc,
-    ParamSrc, Slices, Step, StepPolicy, Steps, TemplateIo, Workflow,
+    ArtSrc, BackendSelector, CmpOp, ContainerTemplate, ContinueOn, Dag, Expr, OpTemplate,
+    Operand, OutputSrc, ParamSrc, Slices, Step, StepPolicy, Steps, TemplateIo, Workflow,
 };
 pub use op::{
     ArtifactSpec, CancelToken, FnOp, Op, OpCtx, OpError, ParamSpec, ShellOp, Signature,

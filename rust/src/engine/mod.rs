@@ -17,6 +17,7 @@
 //!   is the backpressure;
 //! * strict type checking of inputs before and outputs after every OP.
 
+pub mod place;
 pub mod run;
 pub(crate) mod sched;
 
@@ -27,14 +28,17 @@ use std::time::Instant;
 
 use crate::cluster::{Cluster, PodBinding, PodSpec};
 use crate::core::{
-    ArtSrc, ArtifactRef, ContainerTemplate, ContinueOn, OpCtx, OpError, OpTemplate, Operand,
-    ParamSrc, Slices, Step, StepPolicy, Value, Workflow,
+    ArtSrc, ArtifactRef, BackendSelector, ContainerTemplate, ContinueOn, OpCtx, OpError,
+    OpTemplate, Operand, ParamSrc, Slices, Step, StepPolicy, Value, Workflow,
 };
 use crate::executor::{Executor, LocalExecutor};
 use crate::metrics::EventKind;
 use crate::storage::{MemStorage, StorageClient};
 use crate::util::Stopwatch;
 
+pub use place::{
+    Backend, BackendCapacity, BackendStats, PlaceError, PlaceRequest, PlacementLease, Placer,
+};
 pub use run::{NodePhase, NodeStatus, ReusedStep, RunPhase, Semaphore, StepOutputs, WorkflowRun};
 
 use sched::{ScopeHandle, StepScheduler};
@@ -78,6 +82,11 @@ pub struct Engine {
     /// Engine-wide bounded worker pool; all DAG tasks, group steps and
     /// slices run as jobs on it (at most `config.parallelism` threads).
     pub(crate) sched: StepScheduler,
+    /// Multi-backend placement layer (present when backends are
+    /// registered). Steps without an explicit `.executor(..)` override are
+    /// routed through it; the engine-level `cluster` is then *not*
+    /// consulted for those steps (each backend carries its own capacity).
+    pub(crate) placer: Option<Arc<Placer>>,
 }
 
 /// Builder for [`Engine`].
@@ -86,6 +95,7 @@ pub struct EngineBuilder {
     cluster: Option<Arc<Cluster>>,
     runtime: Option<Arc<crate::runtime::Runtime>>,
     executors: BTreeMap<String, Arc<dyn Executor>>,
+    backends: Vec<Backend>,
     config: EngineConfig,
 }
 
@@ -114,6 +124,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Register an execution backend on the placement layer. Registering
+    /// at least one backend activates multi-backend dispatch: every leaf
+    /// step without an explicit `.executor(..)` override is placed onto a
+    /// backend with free capacity that matches the step's
+    /// [`BackendSelector`] (see [`place`] module docs).
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backends.push(b);
+        self
+    }
+
     /// Override the configuration.
     pub fn config(mut self, c: EngineConfig) -> Self {
         self.config = c;
@@ -129,6 +149,11 @@ impl EngineBuilder {
     /// Finalize.
     pub fn build(self) -> Engine {
         let sched = StepScheduler::new(self.config.parallelism);
+        let placer = if self.backends.is_empty() {
+            None
+        } else {
+            Some(Arc::new(Placer::new(self.backends)))
+        };
         Engine {
             storage: self.storage,
             cluster: self.cluster,
@@ -136,6 +161,7 @@ impl EngineBuilder {
             executors: self.executors,
             config: self.config,
             sched,
+            placer,
         }
     }
 }
@@ -199,6 +225,7 @@ impl Engine {
             )]
             .into_iter()
             .collect(),
+            backends: Vec::new(),
             config: EngineConfig::default(),
         }
     }
@@ -268,8 +295,14 @@ impl Engine {
             params: wf.arguments.clone(),
             artifacts: wf.input_artifacts.clone(),
         };
-        let result =
-            exec.execute_template(&wf.entrypoint, bindings, "main", &StepPolicy::default(), None);
+        let result = exec.execute_template(
+            &wf.entrypoint,
+            bindings,
+            "main",
+            &StepPolicy::default(),
+            None,
+            None,
+        );
         let (outputs, error) = match result {
             Ok(o) => {
                 run.set_phase(RunPhase::Succeeded);
@@ -290,6 +323,16 @@ impl Engine {
             .get(name)
             .cloned()
             .ok_or_else(|| format!("executor '{name}' is not registered"))
+    }
+
+    /// The multi-backend placement layer, when backends are registered.
+    pub fn placer(&self) -> Option<&Arc<Placer>> {
+        self.placer.as_ref()
+    }
+
+    /// Per-backend placement statistics (empty without a placement layer).
+    pub fn backend_stats(&self) -> Vec<BackendStats> {
+        self.placer.as_ref().map(|p| p.stats()).unwrap_or_default()
     }
 }
 
@@ -347,6 +390,7 @@ impl<'e> Exec<'e> {
         path: &str,
         policy: &StepPolicy,
         executor_override: Option<&str>,
+        backend_sel: Option<&BackendSelector>,
     ) -> Result<StepOutputs, String> {
         let tpl = self
             .wf
@@ -355,7 +399,7 @@ impl<'e> Exec<'e> {
             .ok_or_else(|| format!("{path}: unknown template '{name}'"))?;
         match tpl {
             OpTemplate::Container(ct) => {
-                self.execute_container(ct, bindings, path, policy, executor_override)
+                self.execute_container(ct, bindings, path, policy, executor_override, backend_sel)
             }
             OpTemplate::Steps(st) => {
                 let mut siblings = SiblingMap::new();
@@ -538,6 +582,27 @@ impl<'e> Exec<'e> {
         }
     }
 
+    /// `ScheduleResult`-aware ready queue (ROADMAP): a plain container
+    /// task whose leaf request no backend/node could *ever* satisfy is
+    /// failed at readiness time — it never takes a scheduling permit and
+    /// never parks a worker in a capacity wait (only a momentary
+    /// bookkeeping job). Conservative gate: steps with conditions, slices,
+    /// or reuse keys keep the normal path (their leaf execution may
+    /// legitimately never happen or come from the reuse set).
+    fn dag_task_infeasible(&self, step: &Step) -> Option<String> {
+        if step.when.is_some() || step.slices.is_some() || step.key.is_some() {
+            return None;
+        }
+        let ct = match self.wf.templates.get(&step.template) {
+            Some(OpTemplate::Container(ct)) => ct,
+            _ => return None,
+        };
+        let legacy = self.engine.placer.is_none() || step.executor.is_some();
+        self.check_placement_feasible(ct, legacy, step.backend.as_ref(), "")
+            .err()
+            .map(|e| e.trim_start_matches(": ").to_string())
+    }
+
     /// Submit one ready DAG task to the pool.
     fn spawn_dag_task<'env>(
         &'env self,
@@ -547,6 +612,30 @@ impl<'e> Exec<'e> {
         path: &'env str,
         idx: usize,
     ) {
+        // gate only while the template is still healthy: a failing DAG's
+        // remaining tasks end up Skipped, and must not burn probe locks or
+        // count as placement rejections on the way there
+        if !state.failed.load(Ordering::SeqCst) {
+            if let Some(err) = self.dag_task_infeasible(&state.tasks[idx]) {
+                // fail the task without ever entering the attempt path (no
+                // scheduling permit, no capacity wait). The bookkeeping
+                // still runs as a queued job — completing inline here
+                // would recurse spawn→complete→spawn down a chain of
+                // infeasible continue_on_failed tasks and overflow the
+                // stack.
+                let scope2 = scope.clone();
+                scope.submit(move || {
+                    let step = &state.tasks[idx];
+                    let outcome = if state.failed.load(Ordering::SeqCst) {
+                        StepOutcome::Skipped
+                    } else {
+                        self.fail_step(step, &format!("{path}/{}", step.name), err)
+                    };
+                    self.complete_dag_task(&scope2, state, bindings, path, idx, outcome);
+                });
+                return;
+            }
+        }
         let scope2 = scope.clone();
         scope.submit(move || {
             let outcome = if state.failed.load(Ordering::SeqCst) {
@@ -677,6 +766,7 @@ impl<'e> Exec<'e> {
             path,
             &step.policy,
             step.executor.as_deref(),
+            step.backend.as_ref(),
         );
         match result {
             Ok(outputs) => {
@@ -996,6 +1086,7 @@ impl<'e> Exec<'e> {
         path: &str,
         policy: &StepPolicy,
         executor_override: Option<&str>,
+        backend_sel: Option<&BackendSelector>,
     ) -> Result<StepOutputs, String> {
         let sig = ct.op.signature();
         // strict input type checking (before execute)
@@ -1027,9 +1118,47 @@ impl<'e> Exec<'e> {
             }
         }
 
-        let executor_name =
-            executor_override.unwrap_or(self.engine.config.default_executor.as_str());
-        let executor = self.engine.executor_named(executor_name).map_err(|e| format!("{path}: {e}"))?;
+        // A backend selector that cannot be honored is an error, not a
+        // silent fall-through to some other executor — the constraint may
+        // be "must run where the GPU/data is".
+        if let Some(sel) = backend_sel {
+            if executor_override.is_some() {
+                return Err(format!(
+                    "{path}: step sets both an executor override and a backend selector \
+                     [{}] — use one routing mechanism",
+                    sel.display()
+                ));
+            }
+            if self.engine.placer.is_none() {
+                return Err(format!(
+                    "{path}: step has backend selector [{}] but no backends are \
+                     registered on the engine",
+                    sel.display()
+                ));
+            }
+        }
+
+        // Routing decision: an explicit `.executor(..)` override keeps the
+        // legacy named-executor path (with the engine-level cluster as the
+        // backpressure). Otherwise, when backends are registered, the
+        // placement layer picks a backend *per attempt* — a retry after a
+        // node flake can land on a different backend.
+        let legacy_executor: Option<Arc<dyn Executor>> =
+            if self.engine.placer.is_none() || executor_override.is_some() {
+                let name =
+                    executor_override.unwrap_or(self.engine.config.default_executor.as_str());
+                Some(self.engine.executor_named(name).map_err(|e| format!("{path}: {e}"))?)
+            } else {
+                None
+            };
+
+        // ScheduleResult-aware fail-fast (ROADMAP): a request no backend /
+        // node could *ever* satisfy fails the step now, before the attempt
+        // loop takes a scheduling permit or parks in a capacity wait.
+        // (DAG tasks were already gated at the ready queue; re-probing here
+        // is one cheap lock round-trip and keeps group/slice/recursion
+        // paths — which have no ready-queue gate — equally protected.)
+        self.check_placement_feasible(ct, legacy_executor.is_some(), backend_sel, path)?;
 
         let ready_at = Instant::now();
         let mut attempt = 0u32;
@@ -1040,7 +1169,8 @@ impl<'e> Exec<'e> {
                 &bindings.artifacts,
                 path,
                 policy,
-                &executor,
+                &legacy_executor,
+                backend_sel,
                 ready_at,
                 attempt,
             ) {
@@ -1092,6 +1222,38 @@ impl<'e> Exec<'e> {
         }
     }
 
+    /// Fail-fast feasibility gate for a leaf request: legacy steps probe
+    /// the engine cluster, placed steps ask the [`Placer`]. Errors name
+    /// the backend(s)/cluster that refused the request.
+    fn check_placement_feasible(
+        &self,
+        ct: &ContainerTemplate,
+        legacy: bool,
+        backend_sel: Option<&BackendSelector>,
+        path: &str,
+    ) -> Result<(), String> {
+        if legacy {
+            if let Some(cluster) = &self.engine.cluster {
+                if !cluster.check_feasible(&pod_spec_for(path, ct)) {
+                    self.run.metrics.pods_rejected.inc();
+                    return Err(format!("{path}: {}", infeasible_pod_msg(ct)));
+                }
+            }
+            return Ok(());
+        }
+        let placer = self.engine.placer.as_ref().expect("placed mode requires a placer");
+        let req = PlaceRequest {
+            path: path.to_string(),
+            resources: ct.resources,
+            node_selector: ct.node_selector.clone(),
+            selector: backend_sel.cloned().unwrap_or_default(),
+        };
+        placer.check(&req).map_err(|e| {
+            self.run.metrics.placement_rejected.inc();
+            format!("{path}: {e}")
+        })
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn one_attempt(
         &self,
@@ -1100,7 +1262,8 @@ impl<'e> Exec<'e> {
         input_artifacts: &BTreeMap<String, ArtifactRef>,
         path: &str,
         policy: &StepPolicy,
-        executor: &Arc<dyn Executor>,
+        legacy_executor: &Option<Arc<dyn Executor>>,
+        backend_sel: Option<&BackendSelector>,
         ready_at: Instant,
         attempt: u32,
     ) -> Result<StepOutputs, OpError> {
@@ -1109,33 +1272,81 @@ impl<'e> Exec<'e> {
         // has officially failed and the workflow must keep making progress
         // (seed semantics), so the permit frees when one_attempt returns
         let _sem = SemGuard { run: &**self.run };
-        // pod acquisition — the cluster is the backpressure (§2.6). The pod
-        // guard, by contrast, follows the OP itself (into the watchdog
-        // thread on the timeout path): physical capacity is only returned
-        // when the OP actually stops.
+        // capacity acquisition — pod (legacy cluster) or backend lease
+        // (placement layer) is the backpressure (§2.6). Both guards follow
+        // the OP itself (into the watchdog thread on the timeout path):
+        // physical capacity is only returned when the OP actually stops.
         let mut pod_guard: Option<PodGuard> = None;
-        if let Some(cluster) = &self.engine.cluster {
-            let mut pod = PodSpec::new(path.to_string(), ct.resources);
-            for (k, v) in &ct.node_selector {
-                pod = pod.select(k, v);
-            }
-            match cluster.bind_blocking(&pod) {
-                Some(b) => {
-                    self.run.metrics.pods_scheduled.inc();
-                    self.run.trace.push(EventKind::PodBound, path, b.node.clone());
-                    pod_guard = Some(PodGuard {
-                        run: Arc::clone(self.run),
-                        cluster: Arc::clone(cluster),
-                        binding: b,
-                        path: path.to_string(),
-                    });
+        let mut lease_guard: Option<LeaseGuard> = None;
+        // node flake pre-sampled by the pod binding (either path); checked
+        // after the dispatch-latency observation so flaked attempt 0 still
+        // counts as dispatched
+        let mut flaked_node: Option<String> = None;
+        let executor: Arc<dyn Executor>;
+        match legacy_executor {
+            Some(exec) => {
+                executor = Arc::clone(exec);
+                if let Some(cluster) = &self.engine.cluster {
+                    let pod = pod_spec_for(path, ct);
+                    match cluster.bind_blocking(&pod) {
+                        Some(b) => {
+                            self.run.metrics.pods_scheduled.inc();
+                            self.run.trace.push(EventKind::PodBound, path, b.node.clone());
+                            pod_guard = Some(PodGuard {
+                                run: Arc::clone(self.run),
+                                cluster: Arc::clone(cluster),
+                                binding: b,
+                                path: path.to_string(),
+                            });
+                        }
+                        None => {
+                            self.run.metrics.pods_rejected.inc();
+                            return Err(OpError::Fatal(infeasible_pod_msg(ct)));
+                        }
+                    }
                 }
-                None => {
-                    self.run.metrics.pods_rejected.inc();
-                    return Err(OpError::Fatal(format!(
-                        "pod request {:?} (selector {:?}) is infeasible on this cluster",
-                        ct.resources, ct.node_selector
-                    )));
+                flaked_node = pod_guard
+                    .as_ref()
+                    .filter(|g| g.binding.flake)
+                    .map(|g| g.binding.node.clone());
+            }
+            None => {
+                let placer =
+                    self.engine.placer.as_ref().expect("placed mode requires a placer");
+                let req = PlaceRequest {
+                    path: path.to_string(),
+                    resources: ct.resources,
+                    node_selector: ct.node_selector.clone(),
+                    selector: backend_sel.cloned().unwrap_or_default(),
+                };
+                match placer.place_blocking(&req) {
+                    Ok(lease) => {
+                        self.run.metrics.placements.inc();
+                        if let Some(node) = lease.pod_node() {
+                            self.run.metrics.pods_scheduled.inc();
+                            self.run.trace.push(EventKind::PodBound, path, node.to_string());
+                        }
+                        self.run.record_placement(lease.backend_name());
+                        self.run.trace.push(
+                            EventKind::StepPlaced,
+                            path,
+                            lease.backend_name().to_string(),
+                        );
+                        executor = lease.executor();
+                        flaked_node =
+                            lease.pod_flake().then(|| lease.pod_node().unwrap_or("?").to_string());
+                        lease_guard = Some(LeaseGuard {
+                            run: Arc::clone(self.run),
+                            lease,
+                            path: path.to_string(),
+                        });
+                    }
+                    Err(e) => {
+                        // raced into infeasibility after the pre-check
+                        // (e.g. a node was cordoned while we waited)
+                        self.run.metrics.placement_rejected.inc();
+                        return Err(OpError::Fatal(e.to_string()));
+                    }
                 }
             }
         }
@@ -1143,12 +1354,10 @@ impl<'e> Exec<'e> {
             self.run.metrics.dispatch.observe(ready_at.elapsed());
         }
 
-        // node flake injected by the cluster → transient failure (§2.4)
-        if pod_guard.as_ref().map(|g| g.binding.flake).unwrap_or(false) {
-            return Err(OpError::Transient(format!(
-                "node {} flaked during execution",
-                pod_guard.as_ref().unwrap().binding.node
-            )));
+        // node flake injected by the (backend's) cluster → transient
+        // failure; the guard drop returns the pod/lease (§2.4)
+        if let Some(node) = flaked_node {
+            return Err(OpError::Transient(format!("node {node} flaked during execution")));
         }
 
         let mut ctx = OpCtx {
@@ -1199,7 +1408,9 @@ impl<'e> Exec<'e> {
                     .name(format!("dflow-watchdog-{}", self.run.id))
                     .spawn(move || {
                         let r = exec.execute(&ct2, &mut ctx);
-                        drop(pod_guard); // OP finished (or aborted): free the pod
+                        // OP finished (or aborted): free the pod / backend lease
+                        drop(pod_guard);
+                        drop(lease_guard);
                         tx.send(r.map(|()| StepOutputs {
                             params: ctx.outputs,
                             artifacts: ctx.output_artifacts,
@@ -1240,6 +1451,25 @@ impl<'e> Exec<'e> {
     }
 }
 
+/// Pod spec for a container template's leaf attempt (resource request +
+/// node selector), shared by the feasibility gate and the bind path so the
+/// two can never disagree about what is being requested.
+fn pod_spec_for(path: &str, ct: &ContainerTemplate) -> PodSpec {
+    let mut pod = PodSpec::new(path.to_string(), ct.resources);
+    for (k, v) in &ct.node_selector {
+        pod = pod.select(k, v);
+    }
+    pod
+}
+
+/// The one infeasible-pod error wording (gate and bind paths must agree).
+fn infeasible_pod_msg(ct: &ContainerTemplate) -> String {
+    format!(
+        "pod request {:?} (selector {:?}) is infeasible on this cluster",
+        ct.resources, ct.node_selector
+    )
+}
+
 /// Frees the per-run scheduling permit when an attempt frame exits —
 /// including the timeout path, where the step has already been reported
 /// failed and the workflow must keep making progress.
@@ -1271,6 +1501,33 @@ impl Drop for PodGuard {
         self.run
             .trace
             .push(EventKind::PodReleased, &self.path, self.binding.node.clone());
+    }
+}
+
+/// Releases an attempt's backend lease when the OP *actually* stops —
+/// the placement-layer analogue of [`PodGuard`]: on the timeout path the
+/// guard lives inside the watchdog thread, so per-backend in-flight
+/// accounting returns to zero exactly when the cancelled OP exits.
+struct LeaseGuard {
+    run: Arc<WorkflowRun>,
+    lease: PlacementLease,
+    path: String,
+}
+
+impl Drop for LeaseGuard {
+    fn drop(&mut self) {
+        // trace first: the lease field's own drop (which runs after this
+        // body) returns the capacity and wakes blocked placements. A
+        // cluster-backed lease balances its PodBound event so trace
+        // consumers pairing bound/released see the pod come home.
+        if let Some(node) = self.lease.pod_node() {
+            self.run.trace.push(EventKind::PodReleased, &self.path, node.to_string());
+        }
+        self.run.trace.push(
+            EventKind::BackendReleased,
+            &self.path,
+            self.lease.backend_name().to_string(),
+        );
     }
 }
 
@@ -1834,5 +2091,156 @@ mod tests {
         let r = Engine::local().run(&wf).unwrap();
         assert!(!r.succeeded());
         assert!(r.error.unwrap().contains("not registered"));
+    }
+
+    #[test]
+    fn one_workflow_spans_three_backends() {
+        // the paper's core promise, now engine-enforced: a single run whose
+        // steps execute on a k8s-sim cluster, an HPC partition and a local
+        // slot backend at once, with the per-backend split observable
+        use crate::cluster::Resources;
+        use crate::hpc::{HpcScheduler, PartitionSpec};
+        let cluster = Arc::new(Cluster::uniform(2, Resources::cpu(4000), 0));
+        let slurm =
+            HpcScheduler::new(vec![PartitionSpec::new("batch", 2, Duration::from_secs(30))]);
+        let engine = Engine::builder()
+            .backend(Backend::cluster("k8s", cluster.clone()).label("tier", "cloud"))
+            .backend(Backend::partition("hpc", slurm.clone(), "batch").label("tier", "hpc"))
+            .backend(Backend::local_slots("laptop", 2).label("tier", "edge"))
+            .build();
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("add", add_op()).resources(Resources::cpu(500)))
+            .steps(
+                Steps::new("main")
+                    .then_parallel(vec![
+                        Step::new("a", "add")
+                            .param("a", 1i64)
+                            .param("b", 1i64)
+                            .on_backend("k8s"),
+                        Step::new("b", "add")
+                            .param("a", 2i64)
+                            .param("b", 2i64)
+                            .backend_where("tier", "hpc"),
+                        Step::new("c", "add")
+                            .param("a", 3i64)
+                            .param("b", 3i64)
+                            .on_backend("laptop"),
+                    ])
+                    .out_param_from("r", "b", "sum"),
+            )
+            .entrypoint("main");
+        let r = engine.run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        assert_eq!(r.outputs.params["r"], Value::Int(4));
+        let split = r.run.placements();
+        assert_eq!(split.get("k8s"), Some(&1));
+        assert_eq!(split.get("hpc"), Some(&1));
+        assert_eq!(split.get("laptop"), Some(&1));
+        assert_eq!(r.run.metrics.placements.get(), 3);
+        // every lease returned; cluster pod accounting balanced
+        for s in engine.backend_stats() {
+            assert_eq!(s.inflight, 0, "backend {} stranded a lease", s.name);
+        }
+        assert_eq!(cluster.pods_in_flight(), 0);
+        let st = slurm.partition_stats("batch").unwrap();
+        assert_eq!((st.submitted, st.completed), (1, 1));
+    }
+
+    #[test]
+    fn placement_selector_no_match_fails_with_backend_names() {
+        let engine = Engine::builder().backend(Backend::local("only-local")).build();
+        let op = Arc::new(FnOp::new(Signature::new(), |_| Ok(())));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("op", op))
+            .steps(Steps::new("main").then(Step::new("s", "op").on_backend("ghost")))
+            .entrypoint("main");
+        let r = engine.run(&wf).unwrap();
+        assert!(!r.succeeded());
+        let msg = r.error.unwrap();
+        assert!(msg.contains("ghost"), "{msg}");
+        assert!(msg.contains("only-local"), "{msg}");
+    }
+
+    #[test]
+    fn backend_selector_without_backends_is_an_error() {
+        let op = Arc::new(FnOp::new(Signature::new(), |_| Ok(())));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("op", op))
+            .steps(Steps::new("main").then(Step::new("s", "op").on_backend("gpu")))
+            .entrypoint("main");
+        let r = Engine::local().run(&wf).unwrap();
+        assert!(!r.succeeded());
+        let msg = r.error.unwrap();
+        assert!(msg.contains("no backends are registered"), "{msg}");
+        assert!(msg.contains("gpu"), "{msg}");
+    }
+
+    #[test]
+    fn backend_selector_plus_executor_override_is_an_error() {
+        let op = Arc::new(FnOp::new(Signature::new(), |_| Ok(())));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("op", op))
+            .steps(
+                Steps::new("main")
+                    .then(Step::new("s", "op").executor("local").on_backend("a")),
+            )
+            .entrypoint("main");
+        let engine = Engine::builder().backend(Backend::local("a")).build();
+        let r = engine.run(&wf).unwrap();
+        assert!(!r.succeeded());
+        assert!(r.error.unwrap().contains("one routing mechanism"));
+    }
+
+    #[test]
+    fn executor_override_bypasses_placement() {
+        use crate::executor::FlakyExecutor;
+        let flaky = Arc::new(FlakyExecutor::new(1.0, 1));
+        let op = Arc::new(FnOp::new(Signature::new(), |_| Ok(())));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("op", op))
+            .steps(Steps::new("main").then(Step::new("s", "op").executor("flaky")))
+            .entrypoint("main");
+        let engine = Engine::builder()
+            .backend(Backend::local("a"))
+            .executor("flaky", flaky.clone())
+            .build();
+        let r = engine.run(&wf).unwrap();
+        assert!(!r.succeeded());
+        assert_eq!(flaky.attempts.load(Ordering::Relaxed), 1);
+        assert!(r.run.placements().is_empty(), "override must not consume a placement");
+    }
+
+    #[test]
+    fn placed_timeout_returns_lease_when_op_stops() {
+        // the lease analogue of the pod-timeout test: capacity reads busy
+        // until the cancelled OP actually exits, then returns to zero
+        let engine = Arc::new(Engine::builder().backend(Backend::local_slots("b", 1)).build());
+        let op = Arc::new(FnOp::new(Signature::new().out_param("ok", ParamType::Bool), |ctx| {
+            for _ in 0..400 {
+                ctx.checkpoint()?;
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            ctx.set("ok", true);
+            Ok(())
+        }));
+        let mut policy = StepPolicy::default();
+        policy.timeout = Some(Duration::from_millis(40));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("slow", op))
+            .steps(Steps::new("main").then(Step::new("s", "slow").policy(policy)))
+            .entrypoint("main");
+        let r = engine.run(&wf).unwrap();
+        assert!(!r.succeeded());
+        let backend = engine.placer().unwrap().backend("b").unwrap().clone();
+        let mut drained = false;
+        for _ in 0..400 {
+            if backend.inflight() == 0 {
+                drained = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(drained, "cancelled OP never returned its backend lease");
+        assert_eq!(backend.placed_total(), 1);
     }
 }

@@ -1,0 +1,722 @@
+//! # Backends & placement
+//!
+//! Multi-backend dispatch (ROADMAP "multi-backend dispatch" item): one
+//! workflow's steps can execute on several infrastructures *at once* — a
+//! k8s-sim [`Cluster`], one backend per [`HpcScheduler`] partition (reached
+//! through a [`DispatcherExecutor`]), remote/slot-limited executors and the
+//! in-process local executor. This is the paper's core promise that an OP
+//! is "independent of the underlying infrastructure": the step declares
+//! *constraints* (a [`BackendSelector`]), the engine decides *where*.
+//!
+//! The layer sits between the engine's ready queue and the executors:
+//!
+//! * [`Backend`] — a named `{executor, capacity probe, selector labels}`
+//!   bundle registered on the engine builder.
+//! * [`Placer`] — consults each matching backend's capacity probe
+//!   ([`Cluster::try_bind`] for k8s-sim backends,
+//!   [`HpcScheduler::partition_stats`] for partition backends, a slot
+//!   counter otherwise) and routes the step to a backend with free
+//!   capacity. Requests no backend could *ever* satisfy fail fast with
+//!   the backend names in the error ([`PlaceError`]) — before the step
+//!   occupies a scheduling permit or parks a pool worker.
+//! * [`PlacementLease`] — the acquired capacity. Held for exactly as long
+//!   as the OP runs (on timeout it moves into the watchdog thread with the
+//!   attempt), so per-backend in-flight accounting returns to zero when
+//!   the OP actually stops, never earlier and never leaking.
+//!
+//! Capacity probes are *conservative*: a lease is only handed out when the
+//! probe under the placer lock says the backend has room, so no interleaving
+//! of concurrent placements can over-commit a backend (property-tested in
+//! `rust/tests/placement.rs`).
+//!
+//! ## Example
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use std::time::Duration;
+//! use dflow::cluster::{Cluster, Resources};
+//! use dflow::core::{ContainerTemplate, FnOp, Signature, Step, Steps, Workflow};
+//! use dflow::engine::{Backend, Engine};
+//! use dflow::hpc::{HpcScheduler, PartitionSpec};
+//!
+//! let cluster = Arc::new(Cluster::uniform(2, Resources::cpu(4000), 0));
+//! let slurm = HpcScheduler::new(vec![PartitionSpec::new(
+//!     "batch", 4, Duration::from_secs(60),
+//! )]);
+//! let engine = Engine::builder()
+//!     .backend(Backend::cluster("k8s", cluster).label("tier", "cloud"))
+//!     .backend(Backend::partition("hpc-batch", slurm, "batch").label("tier", "hpc"))
+//!     .backend(Backend::local_slots("laptop", 2))
+//!     .build();
+//! let op = Arc::new(FnOp::new(Signature::new(), |_| Ok(())));
+//! let wf = Workflow::new("w")
+//!     .container(ContainerTemplate::new("op", op))
+//!     .steps(
+//!         Steps::new("main")
+//!             .then(Step::new("anywhere", "op"))          // any backend
+//!             .then(Step::new("cloud", "op").backend_where("tier", "cloud"))
+//!             .then(Step::new("pinned", "op").on_backend("laptop")),
+//!     )
+//!     .entrypoint("main");
+//! let r = engine.run(&wf).unwrap();
+//! assert!(r.succeeded());
+//! println!("{:?}", r.run.placements()); // e.g. {"k8s": 1, "laptop": 2}
+//! ```
+//! (`no_run`: doctest binaries lack the xla rpath in this build image.)
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::cluster::{Cluster, PodBinding, PodSpec, Resources, ScheduleResult};
+use crate::core::BackendSelector;
+use crate::executor::{DispatcherExecutor, Executor, LocalExecutor};
+use crate::hpc::HpcScheduler;
+
+/// How a backend bounds its concurrent leaf executions.
+pub enum BackendCapacity {
+    /// k8s-sim: capacity probe is [`Cluster::try_bind`] with the step's
+    /// resource request + node selector; the pod binding *is* the lease.
+    Cluster(Arc<Cluster>),
+    /// One HPC partition: capacity probe is
+    /// [`HpcScheduler::partition_stats`] (slots vs. running + queued),
+    /// cross-checked against this backend's own lease count. The resource
+    /// vector and node selector are ignored — a partition slot is a slot.
+    Partition { sched: Arc<HpcScheduler>, partition: String },
+    /// Fixed number of concurrent leases (remote executors, local caps).
+    Slots(usize),
+    /// No backend-side limit (the engine's parallelism still applies).
+    Unbounded,
+}
+
+impl BackendCapacity {
+    fn describe(&self) -> String {
+        match self {
+            BackendCapacity::Cluster(c) => {
+                format!("cluster({} nodes, {}m cpu)", c.node_count(), c.total_cpu_milli())
+            }
+            BackendCapacity::Partition { sched, partition } => {
+                match sched.partition_stats(partition) {
+                    Some(st) => format!("partition({partition}, {} slots)", st.slots),
+                    None => format!("partition({partition}, unknown)"),
+                }
+            }
+            BackendCapacity::Slots(n) => format!("slots({n})"),
+            BackendCapacity::Unbounded => "unbounded".to_string(),
+        }
+    }
+}
+
+/// A named execution backend: executor + capacity probe + selector labels.
+/// Register on [`crate::engine::EngineBuilder::backend`].
+pub struct Backend {
+    name: String,
+    labels: BTreeMap<String, String>,
+    executor: Arc<dyn Executor>,
+    capacity: BackendCapacity,
+    /// Leases currently held against this backend.
+    inflight: AtomicUsize,
+    /// Highest concurrent lease count ever observed.
+    peak: AtomicUsize,
+    /// Total leases ever granted.
+    placed: AtomicU64,
+}
+
+impl Backend {
+    /// Generic constructor: any executor behind any capacity model.
+    pub fn custom(
+        name: impl Into<String>,
+        executor: Arc<dyn Executor>,
+        capacity: BackendCapacity,
+    ) -> Backend {
+        Backend {
+            name: name.into(),
+            labels: BTreeMap::new(),
+            executor,
+            capacity,
+            inflight: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            placed: AtomicU64::new(0),
+        }
+    }
+
+    /// k8s-sim backend: OPs run in-process ("in the container") against a
+    /// pod bound on `cluster`.
+    pub fn cluster(name: impl Into<String>, cluster: Arc<Cluster>) -> Backend {
+        Backend::custom(name, Arc::new(LocalExecutor), BackendCapacity::Cluster(cluster))
+    }
+
+    /// HPC backend for one partition of `sched`: OPs ship through a
+    /// [`DispatcherExecutor`]; capacity = the partition's slots.
+    pub fn partition(
+        name: impl Into<String>,
+        sched: Arc<HpcScheduler>,
+        partition: &str,
+    ) -> Backend {
+        Backend::custom(
+            name,
+            Arc::new(DispatcherExecutor::new(sched.clone(), partition)),
+            BackendCapacity::Partition { sched, partition: partition.to_string() },
+        )
+    }
+
+    /// Local in-process backend capped at `slots` concurrent executions.
+    pub fn local_slots(name: impl Into<String>, slots: usize) -> Backend {
+        Backend::custom(name, Arc::new(LocalExecutor), BackendCapacity::Slots(slots))
+    }
+
+    /// Local in-process backend with no backend-side cap.
+    pub fn local(name: impl Into<String>) -> Backend {
+        Backend::custom(name, Arc::new(LocalExecutor), BackendCapacity::Unbounded)
+    }
+
+    /// Attach a selector label.
+    pub fn label(mut self, k: &str, v: &str) -> Backend {
+        self.labels.insert(k.to_string(), v.to_string());
+        self
+    }
+
+    /// Registered name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Selector labels.
+    pub fn labels(&self) -> &BTreeMap<String, String> {
+        &self.labels
+    }
+
+    /// Leases currently held (per-backend in-flight accounting). Returns
+    /// to zero when every placed OP has actually stopped.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Highest concurrent lease count observed so far.
+    pub fn peak_inflight(&self) -> usize {
+        self.peak.load(Ordering::SeqCst)
+    }
+
+    /// Total leases ever granted.
+    pub fn placed_total(&self) -> u64 {
+        self.placed.load(Ordering::SeqCst)
+    }
+
+    fn matches(&self, sel: &BackendSelector) -> bool {
+        if let Some(n) = &sel.name {
+            if *n != self.name {
+                return false;
+            }
+        }
+        sel.labels.iter().all(|(k, v)| self.labels.get(k) == Some(v))
+    }
+
+    /// Static feasibility: could this backend *ever* run the request?
+    fn feasible(&self, req: &PlaceRequest) -> Result<(), String> {
+        match &self.capacity {
+            BackendCapacity::Cluster(c) => {
+                let pod = req.pod_spec();
+                if c.check_feasible(&pod) {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "pod request {:?} (node selector {:?}) fits no node",
+                        req.resources, req.node_selector
+                    ))
+                }
+            }
+            BackendCapacity::Partition { sched, partition } => {
+                match sched.partition_stats(partition) {
+                    Some(st) if st.slots > 0 => Ok(()),
+                    Some(_) => Err(format!("partition '{partition}' has zero slots")),
+                    None => Err(format!("unknown partition '{partition}'")),
+                }
+            }
+            BackendCapacity::Slots(0) => Err("zero slots".to_string()),
+            BackendCapacity::Slots(_) | BackendCapacity::Unbounded => Ok(()),
+        }
+    }
+}
+
+/// What a step asks the placer for.
+#[derive(Clone, Default)]
+pub struct PlaceRequest {
+    /// Step path (observability; becomes the pod name on cluster backends).
+    pub path: String,
+    /// Pod resource request (cluster backends only).
+    pub resources: Resources,
+    /// Node selector within a cluster backend (virtual HPC nodes etc.).
+    pub node_selector: BTreeMap<String, String>,
+    /// Which backends are acceptable.
+    pub selector: BackendSelector,
+}
+
+impl PlaceRequest {
+    fn pod_spec(&self) -> PodSpec {
+        let mut pod = PodSpec::new(self.path.clone(), self.resources);
+        for (k, v) in &self.node_selector {
+            pod = pod.select(k, v);
+        }
+        pod
+    }
+}
+
+/// Why a request could not be placed (terminally — transient full-capacity
+/// states block instead). The message always names the backends involved so
+/// a failing step's error pinpoints *where* placement was refused.
+#[derive(Debug, Clone)]
+pub enum PlaceError {
+    /// The engine has a placement layer but no backend matches the
+    /// step's selector.
+    NoMatch { selector: String, known: Vec<String> },
+    /// Every matching backend reported the request statically infeasible.
+    Infeasible { tried: Vec<(String, String)> },
+}
+
+impl std::fmt::Display for PlaceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlaceError::NoMatch { selector, known } => write!(
+                f,
+                "no registered backend matches selector [{selector}] (backends: {})",
+                known.join(", ")
+            ),
+            PlaceError::Infeasible { tried } => {
+                let detail: Vec<String> =
+                    tried.iter().map(|(b, why)| format!("backend '{b}': {why}")).collect();
+                write!(
+                    f,
+                    "request is infeasible on every matching backend — {}",
+                    detail.join("; ")
+                )
+            }
+        }
+    }
+}
+
+/// Wakeup hub shared by the placer and every outstanding lease: a lease
+/// drop is the only placer-visible capacity transition, so it notifies
+/// here. Capacity can also free through channels the placer cannot observe
+/// (a [`Cluster`] shared with the legacy executor path, external
+/// partition users, a cordon lifted), hence blocked placements use a
+/// bounded `wait_timeout` re-poll instead of an unbounded wait.
+struct PlacerShared {
+    lock: Mutex<()>,
+    freed: Condvar,
+}
+
+/// Routes ready leaf executions onto registered [`Backend`]s.
+pub struct Placer {
+    backends: Vec<Arc<Backend>>,
+    shared: Arc<PlacerShared>,
+    /// Round-robin cursor: successive placements start probing at
+    /// successive backends, spreading load across equally-free backends
+    /// instead of piling onto the first registered one.
+    rr: AtomicUsize,
+}
+
+enum Acquire {
+    Placed(PlacementLease),
+    /// Temporarily full — the caller may wait.
+    Busy,
+    /// Never satisfiable on this backend (reason).
+    Infeasible(String),
+}
+
+/// Per-backend placement statistics (engine observability surface).
+#[derive(Debug, Clone)]
+pub struct BackendStats {
+    pub name: String,
+    pub inflight: usize,
+    pub peak_inflight: usize,
+    pub placed: u64,
+    pub capacity: String,
+}
+
+impl Placer {
+    /// Build from registered backends (order = registration order).
+    ///
+    /// # Panics
+    /// When two backends share a name — name-pinned selectors, stats
+    /// lookups and stranded-lease checks would silently conflate them, so
+    /// the duplicate is rejected at build time.
+    pub fn new(backends: Vec<Backend>) -> Placer {
+        let mut seen = std::collections::BTreeSet::new();
+        for b in &backends {
+            assert!(
+                seen.insert(b.name.clone()),
+                "duplicate backend name '{}' registered on the engine",
+                b.name
+            );
+        }
+        Placer {
+            backends: backends.into_iter().map(Arc::new).collect(),
+            shared: Arc::new(PlacerShared { lock: Mutex::new(()), freed: Condvar::new() }),
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    /// Registered backends.
+    pub fn backends(&self) -> &[Arc<Backend>] {
+        &self.backends
+    }
+
+    /// Look up a backend by name.
+    pub fn backend(&self, name: &str) -> Option<&Arc<Backend>> {
+        self.backends.iter().find(|b| b.name == name)
+    }
+
+    /// Per-backend statistics snapshot.
+    pub fn stats(&self) -> Vec<BackendStats> {
+        self.backends
+            .iter()
+            .map(|b| BackendStats {
+                name: b.name.clone(),
+                inflight: b.inflight(),
+                peak_inflight: b.peak_inflight(),
+                placed: b.placed_total(),
+                capacity: b.capacity.describe(),
+            })
+            .collect()
+    }
+
+    fn matching(&self, sel: &BackendSelector) -> Vec<&Arc<Backend>> {
+        self.backends.iter().filter(|b| b.matches(sel)).collect()
+    }
+
+    /// Fast feasibility gate: `Err` when *no* backend matches the selector
+    /// or every matching backend is statically infeasible. Run this from
+    /// the ready queue before a step ever takes a pool worker or a
+    /// scheduling permit.
+    pub fn check(&self, req: &PlaceRequest) -> Result<(), PlaceError> {
+        let matching = self.matching(&req.selector);
+        if matching.is_empty() {
+            return Err(PlaceError::NoMatch {
+                selector: req.selector.display(),
+                known: self.backends.iter().map(|b| b.name.clone()).collect(),
+            });
+        }
+        let mut tried = Vec::new();
+        for b in &matching {
+            match b.feasible(req) {
+                Ok(()) => return Ok(()),
+                Err(why) => tried.push((b.name.clone(), why)),
+            }
+        }
+        Err(PlaceError::Infeasible { tried })
+    }
+
+    /// One placement attempt under the placer lock. `Ok(None)` = all
+    /// matching backends are currently full (caller may block).
+    pub fn try_place(&self, req: &PlaceRequest) -> Result<Option<PlacementLease>, PlaceError> {
+        let _guard = self.shared.lock.lock().unwrap();
+        self.try_place_locked(req)
+    }
+
+    fn try_place_locked(&self, req: &PlaceRequest) -> Result<Option<PlacementLease>, PlaceError> {
+        let matching = self.matching(&req.selector);
+        if matching.is_empty() {
+            return Err(PlaceError::NoMatch {
+                selector: req.selector.display(),
+                known: self.backends.iter().map(|b| b.name.clone()).collect(),
+            });
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % matching.len();
+        let mut any_busy = false;
+        let mut tried = Vec::new();
+        for i in 0..matching.len() {
+            let b = matching[(start + i) % matching.len()];
+            match self.try_acquire(b, req) {
+                Acquire::Placed(lease) => return Ok(Some(lease)),
+                Acquire::Busy => any_busy = true,
+                Acquire::Infeasible(why) => tried.push((b.name.clone(), why)),
+            }
+        }
+        if any_busy {
+            Ok(None)
+        } else {
+            Err(PlaceError::Infeasible { tried })
+        }
+    }
+
+    /// Place, blocking while all matching backends are merely full. Fails
+    /// fast (never blocks) when the request is infeasible everywhere —
+    /// including when it *becomes* infeasible mid-wait (e.g. the last
+    /// fitting cluster node is cordoned).
+    pub fn place_blocking(&self, req: &PlaceRequest) -> Result<PlacementLease, PlaceError> {
+        let mut guard = self.shared.lock.lock().unwrap();
+        loop {
+            match self.try_place_locked(req)? {
+                Some(lease) => return Ok(lease),
+                None => {
+                    // bounded wait: lease drops notify, but capacity can
+                    // also free through paths that don't (see PlacerShared)
+                    let (g, _) = self
+                        .shared
+                        .freed
+                        .wait_timeout(guard, Duration::from_millis(25))
+                        .unwrap();
+                    guard = g;
+                }
+            }
+        }
+    }
+
+    fn try_acquire(&self, b: &Arc<Backend>, req: &PlaceRequest) -> Acquire {
+        let pod = match &b.capacity {
+            BackendCapacity::Cluster(c) => match c.try_bind(&req.pod_spec()) {
+                ScheduleResult::Bound(binding) => Some(binding),
+                ScheduleResult::Unschedulable => return Acquire::Busy,
+                ScheduleResult::Infeasible => {
+                    return Acquire::Infeasible(format!(
+                        "pod request {:?} (node selector {:?}) fits no node",
+                        req.resources, req.node_selector
+                    ))
+                }
+            },
+            BackendCapacity::Partition { sched, partition } => {
+                let st = match sched.partition_stats(partition) {
+                    Some(st) => st,
+                    None => {
+                        return Acquire::Infeasible(format!("unknown partition '{partition}'"))
+                    }
+                };
+                if st.slots == 0 {
+                    return Acquire::Infeasible(format!("partition '{partition}' has zero slots"));
+                }
+                // our own lease count is the guarantee; the scheduler-side
+                // load additionally yields to external submitters sharing
+                // the partition
+                let ours = b.inflight.load(Ordering::SeqCst);
+                let external = (st.running + st.queued).saturating_sub(ours);
+                if ours >= st.slots || ours + external >= st.slots {
+                    return Acquire::Busy;
+                }
+                None
+            }
+            BackendCapacity::Slots(n) => {
+                if *n == 0 {
+                    return Acquire::Infeasible("zero slots".to_string());
+                }
+                if b.inflight.load(Ordering::SeqCst) >= *n {
+                    return Acquire::Busy;
+                }
+                None
+            }
+            BackendCapacity::Unbounded => None,
+        };
+        let cur = b.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        b.peak.fetch_max(cur, Ordering::SeqCst);
+        b.placed.fetch_add(1, Ordering::SeqCst);
+        Acquire::Placed(PlacementLease {
+            backend: Arc::clone(b),
+            shared: Arc::clone(&self.shared),
+            pod,
+        })
+    }
+}
+
+/// Capacity acquired for one attempt on one backend. Dropping the lease
+/// returns the capacity (releasing the cluster pod, if any) and wakes
+/// blocked placements. On the timeout path the engine moves the lease into
+/// the attempt's watchdog thread, so the backend reads busy until the
+/// cancelled OP actually stops.
+pub struct PlacementLease {
+    backend: Arc<Backend>,
+    shared: Arc<PlacerShared>,
+    pod: Option<PodBinding>,
+}
+
+impl PlacementLease {
+    /// Name of the backend this lease is against.
+    pub fn backend_name(&self) -> &str {
+        &self.backend.name
+    }
+
+    /// The backend's executor (runs the attempt).
+    pub fn executor(&self) -> Arc<dyn Executor> {
+        Arc::clone(&self.backend.executor)
+    }
+
+    /// Did the underlying pod binding pre-sample a node flake?
+    pub fn pod_flake(&self) -> bool {
+        self.pod.as_ref().map(|p| p.flake).unwrap_or(false)
+    }
+
+    /// Node name of the cluster pod binding, when this is a cluster lease.
+    pub fn pod_node(&self) -> Option<&str> {
+        self.pod.as_ref().map(|p| p.node.as_str())
+    }
+}
+
+impl Drop for PlacementLease {
+    fn drop(&mut self) {
+        if let (BackendCapacity::Cluster(c), Some(binding)) = (&self.backend.capacity, &self.pod) {
+            c.release(binding);
+        }
+        self.backend.inflight.fetch_sub(1, Ordering::SeqCst);
+        self.shared.freed.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    fn slots(name: &str, n: usize) -> Backend {
+        Backend::local_slots(name, n)
+    }
+
+    fn req_any() -> PlaceRequest {
+        PlaceRequest { path: "p".into(), resources: Resources::cpu(100), ..Default::default() }
+    }
+
+    fn req_named(name: &str) -> PlaceRequest {
+        PlaceRequest {
+            selector: BackendSelector::named(name),
+            ..req_any()
+        }
+    }
+
+    #[test]
+    fn slots_backend_caps_leases_and_releases() {
+        let p = Placer::new(vec![slots("a", 2)]);
+        let l1 = p.try_place(&req_any()).unwrap().unwrap();
+        let _l2 = p.try_place(&req_any()).unwrap().unwrap();
+        assert!(p.try_place(&req_any()).unwrap().is_none(), "third lease must be Busy");
+        assert_eq!(p.backend("a").unwrap().inflight(), 2);
+        drop(l1);
+        assert!(p.try_place(&req_any()).unwrap().is_some());
+        assert_eq!(p.backend("a").unwrap().peak_inflight(), 2);
+    }
+
+    #[test]
+    fn selector_name_and_labels_filter_backends() {
+        let p = Placer::new(vec![
+            slots("a", 1).label("tier", "cloud"),
+            slots("b", 1).label("tier", "hpc"),
+        ]);
+        let l = p.try_place(&req_named("b")).unwrap().unwrap();
+        assert_eq!(l.backend_name(), "b");
+        drop(l);
+        let mut r = req_any();
+        r.selector = BackendSelector::any().label("tier", "cloud");
+        assert_eq!(p.try_place(&r).unwrap().unwrap().backend_name(), "a");
+        let mut r = req_any();
+        r.selector = BackendSelector::named("a").label("tier", "hpc");
+        match p.try_place(&r) {
+            Err(PlaceError::NoMatch { known, .. }) => assert_eq!(known, vec!["a", "b"]),
+            Err(e) => panic!("expected NoMatch, got {e}"),
+            Ok(_) => panic!("expected NoMatch, got a placement"),
+        }
+    }
+
+    #[test]
+    fn no_match_error_names_selector_and_backends() {
+        let p = Placer::new(vec![slots("only", 1)]);
+        let e = p.check(&req_named("ghost")).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("ghost"), "{msg}");
+        assert!(msg.contains("only"), "{msg}");
+    }
+
+    #[test]
+    fn infeasible_cluster_request_fails_fast_with_backend_name() {
+        let c = Arc::new(Cluster::uniform(1, Resources::cpu(1000), 0));
+        let p = Placer::new(vec![Backend::cluster("tiny-k8s", c)]);
+        let mut r = req_any();
+        r.resources = Resources::cpu(9000);
+        let t0 = Instant::now();
+        let e = p.place_blocking(&r).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(1), "must fail fast, not block");
+        let msg = e.to_string();
+        assert!(msg.contains("tiny-k8s"), "error must name the backend: {msg}");
+    }
+
+    #[test]
+    fn cluster_lease_binds_and_releases_pod() {
+        let c = Arc::new(Cluster::uniform(1, Resources::cpu(1000), 0));
+        let p = Placer::new(vec![Backend::cluster("k", c.clone())]);
+        let l = p.try_place(&req_any()).unwrap().unwrap();
+        assert_eq!(c.pods_in_flight(), 1);
+        assert!(l.pod_node().is_some());
+        drop(l);
+        assert_eq!(c.pods_in_flight(), 0);
+        let (bound, released, _) = c.stats();
+        assert_eq!((bound, released), (1, 1));
+    }
+
+    #[test]
+    fn partition_backend_respects_slots() {
+        let sched = HpcScheduler::new(vec![crate::hpc::PartitionSpec::new(
+            "q",
+            2,
+            Duration::from_secs(5),
+        )]);
+        let p = Placer::new(vec![Backend::partition("hpc", sched, "q")]);
+        let _l1 = p.try_place(&req_any()).unwrap().unwrap();
+        let _l2 = p.try_place(&req_any()).unwrap().unwrap();
+        assert!(p.try_place(&req_any()).unwrap().is_none(), "partition has 2 slots");
+    }
+
+    #[test]
+    fn unknown_partition_is_infeasible_not_busy() {
+        let sched =
+            HpcScheduler::new(vec![crate::hpc::PartitionSpec::new("q", 1, Duration::from_secs(5))]);
+        let p = Placer::new(vec![Backend::partition("hpc", sched, "nope")]);
+        match p.try_place(&req_any()) {
+            Err(PlaceError::Infeasible { tried }) => {
+                assert_eq!(tried[0].0, "hpc");
+                assert!(tried[0].1.contains("nope"));
+            }
+            _ => panic!("expected Infeasible"),
+        }
+    }
+
+    #[test]
+    fn place_blocking_wakes_on_lease_drop() {
+        let p = Arc::new(Placer::new(vec![slots("a", 1)]));
+        let l = p.try_place(&req_any()).unwrap().unwrap();
+        let p2 = Arc::clone(&p);
+        let waiter = std::thread::spawn(move || p2.place_blocking(&req_any()).unwrap());
+        std::thread::sleep(Duration::from_millis(20));
+        drop(l);
+        let got = waiter.join().unwrap();
+        assert_eq!(got.backend_name(), "a");
+    }
+
+    #[test]
+    fn round_robin_spreads_across_free_backends() {
+        let p = Placer::new(vec![slots("a", 4), slots("b", 4), slots("c", 4)]);
+        let mut leases = Vec::new();
+        for _ in 0..6 {
+            leases.push(p.try_place(&req_any()).unwrap().unwrap());
+        }
+        for name in ["a", "b", "c"] {
+            assert!(
+                p.backend(name).unwrap().placed_total() >= 1,
+                "backend {name} got no work: {:?}",
+                p.stats()
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate backend name")]
+    fn duplicate_backend_names_rejected_at_build() {
+        let _ = Placer::new(vec![slots("remote", 1), slots("remote", 2)]);
+    }
+
+    #[test]
+    fn stats_snapshot_reports_all_backends() {
+        let p = Placer::new(vec![slots("a", 1), Backend::local("b")]);
+        let _l = p.try_place(&req_named("a")).unwrap().unwrap();
+        let stats = p.stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].inflight, 1);
+        assert_eq!(stats[0].capacity, "slots(1)");
+        assert_eq!(stats[1].capacity, "unbounded");
+    }
+}

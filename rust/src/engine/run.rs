@@ -163,6 +163,10 @@ pub struct WorkflowRun {
     /// key → outputs injected from previous runs (`reuse_step`).
     pub(crate) reuse: BTreeMap<String, StepOutputs>,
     pub(crate) sem: Semaphore,
+    /// backend name → placed attempts of this run (multi-backend dispatch
+    /// observability: the per-run placement split; retries count once per
+    /// attempt since each attempt is placed anew).
+    pub(crate) placements: Mutex<BTreeMap<String, u64>>,
 }
 
 impl WorkflowRun {
@@ -183,7 +187,25 @@ impl WorkflowRun {
             keyed: Mutex::new(BTreeMap::new()),
             reuse,
             sem: Semaphore::new(parallelism),
+            placements: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    pub(crate) fn record_placement(&self, backend: &str) {
+        *self
+            .placements
+            .lock()
+            .unwrap()
+            .entry(backend.to_string())
+            .or_insert(0) += 1;
+    }
+
+    /// Per-backend placement split of this run: backend name → number of
+    /// attempts the placement layer routed there (each retry places anew,
+    /// possibly on a different backend). Empty when the engine has no
+    /// backends registered.
+    pub fn placements(&self) -> BTreeMap<String, u64> {
+        self.placements.lock().unwrap().clone()
     }
 
     pub(crate) fn set_node(&self, path: &str, template: &str, phase: NodePhase, key: Option<&str>) {
@@ -341,6 +363,17 @@ impl WorkflowRun {
                 ),
             ),
             ("metrics", self.metrics.to_json()),
+            (
+                "placements",
+                Json::Obj(
+                    self.placements
+                        .lock()
+                        .unwrap()
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::n(*v as f64)))
+                        .collect(),
+                ),
+            ),
         ])
     }
 }

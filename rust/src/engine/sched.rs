@@ -41,6 +41,13 @@
 //! (`WorkflowRun::sem`), so a workflow-level `parallelism` below the pool
 //! size is honored, and a helper thread draining jobs can never push live
 //! OP concurrency above the configured cap.
+//!
+//! Downstream of this pool sits the multi-backend placement layer
+//! (`engine::place`): a worker running a leaf job additionally acquires a
+//! backend lease before executing the OP. Requests that could never be
+//! satisfied are rejected at the DAG ready queue (`ScheduleResult`-aware
+//! fail-fast), so an infeasible task never takes a scheduling permit or
+//! parks a worker in a capacity wait.
 
 use std::collections::VecDeque;
 use std::marker::PhantomData;

@@ -231,6 +231,33 @@ impl Executor for FlakyExecutor {
     }
 }
 
+/// Test/bench executor decorator: counts live and peak concurrent
+/// `execute` calls through an inner executor via a shared
+/// [`crate::bench_util::ConcurrencyProbe`]. Wrap each backend's executor
+/// with one of these to prove per-backend in-flight executions never
+/// exceed that backend's capacity.
+pub struct ProbeExecutor {
+    inner: Arc<dyn Executor>,
+    probe: Arc<crate::bench_util::ConcurrencyProbe>,
+}
+
+impl ProbeExecutor {
+    /// Wrap `inner`, counting through `probe`.
+    pub fn new(inner: Arc<dyn Executor>, probe: Arc<crate::bench_util::ConcurrencyProbe>) -> Self {
+        ProbeExecutor { inner, probe }
+    }
+}
+
+impl Executor for ProbeExecutor {
+    fn execute(&self, tpl: &ContainerTemplate, ctx: &mut OpCtx) -> Result<(), OpError> {
+        self.probe.with(|| self.inner.execute(tpl, ctx))
+    }
+
+    fn describe(&self) -> String {
+        format!("probe({})", self.inner.describe())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

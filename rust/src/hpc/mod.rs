@@ -44,6 +44,33 @@ impl PartitionSpec {
     }
 }
 
+/// Point-in-time view of one partition: capacity, live load, lifetime
+/// counters. Returned by [`HpcScheduler::partition_stats`]; the placement
+/// layer treats `slots - (running + queued)` as the partition's free
+/// capacity.
+#[derive(Debug, Clone)]
+pub struct PartitionStats {
+    pub name: String,
+    /// Concurrent job slots (the partition's capacity).
+    pub slots: usize,
+    pub walltime: Duration,
+    /// Jobs currently executing on a slot.
+    pub running: usize,
+    /// Jobs waiting in the partition queue.
+    pub queued: usize,
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub timed_out: u64,
+}
+
+impl PartitionStats {
+    /// Slots not occupied by a running or queued job.
+    pub fn free_slots(&self) -> usize {
+        self.slots.saturating_sub(self.running + self.queued)
+    }
+}
+
 type JobFn = Box<dyn FnOnce() -> Result<Vec<u8>, String> + Send>;
 
 struct Job {
@@ -219,12 +246,22 @@ impl HpcScheduler {
         }
     }
 
-    /// Per-partition counters: (submitted, completed, failed, timed_out).
-    pub fn partition_stats(&self, partition: &str) -> Option<(u64, u64, u64, u64)> {
+    /// Per-partition snapshot: capacity (slots), live load (running +
+    /// queued) and lifetime counters. The engine's placement layer consults
+    /// this to decide whether a partition-backed backend has free capacity.
+    pub fn partition_stats(&self, partition: &str) -> Option<PartitionStats> {
         let s = self.state.lock().unwrap();
-        s.partitions
-            .get(partition)
-            .map(|p| (p.submitted, p.completed, p.failed, p.timed_out))
+        s.partitions.get(partition).map(|p| PartitionStats {
+            name: p.spec.name.clone(),
+            slots: p.spec.slots,
+            walltime: p.spec.walltime,
+            running: p.running,
+            queued: p.queue.len(),
+            submitted: p.submitted,
+            completed: p.completed,
+            failed: p.failed,
+            timed_out: p.timed_out,
+        })
     }
 
     /// Names of all partitions.
@@ -344,8 +381,14 @@ mod tests {
         let b = s.submit("cpu", || Err("x".into())).unwrap();
         s.wait(a);
         s.wait(b);
-        let (sub, ok, fail, to) = s.partition_stats("cpu").unwrap();
-        assert_eq!((sub, ok, fail, to), (2, 1, 1, 0));
+        let st = s.partition_stats("cpu").unwrap();
+        assert_eq!(
+            (st.submitted, st.completed, st.failed, st.timed_out),
+            (2, 1, 1, 0)
+        );
+        assert_eq!(st.slots, 2);
+        assert_eq!((st.running, st.queued), (0, 0));
+        assert_eq!(st.free_slots(), 2);
     }
 
     #[test]

@@ -93,6 +93,11 @@ pub struct Registry {
     /// Pods that went through the cluster simulator.
     pub pods_scheduled: Counter,
     pub pods_rejected: Counter,
+    /// Leaf executions routed through the multi-backend placement layer.
+    pub placements: Counter,
+    /// Placement requests failed fast as infeasible (no backend could ever
+    /// satisfy them).
+    pub placement_rejected: Counter,
     /// Engine dispatch latency (ready → running).
     pub dispatch: Timer,
     /// OP execution wall time.
@@ -114,6 +119,8 @@ impl Registry {
             ("timeouts", Json::n(self.timeouts.get() as f64)),
             ("pods_scheduled", Json::n(self.pods_scheduled.get() as f64)),
             ("pods_rejected", Json::n(self.pods_rejected.get() as f64)),
+            ("placements", Json::n(self.placements.get() as f64)),
+            ("placement_rejected", Json::n(self.placement_rejected.get() as f64)),
             ("dispatch_mean_us", Json::n(self.dispatch.mean().as_secs_f64() * 1e6)),
             ("dispatch_max_us", Json::n(self.dispatch.max().as_secs_f64() * 1e6)),
             ("op_exec_mean_ms", Json::n(self.op_exec.mean().as_secs_f64() * 1e3)),
@@ -139,6 +146,12 @@ pub enum EventKind {
     StepTimedOut,
     PodBound,
     PodReleased,
+    /// A leaf execution was routed to a backend by the placement layer
+    /// (detail = backend name).
+    StepPlaced,
+    /// The backend lease of a leaf execution was returned (detail =
+    /// backend name). Emitted when the OP actually stops.
+    BackendReleased,
 }
 
 /// One trace record.

@@ -1,0 +1,357 @@
+//! Multi-backend placement battery (ISSUE 2):
+//! * property tests (`check::forall_cases`, 128 cases): randomly generated
+//!   workflows over random backend sets never over-commit any backend's
+//!   capacity, and every step lands on a backend matching its selector;
+//! * fault injection: a flaky backend failing mid-run must not strand its
+//!   per-backend permit; an infeasible request must fail the step fast with
+//!   the backend name in the error — without consuming a pool worker;
+//! * integration: one run demonstrably splits across three registered
+//!   backends (k8s-sim + HPC partition + local slots), capacity-aware.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dflow::bench_util::ConcurrencyProbe;
+use dflow::check;
+use dflow::cluster::{Cluster, Resources};
+use dflow::core::{
+    BackendSelector, ContainerTemplate, Dag, FnOp, ParamType, Signature, Slices, Step,
+    StepPolicy, Steps, Value, Workflow,
+};
+use dflow::engine::{Backend, BackendCapacity, Engine, NodePhase, PlaceRequest};
+use dflow::executor::{DispatcherExecutor, FlakyExecutor, LocalExecutor, ProbeExecutor};
+use dflow::hpc::{HpcScheduler, PartitionSpec};
+use dflow::metrics::EventKind;
+
+#[test]
+fn random_workflows_never_overcommit_and_match_selectors() {
+    check::forall_cases("placement: capacity + selector invariants", 128, |rng| {
+        // N backends with random small capacities (slot-counted or
+        // cluster-backed), each in a random label group
+        let nb = 2 + rng.below(4) as usize; // 2..=5
+        let groups = ["x", "y"];
+        let mut backends = Vec::new();
+        let mut probes = Vec::new();
+        let mut caps = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..nb {
+            let cap = 1 + rng.below(3) as usize; // 1..=3
+            let group = *check::gen::choose(rng, &groups);
+            let probe = ConcurrencyProbe::new();
+            let exec = Arc::new(ProbeExecutor::new(Arc::new(LocalExecutor), probe.clone()));
+            let capacity = if rng.chance(0.3) {
+                // cluster-backed: `cap` nodes, each fitting exactly one
+                // cpu(1000) pod, so the concurrency cap is `cap` too
+                BackendCapacity::Cluster(Arc::new(Cluster::uniform(
+                    cap,
+                    Resources::cpu(1000),
+                    rng.next_u64(),
+                )))
+            } else {
+                BackendCapacity::Slots(cap)
+            };
+            backends
+                .push(Backend::custom(format!("b{i}"), exec, capacity).label("group", group));
+            probes.push(probe);
+            caps.push(cap);
+            labels.push(group);
+        }
+        let mut builder = Engine::builder().parallelism(8);
+        for b in backends {
+            builder = builder.backend(b);
+        }
+        let engine = builder.build();
+
+        // the OP dawdles briefly so leases overlap and peaks are meaningful
+        let op = Arc::new(FnOp::new(
+            Signature::new().out_param("v", ParamType::Int),
+            |ctx| {
+                std::thread::sleep(Duration::from_micros(500));
+                ctx.set("v", 1i64);
+                Ok(())
+            },
+        ));
+        let ns = 4 + rng.below(12) as usize; // 4..=15 independent tasks
+        let mut dag = Dag::new("main");
+        // (step path, pinned backend name, required label group)
+        let mut sels: Vec<(String, Option<String>, Option<&str>)> = Vec::new();
+        for j in 0..ns {
+            let mut step = Step::new(&format!("s{j}"), "op");
+            let (pin_name, pin_label) = match rng.below(3) {
+                0 => (None, None), // any backend
+                1 => (Some(format!("b{}", rng.below(nb as u64))), None),
+                _ => (None, Some(labels[rng.below(nb as u64) as usize])),
+            };
+            if let Some(n) = &pin_name {
+                step = step.on_backend(n);
+            }
+            if let Some(g) = pin_label {
+                step = step.backend_where("group", g);
+            }
+            sels.push((format!("main/s{j}"), pin_name, pin_label));
+            dag = dag.task(step);
+        }
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("op", op).resources(Resources::cpu(1000)))
+            .dag(dag)
+            .entrypoint("main");
+        let r = engine.run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+
+        // capacity invariant: no backend ever ran more OPs concurrently
+        // than its capacity
+        for (i, probe) in probes.iter().enumerate() {
+            assert!(
+                probe.peak() <= caps[i],
+                "backend b{i} over-committed: peak {} > capacity {}",
+                probe.peak(),
+                caps[i]
+            );
+        }
+        // accounting drains: nothing stranded
+        for s in engine.backend_stats() {
+            assert_eq!(s.inflight, 0, "stranded lease on {}", s.name);
+        }
+        // every step placed exactly once, on a backend matching its selector
+        let placed: BTreeMap<String, String> = r
+            .run
+            .trace
+            .snapshot()
+            .into_iter()
+            .filter(|e| e.kind == EventKind::StepPlaced)
+            .map(|e| (e.step, e.detail))
+            .collect();
+        assert_eq!(placed.len(), ns, "every step must have a StepPlaced event");
+        let total: u64 = r.run.placements().values().sum();
+        assert_eq!(total as usize, ns);
+        for (path, pin_name, pin_label) in &sels {
+            let b = placed.get(path).unwrap_or_else(|| panic!("step {path} never placed"));
+            if let Some(n) = pin_name {
+                assert_eq!(b, n, "{path} pinned to {n} but ran on {b}");
+            }
+            if let Some(g) = pin_label {
+                let idx: usize = b.trim_start_matches('b').parse().unwrap();
+                assert_eq!(
+                    labels[idx], *g,
+                    "{path} required group {g} but {b} is in group {}",
+                    labels[idx]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn flaky_backend_failure_releases_per_backend_permit() {
+    // FlakyExecutor(rate = 1.0) fails every attempt transiently; with
+    // retries the step still fails — and every one of the failed attempts
+    // must hand its backend lease back (nothing stranded mid-run)
+    let flaky = Arc::new(FlakyExecutor::new(1.0, 3));
+    let engine = Engine::builder()
+        .backend(Backend::custom(
+            "flaky-remote",
+            flaky.clone(),
+            BackendCapacity::Slots(1),
+        ))
+        .build();
+    let op = Arc::new(FnOp::new(Signature::new(), |_| Ok(())));
+    let mut policy = StepPolicy::default();
+    policy.retries = 2;
+    let wf = Workflow::new("w")
+        .container(ContainerTemplate::new("op", op))
+        .steps(Steps::new("main").then(Step::new("s", "op").policy(policy)))
+        .entrypoint("main");
+    let r = engine.run(&wf).unwrap();
+    assert!(!r.succeeded());
+    assert_eq!(flaky.attempts.load(std::sync::atomic::Ordering::Relaxed), 3);
+    let b = engine.placer().unwrap().backend("flaky-remote").unwrap();
+    assert_eq!(b.inflight(), 0, "failed attempts stranded a lease");
+    assert_eq!(b.placed_total(), 3, "each retry re-places");
+    assert_eq!(b.peak_inflight(), 1, "slots(1) backend never held two leases");
+
+    // capacity is genuinely reusable afterwards: a second run gets all its
+    // attempts placed again on the same 1-slot backend
+    let r2 = engine.run(&wf).unwrap();
+    assert!(!r2.succeeded());
+    assert_eq!(flaky.attempts.load(std::sync::atomic::Ordering::Relaxed), 6);
+    assert_eq!(b.inflight(), 0);
+}
+
+#[test]
+fn infeasible_step_fails_fast_with_backend_name_without_a_worker() {
+    // parallelism-1 engine: if the infeasible task blocked in a capacity
+    // wait it would starve the single pool worker forever; instead the
+    // ready queue fails it without an attempt (no scheduling permit, no
+    // capacity wait) and the 20 feasible tasks all run
+    let cluster = Arc::new(Cluster::uniform(1, Resources::cpu(1000), 0));
+    let engine = Engine::builder()
+        .backend(Backend::cluster("small-k8s", cluster))
+        .parallelism(1)
+        .build();
+    let op = Arc::new(FnOp::new(Signature::new(), |_| Ok(())));
+    let big_op = Arc::new(FnOp::new(Signature::new(), |_| Ok(())));
+    let mut cof = StepPolicy::default();
+    cof.continue_on_failed = true;
+    let mut dag = Dag::new("main").task(Step::new("bad", "big").policy(cof));
+    for i in 0..20 {
+        dag = dag.task(Step::new(&format!("ok{i}"), "op"));
+    }
+    let wf = Workflow::new("w")
+        .container(ContainerTemplate::new("op", op))
+        .container(ContainerTemplate::new("big", big_op).resources(Resources::cpu(64_000)))
+        .dag(dag)
+        .entrypoint("main");
+    let t0 = Instant::now();
+    let r = engine.run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error); // bad is continue_on_failed
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "infeasible task must fail fast, not block: {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(r.run.count_phase(NodePhase::Failed), 1);
+    assert_eq!(r.run.count_phase(NodePhase::Succeeded), 20);
+    let bad = r.run.nodes().into_iter().find(|n| n.path == "main/bad").unwrap();
+    assert!(
+        bad.message.contains("small-k8s"),
+        "error must name the backend: {}",
+        bad.message
+    );
+    // the infeasible task never entered the attempt path (no scheduling
+    // permit): dispatch latency is observed exactly once per *real* attempt
+    assert_eq!(r.run.metrics.dispatch.count(), 20);
+    assert_eq!(r.run.metrics.placement_rejected.get(), 1);
+    assert_eq!(r.run.metrics.placements.get(), 20);
+    assert!(r
+        .run
+        .trace
+        .snapshot()
+        .iter()
+        .all(|e| !(e.kind == EventKind::StepPlaced && e.step == "main/bad")));
+}
+
+#[test]
+fn selector_matching_nothing_fails_with_known_backend_list() {
+    let engine = Engine::builder()
+        .backend(Backend::local("alpha"))
+        .backend(Backend::local("beta"))
+        .build();
+    let op = Arc::new(FnOp::new(Signature::new(), |_| Ok(())));
+    let wf = Workflow::new("w")
+        .container(ContainerTemplate::new("op", op))
+        .steps(Steps::new("main").then(Step::new("s", "op").backend_where("tier", "gpu")))
+        .entrypoint("main");
+    let r = engine.run(&wf).unwrap();
+    assert!(!r.succeeded());
+    let msg = r.error.unwrap();
+    assert!(msg.contains("tier=gpu"), "{msg}");
+    assert!(msg.contains("alpha") && msg.contains("beta"), "{msg}");
+}
+
+#[test]
+fn placement_routes_around_full_backends() {
+    // hold backend a's only slot externally; an unpinned step must land on b
+    let engine = Engine::builder()
+        .backend(Backend::local_slots("a", 1))
+        .backend(Backend::local_slots("b", 1))
+        .build();
+    let placer = engine.placer().unwrap();
+    let hold = placer
+        .try_place(&PlaceRequest {
+            selector: BackendSelector::named("a"),
+            ..Default::default()
+        })
+        .unwrap()
+        .unwrap();
+    assert_eq!(hold.backend_name(), "a");
+    let op = Arc::new(FnOp::new(Signature::new(), |_| Ok(())));
+    let wf = Workflow::new("w")
+        .container(ContainerTemplate::new("op", op))
+        .steps(Steps::new("main").then(Step::new("s", "op")))
+        .entrypoint("main");
+    let r = engine.run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    let expect: BTreeMap<String, u64> = [("b".to_string(), 1u64)].into_iter().collect();
+    assert_eq!(r.run.placements(), expect);
+    drop(hold);
+}
+
+#[test]
+fn one_run_splits_across_three_backends_capacity_aware() {
+    // acceptance: a single workflow demonstrably executes steps on ≥ 3
+    // registered backends in one run, each within its own capacity
+    let cluster = Arc::new(Cluster::uniform(2, Resources::cpu(2000), 0));
+    let slurm =
+        HpcScheduler::new(vec![PartitionSpec::new("batch", 3, Duration::from_secs(60))]);
+    let (pk, ph, pl) =
+        (ConcurrencyProbe::new(), ConcurrencyProbe::new(), ConcurrencyProbe::new());
+    let engine = Engine::builder()
+        .backend(Backend::custom(
+            "k8s",
+            Arc::new(ProbeExecutor::new(Arc::new(LocalExecutor), pk.clone())),
+            BackendCapacity::Cluster(cluster.clone()),
+        ))
+        .backend(Backend::custom(
+            "hpc",
+            Arc::new(ProbeExecutor::new(
+                Arc::new(DispatcherExecutor::new(slurm.clone(), "batch")),
+                ph.clone(),
+            )),
+            BackendCapacity::Partition { sched: slurm.clone(), partition: "batch".into() },
+        ))
+        .backend(Backend::custom(
+            "edge",
+            Arc::new(ProbeExecutor::new(Arc::new(LocalExecutor), pl.clone())),
+            BackendCapacity::Slots(2),
+        ))
+        .parallelism(16)
+        .build();
+    let sq = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        |ctx| {
+            let x = ctx.get_int("x")?;
+            std::thread::sleep(Duration::from_millis(2));
+            ctx.set("y", x * x);
+            Ok(())
+        },
+    ));
+    let wf = Workflow::new("spread")
+        // cpu(2000) fills one cluster node per pod → k8s concurrency cap 2
+        .container(ContainerTemplate::new("sq", sq).resources(Resources::cpu(2000)))
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "sq")
+                        .param("x", Value::ints(0..30))
+                        .slices(Slices::over("x").stack("y").parallelism(30)),
+                )
+                .out_param_from("ys", "fan", "y"),
+        )
+        .entrypoint("main");
+    let r = engine.run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    let ys = r.outputs.params["ys"].as_list().unwrap();
+    assert_eq!(ys.len(), 30);
+    assert_eq!(ys[29], Value::Int(29 * 29));
+
+    let split = r.run.placements();
+    assert_eq!(split.values().sum::<u64>(), 30);
+    for name in ["k8s", "hpc", "edge"] {
+        assert!(
+            split.get(name).copied().unwrap_or(0) > 0,
+            "backend {name} got no slices: {split:?}"
+        );
+    }
+    assert!(pk.peak() <= 2, "k8s peak {} > 2 nodes", pk.peak());
+    assert!(ph.peak() <= 3, "hpc peak {} > 3 slots", ph.peak());
+    assert!(pl.peak() <= 2, "edge peak {} > 2 slots", pl.peak());
+    let (bound, released, peak_pods) = cluster.stats();
+    assert_eq!(bound, released, "cluster pod accounting unbalanced");
+    assert!(peak_pods <= 2);
+    assert_eq!(cluster.pods_in_flight(), 0);
+    assert_eq!(slurm.inflight(), 0);
+    for s in engine.backend_stats() {
+        assert_eq!(s.inflight, 0, "{} stranded a lease", s.name);
+    }
+}

@@ -3,7 +3,10 @@
 //!   with peak live workers ≤ 8 (no thread-per-node explosion);
 //! * `depends_on` naming an unknown task is a hard error carrying the name;
 //! * a step timeout cancels the attempt and cluster pod accounting returns
-//!   to zero (no orphan thread keeps a pod bound).
+//!   to zero (no orphan thread keeps a pod bound);
+//! * a 2000-node DAG split across 3 placement backends (k8s-sim + HPC
+//!   partition + slot-capped local) keeps every backend's in-flight peak
+//!   within that backend's capacity.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -134,6 +137,77 @@ fn timeout_cancels_op_and_pod_accounting_returns_to_zero() {
         !ran_to_completion.load(Ordering::SeqCst),
         "OP ran to completion despite the timeout"
     );
+}
+
+#[test]
+fn two_thousand_node_dag_splits_across_three_backends_capacity_aware() {
+    use dflow::bench_util::ConcurrencyProbe;
+    use dflow::engine::{Backend, BackendCapacity};
+    use dflow::executor::{DispatcherExecutor, LocalExecutor, ProbeExecutor};
+    use dflow::hpc::{HpcScheduler, PartitionSpec};
+
+    let cluster = Arc::new(Cluster::uniform(4, Resources::cpu(1000), 0));
+    let slurm = HpcScheduler::new(vec![PartitionSpec::new("batch", 4, Duration::from_secs(60))]);
+    let (pk, ph, pe) =
+        (ConcurrencyProbe::new(), ConcurrencyProbe::new(), ConcurrencyProbe::new());
+    let engine = Engine::builder()
+        .backend(Backend::custom(
+            "k8s",
+            Arc::new(ProbeExecutor::new(Arc::new(LocalExecutor), pk.clone())),
+            BackendCapacity::Cluster(cluster.clone()),
+        ))
+        .backend(Backend::custom(
+            "hpc",
+            Arc::new(ProbeExecutor::new(
+                Arc::new(DispatcherExecutor::new(slurm.clone(), "batch")),
+                ph.clone(),
+            )),
+            BackendCapacity::Partition { sched: slurm.clone(), partition: "batch".into() },
+        ))
+        .backend(Backend::custom(
+            "edge",
+            Arc::new(ProbeExecutor::new(Arc::new(LocalExecutor), pe.clone())),
+            BackendCapacity::Slots(6),
+        ))
+        .parallelism(32)
+        .build();
+    let op = Arc::new(FnOp::new(
+        Signature::new().out_param("v", ParamType::Int),
+        |ctx| {
+            ctx.set("v", 1i64);
+            Ok(())
+        },
+    ));
+    let names = ["k8s", "hpc", "edge"];
+    let mut dag = Dag::new("main");
+    for i in 0..2001 {
+        dag = dag.task(Step::new(&format!("t{i}"), "op").on_backend(names[i % 3]));
+    }
+    let wf = Workflow::new("split")
+        // cpu(1000) fills one cluster node per pod → k8s concurrency cap 4
+        .container(ContainerTemplate::new("op", op).resources(Resources::cpu(1000)))
+        .dag(dag)
+        .entrypoint("main");
+    let r = engine.run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert_eq!(r.run.count_phase(NodePhase::Succeeded), 2001);
+    let split = r.run.placements();
+    assert_eq!(split["k8s"], 667);
+    assert_eq!(split["hpc"], 667);
+    assert_eq!(split["edge"], 667);
+    // per-backend in-flight peaks stay within each backend's capacity
+    assert!(pk.peak() <= 4, "k8s peak {} > 4 cluster nodes", pk.peak());
+    assert!(ph.peak() <= 4, "hpc peak {} > 4 partition slots", ph.peak());
+    assert!(pe.peak() <= 6, "edge peak {} > 6 slots", pe.peak());
+    let (bound, released, peak_pods) = cluster.stats();
+    assert_eq!(bound, 667);
+    assert_eq!(bound, released);
+    assert!(peak_pods <= 4, "cluster peak {peak_pods} > 4");
+    assert_eq!(cluster.pods_in_flight(), 0);
+    assert_eq!(slurm.inflight(), 0);
+    for s in engine.backend_stats() {
+        assert_eq!(s.inflight, 0, "{} stranded a lease", s.name);
+    }
 }
 
 #[test]

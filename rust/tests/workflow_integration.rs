@@ -81,9 +81,9 @@ fn dispatcher_executor_runs_steps_on_hpc_sim() {
     assert!(r.succeeded(), "{:?}", r.error);
     let ys = r.outputs.params["ys"].as_list().unwrap();
     assert_eq!(ys[7], Value::Int(107));
-    let (submitted, completed, _, _) = sched.partition_stats("slurm-cpu").unwrap();
-    assert_eq!(submitted, 8);
-    assert_eq!(completed, 8);
+    let st = sched.partition_stats("slurm-cpu").unwrap();
+    assert_eq!(st.submitted, 8);
+    assert_eq!(st.completed, 8);
 }
 
 #[test]
@@ -580,8 +580,8 @@ fn hpc_dispatcher_inside_cluster_virtual_node() {
         .build();
     let r = engine.run(&wf).unwrap();
     assert!(r.succeeded(), "{:?}", r.error);
-    let (submitted, completed, _, _) = sched.partition_stats("pbatch").unwrap();
-    assert_eq!((submitted, completed), (6, 6));
+    let st = sched.partition_stats("pbatch").unwrap();
+    assert_eq!((st.submitted, st.completed), (6, 6));
     let (bound, ..) = cluster.stats();
     assert_eq!(bound, 6);
 }
