@@ -1,10 +1,11 @@
 # Repo CI entrypoints. `make ci` is what a gate should run.
 
-.PHONY: ci fmt-check fmt clippy build test test-placement bench
+.PHONY: ci fmt-check fmt clippy build test test-placement test-storage bench
 
-# `test` runs the full suite (placement + scheduler_stress included via
-# their Cargo.toml [[test]] entries), so `ci` covers the placement battery.
-ci: fmt-check clippy test
+# `test` runs the full suite (placement + scheduler_stress + the storage
+# battery included via their Cargo.toml [[test]] entries); `test-storage`
+# re-runs the storage battery alone as an explicit gate.
+ci: fmt-check clippy test test-storage
 
 fmt-check:
 	cargo fmt --check
@@ -26,6 +27,13 @@ test: build
 # 3-backend stress split)
 test-placement: build
 	cargo test -q --test placement --test scheduler_stress
+
+# storage hardening battery: the cross-client contract (key-escape,
+# torn-write, md5-mismatch, dedup, zero-copy forwarding, gc) plus the
+# storage/CAS unit + property suites in the lib
+test-storage: build
+	cargo test -q --test storage_contract
+	cargo test -q --lib storage::
 
 bench:
 	cargo bench

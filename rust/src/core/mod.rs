@@ -11,6 +11,7 @@ pub use flow::{
     Operand, OutputSrc, ParamSrc, Slices, Step, StepPolicy, Steps, TemplateIo, Workflow,
 };
 pub use op::{
-    ArtifactSpec, CancelToken, FnOp, Op, OpCtx, OpError, ParamSpec, ShellOp, Signature,
+    ArtifactSpec, ArtifactWriter, CancelToken, FnOp, Op, OpCtx, OpError, ParamSpec, ShellOp,
+    Signature,
 };
 pub use value::{ArtifactRef, ParamType, Value};

@@ -17,12 +17,18 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::core::value::{ArtifactRef, ParamType, Value};
-use crate::storage::{StorageClient, StorageError};
+use crate::storage::{with_retry, StorageClient, StorageError};
+
+/// Bounded retry budget for OpCtx artifact I/O: one storage blip (or one
+/// torn read caught by the md5 check) no longer burns a whole OP attempt —
+/// only a persistently failing store escalates to the step retry policy.
+const STORAGE_RETRIES: u32 = 5;
 
 /// OP failure. `Transient` maps to `dflow.TransientError` — the engine
 /// retries it per the step policy (§2.4); `Fatal` fails the step at once.
@@ -266,19 +272,35 @@ impl OpCtx {
         self.outputs.insert(name.to_string(), value.into());
     }
 
-    /// Read the bytes of an input artifact.
+    /// Read the bytes of an input artifact. The recorded md5 (stamped at
+    /// `write_artifact`) is verified: a mismatch — a torn or corrupted
+    /// object — is a transient error, re-driven first by the bounded
+    /// download retry here and then by the step retry policy.
     pub fn read_artifact(&self, name: &str) -> Result<Vec<u8>, OpError> {
         let a = self
             .input_artifacts
             .get(name)
             .ok_or_else(|| OpError::Fatal(format!("missing input artifact '{name}'")))?;
-        Ok(self.storage.download(&a.key)?)
+        let data = with_retry(STORAGE_RETRIES, || {
+            let data = self.storage.download(&a.key)?;
+            if let Some(expect) = &a.md5 {
+                let got = crate::util::md5_hex(&data);
+                if &got != expect {
+                    return Err(StorageError::Transient(format!(
+                        "artifact '{name}' md5 mismatch: stored {got} != recorded {expect}"
+                    )));
+                }
+            }
+            Ok(data)
+        })?;
+        Ok(data)
     }
 
     /// Write bytes as an output artifact; key is namespaced per execution.
+    /// Transient storage blips are absorbed by a bounded retry.
     pub fn write_artifact(&mut self, name: &str, data: &[u8]) -> Result<ArtifactRef, OpError> {
         let key = format!("{}/{}", self.artifact_prefix, name);
-        self.storage.upload(&key, data)?;
+        with_retry(STORAGE_RETRIES, || self.storage.upload(&key, data))?;
         let art = ArtifactRef { key, md5: Some(crate::util::md5_hex(data)) };
         self.output_artifacts.insert(name.to_string(), art.clone());
         Ok(art)
@@ -293,7 +315,8 @@ impl OpCtx {
     ) -> Result<ArtifactRef, OpError> {
         let prefix = format!("{}/{}", self.artifact_prefix, name);
         for (i, data) in items.iter().enumerate() {
-            self.storage.upload(&format!("{prefix}/{i}"), data)?;
+            let key = format!("{prefix}/{i}");
+            with_retry(STORAGE_RETRIES, || self.storage.upload(&key, data))?;
         }
         let art = ArtifactRef::new(prefix);
         self.output_artifacts.insert(name.to_string(), art.clone());
@@ -307,20 +330,52 @@ impl OpCtx {
             .get(name)
             .ok_or_else(|| OpError::Fatal(format!("missing input artifact '{name}'")))?;
         let prefix = format!("{}/", a.key);
-        let mut keys: Vec<(usize, String)> = self
-            .storage
-            .list(&prefix)?
-            .into_iter()
-            .filter_map(|k| {
-                k.strip_prefix(&prefix)
-                    .and_then(|rest| rest.parse::<usize>().ok())
-                    .map(|i| (i, k))
-            })
-            .collect();
+        let mut keys: Vec<(usize, String)> = with_retry(STORAGE_RETRIES, || {
+            self.storage.list(&prefix)
+        })?
+        .into_iter()
+        .filter_map(|k| {
+            k.strip_prefix(&prefix)
+                .and_then(|rest| rest.parse::<usize>().ok())
+                .map(|i| (i, k))
+        })
+        .collect();
         keys.sort();
         keys.into_iter()
-            .map(|(_, k)| self.storage.download(&k).map_err(OpError::from))
+            .map(|(_, k)| {
+                with_retry(STORAGE_RETRIES, || self.storage.download(&k)).map_err(OpError::from)
+            })
             .collect()
+    }
+
+    /// Open a streaming reader over an input artifact — the OP sees the
+    /// bytes without the whole object ever being buffered (CAS-backed
+    /// storage streams chunk by chunk, [`crate::storage::LocalStorage`]
+    /// streams from the file). Note: unlike [`OpCtx::read_artifact`], this
+    /// path does not verify the recorded whole-object md5 (CAS verifies
+    /// each chunk digest instead).
+    pub fn artifact_reader(&self, name: &str) -> Result<Box<dyn Read + Send>, OpError> {
+        let a = self
+            .input_artifacts
+            .get(name)
+            .ok_or_else(|| OpError::Fatal(format!("missing input artifact '{name}'")))?;
+        Ok(with_retry(STORAGE_RETRIES, || self.storage.open_read(&a.key))?)
+    }
+
+    /// Open a streaming writer for an output artifact: bytes are spooled
+    /// to a file in the OP's scratch workdir (constant memory) and
+    /// streamed into storage on [`ArtifactWriter::finish`].
+    pub fn artifact_writer(&self, name: &str) -> Result<ArtifactWriter, OpError> {
+        std::fs::create_dir_all(&self.workdir).map_err(|e| OpError::Fatal(e.to_string()))?;
+        let spool = self.workdir.join(format!(".artifact-spool-{}", crate::util::next_id()));
+        let file = std::fs::File::create(&spool).map_err(|e| OpError::Fatal(e.to_string()))?;
+        Ok(ArtifactWriter {
+            name: name.to_string(),
+            key: format!("{}/{}", self.artifact_prefix, name),
+            storage: self.storage.clone(),
+            spool,
+            file: Some(std::io::BufWriter::new(file)),
+        })
     }
 
     /// Reference an input artifact without reading it (for pass-through).
@@ -353,6 +408,74 @@ impl OpCtx {
         } else {
             Ok(())
         }
+    }
+}
+
+/// Streaming output-artifact writer from [`OpCtx::artifact_writer`]:
+/// implements [`std::io::Write`], spooling to a workdir file so at no
+/// point does the whole artifact live in memory. [`ArtifactWriter::finish`]
+/// streams the spool into storage (chunk-incremental over CAS) with the
+/// same bounded retry budget as the other OpCtx artifact I/O and records
+/// the output [`ArtifactRef`] (md5 stamped from the stream).
+pub struct ArtifactWriter {
+    name: String,
+    key: String,
+    storage: Arc<dyn StorageClient>,
+    spool: PathBuf,
+    file: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+impl std::io::Write for ArtifactWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self.file.as_mut() {
+            Some(f) => f.write(buf),
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "artifact writer already finished",
+            )),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self.file.as_mut() {
+            Some(f) => f.flush(),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for ArtifactWriter {
+    fn drop(&mut self) {
+        // an OP that errors (or panics) between artifact_writer() and
+        // finish() must not leak its spool file into the workdir
+        if self.file.take().is_some() {
+            std::fs::remove_file(&self.spool).ok();
+        }
+    }
+}
+
+impl ArtifactWriter {
+    /// Flush the spool, stream it into storage, and record the output
+    /// artifact on `ctx`. Each retry attempt re-reads the spool from the
+    /// start, so a transient blip mid-upload cannot corrupt the object.
+    pub fn finish(mut self, ctx: &mut OpCtx) -> Result<ArtifactRef, OpError> {
+        if let Some(mut f) = self.file.take() {
+            if let Err(e) = f.flush() {
+                // Drop sees file=None, so clean the spool here
+                std::fs::remove_file(&self.spool).ok();
+                return Err(OpError::Fatal(e.to_string()));
+            }
+        }
+        let upload = with_retry(STORAGE_RETRIES, || {
+            let mut f = std::fs::File::open(&self.spool)
+                .map_err(|e| StorageError::Fatal(format!("artifact spool: {e}")))?;
+            self.storage.upload_from(&self.key, &mut f)
+        });
+        std::fs::remove_file(&self.spool).ok();
+        let (_len, md5) = upload?;
+        let art = ArtifactRef { key: self.key.clone(), md5: Some(md5) };
+        ctx.output_artifacts.insert(self.name.clone(), art.clone());
+        Ok(art)
     }
 }
 
@@ -414,8 +537,9 @@ impl ShellOp {
     fn stage_inputs(&self, ctx: &OpCtx, dir: &Path) -> Result<(), OpError> {
         std::fs::create_dir_all(dir.join("outputs"))
             .map_err(|e| OpError::Fatal(e.to_string()))?;
-        for (name, art) in &ctx.input_artifacts {
-            let data = ctx.storage.download(&art.key)?;
+        for name in ctx.input_artifacts.keys() {
+            // read_artifact: bounded retry + md5 verification
+            let data = ctx.read_artifact(name)?;
             std::fs::write(dir.join(name), data).map_err(|e| OpError::Fatal(e.to_string()))?;
         }
         Ok(())
@@ -503,6 +627,93 @@ mod tests {
         assert!(art.md5.is_some());
         c.input_artifacts.insert("data".into(), art);
         assert_eq!(c.read_artifact("data").unwrap(), b"payload");
+    }
+
+    #[test]
+    fn read_artifact_detects_md5_mismatch_as_transient() {
+        let mut c = ctx();
+        let art = c.write_artifact("data", b"original").unwrap();
+        // corrupt the stored object behind the ArtifactRef's back
+        c.storage.upload(&art.key, b"tampered").unwrap();
+        c.input_artifacts.insert("data".into(), art);
+        let err = c.read_artifact("data").unwrap_err();
+        assert!(err.is_transient(), "md5 mismatch must be transient: {err}");
+        assert!(err.message().contains("md5 mismatch"), "{err}");
+    }
+
+    #[test]
+    fn artifact_io_retries_absorb_transient_blips() {
+        use crate::storage::MemStorage;
+        use std::sync::atomic::AtomicU64;
+
+        /// Deterministically fails every other storage call transiently.
+        struct Blinky {
+            inner: MemStorage,
+            calls: AtomicU64,
+            failures: AtomicU64,
+        }
+        impl Blinky {
+            fn gate(&self) -> Result<(), crate::storage::StorageError> {
+                if self.calls.fetch_add(1, Ordering::Relaxed) % 2 == 0 {
+                    self.failures.fetch_add(1, Ordering::Relaxed);
+                    return Err(crate::storage::StorageError::Transient("blink".into()));
+                }
+                Ok(())
+            }
+        }
+        impl StorageClient for Blinky {
+            fn upload(&self, key: &str, data: &[u8]) -> Result<(), StorageError> {
+                self.gate()?;
+                self.inner.upload(key, data)
+            }
+            fn download(&self, key: &str) -> Result<Vec<u8>, StorageError> {
+                self.gate()?;
+                self.inner.download(key)
+            }
+            fn list(&self, prefix: &str) -> Result<Vec<String>, StorageError> {
+                self.gate()?;
+                self.inner.list(prefix)
+            }
+            fn copy(&self, src: &str, dst: &str) -> Result<(), StorageError> {
+                self.gate()?;
+                self.inner.copy(src, dst)
+            }
+        }
+
+        let blinky = Arc::new(Blinky {
+            inner: MemStorage::new(),
+            calls: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+        });
+        let mut c = OpCtx::bare(blinky.clone());
+        // every single storage call fails once before succeeding: without
+        // the OpCtx retry layer every one of these would error out
+        for i in 0..8 {
+            let name = format!("blob{i}");
+            let art = c.write_artifact(&name, format!("payload-{i}").as_bytes()).unwrap();
+            c.input_artifacts.insert(name.clone(), art);
+            assert_eq!(c.read_artifact(&name).unwrap(), format!("payload-{i}").as_bytes());
+        }
+        assert!(blinky.failures.load(Ordering::Relaxed) >= 8, "no failures were injected");
+    }
+
+    #[test]
+    fn artifact_writer_reader_streaming_roundtrip() {
+        let mut c = ctx();
+        let mut w = c.artifact_writer("big").unwrap();
+        let piece = vec![42u8; 64 * 1024];
+        for _ in 0..8 {
+            w.write_all(&piece).unwrap();
+        }
+        let art = w.finish(&mut c).unwrap();
+        let expect: Vec<u8> = std::iter::repeat(42u8).take(8 * 64 * 1024).collect();
+        assert_eq!(art.md5.as_deref(), Some(crate::util::md5_hex(&expect).as_str()));
+        c.input_artifacts.insert("big".into(), art);
+        let mut out = Vec::new();
+        c.artifact_reader("big").unwrap().read_to_end(&mut out).unwrap();
+        assert_eq!(out, expect);
+        // the buffered path agrees (and verifies the md5)
+        assert_eq!(c.read_artifact("big").unwrap(), expect);
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::core::{
 };
 use crate::executor::{Executor, LocalExecutor};
 use crate::metrics::EventKind;
-use crate::storage::{MemStorage, StorageClient};
+use crate::storage::{copy_with_retry, CasStore, MemStorage, StorageClient};
 use crate::util::Stopwatch;
 
 pub use place::{
@@ -103,6 +103,22 @@ impl EngineBuilder {
     /// Use a specific storage client (default: in-memory).
     pub fn storage(mut self, s: Arc<dyn StorageClient>) -> Self {
         self.storage = s;
+        self
+    }
+
+    /// Layer content-addressed chunked storage (`storage::cas`) over
+    /// `inner`: identical artifact bytes are stored once, `get_md5` reads
+    /// a manifest instead of downloading, and step-to-step artifact
+    /// forwarding (slice stacking, reuse splicing) becomes manifest
+    /// ref-bumps instead of byte copies.
+    ///
+    /// `inner` must be empty or already CAS-formatted (objects written to
+    /// it without the CAS layer are unreadable through it — wrap an
+    /// existing CAS-backed store with [`crate::storage::CasStore::attach`]
+    /// and pass it to [`EngineBuilder::storage`] to also recover
+    /// refcounts).
+    pub fn cas_storage(mut self, inner: Arc<dyn StorageClient>) -> Self {
+        self.storage = Arc::new(CasStore::new(inner));
         self
     }
 
@@ -927,8 +943,10 @@ impl<'e> Exec<'e> {
         }
         for name in &slices.output_artifacts {
             // stacked artifact = prefix; copy each slice's artifact under it
-            // (server-side copies; transient storage blips retried here since
-            // this is engine work, not OP work)
+            // (server-side copies with bounded retry — engine work, not OP
+            // work. Over CAS-backed storage each copy is a manifest
+            // ref-bump: forwarding an unchanged artifact moves zero data
+            // bytes, reused-step artifacts included.)
             let prefix = format!("run{}/{}/{}", self.run.id, path.replace('/', "."), name);
             for (i, o) in outcomes.iter().enumerate() {
                 if let StepOutcome::Succeeded(so) = o {
@@ -1529,26 +1547,6 @@ impl Drop for LeaseGuard {
             self.lease.backend_name().to_string(),
         );
     }
-}
-
-/// Server-side copy with bounded retry on transient storage failures.
-fn copy_with_retry(
-    storage: &dyn StorageClient,
-    src: &str,
-    dst: &str,
-) -> Result<(), crate::storage::StorageError> {
-    let mut last = None;
-    for attempt in 0..8 {
-        match storage.copy(src, dst) {
-            Ok(()) => return Ok(()),
-            Err(crate::storage::StorageError::Transient(m)) => {
-                last = Some(crate::storage::StorageError::Transient(m));
-                std::thread::sleep(std::time::Duration::from_millis(1 << attempt));
-            }
-            Err(e) => return Err(e),
-        }
-    }
-    Err(last.unwrap())
 }
 
 /// Render a step key template: `{{item}}` → slice index,

@@ -18,7 +18,9 @@
 //!   the `DispatcherExecutor` plugin (§2.6).
 //! * [`executor`] — the `Executor` plugin surface (§2.6).
 //! * [`storage`] — the 5-method `StorageClient` artifact-store plugin
-//!   surface (§2.8) with local, in-memory and latency-modelled backends.
+//!   surface (§2.8) with local, in-memory and latency-modelled backends,
+//!   plus a content-addressed chunked dedup layer (`storage::cas`) that
+//!   makes step-to-step artifact forwarding a zero-copy manifest ref-bump.
 //! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt` produced by
 //!   the python compile path and executes them on the request path.
 //! * [`science`] — the AOT compute payloads (MD, NN-potential training,

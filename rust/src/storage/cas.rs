@@ -1,0 +1,909 @@
+//! Content-addressed, chunked artifact storage — the §2.8 follow-up.
+//!
+//! [`CasStore`] wraps any [`StorageClient`] and speaks the same plugin
+//! surface, so it is a drop-in `EngineBuilder::storage` replacement:
+//!
+//! * **Chunking.** Objects are split into content-defined chunks with a
+//!   gear rolling hash (64 KiB min, ~256 KiB average, 1 MiB max; see
+//!   [`chunk_spans`]). Cut points depend only on local content, so editing
+//!   one region of a large artifact re-uploads only the chunks it touched.
+//! * **Dedup.** Chunks are keyed by their md5 digest and stored once under
+//!   `.cas/<xx>/<digest>` (`<xx>` = first two hex chars, to keep
+//!   directory-backed stores fanned out). A refcount per digest tracks how
+//!   many manifest entries reference it; uploading identical bytes twice
+//!   stores one chunk set.
+//! * **Manifests.** The logical key holds a small binary manifest
+//!   (`DCM1 | total_len | md5 | n | n × (digest, len)`) instead of the
+//!   object bytes. `get_md5` is a manifest read (no object download), and
+//!   `copy` — the engine's step-to-step artifact forwarding primitive —
+//!   is a manifest write plus refcount bumps: **zero data bytes move**
+//!   (asserted via the `chunk_puts`/`chunk_gets` counters, which stay
+//!   flat across copies).
+//! * **Streaming.** `upload_from` chunk-uploads incrementally and
+//!   `open_read` downloads chunk by chunk, so neither direction ever
+//!   buffers a whole object in memory.
+//! * **GC.** Failed/cancelled attempts can leave chunks with no manifest
+//!   (each attempt writes under its own `run{}/{path}/a{attempt}` prefix,
+//!   so stale attempt manifests are enumerable and deletable with
+//!   [`CasStore::delete_prefix`]). [`CasStore::gc`] mark-sweeps: every
+//!   manifest reachable from the root is scanned, and `.cas/` chunks no
+//!   manifest references are deleted. Refcounts are rebuilt as a side
+//!   effect, so `gc`/[`CasStore::recover`] also (re)attach a `CasStore`
+//!   to a pre-existing backing store.
+//!
+//! Concurrency: concurrent `upload`s and `copy`s (the engine's hot paths:
+//! parallel slices writing artifacts, stacking forwarding them) are safe —
+//! the dedup check-and-acquire runs under the refcount mutex, and fresh
+//! chunk bodies land before being referenced, so a racing identical upload
+//! can neither reference a missing body nor lose one to a racing release.
+//! `delete`/`delete_prefix` are safe against each other but must not run
+//! concurrently with uploads or copies that may reference the same
+//! content (a copy whose source is deleted mid-flight can commit a
+//! manifest to freed chunks), and `gc` assumes full quiescence — run both
+//! between workflows, not under them. The engine upholds this: attempt
+//! outputs are namespaced per `run{}/{path}/a{attempt}`, and nothing
+//! deletes during a run. Reads racing an overwrite/cleanup observe a
+//! missing chunk as a `Transient` error, which the engine/OpCtx retry
+//! ladder re-drives.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::Read;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{validate_key, validate_prefix, StorageClient, StorageError};
+use crate::util::{md5_hex, Md5};
+
+/// Minimum chunk length (no cut point before this many bytes).
+pub const CHUNK_MIN: usize = 64 * 1024;
+/// Maximum chunk length (forced cut at this many bytes).
+pub const CHUNK_MAX: usize = 1024 * 1024;
+/// Boundary mask: a cut fires when the low 18 bits of the rolling hash are
+/// zero, giving ~256 KiB expected chunk length past the minimum.
+const CHUNK_MASK: u64 = (1 << 18) - 1;
+/// Reserved internal namespace on the backing store.
+const CAS_PREFIX: &str = ".cas";
+const MANIFEST_MAGIC: &[u8; 4] = b"DCM1";
+
+// -- content-defined chunking --------------------------------------------------
+
+const fn gear_mix(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+const fn build_gear() -> [u64; 256] {
+    let mut t = [0u64; 256];
+    let mut i = 0;
+    while i < 256 {
+        t[i] = gear_mix(i as u64);
+        i += 1;
+    }
+    t
+}
+
+/// Per-byte gear values (deterministic, splitmix-derived).
+static GEAR: [u64; 256] = build_gear();
+
+/// Find the first content-defined cut point assuming a chunk starts at
+/// `data[0]`. Returns `Some(len)` when a boundary (or [`CHUNK_MAX`]) was
+/// reached, `None` when `data` is too short to decide — the caller reads
+/// more, or at EOF takes the whole remainder as the final chunk.
+fn find_cut(data: &[u8]) -> Option<usize> {
+    let limit = data.len().min(CHUNK_MAX);
+    if limit < CHUNK_MIN {
+        return None;
+    }
+    let mut h: u64 = 0;
+    for (i, b) in data[..limit].iter().enumerate() {
+        h = (h << 1).wrapping_add(GEAR[*b as usize]);
+        if i + 1 >= CHUNK_MIN && (h & CHUNK_MASK) == 0 {
+            return Some(i + 1);
+        }
+    }
+    if limit == CHUNK_MAX {
+        Some(CHUNK_MAX)
+    } else {
+        None
+    }
+}
+
+/// Split `data` into content-defined chunk spans `(offset, len)`. Every
+/// span except possibly the last is in `[CHUNK_MIN, CHUNK_MAX]`; spans
+/// concatenate back to `data`; the split is deterministic in the content.
+pub fn chunk_spans(data: &[u8]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut off = 0;
+    while off < data.len() {
+        let rest = &data[off..];
+        let len = find_cut(rest).unwrap_or(rest.len());
+        spans.push((off, len));
+        off += len;
+    }
+    spans
+}
+
+// -- manifests -----------------------------------------------------------------
+
+/// One chunk reference inside a [`Manifest`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkEntry {
+    /// md5 hex digest of the chunk bytes (32 ASCII hex chars).
+    pub digest: String,
+    /// Chunk length in bytes.
+    pub len: u64,
+}
+
+/// The small object stored at an artifact's logical key: total length,
+/// whole-object md5, and the ordered chunk list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub total_len: u64,
+    pub md5: String,
+    pub chunks: Vec<ChunkEntry>,
+}
+
+fn hex32_ok(s: &str) -> bool {
+    s.len() == 32 && s.bytes().all(|b| b.is_ascii_hexdigit())
+}
+
+impl Manifest {
+    /// Cheap magic check: is this blob a CAS manifest?
+    pub fn looks_like(data: &[u8]) -> bool {
+        data.len() >= 4 && &data[..4] == MANIFEST_MAGIC
+    }
+
+    /// Binary encoding: `DCM1 | u64 total_len | [32]md5 | u32 n |
+    /// n × ([32]digest | u64 len)` (all integers little-endian).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(48 + self.chunks.len() * 40);
+        out.extend_from_slice(MANIFEST_MAGIC);
+        out.extend_from_slice(&self.total_len.to_le_bytes());
+        out.extend_from_slice(self.md5.as_bytes());
+        out.extend_from_slice(&(self.chunks.len() as u32).to_le_bytes());
+        for c in &self.chunks {
+            out.extend_from_slice(c.digest.as_bytes());
+            out.extend_from_slice(&c.len.to_le_bytes());
+        }
+        out
+    }
+
+    /// Inverse of [`Manifest::encode`]; corruption is a fatal error.
+    pub fn decode(data: &[u8]) -> Result<Manifest, StorageError> {
+        let bad = |m: &str| StorageError::Fatal(format!("corrupt CAS manifest: {m}"));
+        if data.len() < 48 || &data[..4] != MANIFEST_MAGIC {
+            return Err(bad("bad magic or truncated header"));
+        }
+        let total_len = u64::from_le_bytes(data[4..12].try_into().unwrap());
+        let md5 = std::str::from_utf8(&data[12..44])
+            .map_err(|_| bad("md5 is not ascii"))?
+            .to_string();
+        if !hex32_ok(&md5) {
+            return Err(bad("md5 is not 32 hex chars"));
+        }
+        let n = u32::from_le_bytes(data[44..48].try_into().unwrap()) as usize;
+        if data.len() != 48 + n * 40 {
+            return Err(bad("length disagrees with chunk count"));
+        }
+        let mut chunks = Vec::with_capacity(n);
+        let mut sum: u64 = 0;
+        for i in 0..n {
+            let o = 48 + i * 40;
+            let digest = std::str::from_utf8(&data[o..o + 32])
+                .map_err(|_| bad("digest is not ascii"))?
+                .to_string();
+            if !hex32_ok(&digest) {
+                return Err(bad("digest is not 32 hex chars"));
+            }
+            let len = u64::from_le_bytes(data[o + 32..o + 40].try_into().unwrap());
+            sum = sum.checked_add(len).ok_or_else(|| bad("chunk length overflow"))?;
+            chunks.push(ChunkEntry { digest, len });
+        }
+        if sum != total_len {
+            return Err(bad("chunk lengths disagree with total length"));
+        }
+        Ok(Manifest { total_len, md5, chunks })
+    }
+}
+
+// -- the store -----------------------------------------------------------------
+
+/// Operation counters (all monotonic). The zero-copy guarantee is
+/// observable here: `chunk_puts`/`chunk_gets` count every chunk body that
+/// physically moves, so a `copy` (or a warm reuse run that only forwards
+/// artifacts) leaves both unchanged, and `dedup_bytes` counts bytes that
+/// uploads did **not** re-store thanks to content addressing.
+#[derive(Debug, Default)]
+pub struct CasCounters {
+    /// Chunk bodies physically uploaded to the backing store.
+    pub chunk_puts: AtomicU64,
+    /// Chunk bodies physically downloaded from the backing store.
+    pub chunk_gets: AtomicU64,
+    /// Bytes in `chunk_puts`.
+    pub chunk_put_bytes: AtomicU64,
+    /// Bytes in `chunk_gets`.
+    pub chunk_get_bytes: AtomicU64,
+    /// Upload chunks satisfied by an already-stored chunk.
+    pub dedup_hits: AtomicU64,
+    /// Bytes those hits avoided re-storing.
+    pub dedup_bytes: AtomicU64,
+    /// Manifest writes.
+    pub manifest_puts: AtomicU64,
+    /// Manifest reads.
+    pub manifest_gets: AtomicU64,
+    /// Chunks reclaimed by [`CasStore::gc`].
+    pub gc_chunks_reclaimed: AtomicU64,
+}
+
+/// Result of a [`CasStore::gc`] pass.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GcReport {
+    /// Manifests scanned during the mark phase.
+    pub manifests_scanned: usize,
+    /// Distinct chunk digests still referenced.
+    pub chunks_live: usize,
+    /// Unreferenced chunk bodies deleted.
+    pub chunks_reclaimed: usize,
+}
+
+/// Content-addressed dedup layer over any [`StorageClient`]; see the
+/// module docs for the design. Build with [`CasStore::new`] over an empty
+/// backing store, or [`CasStore::attach`] to adopt one that already holds
+/// CAS data (rebuilds refcounts from the manifests).
+pub struct CasStore {
+    inner: Arc<dyn StorageClient>,
+    /// chunk digest → number of manifest entries referencing it.
+    refs: Mutex<BTreeMap<String, u64>>,
+    counters: Arc<CasCounters>,
+}
+
+impl CasStore {
+    /// Wrap an (empty) backing store.
+    pub fn new(inner: Arc<dyn StorageClient>) -> CasStore {
+        CasStore {
+            inner,
+            refs: Mutex::new(BTreeMap::new()),
+            counters: Arc::new(CasCounters::default()),
+        }
+    }
+
+    /// Wrap a backing store that already holds CAS data, rebuilding chunk
+    /// refcounts from the manifests found in it.
+    pub fn attach(inner: Arc<dyn StorageClient>) -> Result<CasStore, StorageError> {
+        let s = CasStore::new(inner);
+        s.recover()?;
+        Ok(s)
+    }
+
+    /// Operation counters.
+    pub fn counters(&self) -> &CasCounters {
+        &self.counters
+    }
+
+    /// The wrapped backing store.
+    pub fn inner(&self) -> &Arc<dyn StorageClient> {
+        &self.inner
+    }
+
+    /// Number of distinct chunks currently referenced.
+    pub fn chunks_referenced(&self) -> usize {
+        self.refs.lock().unwrap().len()
+    }
+
+    fn chunk_key(digest: &str) -> String {
+        format!("{CAS_PREFIX}/{}/{digest}", &digest[..2])
+    }
+
+    fn is_internal_key(key: &str) -> bool {
+        key.strip_prefix(CAS_PREFIX)
+            .map_or(false, |rest| rest.is_empty() || rest.starts_with('/'))
+    }
+
+    fn check_user_key(key: &str) -> Result<(), StorageError> {
+        validate_key(key)?;
+        if Self::is_internal_key(key) {
+            return Err(StorageError::Fatal(format!(
+                "storage key '{key}' rejected: '{CAS_PREFIX}' is reserved for CAS internals"
+            )));
+        }
+        Ok(())
+    }
+
+    fn read_manifest(&self, key: &str) -> Result<Manifest, StorageError> {
+        let raw = self.inner.download(key)?;
+        self.counters.manifest_gets.fetch_add(1, Ordering::Relaxed);
+        if !Manifest::looks_like(&raw) {
+            // distinguish "raw object written without the CAS layer" from
+            // actual manifest corruption — the repair paths differ
+            return Err(StorageError::Fatal(format!(
+                "object at '{key}' is not a CAS manifest — the backing store holds raw \
+                 objects written without the CAS layer (migrate them, or read them \
+                 through the backing store directly)"
+            )));
+        }
+        Manifest::decode(&raw)
+    }
+
+    /// The manifest at `key`, or `None` when the key holds nothing (or
+    /// holds something that is not a manifest).
+    fn read_manifest_opt(&self, key: &str) -> Result<Option<Manifest>, StorageError> {
+        match self.inner.download(key) {
+            Ok(raw) => {
+                self.counters.manifest_gets.fetch_add(1, Ordering::Relaxed);
+                Ok(Manifest::decode(&raw).ok())
+            }
+            Err(StorageError::NotFound(_)) => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Bump refcounts for every entry (copies; the chunk bodies already
+    /// exist).
+    fn acquire_entries(&self, entries: &[ChunkEntry]) {
+        let mut refs = self.refs.lock().unwrap();
+        for e in entries {
+            *refs.entry(e.digest.clone()).or_insert(0) += 1;
+        }
+    }
+
+    /// Drop one reference per entry; chunk bodies that reach zero are
+    /// deleted from the backing store. Digests the refcount map does not
+    /// know (possible only on a mis-attached store) are left for `gc`.
+    ///
+    /// The physical delete happens **while holding the refcount lock**:
+    /// deferring it outside would let a racing identical upload re-create
+    /// and reference the body in the gap, only for the deferred delete to
+    /// then remove it from under the new manifest. Releases are rare
+    /// (delete/overwrite/rollback), so serializing their backend IO with
+    /// the dedup check is the cheap side of that trade.
+    fn release_entries(&self, entries: &[ChunkEntry]) {
+        let mut refs = self.refs.lock().unwrap();
+        for e in entries {
+            match refs.get_mut(&e.digest) {
+                Some(r) if *r > 1 => *r -= 1,
+                Some(_) => {
+                    refs.remove(&e.digest);
+                    // the body may be absent (rolled-back upload); gc
+                    // covers strays
+                    self.inner.delete(&Self::chunk_key(&e.digest)).ok();
+                }
+                None => {}
+            }
+        }
+    }
+
+    /// Upload one chunk body if this store doesn't hold it yet, and record
+    /// its manifest entry (see the inline comments for the two orderings
+    /// that make this safe against racing identical uploads and releases).
+    fn put_chunk(&self, data: &[u8], entries: &mut Vec<ChunkEntry>) -> Result<(), StorageError> {
+        let digest = md5_hex(data);
+        let entry = ChunkEntry { digest: digest.clone(), len: data.len() as u64 };
+        // dedup fast path: check-and-acquire under ONE lock hold, so a
+        // concurrent release can never free the body between our check and
+        // our reference — release also runs under this lock, and a body is
+        // only deleted after its refcount hit zero there
+        {
+            let mut refs = self.refs.lock().unwrap();
+            if let Some(r) = refs.get_mut(&digest) {
+                if *r > 0 {
+                    *r += 1;
+                    drop(refs);
+                    self.counters.dedup_hits.fetch_add(1, Ordering::Relaxed);
+                    self.counters.dedup_bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
+                    entries.push(entry);
+                    return Ok(());
+                }
+            }
+        }
+        // fresh chunk: body lands BEFORE the reference is taken, so a
+        // racing identical upload that dedup-hits can never reference a
+        // body a failed put left missing (double-uploading the same bytes
+        // is idempotent; a put that fails here has referenced nothing, and
+        // any stray partial body is gc-reclaimable and overwritten by the
+        // next writer)
+        self.inner.upload(&Self::chunk_key(&digest), data)?;
+        self.counters.chunk_puts.fetch_add(1, Ordering::Relaxed);
+        self.counters.chunk_put_bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.acquire_entries(std::slice::from_ref(&entry));
+        entries.push(entry);
+        Ok(())
+    }
+
+    /// Download + verify one chunk. A missing or corrupt chunk under a
+    /// live manifest is reported transient so the retry ladder re-drives
+    /// the read (it is either a raced overwrite or real corruption; both
+    /// warrant another attempt before failing the OP).
+    fn fetch_chunk(&self, c: &ChunkEntry) -> Result<Vec<u8>, StorageError> {
+        fetch_verified_chunk(&*self.inner, &self.counters, c)
+    }
+
+    /// Rebuild the refcount map from the manifests in the backing store.
+    /// Returns the number of manifests scanned. Objects that carry the
+    /// manifest magic but fail to decode (a torn write on a non-atomic
+    /// backing store) are skipped — their object is unreadable either way,
+    /// and halting here would permanently disable `attach` and `gc`, the
+    /// very tools needed to clean up after such a crash.
+    pub fn recover(&self) -> Result<usize, StorageError> {
+        let mut live: BTreeMap<String, u64> = BTreeMap::new();
+        let mut scanned = 0usize;
+        for k in self.inner.list("")? {
+            if Self::is_internal_key(&k) {
+                continue;
+            }
+            let raw = self.inner.download(&k)?;
+            let Ok(m) = Manifest::decode(&raw) else {
+                continue; // foreign object, or a corrupt (torn) manifest
+            };
+            for c in &m.chunks {
+                *live.entry(c.digest.clone()).or_insert(0) += 1;
+            }
+            scanned += 1;
+        }
+        *self.refs.lock().unwrap() = live;
+        Ok(scanned)
+    }
+
+    /// Mark-sweep garbage collection: rebuild refcounts from manifests,
+    /// then delete every `.cas/` chunk body no manifest references —
+    /// orphans left by failed uploads and cancelled/timed-out attempts.
+    /// Assumes quiescence (no concurrent uploads).
+    pub fn gc(&self) -> Result<GcReport, StorageError> {
+        let manifests_scanned = self.recover()?;
+        let live: BTreeMap<String, u64> = self.refs.lock().unwrap().clone();
+        let mut reclaimed = 0usize;
+        for ck in self.inner.list(&format!("{CAS_PREFIX}/"))? {
+            let digest = ck.rsplit('/').next().unwrap_or("");
+            if !live.contains_key(digest) {
+                self.inner.delete(&ck)?;
+                reclaimed += 1;
+            }
+        }
+        self.counters.gc_chunks_reclaimed.fetch_add(reclaimed as u64, Ordering::Relaxed);
+        Ok(GcReport { manifests_scanned, chunks_live: live.len(), chunks_reclaimed: reclaimed })
+    }
+
+    /// Delete every object under `prefix` (e.g. a cancelled attempt's
+    /// `run{}/{path}/a{n}/` namespace), releasing chunk references.
+    /// Returns the number of objects deleted.
+    pub fn delete_prefix(&self, prefix: &str) -> Result<usize, StorageError> {
+        validate_prefix(prefix)?;
+        if prefix.is_empty() {
+            return Err(StorageError::Fatal(
+                "refusing delete_prefix(\"\"): would delete every object".into(),
+            ));
+        }
+        let keys = self.list(prefix)?;
+        let mut n = 0usize;
+        for k in keys {
+            self.delete(&k)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+}
+
+impl StorageClient for CasStore {
+    fn upload(&self, key: &str, data: &[u8]) -> Result<(), StorageError> {
+        let mut r: &[u8] = data;
+        self.upload_from(key, &mut r).map(|_| ())
+    }
+
+    fn download(&self, key: &str) -> Result<Vec<u8>, StorageError> {
+        Self::check_user_key(key)?;
+        let m = self.read_manifest(key)?;
+        let mut out = Vec::with_capacity(m.total_len as usize);
+        for c in &m.chunks {
+            out.extend_from_slice(&self.fetch_chunk(c)?);
+        }
+        Ok(out)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StorageError> {
+        validate_prefix(prefix)?;
+        Ok(self
+            .inner
+            .list(prefix)?
+            .into_iter()
+            .filter(|k| !Self::is_internal_key(k))
+            .collect())
+    }
+
+    fn copy(&self, src: &str, dst: &str) -> Result<(), StorageError> {
+        Self::check_user_key(src)?;
+        Self::check_user_key(dst)?;
+        let m = self.read_manifest(src)?; // NotFound propagates (contract)
+        let old = self.read_manifest_opt(dst)?;
+        self.acquire_entries(&m.chunks);
+        if let Err(e) = self.inner.upload(dst, &m.encode()) {
+            self.release_entries(&m.chunks);
+            return Err(e);
+        }
+        self.counters.manifest_puts.fetch_add(1, Ordering::Relaxed);
+        if let Some(old) = old {
+            self.release_entries(&old.chunks);
+        }
+        // no chunk body moved: chunk_puts/chunk_gets are untouched
+        Ok(())
+    }
+
+    fn get_md5(&self, key: &str) -> Result<String, StorageError> {
+        Self::check_user_key(key)?;
+        Ok(self.read_manifest(key)?.md5)
+    }
+
+    fn delete(&self, key: &str) -> Result<(), StorageError> {
+        Self::check_user_key(key)?;
+        let m = self.read_manifest(key)?; // NotFound propagates
+        self.inner.delete(key)?;
+        self.release_entries(&m.chunks);
+        Ok(())
+    }
+
+    fn open_read(&self, key: &str) -> Result<Box<dyn Read + Send>, StorageError> {
+        Self::check_user_key(key)?;
+        let m = self.read_manifest(key)?;
+        Ok(Box::new(CasReader {
+            inner: Arc::clone(&self.inner),
+            counters: Arc::clone(&self.counters),
+            chunks: m.chunks.into(),
+            current: Vec::new(),
+            pos: 0,
+        }))
+    }
+
+    fn upload_from(&self, key: &str, reader: &mut dyn Read) -> Result<(u64, String), StorageError> {
+        Self::check_user_key(key)?;
+        // read the old manifest (if any) first, so its chunks can be
+        // released once the replacement has landed
+        let old = self.read_manifest_opt(key)?;
+        let mut entries: Vec<ChunkEntry> = Vec::new();
+        let mut hash = Md5::new();
+        let mut total = 0u64;
+        let mut pending: Vec<u8> = Vec::with_capacity(CHUNK_MAX + 64 * 1024);
+        let mut buf = [0u8; 64 * 1024];
+        let mut eof = false;
+        let chunked = (|| -> Result<(), StorageError> {
+            loop {
+                while !eof && pending.len() < CHUNK_MAX {
+                    let n = reader.read(&mut buf).map_err(|e| {
+                        StorageError::Transient(format!("reading upload stream: {e}"))
+                    })?;
+                    if n == 0 {
+                        eof = true;
+                    } else {
+                        hash.update(&buf[..n]);
+                        total += n as u64;
+                        pending.extend_from_slice(&buf[..n]);
+                    }
+                }
+                if pending.is_empty() {
+                    return Ok(());
+                }
+                // None can only mean "short of CHUNK_MIN at EOF": the fill
+                // loop above guarantees pending is at CHUNK_MAX otherwise
+                let cut = find_cut(&pending).unwrap_or(pending.len());
+                self.put_chunk(&pending[..cut], &mut entries)?;
+                pending.drain(..cut);
+            }
+        })();
+        if let Err(e) = chunked {
+            // roll back the references acquired so far; any chunk bodies
+            // already uploaded become gc-reclaimable orphans at worst
+            self.release_entries(&entries);
+            return Err(e);
+        }
+        let md5 = hash.finalize_hex();
+        let manifest = Manifest { total_len: total, md5: md5.clone(), chunks: entries };
+        if let Err(e) = self.inner.upload(key, &manifest.encode()) {
+            self.release_entries(&manifest.chunks);
+            return Err(e);
+        }
+        self.counters.manifest_puts.fetch_add(1, Ordering::Relaxed);
+        if let Some(old) = old {
+            self.release_entries(&old.chunks);
+        }
+        Ok((total, md5))
+    }
+}
+
+/// Download + digest-verify one chunk body (shared by the buffered and
+/// streaming read paths, so both classify faults identically): a missing
+/// chunk under a live manifest maps to [`StorageError::Transient`], as do
+/// length/digest mismatches.
+fn fetch_verified_chunk(
+    inner: &dyn StorageClient,
+    counters: &CasCounters,
+    c: &ChunkEntry,
+) -> Result<Vec<u8>, StorageError> {
+    let key = CasStore::chunk_key(&c.digest);
+    let data = match inner.download(&key) {
+        Ok(d) => d,
+        Err(StorageError::NotFound(k)) => {
+            return Err(StorageError::Transient(format!("cas chunk missing: {k}")))
+        }
+        Err(e) => return Err(e),
+    };
+    if data.len() as u64 != c.len || md5_hex(&data) != c.digest {
+        return Err(StorageError::Transient(format!("cas chunk {} corrupt", c.digest)));
+    }
+    counters.chunk_gets.fetch_add(1, Ordering::Relaxed);
+    counters.chunk_get_bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
+    Ok(data)
+}
+
+/// Transient-blip budget for lazily-fetched chunks on the streaming read
+/// path — the reader retries internally because its caller (an OP holding
+/// a half-consumed stream) cannot re-drive a mid-stream fetch the way
+/// `read_artifact`'s `with_retry` re-drives a whole download.
+const STREAM_CHUNK_RETRIES: u32 = 5;
+
+/// Streaming reader over a CAS object: holds at most one chunk in memory,
+/// verifying each chunk's digest as it goes. Transient chunk-fetch faults
+/// are retried with the same bounded budget as buffered reads; what
+/// escapes surfaces as an `io::Error` whose message carries the
+/// [`StorageError`] classification.
+struct CasReader {
+    inner: Arc<dyn StorageClient>,
+    counters: Arc<CasCounters>,
+    chunks: VecDeque<ChunkEntry>,
+    current: Vec<u8>,
+    pos: usize,
+}
+
+impl Read for CasReader {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        use std::io::{Error, ErrorKind};
+        if out.is_empty() {
+            return Ok(0);
+        }
+        while self.pos == self.current.len() {
+            let Some(c) = self.chunks.pop_front() else { return Ok(0) };
+            let data = super::with_retry(STREAM_CHUNK_RETRIES, || {
+                fetch_verified_chunk(&*self.inner, &self.counters, &c)
+            })
+            .map_err(|e| Error::new(ErrorKind::Other, e.to_string()))?;
+            self.current = data;
+            self.pos = 0;
+        }
+        let n = (self.current.len() - self.pos).min(out.len());
+        out[..n].copy_from_slice(&self.current[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStorage;
+    use crate::util::Rng;
+
+    fn blob(rng: &mut Rng, n: usize) -> Vec<u8> {
+        (0..n).map(|_| rng.next_u64() as u8).collect()
+    }
+
+    #[test]
+    fn chunk_spans_cover_input_within_bounds() {
+        crate::check::forall("chunk spans partition the input", |rng| {
+            let n = rng.below(4 * CHUNK_MAX as u64) as usize;
+            let data = blob(rng, n);
+            let spans = chunk_spans(&data);
+            let mut off = 0usize;
+            for (i, (o, l)) in spans.iter().enumerate() {
+                assert_eq!(*o, off, "spans must be contiguous");
+                assert!(*l > 0);
+                assert!(*l <= CHUNK_MAX);
+                if i + 1 < spans.len() {
+                    assert!(*l >= CHUNK_MIN, "non-final chunk below minimum");
+                }
+                off += l;
+            }
+            assert_eq!(off, data.len());
+            // deterministic
+            assert_eq!(spans, chunk_spans(&data));
+        });
+    }
+
+    #[test]
+    fn chunking_is_content_defined() {
+        // appending data must not change already-cut chunks
+        let mut rng = Rng::new(11);
+        let a = blob(&mut rng, 3 * CHUNK_MAX);
+        let mut b = a.clone();
+        b.extend_from_slice(&blob(&mut rng, CHUNK_MAX));
+        let sa = chunk_spans(&a);
+        let sb = chunk_spans(&b);
+        // all but the final span of `a` reappear verbatim in `b`
+        for (x, y) in sa.iter().take(sa.len() - 1).zip(sb.iter()) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_corruption() {
+        let m = Manifest {
+            total_len: 100,
+            md5: "d41d8cd98f00b204e9800998ecf8427e".into(),
+            chunks: vec![
+                ChunkEntry { digest: "900150983cd24fb0d6963f7d28e17f72".into(), len: 60 },
+                ChunkEntry { digest: "f96b697d7cb7938d525a2f31aaf161d0".into(), len: 40 },
+            ],
+        };
+        let enc = m.encode();
+        assert!(Manifest::looks_like(&enc));
+        assert_eq!(Manifest::decode(&enc).unwrap(), m);
+        assert!(Manifest::decode(b"NOPE").is_err());
+        assert!(Manifest::decode(&enc[..enc.len() - 1]).is_err());
+        let mut bad_sum = enc.clone();
+        bad_sum[4] ^= 1; // total_len no longer matches chunk sum
+        assert!(Manifest::decode(&bad_sum).is_err());
+        let mut bad_digest = enc;
+        bad_digest[48] = b'!'; // non-hex digest byte
+        assert!(Manifest::decode(&bad_digest).is_err());
+    }
+
+    #[test]
+    fn upload_download_roundtrip_forall() {
+        crate::check::forall("cas round-trips arbitrary blobs", |rng| {
+            let cas = CasStore::new(Arc::new(MemStorage::new()));
+            let n = rng.below(3 * CHUNK_MAX as u64) as usize;
+            let data = blob(rng, n);
+            cas.upload("obj/a", &data).unwrap();
+            assert_eq!(cas.download("obj/a").unwrap(), data);
+            assert_eq!(cas.get_md5("obj/a").unwrap(), md5_hex(&data));
+        });
+    }
+
+    #[test]
+    fn dedup_stores_one_chunk_set() {
+        let mem = Arc::new(MemStorage::new());
+        let cas = CasStore::new(mem.clone());
+        let data = blob(&mut Rng::new(3), 3 * CHUNK_MAX + 1234);
+        cas.upload("a", &data).unwrap();
+        let puts = cas.counters().chunk_puts.load(Ordering::Relaxed);
+        assert!(puts >= 3, "expected multiple chunks, got {puts}");
+        let objects_after_first = mem.len();
+        cas.upload("b", &data).unwrap();
+        cas.upload("c/d", &data).unwrap();
+        assert_eq!(
+            cas.counters().chunk_puts.load(Ordering::Relaxed),
+            puts,
+            "identical uploads must not store new chunks"
+        );
+        assert_eq!(cas.counters().dedup_hits.load(Ordering::Relaxed), 2 * puts);
+        // only two manifest objects were added
+        assert_eq!(mem.len(), objects_after_first + 2);
+        assert_eq!(cas.download("c/d").unwrap(), data);
+    }
+
+    #[test]
+    fn copy_moves_no_data_bytes() {
+        let cas = CasStore::new(Arc::new(MemStorage::new()));
+        let data = blob(&mut Rng::new(5), 2 * CHUNK_MAX);
+        cas.upload("src", &data).unwrap();
+        let puts = cas.counters().chunk_puts.load(Ordering::Relaxed);
+        let gets = cas.counters().chunk_gets.load(Ordering::Relaxed);
+        for i in 0..10 {
+            cas.copy("src", &format!("dst/{i}")).unwrap();
+        }
+        assert_eq!(cas.counters().chunk_puts.load(Ordering::Relaxed), puts);
+        assert_eq!(cas.counters().chunk_gets.load(Ordering::Relaxed), gets);
+        assert_eq!(cas.download("dst/9").unwrap(), data);
+    }
+
+    #[test]
+    fn get_md5_reads_manifest_not_chunks() {
+        let cas = CasStore::new(Arc::new(MemStorage::new()));
+        let data = blob(&mut Rng::new(7), 2 * CHUNK_MAX);
+        cas.upload("big", &data).unwrap();
+        let gets = cas.counters().chunk_gets.load(Ordering::Relaxed);
+        assert_eq!(cas.get_md5("big").unwrap(), md5_hex(&data));
+        assert_eq!(
+            cas.counters().chunk_gets.load(Ordering::Relaxed),
+            gets,
+            "get_md5 must not download chunks"
+        );
+    }
+
+    #[test]
+    fn delete_respects_shared_chunks() {
+        let mem = Arc::new(MemStorage::new());
+        let cas = CasStore::new(mem.clone());
+        let data = blob(&mut Rng::new(9), 2 * CHUNK_MAX);
+        cas.upload("a", &data).unwrap();
+        cas.copy("a", "b").unwrap();
+        cas.delete("a").unwrap();
+        assert_eq!(cas.download("b").unwrap(), data, "shared chunks must survive");
+        cas.delete("b").unwrap();
+        assert!(mem.list(".cas/").unwrap().is_empty(), "last delete must free all chunks");
+        assert!(mem.is_empty());
+    }
+
+    #[test]
+    fn overwrite_releases_old_chunks() {
+        let mem = Arc::new(MemStorage::new());
+        let cas = CasStore::new(mem.clone());
+        let mut rng = Rng::new(13);
+        let a = blob(&mut rng, 2 * CHUNK_MAX);
+        let b = blob(&mut rng, 2 * CHUNK_MAX);
+        cas.upload("k", &a).unwrap();
+        let chunks_a = mem.list(".cas/").unwrap().len();
+        cas.upload("k", &b).unwrap();
+        assert_eq!(cas.download("k").unwrap(), b);
+        // old chunks were freed: the store holds only b's chunk set now
+        let chunks_b = mem.list(".cas/").unwrap().len();
+        assert!(chunks_b <= chunks_a + 1, "old chunks leaked: {chunks_a} -> {chunks_b}");
+        assert_eq!(cas.chunks_referenced(), chunks_b);
+    }
+
+    #[test]
+    fn gc_reclaims_orphans_and_keeps_live_chunks() {
+        let mem = Arc::new(MemStorage::new());
+        let cas = CasStore::new(mem.clone());
+        let mut rng = Rng::new(17);
+        let keep = blob(&mut rng, 2 * CHUNK_MAX);
+        let orphan = blob(&mut rng, 2 * CHUNK_MAX);
+        cas.upload("runs/keep", &keep).unwrap();
+        cas.upload("runs/dead", &orphan).unwrap();
+        // a cancelled attempt's manifest vanishes behind the CAS layer's back
+        mem.delete("runs/dead").unwrap();
+        let report = cas.gc().unwrap();
+        assert_eq!(report.manifests_scanned, 1);
+        assert!(report.chunks_reclaimed > 0, "orphan chunks must be reclaimed");
+        assert_eq!(report.chunks_live, mem.list(".cas/").unwrap().len());
+        assert_eq!(cas.download("runs/keep").unwrap(), keep, "gc must not touch live data");
+    }
+
+    #[test]
+    fn delete_prefix_drops_attempt_namespace() {
+        let mem = Arc::new(MemStorage::new());
+        let cas = CasStore::new(mem.clone());
+        let data = blob(&mut Rng::new(19), CHUNK_MAX);
+        cas.upload("run1/s/a0/blob", &data).unwrap();
+        cas.upload("run1/s/a1/blob", &data).unwrap();
+        cas.upload("run1/t/a0/blob", &data).unwrap();
+        assert_eq!(cas.delete_prefix("run1/s/a0/").unwrap(), 1);
+        assert!(matches!(cas.download("run1/s/a0/blob"), Err(StorageError::NotFound(_))));
+        assert_eq!(cas.download("run1/t/a0/blob").unwrap(), data);
+        assert!(cas.delete_prefix("").is_err());
+    }
+
+    #[test]
+    fn attach_recovers_refcounts() {
+        let mem = Arc::new(MemStorage::new());
+        {
+            let cas = CasStore::new(mem.clone());
+            let data = blob(&mut Rng::new(23), 2 * CHUNK_MAX);
+            cas.upload("a", &data).unwrap();
+            cas.copy("a", "b").unwrap();
+        }
+        // a fresh process attaches to the same backing store
+        let cas = CasStore::attach(mem.clone()).unwrap();
+        let data = cas.download("a").unwrap();
+        cas.delete("a").unwrap();
+        assert_eq!(cas.download("b").unwrap(), data, "recovered refcounts must protect b");
+    }
+
+    #[test]
+    fn streaming_reader_matches_download() {
+        let cas = CasStore::new(Arc::new(MemStorage::new()));
+        let data = blob(&mut Rng::new(29), 2 * CHUNK_MAX + 777);
+        cas.upload("s", &data).unwrap();
+        let mut out = Vec::new();
+        cas.open_read("s").unwrap().read_to_end(&mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn internal_namespace_is_reserved_and_hidden() {
+        let mem = Arc::new(MemStorage::new());
+        let cas = CasStore::new(mem.clone());
+        assert!(matches!(cas.upload(".cas/x", b"d"), Err(StorageError::Fatal(_))));
+        cas.upload("visible", &blob(&mut Rng::new(31), CHUNK_MAX)).unwrap();
+        let listed = cas.list("").unwrap();
+        assert_eq!(listed, vec!["visible".to_string()]);
+        assert!(!mem.list(".cas/").unwrap().is_empty(), "chunks live under .cas/ internally");
+    }
+}

@@ -3,15 +3,46 @@
 //! Dflow's artifact store is "a MinIO server ... seamlessly replaceable with
 //! various artifact storages" through a `StorageClient` implementing exactly
 //! five methods: `upload`, `download`, `list`, `copy`, `get_md5`. This
-//! module reproduces that plugin surface:
+//! module reproduces that plugin surface (plus three hardening extensions:
+//! `delete`, needed by CAS garbage collection, and the streaming
+//! `open_read`/`upload_from` pair, both with buffering defaults so the
+//! 5-method core stays sufficient for new plugins):
 //!
 //! * [`MemStorage`] — in-memory object map (unit tests, debug mode).
 //! * [`LocalStorage`] — directory-backed store (the debug-mode default).
 //! * [`ObjectStoreSim`] — MinIO/S3 stand-in with injected latency and
 //!   transient-failure rate, for fault-tolerance benches.
+//! * [`CasStore`] (see [`cas`]) — content-addressed chunked dedup layer
+//!   over any of the above: objects are split into content-defined chunks
+//!   (gear rolling hash, ≥64 KiB) stored once under `.cas/<xx>/<digest>`
+//!   with refcounts, and the logical key holds a small `DCM1` manifest
+//!   (total length + whole-object md5 + chunk digest list). `copy` — the
+//!   engine's step-to-step artifact-forwarding primitive — becomes a
+//!   manifest write plus refcount bumps (zero data bytes move), `get_md5`
+//!   reads the manifest instead of downloading the object, and
+//!   [`cas::CasStore::gc`] mark-sweeps chunks orphaned by cancelled or
+//!   timed-out attempts.
+//!
+//! Hardening invariants enforced here (and exercised by the
+//! `storage_contract` battery):
+//!
+//! * **No key escapes.** Every key is validated by [`validate_key`]:
+//!   absolute keys, `..`/`.`/empty components and backslashes are rejected
+//!   with [`StorageError::Fatal`] before any client touches them, so
+//!   `upload("../evil", …)` can never write outside a [`LocalStorage`]
+//!   root (the guard `unpack_dir` always had).
+//! * **No torn writes.** [`LocalStorage`] writes to a temp file under
+//!   `<root>/.tmp` and atomically renames into place; a crash mid-write
+//!   can no longer leave a truncated object that later downloads
+//!   "successfully".
+//! * **Bounded retry.** [`with_retry`]/[`copy_with_retry`] give every
+//!   engine- and OpCtx-level storage call the same transient-blip budget,
+//!   so one flake no longer burns a whole OP attempt.
 //!
 //! Directories are packed into a single object with [`pack_dir`] (a simple
 //! length-prefixed archive) so an artifact is always one object, as in S3.
+
+pub mod cas;
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -22,7 +53,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::util::{md5_hex, Rng};
+use crate::util::{md5_hex, Md5, Rng};
+
+pub use cas::{CasCounters, CasStore, ChunkEntry, GcReport, Manifest};
 
 /// Storage-layer failure. `Transient` failures are retried by the engine's
 /// fault-tolerance policy; `Fatal` ones are not.
@@ -49,7 +82,9 @@ impl fmt::Display for StorageError {
 
 impl std::error::Error for StorageError {}
 
-/// The paper's 5-method artifact storage plugin interface.
+/// The paper's 5-method artifact storage plugin interface, plus defaulted
+/// extensions (`delete` for CAS gc, `open_read`/`upload_from` for
+/// streaming) so a minimal plugin still only implements the original five.
 pub trait StorageClient: Send + Sync {
     /// Store `data` under `key` (overwrites).
     fn upload(&self, key: &str, data: &[u8]) -> Result<(), StorageError>;
@@ -64,12 +99,125 @@ pub trait StorageClient: Send + Sync {
     fn get_md5(&self, key: &str) -> Result<String, StorageError> {
         Ok(md5_hex(&self.download(key)?))
     }
+    /// Remove the object at `key` ([`StorageError::NotFound`] when absent).
+    /// Extension beyond the paper's five methods, required by the CAS
+    /// layer's refcounting and gc. Default: unsupported.
+    fn delete(&self, key: &str) -> Result<(), StorageError> {
+        Err(StorageError::Fatal(format!(
+            "delete('{key}') is not supported by this storage client"
+        )))
+    }
+    /// Open a streaming reader over the object. The default buffers the
+    /// whole object; [`LocalStorage`] streams from the file and
+    /// [`CasStore`] streams chunk by chunk (one chunk in memory at a
+    /// time).
+    fn open_read(&self, key: &str) -> Result<Box<dyn Read + Send>, StorageError> {
+        Ok(Box::new(std::io::Cursor::new(self.download(key)?)))
+    }
+    /// Store everything `reader` yields under `key`, returning the object
+    /// length and md5. The default buffers; [`LocalStorage`] spools to the
+    /// temp file directly and [`CasStore`] chunk-uploads incrementally.
+    fn upload_from(&self, key: &str, reader: &mut dyn Read) -> Result<(u64, String), StorageError> {
+        let mut buf = Vec::new();
+        reader
+            .read_to_end(&mut buf)
+            .map_err(|e| StorageError::Transient(format!("reading upload stream: {e}")))?;
+        self.upload(key, &buf)?;
+        Ok((buf.len() as u64, md5_hex(&buf)))
+    }
+}
+
+/// Reject keys that could escape (or alias paths inside) a directory-backed
+/// store root: empty keys, absolute keys, backslashes, and any `..`/`.`/
+/// empty path component. Every built-in client applies this to every
+/// key-taking method, mirroring the guard [`unpack_dir`] always had.
+pub fn validate_key(key: &str) -> Result<(), StorageError> {
+    if key.is_empty() {
+        return Err(StorageError::Fatal("empty storage key rejected".into()));
+    }
+    if key.starts_with('/') {
+        return Err(StorageError::Fatal(format!("absolute storage key '{key}' rejected")));
+    }
+    if key.contains('\\') {
+        return Err(StorageError::Fatal(format!(
+            "storage key '{key}' rejected: backslash separators are not portable"
+        )));
+    }
+    for comp in key.split('/') {
+        if comp.is_empty() || comp == "." || comp == ".." {
+            return Err(StorageError::Fatal(format!(
+                "storage key '{key}' rejected: component '{comp}' could escape or alias \
+                 the store root"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Like [`validate_key`] but for `list` prefixes, which are filters rather
+/// than paths: empty prefixes and trailing `/` are fine, but escaping
+/// components are still rejected.
+pub fn validate_prefix(prefix: &str) -> Result<(), StorageError> {
+    if prefix.starts_with('/') {
+        return Err(StorageError::Fatal(format!("absolute storage prefix '{prefix}' rejected")));
+    }
+    for comp in prefix.split('/') {
+        if comp == ".." {
+            return Err(StorageError::Fatal(format!(
+                "storage prefix '{prefix}' rejected: '..' component"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Run `f` with bounded exponential-backoff retry on
+/// [`StorageError::Transient`] failures (`NotFound`/`Fatal` return at
+/// once). The shared retry budget for engine artifact forwarding and OpCtx
+/// artifact I/O, so one storage blip never burns a whole OP attempt.
+pub fn with_retry<T>(
+    attempts: u32,
+    mut f: impl FnMut() -> Result<T, StorageError>,
+) -> Result<T, StorageError> {
+    let mut last = None;
+    for attempt in 0..attempts.max(1) {
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(StorageError::Transient(m)) => {
+                last = Some(StorageError::Transient(m));
+                if attempt + 1 < attempts {
+                    std::thread::sleep(Duration::from_millis(1u64 << attempt.min(6)));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last.expect("with_retry loop ran at least once"))
+}
+
+/// Server-side copy with bounded retry on transient storage failures (the
+/// engine's artifact-forwarding primitive; over [`CasStore`] this is a
+/// manifest ref-bump, not a byte copy).
+pub fn copy_with_retry(
+    storage: &dyn StorageClient,
+    src: &str,
+    dst: &str,
+) -> Result<(), StorageError> {
+    with_retry(8, || storage.copy(src, dst))
+}
+
+/// One stored object: shared bytes plus the md5 stamped at upload, so
+/// `get_md5` never re-reads (or re-hashes) the payload.
+#[derive(Clone)]
+struct MemObject {
+    data: Arc<Vec<u8>>,
+    md5: String,
 }
 
 /// In-memory object store.
 #[derive(Default)]
 pub struct MemStorage {
-    objects: Mutex<BTreeMap<String, Arc<Vec<u8>>>>,
+    objects: Mutex<BTreeMap<String, MemObject>>,
 }
 
 impl MemStorage {
@@ -91,23 +239,24 @@ impl MemStorage {
 
 impl StorageClient for MemStorage {
     fn upload(&self, key: &str, data: &[u8]) -> Result<(), StorageError> {
-        self.objects
-            .lock()
-            .unwrap()
-            .insert(key.to_string(), Arc::new(data.to_vec()));
+        validate_key(key)?;
+        let obj = MemObject { data: Arc::new(data.to_vec()), md5: md5_hex(data) };
+        self.objects.lock().unwrap().insert(key.to_string(), obj);
         Ok(())
     }
 
     fn download(&self, key: &str) -> Result<Vec<u8>, StorageError> {
+        validate_key(key)?;
         self.objects
             .lock()
             .unwrap()
             .get(key)
-            .map(|v| v.as_ref().clone())
+            .map(|v| v.data.as_ref().clone())
             .ok_or_else(|| StorageError::NotFound(key.to_string()))
     }
 
     fn list(&self, prefix: &str) -> Result<Vec<String>, StorageError> {
+        validate_prefix(prefix)?;
         Ok(self
             .objects
             .lock()
@@ -119,6 +268,8 @@ impl StorageClient for MemStorage {
     }
 
     fn copy(&self, src: &str, dst: &str) -> Result<(), StorageError> {
+        validate_key(src)?;
+        validate_key(dst)?;
         let mut map = self.objects.lock().unwrap();
         let v = map
             .get(src)
@@ -127,13 +278,41 @@ impl StorageClient for MemStorage {
         map.insert(dst.to_string(), v);
         Ok(())
     }
+
+    fn get_md5(&self, key: &str) -> Result<String, StorageError> {
+        validate_key(key)?;
+        self.objects
+            .lock()
+            .unwrap()
+            .get(key)
+            .map(|v| v.md5.clone())
+            .ok_or_else(|| StorageError::NotFound(key.to_string()))
+    }
+
+    fn delete(&self, key: &str) -> Result<(), StorageError> {
+        validate_key(key)?;
+        self.objects
+            .lock()
+            .unwrap()
+            .remove(key)
+            .map(|_| ())
+            .ok_or_else(|| StorageError::NotFound(key.to_string()))
+    }
 }
 
 /// Directory-backed store. Keys map to file paths under the root; `/` in
-/// keys becomes a directory separator.
+/// keys becomes a directory separator. Uploads are **atomic**: data lands
+/// in a temp file under `<root>/.tmp` and is renamed into place, so a
+/// crash mid-write never leaves a truncated object behind (the torn-write
+/// fix), and concurrent readers see either the old or the new object,
+/// never a mix.
 pub struct LocalStorage {
     root: PathBuf,
 }
+
+/// Directory under the store root holding in-flight upload temp files;
+/// reserved (keys may not start with it) and skipped by `list`.
+const LOCAL_TMP_DIR: &str = ".tmp";
 
 impl LocalStorage {
     /// Create (and mkdir -p) a store rooted at `root`.
@@ -143,29 +322,64 @@ impl LocalStorage {
         Ok(LocalStorage { root })
     }
 
-    fn path_of(&self, key: &str) -> PathBuf {
-        self.root.join(key)
+    fn path_of(&self, key: &str) -> Result<PathBuf, StorageError> {
+        validate_key(key)?;
+        let reserved = key
+            .strip_prefix(LOCAL_TMP_DIR)
+            .map_or(false, |rest| rest.is_empty() || rest.starts_with('/'));
+        if reserved {
+            return Err(StorageError::Fatal(format!(
+                "storage key '{key}' rejected: '{LOCAL_TMP_DIR}' is reserved for \
+                 in-flight uploads"
+            )));
+        }
+        Ok(self.root.join(key))
+    }
+
+    /// Fresh temp-file path (same filesystem as the root, so the final
+    /// rename is atomic).
+    fn tmp_path(&self) -> Result<PathBuf, StorageError> {
+        let dir = self.root.join(LOCAL_TMP_DIR);
+        fs::create_dir_all(&dir).map_err(|e| StorageError::Fatal(e.to_string()))?;
+        Ok(dir.join(format!("put-{}", crate::util::next_id())))
+    }
+
+    /// Atomically move a fully-written temp file to its final location.
+    fn commit(&self, tmp: &Path, dst: &Path) -> Result<(), StorageError> {
+        if let Some(parent) = dst.parent() {
+            if let Err(e) = fs::create_dir_all(parent) {
+                fs::remove_file(tmp).ok();
+                return Err(StorageError::Fatal(e.to_string()));
+            }
+        }
+        fs::rename(tmp, dst).map_err(|e| {
+            fs::remove_file(tmp).ok();
+            StorageError::Fatal(e.to_string())
+        })
     }
 }
 
 impl StorageClient for LocalStorage {
     fn upload(&self, key: &str, data: &[u8]) -> Result<(), StorageError> {
-        let p = self.path_of(key);
-        if let Some(parent) = p.parent() {
-            fs::create_dir_all(parent).map_err(|e| StorageError::Fatal(e.to_string()))?;
+        let p = self.path_of(key)?;
+        let tmp = self.tmp_path()?;
+        if let Err(e) = fs::write(&tmp, data) {
+            fs::remove_file(&tmp).ok();
+            return Err(StorageError::Fatal(e.to_string()));
         }
-        fs::write(&p, data).map_err(|e| StorageError::Fatal(e.to_string()))
+        self.commit(&tmp, &p)
     }
 
     fn download(&self, key: &str) -> Result<Vec<u8>, StorageError> {
-        let p = self.path_of(key);
-        if !p.exists() {
+        let p = self.path_of(key)?;
+        if !p.is_file() {
             return Err(StorageError::NotFound(key.to_string()));
         }
         fs::read(&p).map_err(|e| StorageError::Fatal(e.to_string()))
     }
 
     fn list(&self, prefix: &str) -> Result<Vec<String>, StorageError> {
+        validate_prefix(prefix)?;
         fn walk(dir: &Path, root: &Path, out: &mut Vec<String>) {
             if let Ok(entries) = fs::read_dir(dir) {
                 for e in entries.flatten() {
@@ -180,7 +394,8 @@ impl StorageClient for LocalStorage {
         }
         let mut out = Vec::new();
         walk(&self.root, &self.root, &mut out);
-        out.retain(|k| k.starts_with(prefix));
+        let tmp_prefix = format!("{LOCAL_TMP_DIR}/");
+        out.retain(|k| k.starts_with(prefix) && !k.starts_with(&tmp_prefix));
         out.sort();
         Ok(out)
     }
@@ -188,6 +403,59 @@ impl StorageClient for LocalStorage {
     fn copy(&self, src: &str, dst: &str) -> Result<(), StorageError> {
         let data = self.download(src)?;
         self.upload(dst, &data)
+    }
+
+    fn delete(&self, key: &str) -> Result<(), StorageError> {
+        let p = self.path_of(key)?;
+        if !p.is_file() {
+            return Err(StorageError::NotFound(key.to_string()));
+        }
+        fs::remove_file(&p).map_err(|e| StorageError::Fatal(e.to_string()))
+    }
+
+    fn open_read(&self, key: &str) -> Result<Box<dyn Read + Send>, StorageError> {
+        let p = self.path_of(key)?;
+        if !p.is_file() {
+            return Err(StorageError::NotFound(key.to_string()));
+        }
+        let f = fs::File::open(&p).map_err(|e| StorageError::Fatal(e.to_string()))?;
+        Ok(Box::new(f))
+    }
+
+    fn upload_from(&self, key: &str, reader: &mut dyn Read) -> Result<(u64, String), StorageError> {
+        let p = self.path_of(key)?;
+        let tmp = self.tmp_path()?;
+        let spool = (|| -> Result<(u64, String), StorageError> {
+            let mut f = std::io::BufWriter::new(
+                fs::File::create(&tmp).map_err(|e| StorageError::Fatal(e.to_string()))?,
+            );
+            let mut hash = Md5::new();
+            let mut total = 0u64;
+            let mut buf = [0u8; 64 * 1024];
+            loop {
+                let n = reader
+                    .read(&mut buf)
+                    .map_err(|e| StorageError::Transient(format!("reading upload stream: {e}")))?;
+                if n == 0 {
+                    break;
+                }
+                hash.update(&buf[..n]);
+                f.write_all(&buf[..n]).map_err(|e| StorageError::Fatal(e.to_string()))?;
+                total += n as u64;
+            }
+            f.flush().map_err(|e| StorageError::Fatal(e.to_string()))?;
+            Ok((total, hash.finalize_hex()))
+        })();
+        match spool {
+            Ok((total, md5)) => {
+                self.commit(&tmp, &p)?;
+                Ok((total, md5))
+            }
+            Err(e) => {
+                fs::remove_file(&tmp).ok();
+                Err(e)
+            }
+        }
     }
 }
 
@@ -252,6 +520,26 @@ impl StorageClient for ObjectStoreSim {
     fn copy(&self, src: &str, dst: &str) -> Result<(), StorageError> {
         self.gate()?;
         self.inner.copy(src, dst)
+    }
+
+    fn get_md5(&self, key: &str) -> Result<String, StorageError> {
+        self.gate()?;
+        self.inner.get_md5(key)
+    }
+
+    fn delete(&self, key: &str) -> Result<(), StorageError> {
+        self.gate()?;
+        self.inner.delete(key)
+    }
+
+    fn open_read(&self, key: &str) -> Result<Box<dyn Read + Send>, StorageError> {
+        self.gate()?;
+        self.inner.open_read(key)
+    }
+
+    fn upload_from(&self, key: &str, reader: &mut dyn Read) -> Result<(u64, String), StorageError> {
+        self.gate()?;
+        self.inner.upload_from(key, reader)
     }
 }
 
@@ -345,6 +633,31 @@ mod tests {
         assert_eq!(c.get_md5("a/x").unwrap(), md5_hex(b"hello"));
         assert!(matches!(c.download("missing"), Err(StorageError::NotFound(_))));
         assert!(matches!(c.copy("missing", "d"), Err(StorageError::NotFound(_))));
+        // delete extension (needed by CAS gc)
+        c.upload("del/x", b"bye").unwrap();
+        c.delete("del/x").unwrap();
+        assert!(matches!(c.download("del/x"), Err(StorageError::NotFound(_))));
+        assert!(matches!(c.delete("del/x"), Err(StorageError::NotFound(_))));
+        // streaming extension round-trips and agrees with download
+        let payload = vec![7u8; 100_000];
+        let mut r: &[u8] = &payload;
+        let (n, md5) = c.upload_from("stream/x", &mut r).unwrap();
+        assert_eq!(n, payload.len() as u64);
+        assert_eq!(md5, md5_hex(&payload));
+        assert_eq!(c.download("stream/x").unwrap(), payload);
+        let mut via_stream = Vec::new();
+        c.open_read("stream/x").unwrap().read_to_end(&mut via_stream).unwrap();
+        assert_eq!(via_stream, payload);
+        // key escapes rejected with Fatal on every key-taking method
+        for bad in ["../evil", "/abs", "a/../b", "a//b", "a/./b", "", "a\\b"] {
+            assert!(matches!(c.upload(bad, b"x"), Err(StorageError::Fatal(_))), "upload {bad}");
+            assert!(matches!(c.download(bad), Err(StorageError::Fatal(_))), "download {bad}");
+            assert!(matches!(c.copy(bad, "ok"), Err(StorageError::Fatal(_))), "copy src {bad}");
+            assert!(matches!(c.copy("a/x", bad), Err(StorageError::Fatal(_))), "copy dst {bad}");
+            assert!(matches!(c.delete(bad), Err(StorageError::Fatal(_))), "delete {bad}");
+            assert!(matches!(c.get_md5(bad), Err(StorageError::Fatal(_))), "get_md5 {bad}");
+        }
+        assert!(matches!(c.list("../x"), Err(StorageError::Fatal(_))));
     }
 
     #[test]
@@ -362,6 +675,89 @@ mod tests {
     #[test]
     fn object_store_sim_no_failures_behaves_like_mem() {
         exercise_client(&ObjectStoreSim::new(Duration::ZERO, 0.0, 1));
+    }
+
+    #[test]
+    fn cas_over_mem_contract() {
+        exercise_client(&CasStore::new(Arc::new(MemStorage::new())));
+    }
+
+    #[test]
+    fn cas_over_local_contract() {
+        let dir = tmp("cas-local");
+        exercise_client(&CasStore::new(Arc::new(LocalStorage::new(&dir).unwrap())));
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn local_upload_leaves_no_temp_residue() {
+        let dir = tmp("atomic");
+        let s = LocalStorage::new(&dir).unwrap();
+        s.upload("a/b/c", b"payload").unwrap();
+        let mut r: &[u8] = b"streamed";
+        s.upload_from("a/b/d", &mut r).unwrap();
+        assert_eq!(s.list("").unwrap(), vec!["a/b/c".to_string(), "a/b/d".to_string()]);
+        let tmp_dir = dir.join(LOCAL_TMP_DIR);
+        if tmp_dir.exists() {
+            assert_eq!(fs::read_dir(&tmp_dir).unwrap().count(), 0, "temp residue left");
+        }
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn local_key_escape_never_touches_parent_dir() {
+        let parent = tmp("escape-parent");
+        let root = parent.join("store");
+        let s = LocalStorage::new(&root).unwrap();
+        assert!(matches!(s.upload("../evil", b"x"), Err(StorageError::Fatal(_))));
+        assert!(matches!(s.upload("sub/../../evil", b"x"), Err(StorageError::Fatal(_))));
+        assert!(!parent.join("evil").exists(), "escaping upload wrote outside the root");
+        fs::remove_dir_all(parent).ok();
+    }
+
+    #[test]
+    fn validate_key_rules() {
+        assert!(validate_key("a/b/c.txt").is_ok());
+        assert!(validate_key(".cas/ab/ff").is_ok()); // dot-prefixed names are fine
+        assert!(validate_key("run1/main.s[0]/a0/blob").is_ok()); // engine-style keys
+        for bad in ["", "/a", "a//b", "../a", "a/..", "a/../b", ".", "..", "a\\b", "a/./b"] {
+            assert!(validate_key(bad).is_err(), "{bad} should be rejected");
+        }
+        assert!(validate_prefix("").is_ok());
+        assert!(validate_prefix("a/").is_ok());
+        assert!(validate_prefix("a/b").is_ok());
+        assert!(validate_prefix("../a").is_err());
+        assert!(validate_prefix("/a").is_err());
+    }
+
+    #[test]
+    fn with_retry_bounded_and_passthrough() {
+        use std::sync::atomic::AtomicU32;
+        let calls = AtomicU32::new(0);
+        let r: Result<(), StorageError> = with_retry(3, || {
+            calls.fetch_add(1, Ordering::Relaxed);
+            Err(StorageError::Transient("blip".into()))
+        });
+        assert!(matches!(r, Err(StorageError::Transient(_))));
+        assert_eq!(calls.load(Ordering::Relaxed), 3);
+        // fatal errors do not retry
+        let calls = AtomicU32::new(0);
+        let r: Result<(), StorageError> = with_retry(3, || {
+            calls.fetch_add(1, Ordering::Relaxed);
+            Err(StorageError::Fatal("broken".into()))
+        });
+        assert!(matches!(r, Err(StorageError::Fatal(_))));
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+        // transient then success
+        let calls = AtomicU32::new(0);
+        let r = with_retry(3, || {
+            if calls.fetch_add(1, Ordering::Relaxed) == 0 {
+                Err(StorageError::Transient("blip".into()))
+            } else {
+                Ok(42)
+            }
+        });
+        assert_eq!(r.unwrap(), 42);
     }
 
     #[test]

@@ -1,0 +1,382 @@
+//! Storage hardening battery (§2.8): one contract exercised against every
+//! client — MemStorage, LocalStorage, ObjectStoreSim, and CAS-wrapped
+//! variants — plus the dedup/zero-copy/gc properties of the
+//! content-addressed layer and the end-to-end guarantee the engine builds
+//! on it: forwarding an unchanged artifact between steps moves **zero**
+//! data bytes.
+//!
+//! Run via `make test-storage` (part of `make ci`).
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dflow::check;
+use dflow::core::{
+    ContainerTemplate, FnOp, OpCtx, ParamType, Signature, Slices, Step, Steps, Value, Workflow,
+};
+use dflow::engine::Engine;
+use dflow::storage::{
+    pack_dir, unpack_dir, CasStore, LocalStorage, MemStorage, ObjectStoreSim, StorageClient,
+    StorageError,
+};
+use dflow::util::{md5_hex, next_id, Rng};
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("dflow-sc-{}-{}", name, next_id()));
+    fs::create_dir_all(&p).unwrap();
+    p
+}
+
+/// Every client the battery runs against: the three base stores and CAS
+/// layered over two of them.
+fn clients(tag: &str) -> Vec<(String, Arc<dyn StorageClient>)> {
+    vec![
+        ("mem".to_string(), Arc::new(MemStorage::new()) as Arc<dyn StorageClient>),
+        (
+            "local".to_string(),
+            Arc::new(LocalStorage::new(tmp(&format!("{tag}-local"))).unwrap()),
+        ),
+        ("sim".to_string(), Arc::new(ObjectStoreSim::new(Duration::ZERO, 0.0, 1))),
+        (
+            "cas-mem".to_string(),
+            Arc::new(CasStore::new(Arc::new(MemStorage::new()))),
+        ),
+        (
+            "cas-local".to_string(),
+            Arc::new(CasStore::new(Arc::new(
+                LocalStorage::new(tmp(&format!("{tag}-cas-local"))).unwrap(),
+            ))),
+        ),
+    ]
+}
+
+// -- contract ------------------------------------------------------------------
+
+#[test]
+fn contract_roundtrip_list_copy_md5_delete() {
+    for (name, c) in clients("contract") {
+        c.upload("a/x", b"hello").unwrap();
+        c.upload("a/y", b"world").unwrap();
+        assert_eq!(c.download("a/x").unwrap(), b"hello", "{name}");
+        assert_eq!(
+            c.list("a/").unwrap(),
+            vec!["a/x".to_string(), "a/y".to_string()],
+            "{name}"
+        );
+        c.copy("a/x", "b/x").unwrap();
+        assert_eq!(c.download("b/x").unwrap(), b"hello", "{name}");
+        assert_eq!(c.get_md5("a/x").unwrap(), md5_hex(b"hello"), "{name}");
+        assert!(matches!(c.download("nope"), Err(StorageError::NotFound(_))), "{name}");
+        assert!(matches!(c.copy("nope", "d"), Err(StorageError::NotFound(_))), "{name}");
+        c.delete("b/x").unwrap();
+        assert!(matches!(c.download("b/x"), Err(StorageError::NotFound(_))), "{name}");
+        assert!(matches!(c.delete("b/x"), Err(StorageError::NotFound(_))), "{name}");
+    }
+}
+
+#[test]
+fn contract_key_escapes_rejected_everywhere() {
+    for (name, c) in clients("escape") {
+        c.upload("ok/x", b"v").unwrap();
+        for bad in ["../evil", "/etc/passwd", "a/../../b", "a//b", "a/./b", "", "a\\b", ".."] {
+            assert!(
+                matches!(c.upload(bad, b"x"), Err(StorageError::Fatal(_))),
+                "{name}: upload('{bad}') must be rejected"
+            );
+            assert!(
+                matches!(c.download(bad), Err(StorageError::Fatal(_))),
+                "{name}: download('{bad}') must be rejected"
+            );
+            assert!(
+                matches!(c.copy(bad, "ok/y"), Err(StorageError::Fatal(_))),
+                "{name}: copy src '{bad}' must be rejected"
+            );
+            assert!(
+                matches!(c.copy("ok/x", bad), Err(StorageError::Fatal(_))),
+                "{name}: copy dst '{bad}' must be rejected"
+            );
+            assert!(
+                matches!(c.delete(bad), Err(StorageError::Fatal(_))),
+                "{name}: delete('{bad}') must be rejected"
+            );
+            assert!(
+                matches!(c.get_md5(bad), Err(StorageError::Fatal(_))),
+                "{name}: get_md5('{bad}') must be rejected"
+            );
+        }
+        assert!(
+            matches!(c.list("../x"), Err(StorageError::Fatal(_))),
+            "{name}: list('../x') must be rejected"
+        );
+    }
+}
+
+#[test]
+fn local_escaping_keys_never_write_outside_root() {
+    let parent = tmp("no-escape");
+    let store_root = parent.join("store");
+    let s = LocalStorage::new(&store_root).unwrap();
+    let evil_target = parent.join("evil");
+    assert!(s.upload("../evil", b"boom").is_err());
+    assert!(s.upload("x/../../evil", b"boom").is_err());
+    assert!(!evil_target.exists(), "key escape wrote outside the store root");
+    let abs = std::env::temp_dir().join(format!("dflow-evil-{}", next_id()));
+    assert!(s.upload(abs.to_str().unwrap(), b"boom").is_err());
+    assert!(!abs.exists(), "absolute key wrote outside the store root");
+    fs::remove_dir_all(parent).ok();
+}
+
+// -- torn writes ---------------------------------------------------------------
+
+#[test]
+fn local_uploads_are_atomic_under_concurrent_reads() {
+    // fs::write-in-place tears: a reader overlapping a rewrite can observe
+    // a truncated or mixed object. temp-file + rename means every download
+    // returns exactly one of the two full payloads.
+    let dir = tmp("torn");
+    let s = Arc::new(LocalStorage::new(&dir).unwrap());
+    let a = vec![b'a'; 512 * 1024];
+    let b = vec![b'b'; 512 * 1024];
+    s.upload("k", &a).unwrap();
+    let writer = {
+        let s = Arc::clone(&s);
+        let (a, b) = (a.clone(), b.clone());
+        std::thread::spawn(move || {
+            for i in 0..40 {
+                s.upload("k", if i % 2 == 0 { &b } else { &a }).unwrap();
+            }
+        })
+    };
+    let check = |got: Vec<u8>| {
+        assert_eq!(got.len(), a.len(), "torn (truncated) object observed");
+        let first = got[0];
+        assert!(first == b'a' || first == b'b');
+        assert!(got.iter().all(|&x| x == first), "mixed (torn) object observed");
+    };
+    while !writer.is_finished() {
+        check(s.download("k").unwrap());
+    }
+    writer.join().unwrap();
+    check(s.download("k").unwrap());
+    fs::remove_dir_all(dir).ok();
+}
+
+// -- md5 integrity -------------------------------------------------------------
+
+#[test]
+fn opctx_detects_ghost_md5_on_corrupted_object() {
+    for (name, c) in clients("ghost") {
+        let mut ctx = OpCtx::bare(Arc::clone(&c));
+        let art = ctx.write_artifact("data", b"the real payload").unwrap();
+        assert!(art.md5.is_some(), "{name}");
+        // corrupt the object behind the ArtifactRef's back
+        c.upload(&art.key, b"tampered bytes!!").unwrap();
+        ctx.input_artifacts.insert("data".into(), art);
+        let err = ctx.read_artifact("data").unwrap_err();
+        assert!(err.is_transient(), "{name}: md5 mismatch must be transient: {err}");
+        assert!(err.message().contains("md5 mismatch"), "{name}: {err}");
+    }
+}
+
+// -- CAS dedup + zero-copy -----------------------------------------------------
+
+#[test]
+fn cas_dedup_uploading_same_bytes_twice_stores_one_chunk_set() {
+    let mem = Arc::new(MemStorage::new());
+    let cas = CasStore::new(mem.clone());
+    let mut rng = Rng::new(42);
+    let data: Vec<u8> = (0..2_500_000).map(|_| rng.next_u64() as u8).collect();
+    cas.upload("first", &data).unwrap();
+    let puts = cas.counters().chunk_puts.load(Ordering::Relaxed);
+    let chunk_objects = mem.list(".cas/").unwrap().len();
+    assert_eq!(puts as usize, chunk_objects);
+    cas.upload("second", &data).unwrap();
+    assert_eq!(
+        cas.counters().chunk_puts.load(Ordering::Relaxed),
+        puts,
+        "identical upload must not store new chunks"
+    );
+    assert_eq!(mem.list(".cas/").unwrap().len(), chunk_objects);
+    assert_eq!(
+        cas.counters().dedup_bytes.load(Ordering::Relaxed),
+        data.len() as u64,
+        "the whole second upload must be dedup hits"
+    );
+    assert_eq!(cas.download("second").unwrap(), data);
+}
+
+#[test]
+fn cas_copy_is_manifest_only_on_the_wire() {
+    // over ObjectStoreSim every backing op is counted: a copy of a 3 MiB
+    // object must cost O(manifest) ops and zero chunk transfers
+    let sim = Arc::new(ObjectStoreSim::new(Duration::ZERO, 0.0, 7));
+    let cas = CasStore::new(sim.clone());
+    let mut rng = Rng::new(5);
+    let data: Vec<u8> = (0..3_000_000).map(|_| rng.next_u64() as u8).collect();
+    cas.upload("src", &data).unwrap();
+    let ops_before = sim.ops.load(Ordering::Relaxed);
+    let gets_before = cas.counters().chunk_gets.load(Ordering::Relaxed);
+    let puts_before = cas.counters().chunk_puts.load(Ordering::Relaxed);
+    cas.copy("src", "dst").unwrap();
+    let ops_delta = sim.ops.load(Ordering::Relaxed) - ops_before;
+    assert!(ops_delta <= 3, "copy cost {ops_delta} backing ops; manifest-only means <= 3");
+    assert_eq!(cas.counters().chunk_gets.load(Ordering::Relaxed), gets_before);
+    assert_eq!(cas.counters().chunk_puts.load(Ordering::Relaxed), puts_before);
+    assert_eq!(cas.download("dst").unwrap(), data);
+}
+
+#[test]
+fn cas_get_md5_downloads_no_data() {
+    let sim = Arc::new(ObjectStoreSim::new(Duration::ZERO, 0.0, 3));
+    let cas = CasStore::new(sim.clone());
+    let data = vec![9u8; 2_000_000];
+    cas.upload("obj", &data).unwrap();
+    let ops_before = sim.ops.load(Ordering::Relaxed);
+    assert_eq!(cas.get_md5("obj").unwrap(), md5_hex(&data));
+    assert_eq!(
+        sim.ops.load(Ordering::Relaxed) - ops_before,
+        1,
+        "get_md5 must read exactly the manifest"
+    );
+    assert_eq!(cas.counters().chunk_gets.load(Ordering::Relaxed), 0);
+}
+
+// -- pack → CAS → unpack property ---------------------------------------------
+
+#[test]
+fn prop_pack_cas_roundtrip_any_directory() {
+    check::forall("pack -> cas upload -> download -> unpack round-trips", |rng| {
+        let src = tmp("prop-src");
+        let nfiles = 1 + rng.below(5) as usize;
+        for i in 0..nfiles {
+            let rel = if rng.chance(0.4) {
+                format!("{}/{}-{i}.bin", check::gen::ident(rng), check::gen::ident(rng))
+            } else {
+                format!("{}-{i}.bin", check::gen::ident(rng))
+            };
+            let full = src.join(&rel);
+            fs::create_dir_all(full.parent().unwrap()).unwrap();
+            let data: Vec<u8> = (0..rng.below(150_000)).map(|_| rng.next_u64() as u8).collect();
+            fs::write(full, data).unwrap();
+        }
+        let archive = pack_dir(&src).unwrap();
+
+        let cas = CasStore::new(Arc::new(MemStorage::new()));
+        cas.upload("wf/artifact", &archive).unwrap();
+        let fetched = cas.download("wf/artifact").unwrap();
+        assert_eq!(fetched, archive, "bytes must survive the CAS round-trip");
+        assert_eq!(cas.get_md5("wf/artifact").unwrap(), md5_hex(&archive));
+
+        let dst = tmp("prop-dst");
+        unpack_dir(&fetched, &dst).unwrap();
+        // re-packing the unpacked tree reproduces the archive byte-for-byte
+        // (pack_dir is deterministic: sorted relative paths)
+        assert_eq!(pack_dir(&dst).unwrap(), archive, "directory content diverged");
+        fs::remove_dir_all(src).ok();
+        fs::remove_dir_all(dst).ok();
+    });
+}
+
+// -- end-to-end: the engine's forwarding path is zero-copy ---------------------
+
+#[test]
+fn engine_artifact_forwarding_moves_zero_data_bytes_over_cas() {
+    // a keyed sliced step writes a 256 KiB artifact per slice; the engine
+    // stacks them (its copy_with_retry forwarding path). Over CAS the cold
+    // run stores each artifact once, and the warm (full-reuse) run — whose
+    // only artifact work is forwarding the unchanged artifacts into the new
+    // run's stack — stores and fetches NOTHING.
+    let sim = Arc::new(ObjectStoreSim::new(Duration::ZERO, 0.0, 11));
+    let cas = Arc::new(CasStore::new(sim.clone() as Arc<dyn StorageClient>));
+    // per-slice payload: 256 KiB of slice-seeded pseudo-random bytes, so
+    // no two slices can share chunks and the put counters are exact
+    fn payload(i: i64) -> Vec<u8> {
+        let mut r = Rng::new(1000 + i as u64);
+        (0..256 * 1024).map(|_| r.next_u64() as u8).collect()
+    }
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_artifact("blob"),
+        |ctx| {
+            let i = ctx.get_int("i")?;
+            ctx.write_artifact("blob", &payload(i))?;
+            Ok(())
+        },
+    ));
+    let wf = Workflow::new("fwd")
+        .container(ContainerTemplate::new("op", op))
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "op")
+                        .param("i", Value::ints(0..4))
+                        .slices(Slices::over("i").stack_artifact("blob").parallelism(2))
+                        .key("fwd-{{item}}"),
+                )
+                .out_artifact_from("blobs", "fan", "blob"),
+        )
+        .entrypoint("main");
+
+    let engine = Engine::builder().storage(cas.clone()).build();
+    let cold = engine.run(&wf).unwrap();
+    assert!(cold.succeeded(), "{:?}", cold.error);
+    let cold_puts = cas.counters().chunk_puts.load(Ordering::Relaxed);
+    let cold_put_bytes = cas.counters().chunk_put_bytes.load(Ordering::Relaxed);
+    assert!(cold_puts >= 4, "each distinct slice artifact stores at least one chunk");
+    assert!(cold_put_bytes >= 4 * 256 * 1024);
+    // the engine's stacking copies moved no data even on the cold run:
+    assert_eq!(
+        cas.counters().chunk_gets.load(Ordering::Relaxed),
+        0,
+        "nothing should have downloaded chunk data"
+    );
+
+    // warm run: every slice reused; forwarding is the only artifact work
+    let reuse = cold.run.all_keyed();
+    assert_eq!(reuse.len(), 4);
+    let warm = engine.run_with_reuse(&wf, reuse).unwrap();
+    assert!(warm.succeeded(), "{:?}", warm.error);
+    assert_eq!(warm.run.metrics.steps_reused.get(), 4);
+    assert_eq!(
+        cas.counters().chunk_puts.load(Ordering::Relaxed),
+        cold_puts,
+        "warm forwarding must not store any data bytes"
+    );
+    assert_eq!(
+        cas.counters().chunk_put_bytes.load(Ordering::Relaxed),
+        cold_put_bytes
+    );
+    assert_eq!(cas.counters().chunk_gets.load(Ordering::Relaxed), 0);
+
+    // the forwarded stack is intact: slice 2's bytes come back verbatim
+    let stacked = warm.outputs.artifacts.get("blobs").expect("stacked artifact");
+    let slice2 = cas.download(&format!("{}/2", stacked.key)).unwrap();
+    assert_eq!(slice2, payload(2));
+}
+
+// -- gc ------------------------------------------------------------------------
+
+#[test]
+fn cas_gc_reclaims_cancelled_attempt_orphans() {
+    let mem = Arc::new(MemStorage::new());
+    let cas = CasStore::new(mem.clone());
+    let mut rng = Rng::new(77);
+    let live: Vec<u8> = (0..1_500_000).map(|_| rng.next_u64() as u8).collect();
+    let dead: Vec<u8> = (0..1_500_000).map(|_| rng.next_u64() as u8).collect();
+    cas.upload("run9/step/a0/out", &live).unwrap();
+    cas.upload("run9/step/a1/out", &dead).unwrap();
+    // attempt a1 was cancelled: its namespace is dropped
+    assert_eq!(cas.delete_prefix("run9/step/a1/").unwrap(), 1);
+    // simulate a crashed upload too: a chunk body with no manifest
+    mem.upload(".cas/ff/ffffffffffffffffffffffffffffffff", b"stray").unwrap();
+    let report = cas.gc().unwrap();
+    assert_eq!(report.manifests_scanned, 1);
+    assert!(report.chunks_reclaimed >= 1, "stray chunk must be reclaimed");
+    assert_eq!(cas.download("run9/step/a0/out").unwrap(), live);
+    // after deleting the last manifest, gc leaves an empty store
+    cas.delete("run9/step/a0/out").unwrap();
+    cas.gc().unwrap();
+    assert!(mem.is_empty(), "all chunks must be reclaimable");
+}
