@@ -1,11 +1,12 @@
 # Repo CI entrypoints. `make ci` is what a gate should run.
 
-.PHONY: ci fmt-check fmt clippy build test test-placement test-storage bench
+.PHONY: ci fmt-check fmt clippy build test test-placement test-storage test-journal bench
 
 # `test` runs the full suite (placement + scheduler_stress + the storage
-# battery included via their Cargo.toml [[test]] entries); `test-storage`
-# re-runs the storage battery alone as an explicit gate.
-ci: fmt-check clippy test test-storage
+# battery + journal recovery included via their Cargo.toml [[test]]
+# entries); `test-storage`/`test-journal` re-run their batteries alone as
+# explicit gates.
+ci: fmt-check clippy test test-storage test-journal
 
 fmt-check:
 	cargo fmt --check
@@ -34,6 +35,13 @@ test-placement: build
 test-storage: build
 	cargo test -q --test storage_contract
 	cargo test -q --lib storage::
+
+# journal battery: kill-and-recover e2e, the random-boundary crash
+# property suite, CAS-backed journaling, attempt reclamation, plus the
+# journal unit/property suites in the lib
+test-journal: build
+	cargo test -q --test journal_recovery
+	cargo test -q --lib journal::
 
 bench:
 	cargo bench

@@ -1,0 +1,117 @@
+//! C4 — durable run journal: replay throughput (events/sec, with and
+//! without a compaction snapshot) and resubmit-with-reuse wall-clock vs a
+//! cold run, the §2.5 restart claim made durable.
+
+use std::sync::Arc;
+
+use dflow::bench_util::Bench;
+use dflow::core::{
+    ContainerTemplate, FnOp, ParamType, Signature, Slices, Step, Steps, Value, Workflow,
+};
+use dflow::engine::{Engine, StepOutputs};
+use dflow::journal::{Journal, JournalEvent, RunRegistry};
+use dflow::storage::{MemStorage, StorageClient};
+
+fn keyed_fanout(width: usize) -> Workflow {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_param("o", ParamType::Int),
+        |ctx| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            ctx.set("o", ctx.get_int("i")? * 10);
+            Ok(())
+        },
+    ));
+    Workflow::new("exp")
+        .container(ContainerTemplate::new("op", op))
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "op")
+                        .param("i", Value::ints(0..width as i64))
+                        .slices(Slices::over("i").stack("o").parallelism(8))
+                        .key("step-{{item}}"),
+                )
+                .out_param_from("os", "fan", "o"),
+        )
+        .entrypoint("main")
+}
+
+fn main() {
+    let mut b = Bench::new("c4: journal — replay throughput and warm resubmit");
+
+    // 1) replay throughput over a synthetic 3000-node run journal
+    let storage: Arc<dyn StorageClient> = Arc::new(MemStorage::new());
+    let j = Journal::open(storage.clone()).unwrap();
+    let run_id = dflow::util::next_id();
+    j.append(run_id, &JournalEvent::RunSubmitted { workflow: "synthetic".into() }).unwrap();
+    let nodes = 3000usize;
+    for i in 0..nodes {
+        let path = format!("main/t{i}");
+        j.append(
+            run_id,
+            &JournalEvent::NodeScheduled { path: path.clone(), template: "op".into() },
+        )
+        .unwrap();
+        j.append(run_id, &JournalEvent::NodeStarted { path: path.clone(), attempt: 0 })
+            .unwrap();
+        let mut out = StepOutputs::default();
+        out.params.insert("o".into(), Value::Int(i as i64));
+        j.append(
+            run_id,
+            &JournalEvent::NodeSucceeded { path, key: Some(format!("t{i}")), outputs: out },
+        )
+        .unwrap();
+    }
+    j.append(run_id, &JournalEvent::RunSucceeded).unwrap();
+    let total_events = (3 * nodes + 2) as f64;
+
+    let (rec, t_replay) = b.case("replay a 9002-event journal", || j.replay(run_id).unwrap());
+    assert_eq!(rec.keyed.len(), nodes);
+    b.metric(
+        "  replay throughput",
+        total_events / t_replay.as_secs_f64().max(1e-9),
+        "events/s",
+    );
+    let report = j.compact(run_id).unwrap();
+    b.row(
+        "  compaction",
+        &format!(
+            "{} events folded into one snapshot ({} segments removed)",
+            report.events_folded, report.segments_removed
+        ),
+    );
+    let (rec2, t_snap) =
+        b.case("replay after compaction (snapshot fast path)", || j.replay(run_id).unwrap());
+    assert_eq!(rec2.keyed.len(), nodes);
+    b.metric(
+        "  snapshot replay speedup",
+        t_replay.as_secs_f64() / t_snap.as_secs_f64().max(1e-9),
+        "x",
+    );
+
+    // 2) cold run vs resubmit-with-reuse (64 × 5 ms keyed steps): the
+    // §2.5 restart path fed straight from the journal
+    let storage: Arc<dyn StorageClient> = Arc::new(MemStorage::new());
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let engine = Engine::builder().storage(storage).journal(Arc::clone(&journal)).build();
+    let wf = keyed_fanout(64);
+    let (r_cold, t_cold) = b.case("cold run (64 x 5ms steps, journaled)", || {
+        let r = engine.run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        r
+    });
+    let rid = r_cold.run.id;
+    let (r_warm, t_warm) = b.case("resubmit from journal (100% reuse)", || {
+        let r = engine.resubmit(&wf, rid).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        r
+    });
+    assert_eq!(r_warm.run.metrics.steps_reused.get(), 64);
+    b.metric(
+        "  resubmit-with-reuse speedup",
+        t_cold.as_secs_f64() / t_warm.as_secs_f64().max(1e-9),
+        "x (vs cold)",
+    );
+    let rows = RunRegistry::new(journal).list_runs().unwrap();
+    b.row("  registry", &format!("{} runs queryable after the fact", rows.len()));
+}

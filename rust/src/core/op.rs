@@ -174,14 +174,17 @@ impl CancelToken {
         Self::default()
     }
 
-    /// Signal cancellation.
+    /// Signal cancellation. SeqCst: the engine's timeout path pairs this
+    /// flag with a channel probe to decide which side reclaims a
+    /// just-finished attempt's artifacts — relaxed ordering would let
+    /// both sides miss.
     pub fn cancel(&self) {
-        self.0.store(true, Ordering::Relaxed);
+        self.0.store(true, Ordering::SeqCst);
     }
 
     /// Has cancellation been requested?
     pub fn is_cancelled(&self) -> bool {
-        self.0.load(Ordering::Relaxed)
+        self.0.load(Ordering::SeqCst)
     }
 }
 

@@ -32,6 +32,7 @@ use crate::core::{
     OpTemplate, Operand, ParamSrc, Slices, Step, StepPolicy, Value, Workflow,
 };
 use crate::executor::{Executor, LocalExecutor};
+use crate::journal::{Journal, JournalEvent};
 use crate::metrics::EventKind;
 use crate::storage::{copy_with_retry, CasStore, MemStorage, StorageClient};
 use crate::util::Stopwatch;
@@ -87,6 +88,10 @@ pub struct Engine {
     /// routed through it; the engine-level `cluster` is then *not*
     /// consulted for those steps (each backend carries its own capacity).
     pub(crate) placer: Option<Arc<Placer>>,
+    /// Durable run journal (present when attached). Every run this engine
+    /// drives appends its lifecycle transitions here, and
+    /// [`Engine::resubmit`] replays it to reuse journaled successes.
+    pub(crate) journal: Option<Arc<Journal>>,
 }
 
 /// Builder for [`Engine`].
@@ -96,6 +101,7 @@ pub struct EngineBuilder {
     runtime: Option<Arc<crate::runtime::Runtime>>,
     executors: BTreeMap<String, Arc<dyn Executor>>,
     backends: Vec<Backend>,
+    journal: Option<Arc<Journal>>,
     config: EngineConfig,
 }
 
@@ -150,6 +156,17 @@ impl EngineBuilder {
         self
     }
 
+    /// Attach a durable run journal ([`crate::journal`]): every run this
+    /// engine drives appends its lifecycle transitions (submissions, node
+    /// phases with attempt numbers, placements, output-artifact keys,
+    /// timeouts) as checksummed records, so a fresh process can
+    /// [`Journal::replay`] a crashed run and [`Engine::resubmit`] it with
+    /// every journaled success reused.
+    pub fn journal(mut self, j: Arc<Journal>) -> Self {
+        self.journal = Some(j);
+        self
+    }
+
     /// Override the configuration.
     pub fn config(mut self, c: EngineConfig) -> Self {
         self.config = c;
@@ -178,6 +195,7 @@ impl EngineBuilder {
             config: self.config,
             sched,
             placer,
+            journal: self.journal,
         }
     }
 }
@@ -242,6 +260,7 @@ impl Engine {
             .into_iter()
             .collect(),
             backends: Vec::new(),
+            journal: None,
             config: EngineConfig::default(),
         }
     }
@@ -263,14 +282,56 @@ impl Engine {
         reuse: Vec<ReusedStep>,
     ) -> Result<RunResult, String> {
         wf.validate()?;
+        let run = self.new_run(wf, reuse, None);
+        self.drive(wf, run)
+    }
+
+    /// Resubmit a journaled run (paper §2.5, made durable): replay the
+    /// attached journal's history for `run_id`, splice every journaled
+    /// success into the reuse set, and drive the workflow again **under
+    /// the same run id**, so pre- and post-crash events share one journal
+    /// stream. Works in a fresh process: open the same storage with
+    /// [`Journal::open`], attach it here, and only the non-succeeded
+    /// suffix of the workflow executes again.
+    pub fn resubmit(&self, wf: &Workflow, run_id: u64) -> Result<RunResult, String> {
+        let journal = self
+            .journal
+            .as_ref()
+            .ok_or_else(|| "engine has no journal attached; resubmit requires one".to_string())?;
+        let rec = journal.replay(run_id)?;
+        if rec.workflow != wf.name {
+            return Err(format!(
+                "journaled run {run_id} belongs to workflow '{}', not '{}'",
+                rec.workflow, wf.name
+            ));
+        }
+        wf.validate()?;
+        let run = self.new_run(wf, rec.reusable_steps(), Some(run_id));
+        self.drive(wf, run)
+    }
+
+    /// Build the shared run state for a (re)submission, journaling the
+    /// submission marker when a journal is attached.
+    fn new_run(
+        &self,
+        wf: &Workflow,
+        reuse: Vec<ReusedStep>,
+        resubmit_of: Option<u64>,
+    ) -> Arc<WorkflowRun> {
         let parallelism = wf.parallelism.unwrap_or(self.config.parallelism);
-        let run = Arc::new(WorkflowRun::new(
+        let run = Arc::new(WorkflowRun::with_journal(
             &wf.name,
             parallelism,
             reuse.into_iter().map(|r| (r.key, r.outputs)).collect(),
             self.config.trace_cap,
+            self.journal.clone(),
+            resubmit_of,
         ));
-        self.drive(wf, run)
+        run.journal_event(|| match resubmit_of {
+            None => JournalEvent::RunSubmitted { workflow: run.workflow_name.clone() },
+            Some(_) => JournalEvent::RunResubmitted { workflow: run.workflow_name.clone() },
+        });
+        run
     }
 
     /// Submit a workflow for asynchronous execution: returns immediately
@@ -288,13 +349,7 @@ impl Engine {
         reuse: Vec<ReusedStep>,
     ) -> Result<Submitted, String> {
         wf.validate()?;
-        let parallelism = wf.parallelism.unwrap_or(self.config.parallelism);
-        let run = Arc::new(WorkflowRun::new(
-            &wf.name,
-            parallelism,
-            reuse.into_iter().map(|r| (r.key, r.outputs)).collect(),
-            self.config.trace_cap,
-        ));
+        let run = self.new_run(&wf, reuse, None);
         let engine = self.clone();
         let run2 = run.clone();
         let handle = std::thread::Builder::new()
@@ -323,11 +378,13 @@ impl Engine {
             Ok(o) => {
                 run.set_phase(RunPhase::Succeeded);
                 run.trace.push(EventKind::WorkflowSucceeded, "", "");
+                run.journal_event(|| JournalEvent::RunSucceeded);
                 (o, None)
             }
             Err(e) => {
                 run.set_phase(RunPhase::Failed);
                 run.trace.push(EventKind::WorkflowFailed, "", e.clone());
+                run.journal_event(|| JournalEvent::RunFailed { message: e.clone() });
                 (StepOutputs::default(), Some(e))
             }
         };
@@ -344,6 +401,11 @@ impl Engine {
     /// The multi-backend placement layer, when backends are registered.
     pub fn placer(&self) -> Option<&Arc<Placer>> {
         self.placer.as_ref()
+    }
+
+    /// The attached run journal, when one was attached.
+    pub fn journal(&self) -> Option<&Arc<Journal>> {
+        self.journal.as_ref()
     }
 
     /// Per-backend placement statistics (empty without a placement layer).
@@ -731,6 +793,7 @@ impl<'e> Exec<'e> {
                     self.run.set_node(&path, &step.template, NodePhase::Skipped, None);
                     self.run.metrics.steps_skipped.inc();
                     self.run.trace.push(EventKind::StepSkipped, &path, "when=false");
+                    self.run.journal_event(|| JournalEvent::NodeSkipped { path: path.clone() });
                     return StepOutcome::Skipped;
                 }
                 None => {
@@ -771,9 +834,21 @@ impl<'e> Exec<'e> {
                 self.run.metrics.steps_reused.inc();
                 self.run.trace.push(EventKind::StepReused, path, k.clone());
                 self.run.record_keyed(k, prev);
+                // outputs journaled with the reuse so a later replay can
+                // splice them even if the original success's record was
+                // never in THIS journal (externally supplied reuse sets)
+                self.run.journal_event(|| JournalEvent::NodeReused {
+                    path: path.to_string(),
+                    key: k.clone(),
+                    outputs: prev.clone(),
+                });
                 return StepOutcome::Succeeded(prev.clone());
             }
         }
+        self.run.journal_event(|| JournalEvent::NodeScheduled {
+            path: path.to_string(),
+            template: step.template.clone(),
+        });
         self.run.set_node(path, &step.template, NodePhase::Running, key.as_deref());
         self.run.trace.push(EventKind::StepRunning, path, "");
         let result = self.execute_template(
@@ -792,6 +867,11 @@ impl<'e> Exec<'e> {
                 if let Some(k) = &key {
                     self.run.record_keyed(k, &outputs);
                 }
+                self.run.journal_event(|| JournalEvent::NodeSucceeded {
+                    path: path.to_string(),
+                    key: key.clone(),
+                    outputs: outputs.clone(),
+                });
                 StepOutcome::Succeeded(outputs)
             }
             Err(e) => self.fail_step(step, path, e),
@@ -803,6 +883,10 @@ impl<'e> Exec<'e> {
         self.run.node_message(path, &err);
         self.run.metrics.steps_failed.inc();
         self.run.trace.push(EventKind::StepFailed, path, err.clone());
+        self.run.journal_event(|| JournalEvent::NodeFailed {
+            path: path.to_string(),
+            message: err.clone(),
+        });
         if step.policy.continue_on_failed {
             StepOutcome::FailedContinue(err)
         } else {
@@ -866,6 +950,11 @@ impl<'e> Exec<'e> {
                 out.params.insert(name.clone(), Value::List(Vec::new()));
             }
             self.run.set_node(path, &step.template, NodePhase::Succeeded, None);
+            self.run.journal_event(|| JournalEvent::NodeSucceeded {
+                path: path.to_string(),
+                key: None,
+                outputs: out.clone(),
+            });
             return StepOutcome::Succeeded(out);
         }
 
@@ -971,6 +1060,13 @@ impl<'e> Exec<'e> {
         );
         self.run.set_node(path, &step.template, NodePhase::Succeeded, None);
         self.run.metrics.steps_succeeded.inc();
+        // the sliced parent is a node of its own: journal its stacked
+        // outputs so replay reconstructs the fan-out's surface too
+        self.run.journal_event(|| JournalEvent::NodeSucceeded {
+            path: path.to_string(),
+            key: None,
+            outputs: out.clone(),
+        });
         StepOutcome::Succeeded(out)
     }
 
@@ -1234,6 +1330,11 @@ impl<'e> Exec<'e> {
             self.run.node_retry(path);
             self.run.metrics.retries.inc();
             self.run.trace.push(EventKind::StepRetrying, path, err.message().to_string());
+            self.run.journal_event(|| JournalEvent::NodeRetrying {
+                path: path.to_string(),
+                attempt,
+                message: err.message().to_string(),
+            });
             if !policy.backoff.is_zero() {
                 std::thread::sleep(policy.backoff);
             }
@@ -1270,6 +1371,15 @@ impl<'e> Exec<'e> {
             self.run.metrics.placement_rejected.inc();
             format!("{path}: {e}")
         })
+    }
+
+    /// Engine-driven cleanup on step failure (ROADMAP CAS follow-up):
+    /// delete the abandoned attempt's `run{}/{path}/a{n}/` artifact
+    /// namespace — see [`reclaim_attempt_objects`]. Only called once the
+    /// OP has actually stopped; for timed-out attempts the watchdog
+    /// thread does it instead, when the cancelled OP finally exits.
+    fn reclaim_attempt(&self, path: &str, attempt: u32) {
+        reclaim_attempt_objects(&*self.engine.storage, self.run, path, attempt);
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -1350,6 +1460,12 @@ impl<'e> Exec<'e> {
                             path,
                             lease.backend_name().to_string(),
                         );
+                        self.run.journal_event(|| JournalEvent::NodePlaced {
+                            path: path.to_string(),
+                            backend: lease.backend_name().to_string(),
+                            node: lease.pod_node().map(str::to_string),
+                            attempt,
+                        });
                         executor = lease.executor();
                         flaked_node =
                             lease.pod_flake().then(|| lease.pod_node().unwrap_or("?").to_string());
@@ -1399,15 +1515,25 @@ impl<'e> Exec<'e> {
             cancel: crate::core::CancelToken::new(),
         };
 
+        self.run.journal_event(|| JournalEvent::NodeStarted { path: path.to_string(), attempt });
+
         let sw = Stopwatch::start();
         match policy.timeout {
             None => {
                 let r = executor.execute(ct, &mut ctx);
                 self.run.metrics.op_exec.observe(sw.elapsed());
-                r.map(|()| StepOutputs {
-                    params: ctx.outputs,
-                    artifacts: ctx.output_artifacts,
-                })
+                match r {
+                    Ok(()) => Ok(StepOutputs {
+                        params: ctx.outputs,
+                        artifacts: ctx.output_artifacts,
+                    }),
+                    Err(e) => {
+                        // the OP has stopped: its partial attempt outputs
+                        // are garbage — reclaim the namespace now
+                        self.reclaim_attempt(path, attempt);
+                        Err(e)
+                    }
+                }
             }
             Some(limit) => {
                 // run the attempt on a watchdog thread so the wall-time
@@ -1419,8 +1545,12 @@ impl<'e> Exec<'e> {
                 // scheduling permit, held by the caller, frees at timeout
                 // so the workflow keeps progressing.)
                 let cancel = ctx.cancel.clone();
+                let cancel_in = cancel.clone();
                 let exec = executor.clone();
                 let ct2 = ct.clone();
+                let run2 = Arc::clone(self.run);
+                let storage2 = Arc::clone(&self.engine.storage);
+                let path2 = path.to_string();
                 let (tx, rx) = mpsc::channel();
                 std::thread::Builder::new()
                     .name(format!("dflow-watchdog-{}", self.run.id))
@@ -1429,11 +1559,24 @@ impl<'e> Exec<'e> {
                         // OP finished (or aborted): free the pod / backend lease
                         drop(pod_guard);
                         drop(lease_guard);
+                        let failed = r.is_err();
                         tx.send(r.map(|()| StepOutputs {
                             params: ctx.outputs,
                             artifacts: ctx.output_artifacts,
                         }))
                         .ok();
+                        // the attempt's outputs are garbage when it failed
+                        // OR when the timeout already failed the step (even
+                        // an Ok result is abandoned then). The OP has truly
+                        // stopped here, so reclaiming cannot race its
+                        // writes — this is what keeps timed-out attempts
+                        // from pinning CAS chunks forever. Checked after
+                        // `send`, so a just-in-time finish is not pushed
+                        // past the deadline by cleanup I/O and a cancel
+                        // racing the deadline is still observed.
+                        if failed || cancel_in.is_cancelled() {
+                            reclaim_attempt_objects(&*storage2, &run2, &path2, attempt);
+                        }
                     })
                     .expect("spawn attempt watchdog");
                 match rx.recv_timeout(limit) {
@@ -1446,10 +1589,24 @@ impl<'e> Exec<'e> {
                         // OP panicked (its pod was released by the unwind).
                         // Don't misreport this as a timeout.
                         self.run.metrics.op_exec.observe(sw.elapsed());
+                        self.reclaim_attempt(path, attempt);
                         Err(OpError::Fatal("OP attempt panicked".into()))
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {
                         cancel.cancel();
+                        // The OP may have finished in the instant between
+                        // the deadline expiring and the cancel above — its
+                        // watchdog then saw neither a failure nor a cancel
+                        // and exited without reclaiming. A late result in
+                        // the channel proves the OP has stopped, so
+                        // reclaiming the abandoned attempt here is safe
+                        // (and a no-op if the watchdog already did). With
+                        // the SeqCst cancel flag this closes the practical
+                        // window; anything that still slips through is a
+                        // gc-reclaimable leak, never a deleted live write.
+                        if rx.try_recv().is_ok() {
+                            self.reclaim_attempt(path, attempt);
+                        }
                         self.run.metrics.timeouts.inc();
                         self.run.trace.push(
                             EventKind::StepTimedOut,
@@ -1457,6 +1614,16 @@ impl<'e> Exec<'e> {
                             format!("{limit:?}"),
                         );
                         let msg = format!("step timed out after {limit:?}");
+                        self.run.journal_event(|| JournalEvent::NodeCancelled {
+                            path: path.to_string(),
+                            reason: msg.clone(),
+                        });
+                        // NO reclamation on THIS thread: the cancelled OP
+                        // may still be writing into its attempt namespace
+                        // until it observes the token — deleting under it
+                        // races the CAS layer's upload/delete contract.
+                        // The watchdog thread reclaims when the OP truly
+                        // stops (see above).
                         if policy.timeout_transient {
                             Err(OpError::Transient(msg))
                         } else {
@@ -1478,6 +1645,27 @@ fn pod_spec_for(path: &str, ct: &ContainerTemplate) -> PodSpec {
         pod = pod.select(k, v);
     }
     pod
+}
+
+/// Delete an abandoned attempt's `run{}/{path}/a{n}/` artifact namespace —
+/// over CAS storage this also releases the chunk references, so
+/// failed-attempt bytes stop pinning the store. Must only run once the OP
+/// has actually stopped writing (the namespace is per-attempt, so nothing
+/// else touches it). Best-effort: reclamation failures must not mask the
+/// step's own error. A successful reclamation is journaled and counted.
+fn reclaim_attempt_objects(storage: &dyn StorageClient, run: &WorkflowRun, path: &str, attempt: u32) {
+    let prefix = format!("run{}/{}/a{}/", run.id, path.replace('/', "."), attempt);
+    match storage.delete_prefix(&prefix) {
+        Ok(0) | Err(_) => {}
+        Ok(n) => {
+            run.metrics.artifacts_reclaimed.add(n as u64);
+            run.journal_event(|| JournalEvent::ArtifactsReclaimed {
+                path: path.to_string(),
+                prefix: prefix.clone(),
+                objects: n as u64,
+            });
+        }
+    }
 }
 
 /// The one infeasible-pod error wording (gate and bind paths must agree).

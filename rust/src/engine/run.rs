@@ -2,11 +2,12 @@
 //! observable surface behind `dflow get/watch` and `query_step` (§2.5).
 
 use std::collections::BTreeMap;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::core::{ArtifactRef, Value};
+use crate::journal::{Journal, JournalEvent};
 use crate::jsonx::Json;
-use crate::metrics::{Registry, Trace};
+use crate::metrics::{Event, EventKind, Registry, Trace};
 use crate::util::epoch_ms;
 
 /// Argo-style node phase.
@@ -153,7 +154,9 @@ pub struct WorkflowRun {
     pub id: u64,
     pub workflow_name: String,
     pub trace: Trace,
-    pub metrics: Registry,
+    /// Shared (`Arc`) so the trace's journal-mirror sink can count its own
+    /// append failures into `journal_errors`.
+    pub metrics: Arc<Registry>,
     pub(crate) nodes: Mutex<BTreeMap<String, NodeStatus>>,
     pub(crate) phase: Mutex<RunPhase>,
     /// Notified on terminal phase transitions (event-driven waiting).
@@ -167,6 +170,9 @@ pub struct WorkflowRun {
     /// observability: the per-run placement split; retries count once per
     /// attempt since each attempt is placed anew).
     pub(crate) placements: Mutex<BTreeMap<String, u64>>,
+    /// Durable event journal this run mirrors its lifecycle into (`None`
+    /// = in-memory only, the pre-journal behavior).
+    pub(crate) journal: Option<Arc<Journal>>,
 }
 
 impl WorkflowRun {
@@ -176,11 +182,62 @@ impl WorkflowRun {
         reuse: BTreeMap<String, StepOutputs>,
         trace_cap: usize,
     ) -> Self {
+        Self::with_journal(workflow_name, parallelism, reuse, trace_cap, None, None)
+    }
+
+    /// Like [`WorkflowRun::new`], optionally journaled. `id_override`
+    /// re-adopts a journaled run id on resubmission so post-crash events
+    /// append to the same durable history. When a journal is attached, the
+    /// trace gets a mirror sink that forwards capacity events (pod
+    /// bind/release, backend lease release) the typed journal events do
+    /// not model.
+    pub(crate) fn with_journal(
+        workflow_name: &str,
+        parallelism: usize,
+        reuse: BTreeMap<String, StepOutputs>,
+        trace_cap: usize,
+        journal: Option<Arc<Journal>>,
+        id_override: Option<u64>,
+    ) -> Self {
+        let id = id_override.unwrap_or_else(crate::util::next_id);
+        let metrics = Arc::new(Registry::default());
+        let trace = match &journal {
+            Some(j) => {
+                let j = Arc::clone(j);
+                let m = Arc::clone(&metrics);
+                Trace::with_sink(
+                    trace_cap,
+                    // capacity events the typed journal events don't model
+                    |k| {
+                        matches!(
+                            k,
+                            EventKind::PodBound
+                                | EventKind::PodReleased
+                                | EventKind::BackendReleased
+                        )
+                    },
+                    Arc::new(move |e: &Event| {
+                        let ev = JournalEvent::TraceMirror {
+                            seq: e.seq,
+                            kind: format!("{:?}", e.kind),
+                            step: e.step.clone(),
+                            detail: e.detail.clone(),
+                        };
+                        // best-effort: the run must not fail because
+                        // observability lagged — but the gap is counted
+                        if j.append(id, &ev).is_err() {
+                            m.journal_errors.inc();
+                        }
+                    }),
+                )
+            }
+            None => Trace::new(trace_cap),
+        };
         WorkflowRun {
-            id: crate::util::next_id(),
+            id,
             workflow_name: workflow_name.to_string(),
-            trace: Trace::new(trace_cap),
-            metrics: Registry::default(),
+            trace,
+            metrics,
             nodes: Mutex::new(BTreeMap::new()),
             phase: Mutex::new(RunPhase::Running),
             phase_cv: Condvar::new(),
@@ -188,6 +245,20 @@ impl WorkflowRun {
             reuse,
             sem: Semaphore::new(parallelism),
             placements: Mutex::new(BTreeMap::new()),
+            journal,
+        }
+    }
+
+    /// Append an event to the attached journal, if any. Takes a closure so
+    /// un-journaled runs never pay for building the event (e.g. cloning a
+    /// success's outputs). Append failures are counted, not raised: the
+    /// run keeps going with a durability gap rather than failing on an
+    /// observability write.
+    pub(crate) fn journal_event(&self, make: impl FnOnce() -> JournalEvent) {
+        if let Some(j) = &self.journal {
+            if j.append(self.id, &make()).is_err() {
+                self.metrics.journal_errors.inc();
+            }
         }
     }
 

@@ -1,0 +1,1478 @@
+//! Durable run journal: event-sourced workflow persistence, crash
+//! recovery, and a queryable run registry.
+//!
+//! The paper claims Dflow is "highly observable" and that a workflow can be
+//! restarted/resubmitted while reusing its succeeded steps (§2.5). Before
+//! this module both claims only held inside one process: `WorkflowRun` and
+//! the `metrics::Trace` ring live in memory, so a crashed engine forgot
+//! every node phase and artifact key it ever knew. The journal is the
+//! durable half: every run-lifecycle transition is appended as a
+//! checksummed record through the existing [`StorageClient`] plugin
+//! surface, so the same journal works over `LocalStorage`, `MemStorage`,
+//! `ObjectStoreSim` and `CasStore` alike, and a **new process** can replay
+//! it, reconstruct the run, and resubmit with every journaled success
+//! spliced in as a reused step.
+//!
+//! # Record format
+//!
+//! A run's journal is a sequence of **segment objects** under
+//! `<prefix>/run<id>/`:
+//!
+//! ```text
+//! journal/run42/seg-00000000      ← appended in order
+//! journal/run42/seg-00000001
+//! journal/run42/snap-00000001     ← optional compaction snapshot
+//! ```
+//!
+//! Each segment starts with a 5-byte header — magic `DWJ1` plus a one-byte
+//! format version — followed by length-prefixed, checksummed records:
+//!
+//! ```text
+//! u32 len (LE) | u32 crc32(payload) (LE) | payload (JSON, one Recorded)
+//! ```
+//!
+//! Appends re-upload the current segment object (object stores have no
+//! append primitive; `LocalStorage` makes each upload an atomic
+//! temp+rename, so a crash leaves either the old or the new segment
+//! version). When a segment passes the rotation threshold
+//! ([`DEFAULT_SEGMENT_MAX`]) the writer seals it and starts the next
+//! index, which bounds the per-append rewrite cost.
+//!
+//! # Recovery guarantees
+//!
+//! * **Torn-tail truncation.** Replay decodes records until a length, crc
+//!   or header check fails. On the *final* segment that is treated as a
+//!   crash tail and truncated (the run recovers to the last durable event
+//!   boundary); anywhere earlier it is real corruption and an error.
+//! * **Idempotent re-replay.** [`Journal::replay`] is a pure fold over the
+//!   record stream: replaying twice — or replaying after a resubmission
+//!   appended post-crash events under the same run id — yields the same
+//!   [`RecoveredRun`] for the same bytes, and a node's terminal event
+//!   always wins over its earlier transitions.
+//! * **Cross-process id fencing.** [`Journal::open`] scans the journaled
+//!   run ids and fences this process's id counter above them
+//!   ([`crate::util::ensure_next_id_above`]), so a fresh engine can never
+//!   re-issue a run id that already has history.
+//! * **Compaction.** [`Journal::compact`] folds a closed run's segments
+//!   into one `snap-` record holding the final [`RecoveredRun`]; replay
+//!   seeds from the highest snapshot and applies only later segments, so
+//!   post-compaction resubmits keep working.
+//!
+//! [`RunRegistry`] is the query layer over the same records: `list_runs`,
+//! `get_run` and `node_timeline` (the merged pre- and post-crash event
+//! history of a run), each with a JSON export via [`crate::jsonx`].
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex};
+
+use crate::engine::{NodePhase, ReusedStep, RunPhase, StepOutputs};
+use crate::jsonx::Json;
+use crate::storage::{validate_key, with_retry, StorageClient};
+use crate::util::{crc32, epoch_ms};
+
+/// Segment header magic.
+pub const SEGMENT_MAGIC: &[u8; 4] = b"DWJ1";
+/// Record-format version stamped after the magic.
+pub const FORMAT_VERSION: u8 = 1;
+/// Default byte threshold after which the writer rotates to a new segment.
+pub const DEFAULT_SEGMENT_MAX: usize = 64 * 1024;
+/// Upper bound a decoder will believe for one record's length; anything
+/// larger is treated as a torn tail.
+const MAX_RECORD_LEN: usize = 64 * 1024 * 1024;
+/// Transient-blip retry budget for journal storage I/O.
+const STORAGE_RETRIES: u32 = 5;
+/// Cap on cached per-run segment cursors (idle ones beyond this are
+/// evicted; a later append simply re-scans the run's segments).
+const WRITER_CACHE_MAX: usize = 256;
+
+// -- wire format ---------------------------------------------------------------
+
+/// A fresh segment's header bytes (magic + version).
+pub fn segment_header() -> Vec<u8> {
+    let mut v = Vec::with_capacity(5);
+    v.extend_from_slice(SEGMENT_MAGIC);
+    v.push(FORMAT_VERSION);
+    v
+}
+
+/// Frame one record payload: `u32 len | u32 crc32 | payload`.
+pub fn frame_record(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Decode a segment into record payloads. Returns the cleanly-decoded
+/// payload prefix plus `Some(reason)` when a torn tail was truncated; the
+/// caller decides whether a torn tail is tolerable (it is only on a run's
+/// final segment). A bad header is an error — there is nothing to salvage.
+pub fn decode_segment(data: &[u8]) -> Result<(Vec<Vec<u8>>, Option<String>), String> {
+    if data.len() < 5 || &data[..4] != SEGMENT_MAGIC {
+        return Err("bad segment magic".to_string());
+    }
+    if data[4] != FORMAT_VERSION {
+        return Err(format!("unsupported journal format version {}", data[4]));
+    }
+    let mut out = Vec::new();
+    let mut i = 5usize;
+    while i < data.len() {
+        if i + 8 > data.len() {
+            return Ok((out, Some(format!("torn record header at byte {i}"))));
+        }
+        let len = u32::from_le_bytes(data[i..i + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(data[i + 4..i + 8].try_into().unwrap());
+        if len > MAX_RECORD_LEN || i + 8 + len > data.len() {
+            return Ok((out, Some(format!("torn record body at byte {i}"))));
+        }
+        let payload = &data[i + 8..i + 8 + len];
+        if crc32(payload) != crc {
+            return Ok((out, Some(format!("record checksum mismatch at byte {i}"))));
+        }
+        out.push(payload.to_vec());
+        i += 8 + len;
+    }
+    Ok((out, None))
+}
+
+// -- events --------------------------------------------------------------------
+
+/// One run-lifecycle transition. Everything [`Journal::replay`] needs to
+/// reconstruct a run is carried inline: attempt numbers, backend
+/// placements, and — on success/reuse — the step's full [`StepOutputs`]
+/// (output-artifact keys plus their content digests).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JournalEvent {
+    /// A run was created and is about to execute.
+    RunSubmitted { workflow: String },
+    /// A recovered run was resubmitted (post-crash continuation under the
+    /// same run id).
+    RunResubmitted { workflow: String },
+    RunSucceeded,
+    RunFailed { message: String },
+    /// A step instance entered the execution path (template resolved).
+    NodeScheduled { path: String, template: String },
+    /// A leaf attempt started executing (capacity acquired).
+    NodeStarted { path: String, attempt: u32 },
+    /// The placement layer routed an attempt to a backend.
+    NodePlaced { path: String, backend: String, node: Option<String>, attempt: u32 },
+    /// A transient failure is being retried; `attempt` is the upcoming
+    /// attempt number.
+    NodeRetrying { path: String, attempt: u32, message: String },
+    NodeSucceeded { path: String, key: Option<String>, outputs: StepOutputs },
+    NodeFailed { path: String, message: String },
+    NodeSkipped { path: String },
+    /// The step's outputs were spliced in from the reuse set (§2.5).
+    NodeReused { path: String, key: String, outputs: StepOutputs },
+    /// An attempt was cancelled (today: wall-time timeout).
+    NodeCancelled { path: String, reason: String },
+    /// The engine reclaimed a failed attempt's artifact namespace.
+    ArtifactsReclaimed { path: String, prefix: String, objects: u64 },
+    /// A `metrics::Trace` event mirrored into the journal (capacity
+    /// events the typed variants above do not model). `seq` is the trace
+    /// ring's in-lock sequence number: the sink fires outside that lock,
+    /// so two mirrored events may reach the journal out of order — sort
+    /// by `seq` to recover the true trace order.
+    TraceMirror { seq: u64, kind: String, step: String, detail: String },
+    /// Compaction snapshot: the folded state of every earlier record.
+    Snapshot { run: RecoveredRun },
+}
+
+fn node_phase_str(p: NodePhase) -> &'static str {
+    match p {
+        NodePhase::Pending => "Pending",
+        NodePhase::Running => "Running",
+        NodePhase::Succeeded => "Succeeded",
+        NodePhase::Failed => "Failed",
+        NodePhase::Skipped => "Skipped",
+        NodePhase::Reused => "Reused",
+    }
+}
+
+fn node_phase_from(s: &str) -> Option<NodePhase> {
+    Some(match s {
+        "Pending" => NodePhase::Pending,
+        "Running" => NodePhase::Running,
+        "Succeeded" => NodePhase::Succeeded,
+        "Failed" => NodePhase::Failed,
+        "Skipped" => NodePhase::Skipped,
+        "Reused" => NodePhase::Reused,
+        _ => return None,
+    })
+}
+
+fn run_phase_str(p: RunPhase) -> &'static str {
+    match p {
+        RunPhase::Running => "Running",
+        RunPhase::Succeeded => "Succeeded",
+        RunPhase::Failed => "Failed",
+    }
+}
+
+fn run_phase_from(s: &str) -> Option<RunPhase> {
+    Some(match s {
+        "Running" => RunPhase::Running,
+        "Succeeded" => RunPhase::Succeeded,
+        "Failed" => RunPhase::Failed,
+        _ => return None,
+    })
+}
+
+fn j_str(j: &Json, k: &str) -> Option<String> {
+    j.get(k)?.as_str().map(str::to_string)
+}
+
+fn j_opt_str(j: &Json, k: &str) -> Option<String> {
+    j.get(k).and_then(|v| v.as_str()).map(str::to_string)
+}
+
+fn j_u64(j: &Json, k: &str) -> Option<u64> {
+    j.get(k)?.as_i64().map(|v| v as u64)
+}
+
+fn opt_str_json(v: &Option<String>) -> Json {
+    v.clone().map(Json::s).unwrap_or(Json::Null)
+}
+
+impl JournalEvent {
+    /// Stable kind tag (the `"kind"` field of the JSON encoding).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JournalEvent::RunSubmitted { .. } => "RunSubmitted",
+            JournalEvent::RunResubmitted { .. } => "RunResubmitted",
+            JournalEvent::RunSucceeded => "RunSucceeded",
+            JournalEvent::RunFailed { .. } => "RunFailed",
+            JournalEvent::NodeScheduled { .. } => "NodeScheduled",
+            JournalEvent::NodeStarted { .. } => "NodeStarted",
+            JournalEvent::NodePlaced { .. } => "NodePlaced",
+            JournalEvent::NodeRetrying { .. } => "NodeRetrying",
+            JournalEvent::NodeSucceeded { .. } => "NodeSucceeded",
+            JournalEvent::NodeFailed { .. } => "NodeFailed",
+            JournalEvent::NodeSkipped { .. } => "NodeSkipped",
+            JournalEvent::NodeReused { .. } => "NodeReused",
+            JournalEvent::NodeCancelled { .. } => "NodeCancelled",
+            JournalEvent::ArtifactsReclaimed { .. } => "ArtifactsReclaimed",
+            JournalEvent::TraceMirror { .. } => "TraceMirror",
+            JournalEvent::Snapshot { .. } => "Snapshot",
+        }
+    }
+
+    /// Node path this event concerns, when it concerns one.
+    pub fn path(&self) -> Option<&str> {
+        match self {
+            JournalEvent::NodeScheduled { path, .. }
+            | JournalEvent::NodeStarted { path, .. }
+            | JournalEvent::NodePlaced { path, .. }
+            | JournalEvent::NodeRetrying { path, .. }
+            | JournalEvent::NodeSucceeded { path, .. }
+            | JournalEvent::NodeFailed { path, .. }
+            | JournalEvent::NodeSkipped { path }
+            | JournalEvent::NodeReused { path, .. }
+            | JournalEvent::NodeCancelled { path, .. }
+            | JournalEvent::ArtifactsReclaimed { path, .. } => Some(path),
+            JournalEvent::TraceMirror { step, .. } => Some(step),
+            _ => None,
+        }
+    }
+
+    /// JSON encoding (`{"kind": ..., ...fields}`).
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![("kind", Json::s(self.kind()))];
+        match self {
+            JournalEvent::RunSubmitted { workflow } | JournalEvent::RunResubmitted { workflow } => {
+                fields.push(("workflow", Json::s(workflow.clone())));
+            }
+            JournalEvent::RunSucceeded => {}
+            JournalEvent::RunFailed { message } => {
+                fields.push(("message", Json::s(message.clone())));
+            }
+            JournalEvent::NodeScheduled { path, template } => {
+                fields.push(("path", Json::s(path.clone())));
+                fields.push(("template", Json::s(template.clone())));
+            }
+            JournalEvent::NodeStarted { path, attempt } => {
+                fields.push(("path", Json::s(path.clone())));
+                fields.push(("attempt", Json::n(*attempt as f64)));
+            }
+            JournalEvent::NodePlaced { path, backend, node, attempt } => {
+                fields.push(("path", Json::s(path.clone())));
+                fields.push(("backend", Json::s(backend.clone())));
+                fields.push(("node", opt_str_json(node)));
+                fields.push(("attempt", Json::n(*attempt as f64)));
+            }
+            JournalEvent::NodeRetrying { path, attempt, message } => {
+                fields.push(("path", Json::s(path.clone())));
+                fields.push(("attempt", Json::n(*attempt as f64)));
+                fields.push(("message", Json::s(message.clone())));
+            }
+            JournalEvent::NodeSucceeded { path, key, outputs } => {
+                fields.push(("path", Json::s(path.clone())));
+                fields.push(("key", opt_str_json(key)));
+                fields.push(("outputs", outputs.to_json()));
+            }
+            JournalEvent::NodeFailed { path, message } => {
+                fields.push(("path", Json::s(path.clone())));
+                fields.push(("message", Json::s(message.clone())));
+            }
+            JournalEvent::NodeSkipped { path } => {
+                fields.push(("path", Json::s(path.clone())));
+            }
+            JournalEvent::NodeReused { path, key, outputs } => {
+                fields.push(("path", Json::s(path.clone())));
+                fields.push(("key", Json::s(key.clone())));
+                fields.push(("outputs", outputs.to_json()));
+            }
+            JournalEvent::NodeCancelled { path, reason } => {
+                fields.push(("path", Json::s(path.clone())));
+                fields.push(("reason", Json::s(reason.clone())));
+            }
+            JournalEvent::ArtifactsReclaimed { path, prefix, objects } => {
+                fields.push(("path", Json::s(path.clone())));
+                fields.push(("prefix", Json::s(prefix.clone())));
+                fields.push(("objects", Json::n(*objects as f64)));
+            }
+            JournalEvent::TraceMirror { seq, kind, step, detail } => {
+                fields.push(("seq", Json::n(*seq as f64)));
+                fields.push(("trace_kind", Json::s(kind.clone())));
+                fields.push(("step", Json::s(step.clone())));
+                fields.push(("detail", Json::s(detail.clone())));
+            }
+            JournalEvent::Snapshot { run } => {
+                fields.push(("run", run.to_json()));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    /// Inverse of [`JournalEvent::to_json`]; `None` on unknown shapes.
+    pub fn from_json(j: &Json) -> Option<JournalEvent> {
+        let kind = j.get("kind")?.as_str()?;
+        Some(match kind {
+            "RunSubmitted" => JournalEvent::RunSubmitted { workflow: j_str(j, "workflow")? },
+            "RunResubmitted" => JournalEvent::RunResubmitted { workflow: j_str(j, "workflow")? },
+            "RunSucceeded" => JournalEvent::RunSucceeded,
+            "RunFailed" => JournalEvent::RunFailed { message: j_str(j, "message")? },
+            "NodeScheduled" => JournalEvent::NodeScheduled {
+                path: j_str(j, "path")?,
+                template: j_str(j, "template")?,
+            },
+            "NodeStarted" => JournalEvent::NodeStarted {
+                path: j_str(j, "path")?,
+                attempt: j_u64(j, "attempt")? as u32,
+            },
+            "NodePlaced" => JournalEvent::NodePlaced {
+                path: j_str(j, "path")?,
+                backend: j_str(j, "backend")?,
+                node: j_opt_str(j, "node"),
+                attempt: j_u64(j, "attempt")? as u32,
+            },
+            "NodeRetrying" => JournalEvent::NodeRetrying {
+                path: j_str(j, "path")?,
+                attempt: j_u64(j, "attempt")? as u32,
+                message: j_str(j, "message")?,
+            },
+            "NodeSucceeded" => JournalEvent::NodeSucceeded {
+                path: j_str(j, "path")?,
+                key: j_opt_str(j, "key"),
+                outputs: StepOutputs::from_json(j.get("outputs")?)?,
+            },
+            "NodeFailed" => JournalEvent::NodeFailed {
+                path: j_str(j, "path")?,
+                message: j_str(j, "message")?,
+            },
+            "NodeSkipped" => JournalEvent::NodeSkipped { path: j_str(j, "path")? },
+            "NodeReused" => JournalEvent::NodeReused {
+                path: j_str(j, "path")?,
+                key: j_str(j, "key")?,
+                outputs: StepOutputs::from_json(j.get("outputs")?)?,
+            },
+            "NodeCancelled" => JournalEvent::NodeCancelled {
+                path: j_str(j, "path")?,
+                reason: j_str(j, "reason")?,
+            },
+            "ArtifactsReclaimed" => JournalEvent::ArtifactsReclaimed {
+                path: j_str(j, "path")?,
+                prefix: j_str(j, "prefix")?,
+                objects: j_u64(j, "objects")?,
+            },
+            "TraceMirror" => JournalEvent::TraceMirror {
+                seq: j_u64(j, "seq")?,
+                kind: j_str(j, "trace_kind")?,
+                step: j_str(j, "step")?,
+                detail: j_str(j, "detail")?,
+            },
+            "Snapshot" => JournalEvent::Snapshot { run: RecoveredRun::from_json(j.get("run")?)? },
+            _ => return None,
+        })
+    }
+}
+
+/// One journal record: the event plus its wall-clock timestamp. Ordering
+/// is the journal's append order (segment index, then position), not
+/// `at_ms` — wall clocks tie and step back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Recorded {
+    pub at_ms: u64,
+    pub event: JournalEvent,
+}
+
+impl Recorded {
+    /// JSON encoding (`{"at": ms, "ev": {...}}`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("at", Json::n(self.at_ms as f64)), ("ev", self.event.to_json())])
+    }
+
+    /// Inverse of [`Recorded::to_json`].
+    pub fn from_json(j: &Json) -> Option<Recorded> {
+        Some(Recorded {
+            at_ms: j.get("at")?.as_i64()? as u64,
+            event: JournalEvent::from_json(j.get("ev")?)?,
+        })
+    }
+
+    /// Serialize to one framed-record payload.
+    pub fn encode(&self) -> Vec<u8> {
+        self.to_json().to_string_compact().into_bytes()
+    }
+
+    /// Parse one framed-record payload (a crc-verified segment record).
+    pub fn parse(payload: &[u8]) -> Result<Recorded, String> {
+        let text =
+            std::str::from_utf8(payload).map_err(|_| "record is not utf-8".to_string())?;
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        Recorded::from_json(&j).ok_or_else(|| "record JSON has unknown shape".to_string())
+    }
+}
+
+// -- recovered state -----------------------------------------------------------
+
+/// Folded state of one node after replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveredNode {
+    pub path: String,
+    pub template: String,
+    pub phase: NodePhase,
+    /// Attempts observed (1 = first attempt, retries add more).
+    pub attempts: u32,
+    /// Backend the placement layer last routed an attempt to.
+    pub backend: Option<String>,
+    pub message: String,
+    pub key: Option<String>,
+    /// Outputs of the terminal success/reuse, when one was journaled.
+    pub outputs: Option<StepOutputs>,
+}
+
+impl RecoveredNode {
+    fn empty(path: &str) -> RecoveredNode {
+        RecoveredNode {
+            path: path.to_string(),
+            template: String::new(),
+            phase: NodePhase::Pending,
+            attempts: 0,
+            backend: None,
+            message: String::new(),
+            key: None,
+            outputs: None,
+        }
+    }
+
+    /// JSON encoding (for the registry and compaction snapshots).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("path", Json::s(self.path.clone())),
+            ("template", Json::s(self.template.clone())),
+            ("phase", Json::s(node_phase_str(self.phase))),
+            ("attempts", Json::n(self.attempts as f64)),
+            ("backend", opt_str_json(&self.backend)),
+            ("message", Json::s(self.message.clone())),
+            ("key", opt_str_json(&self.key)),
+            (
+                "outputs",
+                self.outputs.as_ref().map(StepOutputs::to_json).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    /// Inverse of [`RecoveredNode::to_json`].
+    pub fn from_json(j: &Json) -> Option<RecoveredNode> {
+        Some(RecoveredNode {
+            path: j_str(j, "path")?,
+            template: j_str(j, "template")?,
+            phase: node_phase_from(j.get("phase")?.as_str()?)?,
+            attempts: j_u64(j, "attempts")? as u32,
+            backend: j_opt_str(j, "backend"),
+            message: j_str(j, "message")?,
+            key: j_opt_str(j, "key"),
+            outputs: match j.get("outputs") {
+                None | Some(Json::Null) => None,
+                Some(o) => Some(StepOutputs::from_json(o)?),
+            },
+        })
+    }
+}
+
+/// A run reconstructed from its journal: node phases, step outputs, and
+/// the reuse keys that let [`crate::engine::Engine::resubmit`] skip every
+/// journaled success.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveredRun {
+    pub run_id: u64,
+    pub workflow: String,
+    pub phase: RunPhase,
+    /// Final failure message, when the run closed failed.
+    pub message: String,
+    /// Times this run was resubmitted after recovery.
+    pub resubmissions: u32,
+    pub nodes: BTreeMap<String, RecoveredNode>,
+    /// key → outputs of every journaled success/reuse (feeds resubmit).
+    pub keyed: BTreeMap<String, StepOutputs>,
+    /// Records folded into this state (snapshot counts as one).
+    pub events: usize,
+    /// True when replay truncated a torn tail.
+    pub torn_tail: bool,
+}
+
+impl RecoveredRun {
+    fn empty(run_id: u64) -> RecoveredRun {
+        RecoveredRun {
+            run_id,
+            workflow: String::new(),
+            phase: RunPhase::Running,
+            message: String::new(),
+            resubmissions: 0,
+            nodes: BTreeMap::new(),
+            keyed: BTreeMap::new(),
+            events: 0,
+            torn_tail: false,
+        }
+    }
+
+    fn node(&mut self, path: &str) -> &mut RecoveredNode {
+        self.nodes.entry(path.to_string()).or_insert_with(|| RecoveredNode::empty(path))
+    }
+
+    /// Fold one event into the state (the replay state machine). Exposed
+    /// so incremental consumers (live tailers) can share the exact fold
+    /// replay uses.
+    pub fn apply(&mut self, event: &JournalEvent) {
+        match event {
+            JournalEvent::Snapshot { run } => {
+                let (events, torn) = (self.events, self.torn_tail);
+                *self = run.clone();
+                self.events = events;
+                self.torn_tail = torn;
+            }
+            JournalEvent::RunSubmitted { workflow } => {
+                self.workflow = workflow.clone();
+                self.phase = RunPhase::Running;
+            }
+            JournalEvent::RunResubmitted { workflow } => {
+                self.workflow = workflow.clone();
+                self.resubmissions += 1;
+                self.phase = RunPhase::Running;
+            }
+            JournalEvent::RunSucceeded => self.phase = RunPhase::Succeeded,
+            JournalEvent::RunFailed { message } => {
+                self.phase = RunPhase::Failed;
+                self.message = message.clone();
+            }
+            JournalEvent::NodeScheduled { path, template } => {
+                let n = self.node(path);
+                n.template = template.clone();
+            }
+            JournalEvent::NodeStarted { path, attempt } => {
+                let n = self.node(path);
+                n.phase = NodePhase::Running;
+                n.attempts = n.attempts.max(attempt + 1);
+            }
+            JournalEvent::NodePlaced { path, backend, .. } => {
+                self.node(path).backend = Some(backend.clone());
+            }
+            JournalEvent::NodeRetrying { path, attempt, message } => {
+                let n = self.node(path);
+                n.attempts = n.attempts.max(attempt + 1);
+                n.message = message.clone();
+            }
+            JournalEvent::NodeSucceeded { path, key, outputs } => {
+                let n = self.node(path);
+                n.phase = NodePhase::Succeeded;
+                n.key = key.clone();
+                n.outputs = Some(outputs.clone());
+                if let Some(k) = key {
+                    self.keyed.insert(k.clone(), outputs.clone());
+                }
+            }
+            JournalEvent::NodeFailed { path, message } => {
+                let n = self.node(path);
+                n.phase = NodePhase::Failed;
+                n.message = message.clone();
+            }
+            JournalEvent::NodeSkipped { path } => {
+                self.node(path).phase = NodePhase::Skipped;
+            }
+            JournalEvent::NodeReused { path, key, outputs } => {
+                let n = self.node(path);
+                n.phase = NodePhase::Reused;
+                n.key = Some(key.clone());
+                n.outputs = Some(outputs.clone());
+                self.keyed.insert(key.clone(), outputs.clone());
+            }
+            JournalEvent::NodeCancelled { path, reason } => {
+                self.node(path).message = reason.clone();
+            }
+            JournalEvent::ArtifactsReclaimed { .. } | JournalEvent::TraceMirror { .. } => {}
+        }
+    }
+
+    /// Every journaled success/reuse as a [`ReusedStep`], ready for
+    /// `run_with_reuse`/`resubmit` (§2.5).
+    pub fn reusable_steps(&self) -> Vec<ReusedStep> {
+        self.keyed.iter().map(|(k, o)| ReusedStep::new(k.clone(), o.clone())).collect()
+    }
+
+    /// Count nodes in a phase.
+    pub fn count_phase(&self, phase: NodePhase) -> usize {
+        self.nodes.values().filter(|n| n.phase == phase).count()
+    }
+
+    /// JSON encoding (registry export + compaction snapshots).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("run_id", Json::n(self.run_id as f64)),
+            ("workflow", Json::s(self.workflow.clone())),
+            ("phase", Json::s(run_phase_str(self.phase))),
+            ("message", Json::s(self.message.clone())),
+            ("resubmissions", Json::n(self.resubmissions as f64)),
+            ("events", Json::n(self.events as f64)),
+            ("torn_tail", Json::Bool(self.torn_tail)),
+            (
+                "nodes",
+                Json::Obj(self.nodes.iter().map(|(k, n)| (k.clone(), n.to_json())).collect()),
+            ),
+            (
+                "keyed",
+                Json::Obj(self.keyed.iter().map(|(k, o)| (k.clone(), o.to_json())).collect()),
+            ),
+        ])
+    }
+
+    /// Inverse of [`RecoveredRun::to_json`].
+    pub fn from_json(j: &Json) -> Option<RecoveredRun> {
+        let mut rec = RecoveredRun::empty(j_u64(j, "run_id")?);
+        rec.workflow = j_str(j, "workflow")?;
+        rec.phase = run_phase_from(j.get("phase")?.as_str()?)?;
+        rec.message = j_str(j, "message")?;
+        rec.resubmissions = j_u64(j, "resubmissions")? as u32;
+        rec.events = j_u64(j, "events")? as usize;
+        rec.torn_tail = j.get("torn_tail")?.as_bool()?;
+        if let Some(Json::Obj(nodes)) = j.get("nodes") {
+            for (k, v) in nodes {
+                rec.nodes.insert(k.clone(), RecoveredNode::from_json(v)?);
+            }
+        }
+        if let Some(Json::Obj(keyed)) = j.get("keyed") {
+            for (k, v) in keyed {
+                rec.keyed.insert(k.clone(), StepOutputs::from_json(v)?);
+            }
+        }
+        Some(rec)
+    }
+}
+
+// -- the journal ---------------------------------------------------------------
+
+/// Per-run writer state: the segment being grown. `seg == None` until the
+/// first append scans what already exists for this run (so a resubmitting
+/// process continues at the next free segment index instead of clobbering
+/// pre-crash history).
+struct RunWriter {
+    seg: Option<u64>,
+    buf: Vec<u8>,
+}
+
+/// Result of a [`Journal::compact`] pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CompactReport {
+    /// Records folded into the snapshot.
+    pub events_folded: usize,
+    /// Segment objects deleted after the snapshot landed.
+    pub segments_removed: usize,
+}
+
+/// The event-sourced write-ahead journal. One instance serves every run of
+/// an engine (and any number of engines sharing a store); per-run appends
+/// are serialized by a per-run writer lock.
+pub struct Journal {
+    storage: Arc<dyn StorageClient>,
+    prefix: String,
+    seg_max_bytes: usize,
+    writers: Mutex<BTreeMap<u64, Arc<Mutex<RunWriter>>>>,
+}
+
+impl Journal {
+    /// Open (or create) the journal under the default `journal/` prefix of
+    /// `storage`, fencing this process's id counter above every run id the
+    /// journal already holds.
+    pub fn open(storage: Arc<dyn StorageClient>) -> Result<Journal, String> {
+        Journal::with_prefix(storage, "journal")
+    }
+
+    /// [`Journal::open`] under an explicit key prefix.
+    pub fn with_prefix(storage: Arc<dyn StorageClient>, prefix: &str) -> Result<Journal, String> {
+        validate_key(prefix).map_err(|e| e.to_string())?;
+        let j = Journal {
+            storage,
+            prefix: prefix.to_string(),
+            seg_max_bytes: DEFAULT_SEGMENT_MAX,
+            writers: Mutex::new(BTreeMap::new()),
+        };
+        if let Some(max) = j.run_ids()?.into_iter().max() {
+            crate::util::ensure_next_id_above(max + 1);
+        }
+        // Two *concurrently live* processes sharing a store would both
+        // scan the same journaled ids and could still both allocate the
+        // next one (every process counts from 1), then clobber each
+        // other's segment objects. Fence above a wall-clock+pid floor too:
+        // seconds << 22 | pid keeps ids unique across processes opening in
+        // the same second (22 bits covers Linux's default pid_max of
+        // 2^22), and stays under 2^53 until 2038 so ids survive the JSON
+        // (f64) encoding exactly.
+        let epoch_s = crate::util::epoch_ms() / 1000;
+        let floor = (epoch_s << 22) | (std::process::id() as u64 & 0x3F_FFFF);
+        crate::util::ensure_next_id_above(floor);
+        Ok(j)
+    }
+
+    /// Override the segment rotation threshold (builder-style, before the
+    /// journal is shared).
+    pub fn segment_max_bytes(mut self, n: usize) -> Journal {
+        self.seg_max_bytes = n.max(64);
+        self
+    }
+
+    /// The backing store.
+    pub fn storage(&self) -> &Arc<dyn StorageClient> {
+        &self.storage
+    }
+
+    fn run_prefix(&self, run_id: u64) -> String {
+        format!("{}/run{}/", self.prefix, run_id)
+    }
+
+    fn seg_key(&self, run_id: u64, idx: u64) -> String {
+        format!("{}seg-{idx:08}", self.run_prefix(run_id))
+    }
+
+    fn snap_key(&self, run_id: u64, idx: u64) -> String {
+        format!("{}snap-{idx:08}", self.run_prefix(run_id))
+    }
+
+    /// Every run id with journal records, ascending.
+    pub fn run_ids(&self) -> Result<Vec<u64>, String> {
+        let keys = with_retry(STORAGE_RETRIES, || {
+            self.storage.list(&format!("{}/", self.prefix))
+        })
+        .map_err(|e| e.to_string())?;
+        let run_pfx = format!("{}/run", self.prefix);
+        let mut ids: BTreeSet<u64> = BTreeSet::new();
+        for k in keys {
+            if let Some(rest) = k.strip_prefix(&run_pfx) {
+                if let Some(id_part) = rest.split('/').next() {
+                    if let Ok(id) = id_part.parse::<u64>() {
+                        ids.insert(id);
+                    }
+                }
+            }
+        }
+        Ok(ids.into_iter().collect())
+    }
+
+    /// First append of this journal handle for a run: find the next free
+    /// segment index and **heal** a torn tail a crash left on the last
+    /// segment — truncate it to its clean record prefix now, because once
+    /// post-crash segments land after it, a torn tail would otherwise read
+    /// as mid-stream corruption.
+    fn prepare_append_index(&self, run_id: u64) -> Result<u64, String> {
+        let prefix = self.run_prefix(run_id);
+        let keys = with_retry(STORAGE_RETRIES, || self.storage.list(&prefix))
+            .map_err(|e| e.to_string())?;
+        let entries: Vec<(u64, bool)> =
+            keys.iter().filter_map(|k| parse_entry(k, &prefix)).collect();
+        let next = entries.iter().map(|(i, _)| i + 1).max().unwrap_or(0);
+        if let Some(last_seg) = entries.iter().filter(|(_, s)| !*s).map(|(i, _)| *i).max() {
+            let key = self.seg_key(run_id, last_seg);
+            let raw = with_retry(STORAGE_RETRIES, || self.storage.download(&key))
+                .map_err(|e| e.to_string())?;
+            if let Ok((payloads, Some(_))) = decode_segment(&raw) {
+                let mut healed = segment_header();
+                for p in &payloads {
+                    healed.extend_from_slice(&frame_record(p));
+                }
+                with_retry(STORAGE_RETRIES, || self.storage.upload(&key, &healed))
+                    .map_err(|e| format!("healing torn journal tail: {e}"))?;
+            }
+        }
+        Ok(next)
+    }
+
+    /// Append one event to a run's journal. Durable when this returns: the
+    /// segment object containing the record has been (re)uploaded.
+    pub fn append(&self, run_id: u64, event: &JournalEvent) -> Result<(), String> {
+        let writer = {
+            let mut map = self.writers.lock().unwrap();
+            let w = Arc::clone(map.entry(run_id).or_insert_with(|| {
+                Arc::new(Mutex::new(RunWriter { seg: None, buf: Vec::new() }))
+            }));
+            // The map is only a cache of segment cursors — a later append
+            // for an evicted run re-scans and continues at the next free
+            // index. Bound it so stragglers (e.g. a watchdog's post-close
+            // trace mirror re-creating an entry after the terminal-event
+            // cleanup below) cannot grow one buffered segment per run
+            // forever. Only idle entries are evictable: strong_count == 1
+            // means no in-flight append holds them, so a half-initialized
+            // writer can never be replaced by one scanning stale state.
+            if map.len() > WRITER_CACHE_MAX {
+                let excess = map.len() - WRITER_CACHE_MAX;
+                let victims: Vec<u64> = map
+                    .iter()
+                    .filter(|(id, w)| **id != run_id && Arc::strong_count(*w) == 1)
+                    .map(|(id, _)| *id)
+                    .take(excess)
+                    .collect();
+                for id in victims {
+                    map.remove(&id);
+                }
+            }
+            w
+        };
+        let mut w = writer.lock().unwrap();
+        if w.seg.is_none() {
+            w.seg = Some(self.prepare_append_index(run_id)?);
+            w.buf = segment_header();
+        }
+        let rec = Recorded { at_ms: epoch_ms(), event: event.clone() };
+        let frame = frame_record(&rec.encode());
+        let header_len = segment_header().len();
+        if w.buf.len() > header_len && w.buf.len() + frame.len() > self.seg_max_bytes {
+            w.seg = Some(w.seg.expect("writer initialized above") + 1);
+            w.buf = segment_header();
+        }
+        w.buf.extend_from_slice(&frame);
+        let key = self.seg_key(run_id, w.seg.expect("writer initialized above"));
+        let buf = &w.buf;
+        with_retry(STORAGE_RETRIES, || self.storage.upload(&key, buf))
+            .map_err(|e| format!("journal append for run {run_id}: {e}"))?;
+        if matches!(event, JournalEvent::RunSucceeded | JournalEvent::RunFailed { .. }) {
+            // the run closed: drop its writer so a long-lived journal does
+            // not grow one buffered segment per run forever (a later
+            // resubmission re-scans and continues at the next index).
+            // Safe lock order: `append` never holds the writers-map lock
+            // while waiting on a writer lock, so taking the map lock here
+            // (under this run's writer lock) cannot invert with it.
+            self.writers.lock().unwrap().remove(&run_id);
+        }
+        Ok(())
+    }
+
+    /// Every record of a run in journal order, plus whether a torn tail
+    /// was truncated. Seeds from the newest usable compaction snapshot —
+    /// an unreadable snapshot (crash mid-compaction) falls back to the raw
+    /// segments it had not yet deleted. A torn tail anywhere but the final
+    /// segment is an error.
+    pub fn events(&self, run_id: u64) -> Result<(Vec<Recorded>, bool), String> {
+        let prefix = self.run_prefix(run_id);
+        let keys = with_retry(STORAGE_RETRIES, || self.storage.list(&prefix))
+            .map_err(|e| e.to_string())?;
+        let mut entries: Vec<(u64, bool)> =
+            keys.iter().filter_map(|k| parse_entry(k, &prefix)).collect();
+        entries.sort_unstable();
+        let mut out: Vec<Recorded> = Vec::new();
+        let mut base_idx: Option<u64> = None;
+        if let Some(k) = entries.iter().filter(|(_, s)| *s).map(|(i, _)| *i).max() {
+            let skey = self.snap_key(run_id, k);
+            let raw = with_retry(STORAGE_RETRIES, || self.storage.download(&skey))
+                .map_err(|e| e.to_string())?;
+            if let Ok((payloads, None)) = decode_segment(&raw) {
+                let recs: Option<Vec<Recorded>> =
+                    payloads.iter().map(|p| Recorded::parse(p).ok()).collect();
+                if let Some(recs) = recs {
+                    if !recs.is_empty() {
+                        out = recs;
+                        base_idx = Some(k);
+                    }
+                }
+            }
+            if base_idx.is_none() {
+                // Unusable snapshot. Falling back to raw segments is only
+                // lossless while the segments it folded still exist (a
+                // crash mid-compaction — the snapshot lands before any
+                // deletion). If compaction completed, the folded history
+                // is gone and replaying just the suffix would be silently
+                // wrong: that must be a hard error.
+                if !entries.iter().any(|(i, s)| !*s && *i <= k) {
+                    return Err(format!(
+                        "journal snapshot for run {run_id} is unreadable and the segments \
+                         it folded were already removed"
+                    ));
+                }
+            }
+        }
+        let segs: Vec<u64> = entries
+            .iter()
+            .filter(|(i, s)| !*s && base_idx.map_or(true, |k| *i > k))
+            .map(|(i, _)| *i)
+            .collect();
+        if out.is_empty() && segs.is_empty() {
+            return Err(format!("run {run_id} has no journal records"));
+        }
+        // segment indices are allocated contiguously (fresh runs start at
+        // 0, post-compaction appends at snapshot+1), so a gap means a
+        // segment object was lost — refuse to replay a silently-pruned
+        // stream, exactly like mid-stream corruption
+        let mut expect = base_idx.map_or(0, |k| k + 1);
+        for idx in &segs {
+            if *idx != expect {
+                return Err(format!(
+                    "journal for run {run_id} is missing segment {expect} \
+                     (next present: {idx}); refusing to replay a gapped stream"
+                ));
+            }
+            expect += 1;
+        }
+        let mut torn = false;
+        let last = segs.len().checked_sub(1);
+        for (pos, idx) in segs.iter().enumerate() {
+            let key = self.seg_key(run_id, *idx);
+            let raw = with_retry(STORAGE_RETRIES, || self.storage.download(&key))
+                .map_err(|e| e.to_string())?;
+            let (payloads, tail) = decode_segment(&raw).map_err(|e| format!("{key}: {e}"))?;
+            if let Some(reason) = tail {
+                if Some(pos) == last {
+                    torn = true;
+                } else {
+                    return Err(format!(
+                        "journal for run {run_id} is corrupt mid-stream ({key}: {reason})"
+                    ));
+                }
+            }
+            for p in payloads {
+                out.push(Recorded::parse(&p).map_err(|e| format!("{key}: {e}"))?);
+            }
+        }
+        if out.is_empty() {
+            return Err(format!("run {run_id} has no journal records"));
+        }
+        Ok((out, torn))
+    }
+
+    /// Reconstruct a run by folding its journal (see [`RecoveredRun`]).
+    /// Pure over the record stream: re-replaying — before or after a
+    /// resubmission appended more events — is always safe.
+    pub fn replay(&self, run_id: u64) -> Result<RecoveredRun, String> {
+        let (records, torn) = self.events(run_id)?;
+        let mut rec = RecoveredRun::empty(run_id);
+        rec.torn_tail = torn;
+        for r in &records {
+            rec.apply(&r.event);
+            rec.events += 1;
+        }
+        Ok(rec)
+    }
+
+    /// Fold a **closed** run's segments into a single snapshot record and
+    /// delete them. Replay then seeds from the snapshot; appends after
+    /// compaction (a later resubmission) land in fresh segments above it.
+    pub fn compact(&self, run_id: u64) -> Result<CompactReport, String> {
+        let rec = self.replay(run_id)?;
+        if matches!(rec.phase, RunPhase::Running) {
+            return Err(format!(
+                "run {run_id} has not closed; compact only folds terminal runs"
+            ));
+        }
+        let prefix = self.run_prefix(run_id);
+        let keys = with_retry(STORAGE_RETRIES, || self.storage.list(&prefix))
+            .map_err(|e| e.to_string())?;
+        let entries: Vec<(u64, bool, String)> = keys
+            .into_iter()
+            .filter_map(|k| parse_entry(&k, &prefix).map(|(i, s)| (i, s, k)))
+            .collect();
+        let max_idx = entries.iter().map(|(i, _, _)| *i).max().unwrap_or(0);
+        let events_folded = rec.events;
+        // snapshot lands before anything is deleted (crash-safe order: a
+        // crash mid-compaction leaves extra segments the next replay
+        // simply ignores — they are all ≤ the snapshot index)
+        let recorded = Recorded {
+            at_ms: epoch_ms(),
+            event: JournalEvent::Snapshot { run: rec },
+        };
+        let mut buf = segment_header();
+        buf.extend_from_slice(&frame_record(&recorded.encode()));
+        let snap = self.snap_key(run_id, max_idx);
+        with_retry(STORAGE_RETRIES, || self.storage.upload(&snap, &buf))
+            .map_err(|e| e.to_string())?;
+        let mut removed = 0usize;
+        for (idx, is_snap, key) in entries {
+            let stale = if is_snap { idx < max_idx } else { idx <= max_idx };
+            if stale && self.storage.delete(&key).is_ok() {
+                removed += 1;
+            }
+        }
+        // the writer (if any) must re-scan: its buffered segment is gone
+        self.writers.lock().unwrap().remove(&run_id);
+        Ok(CompactReport { events_folded, segments_removed: removed })
+    }
+}
+
+/// Parse a `seg-NNNNNNNN` / `snap-NNNNNNNN` key into `(index, is_snap)`.
+fn parse_entry(key: &str, run_prefix: &str) -> Option<(u64, bool)> {
+    let rest = key.strip_prefix(run_prefix)?;
+    if let Some(i) = rest.strip_prefix("seg-") {
+        return i.parse().ok().map(|n| (n, false));
+    }
+    if let Some(i) = rest.strip_prefix("snap-") {
+        return i.parse().ok().map(|n| (n, true));
+    }
+    None
+}
+
+// -- the registry --------------------------------------------------------------
+
+/// One row of [`RunRegistry::list_runs`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSummary {
+    pub run_id: u64,
+    pub workflow: String,
+    pub phase: RunPhase,
+    pub message: String,
+    pub nodes: usize,
+    pub succeeded: usize,
+    pub failed: usize,
+    pub reused: usize,
+    pub resubmissions: u32,
+    pub torn_tail: bool,
+    pub events: usize,
+}
+
+impl RunSummary {
+    fn of(rec: &RecoveredRun) -> RunSummary {
+        RunSummary {
+            run_id: rec.run_id,
+            workflow: rec.workflow.clone(),
+            phase: rec.phase,
+            message: rec.message.clone(),
+            nodes: rec.nodes.len(),
+            succeeded: rec.count_phase(NodePhase::Succeeded),
+            failed: rec.count_phase(NodePhase::Failed),
+            reused: rec.count_phase(NodePhase::Reused),
+            resubmissions: rec.resubmissions,
+            torn_tail: rec.torn_tail,
+            events: rec.events,
+        }
+    }
+
+    /// JSON row (what a `dflow list` would print).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("run_id", Json::n(self.run_id as f64)),
+            ("workflow", Json::s(self.workflow.clone())),
+            ("phase", Json::s(run_phase_str(self.phase))),
+            ("message", Json::s(self.message.clone())),
+            ("nodes", Json::n(self.nodes as f64)),
+            ("succeeded", Json::n(self.succeeded as f64)),
+            ("failed", Json::n(self.failed as f64)),
+            ("reused", Json::n(self.reused as f64)),
+            ("resubmissions", Json::n(self.resubmissions as f64)),
+            ("torn_tail", Json::Bool(self.torn_tail)),
+            ("events", Json::n(self.events as f64)),
+        ])
+    }
+}
+
+/// Query layer over a [`Journal`]: the durable observability surface the
+/// paper's `dflow get/watch` describes, minus a UI.
+pub struct RunRegistry {
+    journal: Arc<Journal>,
+}
+
+impl RunRegistry {
+    /// Wrap a journal.
+    pub fn new(journal: Arc<Journal>) -> RunRegistry {
+        RunRegistry { journal }
+    }
+
+    /// Summaries of every journaled run, ascending by run id. A run whose
+    /// journal cannot be replayed (mid-stream corruption) must not take
+    /// the whole listing down — exactly when corruption is being
+    /// diagnosed, the registry has to stay usable — so it reports as a
+    /// `Failed` row whose `message` carries the replay error and whose
+    /// `torn_tail` flag is set.
+    pub fn list_runs(&self) -> Result<Vec<RunSummary>, String> {
+        let mut out = Vec::new();
+        for id in self.journal.run_ids()? {
+            out.push(match self.journal.replay(id) {
+                Ok(rec) => RunSummary::of(&rec),
+                Err(e) => RunSummary {
+                    run_id: id,
+                    workflow: String::new(),
+                    phase: RunPhase::Failed,
+                    message: format!("journal unreadable: {e}"),
+                    nodes: 0,
+                    succeeded: 0,
+                    failed: 0,
+                    reused: 0,
+                    resubmissions: 0,
+                    torn_tail: true,
+                    events: 0,
+                },
+            });
+        }
+        Ok(out)
+    }
+
+    /// Full recovered state of one run.
+    pub fn get_run(&self, run_id: u64) -> Result<RecoveredRun, String> {
+        self.journal.replay(run_id)
+    }
+
+    /// The run's full event history in journal order — the merged pre- and
+    /// post-crash record when the run was resubmitted. With `path`, only
+    /// events concerning that node.
+    pub fn node_timeline(
+        &self,
+        run_id: u64,
+        path: Option<&str>,
+    ) -> Result<Vec<Recorded>, String> {
+        let (records, _) = self.journal.events(run_id)?;
+        Ok(match path {
+            None => records,
+            Some(p) => records.into_iter().filter(|r| r.event.path() == Some(p)).collect(),
+        })
+    }
+
+    /// [`RunRegistry::list_runs`] as a JSON array.
+    pub fn list_runs_json(&self) -> Result<Json, String> {
+        Ok(Json::Arr(self.list_runs()?.iter().map(RunSummary::to_json).collect()))
+    }
+
+    /// [`RunRegistry::node_timeline`] as a JSON array.
+    pub fn timeline_json(&self, run_id: u64, path: Option<&str>) -> Result<Json, String> {
+        Ok(Json::Arr(self.node_timeline(run_id, path)?.iter().map(Recorded::to_json).collect()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Value;
+    use crate::storage::MemStorage;
+
+    fn outputs(v: i64) -> StepOutputs {
+        let mut o = StepOutputs::default();
+        o.params.insert("v".into(), Value::Int(v));
+        o
+    }
+
+    fn sample_events() -> Vec<JournalEvent> {
+        vec![
+            JournalEvent::RunSubmitted { workflow: "w".into() },
+            JournalEvent::NodeScheduled { path: "main/a".into(), template: "op".into() },
+            JournalEvent::NodeStarted { path: "main/a".into(), attempt: 0 },
+            JournalEvent::NodePlaced {
+                path: "main/a".into(),
+                backend: "k8s".into(),
+                node: Some("n1".into()),
+                attempt: 0,
+            },
+            JournalEvent::NodeRetrying {
+                path: "main/a".into(),
+                attempt: 1,
+                message: "blip".into(),
+            },
+            JournalEvent::NodeSucceeded {
+                path: "main/a".into(),
+                key: Some("k-a".into()),
+                outputs: outputs(7),
+            },
+            JournalEvent::NodeFailed { path: "main/b".into(), message: "boom".into() },
+            JournalEvent::NodeSkipped { path: "main/c".into() },
+            JournalEvent::NodeReused { path: "main/d".into(), key: "k-d".into(), outputs: outputs(9) },
+            JournalEvent::NodeCancelled { path: "main/e".into(), reason: "timeout".into() },
+            JournalEvent::ArtifactsReclaimed {
+                path: "main/b".into(),
+                prefix: "run1/main.b/a0/".into(),
+                objects: 2,
+            },
+            JournalEvent::TraceMirror {
+                seq: 17,
+                kind: "PodBound".into(),
+                step: "main/a".into(),
+                detail: "n1".into(),
+            },
+            JournalEvent::RunFailed { message: "main/b: boom".into() },
+            JournalEvent::RunResubmitted { workflow: "w".into() },
+            JournalEvent::RunSucceeded,
+        ]
+    }
+
+    #[test]
+    fn every_event_kind_roundtrips_through_json() {
+        for ev in sample_events() {
+            let back = JournalEvent::from_json(&ev.to_json())
+                .unwrap_or_else(|| panic!("{} did not parse back", ev.kind()));
+            assert_eq!(back, ev);
+        }
+        // Recorded envelope too
+        let rec = Recorded { at_ms: 123, event: JournalEvent::RunSucceeded };
+        assert_eq!(Recorded::parse(&rec.encode()).unwrap(), rec);
+    }
+
+    #[test]
+    fn segment_decode_roundtrip_and_torn_tails() {
+        let payloads: Vec<Vec<u8>> = (0..5)
+            .map(|i| {
+                Recorded {
+                    at_ms: i,
+                    event: JournalEvent::NodeSkipped { path: format!("main/t{i}") },
+                }
+                .encode()
+            })
+            .collect();
+        let mut seg = segment_header();
+        for p in &payloads {
+            seg.extend_from_slice(&frame_record(p));
+        }
+        let (got, torn) = decode_segment(&seg).unwrap();
+        assert_eq!(got, payloads);
+        assert!(torn.is_none());
+        // truncating exactly at a record boundary is clean...
+        let tail = frame_record(&payloads[4]);
+        let base = seg.len() - tail.len();
+        let (got, torn) = decode_segment(&seg[..base]).unwrap();
+        assert_eq!(got, payloads[..4]);
+        assert!(torn.is_none(), "a record-boundary cut is not a torn tail");
+        // ...and every mid-record truncation is a torn tail that yields
+        // exactly the earlier records
+        for cut in 1..tail.len() {
+            let (got, torn) = decode_segment(&seg[..base + cut]).unwrap();
+            assert_eq!(got, payloads[..4], "cut={cut}");
+            assert!(torn.is_some(), "cut={cut} must report a torn tail");
+        }
+        // a flipped payload byte fails the checksum
+        let mut bad = seg.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        let (got, torn) = decode_segment(&bad).unwrap();
+        assert_eq!(got.len(), 4);
+        assert!(torn.unwrap().contains("checksum"));
+        // bad magic / version are hard errors
+        assert!(decode_segment(b"NOPE").is_err());
+        let mut vseg = seg;
+        vseg[4] = 99;
+        assert!(decode_segment(&vseg).is_err());
+    }
+
+    #[test]
+    fn append_replay_roundtrip_with_segment_rotation() {
+        let mem = Arc::new(MemStorage::new());
+        let j = Journal::open(mem.clone()).unwrap().segment_max_bytes(256);
+        let run_id = crate::util::next_id();
+        j.append(run_id, &JournalEvent::RunSubmitted { workflow: "w".into() }).unwrap();
+        for i in 0..20i64 {
+            let path = format!("main/t{i}");
+            j.append(run_id, &JournalEvent::NodeScheduled {
+                path: path.clone(),
+                template: "op".into(),
+            })
+            .unwrap();
+            j.append(run_id, &JournalEvent::NodeSucceeded {
+                path,
+                key: Some(format!("t{i}")),
+                outputs: outputs(i),
+            })
+            .unwrap();
+        }
+        j.append(run_id, &JournalEvent::RunSucceeded).unwrap();
+        let segs = mem.list(&format!("journal/run{run_id}/")).unwrap();
+        assert!(segs.len() > 1, "256-byte threshold must force rotation: {segs:?}");
+        let rec = j.replay(run_id).unwrap();
+        assert_eq!(rec.workflow, "w");
+        assert_eq!(rec.phase, RunPhase::Succeeded);
+        assert_eq!(rec.nodes.len(), 20);
+        assert_eq!(rec.keyed.len(), 20);
+        assert_eq!(rec.count_phase(NodePhase::Succeeded), 20);
+        assert!(!rec.torn_tail);
+        assert_eq!(rec.events, 42);
+        // idempotent re-replay
+        assert_eq!(j.replay(run_id).unwrap(), rec);
+        assert_eq!(j.run_ids().unwrap(), vec![run_id]);
+        // a second journal handle (a "new process") sees the same state
+        let j2 = Journal::open(mem).unwrap();
+        assert_eq!(j2.replay(run_id).unwrap(), rec);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_later_appends_continue() {
+        let mem = Arc::new(MemStorage::new());
+        let run_id = crate::util::next_id();
+        {
+            let j = Journal::open(mem.clone()).unwrap();
+            j.append(run_id, &JournalEvent::RunSubmitted { workflow: "w".into() }).unwrap();
+            j.append(run_id, &JournalEvent::NodeSucceeded {
+                path: "main/a".into(),
+                key: Some("a".into()),
+                outputs: outputs(1),
+            })
+            .unwrap();
+        }
+        // crash: chop bytes off the (single) segment's tail
+        let key = format!("journal/run{run_id}/seg-00000000");
+        let mut raw = mem.download(&key).unwrap();
+        raw.truncate(raw.len() - 3);
+        mem.upload(&key, &raw).unwrap();
+        let j = Journal::open(mem.clone()).unwrap();
+        let rec = j.replay(run_id).unwrap();
+        assert!(rec.torn_tail);
+        assert_eq!(rec.events, 1, "only the intact prefix survives");
+        assert!(rec.keyed.is_empty());
+        // post-crash appends land in a NEW segment and replay merges both
+        j.append(run_id, &JournalEvent::RunSucceeded).unwrap();
+        assert!(mem.download(&format!("journal/run{run_id}/seg-00000001")).is_ok());
+        let rec2 = j.replay(run_id).unwrap();
+        assert_eq!(rec2.phase, RunPhase::Succeeded);
+        assert_eq!(rec2.events, 2);
+    }
+
+    #[test]
+    fn mid_stream_corruption_is_an_error_not_a_truncation() {
+        let mem = Arc::new(MemStorage::new());
+        let run_id = crate::util::next_id();
+        let j = Arc::new(Journal::open(mem.clone()).unwrap().segment_max_bytes(128));
+        for i in 0..10 {
+            j.append(run_id, &JournalEvent::NodeSkipped { path: format!("main/t{i}") }).unwrap();
+        }
+        let segs = mem.list(&format!("journal/run{run_id}/")).unwrap();
+        assert!(segs.len() >= 2, "need at least two segments: {segs:?}");
+        // tear the FIRST segment: data after it would be orphaned, so this
+        // must be a hard error, not a silent truncation
+        let mut raw = mem.download(&segs[0]).unwrap();
+        raw.truncate(raw.len() - 2);
+        mem.upload(&segs[0], &raw).unwrap();
+        let err = j.replay(run_id).unwrap_err();
+        assert!(err.contains("corrupt mid-stream"), "{err}");
+        // ...but the registry listing stays usable: the unreadable run
+        // reports as a flagged row instead of failing the whole query
+        let rows = RunRegistry::new(Arc::clone(&j)).list_runs().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].message.contains("journal unreadable"), "{}", rows[0].message);
+        assert!(rows[0].torn_tail);
+    }
+
+    #[test]
+    fn missing_middle_segment_is_an_error_not_a_silent_gap() {
+        let mem = Arc::new(MemStorage::new());
+        let run_id = crate::util::next_id();
+        let j = Journal::open(mem.clone()).unwrap().segment_max_bytes(128);
+        for i in 0..10 {
+            j.append(run_id, &JournalEvent::NodeSkipped { path: format!("main/t{i}") }).unwrap();
+        }
+        let segs = mem.list(&format!("journal/run{run_id}/")).unwrap();
+        assert!(segs.len() >= 3, "need at least three segments: {segs:?}");
+        // lose a middle segment object entirely (external damage): the
+        // survivors decode cleanly, but replaying around the hole would
+        // silently drop its records — must be a hard error
+        mem.delete(&segs[1]).unwrap();
+        let err = j.replay(run_id).unwrap_err();
+        assert!(err.contains("missing segment"), "{err}");
+    }
+
+    #[test]
+    fn compact_folds_closed_runs_and_preserves_replay() {
+        let mem = Arc::new(MemStorage::new());
+        let j = Journal::open(mem.clone()).unwrap().segment_max_bytes(256);
+        let run_id = crate::util::next_id();
+        j.append(run_id, &JournalEvent::RunSubmitted { workflow: "w".into() }).unwrap();
+        for i in 0..12i64 {
+            j.append(run_id, &JournalEvent::NodeSucceeded {
+                path: format!("main/t{i}"),
+                key: Some(format!("t{i}")),
+                outputs: outputs(i),
+            })
+            .unwrap();
+        }
+        // an open run refuses to compact
+        assert!(j.compact(run_id).is_err());
+        j.append(run_id, &JournalEvent::RunSucceeded).unwrap();
+        let before = j.replay(run_id).unwrap();
+        let report = j.compact(run_id).unwrap();
+        assert_eq!(report.events_folded, 14);
+        assert!(report.segments_removed >= 2);
+        let keys = mem.list(&format!("journal/run{run_id}/")).unwrap();
+        assert_eq!(keys.len(), 1, "only the snapshot remains: {keys:?}");
+        let after = j.replay(run_id).unwrap();
+        assert_eq!(after.keyed, before.keyed);
+        assert_eq!(after.phase, before.phase);
+        assert_eq!(after.nodes, before.nodes);
+        assert_eq!(after.events, 1, "the snapshot replays as one record");
+        // appends after compaction (a resubmission) merge on top
+        j.append(run_id, &JournalEvent::RunResubmitted { workflow: "w".into() }).unwrap();
+        j.append(run_id, &JournalEvent::RunSucceeded).unwrap();
+        let merged = j.replay(run_id).unwrap();
+        assert_eq!(merged.resubmissions, 1);
+        assert_eq!(merged.phase, RunPhase::Succeeded);
+        assert_eq!(merged.keyed.len(), 12, "snapshot state survives under new events");
+    }
+
+    #[test]
+    fn open_fences_process_ids_above_journaled_runs() {
+        let mem = Arc::new(MemStorage::new());
+        let j = Journal::open(mem.clone()).unwrap();
+        let foreign = crate::util::next_id() + 5_000;
+        j.append(foreign, &JournalEvent::RunSubmitted { workflow: "w".into() }).unwrap();
+        drop(j);
+        let _j2 = Journal::open(mem).unwrap();
+        assert!(
+            crate::util::next_id() > foreign,
+            "a reopened journal must fence fresh ids above journaled runs"
+        );
+    }
+
+    #[test]
+    fn registry_lists_runs_and_filters_timelines() {
+        let mem = Arc::new(MemStorage::new());
+        let j = Arc::new(Journal::open(mem).unwrap());
+        let a = crate::util::next_id();
+        let b = crate::util::next_id();
+        j.append(a, &JournalEvent::RunSubmitted { workflow: "wa".into() }).unwrap();
+        j.append(a, &JournalEvent::NodeSucceeded {
+            path: "main/x".into(),
+            key: Some("x".into()),
+            outputs: outputs(1),
+        })
+        .unwrap();
+        j.append(a, &JournalEvent::RunSucceeded).unwrap();
+        j.append(b, &JournalEvent::RunSubmitted { workflow: "wb".into() }).unwrap();
+        j.append(b, &JournalEvent::NodeFailed { path: "main/y".into(), message: "no".into() })
+            .unwrap();
+        j.append(b, &JournalEvent::RunFailed { message: "main/y: no".into() }).unwrap();
+        let reg = RunRegistry::new(Arc::clone(&j));
+        let runs = reg.list_runs().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].run_id, a);
+        assert_eq!(runs[0].phase, RunPhase::Succeeded);
+        assert_eq!(runs[0].succeeded, 1);
+        assert_eq!(runs[1].phase, RunPhase::Failed);
+        assert_eq!(runs[1].failed, 1);
+        assert_eq!(runs[1].message, "main/y: no");
+        let tl = reg.node_timeline(a, Some("main/x")).unwrap();
+        assert_eq!(tl.len(), 1);
+        assert!(matches!(tl[0].event, JournalEvent::NodeSucceeded { .. }));
+        let all = reg.node_timeline(a, None).unwrap();
+        assert_eq!(all.len(), 3);
+        // JSON exports parse as the shapes the CLI would print
+        let lj = reg.list_runs_json().unwrap();
+        assert_eq!(lj.as_arr().unwrap().len(), 2);
+        let tj = reg.timeline_json(b, None).unwrap();
+        assert_eq!(tj.as_arr().unwrap().len(), 3);
+    }
+}

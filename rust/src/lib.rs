@@ -21,6 +21,11 @@
 //!   surface (§2.8) with local, in-memory and latency-modelled backends,
 //!   plus a content-addressed chunked dedup layer (`storage::cas`) that
 //!   makes step-to-step artifact forwarding a zero-copy manifest ref-bump.
+//! * [`journal`] — the durable run journal: every run-lifecycle transition
+//!   is appended as a checksummed record through the storage plugin
+//!   surface, so a fresh process can replay a crashed run and resubmit it
+//!   with every journaled success reused (`Engine::resubmit`), and a
+//!   `RunRegistry` serves `list_runs`/`get_run`/`node_timeline` queries.
 //! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt` produced by
 //!   the python compile path and executes them on the request path.
 //! * [`science`] — the AOT compute payloads (MD, NN-potential training,
@@ -39,6 +44,7 @@ pub mod core;
 pub mod engine;
 pub mod executor;
 pub mod hpc;
+pub mod journal;
 pub mod jsonx;
 pub mod metrics;
 pub mod runtime;

@@ -6,9 +6,9 @@
 //! lock-free [`Registry`]. The CLI (`dflow get/watch`) and the benches read
 //! these; `timeline_json` exports a Gantt-style view per step.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::jsonx::Json;
@@ -98,6 +98,12 @@ pub struct Registry {
     /// Placement requests failed fast as infeasible (no backend could ever
     /// satisfy them).
     pub placement_rejected: Counter,
+    /// Objects deleted by the engine when reclaiming a failed attempt's
+    /// artifact namespace.
+    pub artifacts_reclaimed: Counter,
+    /// Journal appends that failed (the run keeps going, but its durable
+    /// history has a gap — surfaced so operators notice).
+    pub journal_errors: Counter,
     /// Engine dispatch latency (ready → running).
     pub dispatch: Timer,
     /// OP execution wall time.
@@ -121,6 +127,8 @@ impl Registry {
             ("pods_rejected", Json::n(self.pods_rejected.get() as f64)),
             ("placements", Json::n(self.placements.get() as f64)),
             ("placement_rejected", Json::n(self.placement_rejected.get() as f64)),
+            ("artifacts_reclaimed", Json::n(self.artifacts_reclaimed.get() as f64)),
+            ("journal_errors", Json::n(self.journal_errors.get() as f64)),
             ("dispatch_mean_us", Json::n(self.dispatch.mean().as_secs_f64() * 1e6)),
             ("dispatch_max_us", Json::n(self.dispatch.max().as_secs_f64() * 1e6)),
             ("op_exec_mean_ms", Json::n(self.op_exec.mean().as_secs_f64() * 1e3)),
@@ -154,48 +162,108 @@ pub enum EventKind {
     BackendReleased,
 }
 
-/// One trace record.
+/// One trace record. `seq` is assigned under the ring lock, so it is the
+/// exact insertion order: snapshot consumers can rely on strictly
+/// increasing `seq` even after the ring wrapped and dropped old events
+/// (`at_ms` alone cannot promise that — wall clocks tie and step back).
 #[derive(Debug, Clone)]
 pub struct Event {
+    pub seq: u64,
     pub at_ms: u64,
     pub kind: EventKind,
     pub step: String,
     pub detail: String,
 }
 
-/// Bounded, thread-safe event trace.
+/// Mirror hook invoked once per pushed event, after the event was stored
+/// (outside the ring lock, so a slow sink never blocks other writers on
+/// the ring). The engine uses this to mirror trace events into the durable
+/// run journal (`crate::journal`).
+pub type TraceSink = Arc<dyn Fn(&Event) + Send + Sync>;
+
+/// Ring state guarded by one mutex: the sequence counter lives **inside**
+/// the lock so `seq` order and insertion order can never diverge — the fix
+/// for the wrap-ordering bug where a seq drawn before the lock could be
+/// stored after a later one.
+struct TraceBuf {
+    events: VecDeque<Event>,
+    next_seq: u64,
+}
+
+/// Bounded, thread-safe event trace (O(1) ring eviction).
 pub struct Trace {
-    events: Mutex<Vec<Event>>,
+    buf: Mutex<TraceBuf>,
     cap: usize,
+    /// Mirror sink plus its interest predicate: only kinds the predicate
+    /// accepts are cloned and handed to the sink, so mirroring three
+    /// capacity kinds does not tax every other push with an allocation.
+    sink: Option<(fn(&EventKind) -> bool, TraceSink)>,
 }
 
 impl Trace {
     /// Create a trace holding at most `cap` events (older dropped).
     pub fn new(cap: usize) -> Self {
-        Trace { events: Mutex::new(Vec::new()), cap }
+        Trace::build(cap, None)
     }
 
-    /// Append an event. `cap == 0` disables tracing entirely (hot-path
-    /// fast-out: no lock, no allocation).
+    /// Like [`Trace::new`], with a mirror sink that observes every pushed
+    /// event whose kind `interest` accepts — even when `cap == 0` (ring
+    /// disabled, mirror still fed).
+    pub fn with_sink(cap: usize, interest: fn(&EventKind) -> bool, sink: TraceSink) -> Self {
+        Trace::build(cap, Some((interest, sink)))
+    }
+
+    fn build(cap: usize, sink: Option<(fn(&EventKind) -> bool, TraceSink)>) -> Self {
+        Trace {
+            buf: Mutex::new(TraceBuf { events: VecDeque::new(), next_seq: 0 }),
+            cap,
+            sink,
+        }
+    }
+
+    /// Append an event. `cap == 0` without an interested sink disables
+    /// tracing for this push entirely (hot-path fast-out: no lock, no
+    /// allocation).
     pub fn push(&self, kind: EventKind, step: &str, detail: impl Into<String>) {
-        if self.cap == 0 {
+        let interesting = self.sink.as_ref().map_or(false, |(f, _)| f(&kind));
+        if self.cap == 0 && !interesting {
             return;
         }
-        let mut ev = self.events.lock().unwrap();
-        if ev.len() == self.cap {
-            ev.remove(0);
+        let mut b = self.buf.lock().unwrap();
+        let ev = Event {
+            seq: b.next_seq,
+            at_ms: epoch_ms(),
+            kind,
+            step: step.to_string(),
+            detail: detail.into(),
+        };
+        b.next_seq = b.next_seq.wrapping_add(1);
+        let mirrored = if interesting {
+            self.sink.as_ref().map(|(_, s)| (Arc::clone(s), ev.clone()))
+        } else {
+            None
+        };
+        if self.cap > 0 {
+            if b.events.len() == self.cap {
+                b.events.pop_front();
+            }
+            b.events.push_back(ev);
         }
-        ev.push(Event { at_ms: epoch_ms(), kind, step: step.to_string(), detail: detail.into() });
+        drop(b);
+        if let Some((sink, ev)) = mirrored {
+            sink(&ev);
+        }
     }
 
-    /// Snapshot of current events.
+    /// Snapshot of current events (insertion order; `seq` strictly
+    /// increasing).
     pub fn snapshot(&self) -> Vec<Event> {
-        self.events.lock().unwrap().clone()
+        self.buf.lock().unwrap().events.iter().cloned().collect()
     }
 
     /// Number of stored events.
     pub fn len(&self) -> usize {
-        self.events.lock().unwrap().len()
+        self.buf.lock().unwrap().events.len()
     }
 
     /// True when no events are stored.
@@ -205,9 +273,9 @@ impl Trace {
 
     /// Export a Gantt-style timeline: for each step, start/end/phase.
     pub fn timeline_json(&self) -> Json {
-        let ev = self.events.lock().unwrap();
+        let b = self.buf.lock().unwrap();
         let mut spans: BTreeMap<String, (u64, u64, String)> = BTreeMap::new();
-        for e in ev.iter() {
+        for e in b.events.iter() {
             match e.kind {
                 EventKind::StepRunning => {
                     spans.entry(e.step.clone()).or_insert((e.at_ms, e.at_ms, "Running".into())).0 =
@@ -274,6 +342,54 @@ mod tests {
         let ev = tr.snapshot();
         assert_eq!(ev.len(), 3);
         assert_eq!(ev[0].step, "s2");
+    }
+
+    #[test]
+    fn trace_wrap_keeps_snapshot_order_monotonic_under_concurrent_writers() {
+        // regression: seq is assigned under the ring lock, so even with 8
+        // writers hammering a tiny ring, the snapshot must be in strict
+        // insertion order globally AND per step
+        let tr = Arc::new(Trace::new(64));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let tr = Arc::clone(&tr);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200 {
+                    tr.push(EventKind::StepRunning, &format!("s{t}"), format!("{i}"));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let ev = tr.snapshot();
+        assert_eq!(ev.len(), 64, "ring must hold exactly cap events");
+        for w in ev.windows(2) {
+            assert!(w[0].seq < w[1].seq, "ring wrap broke snapshot ordering");
+        }
+        let mut last: BTreeMap<String, i64> = BTreeMap::new();
+        for e in &ev {
+            let i: i64 = e.detail.parse().unwrap();
+            if let Some(prev) = last.insert(e.step.clone(), i) {
+                assert!(prev < i, "step {} went backwards: {prev} -> {i}", e.step);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_sink_mirrors_even_with_zero_cap_and_honors_interest() {
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let s2 = Arc::clone(&seen);
+        let tr = Trace::with_sink(
+            0,
+            |k| matches!(k, EventKind::PodBound),
+            Arc::new(move |e: &Event| s2.lock().unwrap().push(e.kind.clone())),
+        );
+        tr.push(EventKind::PodBound, "s", "node-1");
+        tr.push(EventKind::StepRunning, "s", "not mirrored");
+        assert!(tr.is_empty(), "cap 0 keeps the ring empty");
+        let got = seen.lock().unwrap().clone();
+        assert_eq!(got, vec![EventKind::PodBound], "only interesting kinds reach the sink");
     }
 
     #[test]

@@ -25,11 +25,19 @@
 //! * **GC.** Failed/cancelled attempts can leave chunks with no manifest
 //!   (each attempt writes under its own `run{}/{path}/a{attempt}` prefix,
 //!   so stale attempt manifests are enumerable and deletable with
-//!   [`CasStore::delete_prefix`]). [`CasStore::gc`] mark-sweeps: every
+//!   [`StorageClient::delete_prefix`]). [`CasStore::gc`] mark-sweeps: every
 //!   manifest reachable from the root is scanned, and `.cas/` chunks no
 //!   manifest references are deleted. Refcounts are rebuilt as a side
 //!   effect, so `gc`/[`CasStore::recover`] also (re)attach a `CasStore`
 //!   to a pre-existing backing store.
+//! * **Persisted refcounts.** The chunk refcount table persists at
+//!   `.casmeta/refs` (`DCR1` encoding): the first in-flight mutation
+//!   deletes it (dirty marker) and the last one re-writes it, both under
+//!   the refcount lock, so the table exists **iff** it is consistent —
+//!   a crash mid-mutation leaves no table rather than a stale one, and an
+//!   emptied store deletes the key outright. [`CasStore::attach`] adopts
+//!   the table without scanning a single manifest; the mark-sweep rebuild
+//!   remains the fallback for legacy, dirty, or torn stores.
 //!
 //! Concurrency: concurrent `upload`s and `copy`s (the engine's hot paths:
 //! parallel slices writing artifacts, stacking forwarding them) are safe —
@@ -63,7 +71,15 @@ pub const CHUNK_MAX: usize = 1024 * 1024;
 const CHUNK_MASK: u64 = (1 << 18) - 1;
 /// Reserved internal namespace on the backing store.
 const CAS_PREFIX: &str = ".cas";
+/// Reserved internal namespace for CAS bookkeeping (the persisted chunk
+/// refcount table) — separate from `.cas/` so chunk enumeration (gc) and
+/// chunk-object counting stay exact.
+const CAS_META_PREFIX: &str = ".casmeta";
+/// Where the refcount table persists (see [`CasStore::attach`]).
+const REFS_KEY: &str = ".casmeta/refs";
 const MANIFEST_MAGIC: &[u8; 4] = b"DCM1";
+/// Refcount-table magic: `DCR1 | u32 n | n × ([32]digest | u64 count)`.
+const REFS_MAGIC: &[u8; 4] = b"DCR1";
 
 // -- content-defined chunking --------------------------------------------------
 
@@ -208,6 +224,50 @@ impl Manifest {
     }
 }
 
+// -- persisted refcount table --------------------------------------------------
+
+/// Encode the chunk refcount table:
+/// `DCR1 | u32 n | n × ([32]digest | u64 count)` (integers little-endian,
+/// digests in sorted order so the encoding is stable).
+fn encode_refs(refs: &BTreeMap<String, u64>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + refs.len() * 40);
+    out.extend_from_slice(REFS_MAGIC);
+    out.extend_from_slice(&(refs.len() as u32).to_le_bytes());
+    for (digest, count) in refs {
+        out.extend_from_slice(digest.as_bytes());
+        out.extend_from_slice(&count.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`encode_refs`]. Strict: any anomaly (bad magic, length
+/// mismatch, non-hex digest, zero count) returns `None` and the caller
+/// falls back to the mark-sweep rebuild — a wrong refcount table could
+/// free shared chunks.
+fn decode_refs(data: &[u8]) -> Option<BTreeMap<String, u64>> {
+    if data.len() < 8 || &data[..4] != REFS_MAGIC {
+        return None;
+    }
+    let n = u32::from_le_bytes(data[4..8].try_into().unwrap()) as usize;
+    if data.len() != 8 + n * 40 {
+        return None;
+    }
+    let mut out = BTreeMap::new();
+    for i in 0..n {
+        let o = 8 + i * 40;
+        let digest = std::str::from_utf8(&data[o..o + 32]).ok()?;
+        if !hex32_ok(digest) {
+            return None;
+        }
+        let count = u64::from_le_bytes(data[o + 32..o + 40].try_into().unwrap());
+        if count == 0 {
+            return None;
+        }
+        out.insert(digest.to_string(), count);
+    }
+    Some(out)
+}
+
 // -- the store -----------------------------------------------------------------
 
 /// Operation counters (all monotonic). The zero-copy guarantee is
@@ -235,6 +295,11 @@ pub struct CasCounters {
     pub manifest_gets: AtomicU64,
     /// Chunks reclaimed by [`CasStore::gc`].
     pub gc_chunks_reclaimed: AtomicU64,
+    /// Refcount-table write-throughs (`.casmeta/refs` uploads/deletes).
+    pub ref_table_writes: AtomicU64,
+    /// Opens that adopted the persisted refcount table instead of
+    /// rebuilding it by scanning every manifest.
+    pub ref_table_loads: AtomicU64,
 }
 
 /// Result of a [`CasStore::gc`] pass.
@@ -256,7 +321,29 @@ pub struct CasStore {
     inner: Arc<dyn StorageClient>,
     /// chunk digest → number of manifest entries referencing it.
     refs: Mutex<BTreeMap<String, u64>>,
+    /// Refcount mutations currently in flight (see [`CasStore::begin_mutation`]).
+    mutators: AtomicU64,
     counters: Arc<CasCounters>,
+}
+
+/// RAII scope for one refcount-mutating operation. The FIRST concurrent
+/// mutator deletes the persisted table (marking the store **dirty**) and
+/// the LAST one re-persists it — both under the refcount lock, with a
+/// quiescence re-check — so a crash anywhere inside a mutation window
+/// leaves NO table and the next `attach` falls back to the manifest scan.
+/// Adopting a stale table would be far worse than a scan: it could free
+/// chunks a post-crash manifest still references, or dedup a fresh upload
+/// against a body an un-persisted release already deleted.
+struct MutationScope<'a> {
+    cas: &'a CasStore,
+}
+
+impl Drop for MutationScope<'_> {
+    fn drop(&mut self) {
+        if self.cas.mutators.fetch_sub(1, Ordering::SeqCst) == 1 {
+            self.cas.persist_refs();
+        }
+    }
 }
 
 impl CasStore {
@@ -265,16 +352,91 @@ impl CasStore {
         CasStore {
             inner,
             refs: Mutex::new(BTreeMap::new()),
+            mutators: AtomicU64::new(0),
             counters: Arc::new(CasCounters::default()),
         }
     }
 
-    /// Wrap a backing store that already holds CAS data, rebuilding chunk
-    /// refcounts from the manifests found in it.
+    /// Enter a refcount-mutation window (see [`MutationScope`]). Fails —
+    /// before any refcount mutated — when the dirty marker cannot be
+    /// placed: proceeding with the stale table still on disk would let a
+    /// crash hand the next `attach` inconsistent refcounts.
+    fn begin_mutation(&self) -> Result<MutationScope<'_>, StorageError> {
+        if self.mutators.fetch_add(1, Ordering::SeqCst) == 0 {
+            // mark dirty under the refs lock so the delete cannot
+            // interleave with a finishing mutator's re-persist
+            let refs = self.refs.lock().unwrap();
+            let marked = super::with_retry(5, || match self.inner.delete(REFS_KEY) {
+                Err(StorageError::NotFound(_)) => Ok(()), // already dirty/absent
+                r => r,
+            });
+            if let Err(e) = marked {
+                drop(refs);
+                // no scope was handed out: undo the count without a
+                // re-persist (nothing mutated, the on-disk table is still
+                // the consistent pre-op state)
+                self.mutators.fetch_sub(1, Ordering::SeqCst);
+                return Err(e);
+            }
+        }
+        Ok(MutationScope { cas: self })
+    }
+
+    /// Wrap a backing store that already holds CAS data. Fast path: adopt
+    /// the refcount table persisted at `.casmeta/refs` — present iff the
+    /// store was quiescent and consistent when last written (see
+    /// [`MutationScope`]) — skipping the full manifest scan. Fallback for
+    /// legacy, dirty (crashed mid-mutation) or torn stores is the
+    /// original [`CasStore::recover`] mark-sweep rebuild, after which the
+    /// table is persisted so the next attach takes the fast path.
     pub fn attach(inner: Arc<dyn StorageClient>) -> Result<CasStore, StorageError> {
         let s = CasStore::new(inner);
-        s.recover()?;
+        if !s.load_persisted_refs()? {
+            s.recover()?;
+        }
         Ok(s)
+    }
+
+    /// Try to adopt the persisted refcount table. `Ok(false)` = absent or
+    /// undecodable (caller falls back to a scan); only real storage
+    /// faults propagate.
+    fn load_persisted_refs(&self) -> Result<bool, StorageError> {
+        let raw = match self.inner.download(REFS_KEY) {
+            Ok(raw) => raw,
+            Err(StorageError::NotFound(_)) => return Ok(false),
+            Err(e) => return Err(e),
+        };
+        match decode_refs(&raw) {
+            Some(table) => {
+                *self.refs.lock().unwrap() = table;
+                self.counters.ref_table_loads.fetch_add(1, Ordering::Relaxed);
+                Ok(true)
+            }
+            None => Ok(false), // torn/legacy table: rebuild by scan
+        }
+    }
+
+    /// Write-through the refcount table to `.casmeta/refs`, **holding the
+    /// refcount lock** so the persisted table is always the newest state
+    /// (two racing persists can never overwrite new with old — the same
+    /// serialize-IO-under-the-lock trade `release_entries` already makes),
+    /// and re-checking quiescence under that lock so a finishing mutator
+    /// can never re-persist over a newer mutator's dirty marker. An
+    /// emptied table deletes the key instead, so a fully-drained store
+    /// leaves zero residue. Best-effort: a persist failure leaves the
+    /// store dirty (the marker was deleted at mutation start), degrading
+    /// the next `attach` to the scan fallback rather than failing this op.
+    fn persist_refs(&self) {
+        let refs = self.refs.lock().unwrap();
+        if self.mutators.load(Ordering::SeqCst) != 0 {
+            return; // a newer mutation window is open; it persists (or stays dirty)
+        }
+        self.counters.ref_table_writes.fetch_add(1, Ordering::Relaxed);
+        if refs.is_empty() {
+            self.inner.delete(REFS_KEY).ok();
+        } else {
+            self.inner.upload(REFS_KEY, &encode_refs(&refs)).ok();
+        }
     }
 
     /// Operation counters.
@@ -297,15 +459,18 @@ impl CasStore {
     }
 
     fn is_internal_key(key: &str) -> bool {
-        key.strip_prefix(CAS_PREFIX)
-            .map_or(false, |rest| rest.is_empty() || rest.starts_with('/'))
+        [CAS_PREFIX, CAS_META_PREFIX].iter().any(|ns| {
+            key.strip_prefix(ns)
+                .map_or(false, |rest| rest.is_empty() || rest.starts_with('/'))
+        })
     }
 
     fn check_user_key(key: &str) -> Result<(), StorageError> {
         validate_key(key)?;
         if Self::is_internal_key(key) {
             return Err(StorageError::Fatal(format!(
-                "storage key '{key}' rejected: '{CAS_PREFIX}' is reserved for CAS internals"
+                "storage key '{key}' rejected: '{CAS_PREFIX}'/'{CAS_META_PREFIX}' are \
+                 reserved for CAS internals"
             )));
         }
         Ok(())
@@ -442,6 +607,9 @@ impl CasStore {
             scanned += 1;
         }
         *self.refs.lock().unwrap() = live;
+        // the rebuilt table becomes the new persisted truth, so the next
+        // attach of this store takes the fast path again
+        self.persist_refs();
         Ok(scanned)
     }
 
@@ -464,24 +632,10 @@ impl CasStore {
         Ok(GcReport { manifests_scanned, chunks_live: live.len(), chunks_reclaimed: reclaimed })
     }
 
-    /// Delete every object under `prefix` (e.g. a cancelled attempt's
-    /// `run{}/{path}/a{n}/` namespace), releasing chunk references.
-    /// Returns the number of objects deleted.
-    pub fn delete_prefix(&self, prefix: &str) -> Result<usize, StorageError> {
-        validate_prefix(prefix)?;
-        if prefix.is_empty() {
-            return Err(StorageError::Fatal(
-                "refusing delete_prefix(\"\"): would delete every object".into(),
-            ));
-        }
-        let keys = self.list(prefix)?;
-        let mut n = 0usize;
-        for k in keys {
-            self.delete(&k)?;
-            n += 1;
-        }
-        Ok(n)
-    }
+    // `delete_prefix` (dropping e.g. a cancelled attempt's
+    // `run{}/{path}/a{n}/` namespace with chunk references released) is the
+    // [`StorageClient`] trait method, overridden below to batch the whole
+    // namespace into one refcount-mutation window.
 }
 
 impl StorageClient for CasStore {
@@ -515,6 +669,7 @@ impl StorageClient for CasStore {
         Self::check_user_key(dst)?;
         let m = self.read_manifest(src)?; // NotFound propagates (contract)
         let old = self.read_manifest_opt(dst)?;
+        let _mutation = self.begin_mutation()?;
         self.acquire_entries(&m.chunks);
         if let Err(e) = self.inner.upload(dst, &m.encode()) {
             self.release_entries(&m.chunks);
@@ -536,9 +691,31 @@ impl StorageClient for CasStore {
     fn delete(&self, key: &str) -> Result<(), StorageError> {
         Self::check_user_key(key)?;
         let m = self.read_manifest(key)?; // NotFound propagates
+        let _mutation = self.begin_mutation()?;
         self.inner.delete(key)?;
         self.release_entries(&m.chunks);
         Ok(())
+    }
+
+    /// Same list + per-key delete loop as the trait default, wrapped in
+    /// ONE refcount-mutation window: a whole attempt namespace costs one
+    /// dirty-mark and one table re-persist instead of one per object
+    /// (the per-key `delete` windows nest inside and no-op).
+    fn delete_prefix(&self, prefix: &str) -> Result<usize, StorageError> {
+        validate_prefix(prefix)?;
+        if prefix.is_empty() {
+            return Err(StorageError::Fatal(
+                "refusing delete_prefix(\"\"): would delete every object".into(),
+            ));
+        }
+        let keys = self.list(prefix)?;
+        let _mutation = self.begin_mutation()?;
+        let mut n = 0usize;
+        for k in keys {
+            self.delete(&k)?;
+            n += 1;
+        }
+        Ok(n)
     }
 
     fn open_read(&self, key: &str) -> Result<Box<dyn Read + Send>, StorageError> {
@@ -558,6 +735,7 @@ impl StorageClient for CasStore {
         // read the old manifest (if any) first, so its chunks can be
         // released once the replacement has landed
         let old = self.read_manifest_opt(key)?;
+        let _mutation = self.begin_mutation()?;
         let mut entries: Vec<ChunkEntry> = Vec::new();
         let mut hash = Md5::new();
         let mut total = 0u64;
@@ -887,6 +1065,105 @@ mod tests {
     }
 
     #[test]
+    fn refs_table_roundtrip_and_strict_decode() {
+        let mut refs = BTreeMap::new();
+        refs.insert("900150983cd24fb0d6963f7d28e17f72".to_string(), 3u64);
+        refs.insert("f96b697d7cb7938d525a2f31aaf161d0".to_string(), 1u64);
+        let enc = encode_refs(&refs);
+        assert_eq!(decode_refs(&enc).unwrap(), refs);
+        assert!(decode_refs(b"NOPE").is_none());
+        assert!(decode_refs(&enc[..enc.len() - 1]).is_none(), "torn table must not decode");
+        let mut zero = enc.clone();
+        zero[8 + 32] = 0; // count 3 -> 0 (little-endian low byte)
+        assert!(decode_refs(&zero).is_none(), "zero counts are invalid");
+        let mut bad = enc;
+        bad[8] = b'!'; // non-hex digest byte
+        assert!(decode_refs(&bad).is_none());
+    }
+
+    #[test]
+    fn attach_adopts_persisted_refs_without_a_scan() {
+        let mem = Arc::new(MemStorage::new());
+        {
+            let cas = CasStore::new(mem.clone());
+            let data = blob(&mut Rng::new(37), 2 * CHUNK_MAX);
+            cas.upload("a", &data).unwrap();
+            cas.copy("a", "b").unwrap();
+        }
+        assert!(mem.download(REFS_KEY).is_ok(), "mutations must write the table through");
+        let cas = CasStore::attach(mem.clone()).unwrap();
+        assert_eq!(
+            cas.counters().ref_table_loads.load(Ordering::Relaxed),
+            1,
+            "attach must take the persisted-table fast path"
+        );
+        // the adopted table protects shared chunks exactly like a scan
+        let data = cas.download("a").unwrap();
+        cas.delete("a").unwrap();
+        assert_eq!(cas.download("b").unwrap(), data);
+        // draining the store removes the table too (zero residue)
+        cas.delete("b").unwrap();
+        assert!(mem.is_empty(), "empty store must leave no refs-table residue");
+    }
+
+    #[test]
+    fn refs_table_is_dirty_marked_while_mutations_are_in_flight() {
+        // the table must exist iff the store is quiescent and consistent:
+        // a crash inside a mutation window leaves NO table (attach then
+        // scans), never a stale one (which could free shared chunks)
+        let mem = Arc::new(MemStorage::new());
+        let cas = CasStore::new(mem.clone());
+        cas.upload("a", &blob(&mut Rng::new(43), CHUNK_MAX)).unwrap();
+        assert!(mem.download(REFS_KEY).is_ok(), "quiescent store persists the table");
+        {
+            let _outer = cas.begin_mutation().unwrap();
+            assert!(
+                matches!(mem.download(REFS_KEY), Err(StorageError::NotFound(_))),
+                "an open mutation window must leave no adoptable table"
+            );
+            {
+                let _inner = cas.begin_mutation().unwrap();
+            }
+            assert!(
+                matches!(mem.download(REFS_KEY), Err(StorageError::NotFound(_))),
+                "an inner mutator's exit must not re-persist under an open outer window"
+            );
+        }
+        assert!(mem.download(REFS_KEY).is_ok(), "closing the last window re-persists");
+        // and the re-persisted table is adoptable again
+        let cas2 = CasStore::attach(mem).unwrap();
+        assert_eq!(cas2.counters().ref_table_loads.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn attach_falls_back_to_scan_for_legacy_stores() {
+        let mem = Arc::new(MemStorage::new());
+        let data = blob(&mut Rng::new(41), 2 * CHUNK_MAX);
+        {
+            let cas = CasStore::new(mem.clone());
+            cas.upload("a", &data).unwrap();
+            cas.copy("a", "b").unwrap();
+        }
+        // legacy store: no persisted table
+        mem.delete(REFS_KEY).unwrap();
+        let cas = CasStore::attach(mem.clone()).unwrap();
+        assert_eq!(
+            cas.counters().ref_table_loads.load(Ordering::Relaxed),
+            0,
+            "no table to adopt: the scan fallback must run"
+        );
+        // the scan rebuilt AND re-persisted the table
+        assert!(mem.download(REFS_KEY).is_ok(), "fallback must persist the rebuilt table");
+        cas.delete("a").unwrap();
+        assert_eq!(cas.download("b").unwrap(), data, "scanned refcounts must protect b");
+        // a corrupt table is also a scan fallback, not an error
+        mem.upload(REFS_KEY, b"DCR1garbage").unwrap();
+        let cas2 = CasStore::attach(mem.clone()).unwrap();
+        assert_eq!(cas2.counters().ref_table_loads.load(Ordering::Relaxed), 0);
+        assert_eq!(cas2.download("b").unwrap(), data);
+    }
+
+    #[test]
     fn streaming_reader_matches_download() {
         let cas = CasStore::new(Arc::new(MemStorage::new()));
         let data = blob(&mut Rng::new(29), 2 * CHUNK_MAX + 777);
@@ -901,6 +1178,8 @@ mod tests {
         let mem = Arc::new(MemStorage::new());
         let cas = CasStore::new(mem.clone());
         assert!(matches!(cas.upload(".cas/x", b"d"), Err(StorageError::Fatal(_))));
+        assert!(matches!(cas.upload(".casmeta/refs", b"d"), Err(StorageError::Fatal(_))));
+        assert!(matches!(cas.download(".casmeta/refs"), Err(StorageError::Fatal(_))));
         cas.upload("visible", &blob(&mut Rng::new(31), CHUNK_MAX)).unwrap();
         let listed = cas.list("").unwrap();
         assert_eq!(listed, vec!["visible".to_string()]);

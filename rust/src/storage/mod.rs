@@ -107,6 +107,27 @@ pub trait StorageClient: Send + Sync {
             "delete('{key}') is not supported by this storage client"
         )))
     }
+    /// Delete every object under `prefix` (e.g. a failed attempt's
+    /// `run{}/{path}/a{n}/` namespace), returning how many were removed.
+    /// The default is `list` + per-key `delete`, which routes through the
+    /// client's own `delete` — over [`CasStore`] each delete releases the
+    /// object's chunk references. An empty prefix is refused: it would
+    /// delete every object in the store.
+    fn delete_prefix(&self, prefix: &str) -> Result<usize, StorageError> {
+        validate_prefix(prefix)?;
+        if prefix.is_empty() {
+            return Err(StorageError::Fatal(
+                "refusing delete_prefix(\"\"): would delete every object".into(),
+            ));
+        }
+        let keys = self.list(prefix)?;
+        let mut n = 0usize;
+        for k in keys {
+            self.delete(&k)?;
+            n += 1;
+        }
+        Ok(n)
+    }
     /// Open a streaming reader over the object. The default buffers the
     /// whole object; [`LocalStorage`] streams from the file and
     /// [`CasStore`] streams chunk by chunk (one chunk in memory at a
@@ -638,6 +659,15 @@ mod tests {
         c.delete("del/x").unwrap();
         assert!(matches!(c.download("del/x"), Err(StorageError::NotFound(_))));
         assert!(matches!(c.delete("del/x"), Err(StorageError::NotFound(_))));
+        // delete_prefix extension (engine-driven failed-attempt cleanup):
+        // removes exactly the namespace, refuses the empty prefix
+        c.upload("att/a0/x", b"1").unwrap();
+        c.upload("att/a0/y", b"2").unwrap();
+        c.upload("att/a1/x", b"3").unwrap();
+        assert_eq!(c.delete_prefix("att/a0/").unwrap(), 2);
+        assert!(matches!(c.download("att/a0/x"), Err(StorageError::NotFound(_))));
+        assert_eq!(c.download("att/a1/x").unwrap(), b"3");
+        assert!(matches!(c.delete_prefix(""), Err(StorageError::Fatal(_))));
         // streaming extension round-trips and agrees with download
         let payload = vec![7u8; 100_000];
         let mut r: &[u8] = &payload;

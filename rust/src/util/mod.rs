@@ -73,6 +73,16 @@ pub fn next_id() -> u64 {
     NEXT_ID.fetch_add(1, Ordering::Relaxed)
 }
 
+/// Raise the process id counter so every id issued from now on is ≥ `n`.
+/// Used by [`crate::journal::Journal::open`]: a journal written by an
+/// earlier process records the run ids that process allocated, and this
+/// process must never re-issue one of them (a collision would interleave
+/// two unrelated runs in one journal stream). No-op when the counter is
+/// already past `n`.
+pub fn ensure_next_id_above(n: u64) {
+    NEXT_ID.fetch_max(n, Ordering::Relaxed);
+}
+
 /// Wall-clock milliseconds since the UNIX epoch.
 pub fn epoch_ms() -> u64 {
     SystemTime::now()
@@ -241,6 +251,38 @@ pub fn md5_hex(data: &[u8]) -> String {
     h.finalize_hex()
 }
 
+// -- CRC-32 (IEEE) ------------------------------------------------------------
+
+const fn build_crc32_table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+}
+
+/// Per-byte CRC-32 values (reflected IEEE polynomial, const-evaluated).
+static CRC32_TABLE: [u32; 256] = build_crc32_table();
+
+/// CRC-32 (IEEE 802.3, the zlib/gzip variant) of a byte slice. Guards the
+/// run-journal record framing against torn tails and bit rot; not for
+/// security.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for b in data {
+        c = (c >> 8) ^ CRC32_TABLE[((c ^ *b as u32) & 0xFF) as usize];
+    }
+    !c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -287,6 +329,27 @@ mod tests {
         let a = next_id();
         let b = next_id();
         assert!(b > a);
+    }
+
+    #[test]
+    fn ensure_next_id_above_fences_the_counter() {
+        let fence = next_id() + 10_000;
+        ensure_next_id_above(fence);
+        assert!(next_id() >= fence);
+        // raising to a lower bound is a no-op
+        let cur = next_id();
+        ensure_next_id_above(1);
+        assert!(next_id() > cur);
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // the classic check value, plus the empty string
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+        // sensitive to every byte
+        assert_ne!(crc32(b"abc"), crc32(b"abd"));
     }
 
     #[test]

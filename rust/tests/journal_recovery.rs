@@ -1,0 +1,302 @@
+//! Journal recovery battery: the kill-and-recover acceptance path (an
+//! engine's in-memory state is dropped mid-workflow, a fresh engine
+//! replays the journal and resubmits, and exactly the non-succeeded
+//! suffix re-executes) plus a property suite that crashes the journal at a
+//! random event boundary and tears the tail at a random byte.
+//!
+//! Run via `make test-journal` (part of `make ci`).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use dflow::check;
+use dflow::core::{
+    ContainerTemplate, Dag, FnOp, OpError, ParamType, Signature, Step, Steps, Workflow,
+};
+use dflow::engine::{Engine, NodePhase, RunPhase};
+use dflow::journal::{
+    decode_segment, frame_record, segment_header, Journal, JournalEvent, Recorded, RunRegistry,
+};
+use dflow::storage::{CasStore, LocalStorage, MemStorage, StorageClient};
+
+/// Per-task execution counter shared with the OP closure.
+type Counts = Arc<Mutex<BTreeMap<String, u32>>>;
+
+/// An n-task dataflow chain `t0 -> t1 -> ... -> t{n-1}`: task `ti`
+/// receives `i` (t0 by constant, the rest from the predecessor's output),
+/// counts its execution, and — while `gate` is set — fails fatally for
+/// `i >= fail_from`, simulating the crash boundary.
+fn chain_workflow(n: usize, counts: Counts, gate: Arc<AtomicBool>, fail_from: usize) -> Workflow {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_param("o", ParamType::Int),
+        move |ctx| {
+            let i = ctx.get_int("i")?;
+            *counts.lock().unwrap().entry(format!("t{i}")).or_insert(0) += 1;
+            if gate.load(Ordering::SeqCst) && i as usize >= fail_from {
+                return Err(OpError::Fatal("simulated crash boundary".into()));
+            }
+            ctx.set("o", i + 1);
+            Ok(())
+        },
+    ));
+    let mut dag = Dag::new("main");
+    for i in 0..n {
+        let mut s = Step::new(&format!("t{i}"), "op").key(&format!("t{i}"));
+        if i == 0 {
+            s = s.param("i", 0i64);
+        } else {
+            s = s.param_from_step("i", &format!("t{}", i - 1), "o");
+        }
+        dag = dag.task(s);
+    }
+    Workflow::new("chain")
+        .container(ContainerTemplate::new("op", op))
+        .dag(dag)
+        .entrypoint("main")
+}
+
+fn counts_of(counts: &Counts) -> BTreeMap<String, u32> {
+    counts.lock().unwrap().clone()
+}
+
+/// The acceptance test: k of n nodes succeed, the engine "process" dies
+/// (every in-memory handle dropped), a fresh `Engine` + `Journal::open`
+/// over the same directory resubmits the run, all n nodes report
+/// Succeeded/Reused, execution counters confirm exactly n−k fresh
+/// executions, and the registry serves the merged pre-/post-crash
+/// timeline.
+#[test]
+fn kill_and_recover_end_to_end() {
+    let dir = std::env::temp_dir().join(format!("dflow-journal-e2e-{}", dflow::util::next_id()));
+    let storage: Arc<dyn StorageClient> = Arc::new(LocalStorage::new(&dir).unwrap());
+    let counts: Counts = Arc::new(Mutex::new(BTreeMap::new()));
+    let gate = Arc::new(AtomicBool::new(true));
+    let (n, k) = (8usize, 5usize);
+    let wf = chain_workflow(n, counts.clone(), gate.clone(), k);
+
+    // "process" 1: the run dies after k successes; every handle drops
+    let run_id = {
+        let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+        let engine = Engine::builder().storage(storage.clone()).journal(journal).build();
+        let r = engine.run(&wf).unwrap();
+        assert!(!r.succeeded(), "the gate must fail the run mid-DAG");
+        assert_eq!(r.run.count_phase(NodePhase::Succeeded), k);
+        r.run.id
+    };
+
+    // "process" 2: fresh journal handle + fresh engine over the same store
+    gate.store(false, Ordering::SeqCst);
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let rec = journal.replay(run_id).unwrap();
+    assert_eq!(rec.phase, RunPhase::Failed);
+    assert_eq!(rec.keyed.len(), k, "exactly the k journaled successes are reusable");
+    assert_eq!(rec.count_phase(NodePhase::Succeeded), k);
+
+    let before = counts_of(&counts);
+    let engine = Engine::builder().storage(storage.clone()).journal(journal.clone()).build();
+    let r2 = engine.resubmit(&wf, run_id).unwrap();
+    assert!(r2.succeeded(), "{:?}", r2.error);
+    assert_eq!(r2.run.id, run_id, "resubmission continues the journaled run id");
+    assert_eq!(r2.run.metrics.steps_reused.get() as usize, k);
+    assert_eq!(
+        r2.run.count_phase(NodePhase::Succeeded) + r2.run.count_phase(NodePhase::Reused),
+        n,
+        "all n nodes must close successfully"
+    );
+    let after = counts_of(&counts);
+    for i in 0..n {
+        let key = format!("t{i}");
+        let delta = after.get(&key).copied().unwrap_or(0) - before.get(&key).copied().unwrap_or(0);
+        if i < k {
+            assert_eq!(delta, 0, "journaled success {key} must not re-execute");
+        } else {
+            assert_eq!(delta, 1, "{key} must execute exactly once on resubmit");
+        }
+    }
+
+    // the registry returns the merged pre- and post-crash event history
+    let registry = RunRegistry::new(journal);
+    let timeline = registry.node_timeline(run_id, None).unwrap();
+    assert!(timeline.iter().any(|r| matches!(r.event, JournalEvent::RunSubmitted { .. })));
+    assert!(timeline.iter().any(|r| matches!(r.event, JournalEvent::RunResubmitted { .. })));
+    let succeeded = timeline
+        .iter()
+        .filter(|r| matches!(r.event, JournalEvent::NodeSucceeded { .. }))
+        .count();
+    assert_eq!(succeeded, n, "pre-crash and post-crash successes must both be present");
+    // per-node merge: t0 succeeded before the crash AND was reused after
+    let t0 = registry.node_timeline(run_id, Some("main/t0")).unwrap();
+    assert!(t0.iter().any(|r| matches!(r.event, JournalEvent::NodeSucceeded { .. })));
+    assert!(t0.iter().any(|r| matches!(r.event, JournalEvent::NodeReused { .. })));
+    let run = registry.get_run(run_id).unwrap();
+    assert_eq!(run.phase, RunPhase::Succeeded);
+    assert_eq!(run.resubmissions, 1);
+    let rows = registry.list_runs().unwrap();
+    assert!(rows.iter().any(|s| s.run_id == run_id && s.phase == RunPhase::Succeeded));
+    fs::remove_dir_all(dir).ok();
+}
+
+/// Property suite (ISSUE satellite): run an n-node DAG to completion,
+/// crash the journal at a **random event boundary**, tear the tail at a
+/// **random byte**, then assert a fresh engine's resubmit re-runs exactly
+/// the non-succeeded suffix — zero re-execution of journaled successes —
+/// and that re-replay is idempotent.
+#[test]
+fn crash_at_random_event_boundary_recovers_exactly_the_suffix() {
+    check::forall_cases("journal crash recovery", 16, |rng| {
+        let n = 4 + rng.below(5) as usize;
+        let mem = Arc::new(MemStorage::new());
+        let storage: Arc<dyn StorageClient> = mem.clone();
+        let counts: Counts = Arc::new(Mutex::new(BTreeMap::new()));
+        let gate = Arc::new(AtomicBool::new(false)); // never fails on its own
+        let wf = chain_workflow(n, counts.clone(), gate, n + 1);
+
+        let run_id = {
+            let journal = Arc::new(
+                Journal::open(storage.clone()).unwrap().segment_max_bytes(512),
+            );
+            let engine = Engine::builder().storage(storage.clone()).journal(journal).build();
+            let r = engine.run(&wf).unwrap();
+            assert!(r.succeeded(), "{:?}", r.error);
+            r.run.id
+        };
+
+        // flatten the journal into per-segment record payloads
+        let prefix = format!("journal/run{run_id}/");
+        let seg_keys = mem.list(&prefix).unwrap();
+        let mut per_seg: Vec<(String, Vec<Vec<u8>>)> = Vec::new();
+        let mut total = 0usize;
+        for key in &seg_keys {
+            let (payloads, torn) = decode_segment(&mem.download(key).unwrap()).unwrap();
+            assert!(torn.is_none(), "a clean run must have no torn tail");
+            total += payloads.len();
+            per_seg.push((key.clone(), payloads));
+        }
+
+        // crash: keep a random prefix of events (≥ the submission record),
+        // then tear the cut segment at a random byte of the next record
+        let cut = 1 + rng.below(total as u64) as usize;
+        let mut kept = 0usize;
+        let mut expect_succeeded: BTreeSet<String> = BTreeSet::new();
+        for (key, payloads) in &per_seg {
+            if kept >= cut {
+                mem.delete(key).unwrap();
+                continue;
+            }
+            let take = payloads.len().min(cut - kept);
+            for p in &payloads[..take] {
+                if let JournalEvent::NodeSucceeded { key: Some(k), .. } =
+                    Recorded::parse(p).unwrap().event
+                {
+                    expect_succeeded.insert(k);
+                }
+            }
+            let mut rebuilt = segment_header();
+            for p in &payloads[..take] {
+                rebuilt.extend_from_slice(&frame_record(p));
+            }
+            if take < payloads.len() {
+                // torn tail: a random-length prefix of the next frame
+                // (length 0 = a crash exactly at the record boundary)
+                let frame = frame_record(&payloads[take]);
+                let torn_len = rng.below(frame.len() as u64) as usize;
+                rebuilt.extend_from_slice(&frame[..torn_len]);
+            }
+            mem.upload(key, &rebuilt).unwrap();
+            kept += take;
+        }
+
+        // a fresh "process" recovers and resubmits
+        let journal = Arc::new(Journal::open(storage.clone()).unwrap().segment_max_bytes(512));
+        let rec = journal.replay(run_id).unwrap();
+        assert_eq!(
+            rec.keyed.keys().cloned().collect::<BTreeSet<_>>(),
+            expect_succeeded,
+            "replay must recover exactly the journaled successes"
+        );
+        let before = counts_of(&counts);
+        let engine = Engine::builder().storage(storage.clone()).journal(journal.clone()).build();
+        let r2 = engine.resubmit(&wf, run_id).unwrap();
+        assert!(r2.succeeded(), "{:?}", r2.error);
+        let after = counts_of(&counts);
+        let mut fresh = 0usize;
+        for i in 0..n {
+            let key = format!("t{i}");
+            let delta =
+                after.get(&key).copied().unwrap_or(0) - before.get(&key).copied().unwrap_or(0);
+            if expect_succeeded.contains(&key) {
+                assert_eq!(delta, 0, "journaled success {key} re-executed");
+            } else {
+                assert_eq!(delta, 1, "{key} must run exactly once on resubmit");
+                fresh += 1;
+            }
+        }
+        assert_eq!(fresh, n - expect_succeeded.len(), "exactly the suffix re-executes");
+        assert_eq!(r2.run.metrics.steps_reused.get() as usize, expect_succeeded.len());
+
+        // idempotent re-replay over the merged pre-/post-crash journal
+        let a = journal.replay(run_id).unwrap();
+        let b = journal.replay(run_id).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.phase, RunPhase::Succeeded);
+        assert_eq!(a.keyed.len(), n, "every node is reusable after recovery");
+    });
+}
+
+/// The journal speaks the plain `StorageClient` surface, so it works
+/// unchanged over the CAS dedup layer — segments and artifacts share one
+/// content-addressed store.
+#[test]
+fn journal_over_cas_storage_recovers_with_full_reuse() {
+    let storage: Arc<dyn StorageClient> = Arc::new(CasStore::new(Arc::new(MemStorage::new())));
+    let counts: Counts = Arc::new(Mutex::new(BTreeMap::new()));
+    let gate = Arc::new(AtomicBool::new(false));
+    let n = 4usize;
+    let wf = chain_workflow(n, counts.clone(), gate, n + 1);
+    let run_id = {
+        let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+        let engine = Engine::builder().storage(storage.clone()).journal(journal).build();
+        let r = engine.run(&wf).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        r.run.id
+    };
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let before = counts_of(&counts);
+    let engine = Engine::builder().storage(storage).journal(journal).build();
+    let r2 = engine.resubmit(&wf, run_id).unwrap();
+    assert!(r2.succeeded(), "{:?}", r2.error);
+    assert_eq!(r2.run.metrics.steps_reused.get() as usize, n, "a finished run fully reuses");
+    assert_eq!(counts_of(&counts), before, "no node may re-execute");
+}
+
+/// Satellite: a failed attempt's artifact namespace is reclaimed by the
+/// engine (ROADMAP CAS follow-up) and the reclamation is journaled.
+#[test]
+fn failed_attempt_namespace_is_reclaimed_and_journaled() {
+    let mem = Arc::new(MemStorage::new());
+    let storage: Arc<dyn StorageClient> = mem.clone();
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let engine = Engine::builder().storage(storage).journal(journal.clone()).build();
+    let op = Arc::new(FnOp::new(Signature::new(), |ctx| {
+        ctx.write_artifact("junk", b"partial output")?;
+        Err(OpError::Fatal("boom after writing".into()))
+    }));
+    let wf = Workflow::new("w")
+        .container(ContainerTemplate::new("boom", op))
+        .steps(Steps::new("main").then(Step::new("s", "boom")))
+        .entrypoint("main");
+    let r = engine.run(&wf).unwrap();
+    assert!(!r.succeeded());
+    let leftovers = mem.list(&format!("run{}/", r.run.id)).unwrap();
+    assert!(leftovers.is_empty(), "failed attempt artifacts must be reclaimed: {leftovers:?}");
+    assert_eq!(r.run.metrics.artifacts_reclaimed.get(), 1);
+    let timeline = RunRegistry::new(journal).node_timeline(r.run.id, None).unwrap();
+    assert!(
+        timeline
+            .iter()
+            .any(|rec| matches!(rec.event, JournalEvent::ArtifactsReclaimed { objects: 1, .. })),
+        "the reclamation itself must be journaled"
+    );
+}

@@ -222,7 +222,10 @@ fn cas_copy_is_manifest_only_on_the_wire() {
     let puts_before = cas.counters().chunk_puts.load(Ordering::Relaxed);
     cas.copy("src", "dst").unwrap();
     let ops_delta = sim.ops.load(Ordering::Relaxed) - ops_before;
-    assert!(ops_delta <= 3, "copy cost {ops_delta} backing ops; manifest-only means <= 3");
+    // read src manifest + probe dst + dirty-mark the refcount table +
+    // write manifest + re-persist the table — still O(manifest), zero
+    // chunk transfers
+    assert!(ops_delta <= 5, "copy cost {ops_delta} backing ops; manifest-only means <= 5");
     assert_eq!(cas.counters().chunk_gets.load(Ordering::Relaxed), gets_before);
     assert_eq!(cas.counters().chunk_puts.load(Ordering::Relaxed), puts_before);
     assert_eq!(cas.download("dst").unwrap(), data);
