@@ -1,12 +1,12 @@
 # Repo CI entrypoints. `make ci` is what a gate should run.
 
-.PHONY: ci fmt-check fmt clippy build test test-placement test-storage test-journal bench
+.PHONY: ci fmt-check fmt clippy build test test-placement test-storage test-journal test-service bench
 
 # `test` runs the full suite (placement + scheduler_stress + the storage
-# battery + journal recovery included via their Cargo.toml [[test]]
-# entries); `test-storage`/`test-journal` re-run their batteries alone as
-# explicit gates.
-ci: fmt-check clippy test test-storage test-journal
+# battery + journal recovery + the service battery included via their
+# Cargo.toml [[test]] entries); `test-storage`/`test-journal`/
+# `test-service` re-run their batteries alone as explicit gates.
+ci: fmt-check clippy test test-storage test-journal test-service
 
 fmt-check:
 	cargo fmt --check
@@ -42,6 +42,15 @@ test-storage: build
 test-journal: build
 	cargo test -q --test journal_recovery
 	cargo test -q --lib journal::
+
+# service control-plane battery: multi-tenant concurrency over shared
+# backends (quotas, fair share, no over-commit), live cancel/retry, the
+# adaptive scheduler pool, and the batched journal appender, plus the
+# service/scheduler unit suites in the lib
+test-service: build
+	cargo test -q --test service
+	cargo test -q --lib service::
+	cargo test -q --lib engine::sched::
 
 bench:
 	cargo bench

@@ -1,0 +1,141 @@
+//! Workflow service control-plane demo: one `WorkflowService` daemon
+//! serving three tenants over shared backends — bounded admission,
+//! per-tenant quotas with fair-share dispatch, a live `cancel` that
+//! releases capacity mid-flight, a `retry` that re-runs only the
+//! non-succeeded suffix, journal `watch` streaming, and the maintenance
+//! tick auto-compacting closed runs.
+//!
+//! Run with: `cargo run --example service_demo`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dflow::cluster::{Cluster, Resources};
+use dflow::core::{
+    ContainerTemplate, FnOp, ParamType, Signature, Slices, Step, Steps, Value, Workflow,
+};
+use dflow::engine::{Backend, Engine, RunPhase};
+use dflow::hpc::{HpcScheduler, PartitionSpec};
+use dflow::journal::{Appender, Journal};
+use dflow::service::{ServiceConfig, WorkflowService};
+use dflow::storage::MemStorage;
+
+fn fanout(name: &str, slices: i64, step_ms: u64) -> Workflow {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        move |ctx| {
+            let x = ctx.get_int("x")?;
+            for _ in 0..(step_ms / 5).max(1) {
+                ctx.checkpoint()?; // cooperative: a service cancel stops us here
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            ctx.set("y", x * x);
+            Ok(())
+        },
+    ));
+    Workflow::new(name)
+        .container(ContainerTemplate::new("op", op).resources(Resources::cpu(500)))
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "op")
+                        .param("x", Value::ints(0..slices))
+                        .slices(Slices::over("x").stack("y").parallelism(16)),
+                )
+                .out_param_from("ys", "fan", "y"),
+        )
+        .entrypoint("main")
+}
+
+fn main() {
+    // shared infrastructure: a k8s-sim cluster, an HPC partition, local slots
+    let cluster = Arc::new(Cluster::uniform(4, Resources::cpu(2000), 0));
+    let slurm = HpcScheduler::new(vec![PartitionSpec::new("batch", 6, Duration::from_secs(60))]);
+    let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+    let engine = Arc::new(
+        Engine::builder()
+            .backend(Backend::cluster("k8s", cluster.clone()))
+            .backend(Backend::partition("hpc", slurm, "batch"))
+            .backend(Backend::local_slots("edge", 4))
+            // journal writes land in background batches (one segment
+            // upload per drained batch, not one per event)
+            .journal_appender(Appender::spawn(Arc::clone(&journal)))
+            .parallelism(8)
+            .adaptive_cap(64)
+            .build(),
+    );
+    let config = ServiceConfig {
+        max_live_runs: 4,
+        default_tenant_quota: 2,
+        queue_cap: 32,
+        maintenance_interval: Duration::from_millis(200),
+        compaction_grace: Duration::from_millis(200),
+        ..ServiceConfig::default()
+    };
+    let svc = WorkflowService::start(engine.clone(), config).unwrap();
+
+    // three tenants pile on; admission + fair-share decide who runs when
+    println!("== submissions ==");
+    let mut ids = Vec::new();
+    for tenant in ["alice", "bob", "carol"] {
+        for i in 0..3 {
+            let id = svc.submit(tenant, fanout(&format!("{tenant}-{i}"), 12, 20)).unwrap();
+            println!("  {tenant} submitted run {id}");
+            ids.push(id);
+        }
+    }
+    let victim = svc.submit("alice", fanout("alice-victim", 16, 400)).unwrap();
+    println!("  alice submitted run {victim} (we will cancel this one)");
+    println!("  {} runs admitted into the bounded queue", ids.len() + 1);
+
+    // watch the victim until it is live, then cancel it mid-flight
+    std::thread::sleep(Duration::from_millis(300));
+    svc.cancel(victim, "demo: operator changed plans").ok();
+    println!("\n== cancel ==\n  requested cancel of run {victim}");
+
+    assert!(svc.wait_idle(Duration::from_secs(120)), "service never drained");
+    let rec = svc.registry().get_run(victim).unwrap();
+    println!("  run {victim} closed as {:?} ({})", rec.phase, rec.message);
+
+    // retry: journaled successes are reused, only the rest re-runs
+    if rec.phase == RunPhase::Cancelled {
+        println!("\n== retry ==");
+        svc.retry("alice", fanout("alice-victim", 16, 400), victim).unwrap();
+        assert!(svc.wait_idle(Duration::from_secs(120)));
+        let rec = svc.registry().get_run(victim).unwrap();
+        println!(
+            "  run {victim} retried under the same id: {:?}, {} nodes reused, \
+             resubmissions={}",
+            rec.phase,
+            rec.count_phase(dflow::engine::NodePhase::Reused),
+            rec.resubmissions,
+        );
+    }
+
+    // the maintenance tick compacts closed runs (run it once explicitly)
+    svc.maintenance_tick();
+
+    println!("\n== registry ==");
+    for row in svc.registry().list_runs().unwrap() {
+        println!(
+            "  run {:<20} {:<14} {:?}  nodes={} events={}",
+            row.run_id, row.workflow, row.phase, row.nodes, row.events
+        );
+    }
+
+    println!("\n== control plane ==");
+    println!("{}", svc.status_json().to_string_pretty());
+
+    println!("\n== backends (shared, never over-committed) ==");
+    for s in engine.backend_stats() {
+        println!(
+            "  {:<6} placed={:<4} peak={:<3} inflight={}  [{}]",
+            s.name, s.placed, s.peak_inflight, s.inflight, s.capacity
+        );
+    }
+    let sched = engine.scheduler_stats();
+    println!(
+        "\nadaptive pool: size={} hard_cap={} peak_workers={}",
+        sched.size, sched.hard_cap, sched.peak_spawned
+    );
+}

@@ -1,0 +1,188 @@
+//! C5 — workflow service control plane: submission throughput through
+//! admission control, time-to-first-node under N concurrent runs, and the
+//! batched vs per-event journal append cost (the fan-out hot-spot fix).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dflow::bench_util::Bench;
+use dflow::core::{
+    ContainerTemplate, FnOp, ParamType, Signature, Slices, Step, Steps, Value, Workflow,
+};
+use dflow::engine::{Backend, Engine};
+use dflow::journal::{Appender, Journal, JournalEvent, RunRegistry};
+use dflow::service::{ServiceConfig, WorkflowService};
+use dflow::storage::{CountingStorage, MemStorage, StorageClient};
+
+fn small_dag(name: &str, work_ms: u64) -> Workflow {
+    let op = Arc::new(FnOp::new(
+        Signature::new().out_param("v", ParamType::Int),
+        move |ctx| {
+            if work_ms > 0 {
+                std::thread::sleep(Duration::from_millis(work_ms));
+            }
+            ctx.set("v", 1i64);
+            Ok(())
+        },
+    ));
+    Workflow::new(name)
+        .container(ContainerTemplate::new("op", op))
+        .steps(
+            Steps::new("main")
+                .then(Step::new("a", "op"))
+                .then(Step::new("b", "op"))
+                .then(Step::new("c", "op")),
+        )
+        .entrypoint("main")
+}
+
+fn fanout(name: &str, width: i64) -> Workflow {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        |ctx| {
+            ctx.set("y", ctx.get_int("x")? * 2);
+            Ok(())
+        },
+    ));
+    Workflow::new(name)
+        .container(ContainerTemplate::new("op", op))
+        .steps(
+            Steps::new("main").then(
+                Step::new("fan", "op")
+                    .param("x", Value::ints(0..width))
+                    .slices(Slices::over("x").stack("y").parallelism(16)),
+            ),
+        )
+        .entrypoint("main")
+}
+
+fn main() {
+    let mut b = Bench::new("c5: service control plane — admission, latency, batched journal");
+
+    // 1) submission throughput: how fast does admission accept work?
+    {
+        let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+        let engine = Arc::new(
+            Engine::builder().backend(Backend::local_slots("box", 16)).journal(journal).build(),
+        );
+        let config = ServiceConfig {
+            max_live_runs: 16,
+            default_tenant_quota: 16,
+            queue_cap: 4096,
+            ..ServiceConfig::default()
+        };
+        let svc = WorkflowService::start(engine, config).unwrap();
+        let n = 256usize;
+        let t = b
+            .case(&format!("admit {n} submissions (3-node runs, 4 tenants)"), || {
+                for i in 0..n {
+                    let tenant = ["t0", "t1", "t2", "t3"][i % 4];
+                    svc.submit(tenant, small_dag(&format!("wf-{i}"), 0)).unwrap();
+                }
+            })
+            .1;
+        b.metric("submission throughput", n as f64 / t.as_secs_f64(), "submits/s");
+        let drained = svc.wait_idle(Duration::from_secs(300));
+        assert!(drained, "service never drained");
+        let rows = RunRegistry::new(Arc::clone(svc.journal())).list_runs().unwrap();
+        b.row("runs journaled", &format!("{}", rows.len()));
+    }
+
+    // 2) time-to-first-node under N concurrent runs: submit N at once,
+    //    measure submit→first-NodeStarted latency per run via the journal
+    {
+        let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+        let engine = Arc::new(
+            Engine::builder().backend(Backend::local_slots("box", 8)).journal(journal).build(),
+        );
+        let n = 16usize;
+        let config = ServiceConfig {
+            max_live_runs: n,
+            default_tenant_quota: n,
+            queue_cap: 1024,
+            ..ServiceConfig::default()
+        };
+        let svc = WorkflowService::start(engine, config).unwrap();
+        let t0 = Instant::now();
+        let submitted_ms = dflow::util::epoch_ms();
+        let ids: Vec<u64> = (0..n)
+            .map(|i| svc.submit("bench", small_dag(&format!("lat-{i}"), 10)).unwrap())
+            .collect();
+        assert!(svc.wait_idle(Duration::from_secs(300)), "never drained");
+        let wall = t0.elapsed();
+        let mut first_starts = Vec::new();
+        for id in &ids {
+            let events = svc.journal().events(*id).unwrap().0;
+            if let Some(rec) = events
+                .iter()
+                .find(|r| matches!(r.event, JournalEvent::NodeStarted { .. }))
+            {
+                first_starts.push(rec.at_ms.saturating_sub(submitted_ms));
+            }
+        }
+        first_starts.sort_unstable();
+        let mean = first_starts.iter().sum::<u64>() as f64 / first_starts.len().max(1) as f64;
+        let worst = first_starts.last().copied().unwrap_or(0);
+        b.row(
+            &format!("{n} concurrent 3-node runs"),
+            &format!("all finished in {:.0} ms", wall.as_secs_f64() * 1e3),
+        );
+        b.metric("time-to-first-node (mean)", mean, "ms");
+        b.metric("time-to-first-node (worst)", worst as f64, "ms");
+    }
+
+    // 3) batched vs per-event journal append cost for a 100-event fan-out
+    {
+        let width = 40i64; // ~3 events per slice + run envelope ≈ 123 events
+
+        let sync_counting = Arc::new(CountingStorage::new(Arc::new(MemStorage::new())));
+        let sync_journal = Arc::new(
+            Journal::open(Arc::clone(&sync_counting) as Arc<dyn StorageClient>).unwrap(),
+        );
+        let sync_engine = Engine::builder().journal(Arc::clone(&sync_journal)).build();
+        let (r1, t_sync) = b.case("fan-out, per-event (sync) journal", || {
+            sync_engine.run(&fanout("sync", width)).unwrap()
+        });
+        assert!(r1.succeeded());
+        let sync_uploads = sync_counting.uploads.load(std::sync::atomic::Ordering::Relaxed);
+
+        let batch_counting = Arc::new(CountingStorage::new(Arc::new(MemStorage::new())));
+        let batch_journal = Arc::new(
+            Journal::open(Arc::clone(&batch_counting) as Arc<dyn StorageClient>).unwrap(),
+        );
+        let appender =
+            Appender::with_config(Arc::clone(&batch_journal), 4096, Duration::from_millis(2));
+        let batch_engine =
+            Engine::builder().journal_appender(Arc::clone(&appender)).build();
+        let (r2, t_batch) = b.case("fan-out, batched background appender", || {
+            let r = batch_engine.run(&fanout("batched", width)).unwrap();
+            appender.flush();
+            r
+        });
+        assert!(r2.succeeded());
+        let batch_uploads = batch_counting.uploads.load(std::sync::atomic::Ordering::Relaxed);
+
+        let events = sync_journal.replay(r1.run.id).unwrap().events;
+        b.row("events journaled per run", &format!("{events}"));
+        b.row(
+            "segment uploads",
+            &format!("sync {sync_uploads} vs batched {batch_uploads}"),
+        );
+        b.metric(
+            "upload reduction",
+            sync_uploads as f64 / batch_uploads.max(1) as f64,
+            "x",
+        );
+        b.metric(
+            "run wall-clock ratio (sync/batched)",
+            t_sync.as_secs_f64() / t_batch.as_secs_f64().max(1e-9),
+            "x",
+        );
+        b.row("appender batches", &format!("{}", appender.batches()));
+        assert!(
+            batch_uploads * 5 <= sync_uploads,
+            "acceptance: batched appender must reduce uploads ≥5× \
+             ({batch_uploads} vs {sync_uploads})"
+        );
+    }
+}

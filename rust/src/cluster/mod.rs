@@ -13,7 +13,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::{Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::jsonx::Json;
 use crate::util::{next_id, Rng};
@@ -262,6 +262,35 @@ impl Cluster {
     /// forever on a condvar nobody will ever signal usefully again.
     pub fn bind_blocking(&self, pod: &PodSpec) -> Option<PodBinding> {
         self.bind_within(pod, None)
+    }
+
+    /// Like [`Cluster::bind_blocking`], but gives up (returning `None`
+    /// without binding) once `keep_waiting` turns false — the cancellable
+    /// wait run cancellation needs, so a cancelled run's steps stop
+    /// queuing for pods other runs are using. Re-polls on a short timeout:
+    /// cancellation has no handle on this condvar.
+    pub fn bind_blocking_while(
+        &self,
+        pod: &PodSpec,
+        keep_waiting: &dyn Fn() -> bool,
+    ) -> Option<PodBinding> {
+        let mut state = self.state.lock().unwrap();
+        loop {
+            match Self::try_bind_locked(&mut state, pod) {
+                ScheduleResult::Bound(b) => return Some(b),
+                ScheduleResult::Infeasible => return None,
+                ScheduleResult::Unschedulable => {
+                    if !keep_waiting() {
+                        return None;
+                    }
+                    let (st, _) = self
+                        .freed
+                        .wait_timeout(state, Duration::from_millis(25))
+                        .unwrap();
+                    state = st;
+                }
+            }
+        }
     }
 
     /// [`Cluster::bind_blocking`] with an optional deadline: returns `None`

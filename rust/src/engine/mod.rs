@@ -32,7 +32,7 @@ use crate::core::{
     OpTemplate, Operand, ParamSrc, Slices, Step, StepPolicy, Value, Workflow,
 };
 use crate::executor::{Executor, LocalExecutor};
-use crate::journal::{Journal, JournalEvent};
+use crate::journal::{Journal, JournalEvent, JournalSink};
 use crate::metrics::EventKind;
 use crate::storage::{copy_with_retry, CasStore, MemStorage, StorageClient};
 use crate::util::Stopwatch;
@@ -41,8 +41,9 @@ pub use place::{
     Backend, BackendCapacity, BackendStats, PlaceError, PlaceRequest, PlacementLease, Placer,
 };
 pub use run::{NodePhase, NodeStatus, ReusedStep, RunPhase, Semaphore, StepOutputs, WorkflowRun};
+pub use sched::SchedulerStats;
 
-use sched::{ScopeHandle, StepScheduler};
+use sched::{blocked_scope, ScopeHandle, StepScheduler};
 
 /// Sibling-output view handed to steps: names map to shared (`Arc`) step
 /// outputs, so propagating a completed step's outputs to a dependent is one
@@ -54,6 +55,13 @@ type SiblingMap = BTreeMap<String, Arc<StepOutputs>>;
 pub struct EngineConfig {
     /// Default cap on concurrent leaf executions per run.
     pub parallelism: usize,
+    /// Hard cap on scheduler worker threads. The pool targets
+    /// `parallelism` *unblocked* workers and may grow toward this bound
+    /// while workers sit in external capacity waits (cluster pod binds,
+    /// backend placements, HPC job completions), so a latency-bound
+    /// fan-out cannot monopolize a small pool — the ROADMAP "adaptive
+    /// pool" item. Set equal to `parallelism` to disable growth.
+    pub adaptive_cap: usize,
     /// Name of the default executor (must be registered).
     pub default_executor: String,
     /// Event-trace capacity per run.
@@ -66,6 +74,7 @@ impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
             parallelism: 64,
+            adaptive_cap: 512,
             default_executor: "local".to_string(),
             trace_cap: 100_000,
             workdir_root: std::env::temp_dir().join("dflow-work"),
@@ -88,10 +97,12 @@ pub struct Engine {
     /// routed through it; the engine-level `cluster` is then *not*
     /// consulted for those steps (each backend carries its own capacity).
     pub(crate) placer: Option<Arc<Placer>>,
-    /// Durable run journal (present when attached). Every run this engine
-    /// drives appends its lifecycle transitions here, and
-    /// [`Engine::resubmit`] replays it to reuse journaled successes.
+    /// Durable run journal (present when attached). [`Engine::resubmit`]
+    /// and the registry read/replay through this handle.
     pub(crate) journal: Option<Arc<Journal>>,
+    /// Where runs *write* their lifecycle events: the journal itself
+    /// (synchronous) or a batching [`crate::journal::Appender`].
+    pub(crate) sink: Option<Arc<dyn JournalSink>>,
 }
 
 /// Builder for [`Engine`].
@@ -102,6 +113,7 @@ pub struct EngineBuilder {
     executors: BTreeMap<String, Arc<dyn Executor>>,
     backends: Vec<Backend>,
     journal: Option<Arc<Journal>>,
+    sink: Option<Arc<dyn JournalSink>>,
     config: EngineConfig,
 }
 
@@ -163,7 +175,20 @@ impl EngineBuilder {
     /// [`Journal::replay`] a crashed run and [`Engine::resubmit`] it with
     /// every journaled success reused.
     pub fn journal(mut self, j: Arc<Journal>) -> Self {
+        self.sink = Some(Arc::clone(&j) as Arc<dyn JournalSink>);
         self.journal = Some(j);
+        self
+    }
+
+    /// Attach a journal through a bounded background
+    /// [`crate::journal::Appender`]: run events enqueue and land in
+    /// batches (one segment upload per drained batch instead of one per
+    /// event — the fan-out hot-spot fix), while replay/resubmit still read
+    /// the appender's underlying [`Journal`]. Terminal run events flush
+    /// synchronously, so a finished run's outcome is always durable.
+    pub fn journal_appender(mut self, a: Arc<crate::journal::Appender>) -> Self {
+        self.journal = Some(Arc::clone(a.journal()));
+        self.sink = Some(a as Arc<dyn JournalSink>);
         self
     }
 
@@ -179,9 +204,18 @@ impl EngineBuilder {
         self
     }
 
+    /// Hard cap on adaptive scheduler growth (see
+    /// [`EngineConfig::adaptive_cap`]); clamped to at least `parallelism`
+    /// at build time.
+    pub fn adaptive_cap(mut self, n: usize) -> Self {
+        self.config.adaptive_cap = n;
+        self
+    }
+
     /// Finalize.
     pub fn build(self) -> Engine {
-        let sched = StepScheduler::new(self.config.parallelism);
+        let sched =
+            StepScheduler::with_hard_cap(self.config.parallelism, self.config.adaptive_cap);
         let placer = if self.backends.is_empty() {
             None
         } else {
@@ -196,8 +230,22 @@ impl EngineBuilder {
             sched,
             placer,
             journal: self.journal,
+            sink: self.sink,
         }
     }
+}
+
+/// Options for [`Engine::submit_with_options`].
+#[derive(Default)]
+pub struct SubmitOptions {
+    /// Steps to splice in by key (§2.5).
+    pub reuse: Vec<ReusedStep>,
+    /// Adopt this run id instead of allocating a fresh one (the service
+    /// pre-allocates ids at admission; retries re-enter their journaled
+    /// stream).
+    pub run_id: Option<u64>,
+    /// Journal `RunResubmitted` instead of `RunSubmitted`.
+    pub resubmission: bool,
 }
 
 /// Handle to an asynchronously submitted run: watch `run` live, `wait()`
@@ -261,6 +309,7 @@ impl Engine {
             .collect(),
             backends: Vec::new(),
             journal: None,
+            sink: None,
             config: EngineConfig::default(),
         }
     }
@@ -282,7 +331,7 @@ impl Engine {
         reuse: Vec<ReusedStep>,
     ) -> Result<RunResult, String> {
         wf.validate()?;
-        let run = self.new_run(wf, reuse, None);
+        let run = self.new_run(wf, reuse, None, false);
         self.drive(wf, run)
     }
 
@@ -306,7 +355,7 @@ impl Engine {
             ));
         }
         wf.validate()?;
-        let run = self.new_run(wf, rec.reusable_steps(), Some(run_id));
+        let run = self.new_run(wf, rec.reusable_steps(), Some(run_id), true);
         self.drive(wf, run)
     }
 
@@ -316,7 +365,8 @@ impl Engine {
         &self,
         wf: &Workflow,
         reuse: Vec<ReusedStep>,
-        resubmit_of: Option<u64>,
+        run_id: Option<u64>,
+        resubmission: bool,
     ) -> Arc<WorkflowRun> {
         let parallelism = wf.parallelism.unwrap_or(self.config.parallelism);
         let run = Arc::new(WorkflowRun::with_journal(
@@ -324,12 +374,15 @@ impl Engine {
             parallelism,
             reuse.into_iter().map(|r| (r.key, r.outputs)).collect(),
             self.config.trace_cap,
-            self.journal.clone(),
-            resubmit_of,
+            self.sink.clone(),
+            run_id,
         ));
-        run.journal_event(|| match resubmit_of {
-            None => JournalEvent::RunSubmitted { workflow: run.workflow_name.clone() },
-            Some(_) => JournalEvent::RunResubmitted { workflow: run.workflow_name.clone() },
+        run.journal_event(|| {
+            if resubmission {
+                JournalEvent::RunResubmitted { workflow: run.workflow_name.clone() }
+            } else {
+                JournalEvent::RunSubmitted { workflow: run.workflow_name.clone() }
+            }
         });
         run
     }
@@ -348,8 +401,21 @@ impl Engine {
         wf: Workflow,
         reuse: Vec<ReusedStep>,
     ) -> Result<Submitted, String> {
+        self.submit_with_options(wf, SubmitOptions { reuse, ..SubmitOptions::default() })
+    }
+
+    /// Async submit with full control — the service control plane's entry
+    /// point: `run_id` pre-adopts an id (so a queued submission is
+    /// addressable before it starts, and a retry re-enters its journaled
+    /// stream), `resubmission` journals `RunResubmitted` instead of
+    /// `RunSubmitted`.
+    pub fn submit_with_options(
+        self: &Arc<Self>,
+        wf: Workflow,
+        opts: SubmitOptions,
+    ) -> Result<Submitted, String> {
         wf.validate()?;
-        let run = self.new_run(&wf, reuse, None);
+        let run = self.new_run(&wf, opts.reuse, opts.run_id, opts.resubmission);
         let engine = self.clone();
         let run2 = run.clone();
         let handle = std::thread::Builder::new()
@@ -381,6 +447,16 @@ impl Engine {
                 run.journal_event(|| JournalEvent::RunSucceeded);
                 (o, None)
             }
+            Err(e) if run.is_cancelled() => {
+                // every failure under a cancelled run — the interrupted
+                // OPs, the never-started steps — traces back to the
+                // cancel, so the run closes Cancelled, not Failed
+                let reason = run.cancel_reason();
+                run.set_phase(RunPhase::Cancelled);
+                run.trace.push(EventKind::WorkflowFailed, "", format!("cancelled: {reason}"));
+                run.journal_event(|| JournalEvent::RunCancelled { reason: reason.clone() });
+                (StepOutputs::default(), Some(e))
+            }
             Err(e) => {
                 run.set_phase(RunPhase::Failed);
                 run.trace.push(EventKind::WorkflowFailed, "", e.clone());
@@ -411,6 +487,12 @@ impl Engine {
     /// Per-backend placement statistics (empty without a placement layer).
     pub fn backend_stats(&self) -> Vec<BackendStats> {
         self.placer.as_ref().map(|p| p.stats()).unwrap_or_default()
+    }
+
+    /// Adaptive scheduler-pool snapshot (size / hard cap / live / blocked
+    /// / peak workers).
+    pub fn scheduler_stats(&self) -> SchedulerStats {
+        self.sched.stats()
     }
 }
 
@@ -776,6 +858,10 @@ impl<'e> Exec<'e> {
         parent_path: &str,
     ) -> StepOutcome {
         let path = format!("{parent_path}/{}", step.name);
+        // a cancelled run starts no new steps
+        if self.run.is_cancelled() {
+            return self.cancel_step(step, &path);
+        }
         // condition (§2.2)
         if let Some(when) = &step.when {
             let resolve = |o: &Operand| -> Option<Value> {
@@ -827,6 +913,11 @@ impl<'e> Exec<'e> {
         path: &str,
         key: Option<String>,
     ) -> StepOutcome {
+        // slices route here per slice without re-entering execute_step:
+        // re-check so a cancel mid-fan-out stops launching new slices
+        if self.run.is_cancelled() {
+            return self.cancel_step(step, path);
+        }
         // reuse (§2.5)
         if let Some(k) = &key {
             if let Some(prev) = self.run.reuse.get(k) {
@@ -878,7 +969,34 @@ impl<'e> Exec<'e> {
         }
     }
 
+    /// Close a step that never ran because its run was cancelled: the node
+    /// reads `Failed` with a "run cancelled" message, the journal records
+    /// `NodeCancelled` (not `NodeFailed` — replay/timeline must tell an OP
+    /// failure from a control-plane stop), and — unlike [`fail_step`] —
+    /// `continue_on_failed` does NOT swallow it: the whole template is
+    /// coming down.
+    fn cancel_step(&self, step: &Step, path: &str) -> StepOutcome {
+        let reason = self.run.cancel_reason();
+        self.run.set_node(path, &step.template, NodePhase::Failed, None);
+        let msg = format!("run cancelled: {reason}");
+        self.run.node_message(path, &msg);
+        self.run.trace.push(EventKind::StepFailed, path, msg.clone());
+        self.run.journal_event(|| JournalEvent::NodeCancelled {
+            path: path.to_string(),
+            reason: msg.clone(),
+        });
+        StepOutcome::Failed(format!("{path}: {msg}"))
+    }
+
     fn fail_step(&self, step: &Step, path: &str, err: String) -> StepOutcome {
+        // under a cancelled run, every step failure traces back to the
+        // cancel (interrupted OPs fail at their checkpoints, waits give
+        // up) — journal those as NodeCancelled, not NodeFailed, so the
+        // timeline can tell an OP failure from a control-plane stop, and
+        // per-node accounting matches the run's Cancelled phase
+        if self.run.is_cancelled() {
+            return self.cancel_step(step, path);
+        }
         self.run.set_node(path, &step.template, NodePhase::Failed, None);
         self.run.node_message(path, &err);
         self.run.metrics.steps_failed.inc();
@@ -1322,7 +1440,10 @@ impl<'e> Exec<'e> {
                 }
                 Err(e) => e,
             };
-            let retryable = err.is_transient() && attempt < policy.retries;
+            // a cancelled run stops retrying: the failure is already the
+            // cancellation's doing (or about to be superseded by it)
+            let retryable =
+                err.is_transient() && attempt < policy.retries && !self.run.is_cancelled();
             if !retryable {
                 return Err(format!("{path}: {err}"));
             }
@@ -1395,7 +1516,18 @@ impl<'e> Exec<'e> {
         ready_at: Instant,
         attempt: u32,
     ) -> Result<StepOutputs, OpError> {
-        self.run.sem.acquire();
+        // Cancellable permit wait. Deliberately NOT a `blocked_scope`:
+        // the semaphore is the run's own concurrency choice, so growing
+        // the pool for it would cascade-spawn threads on every DAG wider
+        // than its parallelism. Adaptive growth is reserved for *external*
+        // capacity waits (pod binds, placements, HPC jobs), where the
+        // parked worker is genuinely waiting on another system.
+        if !self.run.sem.try_acquire_while(|| !self.run.is_cancelled()) {
+            return Err(OpError::Fatal(format!(
+                "run cancelled: {}",
+                self.run.cancel_reason()
+            )));
+        }
         // the scheduling permit stays with THIS frame: on timeout the step
         // has officially failed and the workflow must keep making progress
         // (seed semantics), so the permit frees when one_attempt returns
@@ -1416,7 +1548,11 @@ impl<'e> Exec<'e> {
                 executor = Arc::clone(exec);
                 if let Some(cluster) = &self.engine.cluster {
                     let pod = pod_spec_for(path, ct);
-                    match cluster.bind_blocking(&pod) {
+                    let bound = {
+                        let _wait = blocked_scope();
+                        cluster.bind_blocking_while(&pod, &|| !self.run.is_cancelled())
+                    };
+                    match bound {
                         Some(b) => {
                             self.run.metrics.pods_scheduled.inc();
                             self.run.trace.push(EventKind::PodBound, path, b.node.clone());
@@ -1426,6 +1562,14 @@ impl<'e> Exec<'e> {
                                 binding: b,
                                 path: path.to_string(),
                             });
+                        }
+                        None if self.run.is_cancelled() => {
+                            // gave up the pod wait because the run was
+                            // cancelled — no binding was taken
+                            return Err(OpError::Fatal(format!(
+                                "run cancelled: {}",
+                                self.run.cancel_reason()
+                            )));
                         }
                         None => {
                             self.run.metrics.pods_rejected.inc();
@@ -1447,8 +1591,20 @@ impl<'e> Exec<'e> {
                     node_selector: ct.node_selector.clone(),
                     selector: backend_sel.cloned().unwrap_or_default(),
                 };
-                match placer.place_blocking(&req) {
-                    Ok(lease) => {
+                let placed = {
+                    let _wait = blocked_scope();
+                    placer.place_blocking_while(&req, &|| !self.run.is_cancelled())
+                };
+                match placed {
+                    Ok(None) => {
+                        // cancelled while waiting for capacity: no lease
+                        // was ever taken, nothing to release
+                        return Err(OpError::Fatal(format!(
+                            "run cancelled: {}",
+                            self.run.cancel_reason()
+                        )));
+                    }
+                    Ok(Some(lease)) => {
                         self.run.metrics.placements.inc();
                         if let Some(node) = lease.pod_node() {
                             self.run.metrics.pods_scheduled.inc();
@@ -1514,6 +1670,13 @@ impl<'e> Exec<'e> {
             ),
             cancel: crate::core::CancelToken::new(),
         };
+
+        // a run-level cancel reaches this attempt through its token: if
+        // the run was cancelled while we acquired capacity, the token
+        // fires immediately (insert-then-check in the registration) and
+        // the cooperative OP exits at its first checkpoint, returning the
+        // pod/lease through the normal guards
+        let _token = self.run.register_cancel_token(&ctx.cancel);
 
         self.run.journal_event(|| JournalEvent::NodeStarted { path: path.to_string(), attempt });
 
@@ -2394,6 +2557,46 @@ mod tests {
         assert!(!r.succeeded());
         assert_eq!(flaky.attempts.load(Ordering::Relaxed), 1);
         assert!(r.run.placements().is_empty(), "override must not consume a placement");
+    }
+
+    #[test]
+    fn cancel_stops_live_run_and_releases_leases() {
+        let engine = Arc::new(Engine::builder().backend(Backend::local_slots("b", 2)).build());
+        let op = Arc::new(FnOp::new(Signature::new(), |ctx| {
+            for _ in 0..1000 {
+                ctx.checkpoint()?; // cooperative: observes the cancel token
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Ok(())
+        }));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("slow", op))
+            .steps(Steps::new("main").then_parallel(vec![
+                Step::new("a", "slow"),
+                Step::new("b", "slow"),
+                // queued behind the 2 slots: must give up its capacity
+                // wait instead of parking until slots free
+                Step::new("c", "slow"),
+            ]))
+            .entrypoint("main");
+        let sub = engine.submit(wf).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(sub.run.cancel("operator asked"));
+        let r = sub.wait();
+        assert!(!r.succeeded());
+        assert_eq!(r.run.phase(), RunPhase::Cancelled);
+        assert_eq!(r.run.cancel_reason(), "operator asked");
+        // every lease returns exactly once when the cancelled OPs stop
+        let backend = engine.placer().unwrap().backend("b").unwrap().clone();
+        let mut drained = false;
+        for _ in 0..400 {
+            if backend.inflight() == 0 {
+                drained = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(drained, "cancelled OPs never returned their leases");
     }
 
     #[test]

@@ -445,11 +445,29 @@ impl Placer {
     /// including when it *becomes* infeasible mid-wait (e.g. the last
     /// fitting cluster node is cordoned).
     pub fn place_blocking(&self, req: &PlaceRequest) -> Result<PlacementLease, PlaceError> {
+        match self.place_blocking_while(req, &|| true)? {
+            Some(lease) => Ok(lease),
+            None => unreachable!("keep_waiting is constant true"),
+        }
+    }
+
+    /// Like [`Placer::place_blocking`], but gives up (returning
+    /// `Ok(None)`, no lease taken) once `keep_waiting` turns false — the
+    /// cancellable wait run cancellation needs so a cancelled run's steps
+    /// stop queuing for capacity another run may be using.
+    pub fn place_blocking_while(
+        &self,
+        req: &PlaceRequest,
+        keep_waiting: &dyn Fn() -> bool,
+    ) -> Result<Option<PlacementLease>, PlaceError> {
         let mut guard = self.shared.lock.lock().unwrap();
         loop {
             match self.try_place_locked(req)? {
-                Some(lease) => return Ok(lease),
+                Some(lease) => return Ok(Some(lease)),
                 None => {
+                    if !keep_waiting() {
+                        return Ok(None);
+                    }
                     // bounded wait: lease drops notify, but capacity can
                     // also free through paths that don't (see PlacerShared)
                     let (g, _) = self

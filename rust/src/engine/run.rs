@@ -2,10 +2,12 @@
 //! observable surface behind `dflow get/watch` and `query_step` (§2.5).
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
-use crate::core::{ArtifactRef, Value};
-use crate::journal::{Journal, JournalEvent};
+use crate::core::{ArtifactRef, CancelToken, Value};
+use crate::journal::{JournalEvent, JournalSink};
 use crate::jsonx::Json;
 use crate::metrics::{Event, EventKind, Registry, Trace};
 use crate::util::epoch_ms;
@@ -111,6 +113,11 @@ pub enum RunPhase {
     Running,
     Succeeded,
     Failed,
+    /// The run was cancelled mid-flight (`WorkflowRun::cancel` — the
+    /// service control plane's `dflow cancel`): in-flight OPs were stopped
+    /// through their cancel tokens, pending steps never started, and every
+    /// pod/lease was released when its OP actually stopped.
+    Cancelled,
 }
 
 /// Counting semaphore (leaf-execution concurrency cap).
@@ -132,6 +139,27 @@ impl Semaphore {
             p = self.cv.wait(p).unwrap();
         }
         *p -= 1;
+    }
+
+    /// Like [`Semaphore::acquire`], but gives up (returning `false`) once
+    /// `keep_waiting` turns false — the cancellable wait run cancellation
+    /// needs so a cancelled run's pending steps stop queuing for permits.
+    /// Re-polls on a short timeout: cancellation has no handle on this
+    /// condvar, and a bounded re-check beats threading a second condvar
+    /// through every cancel site.
+    pub fn try_acquire_while(&self, keep_waiting: impl Fn() -> bool) -> bool {
+        let mut p = self.permits.lock().unwrap();
+        loop {
+            if *p > 0 {
+                *p -= 1;
+                return true;
+            }
+            if !keep_waiting() {
+                return false;
+            }
+            let (g, _) = self.cv.wait_timeout(p, Duration::from_millis(20)).unwrap();
+            p = g;
+        }
     }
 
     /// Return a permit.
@@ -170,9 +198,20 @@ pub struct WorkflowRun {
     /// observability: the per-run placement split; retries count once per
     /// attempt since each attempt is placed anew).
     pub(crate) placements: Mutex<BTreeMap<String, u64>>,
-    /// Durable event journal this run mirrors its lifecycle into (`None`
-    /// = in-memory only, the pre-journal behavior).
-    pub(crate) journal: Option<Arc<Journal>>,
+    /// Durable event journal (or batching appender) this run mirrors its
+    /// lifecycle into (`None` = in-memory only, the pre-journal behavior).
+    pub(crate) journal: Option<Arc<dyn JournalSink>>,
+    /// Set by [`WorkflowRun::cancel`]: pending steps stop starting, permit
+    /// and placement waits give up, and live attempts' cancel tokens fire.
+    pub(crate) cancelled: AtomicBool,
+    /// Why the run was cancelled (empty until it is).
+    pub(crate) cancel_reason: Mutex<String>,
+    /// Cancel tokens of attempts currently executing, so a run-level
+    /// cancel propagates into every in-flight OP (which releases its
+    /// pod/lease when it actually stops — the same guard discipline as
+    /// timeouts).
+    pub(crate) live_tokens: Mutex<BTreeMap<u64, CancelToken>>,
+    token_serial: AtomicU64,
 }
 
 impl WorkflowRun {
@@ -196,7 +235,7 @@ impl WorkflowRun {
         parallelism: usize,
         reuse: BTreeMap<String, StepOutputs>,
         trace_cap: usize,
-        journal: Option<Arc<Journal>>,
+        journal: Option<Arc<dyn JournalSink>>,
         id_override: Option<u64>,
     ) -> Self {
         let id = id_override.unwrap_or_else(crate::util::next_id);
@@ -246,7 +285,58 @@ impl WorkflowRun {
             sem: Semaphore::new(parallelism),
             placements: Mutex::new(BTreeMap::new()),
             journal,
+            cancelled: AtomicBool::new(false),
+            cancel_reason: Mutex::new(String::new()),
+            live_tokens: Mutex::new(BTreeMap::new()),
+            token_serial: AtomicU64::new(0),
         }
+    }
+
+    /// Cancel this run: pending steps stop starting, steps waiting for
+    /// permits or placements give up, and every in-flight attempt's cancel
+    /// token fires so cooperative OPs stop at their next checkpoint (their
+    /// pods/leases are released when they actually stop — exactly the
+    /// timeout discipline). Returns `false` when the run was already
+    /// cancelled or already terminal. The run then closes with
+    /// [`RunPhase::Cancelled`] and a `RunCancelled` journal record.
+    pub fn cancel(&self, reason: &str) -> bool {
+        if !matches!(self.phase(), RunPhase::Running) {
+            return false;
+        }
+        if self.cancelled.swap(true, Ordering::SeqCst) {
+            return false;
+        }
+        *self.cancel_reason.lock().unwrap() =
+            if reason.is_empty() { "cancelled".to_string() } else { reason.to_string() };
+        self.trace.push(EventKind::RunCancelRequested, "", reason);
+        for t in self.live_tokens.lock().unwrap().values() {
+            t.cancel();
+        }
+        true
+    }
+
+    /// Has [`WorkflowRun::cancel`] been called?
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+
+    /// The reason passed to [`WorkflowRun::cancel`] (empty if none yet).
+    pub fn cancel_reason(&self) -> String {
+        self.cancel_reason.lock().unwrap().clone()
+    }
+
+    /// Register an in-flight attempt's cancel token so a run-level cancel
+    /// reaches it; the registration drops when the attempt frame exits. A
+    /// token registered after the run was already cancelled fires
+    /// immediately (the insert-then-check order closes the race with a
+    /// concurrent `cancel`).
+    pub(crate) fn register_cancel_token(&self, token: &CancelToken) -> TokenRegistration<'_> {
+        let id = self.token_serial.fetch_add(1, Ordering::Relaxed);
+        self.live_tokens.lock().unwrap().insert(id, token.clone());
+        if self.is_cancelled() {
+            token.cancel();
+        }
+        TokenRegistration { run: self, id }
     }
 
     /// Append an event to the attached journal, if any. Takes a closure so
@@ -449,6 +539,18 @@ impl WorkflowRun {
     }
 }
 
+/// Unregisters an attempt's cancel token when the attempt frame exits.
+pub(crate) struct TokenRegistration<'a> {
+    run: &'a WorkflowRun,
+    id: u64,
+}
+
+impl Drop for TokenRegistration<'_> {
+    fn drop(&mut self) {
+        self.run.live_tokens.lock().unwrap().remove(&self.id);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -476,6 +578,36 @@ mod tests {
             h.join().unwrap();
         }
         assert!(peak.load(Ordering::SeqCst) <= 2);
+    }
+
+    #[test]
+    fn cancel_fires_live_tokens_and_unblocks_permit_waits() {
+        let run = WorkflowRun::new("w", 1, BTreeMap::new(), 1000);
+        let tok = CancelToken::new();
+        let reg = run.register_cancel_token(&tok);
+        assert!(!tok.is_cancelled());
+        assert!(run.cancel("operator asked"));
+        assert!(tok.is_cancelled(), "cancel must fire live attempt tokens");
+        assert!(run.is_cancelled());
+        assert!(!run.cancel("again"), "second cancel is a no-op");
+        drop(reg);
+        assert!(run.live_tokens.lock().unwrap().is_empty(), "registration must unregister");
+        // a token registered after the cancel fires immediately
+        let late = CancelToken::new();
+        let _reg2 = run.register_cancel_token(&late);
+        assert!(late.is_cancelled());
+        // permit waits give up instead of parking forever
+        run.sem.acquire(); // drain the only permit
+        assert!(!run.sem.try_acquire_while(|| !run.is_cancelled()));
+        assert_eq!(run.cancel_reason(), "operator asked");
+    }
+
+    #[test]
+    fn cancel_after_terminal_phase_is_refused() {
+        let run = WorkflowRun::new("w", 1, BTreeMap::new(), 1000);
+        run.set_phase(RunPhase::Succeeded);
+        assert!(!run.cancel("too late"));
+        assert!(!run.is_cancelled());
     }
 
     #[test]

@@ -42,6 +42,24 @@
 //! size is honored, and a helper thread draining jobs can never push live
 //! OP concurrency above the configured cap.
 //!
+//! ## Adaptive growth (ROADMAP "adaptive pool" item)
+//!
+//! A worker that parks in an **external capacity wait** — a cluster pod
+//! bind, a backend placement, an HPC job's completion — contributes
+//! nothing to throughput while it waits,
+//! yet it occupies one of the pool's `size` lanes. A latency-bound fan-out
+//! (2000 slices each waiting ~seconds on an HPC partition) on a small pool
+//! would otherwise serialize into `ceil(k/size)` waves, and in a
+//! multi-tenant service one run's parked fan-out would starve every other
+//! run sharing the engine. Blocking call sites wrap themselves in
+//! [`blocked_scope`]: while the guard lives, the worker does not count
+//! against `size`, so the pool may spawn replacement workers up to a hard
+//! cap ([`StepScheduler::with_hard_cap`]). When the wait ends the surplus
+//! drains itself — the next workers to go idle retire until the unblocked
+//! count is back at `size`. Growth never violates OP-concurrency caps:
+//! those are enforced by the per-run semaphore and the backends' own
+//! capacity probes, not by the worker count.
+//!
 //! Downstream of this pool sits the multi-backend placement layer
 //! (`engine::place`): a worker running a leaf job additionally acquires a
 //! backend lease before executing the OP. Requests that could never be
@@ -49,14 +67,22 @@
 //! fail-fast), so an infeasible task never takes a scheduling permit or
 //! parks a worker in a capacity wait.
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 
 #[allow(unused_imports)] // doc links
 use super::EngineConfig;
+
+thread_local! {
+    /// The pool this thread is a worker of, when it is one. Lets blocking
+    /// call sites deep in the engine/executors ([`blocked_scope`]) find
+    /// their pool without threading a handle through every signature.
+    static CURRENT_POOL: RefCell<Option<Weak<PoolInner>>> = const { RefCell::new(None) };
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -77,8 +103,16 @@ struct QueueState {
     jobs: VecDeque<QueuedJob>,
     /// Workers currently parked on the condvar.
     idle: usize,
-    /// Workers spawned so far (never exceeds the pool size).
+    /// Live worker threads (bounded by `size + blocked`, and by
+    /// `hard_cap` absolutely).
     spawned: usize,
+    /// Workers currently inside a [`blocked_scope`] capacity wait; they
+    /// do not count against the pool's configured size.
+    blocked: usize,
+    /// Highest `spawned` ever observed (adaptive-growth observability).
+    peak_spawned: usize,
+    /// Monotonic counter for worker thread names.
+    spawn_serial: usize,
     shutdown: bool,
 }
 
@@ -86,7 +120,10 @@ struct PoolInner {
     state: Mutex<QueueState>,
     /// Woken on: new job, job completion, shutdown.
     cv: Condvar,
+    /// Target number of *unblocked* workers.
     size: usize,
+    /// Absolute bound on live workers, blocked ones included.
+    hard_cap: usize,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
@@ -94,24 +131,40 @@ impl PoolInner {
     fn push(inner: &Arc<PoolInner>, job: QueuedJob) {
         let mut st = inner.state.lock().unwrap();
         st.jobs.push_back(job);
-        // spawn when the backlog exceeds the parked workers — comparing
-        // against `idle == 0` alone would let a single parked worker
-        // absorb a whole burst of pushes and serve it at concurrency 1
-        if st.jobs.len() > st.idle && st.spawned < inner.size {
+        Self::maybe_spawn_locked(inner, &mut st);
+        drop(st);
+        inner.cv.notify_all();
+    }
+
+    /// Spawn one worker if the backlog warrants it: there is queued work no
+    /// parked worker will absorb (comparing against `idle == 0` alone would
+    /// let a single parked worker absorb a whole burst of pushes and serve
+    /// it at concurrency 1), the unblocked-worker count is below the pool
+    /// size, and the hard cap has room. Called with the state lock held.
+    fn maybe_spawn_locked(inner: &Arc<PoolInner>, st: &mut QueueState) {
+        if st.jobs.len() > st.idle
+            && st.spawned < inner.size + st.blocked
+            && st.spawned < inner.hard_cap
+        {
             st.spawned += 1;
-            let id = st.spawned;
+            st.peak_spawned = st.peak_spawned.max(st.spawned);
+            st.spawn_serial += 1;
+            let id = st.spawn_serial;
             let pool = Arc::clone(inner);
             let handle = std::thread::Builder::new()
                 .name(format!("dflow-sched-{id}"))
                 .spawn(move || pool.worker_loop())
                 .expect("spawn scheduler worker");
-            inner.handles.lock().unwrap().push(handle);
+            let mut handles = inner.handles.lock().unwrap();
+            // retired workers leave finished handles behind; sweep them so
+            // a long-lived adaptive pool doesn't accumulate one per spawn
+            handles.retain(|h| !h.is_finished());
+            handles.push(handle);
         }
-        drop(st);
-        inner.cv.notify_all();
     }
 
-    fn worker_loop(&self) {
+    fn worker_loop(self: Arc<PoolInner>) {
+        CURRENT_POOL.with(|c| *c.borrow_mut() = Some(Arc::downgrade(&self)));
         loop {
             let job = {
                 let mut st = self.state.lock().unwrap();
@@ -121,6 +174,13 @@ impl PoolInner {
                     }
                     if let Some(j) = st.jobs.pop_front() {
                         break j;
+                    }
+                    // no work: retire if this worker is surplus — the pool
+                    // grew while others were blocked and the unblock left
+                    // more unblocked workers than the configured size
+                    if st.spawned > self.size + st.blocked {
+                        st.spawned -= 1;
+                        return;
                     }
                     st.idle += 1;
                     st = self.cv.wait(st).unwrap();
@@ -235,32 +295,111 @@ impl Drop for ScopeGuard<'_> {
     }
 }
 
+/// Marks the current pool worker as blocked on an external capacity wait
+/// (cluster pod bind, backend placement, HPC job completion) for the
+/// guard's lifetime. While blocked, the worker
+/// does not count against the pool's configured size, so the pool may
+/// spawn replacement workers up to its hard cap — the adaptive-growth rule
+/// that keeps latency-bound fan-outs from monopolizing a small pool. On a
+/// thread that is not a pool worker this is a no-op.
+pub(crate) fn blocked_scope() -> BlockedGuard {
+    let pool = CURRENT_POOL.with(|c| c.borrow().as_ref().and_then(Weak::upgrade));
+    if let Some(p) = &pool {
+        let mut st = p.state.lock().unwrap();
+        st.blocked += 1;
+        // queued work this worker was implicitly "holding a lane" for may
+        // now warrant a replacement
+        PoolInner::maybe_spawn_locked(p, &mut st);
+        drop(st);
+        p.cv.notify_all();
+    }
+    BlockedGuard { pool }
+}
+
+/// RAII for [`blocked_scope`]; unblocking lets surplus workers retire the
+/// next time they go idle.
+pub(crate) struct BlockedGuard {
+    pool: Option<Arc<PoolInner>>,
+}
+
+impl Drop for BlockedGuard {
+    fn drop(&mut self) {
+        if let Some(p) = &self.pool {
+            let mut st = p.state.lock().unwrap();
+            st.blocked -= 1;
+            drop(st);
+            // wake parked workers so a surplus one re-evaluates retirement
+            p.cv.notify_all();
+        }
+    }
+}
+
+/// Snapshot of the pool's adaptive state (observability / tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedulerStats {
+    /// Configured unblocked-worker target (`EngineConfig::parallelism`).
+    pub size: usize,
+    /// Absolute worker bound, blocked workers included.
+    pub hard_cap: usize,
+    /// Live worker threads right now.
+    pub spawned: usize,
+    /// Workers currently inside a capacity wait.
+    pub blocked: usize,
+    /// Highest live-worker count ever observed.
+    pub peak_spawned: usize,
+}
+
 /// The engine-wide bounded worker pool. See the module docs.
 pub struct StepScheduler {
     inner: Arc<PoolInner>,
 }
 
 impl StepScheduler {
-    /// Pool with at most `workers` threads (min 1), spawned lazily.
+    /// Pool with at most `workers` threads (min 1), spawned lazily. No
+    /// adaptive growth: the hard cap equals the size.
     pub fn new(workers: usize) -> Self {
+        StepScheduler::with_hard_cap(workers, workers)
+    }
+
+    /// Pool targeting `workers` unblocked threads, allowed to grow to
+    /// `hard_cap` total threads while workers sit in [`blocked_scope`]
+    /// capacity waits.
+    pub fn with_hard_cap(workers: usize, hard_cap: usize) -> Self {
+        let size = workers.max(1);
         StepScheduler {
             inner: Arc::new(PoolInner {
                 state: Mutex::new(QueueState {
                     jobs: VecDeque::new(),
                     idle: 0,
                     spawned: 0,
+                    blocked: 0,
+                    peak_spawned: 0,
+                    spawn_serial: 0,
                     shutdown: false,
                 }),
                 cv: Condvar::new(),
-                size: workers.max(1),
+                size,
+                hard_cap: hard_cap.max(size),
                 handles: Mutex::new(Vec::new()),
             }),
         }
     }
 
-    /// Maximum number of worker threads this pool will ever spawn.
+    /// Maximum number of worker threads this pool keeps unblocked.
     pub fn worker_cap(&self) -> usize {
         self.inner.size
+    }
+
+    /// Adaptive-state snapshot.
+    pub fn stats(&self) -> SchedulerStats {
+        let st = self.inner.state.lock().unwrap();
+        SchedulerStats {
+            size: self.inner.size,
+            hard_cap: self.inner.hard_cap,
+            spawned: st.spawned,
+            blocked: st.blocked,
+            peak_spawned: st.peak_spawned,
+        }
     }
 
     /// Run `f` with a submission handle; returns only after every job
@@ -379,6 +518,86 @@ mod tests {
         });
         // 3 pool workers + the scope owner helping while it waits
         assert!(peak.load(Ordering::SeqCst) <= 4, "peak {}", peak.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn pool_grows_past_size_while_workers_block_and_shrinks_after() {
+        // 8 jobs all park in a blocked_scope "capacity wait": a static
+        // 2-worker pool could only ever have 2 of them waiting at once;
+        // the adaptive pool must grow until all 8 wait concurrently, then
+        // retire the surplus once they unblock.
+        let sched = StepScheduler::with_hard_cap(2, 32);
+        let release = Arc::new((Mutex::new(false), Condvar::new()));
+        let entered = Arc::new(AtomicUsize::new(0));
+        let grown = sched.scope(|scope| {
+            for _ in 0..8 {
+                let release = Arc::clone(&release);
+                let entered = Arc::clone(&entered);
+                scope.submit(move || {
+                    let _b = blocked_scope();
+                    entered.fetch_add(1, Ordering::SeqCst);
+                    let (m, cv) = &*release;
+                    let mut done = m.lock().unwrap();
+                    while !*done {
+                        done = cv.wait(done).unwrap();
+                    }
+                });
+            }
+            let mut grown = 0;
+            for _ in 0..1000 {
+                grown = entered.load(Ordering::SeqCst);
+                if grown == 8 {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            // release BEFORE asserting so a failed growth can't hang the
+            // scope drain forever
+            let (m, cv) = &*release;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+            grown
+        });
+        assert_eq!(grown, 8, "adaptive pool failed to grow past its size");
+        let stats = sched.stats();
+        assert!(stats.peak_spawned > 2, "peak {} never exceeded size", stats.peak_spawned);
+        assert!(stats.peak_spawned <= 32, "peak {} exceeded hard cap", stats.peak_spawned);
+        // surplus workers retire once unblocked and idle
+        let mut shrunk = sched.stats().spawned;
+        for _ in 0..1000 {
+            shrunk = sched.stats().spawned;
+            if shrunk <= 2 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(shrunk <= 2, "pool kept {shrunk} workers after the waits ended");
+        assert_eq!(sched.stats().blocked, 0);
+    }
+
+    #[test]
+    fn adaptive_growth_respects_hard_cap() {
+        let sched = StepScheduler::with_hard_cap(1, 3);
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        sched.scope(|scope| {
+            for _ in 0..9 {
+                let (live, peak) = (&live, &peak);
+                scope.submit(move || {
+                    let _b = blocked_scope();
+                    let cur = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(cur, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(15));
+                    live.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+        });
+        // 3 capped workers + the scope owner helping while it waits (a
+        // helper thread is not a pool worker, so blocked_scope is a no-op
+        // there and it is not bounded by the cap)
+        let p = peak.load(Ordering::SeqCst);
+        assert!(p <= 4, "peak {p} exceeds hard cap 3 (+1 helping owner)");
+        assert!(p >= 2, "peak {p}: pool never grew past size 1");
     }
 
     #[test]

@@ -155,8 +155,15 @@ impl Executor for DispatcherExecutor {
         // must only be released once the OP has actually stopped. The job
         // closure and cooperative OPs observe the shared cancel token, so
         // a cancelled attempt still terminates promptly; walltime is the
-        // backstop for non-cooperative OPs.
-        let (state, _, msg) = self.sched.wait(id);
+        // backstop for non-cooperative OPs. The wait is an external
+        // capacity wait — the HPC partition runs the job, this thread only
+        // sits — so it marks itself blocked and lets the scheduler pool
+        // backfill the lane (adaptive growth): a wide latency-bound HPC
+        // fan-out no longer serializes into pool-sized waves.
+        let (state, _, msg) = {
+            let _wait = crate::engine::sched::blocked_scope();
+            self.sched.wait(id)
+        };
         if ctx.cancel.is_cancelled() {
             return Err(OpError::Fatal("cancelled during HPC job execution".into()));
         }

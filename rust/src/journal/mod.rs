@@ -62,8 +62,10 @@
 //! `get_run` and `node_timeline` (the merged pre- and post-crash event
 //! history of a run), each with a JSON export via [`crate::jsonx`].
 
-use std::collections::{BTreeMap, BTreeSet};
-use std::sync::{Arc, Mutex};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use crate::engine::{NodePhase, ReusedStep, RunPhase, StepOutputs};
 use crate::jsonx::Json;
@@ -151,6 +153,9 @@ pub enum JournalEvent {
     RunResubmitted { workflow: String },
     RunSucceeded,
     RunFailed { message: String },
+    /// The run was cancelled mid-flight (`WorkflowRun::cancel`, via the
+    /// service control plane's `cancel(run_id)` / `dflow cancel`).
+    RunCancelled { reason: String },
     /// A step instance entered the execution path (template resolved).
     NodeScheduled { path: String, template: String },
     /// A leaf attempt started executing (capacity acquired).
@@ -207,6 +212,7 @@ fn run_phase_str(p: RunPhase) -> &'static str {
         RunPhase::Running => "Running",
         RunPhase::Succeeded => "Succeeded",
         RunPhase::Failed => "Failed",
+        RunPhase::Cancelled => "Cancelled",
     }
 }
 
@@ -215,6 +221,7 @@ fn run_phase_from(s: &str) -> Option<RunPhase> {
         "Running" => RunPhase::Running,
         "Succeeded" => RunPhase::Succeeded,
         "Failed" => RunPhase::Failed,
+        "Cancelled" => RunPhase::Cancelled,
         _ => return None,
     })
 }
@@ -243,6 +250,7 @@ impl JournalEvent {
             JournalEvent::RunResubmitted { .. } => "RunResubmitted",
             JournalEvent::RunSucceeded => "RunSucceeded",
             JournalEvent::RunFailed { .. } => "RunFailed",
+            JournalEvent::RunCancelled { .. } => "RunCancelled",
             JournalEvent::NodeScheduled { .. } => "NodeScheduled",
             JournalEvent::NodeStarted { .. } => "NodeStarted",
             JournalEvent::NodePlaced { .. } => "NodePlaced",
@@ -286,6 +294,9 @@ impl JournalEvent {
             JournalEvent::RunSucceeded => {}
             JournalEvent::RunFailed { message } => {
                 fields.push(("message", Json::s(message.clone())));
+            }
+            JournalEvent::RunCancelled { reason } => {
+                fields.push(("reason", Json::s(reason.clone())));
             }
             JournalEvent::NodeScheduled { path, template } => {
                 fields.push(("path", Json::s(path.clone())));
@@ -353,6 +364,7 @@ impl JournalEvent {
             "RunResubmitted" => JournalEvent::RunResubmitted { workflow: j_str(j, "workflow")? },
             "RunSucceeded" => JournalEvent::RunSucceeded,
             "RunFailed" => JournalEvent::RunFailed { message: j_str(j, "message")? },
+            "RunCancelled" => JournalEvent::RunCancelled { reason: j_str(j, "reason")? },
             "NodeScheduled" => JournalEvent::NodeScheduled {
                 path: j_str(j, "path")?,
                 template: j_str(j, "template")?,
@@ -577,6 +589,10 @@ impl RecoveredRun {
                 self.phase = RunPhase::Failed;
                 self.message = message.clone();
             }
+            JournalEvent::RunCancelled { reason } => {
+                self.phase = RunPhase::Cancelled;
+                self.message = reason.clone();
+            }
             JournalEvent::NodeScheduled { path, template } => {
                 let n = self.node(path);
                 n.template = template.clone();
@@ -689,6 +705,9 @@ impl RecoveredRun {
 struct RunWriter {
     seg: Option<u64>,
     buf: Vec<u8>,
+    /// Frames in `buf` not yet durably uploaded (a failed upload leaves
+    /// them here so the next append re-drives them — self-healing).
+    dirty: bool,
 }
 
 /// Result of a [`Journal::compact`] pass.
@@ -819,10 +838,23 @@ impl Journal {
     /// Append one event to a run's journal. Durable when this returns: the
     /// segment object containing the record has been (re)uploaded.
     pub fn append(&self, run_id: u64, event: &JournalEvent) -> Result<(), String> {
+        self.append_batch(run_id, std::slice::from_ref(event))
+    }
+
+    /// Append a batch of events to a run's journal with **one segment
+    /// upload per touched segment** instead of one per event — the fan-out
+    /// hot spot fix: appending k events to an open segment used to
+    /// re-upload it k times (O(k·segment) bytes); a batch re-uploads it
+    /// once (plus one seal per rotation crossed mid-batch). Event order
+    /// within the batch is the durable order. Durable when this returns.
+    pub fn append_batch(&self, run_id: u64, events: &[JournalEvent]) -> Result<(), String> {
+        if events.is_empty() {
+            return Ok(());
+        }
         let writer = {
             let mut map = self.writers.lock().unwrap();
             let w = Arc::clone(map.entry(run_id).or_insert_with(|| {
-                Arc::new(Mutex::new(RunWriter { seg: None, buf: Vec::new() }))
+                Arc::new(Mutex::new(RunWriter { seg: None, buf: Vec::new(), dirty: false }))
             }));
             // The map is only a cache of segment cursors — a later append
             // for an evicted run re-scans and continues at the next free
@@ -851,19 +883,36 @@ impl Journal {
             w.seg = Some(self.prepare_append_index(run_id)?);
             w.buf = segment_header();
         }
-        let rec = Recorded { at_ms: epoch_ms(), event: event.clone() };
-        let frame = frame_record(&rec.encode());
         let header_len = segment_header().len();
-        if w.buf.len() > header_len && w.buf.len() + frame.len() > self.seg_max_bytes {
-            w.seg = Some(w.seg.expect("writer initialized above") + 1);
-            w.buf = segment_header();
+        for event in events {
+            let rec = Recorded { at_ms: epoch_ms(), event: event.clone() };
+            let frame = frame_record(&rec.encode());
+            if w.buf.len() > header_len && w.buf.len() + frame.len() > self.seg_max_bytes {
+                // seal the full segment before rotating: records already
+                // buffered must land below any record in a higher index.
+                // A clean writer's buffer is already durable (the previous
+                // batch uploaded it), so sealing costs nothing then.
+                if w.dirty {
+                    let key = self.seg_key(run_id, w.seg.expect("writer initialized above"));
+                    let buf = &w.buf;
+                    with_retry(STORAGE_RETRIES, || self.storage.upload(&key, buf))
+                        .map_err(|e| format!("journal append for run {run_id}: {e}"))?;
+                }
+                w.seg = Some(w.seg.expect("writer initialized above") + 1);
+                w.buf = segment_header();
+                w.dirty = false;
+            }
+            w.buf.extend_from_slice(&frame);
+            w.dirty = true;
         }
-        w.buf.extend_from_slice(&frame);
-        let key = self.seg_key(run_id, w.seg.expect("writer initialized above"));
-        let buf = &w.buf;
-        with_retry(STORAGE_RETRIES, || self.storage.upload(&key, buf))
-            .map_err(|e| format!("journal append for run {run_id}: {e}"))?;
-        if matches!(event, JournalEvent::RunSucceeded | JournalEvent::RunFailed { .. }) {
+        if w.dirty {
+            let key = self.seg_key(run_id, w.seg.expect("writer initialized above"));
+            let buf = &w.buf;
+            with_retry(STORAGE_RETRIES, || self.storage.upload(&key, buf))
+                .map_err(|e| format!("journal append for run {run_id}: {e}"))?;
+            w.dirty = false;
+        }
+        if events.iter().any(is_terminal_run_event) {
             // the run closed: drop its writer so a long-lived journal does
             // not grow one buffered segment per run forever (a later
             // resubmission re-scans and continues at the next index).
@@ -966,6 +1015,71 @@ impl Journal {
         Ok((out, torn))
     }
 
+    /// Incremental tail read for watchers: deliver the records of raw
+    /// segments from segment `*seg` onward, skipping the first `*rec`
+    /// records of that segment, and advance the cursor. Sealed segments
+    /// are consumed once; the open (last) segment — which appends
+    /// re-upload in place — is re-read per call from its partial cursor,
+    /// so a long watch costs O(open segment) per poll instead of
+    /// re-downloading the whole history. Returns `Ok(None)` when the
+    /// stream holds a compaction snapshot (a tail of raw segments cannot
+    /// express it — fall back to [`Journal::events`]). A gap at or above
+    /// the cursor is an error, like in full replay.
+    pub fn tail_raw(
+        &self,
+        run_id: u64,
+        seg: &mut u64,
+        rec: &mut usize,
+    ) -> Result<Option<Vec<Recorded>>, String> {
+        let prefix = self.run_prefix(run_id);
+        let keys = with_retry(STORAGE_RETRIES, || self.storage.list(&prefix))
+            .map_err(|e| e.to_string())?;
+        let mut entries: Vec<(u64, bool)> =
+            keys.iter().filter_map(|k| parse_entry(k, &prefix)).collect();
+        entries.sort_unstable();
+        if entries.iter().any(|(_, s)| *s) {
+            return Ok(None);
+        }
+        let segs: Vec<u64> = entries.iter().map(|(i, _)| *i).collect();
+        let mut expect = *seg;
+        for idx in segs.iter().copied().filter(|i| *i >= *seg) {
+            if idx != expect {
+                return Err(format!(
+                    "journal for run {run_id} is missing segment {expect} (next present: \
+                     {idx}); refusing to tail a gapped stream"
+                ));
+            }
+            expect = idx + 1;
+        }
+        let last = segs.last().copied();
+        let mut out = Vec::new();
+        for idx in segs.into_iter().filter(|i| *i >= *seg) {
+            let key = self.seg_key(run_id, idx);
+            let raw = with_retry(STORAGE_RETRIES, || self.storage.download(&key))
+                .map_err(|e| e.to_string())?;
+            let (payloads, tail) = decode_segment(&raw).map_err(|e| format!("{key}: {e}"))?;
+            if tail.is_some() && Some(idx) != last {
+                return Err(format!(
+                    "journal for run {run_id} is corrupt mid-stream ({key})"
+                ));
+            }
+            let skip = if idx == *seg { *rec } else { 0 };
+            for p in payloads.iter().skip(skip) {
+                out.push(Recorded::parse(p).map_err(|e| format!("{key}: {e}"))?);
+            }
+            if Some(idx) == last {
+                // open segment: keep a partial cursor (appends only grow
+                // it, so the skip count stays valid)
+                *seg = idx;
+                *rec = payloads.len().max(skip);
+            } else {
+                *seg = idx + 1;
+                *rec = 0;
+            }
+        }
+        Ok(Some(out))
+    }
+
     /// Reconstruct a run by folding its journal (see [`RecoveredRun`]).
     /// Pure over the record stream: re-replaying — before or after a
     /// resubmission appended more events — is always safe.
@@ -1021,6 +1135,323 @@ impl Journal {
         // the writer (if any) must re-scan: its buffered segment is gone
         self.writers.lock().unwrap().remove(&run_id);
         Ok(CompactReport { events_folded, segments_removed: removed })
+    }
+
+    /// Does the run still have raw `seg-` objects, i.e. history not yet
+    /// folded into a snapshot? The registry-driven auto-compaction
+    /// predicate: a **closed** run with raw segments is a candidate.
+    pub fn has_raw_segments(&self, run_id: u64) -> Result<bool, String> {
+        let prefix = self.run_prefix(run_id);
+        let keys = with_retry(STORAGE_RETRIES, || self.storage.list(&prefix))
+            .map_err(|e| e.to_string())?;
+        Ok(keys.iter().filter_map(|k| parse_entry(k, &prefix)).any(|(_, snap)| !snap))
+    }
+
+    fn cancel_key(&self, run_id: u64) -> String {
+        // under `<prefix>.ctl/`, NOT `<prefix>/`: control markers must not
+        // read as journal runs (`run_ids` scans `<prefix>/`)
+        format!("{}.ctl/cancel/{run_id}", self.prefix)
+    }
+
+    /// Durably request cancellation of a run — the cross-process half of
+    /// `dflow cancel`: any process can drop the marker; the service that
+    /// owns the live run picks it up on its maintenance tick and cancels
+    /// through the run's cancel tokens.
+    pub fn request_cancel(&self, run_id: u64, reason: &str) -> Result<(), String> {
+        let key = self.cancel_key(run_id);
+        with_retry(STORAGE_RETRIES, || self.storage.upload(&key, reason.as_bytes()))
+            .map_err(|e| e.to_string())
+    }
+
+    /// Read pending cancel requests — `(run_id, reason)` pairs — WITHOUT
+    /// deleting their markers. A marker is only removed via
+    /// [`Journal::clear_cancel_request`] once a service has actually
+    /// applied it (or proven it stale): several services can share one
+    /// store, and the one that happens to poll first may not own the run —
+    /// deleting on read would silently lose the cancel.
+    pub fn pending_cancel_requests(&self) -> Result<Vec<(u64, String)>, String> {
+        let prefix = format!("{}.ctl/cancel/", self.prefix);
+        let keys = with_retry(STORAGE_RETRIES, || self.storage.list(&prefix))
+            .map_err(|e| e.to_string())?;
+        let mut out = Vec::new();
+        for k in keys {
+            let Some(id) = k.strip_prefix(&prefix).and_then(|s| s.parse::<u64>().ok()) else {
+                continue;
+            };
+            let reason = self
+                .storage
+                .download(&k)
+                .map(|b| String::from_utf8_lossy(&b).into_owned())
+                .unwrap_or_default();
+            out.push((id, reason));
+        }
+        Ok(out)
+    }
+
+    /// Remove a cancel marker (the requested cancel was applied, or the
+    /// run is provably closed and the marker is stale).
+    pub fn clear_cancel_request(&self, run_id: u64) -> Result<(), String> {
+        match self.storage.delete(&self.cancel_key(run_id)) {
+            Ok(()) => Ok(()),
+            Err(crate::storage::StorageError::NotFound(_)) => Ok(()),
+            Err(e) => Err(e.to_string()),
+        }
+    }
+}
+
+/// Does this event close a run's stream?
+fn is_terminal_run_event(ev: &JournalEvent) -> bool {
+    matches!(
+        ev,
+        JournalEvent::RunSucceeded
+            | JournalEvent::RunFailed { .. }
+            | JournalEvent::RunCancelled { .. }
+    )
+}
+
+// -- sinks: sync journal vs background appender --------------------------------
+
+/// Destination for run-lifecycle events: the [`Journal`] itself
+/// (synchronous — durable on return) or a batching [`Appender`]
+/// (background — bounded queue, one segment upload per drained batch).
+/// `WorkflowRun` appends through this trait so the engine never cares
+/// which; `Engine::resubmit`/`RunRegistry` always read the underlying
+/// [`Journal`].
+pub trait JournalSink: Send + Sync {
+    /// Append one event to `run_id`'s stream.
+    fn append(&self, run_id: u64, event: &JournalEvent) -> Result<(), String>;
+}
+
+impl JournalSink for Journal {
+    fn append(&self, run_id: u64, event: &JournalEvent) -> Result<(), String> {
+        Journal::append(self, run_id, event)
+    }
+}
+
+/// Default bound on the appender's event queue (backpressure beyond it).
+pub const DEFAULT_APPENDER_QUEUE: usize = 4096;
+/// Default coalescing window: after the first queued event the worker
+/// waits this long for co-queued events before draining, so a fan-out
+/// burst lands as one batch (one segment upload) instead of k.
+pub const DEFAULT_APPENDER_WINDOW: Duration = Duration::from_millis(2);
+
+struct AppenderState {
+    queue: VecDeque<(u64, JournalEvent, u64)>,
+    /// Sequence of the newest enqueued event.
+    enqueued: u64,
+    /// Every event with sequence ≤ this has been appended (or counted
+    /// into `errors`).
+    appended: u64,
+    /// run id → events whose batched append failed, per run — so a
+    /// terminal append can tell ITS run's durability gap from another
+    /// run's (the appender is shared engine-wide). Entries are removed
+    /// when the run's terminal append reads them.
+    run_errors: BTreeMap<u64, u64>,
+    shutdown: bool,
+}
+
+struct AppenderInner {
+    state: Mutex<AppenderState>,
+    /// Worker wakeups: new events, shutdown.
+    work_cv: Condvar,
+    /// Progress wakeups: a batch landed, queue space freed.
+    done_cv: Condvar,
+    cap: usize,
+    window: Duration,
+    errors: AtomicU64,
+    batches: AtomicU64,
+}
+
+impl AppenderInner {
+    fn enqueue(&self, run_id: u64, event: &JournalEvent) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        while st.queue.len() >= self.cap && !st.shutdown {
+            // bounded queue: block the producer (backpressure) instead of
+            // growing without limit — "bounded background appender"
+            let (g, _) = self.done_cv.wait_timeout(st, Duration::from_millis(5)).unwrap();
+            st = g;
+        }
+        st.enqueued += 1;
+        let seq = st.enqueued;
+        st.queue.push_back((run_id, event.clone(), seq));
+        drop(st);
+        self.work_cv.notify_all();
+        seq
+    }
+
+    fn wait_appended(&self, seq: u64) {
+        let mut st = self.state.lock().unwrap();
+        while st.appended < seq {
+            let (g, _) = self.done_cv.wait_timeout(st, Duration::from_millis(50)).unwrap();
+            st = g;
+        }
+    }
+
+    fn worker_loop(&self, journal: &Journal) {
+        loop {
+            let batch: Vec<(u64, JournalEvent, u64)> = {
+                let mut st = self.state.lock().unwrap();
+                while st.queue.is_empty() {
+                    if st.shutdown {
+                        return;
+                    }
+                    st = self.work_cv.wait(st).unwrap();
+                }
+                if !self.window.is_zero() && !st.shutdown {
+                    // coalesce: give a burst a moment to finish queuing
+                    let (g, _) = self.work_cv.wait_timeout(st, self.window).unwrap();
+                    st = g;
+                }
+                st.queue.drain(..).collect()
+            };
+            let max_seq = batch.last().map(|(_, _, s)| *s).unwrap_or(0);
+            // group by run preserving queue order (per-run order is the
+            // journal contract; cross-run order is free), then one
+            // append_batch per run = one upload per touched segment
+            let mut groups: BTreeMap<u64, Vec<JournalEvent>> = BTreeMap::new();
+            for (run, ev, _) in batch {
+                groups.entry(run).or_default().push(ev);
+            }
+            let mut failed: Vec<(u64, u64)> = Vec::new();
+            for (run, evs) in &groups {
+                self.batches.fetch_add(1, Ordering::Relaxed);
+                if journal.append_batch(*run, evs).is_err() {
+                    self.errors.fetch_add(evs.len() as u64, Ordering::Relaxed);
+                    failed.push((*run, evs.len() as u64));
+                }
+            }
+            let mut st = self.state.lock().unwrap();
+            st.appended = st.appended.max(max_seq);
+            for (run, n) in failed {
+                *st.run_errors.entry(run).or_insert(0) += n;
+            }
+            drop(st);
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+/// Bounded background journal appender (ROADMAP "batch/group appends"
+/// item). Events enqueue on a bounded queue and a dedicated worker drains
+/// them in batches into [`Journal::append_batch`], closing two hot spots
+/// at once: the open segment is re-uploaded once per **batch** instead of
+/// once per event, and callers journaling from latency-critical paths
+/// (guard drops mirroring pod/lease releases) no longer wait on journal
+/// storage. Terminal run events still flush synchronously, so a finished
+/// `wait()` implies a durable outcome; [`Drop`] drains the queue, so no
+/// event is lost on clean shutdown. A crash loses only the events still
+/// queued — the same window a crash always had between an action and its
+/// (post-hoc) journaling, and replay's torn-tail handling is unaffected
+/// because `append_batch` writes the identical wire format.
+pub struct Appender {
+    journal: Arc<Journal>,
+    inner: Arc<AppenderInner>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Appender {
+    /// Spawn with default queue bound and coalescing window.
+    pub fn spawn(journal: Arc<Journal>) -> Arc<Appender> {
+        Appender::with_config(journal, DEFAULT_APPENDER_QUEUE, DEFAULT_APPENDER_WINDOW)
+    }
+
+    /// Spawn with an explicit queue bound (min 1) and coalescing window.
+    pub fn with_config(journal: Arc<Journal>, cap: usize, window: Duration) -> Arc<Appender> {
+        let inner = Arc::new(AppenderInner {
+            state: Mutex::new(AppenderState {
+                queue: VecDeque::new(),
+                enqueued: 0,
+                appended: 0,
+                run_errors: BTreeMap::new(),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            cap: cap.max(1),
+            window,
+            errors: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+        });
+        let (inner2, journal2) = (Arc::clone(&inner), Arc::clone(&journal));
+        let handle = std::thread::Builder::new()
+            .name("dflow-journal-appender".to_string())
+            .spawn(move || inner2.worker_loop(&journal2))
+            .expect("spawn journal appender");
+        Arc::new(Appender { journal, inner, worker: Mutex::new(Some(handle)) })
+    }
+
+    /// The journal this appender batches into (replay/registry reads go
+    /// straight to it).
+    pub fn journal(&self) -> &Arc<Journal> {
+        &self.journal
+    }
+
+    /// Block until every event enqueued so far is appended (or counted
+    /// into [`Appender::errors`]).
+    pub fn flush(&self) {
+        let target = self.inner.state.lock().unwrap().enqueued;
+        self.inner.wait_appended(target);
+    }
+
+    /// Events whose batched append failed (their runs have a durability
+    /// gap; mirrors `Registry::journal_errors` for the sync path).
+    pub fn errors(&self) -> u64 {
+        self.inner.errors.load(Ordering::Relaxed)
+    }
+
+    /// Batched `append_batch` calls issued so far (observability: compare
+    /// against events appended to see the coalescing ratio).
+    pub fn batches(&self) -> u64 {
+        self.inner.batches.load(Ordering::Relaxed)
+    }
+
+    /// Events currently queued.
+    pub fn queued(&self) -> usize {
+        self.inner.state.lock().unwrap().queue.len()
+    }
+}
+
+impl JournalSink for Appender {
+    fn append(&self, run_id: u64, event: &JournalEvent) -> Result<(), String> {
+        let terminal = is_terminal_run_event(event);
+        let seq = self.inner.enqueue(run_id, event);
+        if terminal {
+            // a run-terminal append must be durable before the caller
+            // reports the run closed (crash-recoverability contract)
+            self.inner.wait_appended(seq);
+            // per-run accounting: the appender is shared engine-wide, so
+            // a global counter would attribute another run's failed batch
+            // to this one (and mask/duplicate real gaps)
+            let failed = self
+                .inner
+                .state
+                .lock()
+                .unwrap()
+                .run_errors
+                .remove(&run_id)
+                .unwrap_or(0);
+            if failed > 0 {
+                return Err(format!(
+                    "journal appender recorded {failed} failed append(s) for run {run_id} \
+                     before it closed"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Appender {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            // the worker drains the remaining queue before exiting
+            let _ = h.join();
+        }
     }
 }
 
@@ -1211,6 +1642,7 @@ mod tests {
             },
             JournalEvent::RunFailed { message: "main/b: boom".into() },
             JournalEvent::RunResubmitted { workflow: "w".into() },
+            JournalEvent::RunCancelled { reason: "operator".into() },
             JournalEvent::RunSucceeded,
         ]
     }
@@ -1421,6 +1853,201 @@ mod tests {
         assert_eq!(merged.resubmissions, 1);
         assert_eq!(merged.phase, RunPhase::Succeeded);
         assert_eq!(merged.keyed.len(), 12, "snapshot state survives under new events");
+    }
+
+    #[test]
+    fn run_cancelled_folds_to_cancelled_phase() {
+        let mem = Arc::new(MemStorage::new());
+        let j = Journal::open(mem).unwrap();
+        let run_id = crate::util::next_id();
+        j.append(run_id, &JournalEvent::RunSubmitted { workflow: "w".into() }).unwrap();
+        j.append(run_id, &JournalEvent::NodeCancelled {
+            path: "main/a".into(),
+            reason: "run cancelled".into(),
+        })
+        .unwrap();
+        j.append(run_id, &JournalEvent::RunCancelled { reason: "operator asked".into() })
+            .unwrap();
+        let rec = j.replay(run_id).unwrap();
+        assert_eq!(rec.phase, RunPhase::Cancelled);
+        assert_eq!(rec.message, "operator asked");
+        // Cancelled is terminal: the run compacts
+        let report = j.compact(run_id).unwrap();
+        assert_eq!(report.events_folded, 3);
+        assert_eq!(j.replay(run_id).unwrap().phase, RunPhase::Cancelled);
+    }
+
+    #[test]
+    fn append_batch_uploads_once_per_touched_segment() {
+        use crate::storage::CountingStorage;
+        let counting = Arc::new(CountingStorage::new(Arc::new(MemStorage::new())));
+        let j = Journal::open(counting.clone() as Arc<dyn crate::storage::StorageClient>).unwrap();
+        let per_event_run = crate::util::next_id();
+        let batch_run = crate::util::next_id();
+        let events: Vec<JournalEvent> = (0..100)
+            .map(|i| JournalEvent::NodeSkipped { path: format!("main/t{i}") })
+            .collect();
+        // per-event: one upload each
+        let before = counting.uploads.load(Ordering::Relaxed);
+        for ev in &events {
+            j.append(per_event_run, ev).unwrap();
+        }
+        let per_event_uploads = counting.uploads.load(Ordering::Relaxed) - before;
+        assert_eq!(per_event_uploads, 100);
+        // batched: one upload for the whole (single-segment) batch
+        let before = counting.uploads.load(Ordering::Relaxed);
+        j.append_batch(batch_run, &events).unwrap();
+        let batch_uploads = counting.uploads.load(Ordering::Relaxed) - before;
+        assert_eq!(batch_uploads, 1, "a single-segment batch is one upload");
+        // identical replayed state either way
+        let a = j.replay(per_event_run).unwrap();
+        let b = j.replay(batch_run).unwrap();
+        assert_eq!(a.events, 100);
+        assert_eq!(b.events, 100);
+        assert_eq!(a.nodes.len(), b.nodes.len());
+    }
+
+    #[test]
+    fn append_batch_seals_segments_across_rotation() {
+        let mem = Arc::new(MemStorage::new());
+        let j = Journal::open(mem.clone()).unwrap().segment_max_bytes(256);
+        let run_id = crate::util::next_id();
+        let events: Vec<JournalEvent> = (0..20)
+            .map(|i| JournalEvent::NodeSkipped { path: format!("main/t{i}") })
+            .collect();
+        j.append_batch(run_id, &events).unwrap();
+        let segs = mem.list(&format!("journal/run{run_id}/")).unwrap();
+        assert!(segs.len() > 1, "256-byte threshold must force rotation: {segs:?}");
+        let rec = j.replay(run_id).unwrap();
+        assert_eq!(rec.events, 20);
+        assert_eq!(rec.nodes.len(), 20);
+    }
+
+    #[test]
+    fn appender_coalesces_events_and_flushes_terminal_synchronously() {
+        use crate::storage::CountingStorage;
+        let counting = Arc::new(CountingStorage::new(Arc::new(MemStorage::new())));
+        let j = Arc::new(
+            Journal::open(counting.clone() as Arc<dyn crate::storage::StorageClient>).unwrap(),
+        );
+        let appender = Appender::with_config(Arc::clone(&j), 4096, Duration::from_millis(5));
+        let run_id = crate::util::next_id();
+        let before = counting.uploads.load(Ordering::Relaxed);
+        JournalSink::append(&*appender, run_id, &JournalEvent::RunSubmitted {
+            workflow: "w".into(),
+        })
+        .unwrap();
+        for i in 0..100 {
+            JournalSink::append(&*appender, run_id, &JournalEvent::NodeSkipped {
+                path: format!("main/t{i}"),
+            })
+            .unwrap();
+        }
+        appender.flush();
+        let uploads = counting.uploads.load(Ordering::Relaxed) - before;
+        assert!(
+            uploads * 5 <= 101,
+            "batched appends must cut uploads ≥5× for a 100-event burst: {uploads}"
+        );
+        assert_eq!(appender.errors(), 0);
+        // a terminal event flushes before returning: the journal is
+        // durable the moment append() comes back
+        JournalSink::append(&*appender, run_id, &JournalEvent::RunSucceeded).unwrap();
+        let rec = j.replay(run_id).unwrap();
+        assert_eq!(rec.phase, RunPhase::Succeeded);
+        assert_eq!(rec.events, 102);
+        // dropping the appender drains cleanly (nothing queued here)
+        drop(appender);
+        assert_eq!(j.replay(run_id).unwrap().events, 102);
+    }
+
+    #[test]
+    fn appender_drop_drains_queue() {
+        let mem = Arc::new(MemStorage::new());
+        let j = Arc::new(Journal::open(mem).unwrap());
+        // zero window: drain whatever is queued as fast as possible
+        let appender = Appender::with_config(Arc::clone(&j), 64, Duration::ZERO);
+        let run_id = crate::util::next_id();
+        for i in 0..40 {
+            JournalSink::append(&*appender, run_id, &JournalEvent::NodeSkipped {
+                path: format!("main/t{i}"),
+            })
+            .unwrap();
+        }
+        drop(appender); // must flush, not lose, the queued suffix
+        assert_eq!(j.replay(run_id).unwrap().events, 40);
+    }
+
+    #[test]
+    fn cancel_request_markers_roundtrip_without_polluting_run_ids() {
+        let mem = Arc::new(MemStorage::new());
+        let j = Journal::open(mem).unwrap();
+        let run_id = crate::util::next_id();
+        j.append(run_id, &JournalEvent::RunSubmitted { workflow: "w".into() }).unwrap();
+        j.request_cancel(run_id, "too slow").unwrap();
+        j.request_cancel(999_999_999, "foreign run's marker").unwrap();
+        assert_eq!(j.run_ids().unwrap(), vec![run_id], "markers must not read as runs");
+        let mut got = j.pending_cancel_requests().unwrap();
+        got.sort();
+        assert_eq!(got.len(), 2);
+        assert!(got.contains(&(run_id, "too slow".to_string())));
+        // reading does NOT consume: a service that cannot apply a marker
+        // (the run lives in another process) must leave it for the owner
+        assert_eq!(j.pending_cancel_requests().unwrap().len(), 2);
+        j.clear_cancel_request(run_id).unwrap();
+        let rest = j.pending_cancel_requests().unwrap();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].0, 999_999_999);
+        // clearing an absent marker is a no-op
+        j.clear_cancel_request(run_id).unwrap();
+    }
+
+    #[test]
+    fn tail_raw_reads_incrementally_across_rotation() {
+        let mem = Arc::new(MemStorage::new());
+        let j = Journal::open(mem).unwrap().segment_max_bytes(192);
+        let run_id = crate::util::next_id();
+        let (mut seg, mut rec) = (0u64, 0usize);
+        // nothing yet: empty tail, cursor unchanged
+        assert!(j.tail_raw(run_id, &mut seg, &mut rec).unwrap().unwrap().is_empty());
+        for i in 0..6 {
+            j.append(run_id, &JournalEvent::NodeSkipped { path: format!("main/t{i}") })
+                .unwrap();
+        }
+        let first = j.tail_raw(run_id, &mut seg, &mut rec).unwrap().unwrap();
+        assert_eq!(first.len(), 6);
+        assert!(
+            j.tail_raw(run_id, &mut seg, &mut rec).unwrap().unwrap().is_empty(),
+            "nothing new since the last poll"
+        );
+        // more appends rotate segments (192-byte threshold); the cursor
+        // must cross the rotation without re-delivering or dropping
+        for i in 6..20 {
+            j.append(run_id, &JournalEvent::NodeSkipped { path: format!("main/t{i}") })
+                .unwrap();
+        }
+        let second = j.tail_raw(run_id, &mut seg, &mut rec).unwrap().unwrap();
+        assert_eq!(second.len(), 14);
+        j.append(run_id, &JournalEvent::RunSucceeded).unwrap();
+        let third = j.tail_raw(run_id, &mut seg, &mut rec).unwrap().unwrap();
+        assert_eq!(third.len(), 1);
+        // total tailed == full replay
+        assert_eq!(j.replay(run_id).unwrap().events, 21);
+        // a compaction snapshot cannot be expressed as a raw tail
+        j.compact(run_id).unwrap();
+        assert!(j.tail_raw(run_id, &mut seg, &mut rec).unwrap().is_none());
+    }
+
+    #[test]
+    fn has_raw_segments_flips_after_compaction() {
+        let mem = Arc::new(MemStorage::new());
+        let j = Journal::open(mem).unwrap();
+        let run_id = crate::util::next_id();
+        j.append(run_id, &JournalEvent::RunSubmitted { workflow: "w".into() }).unwrap();
+        j.append(run_id, &JournalEvent::RunSucceeded).unwrap();
+        assert!(j.has_raw_segments(run_id).unwrap());
+        j.compact(run_id).unwrap();
+        assert!(!j.has_raw_segments(run_id).unwrap(), "only the snapshot remains");
     }
 
     #[test]

@@ -26,6 +26,14 @@
 //!   surface, so a fresh process can replay a crashed run and resubmit it
 //!   with every journaled success reused (`Engine::resubmit`), and a
 //!   `RunRegistry` serves `list_runs`/`get_run`/`node_timeline` queries.
+//!   A bounded background `Appender` batches event appends (one segment
+//!   upload per drained batch instead of one per event).
+//! * [`service`] — the workflow service control plane: a multi-run daemon
+//!   (`WorkflowService`) over one engine with a bounded admission queue,
+//!   per-tenant quotas and fair-share dispatch, live run lifecycle
+//!   (cancel/retry/watch), and service-owned maintenance (durable cancel
+//!   markers, auto-compaction of closed runs) — the `dflow` CLI's server
+//!   side.
 //! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt` produced by
 //!   the python compile path and executes them on the request path.
 //! * [`science`] — the AOT compute payloads (MD, NN-potential training,
@@ -49,6 +57,7 @@ pub mod jsonx;
 pub mod metrics;
 pub mod runtime;
 pub mod science;
+pub mod service;
 pub mod storage;
 pub mod util;
 

@@ -1,23 +1,41 @@
-//! `dflow` CLI: submit, inspect and watch workflow runs (the library-form
-//! analogue of Dflow's command-line tools + web UI status views).
+//! `dflow` CLI: the command-line face of the workflow service control
+//! plane — submit, inspect, watch, cancel, retry and compact runs against
+//! a durable store shared by every invocation (and any live service).
 //!
 //! ```text
-//! dflow list                      # built-in application workflows
-//! dflow submit <name> [seed]     # run one; writes status JSON to ./.dflow-runs/
-//! dflow get <status.json>        # pretty-print a saved run status
-//! dflow artifacts                # AOT artifact inventory + compile times
-//! dflow cluster                  # demo cluster topology as JSON
+//! dflow workflows                       # built-in application workflows
+//! dflow submit <name> [seed]            # run one under the service (journaled)
+//! dflow list [--json]                   # registry: every journaled run
+//! dflow get <run_id>                    # recovered run state as JSON
+//! dflow timeline <run_id> [node-path]   # full event history of a run
+//! dflow watch <run_id>                  # tail a run's journal live
+//! dflow cancel <run_id> [reason]        # durable cancel marker (applied by a live service)
+//! dflow retry <name> <run_id> [seed]    # resubmit: only the non-succeeded suffix re-runs
+//! dflow compact <run_id>|--all          # fold closed runs into snapshots
+//! dflow artifacts | dflow cluster       # AOT inventory / demo topology
 //! ```
+//!
+//! Every store-backed command takes `--store DIR` (default `.dflow-store`,
+//! or `$DFLOW_STORE`): a `LocalStorage`-backed journal any number of
+//! processes can share — `dflow submit` in one terminal, `dflow watch` +
+//! `dflow cancel` in another, is the paper's server/CLI split in two
+//! processes. The `demo-*` workflows run without AOT artifacts.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use dflow::apps::{apex, deepks, fpop, rid, tesla, vsw};
 use dflow::cluster::{Cluster, NodeSpec, Resources};
-use dflow::core::Workflow;
+use dflow::core::{ContainerTemplate, FnOp, ParamType, Signature, Slices, Step, Steps, Value, Workflow};
 use dflow::engine::Engine;
+use dflow::journal::{Appender, Journal, RunRegistry};
 use dflow::runtime::Runtime;
+use dflow::service::{RunWatch, ServiceConfig, WorkflowService};
+use dflow::storage::LocalStorage;
 
 const WORKFLOWS: &[(&str, &str)] = &[
+    ("demo-fanout", "Runtime-free sliced fan-out demo (fast)"),
+    ("demo-slow", "Runtime-free slow fan-out (for watch/cancel demos)"),
     ("fpop-eos", "FPOP EOS flow (paper Fig. 3)"),
     ("apex-relaxation", "APEX relaxation job (Fig. 4)"),
     ("apex-joint", "APEX joint relaxation+property job (Fig. 4)"),
@@ -27,9 +45,68 @@ const WORKFLOWS: &[(&str, &str)] = &[
     ("tesla", "TESLA concurrent-learning loop (Fig. 8)"),
 ];
 
+/// Sliced square-and-sum fan-out; no PJRT runtime needed.
+fn demo_fanout(seed: i64) -> Workflow {
+    let sq = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        move |ctx| {
+            let x = ctx.get_int("x")?;
+            ctx.set("y", x * x + seed);
+            Ok(())
+        },
+    ));
+    Workflow::new("demo-fanout")
+        .container(ContainerTemplate::new("sq", sq))
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "sq")
+                        .param("x", Value::ints(0..16))
+                        .slices(Slices::over("x").stack("y").parallelism(8)),
+                )
+                .out_param_from("ys", "fan", "y"),
+        )
+        .entrypoint("main")
+}
+
+/// Slow cooperative fan-out (~10 s): each slice checkpoints between
+/// sleeps, so `dflow cancel` from another terminal stops it mid-flight.
+fn demo_slow(seed: i64) -> Workflow {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        move |ctx| {
+            let x = ctx.get_int("x")?;
+            for _ in 0..40 {
+                ctx.checkpoint()?; // observes run-level cancel
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            ctx.set("y", x + seed);
+            Ok(())
+        },
+    ));
+    Workflow::new("demo-slow")
+        .container(ContainerTemplate::new("op", op))
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "op")
+                        .param("x", Value::ints(0..8))
+                        .slices(Slices::over("x").stack("y").parallelism(4)),
+                )
+                .out_param_from("ys", "fan", "y"),
+        )
+        .entrypoint("main")
+}
+
+fn needs_runtime(name: &str) -> bool {
+    !name.starts_with("demo-")
+}
+
 fn build(name: &str, seed: i64) -> Option<Workflow> {
     let scales = [0.85, 0.9, 0.95, 1.0, 1.05, 1.1, 1.15];
     Some(match name {
+        "demo-fanout" => demo_fanout(seed),
+        "demo-slow" => demo_slow(seed),
         "fpop-eos" => fpop::eos_workflow(seed, &scales, 2),
         "apex-relaxation" => apex::relaxation_workflow(seed),
         "apex-joint" => apex::joint_workflow(seed, &scales),
@@ -55,48 +132,118 @@ fn demo_cluster() -> Arc<Cluster> {
     Arc::new(Cluster::new(nodes, 0))
 }
 
-fn cmd_list() {
-    println!("built-in application workflows (paper §3):");
+fn open_journal(store: &str) -> Result<Arc<Journal>, String> {
+    let storage = LocalStorage::new(store).map_err(|e| format!("opening store '{store}': {e}"))?;
+    Ok(Arc::new(Journal::open(Arc::new(storage))?))
+}
+
+fn cmd_workflows() {
+    println!("built-in workflows (paper §3 + demos):");
     for (name, desc) in WORKFLOWS {
         println!("  {name:<16} {desc}");
     }
 }
 
-fn cmd_submit(name: &str, seed: i64) -> Result<(), String> {
+fn event_line(rec: &dflow::journal::Recorded) -> String {
+    let ev = &rec.event;
+    let path = ev.path().unwrap_or("");
+    format!("{:>13}  {:<19} {}", rec.at_ms, ev.kind(), path)
+}
+
+/// One in-process service over the shared store: demo cluster + batched
+/// journal appender (+ the PJRT runtime when `name` needs it). Shared by
+/// `submit` and `retry` so their engine/service setup cannot drift.
+fn start_service(name: &str, store: &str) -> Result<(WorkflowService, Arc<Journal>), String> {
+    let journal = open_journal(store)?;
+    let mut builder = Engine::builder()
+        .cluster(demo_cluster())
+        .journal_appender(Appender::spawn(Arc::clone(&journal)));
+    if needs_runtime(name) {
+        let rt = Runtime::global()
+            .ok_or("artifacts/ not built — run `make artifacts` first (or use demo-*)")?;
+        builder = builder.runtime(rt);
+    }
+    let engine = Arc::new(builder.build());
+    let config = ServiceConfig {
+        // quick ticks so a cross-process `dflow cancel` lands promptly
+        maintenance_interval: Duration::from_millis(250),
+        ..ServiceConfig::default()
+    };
+    let service = WorkflowService::start(engine, config)?;
+    Ok((service, journal))
+}
+
+fn cmd_submit(name: &str, seed: i64, tenant: &str, store: &str) -> Result<(), String> {
     let wf = build(name, seed)
-        .ok_or_else(|| format!("unknown workflow '{name}' — see `dflow list`"))?;
-    let rt = Runtime::global()
-        .ok_or("artifacts/ not built — run `make artifacts` first".to_string())?;
-    let engine = Engine::builder().runtime(rt).cluster(demo_cluster()).build();
-    println!("submitting '{name}' (seed {seed}) ...");
+        .ok_or_else(|| format!("unknown workflow '{name}' — see `dflow workflows`"))?;
+    let (service, _journal) = start_service(name, store)?;
+    let run_id = service.submit(tenant, wf)?;
+    println!("submitted '{name}' (seed {seed}) as run {run_id} for tenant '{tenant}'");
+    println!("  store: {store}  (watch:  dflow watch {run_id} --store {store})");
+    println!("  cancel from another terminal:  dflow cancel {run_id} --store {store}");
     let t0 = std::time::Instant::now();
-    let result = engine.run(&wf)?;
-    let dt = t0.elapsed();
-    let status = result.run.to_json().to_string_pretty();
-    std::fs::create_dir_all(".dflow-runs").map_err(|e| e.to_string())?;
-    let path = format!(".dflow-runs/{}-{}.json", name, result.run.id);
-    std::fs::write(&path, &status).map_err(|e| e.to_string())?;
+    let phase = service
+        .watch(run_id)
+        .follow(Duration::from_millis(100), |rec| println!("  {}", event_line(rec)))?;
+    println!("phase={phase:?} in {:.2}s", t0.elapsed().as_secs_f64());
+    let rec = service.registry().get_run(run_id)?;
     println!(
-        "phase={:?} in {:.2}s — {} nodes, {} succeeded, {} failed, {} reused",
-        result.run.phase(),
-        dt.as_secs_f64(),
-        result.run.nodes().len(),
-        result.run.metrics.steps_succeeded.get(),
-        result.run.metrics.steps_failed.get(),
-        result.run.metrics.steps_reused.get(),
+        "  {} nodes — {} succeeded, {} failed, {} reused; {} events journaled",
+        rec.nodes.len(),
+        rec.count_phase(dflow::engine::NodePhase::Succeeded),
+        rec.count_phase(dflow::engine::NodePhase::Failed),
+        rec.count_phase(dflow::engine::NodePhase::Reused),
+        rec.events,
     );
-    for (k, v) in &result.outputs.params {
-        println!("  output {k} = {}", v.display());
-    }
-    if let Some(e) = &result.error {
-        println!("  error: {e}");
-    }
-    println!("status written to {path}");
     Ok(())
 }
 
-fn cmd_get(path: &str) -> Result<(), String> {
-    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+fn cmd_list(store: &str, json: bool) -> Result<(), String> {
+    let journal = open_journal(store)?;
+    let registry = RunRegistry::new(journal);
+    if json {
+        println!("{}", registry.list_runs_json()?.to_string_pretty());
+        return Ok(());
+    }
+    let runs = registry.list_runs()?;
+    if runs.is_empty() {
+        println!("no journaled runs under '{store}'");
+        return Ok(());
+    }
+    println!(
+        "{:<22} {:<18} {:<10} {:>6} {:>5} {:>5} {:>7} {:>7}",
+        "RUN", "WORKFLOW", "PHASE", "NODES", "OK", "FAIL", "REUSED", "EVENTS"
+    );
+    for r in runs {
+        println!(
+            "{:<22} {:<18} {:<10} {:>6} {:>5} {:>5} {:>7} {:>7}  {}",
+            r.run_id,
+            r.workflow,
+            format!("{:?}", r.phase),
+            r.nodes,
+            r.succeeded,
+            r.failed,
+            r.reused,
+            r.events,
+            r.message,
+        );
+    }
+    Ok(())
+}
+
+fn parse_run_id(s: &str) -> Result<u64, String> {
+    s.parse::<u64>().map_err(|_| format!("'{s}' is not a run id (u64)"))
+}
+
+fn cmd_get(arg: &str, store: &str) -> Result<(), String> {
+    if let Ok(run_id) = arg.parse::<u64>() {
+        let journal = open_journal(store)?;
+        let rec = journal.replay(run_id)?;
+        println!("{}", rec.to_json().to_string_pretty());
+        return Ok(());
+    }
+    // legacy: pretty-print a saved status JSON file
+    let text = std::fs::read_to_string(arg).map_err(|e| e.to_string())?;
     let j = dflow::jsonx::Json::parse(&text).map_err(|e| e.to_string())?;
     println!(
         "workflow {} — phase {}",
@@ -115,6 +262,91 @@ fn cmd_get(path: &str) -> Result<(), String> {
                     .map(|k| format!("key={k}"))
                     .unwrap_or_default(),
             );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_timeline(run_id: u64, path: Option<&str>, store: &str) -> Result<(), String> {
+    let journal = open_journal(store)?;
+    let registry = RunRegistry::new(journal);
+    println!("{}", registry.timeline_json(run_id, path)?.to_string_pretty());
+    Ok(())
+}
+
+fn cmd_watch(run_id: u64, store: &str) -> Result<(), String> {
+    let journal = open_journal(store)?;
+    // follow() waits forever for a stream to appear (correct for a run a
+    // live service is about to start, wrong for a typo'd id): require the
+    // run to exist in this store
+    if !journal.run_ids()?.contains(&run_id) {
+        return Err(format!(
+            "run {run_id} has no journal records under '{store}' — check the id (`dflow \
+             list`) and the --store directory"
+        ));
+    }
+    println!("watching run {run_id} (ctrl-c to stop; stream is durable either way)");
+    let phase = RunWatch::new(journal, run_id)
+        .follow(Duration::from_millis(250), |rec| println!("{}", event_line(rec)))?;
+    println!("run {run_id} closed: {phase:?}");
+    Ok(())
+}
+
+fn cmd_cancel(run_id: u64, reason: &str, store: &str) -> Result<(), String> {
+    let journal = open_journal(store)?;
+    journal.request_cancel(run_id, reason)?;
+    println!(
+        "cancel marker written for run {run_id} (reason: {reason}); a live service \
+         applies it on its next maintenance tick"
+    );
+    Ok(())
+}
+
+fn cmd_retry(name: &str, run_id: u64, seed: i64, tenant: &str, store: &str) -> Result<(), String> {
+    let wf = build(name, seed)
+        .ok_or_else(|| format!("unknown workflow '{name}' — see `dflow workflows`"))?;
+    let (service, journal) = start_service(name, store)?;
+    // the stream already holds a terminal event from the previous attempt,
+    // so a plain follow() would return immediately — wait for the
+    // resubmission generation to close instead
+    let base = journal.replay(run_id)?.resubmissions;
+    let id = service.retry(tenant, wf, run_id)?;
+    println!("retrying run {id} ('{name}'): journaled successes are reused");
+    let mut watch = service.watch(id);
+    loop {
+        for rec in watch.poll()? {
+            println!("  {}", event_line(&rec));
+        }
+        let rec = journal.replay(run_id)?;
+        if rec.resubmissions > base && !matches!(rec.phase, dflow::engine::RunPhase::Running) {
+            println!("phase={:?}", rec.phase);
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    Ok(())
+}
+
+fn cmd_compact(arg: &str, store: &str) -> Result<(), String> {
+    let journal = open_journal(store)?;
+    let ids: Vec<u64> = if arg == "--all" {
+        let registry = RunRegistry::new(Arc::clone(&journal));
+        registry
+            .list_runs()?
+            .into_iter()
+            .filter(|r| !matches!(r.phase, dflow::engine::RunPhase::Running))
+            .map(|r| r.run_id)
+            .collect()
+    } else {
+        vec![parse_run_id(arg)?]
+    };
+    for id in ids {
+        match journal.compact(id) {
+            Ok(report) => println!(
+                "run {id}: folded {} events, removed {} segment object(s)",
+                report.events_folded, report.segments_removed
+            ),
+            Err(e) => println!("run {id}: not compacted ({e})"),
         }
     }
     Ok(())
@@ -141,26 +373,93 @@ fn cmd_artifacts() -> Result<(), String> {
     Ok(())
 }
 
+/// Remove `--flag value` from `args`, returning the value.
+fn take_flag_value(args: &mut Vec<String>, flag: &str) -> Option<String> {
+    let i = args.iter().position(|a| a == flag)?;
+    if i + 1 < args.len() {
+        let v = args.remove(i + 1);
+        args.remove(i);
+        Some(v)
+    } else {
+        args.remove(i);
+        None
+    }
+}
+
+/// Remove a bare `--flag` from `args`, returning whether it was present.
+fn take_flag(args: &mut Vec<String>, flag: &str) -> bool {
+    if let Some(i) = args.iter().position(|a| a == flag) {
+        args.remove(i);
+        true
+    } else {
+        false
+    }
+}
+
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let result = match args.first().map(String::as_str) {
-        Some("list") | None => {
-            cmd_list();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let store = take_flag_value(&mut args, "--store")
+        .or_else(|| std::env::var("DFLOW_STORE").ok())
+        .unwrap_or_else(|| ".dflow-store".to_string());
+    let tenant =
+        take_flag_value(&mut args, "--tenant").unwrap_or_else(|| "default".to_string());
+    let json = take_flag(&mut args, "--json");
+    let arg = |i: usize| args.get(i).map(String::as_str);
+    let result = match arg(0) {
+        Some("workflows") | None => {
+            cmd_workflows();
             Ok(())
         }
+        Some("list") => cmd_list(&store, json),
         Some("submit") => {
-            let name = args.get(1).cloned().unwrap_or_default();
-            let seed = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0);
-            cmd_submit(&name, seed)
+            let name = arg(1).unwrap_or_default().to_string();
+            let seed = arg(2).and_then(|s| s.parse().ok()).unwrap_or(0);
+            cmd_submit(&name, seed, &tenant, &store)
         }
-        Some("get") => cmd_get(args.get(1).map(String::as_str).unwrap_or("")),
+        Some("get") => cmd_get(arg(1).unwrap_or(""), &store),
+        Some("timeline") => match arg(1).map(parse_run_id) {
+            Some(Ok(id)) => cmd_timeline(id, arg(2), &store),
+            Some(Err(e)) => Err(e),
+            None => Err("usage: dflow timeline <run_id> [node-path]".to_string()),
+        },
+        Some("watch") => match arg(1).map(parse_run_id) {
+            Some(Ok(id)) => cmd_watch(id, &store),
+            Some(Err(e)) => Err(e),
+            None => Err("usage: dflow watch <run_id>".to_string()),
+        },
+        Some("cancel") => match arg(1).map(parse_run_id) {
+            Some(Ok(id)) => {
+                let reason = if args.len() > 2 { args[2..].join(" ") } else {
+                    "cancelled via dflow CLI".to_string()
+                };
+                cmd_cancel(id, &reason, &store)
+            }
+            Some(Err(e)) => Err(e),
+            None => Err("usage: dflow cancel <run_id> [reason]".to_string()),
+        },
+        Some("retry") => {
+            let name = arg(1).unwrap_or_default().to_string();
+            match arg(2).map(parse_run_id) {
+                Some(Ok(id)) => {
+                    let seed = arg(3).and_then(|s| s.parse().ok()).unwrap_or(0);
+                    cmd_retry(&name, id, seed, &tenant, &store)
+                }
+                Some(Err(e)) => Err(e),
+                None => Err("usage: dflow retry <workflow> <run_id> [seed]".to_string()),
+            }
+        }
+        Some("compact") => match arg(1) {
+            Some(a) => cmd_compact(a, &store),
+            None => Err("usage: dflow compact <run_id>|--all".to_string()),
+        },
         Some("artifacts") => cmd_artifacts(),
         Some("cluster") => {
             println!("{}", demo_cluster().to_json().to_string_pretty());
             Ok(())
         }
         Some(other) => Err(format!(
-            "unknown command '{other}' (try: list, submit, get, artifacts, cluster)"
+            "unknown command '{other}' (try: workflows, submit, list, get, timeline, \
+             watch, cancel, retry, compact, artifacts, cluster)"
         )),
     };
     if let Err(e) = result {

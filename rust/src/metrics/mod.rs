@@ -138,6 +138,62 @@ impl Registry {
     }
 }
 
+/// Labeled counter family: one monotonic counter per string label (tenant
+/// names, workflow names, backends, ...). The service control plane's
+/// per-tenant accounting surface: coarser than a full metrics registry per
+/// tenant, cheap enough to tax every admission decision.
+#[derive(Default)]
+pub struct LabelCounters {
+    map: Mutex<BTreeMap<String, u64>>,
+}
+
+impl LabelCounters {
+    /// Increment `label` by one.
+    pub fn inc(&self, label: &str) {
+        self.add(label, 1);
+    }
+
+    /// Add `n` to `label`.
+    pub fn add(&self, label: &str, n: u64) {
+        *self.map.lock().unwrap().entry(label.to_string()).or_insert(0) += n;
+    }
+
+    /// Keep the high-water mark of `v` for `label` (gauges like peak live
+    /// runs per tenant).
+    pub fn record_max(&self, label: &str, v: u64) {
+        let mut m = self.map.lock().unwrap();
+        let e = m.entry(label.to_string()).or_insert(0);
+        *e = (*e).max(v);
+    }
+
+    /// Current value for `label` (0 if never touched).
+    pub fn get(&self, label: &str) -> u64 {
+        self.map.lock().unwrap().get(label).copied().unwrap_or(0)
+    }
+
+    /// All labels and values.
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.map.lock().unwrap().clone()
+    }
+
+    /// Sum across labels.
+    pub fn total(&self) -> u64 {
+        self.map.lock().unwrap().values().sum()
+    }
+
+    /// JSON object `{label: value}`.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.map
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::n(*v as f64)))
+                .collect(),
+        )
+    }
+}
+
 /// What happened, when, to which step. The phase names mirror Argo's.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum EventKind {
@@ -160,6 +216,9 @@ pub enum EventKind {
     /// The backend lease of a leaf execution was returned (detail =
     /// backend name). Emitted when the OP actually stops.
     BackendReleased,
+    /// `WorkflowRun::cancel` was called on a live run (detail = reason);
+    /// the run closes as `Cancelled` once in-flight OPs stop.
+    RunCancelRequested,
 }
 
 /// One trace record. `seq` is assigned under the ring lock, so it is the
@@ -401,6 +460,24 @@ mod tests {
         let arr = tl.as_arr().unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("phase").unwrap().as_str().unwrap(), "StepSucceeded");
+    }
+
+    #[test]
+    fn label_counters_accumulate_per_label() {
+        let c = LabelCounters::default();
+        c.inc("alice");
+        c.add("alice", 2);
+        c.inc("bob");
+        c.record_max("peak", 5);
+        c.record_max("peak", 3); // lower value must not regress the max
+        assert_eq!(c.get("alice"), 3);
+        assert_eq!(c.get("bob"), 1);
+        assert_eq!(c.get("peak"), 5);
+        assert_eq!(c.get("nobody"), 0);
+        assert_eq!(c.total(), 9);
+        let j = c.to_json();
+        assert_eq!(j.get("alice").unwrap().as_i64(), Some(3));
+        assert_eq!(c.snapshot().len(), 3);
     }
 
     #[test]

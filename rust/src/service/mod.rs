@@ -1,0 +1,1181 @@
+//! Workflow service control plane: a multi-run daemon over one engine.
+//!
+//! The paper's Dflow runs as a long-lived, shared deployment (an Argo
+//! server plus registry) that many scientists submit to concurrently —
+//! dozens of projects, thousands of nodes per workflow, one pool of
+//! backends. Before this module the reproduction was a one-shot library
+//! call: one `Engine::run` per process, no admission control, no live run
+//! lifecycle, no tenancy. [`WorkflowService`] is the layer that turns the
+//! four subsystems (engine, placement, storage, journal) into one system:
+//!
+//! * **Admission control.** Submissions enter a **bounded** queue
+//!   ([`ServiceConfig::queue_cap`]; a full queue rejects with a clear
+//!   error instead of buffering without limit). A dispatcher starts queued
+//!   runs only while the global live-run count is below
+//!   [`ServiceConfig::max_live_runs`] and the submitting tenant is below
+//!   its quota.
+//! * **Fair-share ordering.** The dispatcher picks the next run from the
+//!   admissible tenant with the fewest live runs (tiebreak: fewest runs
+//!   ever started, then FIFO), so one tenant's 2000-slice fan-out cannot
+//!   starve other tenants sharing the same backends — they interleave at
+//!   the run level, and the engine's adaptive scheduler pool
+//!   (`EngineConfig::adaptive_cap`) keeps one run's capacity waits from
+//!   monopolizing pool workers below that.
+//! * **Live run lifecycle.** [`WorkflowService::cancel`] propagates
+//!   through the run's cancel tokens into in-flight OPs (pods/leases
+//!   release when each OP actually stops — the timeout discipline) and
+//!   journals `RunCancelled`; [`WorkflowService::retry`] re-queues a
+//!   closed run **under the same run id** with every journaled success
+//!   spliced in, so exactly the non-succeeded suffix re-executes;
+//!   [`WorkflowService::watch`] tails the run's journal (the durable
+//!   trace, pod/lease mirror events included) as a [`RunWatch`] stream.
+//! * **Service-owned maintenance.** A maintenance tick drains durable
+//!   cancel markers (`Journal::request_cancel` — the cross-process `dflow
+//!   cancel`) and auto-compacts closed runs' journals
+//!   ([`ServiceConfig::auto_compact`]), so long-lived deployments don't
+//!   accrete one segment chain per run forever.
+//! * **Per-tenant accounting.** [`ServiceMetrics`] counts submissions,
+//!   rejections, starts, outcomes and peak live runs per tenant
+//!   (`metrics::LabelCounters`) — the quota-enforcement evidence.
+//!
+//! Pair the service with an engine built via
+//! `EngineBuilder::journal_appender` to also decouple journal writes from
+//! the run hot path: events land in batches (one segment upload per
+//! drained batch) instead of re-uploading the open segment per event.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use dflow::engine::{Backend, Engine};
+//! use dflow::journal::{Appender, Journal};
+//! use dflow::service::{ServiceConfig, WorkflowService};
+//! use dflow::storage::MemStorage;
+//!
+//! let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+//! let engine = Arc::new(
+//!     Engine::builder()
+//!         .backend(Backend::local_slots("box", 4))
+//!         .journal_appender(Appender::spawn(Arc::clone(&journal)))
+//!         .build(),
+//! );
+//! let svc = WorkflowService::start(engine, ServiceConfig::default()).unwrap();
+//! let run_id = svc.submit("alice", my_workflow()).unwrap();
+//! svc.watch(run_id); // RunWatch: poll()/follow() the journal stream
+//! # fn my_workflow() -> dflow::core::Workflow { unimplemented!() }
+//! ```
+//! (`no_run`: doctest binaries lack the xla rpath in this build image.)
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::core::Workflow;
+use crate::engine::{Engine, ReusedStep, RunPhase, SubmitOptions, Submitted, WorkflowRun};
+use crate::journal::{Journal, JournalEvent, Recorded, RunRegistry};
+use crate::jsonx::Json;
+use crate::metrics::{Counter, LabelCounters};
+
+/// Control-plane configuration.
+#[derive(Clone)]
+pub struct ServiceConfig {
+    /// Global cap on concurrently executing runs.
+    pub max_live_runs: usize,
+    /// Per-tenant cap on concurrently executing runs, unless overridden
+    /// in [`ServiceConfig::tenant_quotas`].
+    pub default_tenant_quota: usize,
+    /// Per-tenant quota overrides.
+    pub tenant_quotas: BTreeMap<String, usize>,
+    /// Bound on queued (admitted but not yet started) submissions; a full
+    /// queue rejects new submissions.
+    pub queue_cap: usize,
+    /// Cadence of the maintenance tick (cancel markers, auto-compaction).
+    pub maintenance_interval: Duration,
+    /// Auto-compact closed runs' journals on the maintenance tick.
+    pub auto_compact: bool,
+    /// How long after a run closes before it becomes a compaction
+    /// candidate — post-terminal stragglers (watchdog threads mirroring
+    /// pod releases into the journal) must drain first, or a compact
+    /// could delete the segment their cached writer is re-uploading.
+    pub compaction_grace: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_live_runs: 8,
+            default_tenant_quota: 4,
+            tenant_quotas: BTreeMap::new(),
+            queue_cap: 256,
+            maintenance_interval: Duration::from_millis(500),
+            auto_compact: true,
+            compaction_grace: Duration::from_secs(1),
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Override one tenant's live-run quota.
+    pub fn with_quota(mut self, tenant: &str, quota: usize) -> ServiceConfig {
+        self.tenant_quotas.insert(tenant.to_string(), quota);
+        self
+    }
+
+    /// Effective quota for a tenant (min 1 — a zero quota would deadlock
+    /// that tenant's queue entries forever).
+    pub fn quota_for(&self, tenant: &str) -> usize {
+        self.tenant_quotas
+            .get(tenant)
+            .copied()
+            .unwrap_or(self.default_tenant_quota)
+            .max(1)
+    }
+}
+
+/// Per-tenant control-plane counters (see module docs).
+#[derive(Default)]
+pub struct ServiceMetrics {
+    /// Submissions accepted into the queue, per tenant.
+    pub submitted: LabelCounters,
+    /// Submissions rejected (queue full / draining), per tenant.
+    pub rejected: LabelCounters,
+    /// Runs started by the dispatcher, per tenant.
+    pub started: LabelCounters,
+    pub succeeded: LabelCounters,
+    pub failed: LabelCounters,
+    pub cancelled: LabelCounters,
+    /// High-water mark of concurrently live runs, per tenant (the quota
+    /// invariant: never exceeds `quota_for(tenant)`).
+    pub live_peak: LabelCounters,
+    /// Closed-run journal compactions performed by the maintenance tick.
+    pub compactions: Counter,
+    /// Durable cancel markers picked up by the maintenance tick.
+    pub cancel_requests: Counter,
+}
+
+impl ServiceMetrics {
+    /// JSON export (the `dflow` CLI's service-status surface).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", self.submitted.to_json()),
+            ("rejected", self.rejected.to_json()),
+            ("started", self.started.to_json()),
+            ("succeeded", self.succeeded.to_json()),
+            ("failed", self.failed.to_json()),
+            ("cancelled", self.cancelled.to_json()),
+            ("live_peak", self.live_peak.to_json()),
+            ("compactions", Json::n(self.compactions.get() as f64)),
+            ("cancel_requests", Json::n(self.cancel_requests.get() as f64)),
+        ])
+    }
+}
+
+/// One queued (admitted, not yet started) submission.
+struct Pending {
+    run_id: u64,
+    tenant: String,
+    wf: Workflow,
+    reuse: Vec<ReusedStep>,
+    resubmission: bool,
+}
+
+/// One executing run.
+struct LiveRun {
+    tenant: String,
+    run: Arc<WorkflowRun>,
+}
+
+struct SvcState {
+    queue: VecDeque<Pending>,
+    /// Picked from the queue but not yet in `live` (the dispatcher is
+    /// between the pick and the engine submission). Keeps every admitted
+    /// run visible to `cancel`/`wait_idle` at all times — without it, a
+    /// run would briefly be in neither map and a cancel could miss it.
+    starting: BTreeSet<u64>,
+    live: BTreeMap<u64, LiveRun>,
+    /// run id → when the reaper closed it. Auto-compaction waits out a
+    /// grace period so post-terminal stragglers (watchdog threads
+    /// journaling trace mirrors through a cached segment writer) cannot
+    /// race a compact that deletes the segment under them.
+    recently_closed: BTreeMap<u64, Instant>,
+    /// tenant → currently live runs (reserved at pick time, released by
+    /// the reaper, so the dispatcher can never over-admit a tenant).
+    tenant_live: BTreeMap<String, usize>,
+    /// tenant → runs ever started (fair-share tiebreak).
+    tenant_started: BTreeMap<String, u64>,
+    /// `(tenant, run_id)` in dispatch order (fair-share observability).
+    start_log: Vec<(String, u64)>,
+    queue_peak: usize,
+    draining: bool,
+    shutdown: bool,
+}
+
+struct SvcInner {
+    engine: Arc<Engine>,
+    journal: Arc<Journal>,
+    config: ServiceConfig,
+    metrics: ServiceMetrics,
+    state: Mutex<SvcState>,
+    /// Dispatcher/drain wakeups: submission, run completion, shutdown.
+    cv: Condvar,
+    /// Maintenance wakeups: shutdown only (ticks are timer-driven).
+    tick_cv: Condvar,
+    /// Closed runs that may still need compaction: every run this service
+    /// closes (reaped, cancelled-while-queued, refused) plus a one-time
+    /// startup scan of pre-existing journal history. Drives the
+    /// compaction loop — ids leave the set once compacted (or verified
+    /// snapshot-only) — so steady-state ticks never re-list the journal.
+    compact_candidates: Mutex<BTreeSet<u64>>,
+    /// Startup scan of `compact_candidates` performed?
+    scanned: AtomicBool,
+    /// Serializes retry enqueues against an in-flight compaction of the
+    /// same run (lock order: gate → state, everywhere).
+    compact_gate: Mutex<()>,
+}
+
+impl SvcInner {
+    /// Pick the next startable submission under global and per-tenant
+    /// caps, fair-share ordered. Reserves the tenant-live slot before
+    /// releasing the lock.
+    fn pick_locked(&self, st: &mut SvcState) -> Option<Pending> {
+        if st.live.len() >= self.config.max_live_runs {
+            return None;
+        }
+        // admissible = tenant below quota; among those prefer the tenant
+        // with the fewest live runs, then fewest-ever-started, then FIFO
+        let mut best: Option<(usize, u64, usize)> = None;
+        for (idx, p) in st.queue.iter().enumerate() {
+            let live = st.tenant_live.get(&p.tenant).copied().unwrap_or(0);
+            if live >= self.config.quota_for(&p.tenant) {
+                continue;
+            }
+            let started = st.tenant_started.get(&p.tenant).copied().unwrap_or(0);
+            let cand = (live, started, idx);
+            if best.map_or(true, |b| cand < b) {
+                best = Some(cand);
+            }
+        }
+        let (_, _, idx) = best?;
+        let p = st.queue.remove(idx).expect("indexed queue entry vanished");
+        let live = st.tenant_live.entry(p.tenant.clone()).or_insert(0);
+        *live += 1;
+        self.metrics.live_peak.record_max(&p.tenant, *live as u64);
+        *st.tenant_started.entry(p.tenant.clone()).or_insert(0) += 1;
+        // visible as "starting" until the engine submission lands in
+        // `live` — cancel and wait_idle must never see a gap
+        st.starting.insert(p.run_id);
+        Some(p)
+    }
+
+    fn dispatch_loop(self: &Arc<SvcInner>) {
+        loop {
+            let pending = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    if let Some(p) = self.pick_locked(&mut st) {
+                        break p;
+                    }
+                    st = self.cv.wait(st).unwrap();
+                }
+            };
+            let tenant = pending.tenant.clone();
+            let run_id = pending.run_id;
+            let wf_name = pending.wf.name.clone();
+            let resubmission = pending.resubmission;
+            let opts = SubmitOptions {
+                reuse: pending.reuse,
+                run_id: Some(run_id),
+                resubmission,
+            };
+            match self.engine.submit_with_options(pending.wf, opts) {
+                Ok(sub) => {
+                    self.metrics.started.inc(&tenant);
+                    let mut st = self.state.lock().unwrap();
+                    st.starting.remove(&run_id);
+                    st.live.insert(
+                        run_id,
+                        LiveRun { tenant: tenant.clone(), run: Arc::clone(&sub.run) },
+                    );
+                    st.start_log.push((tenant.clone(), run_id));
+                    drop(st);
+                    self.cv.notify_all();
+                    let inner = Arc::clone(self);
+                    std::thread::Builder::new()
+                        .name(format!("dflow-svc-reap-{run_id}"))
+                        .spawn(move || inner.reap(run_id, tenant, sub))
+                        .expect("spawn service reaper");
+                }
+                Err(e) => {
+                    // submissions are pre-validated, so this is a raced
+                    // engine-side refusal: release the reservation and
+                    // journal the run as failed so it stays observable.
+                    // A resubmission already has a stream (with the real
+                    // workflow name) — only the failure is appended.
+                    self.metrics.failed.inc(&tenant);
+                    let mut st = self.state.lock().unwrap();
+                    st.starting.remove(&run_id);
+                    if let Some(n) = st.tenant_live.get_mut(&tenant) {
+                        *n = n.saturating_sub(1);
+                    }
+                    drop(st);
+                    let mut events = Vec::new();
+                    if !resubmission {
+                        events.push(JournalEvent::RunSubmitted { workflow: wf_name });
+                    }
+                    events.push(JournalEvent::RunFailed { message: e });
+                    let _ = self.journal.append_batch(run_id, &events);
+                    self.compact_candidates.lock().unwrap().insert(run_id);
+                    self.cv.notify_all();
+                }
+            }
+        }
+    }
+
+    /// Wait one run out, then fold its outcome into metrics and free its
+    /// admission slot.
+    fn reap(&self, run_id: u64, tenant: String, sub: Submitted) {
+        let result = sub.wait();
+        match result.run.phase() {
+            RunPhase::Succeeded => self.metrics.succeeded.inc(&tenant),
+            RunPhase::Cancelled => self.metrics.cancelled.inc(&tenant),
+            _ => self.metrics.failed.inc(&tenant),
+        }
+        let mut st = self.state.lock().unwrap();
+        st.live.remove(&run_id);
+        st.recently_closed.insert(run_id, Instant::now());
+        if let Some(n) = st.tenant_live.get_mut(&tenant) {
+            *n = n.saturating_sub(1);
+        }
+        drop(st);
+        self.compact_candidates.lock().unwrap().insert(run_id);
+        self.cv.notify_all();
+    }
+
+    fn maintenance_loop(&self) {
+        loop {
+            {
+                let st = self.state.lock().unwrap();
+                if st.shutdown {
+                    return;
+                }
+                let (st, _) =
+                    self.tick_cv.wait_timeout(st, self.config.maintenance_interval).unwrap();
+                if st.shutdown {
+                    return;
+                }
+            }
+            self.maintenance_tick();
+        }
+    }
+
+    /// One maintenance pass: apply durable cancel markers, then compact
+    /// closed runs that still carry raw segments.
+    fn maintenance_tick(&self) {
+        // Cancel markers are only CLEARED once this service applied them
+        // or proved them stale (the run is closed in the journal). A
+        // marker for a run that is live in a *different* process sharing
+        // the store is left alone — the owner's tick applies it;
+        // clear-on-read here would silently lose that cancel.
+        if let Ok(requests) = self.journal.pending_cancel_requests() {
+            for (run_id, reason) in requests {
+                match self.cancel_by_id(run_id, &reason) {
+                    Ok(()) => {
+                        self.metrics.cancel_requests.inc();
+                        let _ = self.journal.clear_cancel_request(run_id);
+                    }
+                    Err(_) => {
+                        // a run this service is still handling (starting/
+                        // queued/live) is NEVER stale, whatever the
+                        // journal's (pre-resubmission) phase says: a
+                        // retried run in mid-dispatch replays as closed
+                        // until RunResubmitted lands — clearing its
+                        // marker here would silently drop the cancel.
+                        // Leave it; the next tick applies it.
+                        let ours = {
+                            let st = self.state.lock().unwrap();
+                            st.starting.contains(&run_id)
+                                || st.live.contains_key(&run_id)
+                                || st.queue.iter().any(|p| p.run_id == run_id)
+                        };
+                        if ours {
+                            continue;
+                        }
+                        // stale iff the journal says the run closed
+                        let closed = matches!(
+                            self.journal.replay(run_id),
+                            Ok(rec) if !matches!(rec.phase, RunPhase::Running)
+                        );
+                        if closed {
+                            self.metrics.cancel_requests.inc();
+                            let _ = self.journal.clear_cancel_request(run_id);
+                        }
+                    }
+                }
+            }
+        }
+        // prune the post-close grace map unconditionally (reap inserts
+        // unconditionally — gating this on auto_compact would leak one
+        // entry per closed run forever on services with compaction off)
+        let grace = self.config.compaction_grace;
+        {
+            let mut st = self.state.lock().unwrap();
+            let now = Instant::now();
+            st.recently_closed.retain(|_, at| now.duration_since(*at) < grace);
+        }
+        if self.config.auto_compact {
+            // One-time scan: history from before this service started
+            // seeds the candidate set; afterwards candidates come only
+            // from run closes, so steady-state ticks never re-list the
+            // whole journal prefix.
+            if !self.scanned.swap(true, Ordering::SeqCst) {
+                if let Ok(ids) = self.journal.run_ids() {
+                    self.compact_candidates.lock().unwrap().extend(ids);
+                }
+            }
+            let candidates: Vec<u64> =
+                self.compact_candidates.lock().unwrap().iter().copied().collect();
+            for id in candidates {
+                // cheap pre-checks WITHOUT the gate, so submissions are
+                // not stalled behind journal reads
+                if !matches!(self.journal.has_raw_segments(id), Ok(true)) {
+                    // already just a snapshot: verified, stop considering
+                    self.compact_candidates.lock().unwrap().remove(&id);
+                    continue;
+                }
+                let terminal = matches!(
+                    self.journal.replay(id),
+                    Ok(rec) if !matches!(rec.phase, RunPhase::Running)
+                );
+                if !terminal {
+                    // open (live in another process) or unreadable: not
+                    // ours to compact — drop it from the loop (a
+                    // close/retry on this service re-adds it)
+                    self.compact_candidates.lock().unwrap().remove(&id);
+                    continue;
+                }
+                // Serialize against retry enqueues (gate) and re-check
+                // busy-ness under it immediately before compacting: a
+                // retry admitted after the candidate list was built must
+                // not have its fresh appends deleted out from under it.
+                // The gate is held only across this one compact; the
+                // grace period additionally keeps post-terminal
+                // stragglers (watchdog trace mirrors through a cached
+                // segment writer) out of the window.
+                let _gate = self.compact_gate.lock().unwrap();
+                let busy = {
+                    let st = self.state.lock().unwrap();
+                    st.live.contains_key(&id)
+                        || st.starting.contains(&id)
+                        || st.queue.iter().any(|p| p.run_id == id)
+                        || st.recently_closed.contains_key(&id)
+                };
+                if busy {
+                    continue; // stays a candidate for a later tick
+                }
+                if self.journal.compact(id).is_ok() {
+                    self.metrics.compactions.inc();
+                    self.compact_candidates.lock().unwrap().remove(&id);
+                }
+            }
+        }
+    }
+
+    /// Cancel a queued or live run (the shared core of
+    /// [`WorkflowService::cancel`] and marker-driven cancels).
+    fn cancel_by_id(&self, run_id: u64, reason: &str) -> Result<(), String> {
+        let mut st = self.state.lock().unwrap();
+        if let Some(pos) = st.queue.iter().position(|p| p.run_id == run_id) {
+            let p = st.queue.remove(pos).expect("indexed queue entry vanished");
+            self.metrics.cancelled.inc(&p.tenant);
+            drop(st);
+            // the queued run never journaled anything: give it a durable
+            // record so the registry can answer for it (a resubmission
+            // already has a stream — only the cancel is appended)
+            let mut events = Vec::new();
+            if !p.resubmission {
+                events.push(JournalEvent::RunSubmitted { workflow: p.wf.name.clone() });
+            }
+            events.push(JournalEvent::RunCancelled { reason: reason.to_string() });
+            self.journal.append_batch(run_id, &events)?;
+            // the stream just closed Cancelled: compaction candidate
+            self.compact_candidates.lock().unwrap().insert(run_id);
+            self.cv.notify_all();
+            return Ok(());
+        }
+        if st.starting.contains(&run_id) {
+            // mid-dispatch: the run will be in `live` momentarily — the
+            // caller (or the next maintenance tick, for markers) retries
+            return Err(format!("run {run_id} is starting; retry the cancel shortly"));
+        }
+        if let Some(lr) = st.live.get(&run_id) {
+            let run = Arc::clone(&lr.run);
+            drop(st);
+            if run.cancel(reason) {
+                Ok(())
+            } else {
+                Err(format!("run {run_id} is already stopping"))
+            }
+        } else {
+            drop(st);
+            match self.journal.replay(run_id) {
+                Ok(rec) => Err(format!(
+                    "run {run_id} is not live on this service (phase {:?})",
+                    rec.phase
+                )),
+                Err(e) => Err(format!("run {run_id} is unknown: {e}")),
+            }
+        }
+    }
+}
+
+/// Queue/live snapshot (see [`WorkflowService::status`]).
+#[derive(Debug, Clone)]
+pub struct ServiceStatus {
+    pub queued: usize,
+    pub live: usize,
+    pub queue_peak: usize,
+    /// tenant → live runs right now.
+    pub tenants_live: BTreeMap<String, usize>,
+}
+
+/// The multi-run workflow daemon. Owns one [`Engine`] (with its journal)
+/// and serves many concurrent tenants; see the module docs. Dropping the
+/// service stops admitting and joins its control threads — live runs
+/// finish on their engine threads and are reaped in the background.
+pub struct WorkflowService {
+    inner: Arc<SvcInner>,
+    registry: RunRegistry,
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    maintenance: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl WorkflowService {
+    /// Start the daemon over `engine` (which must have a journal attached
+    /// — the service's durable registry and cancel/retry substrate).
+    pub fn start(engine: Arc<Engine>, config: ServiceConfig) -> Result<WorkflowService, String> {
+        let journal = engine
+            .journal()
+            .cloned()
+            .ok_or_else(|| {
+                "WorkflowService requires an engine with a journal attached \
+                 (EngineBuilder::journal or ::journal_appender)"
+                    .to_string()
+            })?;
+        let inner = Arc::new(SvcInner {
+            engine,
+            journal: Arc::clone(&journal),
+            config,
+            metrics: ServiceMetrics::default(),
+            state: Mutex::new(SvcState {
+                queue: VecDeque::new(),
+                starting: BTreeSet::new(),
+                live: BTreeMap::new(),
+                recently_closed: BTreeMap::new(),
+                tenant_live: BTreeMap::new(),
+                tenant_started: BTreeMap::new(),
+                start_log: Vec::new(),
+                queue_peak: 0,
+                draining: false,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            tick_cv: Condvar::new(),
+            compact_candidates: Mutex::new(BTreeSet::new()),
+            scanned: AtomicBool::new(false),
+            compact_gate: Mutex::new(()),
+        });
+        let d = Arc::clone(&inner);
+        let dispatcher = std::thread::Builder::new()
+            .name("dflow-svc-dispatch".to_string())
+            .spawn(move || d.dispatch_loop())
+            .map_err(|e| e.to_string())?;
+        let m = Arc::clone(&inner);
+        let maintenance = std::thread::Builder::new()
+            .name("dflow-svc-maint".to_string())
+            .spawn(move || m.maintenance_loop())
+            .map_err(|e| e.to_string())?;
+        Ok(WorkflowService {
+            inner,
+            registry: RunRegistry::new(journal),
+            dispatcher: Mutex::new(Some(dispatcher)),
+            maintenance: Mutex::new(Some(maintenance)),
+        })
+    }
+
+    /// Submit a workflow on behalf of `tenant`. Returns the run id
+    /// immediately — the run is **queued**; the dispatcher starts it under
+    /// admission control. Rejects (with a clear error) when the bounded
+    /// queue is full or the service is draining.
+    pub fn submit(&self, tenant: &str, wf: Workflow) -> Result<u64, String> {
+        self.enqueue(tenant, wf, Vec::new(), None, false)
+    }
+
+    /// [`WorkflowService::submit`] with reused steps spliced in (§2.5).
+    pub fn submit_with_reuse(
+        &self,
+        tenant: &str,
+        wf: Workflow,
+        reuse: Vec<ReusedStep>,
+    ) -> Result<u64, String> {
+        self.enqueue(tenant, wf, reuse, None, false)
+    }
+
+    fn enqueue(
+        &self,
+        tenant: &str,
+        wf: Workflow,
+        reuse: Vec<ReusedStep>,
+        run_id: Option<u64>,
+        resubmission: bool,
+    ) -> Result<u64, String> {
+        wf.validate()?;
+        // gate → state lock order, shared with the compaction loop: a
+        // retry cannot slip into the queue between compaction's busy
+        // re-check and the compact itself
+        let _gate = self.inner.compact_gate.lock().unwrap();
+        let mut st = self.inner.state.lock().unwrap();
+        if st.draining {
+            self.inner.metrics.rejected.inc(tenant);
+            return Err("service is draining; submissions are disabled".to_string());
+        }
+        if st.queue.len() >= self.inner.config.queue_cap {
+            self.inner.metrics.rejected.inc(tenant);
+            return Err(format!(
+                "admission queue is full ({} pending, cap {}); retry later",
+                st.queue.len(),
+                self.inner.config.queue_cap
+            ));
+        }
+        let run_id = run_id.unwrap_or_else(crate::util::next_id);
+        st.queue.push_back(Pending {
+            run_id,
+            tenant: tenant.to_string(),
+            wf,
+            reuse,
+            resubmission,
+        });
+        st.queue_peak = st.queue_peak.max(st.queue.len());
+        self.inner.metrics.submitted.inc(tenant);
+        drop(st);
+        self.inner.cv.notify_all();
+        Ok(run_id)
+    }
+
+    /// Cancel a queued or live run. Queued runs are dropped from the
+    /// queue (and journaled `RunCancelled` so the registry can answer for
+    /// them); live runs cancel through their attempt tokens and close as
+    /// [`RunPhase::Cancelled`] once in-flight OPs stop. Use
+    /// [`WorkflowService::run`] + `wait_finished` to block on the stop.
+    pub fn cancel(&self, run_id: u64, reason: &str) -> Result<(), String> {
+        self.inner.cancel_by_id(run_id, reason)
+    }
+
+    /// Re-queue a **closed** journaled run under the same run id, with
+    /// every journaled success spliced in — exactly the non-succeeded
+    /// suffix executes again (`Engine::resubmit`, service-managed). `wf`
+    /// must be the same workflow definition the run was submitted with.
+    pub fn retry(&self, tenant: &str, wf: Workflow, run_id: u64) -> Result<u64, String> {
+        {
+            let st = self.inner.state.lock().unwrap();
+            if st.live.contains_key(&run_id) || st.starting.contains(&run_id) {
+                return Err(format!("run {run_id} is still live; cancel it first"));
+            }
+            if st.queue.iter().any(|p| p.run_id == run_id) {
+                return Err(format!("run {run_id} is already queued"));
+            }
+        }
+        let rec = self.inner.journal.replay(run_id)?;
+        if rec.workflow != wf.name {
+            return Err(format!(
+                "journaled run {run_id} belongs to workflow '{}', not '{}'",
+                rec.workflow, wf.name
+            ));
+        }
+        // NOTE: a journal phase of `Running` is allowed through — that is
+        // the crash-recovery case (`Engine::resubmit`'s raison d'être): the
+        // process driving the run died without closing the stream. The
+        // live/queued checks above already refuse runs THIS service still
+        // owns; a run live in a *different* process sharing the store is
+        // indistinguishable from a crash and remains the operator's call.
+        self.enqueue(tenant, wf, rec.reusable_steps(), Some(run_id), true)
+    }
+
+    /// Tail a run's journal as a stream of [`Recorded`] events.
+    pub fn watch(&self, run_id: u64) -> RunWatch {
+        RunWatch::new(Arc::clone(&self.inner.journal), run_id)
+    }
+
+    /// Live handle of an executing run (`None` when queued or closed).
+    pub fn run(&self, run_id: u64) -> Option<Arc<WorkflowRun>> {
+        self.inner.state.lock().unwrap().live.get(&run_id).map(|lr| Arc::clone(&lr.run))
+    }
+
+    /// Queue/live snapshot (`live` includes runs mid-dispatch).
+    pub fn status(&self) -> ServiceStatus {
+        let st = self.inner.state.lock().unwrap();
+        ServiceStatus {
+            queued: st.queue.len(),
+            live: st.live.len() + st.starting.len(),
+            queue_peak: st.queue_peak,
+            tenants_live: st.tenant_live.clone(),
+        }
+    }
+
+    /// Control-plane status document (what `dflow service-status` would
+    /// print): queue depth, live runs per tenant, per-tenant counters.
+    pub fn status_json(&self) -> Json {
+        let st = self.inner.state.lock().unwrap();
+        let queued: Vec<Json> = st
+            .queue
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("run_id", Json::n(p.run_id as f64)),
+                    ("tenant", Json::s(p.tenant.clone())),
+                    ("workflow", Json::s(p.wf.name.clone())),
+                    ("resubmission", Json::Bool(p.resubmission)),
+                ])
+            })
+            .collect();
+        let live: Vec<Json> = st
+            .live
+            .iter()
+            .map(|(id, lr)| {
+                Json::obj(vec![
+                    ("run_id", Json::n(*id as f64)),
+                    ("tenant", Json::s(lr.tenant.clone())),
+                    ("workflow", Json::s(lr.run.workflow_name.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("queued", Json::Arr(queued)),
+            ("starting", Json::n(st.starting.len() as f64)),
+            ("live", Json::Arr(live)),
+            ("queue_peak", Json::n(st.queue_peak as f64)),
+            ("metrics", self.inner.metrics.to_json()),
+        ])
+    }
+
+    /// `(tenant, run_id)` pairs in dispatch order — the fair-share
+    /// evidence trail.
+    pub fn start_order(&self) -> Vec<(String, u64)> {
+        self.inner.state.lock().unwrap().start_log.clone()
+    }
+
+    /// Per-tenant counters.
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.inner.metrics
+    }
+
+    /// The durable run registry (list/get/timeline over the journal).
+    pub fn registry(&self) -> &RunRegistry {
+        &self.registry
+    }
+
+    /// The journal behind this service.
+    pub fn journal(&self) -> &Arc<Journal> {
+        &self.inner.journal
+    }
+
+    /// The engine this service drives.
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.inner.engine
+    }
+
+    /// Run one maintenance pass now (tests; the background tick does this
+    /// on [`ServiceConfig::maintenance_interval`]).
+    pub fn maintenance_tick(&self) {
+        self.inner.maintenance_tick();
+    }
+
+    /// Stop admitting new submissions (queued ones still start).
+    pub fn drain_admissions(&self) {
+        self.inner.state.lock().unwrap().draining = true;
+    }
+
+    /// Block until no runs are queued or live, or `timeout` elapses;
+    /// returns whether the service is idle.
+    pub fn wait_idle(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.state.lock().unwrap();
+        while !(st.queue.is_empty() && st.starting.is_empty() && st.live.is_empty()) {
+            if Instant::now() >= deadline {
+                return false;
+            }
+            let (g, _) = self.inner.cv.wait_timeout(st, Duration::from_millis(20)).unwrap();
+            st = g;
+        }
+        true
+    }
+}
+
+impl Drop for WorkflowService {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.draining = true;
+            st.shutdown = true;
+        }
+        self.inner.cv.notify_all();
+        self.inner.tick_cv.notify_all();
+        for handle in [
+            self.dispatcher.lock().unwrap().take(),
+            self.maintenance.lock().unwrap().take(),
+        ]
+        .into_iter()
+        .flatten()
+        {
+            let _ = handle.join();
+        }
+        // live runs finish on engine threads; their reapers hold SvcInner
+        // and complete the bookkeeping on their own
+    }
+}
+
+/// Where a [`RunWatch`] is in its run's stream.
+enum WatchCursor {
+    /// Incremental raw-segment tail (the normal live path): next segment
+    /// to read + records of it already delivered. Each poll costs one
+    /// listing plus the open segment — O(open segment), not O(history).
+    Tail { seg: u64, rec: usize },
+    /// Full-replay fallback (the stream holds a compaction snapshot a
+    /// raw tail cannot express): `delivered` records already handed out.
+    Full { delivered: usize },
+}
+
+/// Journal tailer: the durable half of `dflow watch`. Polls the run's
+/// record stream and yields only the suffix it has not delivered yet —
+/// works live (the run is appending), post-hoc (full history replays), and
+/// cross-process (any process sharing the store can watch).
+pub struct RunWatch {
+    journal: Arc<Journal>,
+    run_id: u64,
+    cursor: WatchCursor,
+}
+
+impl RunWatch {
+    /// Tail `run_id` on `journal` from the beginning of its stream.
+    pub fn new(journal: Arc<Journal>, run_id: u64) -> RunWatch {
+        RunWatch { journal, run_id, cursor: WatchCursor::Tail { seg: 0, rec: 0 } }
+    }
+
+    /// Events appended since the last poll (empty when none yet — a
+    /// queued run has no stream until it starts).
+    pub fn poll(&mut self) -> Result<Vec<Recorded>, String> {
+        if let WatchCursor::Tail { seg, rec } = &mut self.cursor {
+            match self.journal.tail_raw(self.run_id, seg, rec)? {
+                Some(fresh) => return Ok(fresh),
+                None => {
+                    // compacted stream: fall back to full replay. A watch
+                    // that already delivered raw records and then sees a
+                    // compaction (possible only when no live service owns
+                    // the run) re-delivers the folded history as one
+                    // snapshot-seeded stream.
+                    self.cursor = WatchCursor::Full { delivered: 0 };
+                }
+            }
+        }
+        let events = match self.journal.events(self.run_id) {
+            Ok((events, _torn)) => events,
+            Err(e) if e.contains("no journal records") => return Ok(Vec::new()),
+            Err(e) => return Err(e),
+        };
+        let WatchCursor::Full { delivered } = &mut self.cursor else {
+            unreachable!("tail mode returns above")
+        };
+        let fresh: Vec<Recorded> = events.into_iter().skip(*delivered).collect();
+        *delivered += fresh.len();
+        Ok(fresh)
+    }
+
+    /// Follow the stream, invoking `f` per event, until the run reaches a
+    /// terminal phase; returns that phase. Poll cadence is `interval`.
+    ///
+    /// Waits indefinitely for the stream to *appear* (a queued run has no
+    /// records until it starts) — callers watching an id of unknown
+    /// provenance should verify it exists (`Journal::run_ids`) first.
+    pub fn follow(
+        &mut self,
+        interval: Duration,
+        mut f: impl FnMut(&Recorded),
+    ) -> Result<RunPhase, String> {
+        let mut terminal: Option<RunPhase> = None;
+        loop {
+            for rec in self.poll()? {
+                f(&rec);
+                match &rec.event {
+                    JournalEvent::RunSucceeded => terminal = Some(RunPhase::Succeeded),
+                    JournalEvent::RunFailed { .. } => terminal = Some(RunPhase::Failed),
+                    JournalEvent::RunCancelled { .. } => terminal = Some(RunPhase::Cancelled),
+                    // a resubmission re-opens the stream
+                    JournalEvent::RunSubmitted { .. }
+                    | JournalEvent::RunResubmitted { .. } => terminal = None,
+                    JournalEvent::Snapshot { run } => {
+                        terminal = if matches!(run.phase, RunPhase::Running) {
+                            None
+                        } else {
+                            Some(run.phase)
+                        };
+                    }
+                    _ => {}
+                }
+            }
+            if let Some(p) = terminal {
+                return Ok(p);
+            }
+            std::thread::sleep(interval);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ContainerTemplate, FnOp, ParamType, Signature, Step, Steps};
+    use crate::engine::Backend;
+    use crate::storage::MemStorage;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    fn quick_wf(name: &str) -> Workflow {
+        let op = Arc::new(FnOp::new(
+            Signature::new().out_param("v", ParamType::Int),
+            |ctx| {
+                ctx.set("v", 1i64);
+                Ok(())
+            },
+        ));
+        Workflow::new(name)
+            .container(ContainerTemplate::new("op", op))
+            .steps(Steps::new("main").then(Step::new("s", "op")))
+            .entrypoint("main")
+    }
+
+    fn service() -> WorkflowService {
+        let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+        let engine = Arc::new(
+            Engine::builder()
+                .backend(Backend::local_slots("box", 8))
+                .journal(journal)
+                .build(),
+        );
+        WorkflowService::start(engine, ServiceConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn submit_runs_and_registry_records() {
+        let svc = service();
+        let id = svc.submit("alice", quick_wf("w")).unwrap();
+        assert!(svc.wait_idle(Duration::from_secs(20)));
+        let rec = svc.registry().get_run(id).unwrap();
+        assert_eq!(rec.phase, RunPhase::Succeeded);
+        assert_eq!(svc.metrics().succeeded.get("alice"), 1);
+        assert_eq!(svc.metrics().submitted.get("alice"), 1);
+    }
+
+    #[test]
+    fn queue_cap_rejects_with_clear_error() {
+        let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+        let engine = Arc::new(
+            Engine::builder().backend(Backend::local_slots("box", 1)).journal(journal).build(),
+        );
+        // max_live 1 and a 1-slot queue: the second queued submission
+        // must be rejected, not buffered
+        let cfg = ServiceConfig {
+            max_live_runs: 1,
+            queue_cap: 1,
+            ..ServiceConfig::default()
+        };
+        let svc = WorkflowService::start(engine, cfg).unwrap();
+        let slow = Arc::new(FnOp::new(Signature::new(), |_| {
+            std::thread::sleep(Duration::from_millis(150));
+            Ok(())
+        }));
+        let slow_wf = |name: &str| {
+            Workflow::new(name)
+                .container(ContainerTemplate::new("op", Arc::clone(&slow)))
+                .steps(Steps::new("main").then(Step::new("s", "op")))
+                .entrypoint("main")
+        };
+        svc.submit("a", slow_wf("w1")).unwrap();
+        // give the dispatcher a moment to start w1, then fill the queue
+        std::thread::sleep(Duration::from_millis(50));
+        svc.submit("a", slow_wf("w2")).unwrap();
+        let err = svc.submit("a", slow_wf("w3")).unwrap_err();
+        assert!(err.contains("queue is full"), "{err}");
+        assert_eq!(svc.metrics().rejected.get("a"), 1);
+        assert!(svc.wait_idle(Duration::from_secs(20)));
+    }
+
+    #[test]
+    fn cancel_of_a_queued_run_journals_cancelled() {
+        let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+        let engine = Arc::new(
+            Engine::builder().backend(Backend::local_slots("box", 1)).journal(journal).build(),
+        );
+        let cfg = ServiceConfig { max_live_runs: 1, ..ServiceConfig::default() };
+        let svc = WorkflowService::start(engine, cfg).unwrap();
+        let slow = Arc::new(FnOp::new(Signature::new(), |_| {
+            std::thread::sleep(Duration::from_millis(200));
+            Ok(())
+        }));
+        let wf = Workflow::new("blocker")
+            .container(ContainerTemplate::new("op", slow))
+            .steps(Steps::new("main").then(Step::new("s", "op")))
+            .entrypoint("main");
+        svc.submit("a", wf).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let queued = svc.submit("a", quick_wf("victim")).unwrap();
+        svc.cancel(queued, "changed my mind").unwrap();
+        let rec = svc.journal().replay(queued).unwrap();
+        assert_eq!(rec.phase, RunPhase::Cancelled);
+        assert_eq!(rec.message, "changed my mind");
+        assert_eq!(svc.metrics().cancelled.get("a"), 1);
+        assert!(svc.wait_idle(Duration::from_secs(20)));
+        // the cancelled run never started
+        assert!(!svc.start_order().iter().any(|(_, id)| *id == queued));
+    }
+
+    #[test]
+    fn retry_of_open_or_unknown_run_is_refused() {
+        let svc = service();
+        let err = svc.retry("a", quick_wf("w"), 424242).unwrap_err();
+        assert!(err.contains("424242"), "{err}");
+        // a live run refuses retry
+        let slow = Arc::new(FnOp::new(Signature::new(), |_| {
+            std::thread::sleep(Duration::from_millis(200));
+            Ok(())
+        }));
+        let wf = Workflow::new("w")
+            .container(ContainerTemplate::new("op", slow))
+            .steps(Steps::new("main").then(Step::new("s", "op")))
+            .entrypoint("main");
+        let id = svc.submit("a", wf.clone()).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        let err = svc.retry("a", wf, id).unwrap_err();
+        assert!(err.contains("live") || err.contains("queued"), "{err}");
+        assert!(svc.wait_idle(Duration::from_secs(20)));
+    }
+
+    #[test]
+    fn watch_streams_incrementally_and_follow_sees_terminal() {
+        let svc = service();
+        let id = svc.submit("alice", quick_wf("w")).unwrap();
+        let mut watch = svc.watch(id);
+        let phase = watch
+            .follow(Duration::from_millis(10), |_| {})
+            .unwrap();
+        assert_eq!(phase, RunPhase::Succeeded);
+        // a fresh watch replays the full history, incrementally
+        let mut watch2 = svc.watch(id);
+        let first = watch2.poll().unwrap();
+        assert!(!first.is_empty());
+        assert!(watch2.poll().unwrap().is_empty(), "nothing new after full delivery");
+    }
+
+    #[test]
+    fn maintenance_tick_compacts_closed_runs_and_applies_cancel_markers() {
+        let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+        let engine = Arc::new(
+            Engine::builder().backend(Backend::local_slots("box", 8)).journal(journal).build(),
+        );
+        // zero grace so a just-closed run compacts on the explicit tick;
+        // park the background tick so it cannot race the explicit ones
+        // (marker double-processing would double-count cancel_requests)
+        let cfg = ServiceConfig {
+            compaction_grace: Duration::ZERO,
+            maintenance_interval: Duration::from_secs(3600),
+            ..ServiceConfig::default()
+        };
+        let svc = WorkflowService::start(engine, cfg).unwrap();
+        let id = svc.submit("alice", quick_wf("w")).unwrap();
+        assert!(svc.wait_idle(Duration::from_secs(20)));
+        assert!(svc.journal().has_raw_segments(id).unwrap());
+        svc.maintenance_tick();
+        assert!(!svc.journal().has_raw_segments(id).unwrap(), "tick must compact");
+        assert!(svc.metrics().compactions.get() >= 1);
+        // a marker for a closed run is cleared as stale (counted, no-op)
+        svc.journal().request_cancel(id, "late").unwrap();
+        svc.maintenance_tick();
+        assert_eq!(svc.metrics().cancel_requests.get(), 1);
+        assert!(svc.journal().pending_cancel_requests().unwrap().is_empty());
+        // the closed run's phase is untouched
+        assert_eq!(svc.registry().get_run(id).unwrap().phase, RunPhase::Succeeded);
+        // the run left the candidate set when it compacted: a second tick
+        // does not re-compact (or re-list) it
+        svc.maintenance_tick();
+        assert_eq!(svc.metrics().compactions.get(), 1, "no re-compaction");
+    }
+
+    #[test]
+    fn cancel_marker_for_a_foreign_live_run_is_left_pending() {
+        // a marker naming a run this service does not own (journal says
+        // Running — e.g. live in another process) must NOT be consumed
+        let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+        let engine = Arc::new(
+            Engine::builder().backend(Backend::local_slots("box", 8)).journal(journal).build(),
+        );
+        let cfg = ServiceConfig {
+            maintenance_interval: Duration::from_secs(3600),
+            ..ServiceConfig::default()
+        };
+        let svc = WorkflowService::start(engine, cfg).unwrap();
+        let foreign = crate::util::next_id();
+        svc.journal()
+            .append(foreign, &JournalEvent::RunSubmitted { workflow: "elsewhere".into() })
+            .unwrap();
+        svc.journal().request_cancel(foreign, "from another shell").unwrap();
+        svc.maintenance_tick();
+        let pending = svc.journal().pending_cancel_requests().unwrap();
+        assert_eq!(pending.len(), 1, "foreign-run marker must survive the tick");
+        assert_eq!(pending[0].0, foreign);
+        assert_eq!(svc.metrics().cancel_requests.get(), 0);
+    }
+
+    #[test]
+    fn retry_reruns_only_the_failed_suffix() {
+        let svc = service();
+        let calls = Arc::new(AtomicU32::new(0));
+        let c2 = Arc::clone(&calls);
+        let good = Arc::new(FnOp::new(
+            Signature::new().out_param("v", ParamType::Int),
+            move |ctx| {
+                c2.fetch_add(1, Ordering::SeqCst);
+                ctx.set("v", 7i64);
+                Ok(())
+            },
+        ));
+        let fail_once = Arc::new(AtomicU32::new(0));
+        let f2 = Arc::clone(&fail_once);
+        let flaky = Arc::new(FnOp::new(Signature::new(), move |_| {
+            if f2.fetch_add(1, Ordering::SeqCst) == 0 {
+                Err(crate::core::OpError::Fatal("first time fails".into()))
+            } else {
+                Ok(())
+            }
+        }));
+        let wf = Workflow::new("two-step")
+            .container(ContainerTemplate::new("good", good))
+            .container(ContainerTemplate::new("flaky", flaky))
+            .steps(
+                Steps::new("main")
+                    .then(Step::new("a", "good").key("step-a"))
+                    .then(Step::new("b", "flaky").key("step-b")),
+            )
+            .entrypoint("main");
+        let id = svc.submit("alice", wf.clone()).unwrap();
+        assert!(svc.wait_idle(Duration::from_secs(20)));
+        assert_eq!(svc.registry().get_run(id).unwrap().phase, RunPhase::Failed);
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        // retry: same run id, step a reused, only b re-executes
+        let rid = svc.retry("alice", wf, id).unwrap();
+        assert_eq!(rid, id);
+        assert!(svc.wait_idle(Duration::from_secs(20)));
+        let rec = svc.registry().get_run(id).unwrap();
+        assert_eq!(rec.phase, RunPhase::Succeeded);
+        assert_eq!(rec.resubmissions, 1);
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "step a must be reused, not re-run");
+    }
+}

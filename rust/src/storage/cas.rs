@@ -323,6 +323,9 @@ pub struct CasStore {
     refs: Mutex<BTreeMap<String, u64>>,
     /// Refcount mutations currently in flight (see [`CasStore::begin_mutation`]).
     mutators: AtomicU64,
+    /// A gc pass is sweeping: new refcount mutations back off transiently
+    /// until it finishes (see [`CasStore::gc`]).
+    gc_active: std::sync::atomic::AtomicBool,
     counters: Arc<CasCounters>,
 }
 
@@ -353,6 +356,7 @@ impl CasStore {
             inner,
             refs: Mutex::new(BTreeMap::new()),
             mutators: AtomicU64::new(0),
+            gc_active: std::sync::atomic::AtomicBool::new(false),
             counters: Arc::new(CasCounters::default()),
         }
     }
@@ -362,7 +366,17 @@ impl CasStore {
     /// placed: proceeding with the stale table still on disk would let a
     /// crash hand the next `attach` inconsistent refcounts.
     fn begin_mutation(&self) -> Result<MutationScope<'_>, StorageError> {
-        if self.mutators.fetch_add(1, Ordering::SeqCst) == 0 {
+        let prior = self.mutators.fetch_add(1, Ordering::SeqCst);
+        if self.gc_active.load(Ordering::SeqCst) {
+            // gc is sweeping: a mutation now could upload a chunk the
+            // sweep (working from its pre-gc mark) would immediately
+            // delete. Back off — with_retry re-drives the op after gc.
+            // SeqCst pairing with gc's flag-store/mutator-load guarantees
+            // at least one side observes the other.
+            self.mutators.fetch_sub(1, Ordering::SeqCst);
+            return Err(StorageError::Transient("cas gc in progress; retry".into()));
+        }
+        if prior == 0 {
             // mark dirty under the refs lock so the delete cannot
             // interleave with a finishing mutator's re-persist
             let refs = self.refs.lock().unwrap();
@@ -616,8 +630,51 @@ impl CasStore {
     /// Mark-sweep garbage collection: rebuild refcounts from manifests,
     /// then delete every `.cas/` chunk body no manifest references —
     /// orphans left by failed uploads and cancelled/timed-out attempts.
-    /// Assumes quiescence (no concurrent uploads).
+    ///
+    /// Quiescence is **enforced**, not assumed (ROADMAP "CAS
+    /// concurrent-safe gc" item): sweeping a moving store could delete a
+    /// chunk an in-flight upload just wrote, because its reference lands
+    /// after the mark phase read the refcounts. `gc` takes the refcount
+    /// lock and fails fast with a clear error while any refcount mutation
+    /// is in flight; for the duration of the sweep, *new* mutations back
+    /// off with a transient error (their bounded retry ladder re-drives
+    /// them once the sweep ends).
     pub fn gc(&self) -> Result<GcReport, StorageError> {
+        // one sweep at a time: a second gc passing the gate would let the
+        // first finisher clear `gc_active` while the second still sweeps,
+        // re-admitting mutations mid-sweep — the exact hazard the gate
+        // exists to prevent
+        if self
+            .gc_active
+            .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+            .is_err()
+        {
+            return Err(StorageError::Fatal(
+                "cas gc is already running; one sweep at a time".into(),
+            ));
+        }
+        {
+            // under the refcount lock: serializes with a finishing
+            // mutator's re-persist, so the dirty check can't read a
+            // half-closed mutation window
+            let _refs = self.refs.lock().unwrap();
+            let in_flight = self.mutators.load(Ordering::SeqCst);
+            if in_flight != 0 {
+                self.gc_active.store(false, Ordering::SeqCst);
+                return Err(StorageError::Fatal(format!(
+                    "cas gc requires a quiescent store: {in_flight} refcount \
+                     mutation(s) in flight — retry when uploads/deletes have drained"
+                )));
+            }
+        }
+        let report = self.gc_swept();
+        self.gc_active.store(false, Ordering::SeqCst);
+        report
+    }
+
+    /// The sweep itself (gate already passed; `gc_active` keeps new
+    /// mutations out).
+    fn gc_swept(&self) -> Result<GcReport, StorageError> {
         let manifests_scanned = self.recover()?;
         let live: BTreeMap<String, u64> = self.refs.lock().unwrap().clone();
         let mut reclaimed = 0usize;
@@ -1014,6 +1071,24 @@ mod tests {
         let chunks_b = mem.list(".cas/").unwrap().len();
         assert!(chunks_b <= chunks_a + 1, "old chunks leaked: {chunks_a} -> {chunks_b}");
         assert_eq!(cas.chunks_referenced(), chunks_b);
+    }
+
+    #[test]
+    fn gc_fails_fast_on_a_dirty_store_instead_of_sweeping_it() {
+        let cas = CasStore::new(Arc::new(MemStorage::new()));
+        cas.upload("a", b"payload").unwrap();
+        // an open mutation window = a dirty store: gc must refuse
+        let scope = cas.begin_mutation().unwrap();
+        let err = cas.gc().unwrap_err();
+        assert!(matches!(err, StorageError::Fatal(_)), "{err}");
+        assert!(err.to_string().contains("quiescent"), "error must say why: {err}");
+        drop(scope);
+        // quiescent again: gc runs (and the refused pass left no damage)
+        cas.gc().unwrap();
+        assert_eq!(cas.download("a").unwrap(), b"payload");
+        // mutations work again after a completed sweep (gc_active cleared)
+        cas.upload("b", b"more").unwrap();
+        assert_eq!(cas.download("b").unwrap(), b"more");
     }
 
     #[test]

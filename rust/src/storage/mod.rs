@@ -564,6 +564,92 @@ impl StorageClient for ObjectStoreSim {
     }
 }
 
+/// Transparent per-op counting wrapper over any client — no behavior
+/// change, just counters. The journal/service batteries use it to assert
+/// op budgets (e.g. that the batched journal appender turns a 100-event
+/// fan-out into a handful of segment uploads instead of 100).
+pub struct CountingStorage {
+    inner: Arc<dyn StorageClient>,
+    pub uploads: AtomicU64,
+    pub downloads: AtomicU64,
+    pub lists: AtomicU64,
+    pub copies: AtomicU64,
+    pub deletes: AtomicU64,
+    pub md5s: AtomicU64,
+}
+
+impl CountingStorage {
+    /// Wrap `inner`.
+    pub fn new(inner: Arc<dyn StorageClient>) -> Self {
+        CountingStorage {
+            inner,
+            uploads: AtomicU64::new(0),
+            downloads: AtomicU64::new(0),
+            lists: AtomicU64::new(0),
+            copies: AtomicU64::new(0),
+            deletes: AtomicU64::new(0),
+            md5s: AtomicU64::new(0),
+        }
+    }
+
+    /// The wrapped client.
+    pub fn inner(&self) -> &Arc<dyn StorageClient> {
+        &self.inner
+    }
+
+    /// Sum of all counted operations.
+    pub fn total_ops(&self) -> u64 {
+        self.uploads.load(Ordering::Relaxed)
+            + self.downloads.load(Ordering::Relaxed)
+            + self.lists.load(Ordering::Relaxed)
+            + self.copies.load(Ordering::Relaxed)
+            + self.deletes.load(Ordering::Relaxed)
+            + self.md5s.load(Ordering::Relaxed)
+    }
+}
+
+impl StorageClient for CountingStorage {
+    fn upload(&self, key: &str, data: &[u8]) -> Result<(), StorageError> {
+        self.uploads.fetch_add(1, Ordering::Relaxed);
+        self.inner.upload(key, data)
+    }
+
+    fn download(&self, key: &str) -> Result<Vec<u8>, StorageError> {
+        self.downloads.fetch_add(1, Ordering::Relaxed);
+        self.inner.download(key)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StorageError> {
+        self.lists.fetch_add(1, Ordering::Relaxed);
+        self.inner.list(prefix)
+    }
+
+    fn copy(&self, src: &str, dst: &str) -> Result<(), StorageError> {
+        self.copies.fetch_add(1, Ordering::Relaxed);
+        self.inner.copy(src, dst)
+    }
+
+    fn get_md5(&self, key: &str) -> Result<String, StorageError> {
+        self.md5s.fetch_add(1, Ordering::Relaxed);
+        self.inner.get_md5(key)
+    }
+
+    fn delete(&self, key: &str) -> Result<(), StorageError> {
+        self.deletes.fetch_add(1, Ordering::Relaxed);
+        self.inner.delete(key)
+    }
+
+    fn open_read(&self, key: &str) -> Result<Box<dyn Read + Send>, StorageError> {
+        self.downloads.fetch_add(1, Ordering::Relaxed);
+        self.inner.open_read(key)
+    }
+
+    fn upload_from(&self, key: &str, reader: &mut dyn Read) -> Result<(u64, String), StorageError> {
+        self.uploads.fetch_add(1, Ordering::Relaxed);
+        self.inner.upload_from(key, reader)
+    }
+}
+
 // -- directory packing ---------------------------------------------------------
 
 const PACK_MAGIC: &[u8; 4] = b"DAR1";
@@ -705,6 +791,18 @@ mod tests {
     #[test]
     fn object_store_sim_no_failures_behaves_like_mem() {
         exercise_client(&ObjectStoreSim::new(Duration::ZERO, 0.0, 1));
+    }
+
+    #[test]
+    fn counting_storage_contract_and_counters() {
+        let c = CountingStorage::new(Arc::new(MemStorage::new()));
+        exercise_client(&c);
+        assert!(c.uploads.load(Ordering::Relaxed) > 0);
+        assert!(c.downloads.load(Ordering::Relaxed) > 0);
+        assert!(c.deletes.load(Ordering::Relaxed) > 0);
+        let before = c.uploads.load(Ordering::Relaxed);
+        c.upload("count/one", b"x").unwrap();
+        assert_eq!(c.uploads.load(Ordering::Relaxed), before + 1);
     }
 
     #[test]

@@ -1,0 +1,419 @@
+//! Service control-plane battery: multi-tenant concurrency over shared
+//! backends (quotas, no over-commit), fair-share dispatch, live cancel
+//! with exactly-once capacity release, retry-of-suffix, the adaptive
+//! scheduler pool under a latency-bound HPC fan-out, and the batched
+//! journal appender's upload budget, end-to-end.
+//!
+//! Run via `make test-service` (part of `make ci`).
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use dflow::bench_util::ConcurrencyProbe;
+use dflow::cluster::{Cluster, Resources};
+use dflow::core::{
+    ContainerTemplate, Dag, FnOp, ParamType, Signature, Slices, Step, Steps, Value, Workflow,
+};
+use dflow::engine::{Backend, Engine, RunPhase};
+use dflow::hpc::{HpcScheduler, PartitionSpec};
+use dflow::journal::{Appender, Journal};
+use dflow::service::{ServiceConfig, WorkflowService};
+use dflow::storage::{CountingStorage, MemStorage, StorageClient};
+
+/// A 4-node run spanning all three backend kinds: three parallel pinned
+/// tasks (k8s pod, HPC partition slot, local slot) and a join.
+fn tri_backend_workflow(name: &str, work_ms: u64) -> Workflow {
+    let op = Arc::new(FnOp::new(
+        Signature::new().out_param("v", ParamType::Int),
+        move |ctx| {
+            std::thread::sleep(Duration::from_millis(work_ms));
+            ctx.set("v", 1i64);
+            Ok(())
+        },
+    ));
+    let join = Arc::new(FnOp::new(
+        Signature::new()
+            .in_param("a", ParamType::Int)
+            .in_param("b", ParamType::Int)
+            .in_param("c", ParamType::Int)
+            .out_param("sum", ParamType::Int),
+        |ctx| {
+            let s = ctx.get_int("a")? + ctx.get_int("b")? + ctx.get_int("c")?;
+            ctx.set("sum", s);
+            Ok(())
+        },
+    ));
+    Workflow::new(name)
+        .container(ContainerTemplate::new("op", op).resources(Resources::cpu(500)))
+        .container(ContainerTemplate::new("join", join))
+        .dag(
+            Dag::new("main")
+                .task(Step::new("cloud", "op").on_backend("k8s"))
+                .task(Step::new("hpc", "op").on_backend("hpc"))
+                .task(Step::new("edge", "op").on_backend("edge"))
+                .task(
+                    Step::new("sum", "join")
+                        .param_from_step("a", "cloud", "v")
+                        .param_from_step("b", "hpc", "v")
+                        .param_from_step("c", "edge", "v"),
+                )
+                .out_param_from("total", "sum", "sum"),
+        )
+        .entrypoint("main")
+}
+
+struct TriBackendRig {
+    cluster: Arc<Cluster>,
+    hpc: Arc<HpcScheduler>,
+    engine: Arc<Engine>,
+}
+
+fn tri_backend_engine() -> TriBackendRig {
+    let cluster = Arc::new(Cluster::uniform(4, Resources::cpu(2000), 0));
+    let hpc = HpcScheduler::new(vec![PartitionSpec::new("batch", 4, Duration::from_secs(30))]);
+    let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+    let engine = Arc::new(
+        Engine::builder()
+            .backend(Backend::cluster("k8s", Arc::clone(&cluster)))
+            .backend(Backend::partition("hpc", Arc::clone(&hpc), "batch"))
+            .backend(Backend::local_slots("edge", 4))
+            .journal(journal)
+            .build(),
+    );
+    TriBackendRig { cluster, hpc, engine }
+}
+
+/// The acceptance scenario: one service, ≥8 concurrent multi-node runs
+/// from 3 tenants over 3 shared backends, quotas enforced, nothing
+/// over-committed, every lease/pod returned.
+#[test]
+fn nine_concurrent_runs_from_three_tenants_share_three_backends() {
+    let rig = tri_backend_engine();
+    let config = ServiceConfig {
+        max_live_runs: 9,
+        default_tenant_quota: 3,
+        ..ServiceConfig::default()
+    };
+    let svc = WorkflowService::start(Arc::clone(&rig.engine), config).unwrap();
+    let tenants = ["alice", "bob", "carol"];
+    let mut ids = Vec::new();
+    for tenant in &tenants {
+        for i in 0..3 {
+            let wf = tri_backend_workflow(&format!("{tenant}-{i}"), 40);
+            ids.push((tenant.to_string(), svc.submit(tenant, wf).unwrap()));
+        }
+    }
+    assert!(svc.wait_idle(Duration::from_secs(60)), "service never drained");
+
+    // every run closed Succeeded, under its own id
+    for (_, id) in &ids {
+        let rec = svc.registry().get_run(*id).unwrap();
+        assert_eq!(rec.phase, RunPhase::Succeeded, "run {id}");
+        assert_eq!(rec.nodes.len(), 4);
+    }
+    let rows = svc.registry().list_runs().unwrap();
+    assert_eq!(rows.len(), 9);
+
+    // per-tenant accounting and quota enforcement (live_peak is the
+    // high-water mark of concurrently live runs per tenant)
+    for tenant in &tenants {
+        assert_eq!(svc.metrics().submitted.get(tenant), 3);
+        assert_eq!(svc.metrics().started.get(tenant), 3);
+        assert_eq!(svc.metrics().succeeded.get(tenant), 3);
+        let peak = svc.metrics().live_peak.get(tenant);
+        assert!(
+            (1..=3).contains(&peak),
+            "tenant {tenant} live peak {peak} violates quota 3"
+        );
+    }
+
+    // shared backends: no over-commit, all capacity returned
+    for s in rig.engine.backend_stats() {
+        assert_eq!(s.inflight, 0, "backend {} stranded a lease", s.name);
+        assert!(s.placed >= 9, "backend {} placed {}", s.name, s.placed);
+    }
+    let hpc_peak = rig.engine.placer().unwrap().backend("hpc").unwrap().peak_inflight();
+    assert!(hpc_peak <= 4, "hpc over-committed: peak {hpc_peak} > 4 slots");
+    let edge_peak = rig.engine.placer().unwrap().backend("edge").unwrap().peak_inflight();
+    assert!(edge_peak <= 4, "edge over-committed: peak {edge_peak} > 4 slots");
+    assert_eq!(rig.cluster.pods_in_flight(), 0);
+    let (bound, released, _) = rig.cluster.stats();
+    assert_eq!(bound, released, "every pod bound must be released exactly once");
+    let st = rig.hpc.partition_stats("batch").unwrap();
+    assert_eq!(st.submitted, st.completed, "every HPC job must complete");
+}
+
+/// Fair-share: with one execution slot, a guest tenant's single run must
+/// start right after the hog's first run — not behind its whole backlog.
+#[test]
+fn fair_share_keeps_a_flooding_tenant_from_starving_others() {
+    let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+    let engine = Arc::new(
+        Engine::builder().backend(Backend::local_slots("box", 1)).journal(journal).build(),
+    );
+    let config = ServiceConfig {
+        max_live_runs: 1,
+        default_tenant_quota: 1,
+        ..ServiceConfig::default()
+    };
+    let svc = WorkflowService::start(engine, config).unwrap();
+    let slow_wf = |name: &str| {
+        let op = Arc::new(FnOp::new(Signature::new(), |_| {
+            std::thread::sleep(Duration::from_millis(100));
+            Ok(())
+        }));
+        Workflow::new(name)
+            .container(ContainerTemplate::new("op", op))
+            .steps(Steps::new("main").then(Step::new("s", "op")))
+            .entrypoint("main")
+    };
+    let mut hog_ids = Vec::new();
+    for i in 0..6 {
+        hog_ids.push(svc.submit("hog", slow_wf(&format!("hog-{i}"))).unwrap());
+    }
+    // let the first hog run start, then the guest arrives
+    std::thread::sleep(Duration::from_millis(30));
+    let guest_id = svc.submit("guest", slow_wf("guest-0")).unwrap();
+    assert!(svc.wait_idle(Duration::from_secs(60)), "service never drained");
+    let order = svc.start_order();
+    assert_eq!(order.len(), 7);
+    let guest_pos = order.iter().position(|(_, id)| *id == guest_id).unwrap();
+    assert!(
+        guest_pos <= 1,
+        "guest started at position {guest_pos}, starved behind the hog backlog: {order:?}"
+    );
+    assert_eq!(svc.metrics().succeeded.get("hog"), 6);
+    assert_eq!(svc.metrics().succeeded.get("guest"), 1);
+}
+
+/// `cancel(run_id)` mid-flight: the run closes `Cancelled` (journaled),
+/// in-flight OPs stop through their tokens, every pod/lease is released
+/// exactly once, and a retry of the same id then completes by re-running
+/// only what had not succeeded.
+#[test]
+fn cancel_stops_a_live_run_and_retry_resumes_the_suffix() {
+    let cluster = Arc::new(Cluster::uniform(2, Resources::cpu(1000), 0));
+    let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+    let engine = Arc::new(
+        Engine::builder()
+            .backend(Backend::cluster("k8s", Arc::clone(&cluster)))
+            .backend(Backend::local_slots("edge", 2))
+            .journal(journal)
+            .build(),
+    );
+    let svc = WorkflowService::start(engine.clone(), ServiceConfig::default()).unwrap();
+
+    // fast first step (succeeds pre-cancel, keyed for reuse), then a slow
+    // cooperative fan-out split across both backends
+    let executed: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let e2 = Arc::clone(&executed);
+    let quick = Arc::new(FnOp::new(
+        Signature::new().out_param("v", ParamType::Int),
+        move |ctx| {
+            e2.lock().unwrap().push("quick".to_string());
+            ctx.set("v", 7i64);
+            Ok(())
+        },
+    ));
+    let slow = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        |ctx| {
+            for _ in 0..500 {
+                ctx.checkpoint()?; // cooperative: observes run cancel
+                std::thread::sleep(Duration::from_millis(4));
+            }
+            ctx.set("y", ctx.get_int("x")?);
+            Ok(())
+        },
+    ));
+    let wf = Workflow::new("cancellable")
+        .container(ContainerTemplate::new("quick", quick).resources(Resources::cpu(0)))
+        .container(ContainerTemplate::new("slow", slow).resources(Resources::cpu(500)))
+        .steps(
+            Steps::new("main")
+                .then(Step::new("head", "quick").key("head"))
+                .then(
+                    Step::new("fan", "slow")
+                        .param("x", Value::ints(0..4))
+                        .slices(Slices::over("x").stack("y").parallelism(4)),
+                ),
+        )
+        .entrypoint("main");
+
+    let id = svc.submit("alice", wf.clone()).unwrap();
+    // wait until the fan-out is actually placed and running
+    let mut saw_inflight = false;
+    for _ in 0..500 {
+        let total: usize = engine.backend_stats().iter().map(|s| s.inflight).sum();
+        if total >= 2 {
+            saw_inflight = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(4));
+    }
+    assert!(saw_inflight, "fan-out never started");
+    svc.cancel(id, "operator changed plans").unwrap();
+    // the live handle (if the run has not been reaped yet) closes Cancelled
+    if let Some(run) = svc.run(id) {
+        assert_eq!(run.wait_finished(), RunPhase::Cancelled);
+    }
+    assert!(svc.wait_idle(Duration::from_secs(30)));
+
+    // journaled Cancelled + reason
+    let rec = svc.registry().get_run(id).unwrap();
+    assert_eq!(rec.phase, RunPhase::Cancelled);
+    assert_eq!(rec.message, "operator changed plans");
+    assert_eq!(svc.metrics().cancelled.get("alice"), 1);
+
+    // capacity released exactly once: nothing in flight, bound == released
+    let mut drained = false;
+    for _ in 0..500 {
+        let total: usize = engine.backend_stats().iter().map(|s| s.inflight).sum();
+        if total == 0 && cluster.pods_in_flight() == 0 {
+            drained = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(4));
+    }
+    assert!(drained, "cancel leaked a lease or pod");
+    let (bound, released, _) = cluster.stats();
+    assert_eq!(bound, released, "pod released a different number of times than bound");
+
+    // retry the same id: the quick head is reused, only the fan re-runs
+    let before = executed.lock().unwrap().len();
+    let rid = svc.retry("alice", wf, id).unwrap();
+    assert_eq!(rid, id, "retry must keep the journaled run id");
+    assert!(svc.wait_idle(Duration::from_secs(120)), "retry never finished");
+    let rec = svc.registry().get_run(id).unwrap();
+    assert_eq!(rec.phase, RunPhase::Succeeded, "{}", rec.message);
+    assert_eq!(rec.resubmissions, 1);
+    assert_eq!(
+        executed.lock().unwrap().len(),
+        before,
+        "the journaled quick step must be reused, not re-executed"
+    );
+}
+
+/// ROADMAP "adaptive pool" regression: a 24-wide latency-bound HPC
+/// fan-out on a parallelism-2 engine must not serialize into pool-sized
+/// waves — workers blocked in the dispatcher's job wait stop counting
+/// against the pool, replacements spawn (up to the hard cap), and the
+/// fan-out runs at partition width.
+#[test]
+fn adaptive_pool_runs_latency_bound_hpc_fanout_at_partition_width() {
+    let hpc = HpcScheduler::new(vec![PartitionSpec::new("batch", 24, Duration::from_secs(30))]);
+    let engine = Arc::new(
+        Engine::builder()
+            .backend(Backend::partition("hpc", Arc::clone(&hpc), "batch"))
+            .parallelism(2)
+            .adaptive_cap(64)
+            .build(),
+    );
+    let probe = ConcurrencyProbe::new();
+    let p2 = Arc::clone(&probe);
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        move |ctx| {
+            // runs on an HPC slot thread; the engine-side pool worker is
+            // parked in the dispatcher wait meanwhile
+            p2.with(|| std::thread::sleep(Duration::from_millis(60)));
+            ctx.set("y", ctx.get_int("x")?);
+            Ok(())
+        },
+    ));
+    let wf = Workflow::new("hpc-fanout")
+        .container(ContainerTemplate::new("op", op))
+        .steps(
+            Steps::new("main").then(
+                Step::new("fan", "op")
+                    .param("x", Value::ints(0..24))
+                    .slices(Slices::over("x").stack("y").parallelism(24)),
+            ),
+        )
+        .entrypoint("main")
+        .parallelism(24);
+    let r = engine.run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert!(
+        probe.peak() >= 8,
+        "latency-bound fan-out serialized: peak HPC concurrency {} on a 24-slot \
+         partition (static 2-worker pool symptom)",
+        probe.peak()
+    );
+    let stats = engine.scheduler_stats();
+    assert!(
+        stats.peak_spawned > 2,
+        "pool never grew past its size: {stats:?}"
+    );
+    assert!(stats.peak_spawned <= 64, "pool exceeded its hard cap: {stats:?}");
+    assert_eq!(stats.blocked, 0, "blocked accounting did not drain: {stats:?}");
+}
+
+/// The batched appender's acceptance bound: journaling a ~100-event
+/// fan-out through the background appender costs ≥5× fewer storage
+/// uploads than the per-event synchronous path, with identical replayed
+/// state.
+#[test]
+fn batched_appender_cuts_journal_uploads_at_least_5x_end_to_end() {
+    fn fanout_wf(n: usize) -> Workflow {
+        let op = Arc::new(FnOp::new(
+            Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+            |ctx| {
+                ctx.set("y", ctx.get_int("x")? * 2);
+                Ok(())
+            },
+        ));
+        Workflow::new("fanout")
+            .container(ContainerTemplate::new("op", op))
+            .steps(
+                Steps::new("main").then(
+                    Step::new("fan", "op")
+                        .param("x", Value::ints(0..n as i64))
+                        .slices(Slices::over("x").stack("y").parallelism(8)),
+                ),
+            )
+            .entrypoint("main")
+    }
+
+    // synchronous journal: every event re-uploads the open segment
+    let sync_counting = Arc::new(CountingStorage::new(Arc::new(MemStorage::new())));
+    let sync_journal = Arc::new(
+        Journal::open(Arc::clone(&sync_counting) as Arc<dyn StorageClient>).unwrap(),
+    );
+    let sync_engine = Engine::builder().journal(Arc::clone(&sync_journal)).build();
+    let r1 = sync_engine.run(&fanout_wf(60)).unwrap();
+    assert!(r1.succeeded(), "{:?}", r1.error);
+    let sync_uploads = sync_counting.uploads.load(Ordering::Relaxed);
+    let sync_events = sync_journal.replay(r1.run.id).unwrap().events;
+    assert!(sync_events >= 100, "fan-out should journal ≥100 events, got {sync_events}");
+
+    // batched appender: one segment upload per drained batch
+    let batch_counting = Arc::new(CountingStorage::new(Arc::new(MemStorage::new())));
+    let batch_journal = Arc::new(
+        Journal::open(Arc::clone(&batch_counting) as Arc<dyn StorageClient>).unwrap(),
+    );
+    let appender = Appender::with_config(
+        Arc::clone(&batch_journal),
+        4096,
+        Duration::from_millis(5),
+    );
+    let batch_engine =
+        Engine::builder().journal_appender(Arc::clone(&appender)).build();
+    let r2 = batch_engine.run(&fanout_wf(60)).unwrap();
+    assert!(r2.succeeded(), "{:?}", r2.error);
+    appender.flush();
+    let batch_uploads = batch_counting.uploads.load(Ordering::Relaxed);
+    assert_eq!(appender.errors(), 0);
+
+    // identical recovered state, ≥5× fewer uploads
+    let rec_sync = sync_journal.replay(r1.run.id).unwrap();
+    let rec_batch = batch_journal.replay(r2.run.id).unwrap();
+    assert_eq!(rec_sync.phase, RunPhase::Succeeded);
+    assert_eq!(rec_batch.phase, RunPhase::Succeeded);
+    assert_eq!(rec_sync.nodes.len(), rec_batch.nodes.len());
+    assert!(
+        batch_uploads * 5 <= sync_uploads,
+        "batched appender must cut uploads ≥5×: batched {batch_uploads} vs sync {sync_uploads}"
+    );
+}
