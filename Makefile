@@ -1,12 +1,13 @@
 # Repo CI entrypoints. `make ci` is what a gate should run.
 
-.PHONY: ci fmt-check fmt clippy build test test-placement test-storage test-journal test-service bench
+.PHONY: ci fmt-check fmt clippy build test test-placement test-storage test-journal test-service test-lint lint-examples tsan bench
 
 # `test` runs the full suite (placement + scheduler_stress + the storage
-# battery + journal recovery + the service battery included via their
-# Cargo.toml [[test]] entries); `test-storage`/`test-journal`/
-# `test-service` re-run their batteries alone as explicit gates.
-ci: fmt-check clippy test test-storage test-journal test-service
+# battery + journal recovery + the service battery + the lint battery
+# included via their Cargo.toml [[test]] entries); `test-storage`/
+# `test-journal`/`test-service`/`test-lint` re-run their batteries alone
+# as explicit gates.
+ci: fmt-check clippy test test-storage test-journal test-service test-lint lint-examples
 
 fmt-check:
 	cargo fmt --check
@@ -14,8 +15,9 @@ fmt-check:
 fmt:
 	cargo fmt
 
+# every target (lib + bin + tests + benches + examples), warnings are errors
 clippy:
-	cargo clippy -- -D warnings
+	cargo clippy --all-targets -- -D warnings
 
 build:
 	cargo build --release
@@ -51,6 +53,28 @@ test-service: build
 	cargo test -q --test service
 	cargo test -q --lib service::
 	cargo test -q --lib engine::sched::
+
+# static-analysis battery: diagnostic-code fixtures, the guarded-step
+# downgrade, seed-app lint-cleanliness, and the DF2xx admission soundness
+# property
+test-lint: build
+	cargo test -q --test lint
+	cargo test -q --lib analysis::
+
+# gate: every built-in workflow must lint clean (errors AND warnings)
+# against the demo cluster — the same check `dflow lint` users run
+lint-examples: build
+	cargo run --release -q -- lint --deny-warnings
+
+# Best-effort nightly-only ThreadSanitizer pass over the concurrency
+# batteries (placer, scheduler, service dispatcher). Requires a nightly
+# toolchain with rust-src; NOT part of `make ci` — data-race findings are
+# triaged by hand, the gate stays deterministic.
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" \
+	cargo +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu \
+		--test placement --test scheduler_stress --test service \
+		|| echo "tsan: non-gating (nightly-only); see findings above"
 
 bench:
 	cargo bench

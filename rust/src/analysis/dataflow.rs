@@ -1,0 +1,319 @@
+//! `DF1xx` — artifact/parameter dataflow pass: builds the
+//! producer/consumer graph inside every super-OP template and checks it
+//! both ways — every consumed step output must be *producible* (`DF101`,
+//! `DF105`) and every produced output artifact should have a consumer or
+//! an export (`DF102`). Slice fan-out widths are checked where they are
+//! statically known (`DF103`, `DF104`).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::core::{ArtSrc, Expr, Operand, OutputSrc, ParamSrc, Step, Value, Workflow};
+
+use super::{codes, node_path, Diagnostic};
+
+pub fn pass(wf: &Workflow, out: &mut Vec<Diagnostic>) {
+    for (tname, t) in &wf.templates {
+        let Some((io, steps)) = super::super_op_steps(t) else { continue };
+        let by_name: BTreeMap<&str, &Step> = steps.iter().map(|s| (s.name.as_str(), *s)).collect();
+
+        // -- DF101: consumed-never-produced ---------------------------------
+        for s in &steps {
+            let node = node_path(tname, s);
+            for src in s.parameters.values() {
+                if let ParamSrc::StepOutput { step, name } = src {
+                    check_consumed(wf, tname, &node, s, step, name, Kind::Param, &by_name, out);
+                }
+            }
+            for src in s.artifacts.values() {
+                if let ArtSrc::StepOutput { step, name } = src {
+                    check_consumed(wf, tname, &node, s, step, name, Kind::Artifact, &by_name, out);
+                }
+            }
+            if let Some(w) = &s.when {
+                for (step, name) in operand_refs(w) {
+                    check_consumed(wf, tname, &node, s, &step, &name, Kind::Param, &by_name, out);
+                }
+            }
+        }
+
+        // -- DF105: template output sources ---------------------------------
+        let sig = t.signature();
+        let input_params: BTreeSet<&str> =
+            sig.input_params.iter().map(|p| p.name.as_str()).collect();
+        let input_arts: BTreeSet<&str> =
+            sig.input_artifacts.iter().map(|a| a.name.as_str()).collect();
+        for (decl, src, kind) in io
+            .output_params
+            .iter()
+            .map(|(d, s)| (d, s, Kind::Param))
+            .chain(io.output_artifacts.iter().map(|(d, s)| (d, s, Kind::Artifact)))
+        {
+            match src {
+                OutputSrc::Input(i) => {
+                    let known = match kind {
+                        Kind::Param => &input_params,
+                        Kind::Artifact => &input_arts,
+                    };
+                    if !known.contains(i.as_str()) {
+                        out.push(Diagnostic::error(
+                            codes::OUTPUT_SOURCE_UNKNOWN,
+                            tname.clone(),
+                            format!(
+                                "template '{tname}': output {} '{decl}' forwards input '{i}' which is not in the signature",
+                                kind.word()
+                            ),
+                            "declare the input on the template signature, or fix the name",
+                        ));
+                    }
+                }
+                OutputSrc::StepOutput { step, name } => {
+                    let Some(prod) = by_name.get(step.as_str()) else {
+                        out.push(Diagnostic::error(
+                            codes::OUTPUT_SOURCE_UNKNOWN,
+                            tname.clone(),
+                            format!(
+                                "template '{tname}': output {} '{decl}' sources unknown step '{step}'",
+                                kind.word()
+                            ),
+                            "template outputs must source a child step of the same template",
+                        ));
+                        continue;
+                    };
+                    let Some(ptpl) = wf.templates.get(&prod.template) else { continue };
+                    let (params, arts) = super::template_outputs(ptpl);
+                    let known = match kind {
+                        Kind::Param => &params,
+                        Kind::Artifact => &arts,
+                    };
+                    if !known.contains(name) {
+                        out.push(Diagnostic::error(
+                            codes::OUTPUT_SOURCE_UNKNOWN,
+                            tname.clone(),
+                            format!(
+                                "template '{tname}': output {} '{decl}' sources output '{name}' of step '{step}', but template '{}' never produces it",
+                                kind.word(),
+                                prod.template
+                            ),
+                            "declare the output on the producing template, or fix the reference",
+                        ));
+                    }
+                }
+            }
+        }
+
+        // -- DF102: produced-never-consumed artifacts -----------------------
+        let mut consumed: BTreeSet<(&str, &str)> = BTreeSet::new();
+        for s in &steps {
+            for src in s.artifacts.values() {
+                if let ArtSrc::StepOutput { step, name } = src {
+                    consumed.insert((step.as_str(), name.as_str()));
+                }
+            }
+        }
+        for src in io.output_artifacts.values() {
+            if let OutputSrc::StepOutput { step, name } = src {
+                consumed.insert((step.as_str(), name.as_str()));
+            }
+        }
+        for s in &steps {
+            // keyed steps are exempt: a reuse key makes the step's outputs
+            // externally addressable (run.query_step / cross-run reuse), so
+            // "nobody inside the template reads it" is not dead dataflow
+            if s.key.is_some() {
+                continue;
+            }
+            let Some(stpl) = wf.templates.get(&s.template) else { continue };
+            let declared: Vec<String> = stpl
+                .signature()
+                .output_artifacts
+                .iter()
+                .map(|a| a.name.clone())
+                .collect();
+            for a in declared {
+                if !consumed.contains(&(s.name.as_str(), a.as_str())) {
+                    out.push(Diagnostic::warning(
+                        codes::PRODUCED_NEVER_CONSUMED,
+                        node_path(tname, s),
+                        format!(
+                            "template '{tname}': output artifact '{a}' of step '{}' is never consumed by a sibling or exported",
+                            s.name
+                        ),
+                        "consume it, export it with out_artifact_from, or drop the output",
+                    ));
+                }
+            }
+        }
+
+        // -- DF103 / DF104: slice widths ------------------------------------
+        for s in &steps {
+            let Some(sl) = &s.slices else { continue };
+            let node = node_path(tname, s);
+            let mut widths: Vec<(String, usize)> = Vec::new();
+            for p in &sl.input_params {
+                match s.parameters.get(p) {
+                    Some(ParamSrc::Const(Value::List(l))) => widths.push((p.clone(), l.len())),
+                    Some(ParamSrc::Const(v)) => {
+                        out.push(Diagnostic::error(
+                            codes::SLICE_NOT_A_LIST,
+                            node.clone(),
+                            format!(
+                                "step '{}': sliced parameter '{p}' is bound to a constant of type {} — slicing maps over a list",
+                                s.name,
+                                v.type_of()
+                            ),
+                            "bind a Value::List (e.g. Value::ints(..)) to a sliced parameter",
+                        ));
+                    }
+                    Some(ParamSrc::StepOutput { step, name }) => {
+                        if let Some(w) = stacked_width(&by_name, step, name, 0) {
+                            widths.push((p.clone(), w));
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            let distinct: BTreeSet<usize> = widths.iter().map(|(_, w)| *w).collect();
+            if distinct.len() > 1 {
+                let detail: Vec<String> =
+                    widths.iter().map(|(p, w)| format!("'{p}'={w}")).collect();
+                out.push(Diagnostic::error(
+                    codes::SLICE_WIDTH_MISMATCH,
+                    node,
+                    format!(
+                        "step '{}': sliced inputs disagree on fan-out width ({}) — slices zip element-wise",
+                        s.name,
+                        detail.join(", ")
+                    ),
+                    "all sliced inputs of one step must have the same length",
+                ));
+            }
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Kind {
+    Param,
+    Artifact,
+}
+
+impl Kind {
+    fn word(self) -> &'static str {
+        match self {
+            Kind::Param => "parameter",
+            Kind::Artifact => "artifact",
+        }
+    }
+}
+
+/// Does sibling `prod` (or rather its template) ever produce output
+/// `name`? Skips silently when the producer or its template is unknown —
+/// the structural pass already reported that.
+#[allow(clippy::too_many_arguments)]
+fn check_consumed(
+    wf: &Workflow,
+    tname: &str,
+    node: &str,
+    consumer: &Step,
+    prod: &str,
+    name: &str,
+    kind: Kind,
+    by_name: &BTreeMap<&str, &Step>,
+    out: &mut Vec<Diagnostic>,
+) {
+    let Some(prod_step) = by_name.get(prod) else { return };
+    let Some(ptpl) = wf.templates.get(&prod_step.template) else { return };
+    let (params, arts) = super::template_outputs(ptpl);
+    let known = match kind {
+        Kind::Param => &params,
+        Kind::Artifact => &arts,
+    };
+    if !known.contains(name) {
+        out.push(Diagnostic::error(
+            codes::CONSUMED_NEVER_PRODUCED,
+            node.to_string(),
+            format!(
+                "template '{tname}': step '{}' consumes output {} '{name}' of step '{prod}', but template '{}' never produces it",
+                consumer.name,
+                kind.word(),
+                prod_step.template
+            ),
+            "declare the output on the producer's template, or fix the reference",
+        ));
+    }
+}
+
+/// `(step, output)` pairs referenced by a condition expression.
+fn operand_refs(e: &Expr) -> Vec<(String, String)> {
+    fn walk(e: &Expr, out: &mut Vec<(String, String)>) {
+        match e {
+            Expr::Cmp { lhs, rhs, .. } => {
+                for o in [lhs, rhs] {
+                    if let Operand::StepOutput { step, name } = o {
+                        out.push((step.clone(), name.clone()));
+                    }
+                }
+            }
+            Expr::And(a, b) | Expr::Or(a, b) => {
+                walk(a, out);
+                walk(b, out);
+            }
+            Expr::Not(a) => walk(a, out),
+        }
+    }
+    let mut v = Vec::new();
+    walk(e, &mut v);
+    v
+}
+
+/// Statically-known fan-out width of a stacked output `name` of sibling
+/// `prod`: the producer must itself be sliced and stacking `name`, and its
+/// own sliced inputs must have a known width. Depth-limited — reference
+/// chains are acyclic in valid workflows, but this pass also runs on
+/// broken ones.
+fn stacked_width(
+    by_name: &BTreeMap<&str, &Step>,
+    prod: &str,
+    name: &str,
+    depth: usize,
+) -> Option<usize> {
+    if depth > 8 {
+        return None;
+    }
+    let step = by_name.get(prod)?;
+    let sl = step.slices.as_ref()?;
+    if !sl.output_params.contains(&name.to_string()) && !sl.output_artifacts.contains(&name.to_string()) {
+        return None;
+    }
+    for p in &sl.input_params {
+        match step.parameters.get(p) {
+            Some(ParamSrc::Const(Value::List(l))) => return Some(l.len()),
+            Some(ParamSrc::StepOutput { step: p2, name: n2 }) => {
+                if let Some(w) = stacked_width(by_name, p2, n2, depth + 1) {
+                    return Some(w);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Statically-known fan-out width of a sliced step (used by the policy and
+/// capacity passes): the width of any sliced const-list input, or of an
+/// upstream stacked producer.
+pub(crate) fn step_width(by_name: &BTreeMap<&str, &Step>, step: &Step) -> Option<usize> {
+    let sl = step.slices.as_ref()?;
+    for p in &sl.input_params {
+        match step.parameters.get(p) {
+            Some(ParamSrc::Const(Value::List(l))) => return Some(l.len()),
+            Some(ParamSrc::StepOutput { step: p2, name: n2 }) => {
+                if let Some(w) = stacked_width(by_name, p2, n2, 0) {
+                    return Some(w);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}

@@ -1,0 +1,386 @@
+//! # Workflow static analysis (`dflow lint`)
+//!
+//! A multi-pass, collect-all diagnostics engine over a [`Workflow`]: where
+//! [`Workflow::validate`] stops at the first defect, [`analyze`] walks the
+//! whole template registry and reports *every* finding as a [`Diagnostic`]
+//! with a stable code, a severity, the offending node and a one-line
+//! remediation hint. The paper's OP-reuse story depends on this: a workflow
+//! assembled from someone else's components must be checkable *before* it
+//! burns cluster time, so mis-wired artifacts, unsatisfiable backend
+//! selectors and hopeless retry policies surface at submit time instead of
+//! mid-run at the ready queue.
+//!
+//! ## Pass families and code ranges
+//!
+//! | Range   | Pass       | What it checks |
+//! |---------|------------|----------------|
+//! | `DF0xx` | structural | entrypoint/template/binding/type/slice wiring, duplicate step names, self-dependencies, forward references, DAG cycles, unreachable templates |
+//! | `DF1xx` | dataflow   | producer/consumer graph over step outputs: consumed-never-produced (error), produced-never-consumed artifacts (warning), slice-arity mismatches, template output sources |
+//! | `DF2xx` | placement  | every step's [`BackendSelector`] + resource request cross-checked against the engine's backend registry / cluster: "no registered backend can ever satisfy this step" is a submit-time error |
+//! | `DF3xx` | policy     | retry/timeout sanity, `continue_on` threshold satisfiability, fan-out width vs. backend capacity and service quotas |
+//!
+//! ### Code table
+//!
+//! | Code  | Severity | Meaning |
+//! |-------|----------|---------|
+//! | DF001 | error    | entrypoint template missing |
+//! | DF002 | error    | step references an unknown template |
+//! | DF003 | error    | required input parameter/artifact not bound |
+//! | DF004 | error    | required workflow argument/input artifact missing |
+//! | DF005 | error    | workflow argument type mismatch |
+//! | DF006 | error    | sliced/stacked name not in the target template's interface |
+//! | DF007 | error    | steps-template dependency not satisfied by an earlier group |
+//! | DF008 | error    | DAG task depends on an unknown task |
+//! | DF009 | error    | DAG contains a dependency cycle |
+//! | DF010 | error    | duplicate step/task name inside one template |
+//! | DF011 | warning  | template unreachable from the entrypoint |
+//! | DF012 | error    | step depends on itself |
+//! | DF101 | error    | step consumes an output its producer never declares |
+//! | DF102 | warning  | output artifact produced but never consumed or exported (keyed steps exempt) |
+//! | DF103 | error    | sliced parameter bound to a non-list constant |
+//! | DF104 | error    | sliced inputs disagree on fan-out width |
+//! | DF105 | error    | template output sourced from an unknown step/output/input |
+//! | DF201 | error*   | backend selector matches no registered backend |
+//! | DF202 | error*   | request infeasible on every matching backend / fits no cluster node |
+//! | DF203 | error*   | step sets both an executor override and a backend selector |
+//! | DF204 | error*   | backend selector but the engine has no placement layer |
+//! | DF205 | error*   | executor override names an unregistered executor |
+//! | DF301 | warning  | zero attempt timeout (every attempt times out immediately) |
+//! | DF302 | warning  | high retry count with zero backoff (hot-loop on transient failures) |
+//! | DF303 | warning  | static fan-out width exceeds total capacity of matching backends |
+//! | DF304 | error    | `continue_on` threshold can never be met |
+//! | DF305 | warning  | fan-out × service `max_live_runs` overcommits total backend capacity |
+//!
+//! (*) `DF2xx` findings downgrade to warnings when the step is guarded by a
+//! `when` condition or a reuse `key`, or runs under `continue_on_failed` —
+//! a conditional/reused step may never execute its leaf, and an unplaceable
+//! `continue_on_failed` step does not fail its run, so rejecting the whole
+//! workflow at admission would be a false positive. The soundness property
+//! ("zero `DF2xx` diagnostics ⇒
+//! the run never hits the placer's infeasibility fail-fast") quantifies
+//! over diagnostics of *any* severity, so the downgrade does not weaken it
+//! (property-tested in `rust/tests/lint.rs`).
+//!
+//! ## Wiring
+//!
+//! * [`Workflow::validate`] is now "first error-severity diagnostic from
+//!   the context-free passes" — same `Err(String)` surface, same message
+//!   text for the legacy defect classes.
+//! * `Engine::submit*` / `Engine::run*` lint with the engine's own context
+//!   ([`crate::engine::Engine::analysis_context`]) and reject on errors;
+//!   surviving warnings are journaled as
+//!   [`crate::journal::JournalEvent::RunLinted`].
+//! * `WorkflowService::submit` additionally applies [`ServiceHints`]
+//!   (quota-aware `DF305`) and counts rejections in the admission metrics.
+//! * The CLI's `dflow lint [--json] [--deny-warnings]` runs the same
+//!   passes against the demo cluster without executing anything.
+//!
+//! ```no_run
+//! use dflow::analysis;
+//! use dflow::core::{Step, Steps, Workflow};
+//!
+//! let wf = Workflow::new("w")
+//!     .steps(Steps::new("main").then(Step::new("a", "missing")))
+//!     .entrypoint("main");
+//! let report = analysis::Report::new(analysis::analyze(&wf));
+//! assert!(report.has_errors());
+//! assert_eq!(report.diagnostics[0].code, "DF002");
+//! ```
+
+use std::collections::BTreeSet;
+
+use crate::cluster::Cluster;
+use crate::core::{OpTemplate, Step, TemplateIo, Workflow};
+use crate::engine::Placer;
+use crate::jsonx::Json;
+
+pub mod dataflow;
+pub mod placement;
+pub mod policy;
+pub mod structural;
+
+/// Stable diagnostic codes. Codes are append-only across releases: a code
+/// never changes meaning, tooling may match on them.
+pub mod codes {
+    pub const ENTRYPOINT_MISSING: &str = "DF001";
+    pub const UNKNOWN_TEMPLATE: &str = "DF002";
+    pub const INPUT_NOT_BOUND: &str = "DF003";
+    pub const ARGUMENT_MISSING: &str = "DF004";
+    pub const ARGUMENT_TYPE: &str = "DF005";
+    pub const SLICE_NAME_UNKNOWN: &str = "DF006";
+    pub const STEPS_FORWARD_REF: &str = "DF007";
+    pub const DAG_UNKNOWN_DEP: &str = "DF008";
+    pub const DAG_CYCLE: &str = "DF009";
+    pub const DUPLICATE_STEP: &str = "DF010";
+    pub const UNREACHABLE_TEMPLATE: &str = "DF011";
+    pub const SELF_DEPENDENCY: &str = "DF012";
+
+    pub const CONSUMED_NEVER_PRODUCED: &str = "DF101";
+    pub const PRODUCED_NEVER_CONSUMED: &str = "DF102";
+    pub const SLICE_NOT_A_LIST: &str = "DF103";
+    pub const SLICE_WIDTH_MISMATCH: &str = "DF104";
+    pub const OUTPUT_SOURCE_UNKNOWN: &str = "DF105";
+
+    pub const SELECTOR_NO_MATCH: &str = "DF201";
+    pub const PLACEMENT_INFEASIBLE: &str = "DF202";
+    pub const DUAL_ROUTING: &str = "DF203";
+    pub const NO_PLACEMENT_LAYER: &str = "DF204";
+    pub const UNKNOWN_EXECUTOR: &str = "DF205";
+
+    pub const ZERO_TIMEOUT: &str = "DF301";
+    pub const RETRY_NO_BACKOFF: &str = "DF302";
+    pub const FANOUT_OVER_CAPACITY: &str = "DF303";
+    pub const CONTINUE_ON_UNSATISFIABLE: &str = "DF304";
+    pub const QUOTA_OVERCOMMIT: &str = "DF305";
+}
+
+/// How bad a finding is. `Error` blocks admission; `Warning` is journaled
+/// and surfaced but does not block (unless `--deny-warnings`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// One analyzer finding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// Stable code (`DF0xx`..`DF3xx`), see [`codes`].
+    pub code: &'static str,
+    pub severity: Severity,
+    /// Locus as `template` or `template/step` (empty = workflow level).
+    pub node: String,
+    /// Self-contained human-readable finding.
+    pub message: String,
+    /// One-line remediation hint.
+    pub help: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, node: impl Into<String>, message: impl Into<String>, help: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity: Severity::Error,
+            node: node.into(),
+            message: message.into(),
+            help: help.into(),
+        }
+    }
+
+    pub fn warning(code: &'static str, node: impl Into<String>, message: impl Into<String>, help: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity: Severity::Warning,
+            node: node.into(),
+            message: message.into(),
+            help: help.into(),
+        }
+    }
+
+    /// `severity[code] message` — the one-line rendering used by the CLI,
+    /// admission errors and journaled warnings.
+    pub fn render(&self) -> String {
+        format!("{}[{}] {}", self.severity, self.code, self.message)
+    }
+
+    /// JSON form for `dflow lint --json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::s(self.code)),
+            ("severity", Json::s(self.severity.to_string())),
+            ("node", Json::s(self.node.clone())),
+            ("message", Json::s(self.message.clone())),
+            ("help", Json::s(self.help.clone())),
+        ])
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.render())
+    }
+}
+
+/// What the service layer knows that the engine does not: admission-side
+/// concurrency limits for the `DF305` overcommit check.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceHints {
+    /// `ServiceConfig::max_live_runs` — concurrent runs the dispatcher
+    /// will drive at once.
+    pub max_live_runs: usize,
+}
+
+/// Deployment context for the placement/capacity passes. Build one by hand
+/// (the CLI does) or take the engine's own via
+/// [`crate::engine::Engine::analysis_context`].
+#[derive(Default)]
+pub struct AnalysisContext<'a> {
+    /// Multi-backend placement layer, when registered.
+    pub placer: Option<&'a Placer>,
+    /// Engine-level cluster (legacy routing: consulted when no placer, or
+    /// for steps with an executor override).
+    pub cluster: Option<&'a Cluster>,
+    /// Registered executor names (`None` = unknown, skip `DF205`).
+    pub executors: Option<Vec<String>>,
+    /// Service-layer admission limits (`None` outside the service).
+    pub service: Option<ServiceHints>,
+}
+
+/// Context-free passes: structural + dataflow + policy. This is what
+/// [`Workflow::validate`] is built on.
+pub fn analyze(wf: &Workflow) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    structural::pass(wf, &mut out);
+    dataflow::pass(wf, &mut out);
+    policy::pass(wf, &mut out);
+    out
+}
+
+/// All passes: [`analyze`] plus placement feasibility and capacity checks
+/// against `ctx`.
+pub fn analyze_with(wf: &Workflow, ctx: &AnalysisContext<'_>) -> Vec<Diagnostic> {
+    let mut out = analyze(wf);
+    placement::pass(wf, ctx, &mut out);
+    policy::capacity_pass(wf, ctx, &mut out);
+    out
+}
+
+/// A bundle of diagnostics with admission-oriented accessors.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn new(diagnostics: Vec<Diagnostic>) -> Report {
+        Report { diagnostics }
+    }
+
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    pub fn warnings(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning)
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.errors().next().is_some()
+    }
+
+    /// Distinct codes present (any severity).
+    pub fn codes(&self) -> BTreeSet<&'static str> {
+        self.diagnostics.iter().map(|d| d.code).collect()
+    }
+
+    /// The admission rejection message: every error, joined. Callers must
+    /// only use this when [`Report::has_errors`].
+    pub fn error_summary(&self, workflow: &str) -> String {
+        let n = self.errors().count();
+        let body: Vec<String> = self.errors().map(|d| format!("[{}] {}", d.code, d.message)).collect();
+        format!(
+            "workflow '{workflow}' failed static analysis with {n} error{}: {}",
+            if n == 1 { "" } else { "s" },
+            body.join("; ")
+        )
+    }
+
+    /// Rendered warning lines for `JournalEvent::RunLinted`.
+    pub fn warning_lines(&self) -> Vec<String> {
+        self.warnings().map(|d| d.render()).collect()
+    }
+
+    /// JSON array of findings for `dflow lint --json`.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.diagnostics.iter().map(|d| d.to_json()).collect())
+    }
+}
+
+// -- shared walk helpers (used by the pass submodules) ------------------------------
+
+/// The io + child steps of a super-OP template (None for containers).
+pub(crate) fn super_op_steps(t: &OpTemplate) -> Option<(&TemplateIo, Vec<&Step>)> {
+    match t {
+        OpTemplate::Container(_) => None,
+        OpTemplate::Steps(s) => Some((&s.io, s.all_steps().collect())),
+        OpTemplate::Dag(d) => Some((&d.io, d.tasks.iter().collect())),
+    }
+}
+
+/// Everything a template can produce, by name: signature outputs plus (for
+/// super-OPs) the `out_param_from`/`out_artifact_from` declarations, which
+/// live in `TemplateIo` rather than the signature.
+pub(crate) fn template_outputs(t: &OpTemplate) -> (BTreeSet<String>, BTreeSet<String>) {
+    let sig = t.signature();
+    let mut params: BTreeSet<String> = sig.output_params.iter().map(|p| p.name.clone()).collect();
+    let mut arts: BTreeSet<String> = sig.output_artifacts.iter().map(|a| a.name.clone()).collect();
+    match t {
+        OpTemplate::Container(_) => {}
+        OpTemplate::Steps(s) => {
+            params.extend(s.io.output_params.keys().cloned());
+            arts.extend(s.io.output_artifacts.keys().cloned());
+        }
+        OpTemplate::Dag(d) => {
+            params.extend(d.io.output_params.keys().cloned());
+            arts.extend(d.io.output_artifacts.keys().cloned());
+        }
+    }
+    (params, arts)
+}
+
+/// `template/step` locus string.
+pub(crate) fn node_path(template: &str, step: &Step) -> String {
+    format!("{template}/{}", step.name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ContainerTemplate, FnOp, Signature, Step, Steps, Workflow};
+    use std::sync::Arc;
+
+    fn leaf(name: &str) -> ContainerTemplate {
+        ContainerTemplate::new(name, Arc::new(FnOp::new(Signature::new(), |_| Ok(()))))
+    }
+
+    #[test]
+    fn clean_workflow_has_no_diagnostics() {
+        let wf = Workflow::new("w")
+            .container(leaf("t"))
+            .steps(Steps::new("main").then(Step::new("a", "t")))
+            .entrypoint("main");
+        assert_eq!(analyze(&wf), Vec::new());
+    }
+
+    #[test]
+    fn report_summary_counts_errors() {
+        let wf = Workflow::new("w")
+            .steps(
+                Steps::new("main")
+                    .then(Step::new("a", "missing"))
+                    .then(Step::new("b", "gone")),
+            )
+            .entrypoint("main");
+        let report = Report::new(analyze(&wf));
+        assert!(report.has_errors());
+        let summary = report.error_summary("w");
+        assert!(summary.contains("2 errors"), "{summary}");
+        assert!(summary.contains("DF002"), "{summary}");
+    }
+
+    #[test]
+    fn render_is_one_line_with_code() {
+        let d = Diagnostic::warning(codes::ZERO_TIMEOUT, "main/a", "msg", "hint");
+        assert_eq!(d.render(), "warning[DF301] msg");
+        assert!(!d.render().contains('\n'));
+    }
+}

@@ -1,0 +1,121 @@
+//! `DF2xx` — placement feasibility pass: mirrors the engine's runtime
+//! routing rules ([`crate::engine`]'s `execute_container` +
+//! `check_placement_feasible`) statically, so "no registered backend can
+//! ever satisfy this step" is a named submit-time diagnostic instead of a
+//! mid-run ready-queue fail-fast.
+//!
+//! Findings on steps guarded by a `when` condition or a reuse `key`
+//! downgrade to warnings: a guarded leaf may never execute, so its
+//! placement problem cannot be proven reachable. Steps with
+//! `continue_on_failed` downgrade too — an unplaceable step does not fail
+//! such a run, and rejecting it at admission would forbid workflows that
+//! run (and complete) today. The soundness property (zero `DF2xx` of any
+//! severity ⇒ no runtime placer fail-fast) is unaffected by the downgrade.
+
+use crate::core::{OpTemplate, Workflow};
+use crate::engine::{PlaceError, PlaceRequest};
+
+use super::{codes, node_path, AnalysisContext, Diagnostic, Severity};
+
+pub fn pass(wf: &Workflow, ctx: &AnalysisContext<'_>, out: &mut Vec<Diagnostic>) {
+    for (tname, t) in &wf.templates {
+        let Some((_, steps)) = super::super_op_steps(t) else { continue };
+        for s in steps {
+            // routing (executor override / backend selector) only applies
+            // to leaf executions: the engine drops both when the step's
+            // template is a super-OP, so only container steps can fail
+            let Some(OpTemplate::Container(ct)) = wf.templates.get(&s.template) else {
+                continue;
+            };
+            let node = node_path(tname, s);
+            // guarded steps may never run their leaf, and continue_on_failed
+            // steps don't fail the run — report, don't block
+            let severity = if s.when.is_some() || s.key.is_some() || s.policy.continue_on_failed {
+                Severity::Warning
+            } else {
+                Severity::Error
+            };
+            let diag = |code, message: String, help: &str| Diagnostic {
+                code,
+                severity,
+                node: node.clone(),
+                message,
+                help: help.to_string(),
+            };
+
+            if let (Some(ex), Some(sel)) = (&s.executor, &s.backend) {
+                out.push(diag(
+                    codes::DUAL_ROUTING,
+                    format!(
+                        "step '{node}' sets both an executor override ('{ex}') and a backend selector [{}] — use one routing mechanism",
+                        sel.display()
+                    ),
+                    "drop .executor(..) or the backend selector",
+                ));
+            }
+            if let (Some(ex), Some(known)) = (&s.executor, &ctx.executors) {
+                if !known.iter().any(|k| k == ex) {
+                    out.push(diag(
+                        codes::UNKNOWN_EXECUTOR,
+                        format!(
+                            "step '{node}': executor '{ex}' is not registered on the engine (registered: {})",
+                            known.join(", ")
+                        ),
+                        "register the executor on the engine builder, or fix the name",
+                    ));
+                }
+            }
+            if s.backend.is_some() && s.executor.is_none() && ctx.placer.is_none() {
+                out.push(diag(
+                    codes::NO_PLACEMENT_LAYER,
+                    format!(
+                        "step '{node}' has a backend selector [{}] but no backends are registered on the engine",
+                        s.backend.as_ref().unwrap().display()
+                    ),
+                    "register Backend(s) on the engine builder, or drop the selector",
+                ));
+            }
+
+            let legacy = ctx.placer.is_none() || s.executor.is_some();
+            if legacy {
+                if let Some(cluster) = ctx.cluster {
+                    let mut pod = crate::cluster::PodSpec::new(node.clone(), ct.resources);
+                    for (k, v) in &ct.node_selector {
+                        pod = pod.select(k, v);
+                    }
+                    if !cluster.check_feasible(&pod) {
+                        out.push(diag(
+                            codes::PLACEMENT_INFEASIBLE,
+                            format!(
+                                "step '{node}': pod request {:?} (node selector {:?}) fits no node of the engine cluster",
+                                ct.resources, ct.node_selector
+                            ),
+                            "shrink the resource request, fix the node selector, or grow the cluster",
+                        ));
+                    }
+                }
+            } else {
+                let placer = ctx.placer.expect("checked above");
+                let req = PlaceRequest {
+                    path: node.clone(),
+                    resources: ct.resources,
+                    node_selector: ct.node_selector.clone(),
+                    selector: s.backend.clone().unwrap_or_default(),
+                };
+                match placer.check(&req) {
+                    Ok(()) => {}
+                    Err(e @ PlaceError::NoMatch { .. }) => out.push(diag(
+                        codes::SELECTOR_NO_MATCH,
+                        format!("step '{node}': {e}"),
+                        "register a backend matching the selector, or relax it",
+                    )),
+                    Err(e) => out.push(diag(
+                        codes::PLACEMENT_INFEASIBLE,
+                        format!("step '{node}': {e}"),
+                        "every matching backend refused the request; fix capacity or the selector",
+                    )),
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! `DF3xx` — policy/capacity pass: retry/timeout sanity (a policy that can
+//! only burn time), `continue_on` threshold satisfiability, and fan-out
+//! width cross-checked against the backend registry's static capacity and
+//! the service's concurrent-run limit.
+
+use std::collections::BTreeMap;
+
+use crate::core::{ContinueOn, Step, Workflow};
+
+use super::{codes, dataflow, node_path, AnalysisContext, Diagnostic};
+
+/// Retry count at/above which a zero backoff is reported as a hot-loop.
+const RETRY_STORM: u32 = 10;
+
+/// Context-free policy checks.
+pub fn pass(wf: &Workflow, out: &mut Vec<Diagnostic>) {
+    for (tname, t) in &wf.templates {
+        let Some((_, steps)) = super::super_op_steps(t) else { continue };
+        let by_name: BTreeMap<&str, &Step> =
+            steps.iter().map(|s| (s.name.as_str(), *s)).collect();
+        for s in &steps {
+            let node = node_path(tname, s);
+            if matches!(s.policy.timeout, Some(d) if d.is_zero()) {
+                let burn = if s.policy.retries > 0 {
+                    format!(" — all {} retries will burn without running anything", s.policy.retries)
+                } else {
+                    String::new()
+                };
+                out.push(Diagnostic::warning(
+                    codes::ZERO_TIMEOUT,
+                    node.clone(),
+                    format!(
+                        "step '{}' has a zero attempt timeout: every attempt times out immediately{burn}",
+                        s.name
+                    ),
+                    "set a positive timeout, or drop the timeout policy",
+                ));
+            }
+            if s.policy.retries >= RETRY_STORM && s.policy.backoff.is_zero() {
+                out.push(Diagnostic::warning(
+                    codes::RETRY_NO_BACKOFF,
+                    node.clone(),
+                    format!(
+                        "step '{}' allows {} retries with no backoff — transient failures will hot-loop",
+                        s.name, s.policy.retries
+                    ),
+                    "set StepPolicy::backoff (or lower the retry budget)",
+                ));
+            }
+            if let Some(sl) = &s.slices {
+                match sl.continue_on {
+                    Some(ContinueOn::SuccessRatio(r)) if !(r > 0.0 && r <= 1.0) => {
+                        out.push(Diagnostic::error(
+                            codes::CONTINUE_ON_UNSATISFIABLE,
+                            node.clone(),
+                            format!(
+                                "step '{}': continue_on success ratio {r} is outside (0, 1]",
+                                s.name
+                            ),
+                            "use a ratio in (0, 1], e.g. SuccessRatio(0.5)",
+                        ));
+                    }
+                    Some(ContinueOn::SuccessNumber(n)) => {
+                        if let Some(w) = dataflow::step_width(&by_name, s) {
+                            if n > w {
+                                out.push(Diagnostic::error(
+                                    codes::CONTINUE_ON_UNSATISFIABLE,
+                                    node.clone(),
+                                    format!(
+                                        "step '{}': continue_on requires {n} successful slices but the fan-out is only {w} wide — the threshold can never be met",
+                                        s.name
+                                    ),
+                                    "lower the SuccessNumber threshold or widen the sliced input",
+                                ));
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+}
+
+/// Context-dependent capacity checks (`DF303`, `DF305`). Only meaningful
+/// when a placement layer with *finite* capacities is registered.
+pub fn capacity_pass(wf: &Workflow, ctx: &AnalysisContext<'_>, out: &mut Vec<Diagnostic>) {
+    let Some(placer) = ctx.placer else { return };
+
+    // total statically-finite capacity across all backends (None when any
+    // backend is unbounded/cluster-modelled — then nothing can overcommit)
+    let total_finite: Option<usize> = placer
+        .backends()
+        .iter()
+        .map(|b| b.static_slots())
+        .try_fold(0usize, |acc, s| s.map(|n| acc + n));
+
+    let mut widest_per_run: usize = 0;
+    for (tname, t) in &wf.templates {
+        let Some((_, steps)) = super::super_op_steps(t) else { continue };
+        let by_name: BTreeMap<&str, &Step> =
+            steps.iter().map(|s| (s.name.as_str(), *s)).collect();
+        for s in &steps {
+            let Some(sl) = &s.slices else { continue };
+            let Some(w) = dataflow::step_width(&by_name, s) else { continue };
+            let demand = sl.parallelism.map_or(w, |p| p.min(w));
+            widest_per_run = widest_per_run.max(demand);
+
+            // DF303: capacity of the backends this step can actually use
+            let sel = s.backend.clone().unwrap_or_default();
+            let matching: Vec<_> =
+                placer.backends().iter().filter(|b| b.matches_selector(&sel)).collect();
+            if matching.is_empty() {
+                continue; // DF201's problem, not a capacity finding
+            }
+            let cap: Option<usize> = matching
+                .iter()
+                .map(|b| b.static_slots())
+                .try_fold(0usize, |acc, n| n.map(|n| acc + n));
+            if let Some(cap) = cap {
+                if demand > cap {
+                    let names: Vec<&str> = matching.iter().map(|b| b.name()).collect();
+                    out.push(Diagnostic::warning(
+                        codes::FANOUT_OVER_CAPACITY,
+                        node_path(tname, s),
+                        format!(
+                            "step '{}' fans out {demand} concurrent slices but its matching backend{} ({}) total only {cap} slot{} — slices will queue",
+                            s.name,
+                            if names.len() == 1 { "" } else { "s" },
+                            names.join(", "),
+                            if cap == 1 { "" } else { "s" },
+                        ),
+                        "cap Slices::parallelism to the available slots, add capacity, or accept the queueing",
+                    ));
+                }
+            }
+        }
+    }
+
+    // DF305: one run fits, but the service will drive several at once
+    if let (Some(hints), Some(total)) = (ctx.service, total_finite) {
+        let n = hints.max_live_runs;
+        if n >= 2 && widest_per_run > 0 && widest_per_run <= total && widest_per_run * n > total {
+            out.push(Diagnostic::warning(
+                codes::QUOTA_OVERCOMMIT,
+                "",
+                format!(
+                    "{n} concurrent runs (service max_live_runs) of this workflow can demand {} slots against a total backend capacity of {total} — runs will contend",
+                    widest_per_run * n
+                ),
+                "lower max_live_runs / tenant quotas, cap slice parallelism, or add capacity",
+            ));
+        }
+    }
+}

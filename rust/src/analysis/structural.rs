@@ -1,0 +1,338 @@
+//! `DF0xx` — structural pass: the legacy `Workflow::validate` checks
+//! re-hosted as collect-all diagnostics (entrypoint, unknown templates,
+//! unbound inputs, argument types, slice/stack names, forward references,
+//! DAG cycles), plus the classes the fail-fast validator could not express:
+//! duplicate step names, self-dependencies and unreachable templates.
+//!
+//! Message text for the legacy classes is kept byte-compatible with the old
+//! validator, because `Workflow::validate` now returns the first
+//! error-severity message from this pass and callers (and tests) match on
+//! those substrings.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::core::{OpTemplate, Step, Workflow};
+
+use super::{codes, node_path, Diagnostic};
+
+pub fn pass(wf: &Workflow, out: &mut Vec<Diagnostic>) {
+    let entry_ok = check_entrypoint(wf, out);
+    for (tname, t) in &wf.templates {
+        match t {
+            OpTemplate::Container(_) => {}
+            OpTemplate::Steps(s) => {
+                for step in s.all_steps() {
+                    step_checks(wf, tname, step, out);
+                }
+                duplicate_names(tname, s.all_steps(), out);
+                // step-output deps must point to *earlier* groups
+                let mut seen: BTreeSet<&str> = BTreeSet::new();
+                for group in &s.groups {
+                    for step in group {
+                        for dep in step.implied_dependencies() {
+                            if dep == step.name {
+                                out.push(self_dependency(tname, step));
+                            } else if !seen.contains(dep.as_str()) {
+                                out.push(Diagnostic::error(
+                                    codes::STEPS_FORWARD_REF,
+                                    node_path(tname, step),
+                                    format!(
+                                        "steps '{}': step '{}' depends on '{}' which is not in an earlier group",
+                                        s.name, step.name, dep
+                                    ),
+                                    "move the producer into an earlier serial group, or fix the reference",
+                                ));
+                            }
+                        }
+                    }
+                    for step in group {
+                        seen.insert(&step.name);
+                    }
+                }
+            }
+            OpTemplate::Dag(d) => {
+                let names: BTreeSet<&str> = d.tasks.iter().map(|t| t.name.as_str()).collect();
+                let mut broken = duplicate_names(tname, d.tasks.iter(), out);
+                for task in &d.tasks {
+                    step_checks(wf, tname, task, out);
+                    for dep in task.implied_dependencies() {
+                        if dep == task.name {
+                            out.push(self_dependency(tname, task));
+                            broken = true;
+                        } else if !names.contains(dep.as_str()) {
+                            out.push(Diagnostic::error(
+                                codes::DAG_UNKNOWN_DEP,
+                                node_path(tname, task),
+                                format!(
+                                    "dag '{}': task '{}' depends on unknown task '{}'",
+                                    d.name, task.name, dep
+                                ),
+                                "dependencies must name sibling tasks of the same DAG",
+                            ));
+                            broken = true;
+                        }
+                    }
+                }
+                // Kahn cycle check — only meaningful once names are unique
+                // and every edge endpoint exists (duplicate or dangling
+                // edges would phantom-report a cycle).
+                if !broken && has_cycle(d) {
+                    out.push(Diagnostic::error(
+                        codes::DAG_CYCLE,
+                        tname.clone(),
+                        format!("dag '{}' contains a cycle", d.name),
+                        "break the cycle: some task must run first",
+                    ));
+                }
+            }
+        }
+    }
+    if entry_ok {
+        unreachable_templates(wf, out);
+    }
+}
+
+/// Entrypoint exists + workflow arguments satisfy its signature. Returns
+/// whether the entrypoint resolved (reachability only makes sense then).
+fn check_entrypoint(wf: &Workflow, out: &mut Vec<Diagnostic>) -> bool {
+    let Some(tpl) = wf.templates.get(&wf.entrypoint) else {
+        out.push(Diagnostic::error(
+            codes::ENTRYPOINT_MISSING,
+            "",
+            format!("entrypoint template '{}' not found", wf.entrypoint),
+            "set .entrypoint(..) to a registered template name",
+        ));
+        return false;
+    };
+    let sig = tpl.signature();
+    for p in &sig.input_params {
+        match wf.arguments.get(&p.name) {
+            Some(v) => {
+                if !v.check_type(p.ty) {
+                    out.push(Diagnostic::error(
+                        codes::ARGUMENT_TYPE,
+                        wf.entrypoint.clone(),
+                        format!(
+                            "workflow argument '{}' has type {} but template declares {}",
+                            p.name,
+                            v.type_of(),
+                            p.ty
+                        ),
+                        "bind a value of the declared type",
+                    ));
+                }
+            }
+            None if p.optional || p.default.is_some() => {}
+            None => {
+                out.push(Diagnostic::error(
+                    codes::ARGUMENT_MISSING,
+                    wf.entrypoint.clone(),
+                    format!("workflow argument '{}' is required", p.name),
+                    "bind it with .arg(..)",
+                ));
+            }
+        }
+    }
+    for a in &sig.input_artifacts {
+        if !a.optional && !wf.input_artifacts.contains_key(&a.name) {
+            out.push(Diagnostic::error(
+                codes::ARGUMENT_MISSING,
+                wf.entrypoint.clone(),
+                format!("workflow input artifact '{}' is required", a.name),
+                "bind it with .input_artifact(..)",
+            ));
+        }
+    }
+    true
+}
+
+/// Per-step wiring: template exists, required inputs bound, sliced/stacked
+/// names exist on the target interface.
+fn step_checks(wf: &Workflow, owner: &str, step: &Step, out: &mut Vec<Diagnostic>) {
+    let node = node_path(owner, step);
+    let Some(tpl) = wf.templates.get(&step.template) else {
+        out.push(Diagnostic::error(
+            codes::UNKNOWN_TEMPLATE,
+            node,
+            format!(
+                "template '{owner}': step '{}' references unknown template '{}'",
+                step.name, step.template
+            ),
+            "register the template on the workflow, or fix the name",
+        ));
+        return;
+    };
+    let sig = tpl.signature();
+    for p in &sig.input_params {
+        if !p.optional && p.default.is_none() && !step.parameters.contains_key(&p.name) {
+            out.push(Diagnostic::error(
+                codes::INPUT_NOT_BOUND,
+                node.clone(),
+                format!(
+                    "step '{}': required input parameter '{}' of template '{}' is not bound",
+                    step.name, p.name, step.template
+                ),
+                "bind it with .param(..) or declare it optional/defaulted",
+            ));
+        }
+    }
+    for a in &sig.input_artifacts {
+        if !a.optional && !step.artifacts.contains_key(&a.name) {
+            out.push(Diagnostic::error(
+                codes::INPUT_NOT_BOUND,
+                node.clone(),
+                format!(
+                    "step '{}': required input artifact '{}' of template '{}' is not bound",
+                    step.name, a.name, step.template
+                ),
+                "bind it with .artifact(..) or declare it optional",
+            ));
+        }
+    }
+    if let Some(sl) = &step.slices {
+        let (out_params, out_arts) = super::template_outputs(tpl);
+        for p in &sl.input_params {
+            if !sig.input_params.iter().any(|s| &s.name == p) {
+                out.push(Diagnostic::error(
+                    codes::SLICE_NAME_UNKNOWN,
+                    node.clone(),
+                    format!(
+                        "step '{}': sliced parameter '{p}' is not an input of '{}'",
+                        step.name, step.template
+                    ),
+                    "slice names must match the target template's input parameters",
+                ));
+            }
+        }
+        for a in &sl.input_artifacts {
+            if !sig.input_artifacts.iter().any(|s| &s.name == a) {
+                out.push(Diagnostic::error(
+                    codes::SLICE_NAME_UNKNOWN,
+                    node.clone(),
+                    format!(
+                        "step '{}': sliced artifact '{a}' is not an input of '{}'",
+                        step.name, step.template
+                    ),
+                    "slice names must match the target template's input artifacts",
+                ));
+            }
+        }
+        for p in &sl.output_params {
+            if !out_params.contains(p) {
+                out.push(Diagnostic::error(
+                    codes::SLICE_NAME_UNKNOWN,
+                    node.clone(),
+                    format!(
+                        "step '{}': stacked output '{p}' is not an output of '{}'",
+                        step.name, step.template
+                    ),
+                    "stacked names must match the target template's output parameters",
+                ));
+            }
+        }
+        for a in &sl.output_artifacts {
+            if !out_arts.contains(a) {
+                out.push(Diagnostic::error(
+                    codes::SLICE_NAME_UNKNOWN,
+                    node.clone(),
+                    format!(
+                        "step '{}': stacked output artifact '{a}' is not an output of '{}'",
+                        step.name, step.template
+                    ),
+                    "stacked names must match the target template's output artifacts",
+                ));
+            }
+        }
+    }
+}
+
+/// Two steps with one name shadow each other in output resolution and
+/// reuse keys. Returns whether any duplicates were found.
+fn duplicate_names<'a>(
+    owner: &str,
+    steps: impl Iterator<Item = &'a Step>,
+    out: &mut Vec<Diagnostic>,
+) -> bool {
+    let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+    for s in steps {
+        *counts.entry(s.name.as_str()).or_default() += 1;
+    }
+    let mut any = false;
+    for (name, n) in counts {
+        if n > 1 {
+            any = true;
+            out.push(Diagnostic::error(
+                codes::DUPLICATE_STEP,
+                format!("{owner}/{name}"),
+                format!("template '{owner}' declares {n} steps named '{name}'"),
+                "step names must be unique within a template",
+            ));
+        }
+    }
+    any
+}
+
+fn self_dependency(owner: &str, step: &Step) -> Diagnostic {
+    Diagnostic::error(
+        codes::SELF_DEPENDENCY,
+        node_path(owner, step),
+        format!("template '{owner}': step '{}' depends on itself", step.name),
+        "a step cannot consume its own outputs; use recursion via a named template instead",
+    )
+}
+
+/// Kahn's algorithm over the DAG's implied dependency edges.
+fn has_cycle(d: &crate::core::Dag) -> bool {
+    let deps: Vec<(String, BTreeSet<String>)> = d
+        .tasks
+        .iter()
+        .map(|t| (t.name.clone(), t.implied_dependencies()))
+        .collect();
+    let mut indeg: BTreeMap<&str, usize> =
+        deps.iter().map(|(n, ds)| (n.as_str(), ds.len())).collect();
+    let mut ready: Vec<&str> = indeg.iter().filter(|(_, c)| **c == 0).map(|(n, _)| *n).collect();
+    let mut done = 0;
+    while let Some(n) = ready.pop() {
+        done += 1;
+        for (name, ds) in &deps {
+            if ds.contains(n) {
+                let c = indeg.get_mut(name.as_str()).unwrap();
+                *c -= 1;
+                if *c == 0 {
+                    ready.push(name.as_str());
+                }
+            }
+        }
+    }
+    done != d.tasks.len()
+}
+
+/// BFS over template references from the entrypoint; anything not visited
+/// is dead weight (warning — it may be a library template kept on purpose).
+fn unreachable_templates(wf: &Workflow, out: &mut Vec<Diagnostic>) {
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    let mut queue: Vec<&str> = vec![wf.entrypoint.as_str()];
+    while let Some(name) = queue.pop() {
+        if !seen.insert(name) {
+            continue;
+        }
+        let Some(t) = wf.templates.get(name) else { continue };
+        if let Some((_, steps)) = super::super_op_steps(t) {
+            for s in steps {
+                if !seen.contains(s.template.as_str()) {
+                    queue.push(s.template.as_str());
+                }
+            }
+        }
+    }
+    for name in wf.templates.keys() {
+        if !seen.contains(name.as_str()) {
+            out.push(Diagnostic::warning(
+                codes::UNREACHABLE_TEMPLATE,
+                name.clone(),
+                format!("template '{name}' is unreachable from entrypoint '{}'", wf.entrypoint),
+                "no step ever instantiates it; drop it or wire it in",
+            ));
+        }
+    }
+}

@@ -33,18 +33,23 @@ pub fn cohesive_op() -> Arc<dyn Op> {
     ))
 }
 
-fn register_common(wf: Workflow) -> Workflow {
-    let wf = crate::apps::fpop::register(wf);
+/// Templates for the relaxation stage (gen → pick → relax).
+fn register_relaxation(wf: Workflow) -> Workflow {
     wf.container(ContainerTemplate::new("gen-config", crate::science::ops::gen_configs_op()))
         .container(ContainerTemplate::new("pick-first", crate::apps::fpop::pick_first_op()))
         .container(ContainerTemplate::new("relax", crate::science::ops::relax_op()))
-        .container(ContainerTemplate::new("eos-fit", crate::science::ops::eos_fit_op()))
+}
+
+/// Templates for the property stage (FPOP scan → EOS fit → cohesive).
+fn register_property(wf: Workflow) -> Workflow {
+    let wf = crate::apps::fpop::register(wf);
+    wf.container(ContainerTemplate::new("eos-fit", crate::science::ops::eos_fit_op()))
         .container(ContainerTemplate::new("cohesive", cohesive_op()))
 }
 
 /// The "relaxation" job type: structure optimization only.
 pub fn relaxation_workflow(seed: i64) -> Workflow {
-    let wf = register_common(Workflow::new("apex-relaxation"));
+    let wf = register_relaxation(Workflow::new("apex-relaxation"));
     wf.steps(
         Steps::new("main")
             .then(
@@ -73,7 +78,7 @@ pub fn relaxation_workflow(seed: i64) -> Workflow {
 /// The "property" job type: concurrent property DAG over a relaxed
 /// structure artifact (bound as workflow input artifact `relaxed`).
 pub fn property_workflow(scales: &[f64]) -> Workflow {
-    let wf = register_common(Workflow::new("apex-property"));
+    let wf = register_property(Workflow::new("apex-property"));
     let wf = wf.steps(crate::apps::fpop::preprunfp_steps(scales.len(), 2));
     wf.dag(property_dag(scales))
         .entrypoint("props")
@@ -88,7 +93,8 @@ fn property_dag(scales: &[f64]) -> Dag {
                 .out_param("v0", ParamType::Float)
                 .out_param("e0", ParamType::Float)
                 .out_param("b0", ParamType::Float)
-                .out_param("e_cohesive", ParamType::Float),
+                .out_param("e_cohesive", ParamType::Float)
+                .out_artifact("fp_outputs"),
         )
         .task(
             Step::new("eos-scan", "preprunfp")
@@ -109,12 +115,13 @@ fn property_dag(scales: &[f64]) -> Dag {
         .out_param_from("e0", "eos-fit", "e0")
         .out_param_from("b0", "eos-fit", "b0")
         .out_param_from("e_cohesive", "cohesive", "e_cohesive")
+        .out_artifact_from("fp_outputs", "eos-scan", "fp_outputs")
 }
 
 /// The "joint" job type: relaxation then the property DAG (paper: "combines
 /// relaxation and property to streamline the process").
 pub fn joint_workflow(seed: i64, scales: &[f64]) -> Workflow {
-    let wf = register_common(Workflow::new("apex-joint"));
+    let wf = register_property(register_relaxation(Workflow::new("apex-joint")));
     let wf = wf.steps(crate::apps::fpop::preprunfp_steps(scales.len(), 2));
     let wf = wf.dag(property_dag(scales));
     wf.steps(
@@ -143,7 +150,8 @@ pub fn joint_workflow(seed: i64, scales: &[f64]) -> Workflow {
             .out_param_from("e0", "property", "e0")
             .out_param_from("b0", "property", "b0")
             .out_param_from("e_cohesive", "property", "e_cohesive")
-            .out_param_from("relax_energy", "relaxation", "energy"),
+            .out_param_from("relax_energy", "relaxation", "energy")
+            .out_artifact_from("fp_outputs", "property", "fp_outputs"),
     )
     .entrypoint("main")
 }

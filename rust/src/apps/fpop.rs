@@ -178,7 +178,8 @@ pub fn eos_workflow(seed: i64, scales: &[f64], retries: u32) -> Workflow {
         .out_param_from("v0", "post", "v0")
         .out_param_from("e0", "post", "e0")
         .out_param_from("b0", "post", "b0")
-        .out_param_from("energies", "fp", "energies");
+        .out_param_from("energies", "fp", "energies")
+        .out_artifact_from("fp_outputs", "fp", "fp_outputs");
     // adapter: take slice 0 of the generated configs list then relax
     let first_relax = Steps::new("first-config-relax")
         .signature(

@@ -239,6 +239,16 @@ pub fn workflow(cfg: &RidConfig, seed: i64) -> Workflow {
         );
         prev = (name.clone(), name.clone(), name);
     }
+    // surface the last block's accumulated products as workflow outputs
+    let (models_out, confs_out) = if cfg.iterations == 0 {
+        ("params", "configs")
+    } else {
+        ("models", "conformations")
+    };
+    main = main
+        .out_artifact_from("dataset", &prev.0, "dataset")
+        .out_artifact_from("models", &prev.1, models_out)
+        .out_artifact_from("conformations", &prev.2, confs_out);
     wf.steps(block_steps(cfg)).steps(main).entrypoint("main")
 }
 

@@ -776,183 +776,19 @@ impl Workflow {
         self
     }
 
-    /// Static validation: entrypoint exists, every referenced template
-    /// exists, step-output references point at declared outputs, DAG
-    /// dependencies reference sibling tasks, and required template inputs
-    /// are bound by each step.
+    /// Static validation, backed by the [`crate::analysis`] subsystem's
+    /// context-free passes: returns the first error-severity diagnostic's
+    /// message (warnings do not block). Collect *all* findings with
+    /// [`crate::analysis::analyze`] / `dflow lint` instead of stopping at
+    /// the first one.
     pub fn validate(&self) -> Result<(), String> {
-        let tpl = self
-            .templates
-            .get(&self.entrypoint)
-            .ok_or_else(|| format!("entrypoint template '{}' not found", self.entrypoint))?;
-        // check workflow arguments against entrypoint signature
-        self.check_bound_inputs(tpl, &self.arguments, &self.input_artifacts)?;
-        for t in self.templates.values() {
-            match t {
-                OpTemplate::Container(_) => {}
-                OpTemplate::Steps(s) => {
-                    for group in &s.groups {
-                        for step in group {
-                            self.validate_step(step, t.name())?;
-                        }
-                    }
-                    // step-output deps must point to *earlier* groups
-                    let mut seen: BTreeSet<&str> = BTreeSet::new();
-                    for group in &s.groups {
-                        for step in group {
-                            for dep in step.implied_dependencies() {
-                                if !seen.contains(dep.as_str()) {
-                                    return Err(format!(
-                                        "steps '{}': step '{}' depends on '{}' which is not in an earlier group",
-                                        s.name, step.name, dep
-                                    ));
-                                }
-                            }
-                        }
-                        for step in group {
-                            seen.insert(&step.name);
-                        }
-                    }
-                }
-                OpTemplate::Dag(d) => {
-                    let names: BTreeSet<&str> =
-                        d.tasks.iter().map(|t| t.name.as_str()).collect();
-                    for task in &d.tasks {
-                        self.validate_step(task, t.name())?;
-                        for dep in task.implied_dependencies() {
-                            if !names.contains(dep.as_str()) {
-                                return Err(format!(
-                                    "dag '{}': task '{}' depends on unknown task '{}'",
-                                    d.name, task.name, dep
-                                ));
-                            }
-                        }
-                    }
-                    // cycle check (Kahn)
-                    let mut indeg: BTreeMap<&str, usize> =
-                        names.iter().map(|n| (*n, 0)).collect();
-                    let deps: Vec<(String, BTreeSet<String>)> = d
-                        .tasks
-                        .iter()
-                        .map(|t| (t.name.clone(), t.implied_dependencies()))
-                        .collect();
-                    for (_, ds) in &deps {
-                        let _ = ds;
-                    }
-                    for (name, ds) in &deps {
-                        let _ = name;
-                        for _d in ds {
-                            // indegree counts below
-                        }
-                    }
-                    for (name, ds) in &deps {
-                        *indeg.get_mut(name.as_str()).unwrap() += ds.len();
-                    }
-                    let mut ready: Vec<&str> = indeg
-                        .iter()
-                        .filter(|(_, c)| **c == 0)
-                        .map(|(n, _)| *n)
-                        .collect();
-                    let mut done = 0;
-                    while let Some(n) = ready.pop() {
-                        done += 1;
-                        for (name, ds) in &deps {
-                            if ds.contains(n) {
-                                let c = indeg.get_mut(name.as_str()).unwrap();
-                                *c -= 1;
-                                if *c == 0 {
-                                    ready.push(name.as_str());
-                                }
-                            }
-                        }
-                    }
-                    if done != d.tasks.len() {
-                        return Err(format!("dag '{}' contains a cycle", d.name));
-                    }
-                }
-            }
+        match crate::analysis::analyze(self)
+            .into_iter()
+            .find(|d| d.severity == crate::analysis::Severity::Error)
+        {
+            Some(d) => Err(d.message),
+            None => Ok(()),
         }
-        Ok(())
-    }
-
-    fn validate_step(&self, step: &Step, owner: &str) -> Result<(), String> {
-        let tpl = self.templates.get(&step.template).ok_or_else(|| {
-            format!(
-                "template '{owner}': step '{}' references unknown template '{}'",
-                step.name, step.template
-            )
-        })?;
-        let sig = tpl.signature();
-        // every required input param must be bound (or have a default)
-        for p in &sig.input_params {
-            if !p.optional && p.default.is_none() && !step.parameters.contains_key(&p.name) {
-                return Err(format!(
-                    "step '{}': required input parameter '{}' of template '{}' is not bound",
-                    step.name, p.name, step.template
-                ));
-            }
-        }
-        for a in &sig.input_artifacts {
-            if !a.optional && !step.artifacts.contains_key(&a.name) {
-                return Err(format!(
-                    "step '{}': required input artifact '{}' of template '{}' is not bound",
-                    step.name, a.name, step.template
-                ));
-            }
-        }
-        // sliced inputs must exist in the target signature
-        if let Some(sl) = &step.slices {
-            for p in &sl.input_params {
-                if !sig.input_params.iter().any(|s| &s.name == p) {
-                    return Err(format!(
-                        "step '{}': sliced parameter '{p}' is not an input of '{}'",
-                        step.name, step.template
-                    ));
-                }
-            }
-            for p in &sl.output_params {
-                if !sig.output_params.iter().any(|s| &s.name == p) {
-                    return Err(format!(
-                        "step '{}': stacked output '{p}' is not an output of '{}'",
-                        step.name, step.template
-                    ));
-                }
-            }
-        }
-        Ok(())
-    }
-
-    fn check_bound_inputs(
-        &self,
-        tpl: &OpTemplate,
-        args: &BTreeMap<String, Value>,
-        arts: &BTreeMap<String, ArtifactRef>,
-    ) -> Result<(), String> {
-        let sig = tpl.signature();
-        for p in &sig.input_params {
-            match args.get(&p.name) {
-                Some(v) => {
-                    if !v.check_type(p.ty) {
-                        return Err(format!(
-                            "workflow argument '{}' has type {} but template declares {}",
-                            p.name,
-                            v.type_of(),
-                            p.ty
-                        ));
-                    }
-                }
-                None if p.optional || p.default.is_some() => {}
-                None => {
-                    return Err(format!("workflow argument '{}' is required", p.name));
-                }
-            }
-        }
-        for a in &sig.input_artifacts {
-            if !a.optional && !arts.contains_key(&a.name) {
-                return Err(format!("workflow input artifact '{}' is required", a.name));
-            }
-        }
-        Ok(())
     }
 }
 

@@ -319,6 +319,33 @@ impl Engine {
         Engine::builder().build()
     }
 
+    /// The engine's own deployment context for the static analyzer: its
+    /// placer/cluster routing layers and registered executor names.
+    pub fn analysis_context(&self) -> crate::analysis::AnalysisContext<'_> {
+        crate::analysis::AnalysisContext {
+            placer: self.placer.as_deref(),
+            cluster: self.cluster.as_deref(),
+            executors: Some(self.executors.keys().cloned().collect()),
+            service: None,
+        }
+    }
+
+    /// Run every analyzer pass against this engine's configuration —
+    /// what `Engine::submit*`/`Engine::run*` gate admission on.
+    pub fn lint(&self, wf: &Workflow) -> crate::analysis::Report {
+        crate::analysis::Report::new(crate::analysis::analyze_with(wf, &self.analysis_context()))
+    }
+
+    /// Admission gate: reject on error-severity diagnostics, hand back the
+    /// rendered warning lines (journaled as `RunLinted` once a run exists).
+    fn admit(&self, wf: &Workflow) -> Result<Vec<String>, String> {
+        let report = self.lint(wf);
+        if report.has_errors() {
+            return Err(report.error_summary(&wf.name));
+        }
+        Ok(report.warning_lines())
+    }
+
     /// Validate and execute a workflow to completion (blocking).
     pub fn run(&self, wf: &Workflow) -> Result<RunResult, String> {
         self.run_with_reuse(wf, Vec::new())
@@ -330,8 +357,9 @@ impl Engine {
         wf: &Workflow,
         reuse: Vec<ReusedStep>,
     ) -> Result<RunResult, String> {
-        wf.validate()?;
+        let warnings = self.admit(wf)?;
         let run = self.new_run(wf, reuse, None, false);
+        journal_lint_warnings(&run, warnings);
         self.drive(wf, run)
     }
 
@@ -354,8 +382,9 @@ impl Engine {
                 rec.workflow, wf.name
             ));
         }
-        wf.validate()?;
+        let warnings = self.admit(wf)?;
         let run = self.new_run(wf, rec.reusable_steps(), Some(run_id), true);
+        journal_lint_warnings(&run, warnings);
         self.drive(wf, run)
     }
 
@@ -414,13 +443,22 @@ impl Engine {
         wf: Workflow,
         opts: SubmitOptions,
     ) -> Result<Submitted, String> {
-        wf.validate()?;
+        let warnings = self.admit(&wf)?;
         let run = self.new_run(&wf, opts.reuse, opts.run_id, opts.resubmission);
+        journal_lint_warnings(&run, warnings);
         let engine = self.clone();
         let run2 = run.clone();
         let handle = std::thread::Builder::new()
             .name(format!("dflow-run-{}", run.id))
-            .spawn(move || engine.drive(&wf, run2).expect("workflow was pre-validated"))
+            .spawn(move || {
+                // A driver-level Err here is an engine invariant breach
+                // (admission passed, so drive must reach a terminal
+                // state). Panicking would strand the run as live behind a
+                // dead thread — close it as failed instead, journaled.
+                engine
+                    .drive(&wf, run2.clone())
+                    .unwrap_or_else(|e| close_run_failed(run2, format!("engine invariant breach: {e}")))
+            })
             .map_err(|e| e.to_string())?;
         Ok(Submitted { run, handle })
     }
@@ -1799,6 +1837,27 @@ impl<'e> Exec<'e> {
     }
 }
 
+/// Journal the admission lint's surviving warnings onto a freshly created
+/// run (right after its submission marker), so `RunRegistry` replay and
+/// `dflow get` can surface them (`RecoveredRun::lint`).
+fn journal_lint_warnings(run: &WorkflowRun, warnings: Vec<String>) {
+    if !warnings.is_empty() {
+        run.journal_event(|| JournalEvent::RunLinted { warnings: warnings.clone() });
+    }
+}
+
+/// Close a run as failed after a driver-level error that escaped `drive`'s
+/// own terminal handling (an engine invariant breach). Keeps the run
+/// observable: phase flips to `Failed`, the trace and journal record the
+/// cause, and waiters on `wait_finished` wake up — instead of the
+/// submitting thread's `RunResult` dying with a panicked driver thread.
+fn close_run_failed(run: Arc<WorkflowRun>, message: String) -> RunResult {
+    run.set_phase(RunPhase::Failed);
+    run.trace.push(EventKind::WorkflowFailed, "", message.clone());
+    run.journal_event(|| JournalEvent::RunFailed { message: message.clone() });
+    RunResult { run, outputs: StepOutputs::default(), error: Some(message) }
+}
+
 /// Pod spec for a container template's leaf attempt (resource request +
 /// node selector), shared by the feasibility gate and the bind path so the
 /// two can never disagree about what is being requested.
@@ -2432,14 +2491,17 @@ mod tests {
 
     #[test]
     fn unknown_executor_is_an_error() {
+        // statically knowable, so rejected at admission (DF205), before
+        // any node is scheduled
         let op = Arc::new(FnOp::new(Signature::new(), |_| Ok(())));
         let wf = Workflow::new("w")
             .container(ContainerTemplate::new("op", op))
             .steps(Steps::new("main").then(Step::new("s", "op").executor("ghost")))
             .entrypoint("main");
-        let r = Engine::local().run(&wf).unwrap();
-        assert!(!r.succeeded());
-        assert!(r.error.unwrap().contains("not registered"));
+        let msg = Engine::local().run(&wf).unwrap_err();
+        assert!(msg.contains("DF205"), "{msg}");
+        assert!(msg.contains("not registered"), "{msg}");
+        assert!(msg.contains("ghost"), "{msg}");
     }
 
     #[test]
@@ -2503,9 +2565,8 @@ mod tests {
             .container(ContainerTemplate::new("op", op))
             .steps(Steps::new("main").then(Step::new("s", "op").on_backend("ghost")))
             .entrypoint("main");
-        let r = engine.run(&wf).unwrap();
-        assert!(!r.succeeded());
-        let msg = r.error.unwrap();
+        let msg = engine.run(&wf).unwrap_err();
+        assert!(msg.contains("DF201"), "{msg}");
         assert!(msg.contains("ghost"), "{msg}");
         assert!(msg.contains("only-local"), "{msg}");
     }
@@ -2517,9 +2578,8 @@ mod tests {
             .container(ContainerTemplate::new("op", op))
             .steps(Steps::new("main").then(Step::new("s", "op").on_backend("gpu")))
             .entrypoint("main");
-        let r = Engine::local().run(&wf).unwrap();
-        assert!(!r.succeeded());
-        let msg = r.error.unwrap();
+        let msg = Engine::local().run(&wf).unwrap_err();
+        assert!(msg.contains("DF204"), "{msg}");
         assert!(msg.contains("no backends are registered"), "{msg}");
         assert!(msg.contains("gpu"), "{msg}");
     }
@@ -2535,9 +2595,9 @@ mod tests {
             )
             .entrypoint("main");
         let engine = Engine::builder().backend(Backend::local("a")).build();
-        let r = engine.run(&wf).unwrap();
-        assert!(!r.succeeded());
-        assert!(r.error.unwrap().contains("one routing mechanism"));
+        let msg = engine.run(&wf).unwrap_err();
+        assert!(msg.contains("DF203"), "{msg}");
+        assert!(msg.contains("one routing mechanism"), "{msg}");
     }
 
     #[test]

@@ -203,6 +203,28 @@ impl Backend {
         self.placed.load(Ordering::SeqCst)
     }
 
+    /// Would this backend accept `sel`? Same predicate the placer uses;
+    /// public so the static analyzer (`crate::analysis`) can reason about
+    /// selector coverage without placing anything.
+    pub fn matches_selector(&self, sel: &BackendSelector) -> bool {
+        self.matches(sel)
+    }
+
+    /// Statically-known cap on concurrent leases, when the capacity model
+    /// has one: `Slots(n)` → `n`, a partition → its slot count. `None` for
+    /// cluster-modelled and unbounded backends (their headroom depends on
+    /// the resource vector, not a scalar). Used by the analyzer's DF3xx
+    /// fan-out-vs-capacity checks.
+    pub fn static_slots(&self) -> Option<usize> {
+        match &self.capacity {
+            BackendCapacity::Partition { sched, partition } => {
+                sched.partition_stats(partition).map(|st| st.slots)
+            }
+            BackendCapacity::Slots(n) => Some(*n),
+            BackendCapacity::Cluster(_) | BackendCapacity::Unbounded => None,
+        }
+    }
+
     fn matches(&self, sel: &BackendSelector) -> bool {
         if let Some(n) = &sel.name {
             if *n != self.name {

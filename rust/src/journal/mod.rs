@@ -156,6 +156,11 @@ pub enum JournalEvent {
     /// The run was cancelled mid-flight (`WorkflowRun::cancel`, via the
     /// service control plane's `cancel(run_id)` / `dflow cancel`).
     RunCancelled { reason: String },
+    /// Warning-severity static-analysis findings from admission (rendered
+    /// `crate::analysis` diagnostic lines). Error findings never get here
+    /// — they reject the submission before a run exists. Not a terminal
+    /// event: it annotates a run that is about to execute.
+    RunLinted { warnings: Vec<String> },
     /// A step instance entered the execution path (template resolved).
     NodeScheduled { path: String, template: String },
     /// A leaf attempt started executing (capacity acquired).
@@ -251,6 +256,7 @@ impl JournalEvent {
             JournalEvent::RunSucceeded => "RunSucceeded",
             JournalEvent::RunFailed { .. } => "RunFailed",
             JournalEvent::RunCancelled { .. } => "RunCancelled",
+            JournalEvent::RunLinted { .. } => "RunLinted",
             JournalEvent::NodeScheduled { .. } => "NodeScheduled",
             JournalEvent::NodeStarted { .. } => "NodeStarted",
             JournalEvent::NodePlaced { .. } => "NodePlaced",
@@ -297,6 +303,12 @@ impl JournalEvent {
             }
             JournalEvent::RunCancelled { reason } => {
                 fields.push(("reason", Json::s(reason.clone())));
+            }
+            JournalEvent::RunLinted { warnings } => {
+                fields.push((
+                    "warnings",
+                    Json::Arr(warnings.iter().map(|w| Json::s(w.clone())).collect()),
+                ));
             }
             JournalEvent::NodeScheduled { path, template } => {
                 fields.push(("path", Json::s(path.clone())));
@@ -365,6 +377,15 @@ impl JournalEvent {
             "RunSucceeded" => JournalEvent::RunSucceeded,
             "RunFailed" => JournalEvent::RunFailed { message: j_str(j, "message")? },
             "RunCancelled" => JournalEvent::RunCancelled { reason: j_str(j, "reason")? },
+            "RunLinted" => JournalEvent::RunLinted {
+                warnings: match j.get("warnings")? {
+                    Json::Arr(items) => items
+                        .iter()
+                        .map(|w| w.as_str().map(str::to_string))
+                        .collect::<Option<Vec<String>>>()?,
+                    _ => return None,
+                },
+            },
             "NodeScheduled" => JournalEvent::NodeScheduled {
                 path: j_str(j, "path")?,
                 template: j_str(j, "template")?,
@@ -539,6 +560,8 @@ pub struct RecoveredRun {
     pub nodes: BTreeMap<String, RecoveredNode>,
     /// key → outputs of every journaled success/reuse (feeds resubmit).
     pub keyed: BTreeMap<String, StepOutputs>,
+    /// Rendered admission-lint warning lines (`RunLinted`), when any.
+    pub lint: Vec<String>,
     /// Records folded into this state (snapshot counts as one).
     pub events: usize,
     /// True when replay truncated a torn tail.
@@ -555,6 +578,7 @@ impl RecoveredRun {
             resubmissions: 0,
             nodes: BTreeMap::new(),
             keyed: BTreeMap::new(),
+            lint: Vec::new(),
             events: 0,
             torn_tail: false,
         }
@@ -592,6 +616,9 @@ impl RecoveredRun {
             JournalEvent::RunCancelled { reason } => {
                 self.phase = RunPhase::Cancelled;
                 self.message = reason.clone();
+            }
+            JournalEvent::RunLinted { warnings } => {
+                self.lint = warnings.clone();
             }
             JournalEvent::NodeScheduled { path, template } => {
                 let n = self.node(path);
@@ -670,6 +697,7 @@ impl RecoveredRun {
                 "keyed",
                 Json::Obj(self.keyed.iter().map(|(k, o)| (k.clone(), o.to_json())).collect()),
             ),
+            ("lint", Json::Arr(self.lint.iter().map(|w| Json::s(w.clone())).collect())),
         ])
     }
 
@@ -690,6 +718,12 @@ impl RecoveredRun {
         if let Some(Json::Obj(keyed)) = j.get("keyed") {
             for (k, v) in keyed {
                 rec.keyed.insert(k.clone(), StepOutputs::from_json(v)?);
+            }
+        }
+        // absent in pre-lint snapshots — tolerate for forward replay
+        if let Some(Json::Arr(lint)) = j.get("lint") {
+            for w in lint {
+                rec.lint.push(w.as_str()?.to_string());
             }
         }
         Some(rec)
@@ -1481,6 +1515,8 @@ pub struct RunSummary {
     pub failed: usize,
     pub reused: usize,
     pub resubmissions: u32,
+    /// Admission-lint warnings journaled for this run (`RunLinted`).
+    pub lint_warnings: usize,
     pub torn_tail: bool,
     pub events: usize,
 }
@@ -1497,6 +1533,7 @@ impl RunSummary {
             failed: rec.count_phase(NodePhase::Failed),
             reused: rec.count_phase(NodePhase::Reused),
             resubmissions: rec.resubmissions,
+            lint_warnings: rec.lint.len(),
             torn_tail: rec.torn_tail,
             events: rec.events,
         }
@@ -1514,6 +1551,7 @@ impl RunSummary {
             ("failed", Json::n(self.failed as f64)),
             ("reused", Json::n(self.reused as f64)),
             ("resubmissions", Json::n(self.resubmissions as f64)),
+            ("lint_warnings", Json::n(self.lint_warnings as f64)),
             ("torn_tail", Json::Bool(self.torn_tail)),
             ("events", Json::n(self.events as f64)),
         ])
@@ -1553,6 +1591,7 @@ impl RunRegistry {
                     failed: 0,
                     reused: 0,
                     resubmissions: 0,
+                    lint_warnings: 0,
                     torn_tail: true,
                     events: 0,
                 },
@@ -1607,6 +1646,9 @@ mod tests {
     fn sample_events() -> Vec<JournalEvent> {
         vec![
             JournalEvent::RunSubmitted { workflow: "w".into() },
+            JournalEvent::RunLinted {
+                warnings: vec!["warning[DF301] step 'a' has a zero attempt timeout".into()],
+            },
             JournalEvent::NodeScheduled { path: "main/a".into(), template: "op".into() },
             JournalEvent::NodeStarted { path: "main/a".into(), attempt: 0 },
             JournalEvent::NodePlaced {

@@ -6,6 +6,11 @@
 //!
 //! The crate provides:
 //!
+//! * [`analysis`] — workflow static analysis (`dflow lint`): a multi-pass
+//!   collect-all diagnostics engine with stable `DFxxx` codes (structural,
+//!   dataflow, placement feasibility, policy/capacity) that gates
+//!   admission at `Engine::submit*` / `WorkflowService::submit` and powers
+//!   the `dflow lint` CLI.
 //! * [`core`] — the workflow language: OP templates, typed
 //!   parameters/artifacts, `Step`, `Steps`/`Dag` super-OPs, recursion,
 //!   conditions and `Slices` (map/reduce over parallel steps).
@@ -44,6 +49,7 @@
 //! Python runs only at build time (`make artifacts`); the engine and every
 //! example/bench in this crate are a self-contained Rust binary afterwards.
 
+pub mod analysis;
 pub mod apps;
 pub mod bench_util;
 pub mod check;

@@ -4,6 +4,9 @@
 //!
 //! ```text
 //! dflow workflows                       # built-in application workflows
+//! dflow lint [name...] [--json] [--deny-warnings]
+//!                                       # static analysis against the demo
+//!                                       # cluster, without running anything
 //! dflow submit <name> [seed]            # run one under the service (journaled)
 //! dflow list [--json]                   # registry: every journaled run
 //! dflow get <run_id>                    # recovered run state as JSON
@@ -142,6 +145,65 @@ fn cmd_workflows() {
     for (name, desc) in WORKFLOWS {
         println!("  {name:<16} {desc}");
     }
+}
+
+/// `dflow lint`: run every analyzer pass over the named built-in
+/// workflows (all of them by default) against the same demo cluster +
+/// local executor `dflow submit` would use — without executing anything.
+/// Errors (or warnings under `--deny-warnings`) exit nonzero.
+fn cmd_lint(names: &[String], json: bool, deny_warnings: bool) -> Result<(), String> {
+    let targets: Vec<String> = if names.is_empty() {
+        WORKFLOWS.iter().map(|(n, _)| n.to_string()).collect()
+    } else {
+        names.to_vec()
+    };
+    let cluster = demo_cluster();
+    let ctx = dflow::analysis::AnalysisContext {
+        placer: None,
+        cluster: Some(&cluster),
+        executors: Some(vec!["local".to_string()]),
+        service: Some(dflow::analysis::ServiceHints {
+            max_live_runs: ServiceConfig::default().max_live_runs,
+        }),
+    };
+    let (mut errors, mut warnings) = (0usize, 0usize);
+    let mut rows: Vec<dflow::jsonx::Json> = Vec::new();
+    for name in &targets {
+        let wf = build(name, 0)
+            .ok_or_else(|| format!("unknown workflow '{name}' — see `dflow workflows`"))?;
+        let report = dflow::analysis::Report::new(dflow::analysis::analyze_with(&wf, &ctx));
+        errors += report.errors().count();
+        warnings += report.warnings().count();
+        if json {
+            rows.push(dflow::jsonx::Json::obj(vec![
+                ("workflow", dflow::jsonx::Json::s(name.clone())),
+                ("diagnostics", report.to_json()),
+            ]));
+        } else if report.diagnostics.is_empty() {
+            println!("{name}: ok");
+        } else {
+            println!("{name}:");
+            for d in &report.diagnostics {
+                println!("  {}", d.render());
+                println!("      help: {}", d.help);
+            }
+        }
+    }
+    if json {
+        println!("{}", dflow::jsonx::Json::Arr(rows).to_string_pretty());
+    } else {
+        println!(
+            "linted {} workflow(s) against the demo cluster: {errors} error(s), {warnings} warning(s)"
+            , targets.len()
+        );
+    }
+    if errors > 0 {
+        return Err(format!("lint found {errors} error(s)"));
+    }
+    if deny_warnings && warnings > 0 {
+        return Err(format!("lint found {warnings} warning(s) and --deny-warnings is set"));
+    }
+    Ok(())
 }
 
 fn event_line(rec: &dflow::journal::Recorded) -> String {
@@ -404,12 +466,14 @@ fn main() {
     let tenant =
         take_flag_value(&mut args, "--tenant").unwrap_or_else(|| "default".to_string());
     let json = take_flag(&mut args, "--json");
+    let deny_warnings = take_flag(&mut args, "--deny-warnings");
     let arg = |i: usize| args.get(i).map(String::as_str);
     let result = match arg(0) {
         Some("workflows") | None => {
             cmd_workflows();
             Ok(())
         }
+        Some("lint") => cmd_lint(&args[1..], json, deny_warnings),
         Some("list") => cmd_list(&store, json),
         Some("submit") => {
             let name = arg(1).unwrap_or_default().to_string();
@@ -458,7 +522,7 @@ fn main() {
             Ok(())
         }
         Some(other) => Err(format!(
-            "unknown command '{other}' (try: workflows, submit, list, get, timeline, \
+            "unknown command '{other}' (try: workflows, lint, submit, list, get, timeline, \
              watch, cancel, retry, compact, artifacts, cluster)"
         )),
     };

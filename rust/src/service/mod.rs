@@ -630,7 +630,19 @@ impl WorkflowService {
         run_id: Option<u64>,
         resubmission: bool,
     ) -> Result<u64, String> {
-        wf.validate()?;
+        // full static analysis against the engine's deployment plus the
+        // service's own admission limits: error-severity findings reject
+        // here, before the workflow can ever occupy a queue slot; the
+        // engine journals surviving warnings as `RunLinted` at start
+        let mut ctx = self.inner.engine.analysis_context();
+        ctx.service = Some(crate::analysis::ServiceHints {
+            max_live_runs: self.inner.config.max_live_runs,
+        });
+        let report = crate::analysis::Report::new(crate::analysis::analyze_with(&wf, &ctx));
+        if report.has_errors() {
+            self.inner.metrics.rejected.inc(tenant);
+            return Err(report.error_summary(&wf.name));
+        }
         // gate → state lock order, shared with the compaction loop: a
         // retry cannot slip into the queue between compaction's busy
         // re-check and the compact itself

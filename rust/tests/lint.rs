@@ -1,0 +1,503 @@
+//! `dflow lint` battery: fixture workflows exercising the stable
+//! diagnostic codes, the guarded-step severity downgrade, the seed-app
+//! lint-cleanliness guarantee, and the admission soundness property
+//! ("zero `DF2xx` diagnostics of any severity ⇒ the run never hits the
+//! placer's infeasibility fail-fast").
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dflow::analysis::{analyze_with, AnalysisContext, Report, ServiceHints, Severity};
+use dflow::apps::{apex, deepks, fpop, rid, tesla, vsw};
+use dflow::check;
+use dflow::cluster::{Cluster, NodeSpec, Resources};
+use dflow::core::{
+    ContainerTemplate, ContinueOn, Dag, Expr, FnOp, Operand, ParamType, Signature, Slices, Step,
+    StepPolicy, Steps, Value, Workflow,
+};
+use dflow::engine::{Backend, Engine};
+
+fn noop() -> Arc<dyn dflow::core::Op> {
+    Arc::new(FnOp::new(Signature::new(), |_| Ok(())))
+}
+
+fn leaf(name: &str) -> ContainerTemplate {
+    ContainerTemplate::new(name, noop())
+}
+
+fn report(wf: &Workflow) -> Report {
+    Report::new(dflow::analysis::analyze(wf))
+}
+
+/// The heterogeneous cluster the CLI lints against (`demo_cluster` in the
+/// `dflow` binary): 4 cpu nodes, 4 gpu nodes labeled `accel=gpu`, one
+/// virtual HPC node.
+fn demo_like_cluster() -> Arc<Cluster> {
+    let mut nodes: Vec<NodeSpec> = (0..4)
+        .map(|i| NodeSpec::worker(format!("cpu-{i}"), Resources::new(16_000, 32_000, 0)))
+        .collect();
+    for i in 0..4 {
+        nodes.push(
+            NodeSpec::worker(format!("gpu-{i}"), Resources::new(16_000, 32_000, 4))
+                .label("accel", "gpu"),
+        );
+    }
+    nodes.push(NodeSpec::worker("vnode-slurm", Resources::cpu(128_000)).virtual_node("slurm-main"));
+    Arc::new(Cluster::new(nodes, 0))
+}
+
+// -- fixture battery: every pass family fires, ≥8 distinct codes ------------------
+
+#[test]
+fn fixtures_exercise_at_least_eight_distinct_codes() {
+    fn expect(seen: &mut BTreeSet<&'static str>, r: Report, code: &str) {
+        assert!(
+            r.diagnostics.iter().any(|d| d.code == code),
+            "expected {code}, got: {:?}",
+            r.diagnostics
+        );
+        seen.extend(r.codes());
+    }
+    let mut seen: BTreeSet<&'static str> = BTreeSet::new();
+
+    // DF001: entrypoint template missing
+    expect(&mut seen, report(&Workflow::new("w").entrypoint("main")), "DF001");
+
+    // DF002: step references an unknown template (+ DF011 for the orphan)
+    expect(
+        &mut seen,
+        report(
+            &Workflow::new("w")
+                .container(leaf("orphan"))
+                .steps(Steps::new("main").then(Step::new("a", "missing")))
+                .entrypoint("main"),
+        ),
+        "DF002",
+    );
+
+    // DF008: DAG task depends on an unknown task
+    expect(
+        &mut seen,
+        report(
+            &Workflow::new("w")
+                .container(leaf("t"))
+                .dag(Dag::new("main").task(Step::new("a", "t").depends_on("ghost")))
+                .entrypoint("main"),
+        ),
+        "DF008",
+    );
+
+    // DF012: a task depending on itself
+    expect(
+        &mut seen,
+        report(
+            &Workflow::new("w")
+                .container(leaf("t"))
+                .dag(Dag::new("main").task(Step::new("a", "t").depends_on("a")))
+                .entrypoint("main"),
+        ),
+        "DF012",
+    );
+
+    // DF010: duplicate step names in one template
+    expect(
+        &mut seen,
+        report(
+            &Workflow::new("w")
+                .container(leaf("t"))
+                .steps(
+                    Steps::new("main")
+                        .then(Step::new("a", "t"))
+                        .then(Step::new("a", "t")),
+                )
+                .entrypoint("main"),
+        ),
+        "DF010",
+    );
+
+    // DF101: consuming an output the producer's template never declares
+    let sink = ContainerTemplate::new(
+        "sink",
+        Arc::new(FnOp::new(Signature::new().in_param("x", ParamType::Int), |_| Ok(()))),
+    );
+    expect(
+        &mut seen,
+        report(
+            &Workflow::new("w")
+                .container(leaf("t"))
+                .container(sink.clone())
+                .steps(
+                    Steps::new("main")
+                        .then(Step::new("a", "t"))
+                        .then(Step::new("b", "sink").param_from_step("x", "a", "nope")),
+                )
+                .entrypoint("main"),
+        ),
+        "DF101",
+    );
+
+    // DF102: produced output artifact neither consumed nor exported
+    let producer = ContainerTemplate::new(
+        "producer",
+        Arc::new(FnOp::new(Signature::new().out_artifact("blob"), |_| Ok(()))),
+    );
+    expect(
+        &mut seen,
+        report(
+            &Workflow::new("w")
+                .container(producer.clone())
+                .steps(Steps::new("main").then(Step::new("a", "producer")))
+                .entrypoint("main"),
+        ),
+        "DF102",
+    );
+
+    // ...but a reuse key exempts the producer (addressable via query_step)
+    let keyed = report(
+        &Workflow::new("w")
+            .container(producer)
+            .steps(Steps::new("main").then(Step::new("a", "producer").key("a")))
+            .entrypoint("main"),
+    );
+    assert!(
+        !keyed.diagnostics.iter().any(|d| d.code == "DF102"),
+        "keyed step must be DF102-exempt: {:?}",
+        keyed.diagnostics
+    );
+
+    // DF103 / DF104: sliced parameter is not a list / widths disagree
+    let fan = ContainerTemplate::new(
+        "fan",
+        Arc::new(FnOp::new(
+            Signature::new()
+                .in_param("xs", ParamType::List)
+                .in_param("ys", ParamType::List),
+            |_| Ok(()),
+        )),
+    );
+    expect(
+        &mut seen,
+        report(
+            &Workflow::new("w")
+                .container(fan.clone())
+                .steps(Steps::new("main").then(
+                    Step::new("a", "fan")
+                        .param("xs", 5i64)
+                        .param("ys", Value::ints(0..2))
+                        .slices(Slices::over("xs")),
+                ))
+                .entrypoint("main"),
+        ),
+        "DF103",
+    );
+    expect(
+        &mut seen,
+        report(
+            &Workflow::new("w")
+                .container(fan)
+                .steps(Steps::new("main").then(
+                    Step::new("a", "fan")
+                        .param("xs", Value::ints(0..3))
+                        .param("ys", Value::ints(0..5))
+                        .slices(Slices::over("xs").and("ys")),
+                ))
+                .entrypoint("main"),
+        ),
+        "DF104",
+    );
+
+    // DF105: template output sourced from an output nobody produces
+    expect(
+        &mut seen,
+        report(
+            &Workflow::new("w")
+                .container(leaf("t"))
+                .steps(
+                    Steps::new("main")
+                        .then(Step::new("a", "t"))
+                        .out_param_from("r", "a", "nope"),
+                )
+                .entrypoint("main"),
+        ),
+        "DF105",
+    );
+
+    // DF301 / DF302 / DF304: hopeless policies
+    let mut zero_timeout = StepPolicy::default();
+    zero_timeout.timeout = Some(Duration::from_millis(0));
+    zero_timeout.retries = 3;
+    let mut storm = StepPolicy::default();
+    storm.retries = 12; // default backoff is zero
+    let fanout = ContainerTemplate::new(
+        "fan",
+        Arc::new(FnOp::new(Signature::new().in_param("xs", ParamType::List), |_| Ok(()))),
+    );
+    let r = report(
+        &Workflow::new("w")
+            .container(leaf("t"))
+            .container(fanout)
+            .steps(
+                Steps::new("main")
+                    .then(Step::new("a", "t").policy(zero_timeout))
+                    .then(Step::new("b", "t").policy(storm))
+                    .then(
+                        Step::new("c", "fan")
+                            .param("xs", Value::ints(0..2))
+                            .slices(
+                                Slices::over("xs").continue_on(ContinueOn::SuccessNumber(5)),
+                            ),
+                    ),
+            )
+            .entrypoint("main"),
+    );
+    for code in ["DF301", "DF302", "DF304"] {
+        assert!(
+            r.diagnostics.iter().any(|d| d.code == code),
+            "expected {code}: {:?}",
+            r.diagnostics
+        );
+    }
+    seen.extend(r.codes());
+
+    // DF201 / DF203 / DF205: routing against a backend registry
+    let engine = Engine::builder().backend(Backend::local("alpha")).build();
+    let wf = Workflow::new("w")
+        .container(leaf("t"))
+        .steps(
+            Steps::new("main")
+                .then(Step::new("a", "t").on_backend("ghost"))
+                .then(Step::new("b", "t").executor("local").on_backend("alpha"))
+                .then(Step::new("c", "t").executor("phantom")),
+        )
+        .entrypoint("main");
+    let r = engine.lint(&wf);
+    for code in ["DF201", "DF203", "DF205"] {
+        assert!(
+            r.diagnostics.iter().any(|d| d.code == code),
+            "expected {code}: {:?}",
+            r.diagnostics
+        );
+    }
+    seen.extend(r.codes());
+
+    // DF204: a selector but no placement layer at all
+    let r = Engine::local().lint(
+        &Workflow::new("w")
+            .container(leaf("t"))
+            .steps(Steps::new("main").then(Step::new("a", "t").backend_where("tier", "gpu")))
+            .entrypoint("main"),
+    );
+    expect(&mut seen, r, "DF204");
+
+    // DF202: request fits no node of the engine cluster
+    let tiny = Arc::new(Cluster::uniform(1, Resources::cpu(1000), 0));
+    let engine = Engine::builder().cluster(tiny).build();
+    let r = engine.lint(
+        &Workflow::new("w")
+            .container(leaf("huge").resources(Resources::cpu(64_000)))
+            .steps(Steps::new("main").then(Step::new("a", "huge")))
+            .entrypoint("main"),
+    );
+    expect(&mut seen, r, "DF202");
+
+    assert!(
+        seen.len() >= 8,
+        "fixture battery must exercise >= 8 distinct codes, got {}: {seen:?}",
+        seen.len()
+    );
+}
+
+#[test]
+fn capacity_codes_fire_against_slot_backends() {
+    // DF303: fan-out wider than the total slots of the matching backends
+    let engine = Engine::builder().backend(Backend::local_slots("small", 2)).build();
+    let fan = ContainerTemplate::new(
+        "fan",
+        Arc::new(FnOp::new(Signature::new().in_param("xs", ParamType::List), |_| Ok(()))),
+    );
+    let wide = Workflow::new("w")
+        .container(fan)
+        .steps(Steps::new("main").then(
+            Step::new("a", "fan").param("xs", Value::ints(0..8)).slices(Slices::over("xs")),
+        ))
+        .entrypoint("main");
+    let r = engine.lint(&wide);
+    assert!(
+        r.diagnostics.iter().any(|d| d.code == "DF303" && d.severity == Severity::Warning),
+        "expected DF303 warning: {:?}",
+        r.diagnostics
+    );
+
+    // DF305: one run fits, max_live_runs of them overcommit
+    let narrow = Workflow::new("w")
+        .container(ContainerTemplate::new(
+            "fan",
+            Arc::new(FnOp::new(Signature::new().in_param("xs", ParamType::List), |_| Ok(()))),
+        ))
+        .steps(Steps::new("main").then(
+            Step::new("a", "fan").param("xs", Value::ints(0..2)).slices(Slices::over("xs")),
+        ))
+        .entrypoint("main");
+    let mut ctx = engine.analysis_context();
+    ctx.service = Some(ServiceHints { max_live_runs: 4 });
+    let r = Report::new(analyze_with(&narrow, &ctx));
+    assert!(
+        r.diagnostics.iter().any(|d| d.code == "DF305" && d.severity == Severity::Warning),
+        "expected DF305 warning: {:?}",
+        r.diagnostics
+    );
+    // and without the service hint the same workflow is clean
+    let r = engine.lint(&narrow);
+    assert!(r.diagnostics.is_empty(), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn guarded_steps_downgrade_placement_findings_to_warnings() {
+    let engine = Engine::builder().backend(Backend::local("alpha")).build();
+    let never = Expr::eq(Operand::Const(Value::Int(1)), Operand::Const(Value::Int(2)));
+    let mut soft = StepPolicy::default();
+    soft.continue_on_failed = true;
+    let wf = Workflow::new("w")
+        .container(leaf("t"))
+        .steps(
+            Steps::new("main")
+                .then(Step::new("a", "t").on_backend("ghost").when(never))
+                .then(Step::new("b", "t").on_backend("ghost").key("b"))
+                .then(Step::new("c", "t").on_backend("ghost").policy(soft)),
+        )
+        .entrypoint("main");
+    let r = engine.lint(&wf);
+    let df201: Vec<_> = r.diagnostics.iter().filter(|d| d.code == "DF201").collect();
+    assert_eq!(df201.len(), 3, "{:?}", r.diagnostics);
+    assert!(df201.iter().all(|d| d.severity == Severity::Warning), "{df201:?}");
+    assert!(!r.has_errors());
+}
+
+// -- every seed app lints clean under the CLI's context ---------------------------
+
+#[test]
+fn seed_apps_lint_clean_against_demo_cluster() {
+    let scales = [0.85, 0.9, 0.95, 1.0, 1.05, 1.1, 1.15];
+    let apps: Vec<(&str, Workflow)> = vec![
+        ("fpop-eos", fpop::eos_workflow(7, &scales, 2)),
+        ("apex-relaxation", apex::relaxation_workflow(1)),
+        (
+            "apex-property",
+            apex::property_workflow(&scales)
+                .input_artifact("relaxed", dflow::core::ArtifactRef::new("inputs/relaxed")),
+        ),
+        ("apex-joint", apex::joint_workflow(1, &scales)),
+        ("rid", rid::workflow(&rid::RidConfig::default(), 5)),
+        ("deepks", deepks::workflow(&deepks::DeepksConfig::default())),
+        ("vsw", vsw::workflow(&vsw::VswConfig::default(), 99)),
+        ("tesla", tesla::workflow(&tesla::TeslaConfig::default(), 1)),
+    ];
+    let cluster = demo_like_cluster();
+    let ctx = AnalysisContext {
+        placer: None,
+        cluster: Some(&cluster),
+        executors: Some(vec!["local".to_string()]),
+        service: Some(ServiceHints { max_live_runs: 4 }),
+    };
+    for (name, wf) in &apps {
+        let r = Report::new(analyze_with(wf, &ctx));
+        assert!(
+            r.diagnostics.is_empty(),
+            "app '{name}' must lint clean, got:\n{}",
+            r.diagnostics
+                .iter()
+                .map(|d| format!("  {} ({})", d.render(), d.node))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}
+
+// -- soundness: zero DF2xx (any severity) ⇒ no placer fail-fast at runtime --------
+
+#[test]
+fn zero_df2xx_implies_no_placer_failfast() {
+    let label_pool = [("tier", "cloud"), ("tier", "hpc"), ("accel", "gpu")];
+    check::forall_cases("lint placement soundness", 48, |rng| {
+        // random backend registry: 1-3 backends, random caps + labels
+        let n_backends = 1 + rng.below(3) as usize;
+        let mut builder = Engine::builder();
+        let mut names: Vec<String> = Vec::new();
+        for i in 0..n_backends {
+            let name = format!("b{i}");
+            let mut b = if rng.below(2) == 0 {
+                Backend::local(&name)
+            } else {
+                Backend::local_slots(&name, 1 + rng.below(3) as usize)
+            };
+            if rng.below(2) == 0 {
+                let (k, v) = label_pool[rng.below(label_pool.len() as u64) as usize];
+                b = b.label(k, v);
+            }
+            names.push(name);
+            builder = builder.backend(b);
+        }
+        let engine = builder.build();
+
+        // random workflow: 1-4 trivial steps with random routing, some of
+        // which may name backends that don't exist or labels nobody carries
+        let mut steps = Steps::new("main");
+        let n_steps = 1 + rng.below(4) as usize;
+        for s in 0..n_steps {
+            let mut st = Step::new(&format!("s{s}"), "op");
+            match rng.below(4) {
+                0 => {} // any backend
+                1 => st = st.on_backend("ghost"),
+                2 => {
+                    let (k, v) = label_pool[rng.below(label_pool.len() as u64) as usize];
+                    st = st.backend_where(k, v);
+                }
+                _ => {
+                    let name = &names[rng.below(names.len() as u64) as usize];
+                    st = st.on_backend(name);
+                }
+            }
+            steps = steps.then(st);
+        }
+        let wf = Workflow::new("prop")
+            .container(leaf("op"))
+            .steps(steps)
+            .entrypoint("main");
+
+        let has_df2xx =
+            engine.lint(&wf).diagnostics.iter().any(|d| d.code.starts_with("DF2"));
+        match engine.run(&wf) {
+            Ok(r) => {
+                // admitted: a clean DF2xx bill means the placer can satisfy
+                // every step, so nothing may fail
+                if !has_df2xx {
+                    assert!(r.succeeded(), "clean lint but run failed: {:?}", r.error);
+                }
+            }
+            Err(e) => {
+                // rejected at admission: only a DF2xx error can explain it
+                // (the workflow is structurally valid by construction)
+                assert!(has_df2xx, "rejected without any DF2xx diagnostic: {e}");
+            }
+        }
+    });
+}
+
+// -- admission surfaces: Engine::run rejects, messages carry the code -------------
+
+#[test]
+fn admission_rejection_names_code_step_and_backends() {
+    let engine = Engine::builder()
+        .backend(Backend::local("alpha"))
+        .backend(Backend::local("beta"))
+        .build();
+    let wf = Workflow::new("doomed")
+        .container(leaf("t"))
+        .steps(Steps::new("main").then(Step::new("nowhere", "t").on_backend("quantum")))
+        .entrypoint("main");
+    let msg = engine.run(&wf).unwrap_err();
+    for needle in ["DF201", "main/nowhere", "quantum", "alpha", "beta"] {
+        assert!(msg.contains(needle), "missing '{needle}' in: {msg}");
+    }
+}

@@ -232,7 +232,11 @@ fn infeasible_step_fails_fast_with_backend_name_without_a_worker() {
 }
 
 #[test]
-fn selector_matching_nothing_fails_with_known_backend_list() {
+fn selector_matching_nothing_is_rejected_at_admission() {
+    // a selector no registered backend can ever satisfy is now a static
+    // (DF201) admission error — the run is refused before a single node
+    // is scheduled, and the message still names the selector and the
+    // known backends
     let engine = Engine::builder()
         .backend(Backend::local("alpha"))
         .backend(Backend::local("beta"))
@@ -242,11 +246,32 @@ fn selector_matching_nothing_fails_with_known_backend_list() {
         .container(ContainerTemplate::new("op", op))
         .steps(Steps::new("main").then(Step::new("s", "op").backend_where("tier", "gpu")))
         .entrypoint("main");
-    let r = engine.run(&wf).unwrap();
-    assert!(!r.succeeded());
-    let msg = r.error.unwrap();
+    let msg = engine.run(&wf).unwrap_err();
+    assert!(msg.contains("DF201"), "{msg}");
+    assert!(msg.contains("main/s"), "{msg}");
     assert!(msg.contains("tier=gpu"), "{msg}");
     assert!(msg.contains("alpha") && msg.contains("beta"), "{msg}");
+
+    // the same workflow behind a `when` guard only warns — the engine
+    // admits it, and the guarded step simply never runs its leaf
+    let guarded = Workflow::new("w2")
+        .container(ContainerTemplate::new(
+            "op2",
+            Arc::new(FnOp::new(Signature::new(), |_| Ok(()))),
+        ))
+        .steps(
+            Steps::new("main").then(
+                Step::new("s", "op2").backend_where("tier", "gpu").when(
+                    dflow::core::Expr::eq(
+                        dflow::core::Operand::Const(Value::Int(1)),
+                        dflow::core::Operand::Const(Value::Int(2)),
+                    ),
+                ),
+            ),
+        )
+        .entrypoint("main");
+    let r = engine.run(&guarded).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
 }
 
 #[test]

@@ -417,3 +417,67 @@ fn batched_appender_cuts_journal_uploads_at_least_5x_end_to_end() {
         "batched appender must cut uploads ≥5×: batched {batch_uploads} vs sync {sync_uploads}"
     );
 }
+
+/// Admission-time static verification: a workflow whose backend selector no
+/// registered backend can ever satisfy is rejected at
+/// `WorkflowService::submit` with a `DF2xx` diagnostic that names the step
+/// and the refusing selectors — the run never reaches the ready queue and
+/// leaves no registry record. Lint *warnings* do not block: the run is
+/// admitted, executes, and carries the warnings in its journal.
+#[test]
+fn unsatisfiable_selector_is_rejected_at_submit_and_never_queued() {
+    let rig = tri_backend_engine();
+    let svc =
+        WorkflowService::start(Arc::clone(&rig.engine), ServiceConfig::default()).unwrap();
+
+    let op = Arc::new(FnOp::new(Signature::new(), |_| Ok(())));
+    let doomed = Workflow::new("doomed")
+        .container(ContainerTemplate::new("op", Arc::clone(&op)).resources(Resources::cpu(500)))
+        .dag(
+            Dag::new("main")
+                .task(Step::new("ok", "op").on_backend("edge"))
+                .task(Step::new("nowhere", "op").on_backend("quantum-annealer")),
+        )
+        .entrypoint("main");
+    let err = svc.submit("alice", doomed).unwrap_err();
+    assert!(err.contains("DF2"), "must carry a placement code: {err}");
+    assert!(err.contains("main/nowhere"), "must name the step: {err}");
+    assert!(err.contains("quantum-annealer"), "must name the selector: {err}");
+    assert!(
+        err.contains("k8s") && err.contains("hpc") && err.contains("edge"),
+        "must name the refusing backends: {err}"
+    );
+    assert_eq!(svc.metrics().rejected.get("alice"), 1);
+    assert!(svc.start_order().is_empty(), "rejected run must never start");
+    assert!(
+        svc.registry().list_runs().unwrap().is_empty(),
+        "rejected run must leave no journal record"
+    );
+
+    // warnings (here DF302: a 32-retry policy with zero backoff) admit and
+    // run; the rendered warning lines are journaled and surface on both
+    // the recovered state and the registry row
+    let mut hot = dflow::core::StepPolicy::default();
+    hot.retries = 32;
+    let warned = Workflow::new("warned")
+        .container(ContainerTemplate::new("op2", op).resources(Resources::cpu(500)))
+        .steps(Steps::new("main").then(Step::new("s", "op2").policy(hot)))
+        .entrypoint("main");
+    let id = svc.submit("alice", warned).unwrap();
+    assert!(svc.wait_idle(Duration::from_secs(20)));
+    let rec = svc.registry().get_run(id).unwrap();
+    assert_eq!(rec.phase, RunPhase::Succeeded);
+    assert!(
+        rec.lint.iter().any(|w| w.contains("DF302")),
+        "journal must carry the lint warning: {:?}",
+        rec.lint
+    );
+    let row = svc
+        .registry()
+        .list_runs()
+        .unwrap()
+        .into_iter()
+        .find(|r| r.run_id == id)
+        .unwrap();
+    assert_eq!(row.lint_warnings, 1);
+}
