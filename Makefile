@@ -1,13 +1,13 @@
 # Repo CI entrypoints. `make ci` is what a gate should run.
 
-.PHONY: ci fmt-check fmt clippy build test test-placement test-storage test-journal test-service test-lint lint-examples tsan bench
+.PHONY: ci fmt-check fmt clippy build test test-placement test-storage test-journal test-service test-lint test-chaos lint-examples tsan bench bench-snapshot
 
 # `test` runs the full suite (placement + scheduler_stress + the storage
-# battery + journal recovery + the service battery + the lint battery
-# included via their Cargo.toml [[test]] entries); `test-storage`/
-# `test-journal`/`test-service`/`test-lint` re-run their batteries alone
-# as explicit gates.
-ci: fmt-check clippy test test-storage test-journal test-service test-lint lint-examples
+# battery + journal recovery + the service battery + the lint battery +
+# the chaos battery included via their Cargo.toml [[test]] entries);
+# `test-storage`/`test-journal`/`test-service`/`test-lint`/`test-chaos`
+# re-run their batteries alone as explicit gates.
+ci: fmt-check clippy test test-storage test-journal test-service test-lint test-chaos lint-examples
 
 fmt-check:
 	cargo fmt --check
@@ -61,6 +61,14 @@ test-lint: build
 	cargo test -q --test lint
 	cargo test -q --lib analysis::
 
+# chaos battery: mid-run backend failover, cordon/uncordon windows, HPC
+# capacity flaps, priority preemption, all-backends-dead named failure —
+# every case ends completion-or-named-cause with a full drain audit —
+# plus the fault-injection toolkit's unit suite in the lib
+test-chaos: build
+	cargo test -q --test chaos
+	cargo test -q --lib check::chaos::
+
 # gate: every built-in workflow must lint clean (errors AND warnings)
 # against the demo cluster — the same check `dflow lint` users run
 lint-examples: build
@@ -78,6 +86,14 @@ tsan:
 
 bench:
 	cargo bench
+
+# engine-level regression snapshot: scalability (c1), the service control
+# plane (c5) and the chaos/failover latency bench (c6, which writes its
+# rows to BENCH_chaos.json for diffing)
+bench-snapshot: build
+	cargo bench --bench c1_scalability
+	cargo bench --bench c5_service
+	cargo bench --bench c6_chaos
 
 # AOT-lower the python/compile entry points to artifacts/*.hlo.txt
 # (needed by PJRT-dependent workflows/benches; see python/compile/aot.py)

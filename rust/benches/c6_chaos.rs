@@ -1,0 +1,126 @@
+//! C6 — failover recovery latency: a backend dies under a saturated
+//! fan-out and the battery measures what fault tolerance costs — wall
+//! clock vs an undisturbed baseline, how many in-flight attempts were
+//! voided, and (from journal timestamps) how long each voided attempt
+//! took to re-place on a surviving backend.
+//!
+//! `make bench-snapshot` runs this and checks the rendered rows into
+//! `BENCH_chaos.json` for regression diffing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use dflow::bench_util::Bench;
+use dflow::check::chaos::{ChaosAction, ChaosPlan};
+use dflow::core::{
+    ContainerTemplate, FnOp, ParamType, Signature, Slices, Step, Steps, Value, Workflow,
+};
+use dflow::engine::{Backend, Engine};
+use dflow::journal::{Journal, JournalEvent};
+use dflow::storage::{MemStorage, StorageClient};
+
+fn fanout(width: i64, work: Duration) -> Workflow {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        move |ctx| {
+            std::thread::sleep(work);
+            ctx.set("y", ctx.get_int("x")? * 2);
+            Ok(())
+        },
+    ));
+    Workflow::new("c6-fanout")
+        .container(ContainerTemplate::new("op", op))
+        .steps(
+            Steps::new("main").then(
+                Step::new("fan", "op")
+                    .param("x", Value::ints(0..width))
+                    .slices(Slices::over("x").stack("y").parallelism(64)),
+            ),
+        )
+        .entrypoint("main")
+}
+
+fn tri_backend_engine(journal: Option<Arc<Journal>>) -> Engine {
+    let mut builder = Engine::builder()
+        .backend(Backend::local_slots("b0", 8))
+        .backend(Backend::local_slots("b1", 8))
+        .backend(Backend::local_slots("b2", 8))
+        .parallelism(24);
+    if let Some(j) = journal {
+        builder = builder.journal(j);
+    }
+    builder.build()
+}
+
+fn main() {
+    let mut b = Bench::new("c6: chaos — failover recovery latency");
+    let width = 600i64;
+    let work = Duration::from_millis(1);
+
+    // undisturbed baseline: same fan-out, same backends, nobody dies
+    let (r_base, t_base) = b.case(&format!("{width}-slice fan-out, no faults"), || {
+        tri_backend_engine(None).run(&fanout(width, work)).unwrap()
+    });
+    assert!(r_base.succeeded(), "{:?}", r_base.error);
+
+    // chaos run: kill b0 (8 attempts in flight) at a mid-run boundary
+    let storage: Arc<dyn StorageClient> = Arc::new(MemStorage::new());
+    let journal = Arc::new(Journal::open(storage).unwrap());
+    let engine = tri_backend_engine(Some(Arc::clone(&journal)));
+    let plan = ChaosPlan::new();
+    let b0 = Arc::clone(engine.placer().unwrap().backend("b0").unwrap());
+    let killed_at = Arc::new(AtomicU64::new(0));
+    let k2 = Arc::clone(&killed_at);
+    plan.at(
+        500,
+        ChaosAction::Call(Box::new(move || k2.store(dflow::util::epoch_ms(), Ordering::SeqCst))),
+    );
+    plan.at(500, ChaosAction::KillBackend(Arc::clone(&b0)));
+    plan.install(&engine);
+    let (r, t_chaos) = b.case(&format!("{width}-slice fan-out, 1 of 3 backends killed"), || {
+        engine.run(&fanout(width, work)).unwrap()
+    });
+    assert!(r.succeeded(), "failover must keep the run alive: {:?}", r.error);
+    assert_eq!(plan.pending(), 0, "the kill never fired");
+
+    let failovers = r.run.metrics.failovers.get();
+    assert!(failovers >= 1, "a saturated backend died; attempts must have failed over");
+    b.metric("in-flight attempts failed over", failovers as f64, "");
+    b.metric(
+        "failover wall-clock overhead",
+        (t_chaos.as_secs_f64() / t_base.as_secs_f64() - 1.0) * 100.0,
+        "% vs baseline",
+    );
+
+    // per-attempt recovery latency: journal time from each NodeFailedOver
+    // to the same path's next NodePlaced on a surviving backend
+    let (events, torn) = journal.events(r.run.id).unwrap();
+    assert!(!torn);
+    let mut recoveries = Vec::new();
+    for (i, rec) in events.iter().enumerate() {
+        if let JournalEvent::NodeFailedOver { path, .. } = &rec.event {
+            let replaced = events[i + 1..].iter().find(|later| {
+                matches!(&later.event,
+                    JournalEvent::NodePlaced { path: p, backend, .. }
+                        if p == path && backend != "b0")
+            });
+            if let Some(later) = replaced {
+                recoveries.push(later.at_ms.saturating_sub(rec.at_ms));
+            }
+        }
+    }
+    assert_eq!(recoveries.len() as u64, failovers, "every voided attempt must re-place");
+    let mean = recoveries.iter().sum::<u64>() as f64 / recoveries.len() as f64;
+    let worst = recoveries.iter().copied().max().unwrap_or(0);
+    b.metric("failover recovery latency (mean)", mean, "ms");
+    b.metric("failover recovery latency (worst)", worst as f64, "ms");
+    let end_ms = dflow::util::epoch_ms();
+    b.metric(
+        "kill -> run completion",
+        end_ms.saturating_sub(killed_at.load(Ordering::SeqCst)) as f64,
+        "ms",
+    );
+
+    Bench::write_snapshot("BENCH_chaos.json", &[&b]).unwrap();
+}

@@ -57,6 +57,41 @@ impl Bench {
     pub fn title(&self) -> &str {
         &self.title
     }
+
+    /// Recorded rows (name → rendered value), in insertion order.
+    pub fn rows(&self) -> &[(String, String)] {
+        &self.rows
+    }
+
+    /// The group as a JSON snapshot: `{"title": ..., "rows": [[name,
+    /// value], ...]}`. Rendered values keep their units, so a snapshot
+    /// diff reads like the printed table.
+    pub fn to_json(&self) -> crate::jsonx::Json {
+        use crate::jsonx::Json;
+        Json::obj(vec![
+            ("title", Json::s(self.title.clone())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|(k, v)| Json::Arr(vec![Json::s(k.clone()), Json::s(v.clone())]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write one or more groups to `path` as a pretty-printed JSON array
+    /// (`make bench-snapshot` checks these in for regression diffing).
+    pub fn write_snapshot(path: &str, groups: &[&Bench]) -> Result<(), String> {
+        use crate::jsonx::Json;
+        let doc = Json::Arr(groups.iter().map(|b| b.to_json()).collect());
+        std::fs::write(path, doc.to_string_pretty() + "\n")
+            .map_err(|e| format!("write {path}: {e}"))?;
+        println!("snapshot -> {path}");
+        Ok(())
+    }
 }
 
 /// Live/peak concurrency tracker for OP bodies (the peak-tracking pattern

@@ -1,0 +1,439 @@
+//! Deterministic fault-injection toolkit for the chaos battery.
+//!
+//! Three pieces, all seeded/deterministic so every failing schedule is
+//! replayable with the seed the check harness prints:
+//!
+//! * **Fault-injecting executors** — [`FlakyExecutor`] (seeded transient
+//!   failures), [`ProbeExecutor`] (live/peak concurrency accounting) and
+//!   [`SwitchedExecutor`] (a [`FaultSwitch`]-gated transient-fault window),
+//!   shared by unit tests, integration batteries and the fault-tolerance
+//!   benches.
+//! * **[`ChaosPlan`]** — a schedule of [`ChaosAction`]s keyed by *event
+//!   boundary index*. Every chaos-instrumented subsystem (placer waits,
+//!   cluster pod binds, scheduler job dispatch, the service maintenance
+//!   tick) fires the installed [`crate::util::ChaosHook`] at its event
+//!   boundaries; the plan counts boundaries and fires the actions
+//!   scheduled at each count. Backend kills, cordons, HPC capacity flaps
+//!   and fault windows thus land *inside* the run, at a reproducible
+//!   point, without sleeps or wall-clock coupling.
+//! * **[`assert_all_drained`]** — the shared leak audit every battery case
+//!   ends with: no leases, pods, partition jobs, blocked workers, cached
+//!   journal writers or orphaned CAS chunks survive a run, chaotic or not.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::Cluster;
+use crate::core::{ContainerTemplate, OpCtx, OpError};
+use crate::engine::{Backend, Engine};
+use crate::executor::{Executor, LocalExecutor};
+use crate::hpc::HpcScheduler;
+use crate::journal::Journal;
+use crate::storage::CasStore;
+use crate::util::{ChaosHook, Rng};
+
+/// Test/bench executor: fails transiently with probability `rate` before
+/// delegating to [`LocalExecutor`]. Counts attempts.
+pub struct FlakyExecutor {
+    rate: f64,
+    rng: Mutex<Rng>,
+    /// Total execute calls.
+    pub attempts: AtomicU64,
+    /// Calls that failed transiently.
+    pub injected: AtomicU64,
+}
+
+impl FlakyExecutor {
+    /// Fail with probability `rate` (deterministic from `seed`).
+    pub fn new(rate: f64, seed: u64) -> Self {
+        FlakyExecutor {
+            rate,
+            rng: Mutex::new(Rng::new(seed)),
+            attempts: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Executor for FlakyExecutor {
+    fn execute(&self, tpl: &ContainerTemplate, ctx: &mut OpCtx) -> Result<(), OpError> {
+        self.attempts.fetch_add(1, Ordering::Relaxed);
+        if self.rng.lock().unwrap().chance(self.rate) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return Err(OpError::Transient("injected executor failure".into()));
+        }
+        LocalExecutor.execute(tpl, ctx)
+    }
+
+    fn describe(&self) -> String {
+        format!("flaky({})", self.rate)
+    }
+}
+
+/// Test/bench executor decorator: counts live and peak concurrent
+/// `execute` calls through an inner executor via a shared
+/// [`crate::bench_util::ConcurrencyProbe`]. Wrap each backend's executor
+/// with one of these to prove per-backend in-flight executions never
+/// exceed that backend's capacity.
+pub struct ProbeExecutor {
+    inner: Arc<dyn Executor>,
+    probe: Arc<crate::bench_util::ConcurrencyProbe>,
+}
+
+impl ProbeExecutor {
+    /// Wrap `inner`, counting through `probe`.
+    pub fn new(inner: Arc<dyn Executor>, probe: Arc<crate::bench_util::ConcurrencyProbe>) -> Self {
+        ProbeExecutor { inner, probe }
+    }
+}
+
+impl Executor for ProbeExecutor {
+    fn execute(&self, tpl: &ContainerTemplate, ctx: &mut OpCtx) -> Result<(), OpError> {
+        self.probe.with(|| self.inner.execute(tpl, ctx))
+    }
+
+    fn describe(&self) -> String {
+        format!("probe({})", self.inner.describe())
+    }
+}
+
+/// Shared on/off gate for a transient-fault window (storage or executor
+/// faults that start and stop at chaos-scheduled boundaries rather than
+/// with a fixed probability).
+#[derive(Default)]
+pub struct FaultSwitch {
+    on: AtomicBool,
+    /// Faults injected while the switch was on.
+    pub injected: AtomicU64,
+}
+
+impl FaultSwitch {
+    /// Fresh switch, initially off.
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Open the fault window.
+    pub fn set_on(&self) {
+        self.on.store(true, Ordering::SeqCst);
+    }
+
+    /// Close the fault window.
+    pub fn set_off(&self) {
+        self.on.store(false, Ordering::SeqCst);
+    }
+
+    /// Is the window currently open?
+    pub fn is_on(&self) -> bool {
+        self.on.load(Ordering::SeqCst)
+    }
+
+    /// Consume one fault if the window is open: returns `Some(err)` to
+    /// inject, `None` to proceed normally.
+    pub fn trip(&self, what: &str) -> Option<OpError> {
+        if self.is_on() {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            Some(OpError::Transient(format!("injected {what} fault (window open)")))
+        } else {
+            None
+        }
+    }
+}
+
+/// Executor decorator failing transiently while its [`FaultSwitch`] is on
+/// — the window-shaped sibling of [`FlakyExecutor`]'s probability model.
+pub struct SwitchedExecutor {
+    inner: Arc<dyn Executor>,
+    switch: Arc<FaultSwitch>,
+}
+
+impl SwitchedExecutor {
+    /// Wrap `inner`, gated by `switch`.
+    pub fn new(inner: Arc<dyn Executor>, switch: Arc<FaultSwitch>) -> Self {
+        SwitchedExecutor { inner, switch }
+    }
+}
+
+impl Executor for SwitchedExecutor {
+    fn execute(&self, tpl: &ContainerTemplate, ctx: &mut OpCtx) -> Result<(), OpError> {
+        if let Some(err) = self.switch.trip("executor") {
+            return Err(err);
+        }
+        self.inner.execute(tpl, ctx)
+    }
+
+    fn describe(&self) -> String {
+        format!("switched({})", self.inner.describe())
+    }
+}
+
+/// One scheduled fault. Fired by [`ChaosPlan`] when the run reaches the
+/// boundary it is scheduled at.
+pub enum ChaosAction {
+    /// [`Backend::kill`]: in-flight attempts fail over, placements skip it.
+    KillBackend(Arc<Backend>),
+    /// [`Backend::revive`]: bring a dead/cordoned backend back.
+    ReviveBackend(Arc<Backend>),
+    /// [`Backend::cordon`]: drain — placements wait, in-flight runs finish.
+    CordonBackend(Arc<Backend>),
+    /// [`Backend::uncordon`].
+    UncordonBackend(Arc<Backend>),
+    /// [`Cluster::cordon`] one node: attempts bound to it fail over.
+    CordonNode(Arc<Cluster>, String),
+    /// [`Cluster::uncordon`] one node.
+    UncordonNode(Arc<Cluster>, String),
+    /// Flap an HPC partition's capacity
+    /// ([`HpcScheduler::set_partition_slots`], clamped to the spec).
+    SetPartitionSlots(Arc<HpcScheduler>, String, usize),
+    /// Open a [`FaultSwitch`] window.
+    FaultsOn(Arc<FaultSwitch>),
+    /// Close a [`FaultSwitch`] window.
+    FaultsOff(Arc<FaultSwitch>),
+    /// Anything else (custom probes, counters).
+    Call(Box<dyn Fn() + Send + Sync>),
+}
+
+impl ChaosAction {
+    fn fire(&self) {
+        match self {
+            ChaosAction::KillBackend(b) => b.kill(),
+            ChaosAction::ReviveBackend(b) => b.revive(),
+            ChaosAction::CordonBackend(b) => b.cordon(),
+            ChaosAction::UncordonBackend(b) => b.uncordon(),
+            ChaosAction::CordonNode(c, n) => {
+                c.cordon(n);
+            }
+            ChaosAction::UncordonNode(c, n) => {
+                c.uncordon(n);
+            }
+            ChaosAction::SetPartitionSlots(s, p, n) => {
+                let _ = s.set_partition_slots(p, *n);
+            }
+            ChaosAction::FaultsOn(s) => s.set_on(),
+            ChaosAction::FaultsOff(s) => s.set_off(),
+            ChaosAction::Call(f) => f(),
+        }
+    }
+}
+
+/// A deterministic chaos schedule: actions keyed by event-boundary index.
+///
+/// The hook returned by [`ChaosPlan::hook`] increments one global counter
+/// per boundary crossing (placement attempt, pod bind, job dispatch,
+/// maintenance tick — the site label is informational) and fires whatever
+/// actions are scheduled at that count. With a single-threaded schedule
+/// the boundary order is exactly reproducible; under concurrency the
+/// counter still gives a *valid* interleaving of the same action set,
+/// which is what the battery's invariant-style assertions need.
+#[derive(Default)]
+pub struct ChaosPlan {
+    counter: AtomicU64,
+    plan: Mutex<BTreeMap<u64, Vec<ChaosAction>>>,
+    fired: AtomicU64,
+}
+
+impl ChaosPlan {
+    /// Fresh, empty plan.
+    pub fn new() -> Arc<ChaosPlan> {
+        Arc::new(ChaosPlan::default())
+    }
+
+    /// Schedule `action` to fire when the `boundary`-th event boundary is
+    /// crossed (0-based; multiple actions per boundary fire in insertion
+    /// order).
+    pub fn at(&self, boundary: u64, action: ChaosAction) {
+        self.plan.lock().unwrap().entry(boundary).or_default().push(action);
+    }
+
+    /// The hook to install ([`Engine::set_chaos_hook`] /
+    /// [`crate::service::WorkflowService::set_chaos`] /
+    /// [`ChaosPlan::install`]). Actions run on the thread that crossed the
+    /// boundary; every action is fire-once (removed from the plan).
+    pub fn hook(self: &Arc<Self>) -> ChaosHook {
+        let plan = Arc::clone(self);
+        Arc::new(move |_site: &str| {
+            let n = plan.counter.fetch_add(1, Ordering::SeqCst);
+            let due = plan.plan.lock().unwrap().remove(&n);
+            if let Some(actions) = due {
+                for a in &actions {
+                    a.fire();
+                    plan.fired.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        })
+    }
+
+    /// Install this plan's hook on every boundary `engine` owns.
+    pub fn install(self: &Arc<Self>, engine: &Engine) {
+        engine.set_chaos_hook(self.hook());
+    }
+
+    /// Event boundaries crossed so far.
+    pub fn boundaries(&self) -> u64 {
+        self.counter.load(Ordering::SeqCst)
+    }
+
+    /// Actions fired so far.
+    pub fn fired(&self) -> u64 {
+        self.fired.load(Ordering::SeqCst)
+    }
+
+    /// Scheduled actions not yet fired (a schedule placed beyond the run's
+    /// last boundary never fires — callers asserting full delivery should
+    /// check this is zero).
+    pub fn pending(&self) -> usize {
+        self.plan.lock().unwrap().values().map(Vec::len).sum()
+    }
+}
+
+/// The battery-wide leak audit: panics (with the first offending
+/// subsystem named) unless every layer has fully drained.
+///
+/// * every placement backend passes [`Backend::audit_drained`] (no
+///   leases, bound pods or partition jobs outstanding);
+/// * the engine-level cluster, when present, holds no bound pods and has
+///   balanced bind/release counters;
+/// * the scheduler pool has no workers stuck in a capacity wait;
+/// * the journal, when given, holds no cached cross-run writers;
+/// * the CAS, when given, garbage-collects **zero** chunks — i.e. every
+///   failed/evicted/failed-over attempt's artifacts were already
+///   reclaimed through the refcount path, not left for gc.
+pub fn assert_all_drained(engine: &Engine, cas: Option<&CasStore>, journal: Option<&Journal>) {
+    if let Some(placer) = engine.placer() {
+        for b in placer.backends() {
+            if let Err(leak) = b.audit_drained() {
+                panic!("assert_all_drained: {leak}");
+            }
+        }
+    }
+    if let Some(cluster) = engine.cluster() {
+        let pods = cluster.pods_in_flight();
+        assert!(pods == 0, "assert_all_drained: engine cluster has {pods} bound pods");
+        let (bound, released, _) = cluster.stats();
+        assert!(
+            bound == released,
+            "assert_all_drained: engine cluster bound {bound} pods but released {released}"
+        );
+    }
+    let sched = engine.scheduler_stats();
+    assert!(
+        sched.blocked == 0,
+        "assert_all_drained: {} scheduler worker(s) still blocked in a capacity wait",
+        sched.blocked
+    );
+    if let Some(j) = journal {
+        let writers = j.cached_writers();
+        assert!(
+            writers.is_empty(),
+            "assert_all_drained: journal still caches writers for runs {writers:?}"
+        );
+    }
+    if let Some(c) = cas {
+        match c.gc() {
+            Ok(report) => assert!(
+                report.chunks_reclaimed == 0,
+                "assert_all_drained: cas gc reclaimed {} orphaned chunk(s)",
+                report.chunks_reclaimed
+            ),
+            Err(e) => panic!("assert_all_drained: cas not quiescent: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{FnOp, ParamType, Signature, Value};
+    use crate::storage::MemStorage;
+
+    fn doubler() -> ContainerTemplate {
+        ContainerTemplate::new(
+            "double",
+            Arc::new(FnOp::new(
+                Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+                |ctx| {
+                    let x = ctx.get_int("x")?;
+                    ctx.set("y", x * 2);
+                    Ok(())
+                },
+            )),
+        )
+    }
+
+    fn ctx_with_x(x: i64) -> OpCtx {
+        let mut c = OpCtx::bare(Arc::new(MemStorage::new()));
+        c.inputs.insert("x".into(), Value::Int(x));
+        c
+    }
+
+    #[test]
+    fn flaky_executor_injects() {
+        let ex = FlakyExecutor::new(1.0, 1);
+        let mut ctx = ctx_with_x(1);
+        let err = ex.execute(&doubler(), &mut ctx).unwrap_err();
+        assert!(err.is_transient());
+        assert_eq!(ex.injected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn flaky_executor_zero_rate_is_local() {
+        let ex = FlakyExecutor::new(0.0, 1);
+        let mut ctx = ctx_with_x(3);
+        ex.execute(&doubler(), &mut ctx).unwrap();
+        assert_eq!(ctx.outputs["y"], Value::Int(6));
+    }
+
+    #[test]
+    fn switched_executor_faults_only_inside_window() {
+        let sw = FaultSwitch::new();
+        let ex = SwitchedExecutor::new(Arc::new(LocalExecutor), sw.clone());
+        let mut ctx = ctx_with_x(2);
+        ex.execute(&doubler(), &mut ctx).unwrap();
+        sw.set_on();
+        let err = ex.execute(&doubler(), &mut ctx_with_x(2)).unwrap_err();
+        assert!(err.is_transient());
+        sw.set_off();
+        ex.execute(&doubler(), &mut ctx_with_x(2)).unwrap();
+        assert_eq!(sw.injected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn chaos_plan_fires_at_exact_boundary() {
+        let plan = ChaosPlan::new();
+        let sw = FaultSwitch::new();
+        plan.at(2, ChaosAction::FaultsOn(sw.clone()));
+        plan.at(4, ChaosAction::FaultsOff(sw.clone()));
+        let hook = plan.hook();
+        let states: Vec<bool> = (0..6)
+            .map(|_| {
+                hook("test.boundary");
+                sw.is_on()
+            })
+            .collect();
+        // boundary indices 0,1 off; 2,3 on; 4,5 off again
+        assert_eq!(states, vec![false, false, true, true, false, false]);
+        assert_eq!(plan.boundaries(), 6);
+        assert_eq!(plan.fired(), 2);
+        assert_eq!(plan.pending(), 0);
+    }
+
+    #[test]
+    fn chaos_plan_kill_action_fires_backend_watchers() {
+        let backend = Arc::new(Backend::local_slots("b", 1));
+        let plan = ChaosPlan::new();
+        plan.at(0, ChaosAction::KillBackend(backend.clone()));
+        let token = crate::core::CancelToken::new();
+        let _guard = backend.register_watch(&token);
+        assert!(!token.is_cancelled());
+        plan.hook()("test.boundary");
+        assert!(token.is_cancelled());
+        assert_eq!(backend.health(), crate::engine::BackendHealth::Dead);
+    }
+
+    #[test]
+    fn assert_all_drained_passes_on_fresh_engine() {
+        let engine = Engine::local();
+        assert_all_drained(&engine, None, None);
+    }
+}

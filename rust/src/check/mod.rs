@@ -8,6 +8,10 @@
 
 use crate::util::Rng;
 
+pub mod chaos;
+
+pub use chaos::assert_all_drained;
+
 /// Number of cases per property (override with env `CHECK_CASES`).
 pub fn default_cases() -> u64 {
     std::env::var("CHECK_CASES")

@@ -12,11 +12,11 @@
 //! partition, letting the same scheduler place jobs on HPC resources.
 
 use std::collections::BTreeMap;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::jsonx::Json;
-use crate::util::{next_id, Rng};
+use crate::util::{next_id, ChaosHook, Rng};
 
 /// Resource vector: milli-CPUs, MiB of memory, whole GPUs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -166,6 +166,10 @@ struct ClusterState {
 pub struct Cluster {
     state: Mutex<ClusterState>,
     freed: Condvar,
+    /// Chaos event-boundary hook (see [`crate::util::ChaosHook`]); fired
+    /// at bind attempts, BEFORE the state lock is taken — hook actions may
+    /// cordon/uncordon this very cluster.
+    chaos: OnceLock<ChaosHook>,
 }
 
 impl Cluster {
@@ -188,6 +192,19 @@ impl Cluster {
                 peak_running: 0,
             }),
             freed: Condvar::new(),
+            chaos: OnceLock::new(),
+        }
+    }
+
+    /// Install the chaos event-boundary hook (once; later calls are
+    /// ignored). Fired at every bind attempt, outside the state lock.
+    pub fn set_chaos(&self, hook: ChaosHook) {
+        let _ = self.chaos.set(hook);
+    }
+
+    fn chaos_tick(&self, site: &str) {
+        if let Some(h) = self.chaos.get() {
+            h(site);
         }
     }
 
@@ -247,6 +264,7 @@ impl Cluster {
 
     /// Non-blocking bind attempt.
     pub fn try_bind(&self, pod: &PodSpec) -> ScheduleResult {
+        self.chaos_tick("cluster.bind");
         let mut state = self.state.lock().unwrap();
         Self::try_bind_locked(&mut state, pod)
     }
@@ -274,8 +292,11 @@ impl Cluster {
         pod: &PodSpec,
         keep_waiting: &dyn Fn() -> bool,
     ) -> Option<PodBinding> {
-        let mut state = self.state.lock().unwrap();
         loop {
+            // chaos boundary per poll, outside the lock: a hook action may
+            // cordon/uncordon this cluster, which takes the state lock
+            self.chaos_tick("cluster.bind");
+            let mut state = self.state.lock().unwrap();
             match Self::try_bind_locked(&mut state, pod) {
                 ScheduleResult::Bound(b) => return Some(b),
                 ScheduleResult::Infeasible => return None,
@@ -287,7 +308,7 @@ impl Cluster {
                         .freed
                         .wait_timeout(state, Duration::from_millis(25))
                         .unwrap();
-                    state = st;
+                    drop(st);
                 }
             }
         }
@@ -364,6 +385,15 @@ impl Cluster {
         drop(state);
         self.freed.notify_all();
         found
+    }
+
+    /// Is `node` currently cordoned? Unknown nodes report `false`. The
+    /// engine's failover death-watch uses this: an attempt bound to a node
+    /// that gets cordoned mid-execution converts its outcome to a
+    /// transient failure so the placer re-places it elsewhere.
+    pub fn is_cordoned(&self, node: &str) -> bool {
+        let state = self.state.lock().unwrap();
+        state.nodes.iter().any(|n| n.spec.name == node && n.cordoned)
     }
 
     /// Return a pod's resources to its node.

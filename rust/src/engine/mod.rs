@@ -38,7 +38,8 @@ use crate::storage::{copy_with_retry, CasStore, MemStorage, StorageClient};
 use crate::util::Stopwatch;
 
 pub use place::{
-    Backend, BackendCapacity, BackendStats, PlaceError, PlaceRequest, PlacementLease, Placer,
+    Backend, BackendCapacity, BackendHealth, BackendStats, DeathWatch, PlaceError, PlaceRequest,
+    Placed, PlacementLease, Placer, Priority,
 };
 pub use run::{NodePhase, NodeStatus, ReusedStep, RunPhase, Semaphore, StepOutputs, WorkflowRun};
 pub use sched::SchedulerStats;
@@ -246,6 +247,10 @@ pub struct SubmitOptions {
     pub run_id: Option<u64>,
     /// Journal `RunResubmitted` instead of `RunSubmitted`.
     pub resubmission: bool,
+    /// Placement priority class for every attempt of this run. A
+    /// [`Priority::High`] run's blocked placements preempt queued
+    /// lower-priority placements contending for the same backends.
+    pub priority: Priority,
 }
 
 /// Handle to an asynchronously submitted run: watch `run` live, `wait()`
@@ -358,7 +363,7 @@ impl Engine {
         reuse: Vec<ReusedStep>,
     ) -> Result<RunResult, String> {
         let warnings = self.admit(wf)?;
-        let run = self.new_run(wf, reuse, None, false);
+        let run = self.new_run(wf, reuse, None, false, Priority::default());
         journal_lint_warnings(&run, warnings);
         self.drive(wf, run)
     }
@@ -383,7 +388,7 @@ impl Engine {
             ));
         }
         let warnings = self.admit(wf)?;
-        let run = self.new_run(wf, rec.reusable_steps(), Some(run_id), true);
+        let run = self.new_run(wf, rec.reusable_steps(), Some(run_id), true, Priority::default());
         journal_lint_warnings(&run, warnings);
         self.drive(wf, run)
     }
@@ -396,16 +401,19 @@ impl Engine {
         reuse: Vec<ReusedStep>,
         run_id: Option<u64>,
         resubmission: bool,
+        priority: Priority,
     ) -> Arc<WorkflowRun> {
         let parallelism = wf.parallelism.unwrap_or(self.config.parallelism);
-        let run = Arc::new(WorkflowRun::with_journal(
+        let mut run = WorkflowRun::with_journal(
             &wf.name,
             parallelism,
             reuse.into_iter().map(|r| (r.key, r.outputs)).collect(),
             self.config.trace_cap,
             self.sink.clone(),
             run_id,
-        ));
+        );
+        run.priority = priority;
+        let run = Arc::new(run);
         run.journal_event(|| {
             if resubmission {
                 JournalEvent::RunResubmitted { workflow: run.workflow_name.clone() }
@@ -444,7 +452,7 @@ impl Engine {
         opts: SubmitOptions,
     ) -> Result<Submitted, String> {
         let warnings = self.admit(&wf)?;
-        let run = self.new_run(&wf, opts.reuse, opts.run_id, opts.resubmission);
+        let run = self.new_run(&wf, opts.reuse, opts.run_id, opts.resubmission, opts.priority);
         journal_lint_warnings(&run, warnings);
         let engine = self.clone();
         let run2 = run.clone();
@@ -522,6 +530,12 @@ impl Engine {
         self.journal.as_ref()
     }
 
+    /// The engine-level cluster simulator (legacy single-cluster routing),
+    /// when one was attached.
+    pub fn cluster(&self) -> Option<&Arc<Cluster>> {
+        self.cluster.as_ref()
+    }
+
     /// Per-backend placement statistics (empty without a placement layer).
     pub fn backend_stats(&self) -> Vec<BackendStats> {
         self.placer.as_ref().map(|p| p.stats()).unwrap_or_default()
@@ -531,6 +545,20 @@ impl Engine {
     /// / peak workers).
     pub fn scheduler_stats(&self) -> SchedulerStats {
         self.sched.stats()
+    }
+
+    /// Install a fault-injection hook ([`crate::check::chaos`]) on every
+    /// event boundary this engine owns: placement attempts, the engine
+    /// cluster's pod binds, and scheduler job dispatch. First caller wins
+    /// per subsystem; an uninstalled hook costs one atomic load.
+    pub fn set_chaos_hook(&self, hook: crate::util::ChaosHook) {
+        if let Some(p) = &self.placer {
+            p.set_chaos(hook.clone());
+        }
+        if let Some(c) = &self.cluster {
+            c.set_chaos(hook.clone());
+        }
+        self.sched.set_chaos(hook);
     }
 }
 
@@ -1432,7 +1460,12 @@ impl<'e> Exec<'e> {
 
         let ready_at = Instant::now();
         let mut attempt = 0u32;
+        // Retry budget accounting: a backend dying under an attempt is the
+        // infrastructure's fault, not the OP's — failover retries must not
+        // consume the user's `policy.retries` budget (which defaults to 0).
+        let mut budget_used = 0u32;
         loop {
+            let mut failed_over = false;
             let err = match self.one_attempt(
                 ct,
                 &inputs,
@@ -1443,6 +1476,7 @@ impl<'e> Exec<'e> {
                 backend_sel,
                 ready_at,
                 attempt,
+                &mut failed_over,
             ) {
                 Ok(outputs) => {
                     // strict output checking (after execute)
@@ -1480,10 +1514,14 @@ impl<'e> Exec<'e> {
             };
             // a cancelled run stops retrying: the failure is already the
             // cancellation's doing (or about to be superseded by it)
-            let retryable =
-                err.is_transient() && attempt < policy.retries && !self.run.is_cancelled();
+            let retryable = err.is_transient()
+                && (budget_used < policy.retries || failed_over)
+                && !self.run.is_cancelled();
             if !retryable {
                 return Err(format!("{path}: {err}"));
+            }
+            if !failed_over {
+                budget_used += 1;
             }
             attempt += 1;
             self.run.node_retry(path);
@@ -1525,11 +1563,53 @@ impl<'e> Exec<'e> {
             resources: ct.resources,
             node_selector: ct.node_selector.clone(),
             selector: backend_sel.cloned().unwrap_or_default(),
+            priority: self.run.priority(),
+            holder: format!("run {}", self.run.id),
         };
         placer.check(&req).map_err(|e| {
             self.run.metrics.placement_rejected.inc();
             format!("{path}: {e}")
         })
+    }
+
+    /// Failover conversion (the chaos tentpole): when the infrastructure
+    /// an attempt ran on died under it — its backend was killed, or the
+    /// node its pod was bound to was cordoned — the attempt's outcome is
+    /// voided into a *transient* error, whatever it was, so the retry loop
+    /// re-places it on a surviving backend. The conversion is journaled
+    /// (`NodeFailedOver`) and flagged through `failed_over` so it does not
+    /// consume the user's retry budget. Returns `true` when a *success*
+    /// was voided (the caller must reclaim the abandoned outputs if the
+    /// shared reclaim path won't). Skipped for cancelled runs: their
+    /// failures are the cancellation's doing, not the backend's.
+    fn failover_check<T>(
+        &self,
+        r: &mut Result<T, OpError>,
+        watch: Option<&place::DeathWatch>,
+        path: &str,
+        attempt: u32,
+        failed_over: &mut bool,
+    ) -> bool {
+        let watch = match watch {
+            Some(w) => w,
+            None => return false,
+        };
+        if !watch.died() || self.run.is_cancelled() {
+            return false;
+        }
+        let was_ok = r.is_ok();
+        let msg = format!("{} while attempt {attempt} was in flight", watch.describe());
+        self.run.metrics.failovers.inc();
+        self.run.trace.push(EventKind::StepFailedOver, path, watch.describe());
+        self.run.journal_event(|| JournalEvent::NodeFailedOver {
+            path: path.to_string(),
+            backend: watch.backend_name().to_string(),
+            attempt,
+            message: msg.clone(),
+        });
+        *failed_over = true;
+        *r = Err(OpError::Transient(msg));
+        was_ok
     }
 
     /// Engine-driven cleanup on step failure (ROADMAP CAS follow-up):
@@ -1553,6 +1633,7 @@ impl<'e> Exec<'e> {
         backend_sel: Option<&BackendSelector>,
         ready_at: Instant,
         attempt: u32,
+        failed_over: &mut bool,
     ) -> Result<StepOutputs, OpError> {
         // Cancellable permit wait. Deliberately NOT a `blocked_scope`:
         // the semaphore is the run's own concurrency choice, so growing
@@ -1580,6 +1661,15 @@ impl<'e> Exec<'e> {
         // after the dispatch-latency observation so flaked attempt 0 still
         // counts as dispatched
         let mut flaked_node: Option<String> = None;
+        // the attempt's cancel token is created before capacity
+        // acquisition so a placed attempt can register it with its backend
+        // — a backend kill then cancels the in-flight OP directly
+        let attempt_cancel = crate::core::CancelToken::new();
+        // placement-time death snapshot + backend watcher registration
+        // (placed path only): consulted when the attempt finishes to turn
+        // died-under-us outcomes into transient failover
+        let mut death_watch: Option<place::DeathWatch> = None;
+        let mut _backend_watch: Option<place::BackendWatchGuard> = None;
         let executor: Arc<dyn Executor>;
         match legacy_executor {
             Some(exec) => {
@@ -1628,54 +1718,72 @@ impl<'e> Exec<'e> {
                     resources: ct.resources,
                     node_selector: ct.node_selector.clone(),
                     selector: backend_sel.cloned().unwrap_or_default(),
+                    priority: self.run.priority(),
+                    holder: format!("run {}", self.run.id),
                 };
-                let placed = {
-                    let _wait = blocked_scope();
-                    placer.place_blocking_while(&req, &|| !self.run.is_cancelled())
-                };
-                match placed {
-                    Ok(None) => {
-                        // cancelled while waiting for capacity: no lease
-                        // was ever taken, nothing to release
-                        return Err(OpError::Fatal(format!(
-                            "run cancelled: {}",
-                            self.run.cancel_reason()
-                        )));
-                    }
-                    Ok(Some(lease)) => {
-                        self.run.metrics.placements.inc();
-                        if let Some(node) = lease.pod_node() {
-                            self.run.metrics.pods_scheduled.inc();
-                            self.run.trace.push(EventKind::PodBound, path, node.to_string());
+                // Eviction loop: a preempted placement journals the
+                // eviction and re-queues — the attempt itself never ran,
+                // so nothing is lost and no retry budget is consumed.
+                let lease = loop {
+                    let placed = {
+                        let _wait = blocked_scope();
+                        placer.place_blocking_while(&req, &|| !self.run.is_cancelled())
+                    };
+                    match placed {
+                        Ok(Placed::GaveUp) => {
+                            // cancelled while waiting for capacity: no
+                            // lease was ever taken, nothing to release
+                            return Err(OpError::Fatal(format!(
+                                "run cancelled: {}",
+                                self.run.cancel_reason()
+                            )));
                         }
-                        self.run.record_placement(lease.backend_name());
-                        self.run.trace.push(
-                            EventKind::StepPlaced,
-                            path,
-                            lease.backend_name().to_string(),
-                        );
-                        self.run.journal_event(|| JournalEvent::NodePlaced {
-                            path: path.to_string(),
-                            backend: lease.backend_name().to_string(),
-                            node: lease.pod_node().map(str::to_string),
-                            attempt,
-                        });
-                        executor = lease.executor();
-                        flaked_node =
-                            lease.pod_flake().then(|| lease.pod_node().unwrap_or("?").to_string());
-                        lease_guard = Some(LeaseGuard {
-                            run: Arc::clone(self.run),
-                            lease,
-                            path: path.to_string(),
-                        });
+                        Ok(Placed::Evicted { by }) => {
+                            self.run.metrics.evictions.inc();
+                            self.run.trace.push(EventKind::StepEvicted, path, by.clone());
+                            self.run.journal_event(|| JournalEvent::NodeEvicted {
+                                path: path.to_string(),
+                                attempt,
+                                by: by.clone(),
+                            });
+                        }
+                        Ok(Placed::Lease(lease)) => break lease,
+                        Err(e) => {
+                            // raced into infeasibility after the pre-check
+                            // (e.g. every matching backend died while we
+                            // waited) — fail with the named cause
+                            self.run.metrics.placement_rejected.inc();
+                            return Err(OpError::Fatal(e.to_string()));
+                        }
                     }
-                    Err(e) => {
-                        // raced into infeasibility after the pre-check
-                        // (e.g. a node was cordoned while we waited)
-                        self.run.metrics.placement_rejected.inc();
-                        return Err(OpError::Fatal(e.to_string()));
-                    }
+                };
+                self.run.metrics.placements.inc();
+                if let Some(node) = lease.pod_node() {
+                    self.run.metrics.pods_scheduled.inc();
+                    self.run.trace.push(EventKind::PodBound, path, node.to_string());
                 }
+                self.run.record_placement(lease.backend_name());
+                self.run.trace.push(
+                    EventKind::StepPlaced,
+                    path,
+                    lease.backend_name().to_string(),
+                );
+                self.run.journal_event(|| JournalEvent::NodePlaced {
+                    path: path.to_string(),
+                    backend: lease.backend_name().to_string(),
+                    node: lease.pod_node().map(str::to_string),
+                    attempt,
+                });
+                executor = lease.executor();
+                flaked_node =
+                    lease.pod_flake().then(|| lease.pod_node().unwrap_or("?").to_string());
+                death_watch = Some(lease.death_watch());
+                _backend_watch = Some(lease.backend().register_watch(&attempt_cancel));
+                lease_guard = Some(LeaseGuard {
+                    run: Arc::clone(self.run),
+                    lease,
+                    path: path.to_string(),
+                });
             }
         }
         if attempt == 0 {
@@ -1706,7 +1814,7 @@ impl<'e> Exec<'e> {
                 path.replace('/', "."),
                 attempt
             ),
-            cancel: crate::core::CancelToken::new(),
+            cancel: attempt_cancel.clone(),
         };
 
         // a run-level cancel reaches this attempt through its token: if
@@ -1721,8 +1829,9 @@ impl<'e> Exec<'e> {
         let sw = Stopwatch::start();
         match policy.timeout {
             None => {
-                let r = executor.execute(ct, &mut ctx);
+                let mut r = executor.execute(ct, &mut ctx);
                 self.run.metrics.op_exec.observe(sw.elapsed());
+                self.failover_check(&mut r, death_watch.as_ref(), path, attempt, failed_over);
                 match r {
                     Ok(()) => Ok(StepOutputs {
                         params: ctx.outputs,
@@ -1781,8 +1890,20 @@ impl<'e> Exec<'e> {
                     })
                     .expect("spawn attempt watchdog");
                 match rx.recv_timeout(limit) {
-                    Ok(r) => {
+                    Ok(mut r) => {
                         self.run.metrics.op_exec.observe(sw.elapsed());
+                        // a voided success was not reclaimed by the
+                        // watchdog (it saw a clean finish); the received
+                        // result proves the OP stopped, so reclaim here
+                        if self.failover_check(
+                            &mut r,
+                            death_watch.as_ref(),
+                            path,
+                            attempt,
+                            failed_over,
+                        ) {
+                            self.reclaim_attempt(path, attempt);
+                        }
                         r
                     }
                     Err(mpsc::RecvTimeoutError::Disconnected) => {

@@ -64,15 +64,90 @@
 //! ```
 //! (`no_run`: doctest binaries lack the xla rpath in this build image.)
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
 use crate::cluster::{Cluster, PodBinding, PodSpec, Resources, ScheduleResult};
-use crate::core::BackendSelector;
+use crate::core::{BackendSelector, CancelToken};
 use crate::executor::{DispatcherExecutor, Executor, LocalExecutor};
 use crate::hpc::HpcScheduler;
+use crate::util::ChaosHook;
+
+/// A backend's administrative health. Separate from *capacity*: a full
+/// backend is healthy-but-busy; health models infrastructure state the
+/// operator (or a chaos plan) flips underneath running workflows.
+///
+/// State machine (placement behavior in parentheses):
+///
+/// ```text
+///   Alive (placeable) --cordon()--> Cordoned (busy: waits, never errors)
+///   Alive/Cordoned ----kill()-----> Dead     (skipped; all-dead fails fast)
+///   Cordoned --uncordon()--> Alive      Dead --revive()--> Alive
+/// ```
+///
+/// `kill()` additionally bumps the backend's death epoch and fires every
+/// registered in-flight watcher token, so attempts executing on the
+/// backend fail *transiently* and re-place elsewhere (engine failover).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendHealth {
+    /// Accepting placements (the initial state).
+    Alive,
+    /// Temporarily drained: placements treat it as busy and wait — an
+    /// operator cordon is expected to lift. In-flight attempts keep
+    /// running.
+    Cordoned,
+    /// Gone. Placements skip it; in-flight attempts on it are failed over.
+    Dead,
+}
+
+impl BackendHealth {
+    fn from_usize(v: usize) -> BackendHealth {
+        match v {
+            1 => BackendHealth::Cordoned,
+            2 => BackendHealth::Dead,
+            _ => BackendHealth::Alive,
+        }
+    }
+}
+
+/// Placement priority class. Ordered: a higher class may preempt a lower
+/// class's *queued* (never running) placements — see
+/// [`Placer::place_blocking_while`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Preemptible background work.
+    Low,
+    /// The default class.
+    #[default]
+    Normal,
+    /// May evict queued `Low`/`Normal` placements contending for the same
+    /// backends.
+    High,
+}
+
+impl Priority {
+    /// Parse the CLI/config spelling (`low` / `normal` / `high`).
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "low" => Some(Priority::Low),
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        })
+    }
+}
 
 /// How a backend bounds its concurrent leaf executions.
 pub enum BackendCapacity {
@@ -121,6 +196,21 @@ pub struct Backend {
     peak: AtomicUsize,
     /// Total leases ever granted.
     placed: AtomicU64,
+    /// [`BackendHealth`] as a usize (0 alive, 1 cordoned, 2 dead).
+    health: AtomicUsize,
+    /// Bumped on every [`Backend::kill`]. A death-watch snapshots this at
+    /// placement time, so even a kill-then-revive that completes between
+    /// two observations still reads as "this backend died under me".
+    epoch: AtomicU64,
+    /// Cancel tokens of attempts currently executing on this backend
+    /// ([`Backend::register_watch`]); `kill` fires them all.
+    watchers: Mutex<BTreeMap<u64, CancelToken>>,
+    watch_serial: AtomicU64,
+    /// Back-reference to the owning placer's wakeup hub, set by
+    /// [`Placer::new`]. Health transitions notify it so blocked
+    /// placements re-evaluate (a kill can flip them from waiting to
+    /// failing fast; a revive/uncordon restores options).
+    shared: OnceLock<Arc<PlacerShared>>,
 }
 
 impl Backend {
@@ -138,6 +228,11 @@ impl Backend {
             inflight: AtomicUsize::new(0),
             peak: AtomicUsize::new(0),
             placed: AtomicU64::new(0),
+            health: AtomicUsize::new(0),
+            epoch: AtomicU64::new(0),
+            watchers: Mutex::new(BTreeMap::new()),
+            watch_serial: AtomicU64::new(0),
+            shared: OnceLock::new(),
         }
     }
 
@@ -203,6 +298,116 @@ impl Backend {
         self.placed.load(Ordering::SeqCst)
     }
 
+    /// Current administrative health.
+    pub fn health(&self) -> BackendHealth {
+        BackendHealth::from_usize(self.health.load(Ordering::SeqCst))
+    }
+
+    /// Death-epoch counter (bumps on every [`Backend::kill`]).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Declare the backend dead: new placements skip it, and every
+    /// registered in-flight watcher token fires so attempts executing on
+    /// it fail transiently and re-place on surviving backends. Idempotent.
+    pub fn kill(&self) {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        self.health.store(BackendHealth::Dead as usize, Ordering::SeqCst);
+        for token in self.watchers.lock().unwrap().values() {
+            token.cancel();
+        }
+        self.notify_placer();
+    }
+
+    /// Bring a dead (or cordoned) backend back to `Alive`. Does not bump
+    /// the epoch — attempts that watched the death still fail over.
+    pub fn revive(&self) {
+        self.health.store(BackendHealth::Alive as usize, Ordering::SeqCst);
+        self.notify_placer();
+    }
+
+    /// Administratively drain the backend: placements treat it as busy
+    /// and wait; in-flight attempts keep running. A dead backend stays
+    /// dead (cordoning it is a no-op).
+    pub fn cordon(&self) {
+        let _ = self.health.compare_exchange(
+            BackendHealth::Alive as usize,
+            BackendHealth::Cordoned as usize,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+        self.notify_placer();
+    }
+
+    /// Lift a cordon (no-op unless currently cordoned).
+    pub fn uncordon(&self) {
+        let _ = self.health.compare_exchange(
+            BackendHealth::Cordoned as usize,
+            BackendHealth::Alive as usize,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+        self.notify_placer();
+    }
+
+    /// Register an attempt's cancel token for the duration of its
+    /// execution on this backend; [`Backend::kill`] fires every registered
+    /// token. Insert-then-check: a kill racing the registration still
+    /// cancels the attempt. The guard deregisters on drop.
+    pub fn register_watch(self: &Arc<Backend>, token: &CancelToken) -> BackendWatchGuard {
+        let id = self.watch_serial.fetch_add(1, Ordering::Relaxed);
+        self.watchers.lock().unwrap().insert(id, token.clone());
+        if self.health() == BackendHealth::Dead {
+            token.cancel();
+        }
+        BackendWatchGuard { backend: Arc::clone(self), id }
+    }
+
+    /// Leak audit: `Err` describing anything still held against this
+    /// backend — outstanding leases, bound-but-unreleased cluster pods,
+    /// running/queued partition jobs. `Ok(())` means fully drained; see
+    /// [`crate::check::assert_all_drained`].
+    pub fn audit_drained(&self) -> Result<(), String> {
+        let inflight = self.inflight();
+        if inflight != 0 {
+            return Err(format!("backend '{}' holds {inflight} unreleased leases", self.name));
+        }
+        match &self.capacity {
+            BackendCapacity::Cluster(c) => {
+                let pods = c.pods_in_flight();
+                if pods != 0 {
+                    return Err(format!("backend '{}' cluster has {pods} bound pods", self.name));
+                }
+                let (bound, released, _) = c.stats();
+                if bound != released {
+                    return Err(format!(
+                        "backend '{}' cluster bound {bound} pods but released {released}",
+                        self.name
+                    ));
+                }
+            }
+            BackendCapacity::Partition { sched, partition } => {
+                if let Some(st) = sched.partition_stats(partition) {
+                    if st.running + st.queued != 0 {
+                        return Err(format!(
+                            "backend '{}' partition '{partition}' still has {} running / {} queued jobs",
+                            self.name, st.running, st.queued
+                        ));
+                    }
+                }
+            }
+            BackendCapacity::Slots(_) | BackendCapacity::Unbounded => {}
+        }
+        Ok(())
+    }
+
+    fn notify_placer(&self) {
+        if let Some(shared) = self.shared.get() {
+            shared.freed.notify_all();
+        }
+    }
+
     /// Would this backend accept `sel`? Same predicate the placer uses;
     /// public so the static analyzer (`crate::analysis`) can reason about
     /// selector coverage without placing anything.
@@ -218,7 +423,9 @@ impl Backend {
     pub fn static_slots(&self) -> Option<usize> {
         match &self.capacity {
             BackendCapacity::Partition { sched, partition } => {
-                sched.partition_stats(partition).map(|st| st.slots)
+                // the configured maximum: a transient capacity flap must
+                // not change what the analyzer considers the cap
+                sched.partition_stats(partition).map(|st| st.max_slots)
             }
             BackendCapacity::Slots(n) => Some(*n),
             BackendCapacity::Cluster(_) | BackendCapacity::Unbounded => None,
@@ -249,8 +456,10 @@ impl Backend {
                 }
             }
             BackendCapacity::Partition { sched, partition } => {
+                // judged against max_slots: a flapped-to-zero partition is
+                // busy (capacity can come back), not infeasible
                 match sched.partition_stats(partition) {
-                    Some(st) if st.slots > 0 => Ok(()),
+                    Some(st) if st.max_slots > 0 => Ok(()),
                     Some(_) => Err(format!("partition '{partition}' has zero slots")),
                     None => Err(format!("unknown partition '{partition}'")),
                 }
@@ -272,6 +481,11 @@ pub struct PlaceRequest {
     pub node_selector: BTreeMap<String, String>,
     /// Which backends are acceptable.
     pub selector: BackendSelector,
+    /// Placement priority class (preemption; see [`Priority`]).
+    pub priority: Priority,
+    /// Who is asking (e.g. `"run 42"`) — journaled as the evictor when
+    /// this request preempts a queued lower-priority placement.
+    pub holder: String,
 }
 
 impl PlaceRequest {
@@ -294,6 +508,10 @@ pub enum PlaceError {
     NoMatch { selector: String, known: Vec<String> },
     /// Every matching backend reported the request statically infeasible.
     Infeasible { tried: Vec<(String, String)> },
+    /// Every matching backend that could have run the request is dead
+    /// (`dead`); any others refused it as infeasible (`tried`). The named
+    /// cause a failover-exhausted run fails with instead of hanging.
+    BackendsDead { dead: Vec<String>, tried: Vec<(String, String)> },
 }
 
 impl std::fmt::Display for PlaceError {
@@ -313,8 +531,53 @@ impl std::fmt::Display for PlaceError {
                     detail.join("; ")
                 )
             }
+            PlaceError::BackendsDead { dead, tried } => {
+                write!(f, "backend(s) {} are dead", dead.join(", "))?;
+                if tried.is_empty() {
+                    write!(f, " and no other backend matches the request")
+                } else {
+                    let detail: Vec<String> =
+                        tried.iter().map(|(b, why)| format!("backend '{b}': {why}")).collect();
+                    write!(f, "; every surviving match is infeasible — {}", detail.join("; "))
+                }
+            }
         }
     }
+}
+
+/// How a blocking placement resolved (see
+/// [`Placer::place_blocking_while`]).
+pub enum Placed {
+    /// Capacity acquired.
+    Lease(PlacementLease),
+    /// `keep_waiting` turned false before capacity freed (cancellation).
+    GaveUp,
+    /// A higher-priority request preempted this queued placement; `by`
+    /// names the evictor ([`PlaceRequest::holder`]). No capacity was
+    /// taken — the caller re-queues the attempt.
+    Evicted { by: String },
+}
+
+/// One registered blocked placement (an entry in the placer's wait
+/// ledger). These are the "queued placements" preemption acts on: a
+/// higher-priority request evicts lower-priority *waiters* — never a held
+/// lease, so running attempts are never preempted.
+struct Waiter {
+    priority: Priority,
+    /// Backend names this waiter's selector matches (preemption only
+    /// applies between requests contending for at least one shared
+    /// backend).
+    matching: BTreeSet<String>,
+    /// Set by a higher-priority requester; the waiter observes it on
+    /// wake, deregisters and resolves [`Placed::Evicted`].
+    evicted_by: Option<String>,
+}
+
+/// The placer's wait ledger, guarded by the placer lock.
+#[derive(Default)]
+struct WaitState {
+    next_waiter: u64,
+    waiters: BTreeMap<u64, Waiter>,
 }
 
 /// Wakeup hub shared by the placer and every outstanding lease: a lease
@@ -322,9 +585,10 @@ impl std::fmt::Display for PlaceError {
 /// here. Capacity can also free through channels the placer cannot observe
 /// (a [`Cluster`] shared with the legacy executor path, external
 /// partition users, a cordon lifted), hence blocked placements use a
-/// bounded `wait_timeout` re-poll instead of an unbounded wait.
+/// bounded `wait_timeout` re-poll instead of an unbounded wait. Backend
+/// health transitions ([`Backend::kill`] etc.) notify here too.
 struct PlacerShared {
-    lock: Mutex<()>,
+    lock: Mutex<WaitState>,
     freed: Condvar,
 }
 
@@ -336,6 +600,8 @@ pub struct Placer {
     /// successive backends, spreading load across equally-free backends
     /// instead of piling onto the first registered one.
     rr: AtomicUsize,
+    /// Chaos event-boundary hook; fired once per blocking-placement poll.
+    chaos: OnceLock<ChaosHook>,
 }
 
 enum Acquire {
@@ -372,11 +638,26 @@ impl Placer {
                 b.name
             );
         }
-        Placer {
-            backends: backends.into_iter().map(Arc::new).collect(),
-            shared: Arc::new(PlacerShared { lock: Mutex::new(()), freed: Condvar::new() }),
-            rr: AtomicUsize::new(0),
-        }
+        let shared =
+            Arc::new(PlacerShared { lock: Mutex::new(WaitState::default()), freed: Condvar::new() });
+        let backends: Vec<Arc<Backend>> = backends
+            .into_iter()
+            .map(|b| {
+                // health transitions on the backend must wake blocked
+                // placements (they go through this hub)
+                let _ = b.shared.set(Arc::clone(&shared));
+                Arc::new(b)
+            })
+            .collect();
+        Placer { backends, shared, rr: AtomicUsize::new(0), chaos: OnceLock::new() }
+    }
+
+    /// Install the chaos event-boundary hook (once; later calls ignored).
+    /// Fired once per blocking-placement poll, under the placer lock —
+    /// hook actions must not place (they kill/cordon backends, flap
+    /// partition capacity, toggle fault windows).
+    pub fn set_chaos(&self, hook: ChaosHook) {
+        let _ = self.chaos.set(hook);
     }
 
     /// Registered backends.
@@ -387,6 +668,13 @@ impl Placer {
     /// Look up a backend by name.
     pub fn backend(&self, name: &str) -> Option<&Arc<Backend>> {
         self.backends.iter().find(|b| b.name == name)
+    }
+
+    /// Blocked placements currently registered in the wait ledger (test
+    /// observability: lets a battery wait until a request is actually
+    /// queued before acting on it).
+    pub fn waiting(&self) -> usize {
+        self.shared.lock.lock().unwrap().waiters.len()
     }
 
     /// Per-backend statistics snapshot.
@@ -420,23 +708,41 @@ impl Placer {
             });
         }
         let mut tried = Vec::new();
+        let mut dead = Vec::new();
         for b in &matching {
+            // a dead backend satisfies nothing; cordoned still counts as
+            // feasible (a cordon is expected to lift)
+            if b.health() == BackendHealth::Dead {
+                dead.push(b.name.clone());
+                continue;
+            }
             match b.feasible(req) {
                 Ok(()) => return Ok(()),
                 Err(why) => tried.push((b.name.clone(), why)),
             }
         }
-        Err(PlaceError::Infeasible { tried })
+        if dead.is_empty() {
+            Err(PlaceError::Infeasible { tried })
+        } else {
+            Err(PlaceError::BackendsDead { dead, tried })
+        }
     }
 
     /// One placement attempt under the placer lock. `Ok(None)` = all
     /// matching backends are currently full (caller may block).
     pub fn try_place(&self, req: &PlaceRequest) -> Result<Option<PlacementLease>, PlaceError> {
-        let _guard = self.shared.lock.lock().unwrap();
-        self.try_place_locked(req)
+        let guard = self.shared.lock.lock().unwrap();
+        self.try_place_locked(req, &guard, None)
     }
 
-    fn try_place_locked(&self, req: &PlaceRequest) -> Result<Option<PlacementLease>, PlaceError> {
+    /// `self_id` is the caller's own wait-ledger entry (so it never yields
+    /// to itself); `None` for unregistered fast-path attempts.
+    fn try_place_locked(
+        &self,
+        req: &PlaceRequest,
+        ws: &WaitState,
+        self_id: Option<u64>,
+    ) -> Result<Option<PlacementLease>, PlaceError> {
         let matching = self.matching(&req.selector);
         if matching.is_empty() {
             return Err(PlaceError::NoMatch {
@@ -446,9 +752,37 @@ impl Placer {
         }
         let start = self.rr.fetch_add(1, Ordering::Relaxed) % matching.len();
         let mut any_busy = false;
+        let mut dead = Vec::new();
         let mut tried = Vec::new();
         for i in 0..matching.len() {
             let b = matching[(start + i) % matching.len()];
+            match b.health() {
+                // skipped; if nothing else can serve the request either,
+                // the caller gets the named BackendsDead cause
+                BackendHealth::Dead => {
+                    dead.push(b.name.clone());
+                    continue;
+                }
+                // drained, not gone: wait for the cordon to lift
+                BackendHealth::Cordoned => {
+                    any_busy = true;
+                    continue;
+                }
+                BackendHealth::Alive => {}
+            }
+            // priority yield: while a strictly-higher-priority request is
+            // queued for this backend, lower-priority requests treat it
+            // as busy — freed capacity goes to the high class first
+            let outranked = ws.waiters.iter().any(|(wid, w)| {
+                Some(*wid) != self_id
+                    && w.evicted_by.is_none()
+                    && w.priority > req.priority
+                    && w.matching.contains(&b.name)
+            });
+            if outranked {
+                any_busy = true;
+                continue;
+            }
             match self.try_acquire(b, req) {
                 Acquire::Placed(lease) => return Ok(Some(lease)),
                 Acquire::Busy => any_busy = true,
@@ -457,47 +791,115 @@ impl Placer {
         }
         if any_busy {
             Ok(None)
-        } else {
+        } else if dead.is_empty() {
             Err(PlaceError::Infeasible { tried })
+        } else {
+            Err(PlaceError::BackendsDead { dead, tried })
         }
     }
 
     /// Place, blocking while all matching backends are merely full. Fails
     /// fast (never blocks) when the request is infeasible everywhere —
     /// including when it *becomes* infeasible mid-wait (e.g. the last
-    /// fitting cluster node is cordoned).
+    /// fitting cluster node is cordoned) — and when every usable backend
+    /// is dead ([`PlaceError::BackendsDead`]). An eviction by a
+    /// higher-priority request transparently re-queues.
     pub fn place_blocking(&self, req: &PlaceRequest) -> Result<PlacementLease, PlaceError> {
-        match self.place_blocking_while(req, &|| true)? {
-            Some(lease) => Ok(lease),
-            None => unreachable!("keep_waiting is constant true"),
+        loop {
+            match self.place_blocking_while(req, &|| true)? {
+                Placed::Lease(lease) => return Ok(lease),
+                Placed::Evicted { .. } => continue,
+                Placed::GaveUp => unreachable!("keep_waiting is constant true"),
+            }
         }
     }
 
-    /// Like [`Placer::place_blocking`], but gives up (returning
-    /// `Ok(None)`, no lease taken) once `keep_waiting` turns false — the
-    /// cancellable wait run cancellation needs so a cancelled run's steps
-    /// stop queuing for capacity another run may be using.
+    /// Like [`Placer::place_blocking`], but resolves [`Placed::GaveUp`]
+    /// (no lease taken) once `keep_waiting` turns false — the cancellable
+    /// wait run cancellation needs so a cancelled run's steps stop queuing
+    /// for capacity another run may be using — and [`Placed::Evicted`]
+    /// when a higher-priority request preempts this queued placement (the
+    /// caller journals the eviction and re-queues the attempt).
+    ///
+    /// While blocked, the request is registered in the wait ledger; on
+    /// registration it marks every queued strictly-lower-priority request
+    /// contending for a shared backend as evicted.
     pub fn place_blocking_while(
         &self,
         req: &PlaceRequest,
         keep_waiting: &dyn Fn() -> bool,
-    ) -> Result<Option<PlacementLease>, PlaceError> {
-        let mut guard = self.shared.lock.lock().unwrap();
+    ) -> Result<Placed, PlaceError> {
+        let mut ws = self.shared.lock.lock().unwrap();
+        if let Some(h) = self.chaos.get() {
+            h("placer.place");
+        }
+        // fast path: no ledger entry while capacity is immediately free
+        match self.try_place_locked(req, &ws, None) {
+            Ok(Some(lease)) => return Ok(Placed::Lease(lease)),
+            Ok(None) => {}
+            Err(e) => return Err(e),
+        }
+        // going to wait: register, and preempt queued lower-priority
+        // requests contending for our backends
+        let id = ws.next_waiter;
+        ws.next_waiter += 1;
+        let matching: BTreeSet<String> =
+            self.matching(&req.selector).iter().map(|b| b.name.clone()).collect();
+        let evictor = if req.holder.is_empty() {
+            format!("a {} priority request", req.priority)
+        } else {
+            req.holder.clone()
+        };
+        let mut evicted_any = false;
+        for w in ws.waiters.values_mut() {
+            if w.priority < req.priority
+                && w.evicted_by.is_none()
+                && !w.matching.is_disjoint(&matching)
+            {
+                w.evicted_by = Some(evictor.clone());
+                evicted_any = true;
+            }
+        }
+        ws.waiters
+            .insert(id, Waiter { priority: req.priority, matching, evicted_by: None });
+        if evicted_any {
+            self.shared.freed.notify_all();
+        }
         loop {
-            match self.try_place_locked(req)? {
-                Some(lease) => return Ok(Some(lease)),
-                None => {
+            if let Some(by) = ws.waiters.get(&id).and_then(|w| w.evicted_by.clone()) {
+                ws.waiters.remove(&id);
+                return Ok(Placed::Evicted { by });
+            }
+            match self.try_place_locked(req, &ws, Some(id)) {
+                Ok(Some(lease)) => {
+                    ws.waiters.remove(&id);
+                    // our ledger exit may unblock lower-priority waiters
+                    // yielding to us
+                    self.shared.freed.notify_all();
+                    return Ok(Placed::Lease(lease));
+                }
+                Ok(None) => {
                     if !keep_waiting() {
-                        return Ok(None);
+                        ws.waiters.remove(&id);
+                        self.shared.freed.notify_all();
+                        return Ok(Placed::GaveUp);
                     }
                     // bounded wait: lease drops notify, but capacity can
                     // also free through paths that don't (see PlacerShared)
                     let (g, _) = self
                         .shared
                         .freed
-                        .wait_timeout(guard, Duration::from_millis(25))
+                        .wait_timeout(ws, Duration::from_millis(25))
                         .unwrap();
-                    guard = g;
+                    ws = g;
+                    if let Some(h) = self.chaos.get() {
+                        h("placer.place");
+                    }
+                }
+                Err(e) => {
+                    ws.waiters.remove(&id);
+                    self.shared.freed.notify_all();
+                    return Err(e);
                 }
             }
         }
@@ -522,7 +924,7 @@ impl Placer {
                         return Acquire::Infeasible(format!("unknown partition '{partition}'"))
                     }
                 };
-                if st.slots == 0 {
+                if st.max_slots == 0 {
                     return Acquire::Infeasible(format!("partition '{partition}' has zero slots"));
                 }
                 // our own lease count is the guarantee; the scheduler-side
@@ -587,6 +989,77 @@ impl PlacementLease {
     /// Node name of the cluster pod binding, when this is a cluster lease.
     pub fn pod_node(&self) -> Option<&str> {
         self.pod.as_ref().map(|p| p.node.as_str())
+    }
+
+    /// The backend this lease is against.
+    pub fn backend(&self) -> &Arc<Backend> {
+        &self.backend
+    }
+
+    /// Snapshot a [`DeathWatch`] for the attempt about to execute under
+    /// this lease. Taken at placement time so a later kill (even
+    /// kill-then-revive) or a cordon of the pod's node is detectable when
+    /// the attempt finishes.
+    pub fn death_watch(&self) -> DeathWatch {
+        let node = match (&self.backend.capacity, &self.pod) {
+            (BackendCapacity::Cluster(c), Some(binding)) => {
+                Some((Arc::clone(c), binding.node.clone()))
+            }
+            _ => None,
+        };
+        DeathWatch { backend: Arc::clone(&self.backend), epoch: self.backend.epoch(), node }
+    }
+}
+
+/// Deregisters an attempt's cancel token from its backend's watcher set on
+/// drop (see [`Backend::register_watch`]).
+pub struct BackendWatchGuard {
+    backend: Arc<Backend>,
+    id: u64,
+}
+
+impl Drop for BackendWatchGuard {
+    fn drop(&mut self) {
+        self.backend.watchers.lock().unwrap().remove(&self.id);
+    }
+}
+
+/// Placement-time snapshot answering "did the infrastructure this attempt
+/// ran on die under it?". The engine consults it when an attempt finishes
+/// (either way): a tripped watch converts the outcome into a transient
+/// failure so the retry loop re-places the attempt on a surviving backend
+/// — failover, not a user-visible error.
+pub struct DeathWatch {
+    backend: Arc<Backend>,
+    /// [`Backend::epoch`] at placement time.
+    epoch: u64,
+    /// The cluster and node the pod was bound to (cluster leases only):
+    /// a node cordon is a death for the attempts on that node.
+    node: Option<(Arc<Cluster>, String)>,
+}
+
+impl DeathWatch {
+    /// Did the backend die (or the pod's node get cordoned) since this
+    /// watch was taken?
+    pub fn died(&self) -> bool {
+        self.backend.health() == BackendHealth::Dead
+            || self.backend.epoch() != self.epoch
+            || self.node.as_ref().is_some_and(|(c, n)| c.is_cordoned(n))
+    }
+
+    /// Name of the watched backend.
+    pub fn backend_name(&self) -> &str {
+        &self.backend.name
+    }
+
+    /// What died, for the failover journal record.
+    pub fn describe(&self) -> String {
+        if let Some((c, n)) = &self.node {
+            if c.is_cordoned(n) && self.backend.health() != BackendHealth::Dead {
+                return format!("node '{n}' of backend '{}' was cordoned", self.backend.name);
+            }
+        }
+        format!("backend '{}' died", self.backend.name)
     }
 }
 
@@ -758,5 +1231,153 @@ mod tests {
         assert_eq!(stats[0].inflight, 1);
         assert_eq!(stats[0].capacity, "slots(1)");
         assert_eq!(stats[1].capacity, "unbounded");
+    }
+
+    #[test]
+    fn dead_backend_fails_fast_with_named_cause() {
+        let p = Placer::new(vec![slots("doomed", 4)]);
+        p.backend("doomed").unwrap().kill();
+        let t0 = Instant::now();
+        let e = p.place_blocking(&req_any()).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(1), "all-dead must fail fast, not hang");
+        assert!(matches!(e, PlaceError::BackendsDead { .. }), "{e}");
+        let msg = e.to_string();
+        assert!(msg.contains("doomed") && msg.contains("dead"), "{msg}");
+        // check() reports the same named cause
+        assert!(matches!(p.check(&req_any()), Err(PlaceError::BackendsDead { .. })));
+    }
+
+    #[test]
+    fn kill_routes_around_and_revive_restores() {
+        let p = Placer::new(vec![slots("a", 8), slots("b", 8)]);
+        p.backend("a").unwrap().kill();
+        let mut leases = Vec::new();
+        for _ in 0..4 {
+            leases.push(p.try_place(&req_any()).unwrap().unwrap());
+        }
+        assert!(leases.iter().all(|l| l.backend_name() == "b"), "{:?}", p.stats());
+        p.backend("a").unwrap().revive();
+        leases.clear();
+        for _ in 0..8 {
+            leases.push(p.try_place(&req_any()).unwrap().unwrap());
+        }
+        assert!(p.backend("a").unwrap().placed_total() >= 1, "revived backend got no work");
+    }
+
+    #[test]
+    fn cordoned_backend_is_busy_not_dead() {
+        let p = Placer::new(vec![slots("a", 2)]);
+        let b = p.backend("a").unwrap().clone();
+        b.cordon();
+        assert_eq!(b.health(), BackendHealth::Cordoned);
+        // busy, not an error: a cordon is expected to lift
+        assert!(p.try_place(&req_any()).unwrap().is_none());
+        assert!(p.check(&req_any()).is_ok(), "cordoned stays feasible");
+        b.uncordon();
+        assert!(p.try_place(&req_any()).unwrap().is_some());
+        // a dead backend cannot be cordoned back to life
+        b.kill();
+        b.cordon();
+        assert_eq!(b.health(), BackendHealth::Dead);
+    }
+
+    #[test]
+    fn kill_fires_registered_watchers_and_trips_death_watch() {
+        let p = Placer::new(vec![slots("a", 2)]);
+        let lease = p.try_place(&req_any()).unwrap().unwrap();
+        let watch = lease.death_watch();
+        let token = CancelToken::new();
+        let _guard = lease.backend().register_watch(&token);
+        assert!(!watch.died());
+        assert!(!token.is_cancelled());
+        p.backend("a").unwrap().kill();
+        assert!(token.is_cancelled(), "kill must cancel in-flight attempts");
+        assert!(watch.died());
+        // kill-then-revive still reads as death (epoch bump)
+        p.backend("a").unwrap().revive();
+        assert!(watch.died(), "epoch must survive revive");
+        // a watch registered after the kill fires immediately
+        p.backend("a").unwrap().kill();
+        let late = CancelToken::new();
+        let _g2 = p.backend("a").unwrap().register_watch(&late);
+        assert!(late.is_cancelled());
+    }
+
+    #[test]
+    fn high_priority_request_evicts_queued_low_priority_waiter() {
+        let p = Arc::new(Placer::new(vec![slots("a", 1)]));
+        let hold = p.try_place(&req_any()).unwrap().unwrap();
+        // a low-priority waiter queues behind the held slot
+        let p2 = Arc::clone(&p);
+        let low = std::thread::spawn(move || {
+            let mut r = req_any();
+            r.priority = Priority::Low;
+            r.holder = "run low".into();
+            p2.place_blocking_while(&r, &|| true)
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        // a high-priority waiter arrives: the queued low waiter is evicted
+        let p3 = Arc::clone(&p);
+        let high = std::thread::spawn(move || {
+            let mut r = req_any();
+            r.priority = Priority::High;
+            r.holder = "run high".into();
+            p3.place_blocking_while(&r, &|| true)
+        });
+        match low.join().unwrap().unwrap() {
+            Placed::Evicted { by } => assert_eq!(by, "run high"),
+            Placed::Lease(_) => panic!("low-priority waiter must be evicted, not placed"),
+            Placed::GaveUp => panic!("low-priority waiter gave up unexpectedly"),
+        }
+        // the high-priority waiter gets the slot once it frees
+        drop(hold);
+        match high.join().unwrap().unwrap() {
+            Placed::Lease(l) => assert_eq!(l.backend_name(), "a"),
+            _ => panic!("high-priority waiter must be placed"),
+        }
+    }
+
+    #[test]
+    fn low_priority_yields_freed_capacity_to_queued_high() {
+        // both classes queued behind a full backend: the freed slot must
+        // go to the high class even though the low request polls too
+        let p = Arc::new(Placer::new(vec![slots("a", 1)]));
+        let hold = p.try_place(&req_any()).unwrap().unwrap();
+        let p3 = Arc::clone(&p);
+        let high = std::thread::spawn(move || {
+            let mut r = req_any();
+            r.priority = Priority::High;
+            p3.place_blocking(&r)
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        drop(hold);
+        let got = high.join().unwrap().unwrap();
+        assert_eq!(got.backend_name(), "a");
+        // with the high waiter gone, a low request places normally
+        drop(got);
+        let mut r = req_any();
+        r.priority = Priority::Low;
+        assert!(p.try_place(&r).unwrap().is_some());
+    }
+
+    #[test]
+    fn audit_drained_catches_leaked_lease() {
+        let p = Placer::new(vec![slots("a", 2)]);
+        let lease = p.try_place(&req_any()).unwrap().unwrap();
+        let b = p.backend("a").unwrap().clone();
+        let err = b.audit_drained().unwrap_err();
+        assert!(err.contains("unreleased leases"), "{err}");
+        drop(lease);
+        b.audit_drained().unwrap();
+    }
+
+    #[test]
+    fn priority_parses_and_orders() {
+        assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
+        for p in [Priority::Low, Priority::Normal, Priority::High] {
+            assert_eq!(Priority::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
     }
 }

@@ -6,6 +6,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use super::place::Priority;
 use crate::core::{ArtifactRef, CancelToken, Value};
 use crate::journal::{JournalEvent, JournalSink};
 use crate::jsonx::Json;
@@ -212,6 +213,9 @@ pub struct WorkflowRun {
     /// timeouts).
     pub(crate) live_tokens: Mutex<BTreeMap<u64, CancelToken>>,
     token_serial: AtomicU64,
+    /// Placement priority class of this run's attempts (set once at
+    /// submission, before the run is shared — see `Engine::new_run`).
+    pub(crate) priority: Priority,
 }
 
 impl WorkflowRun {
@@ -289,7 +293,13 @@ impl WorkflowRun {
             cancel_reason: Mutex::new(String::new()),
             live_tokens: Mutex::new(BTreeMap::new()),
             token_serial: AtomicU64::new(0),
+            priority: Priority::default(),
         }
+    }
+
+    /// The run's placement priority class.
+    pub fn priority(&self) -> Priority {
+        self.priority
     }
 
     /// Cancel this run: pending steps stop starting, steps waiting for

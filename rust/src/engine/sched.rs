@@ -72,7 +72,9 @@ use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
+
+use crate::util::ChaosHook;
 
 #[allow(unused_imports)] // doc links
 use super::EngineConfig;
@@ -125,6 +127,9 @@ struct PoolInner {
     /// Absolute bound on live workers, blocked ones included.
     hard_cap: usize,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Fault-injection hook ([`crate::check::chaos`]): fired once per
+    /// dequeued job, before it runs — an event boundary chaos plans count.
+    chaos: OnceLock<ChaosHook>,
 }
 
 impl PoolInner {
@@ -195,6 +200,9 @@ impl PoolInner {
     /// worker survives a panicking task; the batch re-raises in `scope`.
     fn run_job(&self, job: QueuedJob) {
         let QueuedJob { run, batch } = job;
+        if let Some(h) = self.chaos.get() {
+            h("sched.job");
+        }
         if catch_unwind(AssertUnwindSafe(run)).is_err() {
             batch.panicked.store(true, Ordering::SeqCst);
         }
@@ -381,8 +389,16 @@ impl StepScheduler {
                 size,
                 hard_cap: hard_cap.max(size),
                 handles: Mutex::new(Vec::new()),
+                chaos: OnceLock::new(),
             }),
         }
+    }
+
+    /// Install the fault-injection hook (first caller wins; test-only in
+    /// spirit, but harmless in production — an uninstalled hook is one
+    /// relaxed atomic load per job).
+    pub fn set_chaos(&self, hook: ChaosHook) {
+        let _ = self.inner.chaos.set(hook);
     }
 
     /// Maximum number of worker threads this pool keeps unblocked.

@@ -8,16 +8,15 @@
 //! * [`DispatcherExecutor`] — the DPDispatcher analogue: submit the OP as a
 //!   job to a [`crate::hpc::HpcScheduler`] partition, poll until terminal,
 //!   map walltime kills to transient/fatal step failures.
-//! * [`FlakyExecutor`] — test/bench helper injecting transient failures.
+//! * [`FlakyExecutor`] — test/bench helper injecting transient failures
+//!   (defined in [`crate::check::chaos`], re-exported here).
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 
 use crate::core::{ContainerTemplate, OpCtx, OpError, Value};
 use crate::hpc::{HpcScheduler, JobState};
 use crate::jsonx::Json;
-use crate::util::Rng;
 
 /// Executes a container step's OP against some backend.
 pub trait Executor: Send + Sync {
@@ -200,70 +199,11 @@ impl Executor for DispatcherExecutor {
     }
 }
 
-/// Test/bench executor: fails transiently with probability `rate` before
-/// delegating to [`LocalExecutor`]. Counts attempts.
-pub struct FlakyExecutor {
-    rate: f64,
-    rng: Mutex<Rng>,
-    /// Total execute calls.
-    pub attempts: AtomicU64,
-    /// Calls that failed transiently.
-    pub injected: AtomicU64,
-}
-
-impl FlakyExecutor {
-    /// Fail with probability `rate` (deterministic from `seed`).
-    pub fn new(rate: f64, seed: u64) -> Self {
-        FlakyExecutor {
-            rate,
-            rng: Mutex::new(Rng::new(seed)),
-            attempts: AtomicU64::new(0),
-            injected: AtomicU64::new(0),
-        }
-    }
-}
-
-impl Executor for FlakyExecutor {
-    fn execute(&self, tpl: &ContainerTemplate, ctx: &mut OpCtx) -> Result<(), OpError> {
-        self.attempts.fetch_add(1, Ordering::Relaxed);
-        if self.rng.lock().unwrap().chance(self.rate) {
-            self.injected.fetch_add(1, Ordering::Relaxed);
-            return Err(OpError::Transient("injected executor failure".into()));
-        }
-        LocalExecutor.execute(tpl, ctx)
-    }
-
-    fn describe(&self) -> String {
-        format!("flaky({})", self.rate)
-    }
-}
-
-/// Test/bench executor decorator: counts live and peak concurrent
-/// `execute` calls through an inner executor via a shared
-/// [`crate::bench_util::ConcurrencyProbe`]. Wrap each backend's executor
-/// with one of these to prove per-backend in-flight executions never
-/// exceed that backend's capacity.
-pub struct ProbeExecutor {
-    inner: Arc<dyn Executor>,
-    probe: Arc<crate::bench_util::ConcurrencyProbe>,
-}
-
-impl ProbeExecutor {
-    /// Wrap `inner`, counting through `probe`.
-    pub fn new(inner: Arc<dyn Executor>, probe: Arc<crate::bench_util::ConcurrencyProbe>) -> Self {
-        ProbeExecutor { inner, probe }
-    }
-}
-
-impl Executor for ProbeExecutor {
-    fn execute(&self, tpl: &ContainerTemplate, ctx: &mut OpCtx) -> Result<(), OpError> {
-        self.probe.with(|| self.inner.execute(tpl, ctx))
-    }
-
-    fn describe(&self) -> String {
-        format!("probe({})", self.inner.describe())
-    }
-}
+// The fault-injecting test executors (FlakyExecutor, ProbeExecutor,
+// SwitchedExecutor) live in the shared chaos toolkit; re-exported here
+// because they are executors first and many tests/benches import them
+// from this module.
+pub use crate::check::chaos::{FlakyExecutor, ProbeExecutor, SwitchedExecutor};
 
 #[cfg(test)]
 mod tests {
@@ -347,22 +287,5 @@ mod tests {
         let ex = DispatcherExecutor::new(sched, "gone");
         let mut ctx = ctx_with_x(1);
         assert!(ex.execute(&doubler(), &mut ctx).is_err());
-    }
-
-    #[test]
-    fn flaky_executor_injects() {
-        let ex = FlakyExecutor::new(1.0, 1);
-        let mut ctx = ctx_with_x(1);
-        let err = ex.execute(&doubler(), &mut ctx).unwrap_err();
-        assert!(err.is_transient());
-        assert_eq!(ex.injected.load(Ordering::Relaxed), 1);
-    }
-
-    #[test]
-    fn flaky_executor_zero_rate_is_local() {
-        let ex = FlakyExecutor::new(0.0, 1);
-        let mut ctx = ctx_with_x(3);
-        ex.execute(&doubler(), &mut ctx).unwrap();
-        assert_eq!(ctx.outputs["y"], Value::Int(6));
     }
 }

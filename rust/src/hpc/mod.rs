@@ -51,8 +51,14 @@ impl PartitionSpec {
 #[derive(Debug, Clone)]
 pub struct PartitionStats {
     pub name: String,
-    /// Concurrent job slots (the partition's capacity).
+    /// Concurrent job slots *currently* usable — capacity flaps (an
+    /// operator shrinking the partition, a chaos plan) lower this below
+    /// [`PartitionStats::max_slots`] without killing running jobs.
     pub slots: usize,
+    /// The partition's configured (maximum) slot count. Feasibility is
+    /// judged against this: a flapped-to-zero partition is *busy*, not
+    /// infeasible — capacity can come back.
+    pub max_slots: usize,
     pub walltime: Duration,
     /// Jobs currently executing on a slot.
     pub running: usize,
@@ -81,6 +87,11 @@ struct Job {
 struct PartitionState {
     spec: PartitionSpec,
     queue: VecDeque<Job>,
+    /// Currently usable slots, `0..=spec.slots`. Worker threads exist for
+    /// every spec slot but refuse to pick up work beyond this gate, which
+    /// is how [`HpcScheduler::set_partition_slots`] shrinks a partition
+    /// without tearing threads down (and grows it back instantly).
+    cur_slots: usize,
     running: usize,
     submitted: u64,
     completed: u64,
@@ -116,6 +127,7 @@ impl HpcScheduler {
                         PartitionState {
                             spec: p.clone(),
                             queue: VecDeque::new(),
+                            cur_slots: p.slots,
                             running: 0,
                             submitted: 0,
                             completed: 0,
@@ -155,10 +167,15 @@ impl HpcScheduler {
                                         return;
                                     }
                                     let ps = s.partitions.get_mut(&part).unwrap();
-                                    if let Some(job) = ps.queue.pop_front() {
-                                        ps.running += 1;
-                                        let wt = ps.spec.walltime;
-                                        break (job, wt);
+                                    // capacity gate: only `cur_slots` of
+                                    // the spec's workers may run at once —
+                                    // a flapped-down partition queues
+                                    if ps.running < ps.cur_slots {
+                                        if let Some(job) = ps.queue.pop_front() {
+                                            ps.running += 1;
+                                            let wt = ps.spec.walltime;
+                                            break (job, wt);
+                                        }
                                     }
                                     s = wake.wait(s).unwrap();
                                 }
@@ -253,7 +270,8 @@ impl HpcScheduler {
         let s = self.state.lock().unwrap();
         s.partitions.get(partition).map(|p| PartitionStats {
             name: p.spec.name.clone(),
-            slots: p.spec.slots,
+            slots: p.cur_slots,
+            max_slots: p.spec.slots,
             walltime: p.spec.walltime,
             running: p.running,
             queued: p.queue.len(),
@@ -262,6 +280,25 @@ impl HpcScheduler {
             failed: p.failed,
             timed_out: p.timed_out,
         })
+    }
+
+    /// Shrink or restore a partition's usable slot count (capacity flap).
+    /// Clamped to `0..=spec.slots` — the worker-thread pool is sized at
+    /// construction, so a partition cannot grow past its spec. Running
+    /// jobs are never interrupted; a shrink takes effect as slots free up.
+    /// Returns the effective slot count, or `Err` for unknown partitions.
+    pub fn set_partition_slots(&self, partition: &str, slots: usize) -> Result<usize, String> {
+        let mut s = self.state.lock().unwrap();
+        let ps = s
+            .partitions
+            .get_mut(partition)
+            .ok_or_else(|| format!("unknown partition '{partition}'"))?;
+        let effective = slots.min(ps.spec.slots);
+        ps.cur_slots = effective;
+        drop(s);
+        // a grow lets parked workers pick up queued jobs immediately
+        self.wake.notify_all();
+        Ok(effective)
     }
 
     /// Names of all partitions.
@@ -397,6 +434,23 @@ mod tests {
         let id = s.submit("cpu", || Ok(vec![1])).unwrap();
         s.wait(id);
         assert_eq!(s.poll(id), JobState::Completed);
+    }
+
+    #[test]
+    fn capacity_flap_queues_then_drains() {
+        let s = HpcScheduler::new(vec![PartitionSpec::new("flap", 2, Duration::from_secs(5))]);
+        assert_eq!(s.set_partition_slots("flap", 0).unwrap(), 0);
+        let id = s.submit("flap", || Ok(vec![7])).unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        assert_eq!(s.poll(id), JobState::Queued, "zero-slot partition must queue");
+        let st = s.partition_stats("flap").unwrap();
+        assert_eq!((st.slots, st.max_slots), (0, 2));
+        // restore (over-asking clamps to the spec) and the job drains
+        assert_eq!(s.set_partition_slots("flap", 8).unwrap(), 2);
+        let (jstate, data, _) = s.wait(id);
+        assert_eq!(jstate, JobState::Completed);
+        assert_eq!(data.unwrap(), vec![7]);
+        assert!(s.set_partition_slots("nope", 1).is_err());
     }
 
     #[test]

@@ -177,6 +177,14 @@ pub enum JournalEvent {
     NodeReused { path: String, key: String, outputs: StepOutputs },
     /// An attempt was cancelled (today: wall-time timeout).
     NodeCancelled { path: String, reason: String },
+    /// A queued placement was preempted by a higher-priority request
+    /// (`by` names the evictor, e.g. `"run 42"`); the victim's attempt
+    /// re-queued — no work was lost.
+    NodeEvicted { path: String, attempt: u32, by: String },
+    /// The attempt's backend died (or its pod's node was cordoned)
+    /// mid-flight; the attempt failed transiently and re-placed onto a
+    /// surviving backend.
+    NodeFailedOver { path: String, backend: String, attempt: u32, message: String },
     /// The engine reclaimed a failed attempt's artifact namespace.
     ArtifactsReclaimed { path: String, prefix: String, objects: u64 },
     /// A `metrics::Trace` event mirrored into the journal (capacity
@@ -266,6 +274,8 @@ impl JournalEvent {
             JournalEvent::NodeSkipped { .. } => "NodeSkipped",
             JournalEvent::NodeReused { .. } => "NodeReused",
             JournalEvent::NodeCancelled { .. } => "NodeCancelled",
+            JournalEvent::NodeEvicted { .. } => "NodeEvicted",
+            JournalEvent::NodeFailedOver { .. } => "NodeFailedOver",
             JournalEvent::ArtifactsReclaimed { .. } => "ArtifactsReclaimed",
             JournalEvent::TraceMirror { .. } => "TraceMirror",
             JournalEvent::Snapshot { .. } => "Snapshot",
@@ -284,6 +294,8 @@ impl JournalEvent {
             | JournalEvent::NodeSkipped { path }
             | JournalEvent::NodeReused { path, .. }
             | JournalEvent::NodeCancelled { path, .. }
+            | JournalEvent::NodeEvicted { path, .. }
+            | JournalEvent::NodeFailedOver { path, .. }
             | JournalEvent::ArtifactsReclaimed { path, .. } => Some(path),
             JournalEvent::TraceMirror { step, .. } => Some(step),
             _ => None,
@@ -349,6 +361,17 @@ impl JournalEvent {
             JournalEvent::NodeCancelled { path, reason } => {
                 fields.push(("path", Json::s(path.clone())));
                 fields.push(("reason", Json::s(reason.clone())));
+            }
+            JournalEvent::NodeEvicted { path, attempt, by } => {
+                fields.push(("path", Json::s(path.clone())));
+                fields.push(("attempt", Json::n(*attempt as f64)));
+                fields.push(("by", Json::s(by.clone())));
+            }
+            JournalEvent::NodeFailedOver { path, backend, attempt, message } => {
+                fields.push(("path", Json::s(path.clone())));
+                fields.push(("backend", Json::s(backend.clone())));
+                fields.push(("attempt", Json::n(*attempt as f64)));
+                fields.push(("message", Json::s(message.clone())));
             }
             JournalEvent::ArtifactsReclaimed { path, prefix, objects } => {
                 fields.push(("path", Json::s(path.clone())));
@@ -423,6 +446,17 @@ impl JournalEvent {
             "NodeCancelled" => JournalEvent::NodeCancelled {
                 path: j_str(j, "path")?,
                 reason: j_str(j, "reason")?,
+            },
+            "NodeEvicted" => JournalEvent::NodeEvicted {
+                path: j_str(j, "path")?,
+                attempt: j_u64(j, "attempt")? as u32,
+                by: j_str(j, "by")?,
+            },
+            "NodeFailedOver" => JournalEvent::NodeFailedOver {
+                path: j_str(j, "path")?,
+                backend: j_str(j, "backend")?,
+                attempt: j_u64(j, "attempt")? as u32,
+                message: j_str(j, "message")?,
             },
             "ArtifactsReclaimed" => JournalEvent::ArtifactsReclaimed {
                 path: j_str(j, "path")?,
@@ -664,7 +698,12 @@ impl RecoveredRun {
             JournalEvent::NodeCancelled { path, reason } => {
                 self.node(path).message = reason.clone();
             }
-            JournalEvent::ArtifactsReclaimed { .. } | JournalEvent::TraceMirror { .. } => {}
+            // informational: evictions/failovers re-queue the attempt, so
+            // the node's phase is whatever later events say it became
+            JournalEvent::NodeEvicted { .. }
+            | JournalEvent::NodeFailedOver { .. }
+            | JournalEvent::ArtifactsReclaimed { .. }
+            | JournalEvent::TraceMirror { .. } => {}
         }
     }
 
@@ -807,6 +846,13 @@ impl Journal {
     /// The backing store.
     pub fn storage(&self) -> &Arc<dyn StorageClient> {
         &self.storage
+    }
+
+    /// Run ids with a cached segment writer. Terminal events evict their
+    /// run's writer, so after every submitted run has closed this is empty
+    /// — the leak audit (`check::chaos::assert_all_drained`) asserts that.
+    pub fn cached_writers(&self) -> Vec<u64> {
+        self.writers.lock().unwrap().keys().copied().collect()
     }
 
     fn run_prefix(&self, run_id: u64) -> String {
@@ -1671,6 +1717,13 @@ mod tests {
             JournalEvent::NodeSkipped { path: "main/c".into() },
             JournalEvent::NodeReused { path: "main/d".into(), key: "k-d".into(), outputs: outputs(9) },
             JournalEvent::NodeCancelled { path: "main/e".into(), reason: "timeout".into() },
+            JournalEvent::NodeEvicted { path: "main/a".into(), attempt: 1, by: "run 9".into() },
+            JournalEvent::NodeFailedOver {
+                path: "main/a".into(),
+                backend: "k8s".into(),
+                attempt: 1,
+                message: "backend 'k8s' died".into(),
+            },
             JournalEvent::ArtifactsReclaimed {
                 path: "main/b".into(),
                 prefix: "run1/main.b/a0/".into(),

@@ -98,6 +98,12 @@ pub struct Registry {
     /// Placement requests failed fast as infeasible (no backend could ever
     /// satisfy them).
     pub placement_rejected: Counter,
+    /// Queued placements preempted by a higher-priority request (the
+    /// victim's attempt re-queues; no work was lost).
+    pub evictions: Counter,
+    /// Attempts whose backend died (or whose node was cordoned) mid-flight
+    /// and were re-placed on a surviving backend.
+    pub failovers: Counter,
     /// Objects deleted by the engine when reclaiming a failed attempt's
     /// artifact namespace.
     pub artifacts_reclaimed: Counter,
@@ -127,6 +133,8 @@ impl Registry {
             ("pods_rejected", Json::n(self.pods_rejected.get() as f64)),
             ("placements", Json::n(self.placements.get() as f64)),
             ("placement_rejected", Json::n(self.placement_rejected.get() as f64)),
+            ("evictions", Json::n(self.evictions.get() as f64)),
+            ("failovers", Json::n(self.failovers.get() as f64)),
             ("artifacts_reclaimed", Json::n(self.artifacts_reclaimed.get() as f64)),
             ("journal_errors", Json::n(self.journal_errors.get() as f64)),
             ("dispatch_mean_us", Json::n(self.dispatch.mean().as_secs_f64() * 1e6)),
@@ -219,6 +227,12 @@ pub enum EventKind {
     /// `WorkflowRun::cancel` was called on a live run (detail = reason);
     /// the run closes as `Cancelled` once in-flight OPs stop.
     RunCancelRequested,
+    /// A queued placement was preempted by a higher-priority request
+    /// (detail = the evictor); the attempt re-queues.
+    StepEvicted,
+    /// An attempt's backend died (or its node was cordoned) mid-flight;
+    /// the attempt fails over to a surviving backend (detail = what died).
+    StepFailedOver,
 }
 
 /// One trace record. `seq` is assigned under the ring lock, so it is the

@@ -66,11 +66,13 @@
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::core::Workflow;
-use crate::engine::{Engine, ReusedStep, RunPhase, SubmitOptions, Submitted, WorkflowRun};
+use crate::engine::{
+    Engine, Priority, ReusedStep, RunPhase, SubmitOptions, Submitted, WorkflowRun,
+};
 use crate::journal::{Journal, JournalEvent, Recorded, RunRegistry};
 use crate::jsonx::Json;
 use crate::metrics::{Counter, LabelCounters};
@@ -97,6 +99,14 @@ pub struct ServiceConfig {
     /// pod releases into the journal) must drain first, or a compact
     /// could delete the segment their cached writer is re-uploading.
     pub compaction_grace: Duration,
+    /// Placement priority class for tenants without an override. Flows
+    /// into every attempt's [`crate::engine::PlaceRequest`]: a
+    /// [`Priority::High`] run's blocked placements preempt queued
+    /// lower-priority placements, and the dispatcher starts
+    /// higher-priority queue entries first.
+    pub default_priority: Priority,
+    /// Per-tenant priority overrides.
+    pub tenant_priorities: BTreeMap<String, Priority>,
 }
 
 impl Default for ServiceConfig {
@@ -109,6 +119,8 @@ impl Default for ServiceConfig {
             maintenance_interval: Duration::from_millis(500),
             auto_compact: true,
             compaction_grace: Duration::from_secs(1),
+            default_priority: Priority::default(),
+            tenant_priorities: BTreeMap::new(),
         }
     }
 }
@@ -128,6 +140,17 @@ impl ServiceConfig {
             .copied()
             .unwrap_or(self.default_tenant_quota)
             .max(1)
+    }
+
+    /// Override one tenant's priority class.
+    pub fn with_priority(mut self, tenant: &str, priority: Priority) -> ServiceConfig {
+        self.tenant_priorities.insert(tenant.to_string(), priority);
+        self
+    }
+
+    /// Effective priority class for a tenant.
+    pub fn priority_for(&self, tenant: &str) -> Priority {
+        self.tenant_priorities.get(tenant).copied().unwrap_or(self.default_priority)
     }
 }
 
@@ -176,6 +199,7 @@ struct Pending {
     wf: Workflow,
     reuse: Vec<ReusedStep>,
     resubmission: bool,
+    priority: Priority,
 }
 
 /// One executing run.
@@ -230,6 +254,11 @@ struct SvcInner {
     /// Serializes retry enqueues against an in-flight compaction of the
     /// same run (lock order: gate → state, everywhere).
     compact_gate: Mutex<()>,
+    /// Fault-injection hook ([`crate::check::chaos`]): fired once per
+    /// maintenance tick, before the tick's work — an event boundary
+    /// chaos plans count to schedule backend kills/cordons against the
+    /// control plane's own cadence.
+    chaos: OnceLock<crate::util::ChaosHook>,
 }
 
 impl SvcInner {
@@ -240,21 +269,22 @@ impl SvcInner {
         if st.live.len() >= self.config.max_live_runs {
             return None;
         }
-        // admissible = tenant below quota; among those prefer the tenant
-        // with the fewest live runs, then fewest-ever-started, then FIFO
-        let mut best: Option<(usize, u64, usize)> = None;
+        // admissible = tenant below quota; among those prefer the highest
+        // priority class, then the tenant with the fewest live runs, then
+        // fewest-ever-started, then FIFO
+        let mut best: Option<(std::cmp::Reverse<Priority>, usize, u64, usize)> = None;
         for (idx, p) in st.queue.iter().enumerate() {
             let live = st.tenant_live.get(&p.tenant).copied().unwrap_or(0);
             if live >= self.config.quota_for(&p.tenant) {
                 continue;
             }
             let started = st.tenant_started.get(&p.tenant).copied().unwrap_or(0);
-            let cand = (live, started, idx);
+            let cand = (std::cmp::Reverse(p.priority), live, started, idx);
             if best.map_or(true, |b| cand < b) {
                 best = Some(cand);
             }
         }
-        let (_, _, idx) = best?;
+        let (_, _, _, idx) = best?;
         let p = st.queue.remove(idx).expect("indexed queue entry vanished");
         let live = st.tenant_live.entry(p.tenant.clone()).or_insert(0);
         *live += 1;
@@ -288,6 +318,7 @@ impl SvcInner {
                 reuse: pending.reuse,
                 run_id: Some(run_id),
                 resubmission,
+                priority: pending.priority,
             };
             match self.engine.submit_with_options(pending.wf, opts) {
                 Ok(sub) => {
@@ -373,6 +404,9 @@ impl SvcInner {
     /// One maintenance pass: apply durable cancel markers, then compact
     /// closed runs that still carry raw segments.
     fn maintenance_tick(&self) {
+        if let Some(h) = self.chaos.get() {
+            h("service.tick");
+        }
         // Cancel markers are only CLEARED once this service applied them
         // or proved them stale (the run is closed in the journal). A
         // marker for a run that is live in a *different* process sharing
@@ -585,6 +619,7 @@ impl WorkflowService {
             compact_candidates: Mutex::new(BTreeSet::new()),
             scanned: AtomicBool::new(false),
             compact_gate: Mutex::new(()),
+            chaos: OnceLock::new(),
         });
         let d = Arc::clone(&inner);
         let dispatcher = std::thread::Builder::new()
@@ -602,6 +637,14 @@ impl WorkflowService {
             dispatcher: Mutex::new(Some(dispatcher)),
             maintenance: Mutex::new(Some(maintenance)),
         })
+    }
+
+    /// Install a fault-injection hook ([`crate::check::chaos`]) on the
+    /// service's maintenance tick AND every engine-owned event boundary
+    /// (placements, pod binds, scheduler dispatch). First caller wins.
+    pub fn set_chaos(&self, hook: crate::util::ChaosHook) {
+        let _ = self.inner.chaos.set(hook.clone());
+        self.inner.engine.set_chaos_hook(hook);
     }
 
     /// Submit a workflow on behalf of `tenant`. Returns the run id
@@ -667,6 +710,7 @@ impl WorkflowService {
             wf,
             reuse,
             resubmission,
+            priority: self.inner.config.priority_for(tenant),
         });
         st.queue_peak = st.queue_peak.max(st.queue.len());
         self.inner.metrics.submitted.inc(tenant);

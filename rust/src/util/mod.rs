@@ -66,6 +66,14 @@ impl Rng {
     }
 }
 
+/// Event-boundary callback installed by the chaos harness
+/// ([`crate::check::chaos::ChaosPlan`]). Subsystems with an installed hook
+/// call it at well-defined boundaries (a placement poll, a pod bind, a
+/// scheduler job start, a maintenance tick) with a short site label; the
+/// plan counts boundaries and fires its scheduled faults at exact counts,
+/// which is what makes a chaos schedule deterministic under a seed.
+pub type ChaosHook = std::sync::Arc<dyn Fn(&str) + Send + Sync>;
+
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
 /// Process-unique monotonically increasing id (node ids, run ids).

@@ -1,0 +1,424 @@
+//! Chaos battery (ISSUE 7): deterministic fault injection across the
+//! placement / engine / service stack.
+//!
+//! Every case drives a real workflow while a seeded [`ChaosPlan`] fires
+//! faults at exact event boundaries — backend kills mid-fan-out, full
+//! cordon windows, HPC partition capacity flaps, priority preemption —
+//! and every case ends the same way: the run reaches a terminal state
+//! with a *named* cause (never a hang), and `check::assert_all_drained`
+//! proves nothing leaked: no leases, pods, partition jobs, blocked
+//! workers or cached journal writers survive.
+//!
+//! Run via `make test-chaos` (part of `make ci`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use dflow::check;
+use dflow::check::chaos::{ChaosAction, ChaosPlan};
+use dflow::core::{
+    ContainerTemplate, Dag, FnOp, ParamType, Signature, Slices, Step, Steps, Value, Workflow,
+};
+use dflow::engine::{Backend, BackendHealth, Engine, NodePhase, Priority, SubmitOptions};
+use dflow::hpc::{HpcScheduler, PartitionSpec};
+use dflow::journal::{Journal, JournalEvent};
+use dflow::metrics::EventKind;
+use dflow::service::{ServiceConfig, WorkflowService};
+use dflow::storage::{MemStorage, StorageClient};
+
+/// Poll `cond` up to 5 s; panic with `what` if it never turns true.
+fn wait_until(what: &str, cond: impl Fn() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < Duration::from_secs(5), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// A `width`-slice fan-out of briefly-sleeping square ops.
+fn fanout_workflow(n: i64, parallelism: usize) -> Workflow {
+    let sq = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        |ctx| {
+            let x = ctx.get_int("x")?;
+            std::thread::sleep(Duration::from_micros(300));
+            ctx.set("y", x * x);
+            Ok(())
+        },
+    ));
+    Workflow::new("chaos-fanout")
+        .container(ContainerTemplate::new("sq", sq))
+        .steps(
+            Steps::new("main")
+                .then(
+                    Step::new("fan", "sq")
+                        .param("x", Value::ints(0..n))
+                        .slices(Slices::over("x").stack("y").parallelism(parallelism)),
+                )
+                .out_param_from("ys", "fan", "y"),
+        )
+        .entrypoint("main")
+}
+
+/// Acceptance: 3 backends, a 2000-slice fan-out, one backend killed at a
+/// fixed mid-run event boundary. Its in-flight attempts fail over
+/// (journaled, budget-free), the survivors absorb the rest, the run
+/// succeeds with every output intact, and nothing leaks.
+#[test]
+fn kill_one_of_three_backends_mid_fanout_fails_over_and_completes() {
+    let storage: Arc<dyn StorageClient> = Arc::new(MemStorage::new());
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap().segment_max_bytes(8192));
+    let engine = Engine::builder()
+        .storage(storage)
+        .journal(journal.clone())
+        .backend(Backend::local_slots("b0", 16))
+        .backend(Backend::local_slots("b1", 16))
+        .backend(Backend::local_slots("b2", 16))
+        .parallelism(32)
+        .adaptive_cap(128)
+        .build();
+    let plan = ChaosPlan::new();
+    let b0 = Arc::clone(engine.placer().unwrap().backend("b0").unwrap());
+    // ~2 boundaries per slice (placement + job dispatch): boundary 800 is
+    // deep inside the fan-out, with b0 saturated at 16 in-flight attempts
+    plan.at(800, ChaosAction::KillBackend(Arc::clone(&b0)));
+    plan.install(&engine);
+
+    let r = engine.run(&fanout_workflow(2000, 64)).unwrap();
+    assert!(r.succeeded(), "failover must keep the run alive: {:?}", r.error);
+    let ys = r.outputs.params["ys"].as_list().unwrap();
+    assert_eq!(ys.len(), 2000);
+    assert_eq!(ys[1999], Value::Int(1999 * 1999));
+
+    assert_eq!(plan.pending(), 0, "the kill never fired");
+    assert_eq!(b0.health(), BackendHealth::Dead);
+    let failovers = r.run.metrics.failovers.get();
+    assert!(
+        failovers >= 1,
+        "a saturated backend died mid-run; its in-flight attempts must fail over"
+    );
+    assert!(
+        r.run
+            .trace
+            .snapshot()
+            .iter()
+            .any(|e| e.kind == EventKind::StepFailedOver),
+        "failover must be traced"
+    );
+    // every slice placed at least once; voided attempts re-placed on the
+    // two survivors
+    let split = r.run.placements();
+    assert!(split.values().sum::<u64>() >= 2000 + failovers);
+    assert!(split.get("b1").copied().unwrap_or(0) > 0);
+    assert!(split.get("b2").copied().unwrap_or(0) > 0);
+    // the failovers are journaled with the dead backend named
+    let (events, torn) = journal.events(r.run.id).unwrap();
+    assert!(!torn);
+    let journaled = events
+        .iter()
+        .filter(|rec| {
+            matches!(&rec.event, JournalEvent::NodeFailedOver { backend, .. } if backend == "b0")
+        })
+        .count() as u64;
+    assert_eq!(journaled, failovers, "every failover must be journaled");
+    check::assert_all_drained(&engine, None, Some(&journal));
+}
+
+/// Cordoning every backend is a drain, not a death: placements wait out
+/// the window (no failovers, no failures) and the fan-out completes once
+/// the cordon lifts at a later chaos boundary.
+#[test]
+fn cordon_all_backends_then_uncordon_waits_without_failing() {
+    let engine = Engine::builder()
+        .backend(Backend::local_slots("b0", 2))
+        .backend(Backend::local_slots("b1", 2))
+        .parallelism(8)
+        .build();
+    let plan = ChaosPlan::new();
+    let b0 = Arc::clone(engine.placer().unwrap().backend("b0").unwrap());
+    let b1 = Arc::clone(engine.placer().unwrap().backend("b1").unwrap());
+    plan.at(10, ChaosAction::CordonBackend(Arc::clone(&b0)));
+    plan.at(11, ChaosAction::CordonBackend(Arc::clone(&b1)));
+    // blocked placements keep polling (one boundary per 25 ms re-poll), so
+    // the uncordon boundary is reached even with everything drained
+    plan.at(40, ChaosAction::UncordonBackend(Arc::clone(&b0)));
+    plan.at(41, ChaosAction::UncordonBackend(Arc::clone(&b1)));
+    plan.install(&engine);
+
+    let r = engine.run(&fanout_workflow(40, 8)).unwrap();
+    assert!(r.succeeded(), "a cordon window must delay, not fail: {:?}", r.error);
+    assert_eq!(plan.pending(), 0, "cordon/uncordon actions never fired");
+    assert_eq!(r.run.metrics.failovers.get(), 0, "cordon is a drain, not a death");
+    assert_eq!(r.run.metrics.evictions.get(), 0);
+    assert_eq!(b0.health(), BackendHealth::Alive);
+    assert_eq!(b1.health(), BackendHealth::Alive);
+    assert_eq!(r.run.placements().values().sum::<u64>(), 40);
+    check::assert_all_drained(&engine, None, None);
+}
+
+/// An HPC partition's capacity flaps to zero while placements wait on it.
+/// Zero *current* slots reads as busy (the spec'd maximum is what decides
+/// infeasibility), so waiters hold on and complete when capacity returns.
+#[test]
+fn partition_capacity_flap_during_placement_wait_recovers() {
+    let hpc = HpcScheduler::new(vec![PartitionSpec::new("batch", 3, Duration::from_secs(30))]);
+    let engine = Engine::builder()
+        .backend(Backend::partition("hpc", Arc::clone(&hpc), "batch"))
+        .parallelism(6)
+        .build();
+    let plan = ChaosPlan::new();
+    plan.at(6, ChaosAction::SetPartitionSlots(Arc::clone(&hpc), "batch".into(), 0));
+    plan.at(30, ChaosAction::SetPartitionSlots(Arc::clone(&hpc), "batch".into(), 3));
+    plan.install(&engine);
+
+    let r = engine.run(&fanout_workflow(12, 6)).unwrap();
+    assert!(r.succeeded(), "a capacity flap must delay, not fail: {:?}", r.error);
+    assert_eq!(plan.pending(), 0, "flap actions never fired");
+    assert_eq!(r.run.metrics.failovers.get(), 0);
+    let st = hpc.partition_stats("batch").unwrap();
+    assert_eq!(st.slots, 3, "capacity restored");
+    assert_eq!(st.submitted, st.completed, "every HPC job must complete");
+    check::assert_all_drained(&engine, None, None);
+}
+
+/// Acceptance: priority preemption. A normal-priority run holds the only
+/// slot; a low-priority run queues behind it; a high-priority run then
+/// evicts the queued low-priority placement (journaled, with the evictor
+/// named) and takes the freed slot first. The evicted run is only
+/// re-queued — it still completes. The *running* lease is never revoked.
+#[test]
+fn high_priority_evicts_only_queued_low_priority_and_everyone_completes() {
+    let storage: Arc<dyn StorageClient> = Arc::new(MemStorage::new());
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let engine = Arc::new(
+        Engine::builder()
+            .storage(storage)
+            .journal(journal.clone())
+            .backend(Backend::local_slots("box", 1))
+            .parallelism(8)
+            .build(),
+    );
+    let order: Arc<Mutex<Vec<&'static str>>> = Arc::new(Mutex::new(Vec::new()));
+    let gate = Arc::new(AtomicBool::new(false));
+
+    let wf = |name: &'static str, hold: Option<Arc<AtomicBool>>| {
+        let order = Arc::clone(&order);
+        let op = Arc::new(FnOp::new(Signature::new(), move |_| {
+            order.lock().unwrap().push(name);
+            if let Some(g) = &hold {
+                while !g.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+            Ok(())
+        }));
+        Workflow::new(name)
+            .container(ContainerTemplate::new("op", op))
+            .steps(Steps::new("main").then(Step::new("s", "op")))
+            .entrypoint("main")
+    };
+
+    // the holder occupies the slot until the gate opens
+    let holder = engine
+        .submit_with_options(wf("holder", Some(Arc::clone(&gate))), SubmitOptions::default())
+        .unwrap();
+    let placer = engine.placer().unwrap();
+    let slot = placer.backend("box").unwrap();
+    wait_until("the holder to occupy the slot", || slot.inflight() == 1);
+
+    // a low-priority run queues behind the held slot
+    let low = engine
+        .submit_with_options(
+            wf("low", None),
+            SubmitOptions { priority: Priority::Low, ..SubmitOptions::default() },
+        )
+        .unwrap();
+    wait_until("the low-priority placement to queue", || placer.waiting() >= 1);
+
+    // the high-priority run preempts the queued (never the running) one
+    let high = engine
+        .submit_with_options(
+            wf("high", None),
+            SubmitOptions { priority: Priority::High, ..SubmitOptions::default() },
+        )
+        .unwrap();
+    wait_until("the eviction to land", || low.run.metrics.evictions.get() >= 1);
+
+    gate.store(true, Ordering::SeqCst);
+    let (high_id, low_id) = (high.run.id, low.run.id);
+    let rh = holder.wait();
+    let rhigh = high.wait();
+    let rlow = low.wait();
+    assert!(rh.succeeded() && rhigh.succeeded() && rlow.succeeded());
+    assert_eq!(
+        *order.lock().unwrap(),
+        vec!["holder", "high", "low"],
+        "freed capacity must go to the high class first"
+    );
+
+    // the eviction names its evictor, in the trace and in the journal
+    assert_eq!(rlow.run.metrics.evictions.get(), 1);
+    let evictor = format!("run {high_id}");
+    assert!(
+        rlow.run
+            .trace
+            .snapshot()
+            .iter()
+            .any(|e| e.kind == EventKind::StepEvicted && e.detail == evictor),
+        "eviction must be traced with the evictor named"
+    );
+    let (events, _) = journal.events(low_id).unwrap();
+    assert!(
+        events.iter().any(|rec| matches!(
+            &rec.event,
+            JournalEvent::NodeEvicted { path, by, .. } if path == "main/s" && *by == evictor
+        )),
+        "eviction must be journaled with the evictor named"
+    );
+    // the running holder was never preempted, nobody failed over
+    assert_eq!(rh.run.metrics.evictions.get(), 0);
+    assert_eq!(rhigh.run.metrics.evictions.get(), 0);
+    for r in [&rh, &rhigh, &rlow] {
+        assert_eq!(r.run.metrics.failovers.get(), 0);
+    }
+    check::assert_all_drained(&engine, None, Some(&journal));
+}
+
+/// When every matching backend is dead, a failover-exhausted run fails
+/// with the named `BackendsDead` cause — it never hangs — and after the
+/// backends revive, resubmitting the same run id re-runs exactly the
+/// non-succeeded suffix.
+#[test]
+fn all_backends_dead_fails_with_named_cause_and_recovers_on_revival() {
+    let storage: Arc<dyn StorageClient> = Arc::new(MemStorage::new());
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let engine = Engine::builder()
+        .storage(storage)
+        .journal(journal.clone())
+        .backend(Backend::local_slots("b0", 2))
+        .backend(Backend::local_slots("b1", 2))
+        .build();
+    // the op for i == 3 kills *every* backend while it is itself in
+    // flight: its voided attempt fails over into a placement that finds
+    // only dead backends
+    let backends: Arc<OnceLock<Vec<Arc<Backend>>>> = Arc::new(OnceLock::new());
+    let b2 = Arc::clone(&backends);
+    let executions: Arc<Mutex<Vec<i64>>> = Arc::new(Mutex::new(Vec::new()));
+    let e2 = Arc::clone(&executions);
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int).out_param("o", ParamType::Int),
+        move |ctx| {
+            let i = ctx.get_int("i")?;
+            e2.lock().unwrap().push(i);
+            if i == 3 {
+                if let Some(all) = b2.get() {
+                    for b in all {
+                        b.kill();
+                    }
+                }
+            }
+            ctx.set("o", i + 1);
+            Ok(())
+        },
+    ));
+    let mut dag = Dag::new("main");
+    for i in 0..6 {
+        let mut s = Step::new(&format!("t{i}"), "op").key(&format!("t{i}"));
+        if i == 0 {
+            s = s.param("i", 0i64);
+        } else {
+            s = s.param_from_step("i", &format!("t{}", i - 1), "o");
+        }
+        dag = dag.task(s);
+    }
+    let wf = Workflow::new("chain")
+        .container(ContainerTemplate::new("op", op))
+        .dag(dag)
+        .entrypoint("main");
+    backends
+        .set(engine.placer().unwrap().backends().to_vec())
+        .ok()
+        .expect("backends set once");
+
+    let t0 = Instant::now();
+    let r = engine.run(&wf).unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "an all-dead placement must fail fast, not hang"
+    );
+    assert!(!r.succeeded(), "no backend survived; the run cannot succeed");
+    assert_eq!(r.run.count_phase(NodePhase::Succeeded), 3, "t0..t2 finished pre-kill");
+    let t3 = r.run.nodes().into_iter().find(|n| n.path == "main/t3").unwrap();
+    assert!(
+        t3.message.contains("dead") && t3.message.contains("b0") && t3.message.contains("b1"),
+        "the failure must name the dead backends: {}",
+        t3.message
+    );
+    check::assert_all_drained(&engine, None, Some(&journal));
+
+    // revive and resubmit under the same run id: only t3..t5 re-run
+    for b in engine.placer().unwrap().backends() {
+        b.revive();
+    }
+    let before = executions.lock().unwrap().len();
+    let r2 = engine.resubmit(&wf, r.run.id).unwrap();
+    assert!(r2.succeeded(), "{:?}", r2.error);
+    assert_eq!(r2.run.metrics.steps_reused.get(), 3, "t0..t2 reuse their journaled outputs");
+    let ran: Vec<i64> = executions.lock().unwrap()[before..].to_vec();
+    assert_eq!(ran, vec![3, 4, 5], "exactly the non-succeeded suffix re-runs");
+    check::assert_all_drained(&engine, None, Some(&journal));
+}
+
+/// Service-level priority: a tenant configured `Priority::High` jumps the
+/// ready queue ahead of a flooding normal-priority tenant's backlog, and
+/// the service's maintenance tick is a chaos boundary like any other.
+#[test]
+fn service_dispatches_high_priority_tenant_ahead_of_backlog() {
+    let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+    let engine = Arc::new(
+        Engine::builder().backend(Backend::local_slots("box", 1)).journal(journal).build(),
+    );
+    let config = ServiceConfig {
+        max_live_runs: 1,
+        default_tenant_quota: 1,
+        ..ServiceConfig::default()
+    }
+    .with_priority("vip", Priority::High);
+    let svc = WorkflowService::start(Arc::clone(&engine), config).unwrap();
+    let ticked = Arc::new(AtomicBool::new(false));
+    let t2 = Arc::clone(&ticked);
+    let plan = ChaosPlan::new();
+    plan.at(0, ChaosAction::Call(Box::new(move || t2.store(true, Ordering::SeqCst))));
+    svc.set_chaos(plan.hook());
+
+    let slow_wf = |name: &str| {
+        let op = Arc::new(FnOp::new(Signature::new(), |_| {
+            std::thread::sleep(Duration::from_millis(60));
+            Ok(())
+        }));
+        Workflow::new(name)
+            .container(ContainerTemplate::new("op", op))
+            .steps(Steps::new("main").then(Step::new("s", "op")))
+            .entrypoint("main")
+    };
+    for i in 0..4 {
+        svc.submit("batch", slow_wf(&format!("batch-{i}"))).unwrap();
+    }
+    // let the first batch run start, then the vip arrives
+    std::thread::sleep(Duration::from_millis(20));
+    let vip_id = svc.submit("vip", slow_wf("vip-0")).unwrap();
+    assert!(svc.wait_idle(Duration::from_secs(60)), "service never drained");
+
+    let order = svc.start_order();
+    assert_eq!(order.len(), 5);
+    let vip_pos = order.iter().position(|(_, id)| *id == vip_id).unwrap();
+    assert!(
+        vip_pos <= 1,
+        "the high-priority tenant started at position {vip_pos}, behind the backlog: {order:?}"
+    );
+    assert_eq!(svc.metrics().succeeded.get("batch"), 4);
+    assert_eq!(svc.metrics().succeeded.get("vip"), 1);
+    assert!(ticked.load(Ordering::SeqCst), "chaos boundaries must fire under the service");
+    check::assert_all_drained(&engine, None, None);
+}

@@ -12,10 +12,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use dflow::check;
+use dflow::check::chaos::{ChaosAction, ChaosPlan};
 use dflow::core::{
     ContainerTemplate, Dag, FnOp, OpError, ParamType, Signature, Step, Steps, Workflow,
 };
-use dflow::engine::{Engine, NodePhase, RunPhase};
+use dflow::engine::{Backend, Engine, NodePhase, RunPhase};
 use dflow::journal::{
     decode_segment, frame_record, segment_header, Journal, JournalEvent, Recorded, RunRegistry,
 };
@@ -242,6 +243,146 @@ fn crash_at_random_event_boundary_recovers_exactly_the_suffix() {
         assert_eq!(a, b);
         assert_eq!(a.phase, RunPhase::Succeeded);
         assert_eq!(a.keyed.len(), n, "every node is reusable after recovery");
+    });
+}
+
+/// Chaos extension of the crash-boundary suite (ISSUE 7 satellite): the
+/// first "process" runs under a seeded [`ChaosPlan`] that kills one of
+/// its two backends at a random event boundary (an in-flight attempt
+/// fails over, journaling `NodeFailedOver`); the crash then keeps a
+/// random event prefix with synthetic eviction/failover records spliced
+/// in at random positions. The recovery contract must be unchanged:
+/// replay recovers exactly the journaled successes, resubmit re-runs
+/// exactly the non-succeeded suffix, and the informational chaos events
+/// never alter a recovered node phase.
+#[test]
+fn chaotic_crash_boundary_still_recovers_exactly_the_suffix() {
+    check::forall_cases("journal chaos crash recovery", 16, |rng| {
+        let n = 4 + rng.below(5) as usize;
+        let mem = Arc::new(MemStorage::new());
+        let storage: Arc<dyn StorageClient> = mem.clone();
+        let counts: Counts = Arc::new(Mutex::new(BTreeMap::new()));
+        let gate = Arc::new(AtomicBool::new(false)); // chaos, not the gate, is the hazard
+        let wf = chain_workflow(n, counts.clone(), gate, n + 1);
+
+        // "process" 1: two slot backends; b0 is killed at a random event
+        // boundary — whatever is in flight there fails over to b1 and the
+        // run still succeeds (failover retries are budget-free)
+        let run_id = {
+            let journal =
+                Arc::new(Journal::open(storage.clone()).unwrap().segment_max_bytes(512));
+            let engine = Engine::builder()
+                .storage(storage.clone())
+                .journal(journal)
+                .backend(Backend::local_slots("b0", 2))
+                .backend(Backend::local_slots("b1", 2))
+                .build();
+            let plan = ChaosPlan::new();
+            let b0 = Arc::clone(engine.placer().unwrap().backend("b0").unwrap());
+            plan.at(rng.below((3 * n) as u64), ChaosAction::KillBackend(b0));
+            plan.install(&engine);
+            let r = engine.run(&wf).unwrap();
+            assert!(r.succeeded(), "chaotic run must fail over, not fail: {:?}", r.error);
+            check::assert_all_drained(&engine, None, None);
+            r.run.id
+        };
+
+        // flatten the journal, then splice synthetic informational chaos
+        // records at random positions (never before the submission record)
+        let prefix = format!("journal/run{run_id}/");
+        let seg_keys = mem.list(&prefix).unwrap();
+        let mut per_seg: Vec<(String, Vec<Vec<u8>>)> = Vec::new();
+        let mut total = 0usize;
+        for key in &seg_keys {
+            let (payloads, torn) = decode_segment(&mem.download(key).unwrap()).unwrap();
+            assert!(torn.is_none(), "a completed run must have no torn tail");
+            total += payloads.len();
+            per_seg.push((key.clone(), payloads));
+        }
+        let synthetic = [
+            JournalEvent::NodeEvicted {
+                path: "main/t0".into(),
+                attempt: 0,
+                by: "run 999".into(),
+            },
+            JournalEvent::NodeFailedOver {
+                path: "main/t1".into(),
+                backend: "b0".into(),
+                attempt: 0,
+                message: "backend 'b0' died while attempt 0 was in flight".into(),
+            },
+        ];
+        for event in synthetic {
+            let seg = rng.below(per_seg.len() as u64) as usize;
+            let payloads = &mut per_seg[seg].1;
+            let pos = 1 + rng.below(payloads.len() as u64) as usize;
+            payloads.insert(pos, Recorded { at_ms: 0, event }.encode());
+            total += 1;
+        }
+
+        // crash: keep a random prefix of events, tear the cut segment at a
+        // random byte of the next record (same tear as the base suite)
+        let cut = 1 + rng.below(total as u64) as usize;
+        let mut kept = 0usize;
+        let mut expect_succeeded: BTreeSet<String> = BTreeSet::new();
+        for (key, payloads) in &per_seg {
+            if kept >= cut {
+                mem.delete(key).unwrap();
+                continue;
+            }
+            let take = payloads.len().min(cut - kept);
+            for p in &payloads[..take] {
+                if let JournalEvent::NodeSucceeded { key: Some(k), .. } =
+                    Recorded::parse(p).unwrap().event
+                {
+                    expect_succeeded.insert(k);
+                }
+            }
+            let mut rebuilt = segment_header();
+            for p in &payloads[..take] {
+                rebuilt.extend_from_slice(&frame_record(p));
+            }
+            if take < payloads.len() {
+                let frame = frame_record(&payloads[take]);
+                let torn_len = rng.below(frame.len() as u64) as usize;
+                rebuilt.extend_from_slice(&frame[..torn_len]);
+            }
+            mem.upload(key, &rebuilt).unwrap();
+            kept += take;
+        }
+
+        // a fresh chaos-free "process" recovers and resubmits
+        let journal = Arc::new(Journal::open(storage.clone()).unwrap().segment_max_bytes(512));
+        let rec = journal.replay(run_id).unwrap();
+        assert_eq!(
+            rec.keyed.keys().cloned().collect::<BTreeSet<_>>(),
+            expect_succeeded,
+            "replay must recover exactly the journaled successes"
+        );
+        let before = counts_of(&counts);
+        let engine =
+            Engine::builder().storage(storage.clone()).journal(journal.clone()).build();
+        let r2 = engine.resubmit(&wf, run_id).unwrap();
+        assert!(r2.succeeded(), "{:?}", r2.error);
+        let after = counts_of(&counts);
+        for i in 0..n {
+            let key = format!("t{i}");
+            let delta =
+                after.get(&key).copied().unwrap_or(0) - before.get(&key).copied().unwrap_or(0);
+            if expect_succeeded.contains(&key) {
+                assert_eq!(delta, 0, "journaled success {key} re-executed");
+            } else {
+                assert_eq!(delta, 1, "{key} must run exactly once on resubmit");
+            }
+        }
+        assert_eq!(r2.run.metrics.steps_reused.get() as usize, expect_succeeded.len());
+
+        // idempotent re-replay over the merged journal, chaos records and all
+        let a = journal.replay(run_id).unwrap();
+        let b = journal.replay(run_id).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.phase, RunPhase::Succeeded);
+        check::assert_all_drained(&engine, None, Some(&journal));
     });
 }
 
