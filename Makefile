@@ -1,13 +1,13 @@
 # Repo CI entrypoints. `make ci` is what a gate should run.
 
-.PHONY: ci fmt-check fmt clippy build test test-placement test-storage test-journal test-service test-lint test-chaos lint-examples tsan bench bench-snapshot
+.PHONY: ci fmt-check fmt clippy build test test-placement test-storage test-journal test-service test-lint test-chaos lint-examples tsan bench bench-smoke bench-snapshot
 
 # `test` runs the full suite (placement + scheduler_stress + the storage
 # battery + journal recovery + the service battery + the lint battery +
 # the chaos battery included via their Cargo.toml [[test]] entries);
 # `test-storage`/`test-journal`/`test-service`/`test-lint`/`test-chaos`
 # re-run their batteries alone as explicit gates.
-ci: fmt-check clippy test test-storage test-journal test-service test-lint test-chaos lint-examples
+ci: fmt-check clippy test test-storage test-journal test-service test-lint test-chaos lint-examples bench-smoke
 
 fmt-check:
 	cargo fmt --check
@@ -87,9 +87,19 @@ tsan:
 bench:
 	cargo bench
 
-# engine-level regression snapshot: scalability (c1), the service control
-# plane (c5) and the chaos/failover latency bench (c6, which writes its
-# rows to BENCH_chaos.json for diffing)
+# assert-only smoke pass over the snapshot benches: BENCH_SMOKE=1 shrinks
+# every case to seconds and suppresses the BENCH_*.json files, so `make
+# ci` exercises the bench harness (and its acceptance asserts) without
+# perturbing the checked-in snapshots
+bench-smoke: build
+	BENCH_SMOKE=1 cargo bench --bench c1_scalability
+	BENCH_SMOKE=1 cargo bench --bench c5_service
+	BENCH_SMOKE=1 cargo bench --bench c6_chaos
+
+# engine-level regression snapshot: scalability (c1, -> BENCH_sched.json),
+# the service control plane (c5, -> BENCH_service.json) and the
+# chaos/failover latency bench (c6, -> BENCH_chaos.json) — each bench
+# writes its rendered rows to its JSON file for diffing
 bench-snapshot: build
 	cargo bench --bench c1_scalability
 	cargo bench --bench c5_service

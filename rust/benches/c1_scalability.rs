@@ -4,8 +4,16 @@
 //! scheduler overhead (should stay flat) and the peak concurrency actually
 //! achieved (should track min(width, parallelism, cluster)).
 //!
+//! The closer is the 100k-node DAG: the whole graph multiplexes onto an
+//! 8-worker pool with OS threads bounded by pool size + a constant, and
+//! ready successors wake in batches (submit_batches << jobs_submitted).
+//! `make bench-snapshot` checks the rendered rows into `BENCH_sched.json`
+//! for regression diffing; `BENCH_SMOKE=1` (`make bench-smoke`) shrinks
+//! every case to an assert-only pass and writes no snapshot.
+//!
 //! No AOT artifacts needed — this isolates the L3 coordinator.
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use dflow::bench_util::{diamond_chain_workflow, Bench};
@@ -60,11 +68,27 @@ fn sleepy_fan_workflow(width: usize, parallelism: usize) -> Workflow {
         .entrypoint("main")
 }
 
+/// Current OS thread count of this process (`/proc/self/status`); 0 when
+/// the proc filesystem is unavailable (non-Linux).
+fn os_threads() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("Threads:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0)
+}
+
 fn main() {
+    let smoke = std::env::var_os("BENCH_SMOKE").is_some();
     let mut b = Bench::new("c1: scalability — slice fan-out ramp (no-op payload)");
 
     // engine-only (no cluster): raw coordinator throughput
-    for width in [100usize, 500, 1000, 5000] {
+    let widths: &[usize] = if smoke { &[100, 500] } else { &[100, 500, 1000, 5000] };
+    for &width in widths {
         let engine = Engine::builder().parallelism(256).build();
         let wf = fan_workflow(width, 256);
         let (r, t) = b.case(&format!("engine only, width {width}"), || {
@@ -80,7 +104,8 @@ fn main() {
     // with the cluster simulator: thousands of pods through bin-packing.
     // the payload sleeps 20ms (latency-bound, like a remote job) so
     // hundreds of pods are genuinely concurrent even on one core
-    for width in [1000usize, 2000] {
+    let widths: &[usize] = if smoke { &[512] } else { &[1000, 2000] };
+    for &width in widths {
         // 128 nodes x 4 slots of 100 mCPU = 512 concurrent pods
         let cluster = Arc::new(Cluster::uniform(128, Resources::cpu(400), 1));
         let engine = Engine::builder().cluster(cluster.clone()).parallelism(512).build();
@@ -168,5 +193,72 @@ fn main() {
         );
         b.metric("  peak live workers", probe.peak() as f64, &format!("(cap {parallelism})"));
         b.metric("  scheduler cost/task", t.as_secs_f64() * 1e6 / nodes as f64, "µs");
+    }
+
+    // the 100k-node closer: one DAG, 8 pool workers, OS threads bounded by
+    // pool size + a constant (no thread-per-task, no thread-per-deadline),
+    // successors woken in batches (one queue lock per completion, not one
+    // per ready task)
+    {
+        let target = if smoke { 2_002 } else { 100_002 };
+        let pool = 8usize;
+        let (wf, probe, nodes) = diamond_chain_workflow(target, pool);
+        let engine = Engine::builder().parallelism(pool).build();
+
+        // sample the process thread count while the DAG runs: the bound
+        // must hold mid-flight, not just after the pool drains
+        let base_threads = os_threads();
+        let peak_threads = Arc::new(AtomicUsize::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let sampler = {
+            let (peak, stop) = (Arc::clone(&peak_threads), Arc::clone(&stop));
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    peak.fetch_max(os_threads(), Ordering::Relaxed);
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            })
+        };
+        let (r, t) = b.case(&format!("{nodes}-node dag, pool {pool}"), || {
+            let r = engine.run(&wf).unwrap();
+            assert!(r.succeeded(), "{:?}", r.error);
+            r
+        });
+        stop.store(true, Ordering::Relaxed);
+        sampler.join().unwrap();
+
+        assert_eq!(r.run.nodes().len(), nodes);
+        assert!(probe.peak() <= pool, "peak {} exceeds pool {pool}", probe.peak());
+        b.metric("  scheduler cost/task", t.as_secs_f64() * 1e6 / nodes as f64, "µs");
+
+        let peak = peak_threads.load(Ordering::Relaxed);
+        b.metric("  peak OS threads", peak as f64, &format!("(baseline {base_threads})"));
+        if peak > 0 {
+            // pool workers + main + sampler + timer/appender slack: the
+            // graph is 100k nodes, the thread budget is a constant
+            assert!(
+                peak <= base_threads + pool + 8,
+                "thread count must not scale with graph size: \
+                 peak {peak} vs baseline {base_threads} + pool {pool}"
+            );
+        }
+
+        let stats = engine.scheduler_stats();
+        assert!(stats.jobs_submitted >= nodes as u64, "every task goes through the pool");
+        assert!(
+            stats.submit_batches < stats.jobs_submitted,
+            "wakeups must coalesce: {} batches for {} jobs",
+            stats.submit_batches,
+            stats.jobs_submitted
+        );
+        b.metric(
+            "  jobs per queue wakeup",
+            stats.jobs_submitted as f64 / stats.submit_batches.max(1) as f64,
+            "jobs/batch (>1 = coalesced)",
+        );
+    }
+
+    if !smoke {
+        Bench::write_snapshot("BENCH_sched.json", &[&b]).unwrap();
     }
 }

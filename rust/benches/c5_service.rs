@@ -1,6 +1,12 @@
 //! C5 — workflow service control plane: submission throughput through
-//! admission control, time-to-first-node under N concurrent runs, and the
-//! batched vs per-event journal append cost (the fan-out hot-spot fix).
+//! admission control, time-to-first-node under N concurrent runs, the
+//! batched vs per-event journal append cost (the fan-out hot-spot fix),
+//! and a 1000-run admission wave drained through bounded live-run slots.
+//!
+//! `make bench-snapshot` checks the rendered rows into
+//! `BENCH_service.json` for regression diffing; `BENCH_SMOKE=1`
+//! (`make bench-smoke`) shrinks every case to an assert-only pass and
+//! writes no snapshot.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -57,6 +63,7 @@ fn fanout(name: &str, width: i64) -> Workflow {
 }
 
 fn main() {
+    let smoke = std::env::var_os("BENCH_SMOKE").is_some();
     let mut b = Bench::new("c5: service control plane — admission, latency, batched journal");
 
     // 1) submission throughput: how fast does admission accept work?
@@ -72,7 +79,7 @@ fn main() {
             ..ServiceConfig::default()
         };
         let svc = WorkflowService::start(engine, config).unwrap();
-        let n = 256usize;
+        let n = if smoke { 32usize } else { 256 };
         let t = b
             .case(&format!("admit {n} submissions (3-node runs, 4 tenants)"), || {
                 for i in 0..n {
@@ -95,7 +102,7 @@ fn main() {
         let engine = Arc::new(
             Engine::builder().backend(Backend::local_slots("box", 8)).journal(journal).build(),
         );
-        let n = 16usize;
+        let n = if smoke { 4usize } else { 16 };
         let config = ServiceConfig {
             max_live_runs: n,
             default_tenant_quota: n,
@@ -184,5 +191,45 @@ fn main() {
             "acceptance: batched appender must reduce uploads ≥5× \
              ({batch_uploads} vs {sync_uploads})"
         );
+    }
+
+    // 4) the 1000-run admission wave: a full queue of 3-node runs admitted
+    //    in one burst, then drained through 64 live-run slots — the
+    //    control plane's sustained-throughput number
+    {
+        let n = if smoke { 64usize } else { 1000 };
+        let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+        let engine = Arc::new(
+            Engine::builder().backend(Backend::local_slots("box", 32)).journal(journal).build(),
+        );
+        let config = ServiceConfig {
+            max_live_runs: 64,
+            default_tenant_quota: 64,
+            queue_cap: 2048,
+            ..ServiceConfig::default()
+        };
+        let svc = WorkflowService::start(engine, config).unwrap();
+        let tenants = ["t0", "t1", "t2", "t3", "t4", "t5", "t6", "t7"];
+        let t_admit = b
+            .case(&format!("admit a {n}-run wave (3-node runs, 8 tenants)"), || {
+                for i in 0..n {
+                    svc.submit(tenants[i % 8], small_dag(&format!("wave-{i}"), 0)).unwrap();
+                }
+            })
+            .1;
+        b.metric("wave admission throughput", n as f64 / t_admit.as_secs_f64(), "submits/s");
+        let t_drain = b
+            .case(&format!("drain the {n}-run wave (64 live slots)"), || {
+                assert!(svc.wait_idle(Duration::from_secs(600)), "service never drained");
+            })
+            .1;
+        let total = t_admit + t_drain;
+        b.metric("sustained run throughput", n as f64 / total.as_secs_f64(), "runs/s");
+        let rows = RunRegistry::new(Arc::clone(svc.journal())).list_runs().unwrap();
+        assert_eq!(rows.len(), n, "every admitted run must close and journal");
+    }
+
+    if !smoke {
+        Bench::write_snapshot("BENCH_service.json", &[&b]).unwrap();
     }
 }

@@ -5,7 +5,9 @@
 //! took to re-place on a surviving backend.
 //!
 //! `make bench-snapshot` runs this and checks the rendered rows into
-//! `BENCH_chaos.json` for regression diffing.
+//! `BENCH_chaos.json` for regression diffing; `BENCH_SMOKE=1`
+//! (`make bench-smoke`) shrinks the fan-out to an assert-only pass and
+//! writes no snapshot.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -54,8 +56,11 @@ fn tri_backend_engine(journal: Option<Arc<Journal>>) -> Engine {
 }
 
 fn main() {
+    let smoke = std::env::var_os("BENCH_SMOKE").is_some();
     let mut b = Bench::new("c6: chaos — failover recovery latency");
-    let width = 600i64;
+    let width = if smoke { 150i64 } else { 600 };
+    // keep the kill mid-run at either scale so attempts are in flight
+    let kill_at = if smoke { 75u64 } else { 500 };
     let work = Duration::from_millis(1);
 
     // undisturbed baseline: same fan-out, same backends, nobody dies
@@ -73,10 +78,10 @@ fn main() {
     let killed_at = Arc::new(AtomicU64::new(0));
     let k2 = Arc::clone(&killed_at);
     plan.at(
-        500,
+        kill_at,
         ChaosAction::Call(Box::new(move || k2.store(dflow::util::epoch_ms(), Ordering::SeqCst))),
     );
-    plan.at(500, ChaosAction::KillBackend(Arc::clone(&b0)));
+    plan.at(kill_at, ChaosAction::KillBackend(Arc::clone(&b0)));
     plan.install(&engine);
     let (r, t_chaos) = b.case(&format!("{width}-slice fan-out, 1 of 3 backends killed"), || {
         engine.run(&fanout(width, work)).unwrap()
@@ -122,5 +127,7 @@ fn main() {
         "ms",
     );
 
-    Bench::write_snapshot("BENCH_chaos.json", &[&b]).unwrap();
+    if !smoke {
+        Bench::write_snapshot("BENCH_chaos.json", &[&b]).unwrap();
+    }
 }

@@ -322,6 +322,11 @@ pub fn assert_all_drained(engine: &Engine, cas: Option<&CasStore>, journal: Opti
         "assert_all_drained: {} scheduler worker(s) still blocked in a capacity wait",
         sched.blocked
     );
+    assert!(
+        sched.timer_depth == 0,
+        "assert_all_drained: {} attempt deadline(s) still armed on the timer wheel",
+        sched.timer_depth
+    );
     if let Some(j) = journal {
         let writers = j.cached_writers();
         assert!(

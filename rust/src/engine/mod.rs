@@ -20,10 +20,12 @@
 pub mod place;
 pub mod run;
 pub(crate) mod sched;
+pub(crate) mod shard;
+pub(crate) mod wheel;
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::cluster::{Cluster, PodBinding, PodSpec};
@@ -104,6 +106,9 @@ pub struct Engine {
     /// Where runs *write* their lifecycle events: the journal itself
     /// (synchronous) or a batching [`crate::journal::Appender`].
     pub(crate) sink: Option<Arc<dyn JournalSink>>,
+    /// Engine-wide deadline wheel: one timer thread drives every timed
+    /// attempt's wall-clock limit (no thread-per-attempt watchdogs).
+    pub(crate) wheel: wheel::TimerWheel,
 }
 
 /// Builder for [`Engine`].
@@ -232,6 +237,7 @@ impl EngineBuilder {
             placer,
             journal: self.journal,
             sink: self.sink,
+            wheel: wheel::TimerWheel::new(),
         }
     }
 }
@@ -542,9 +548,16 @@ impl Engine {
     }
 
     /// Adaptive scheduler-pool snapshot (size / hard cap / live / blocked
-    /// / peak workers).
+    /// / peak workers), with the engine's timer-wheel counters merged in
+    /// (pending / peak / fired / cancelled deadlines).
     pub fn scheduler_stats(&self) -> SchedulerStats {
-        self.sched.stats()
+        let mut stats = self.sched.stats();
+        let w = self.wheel.stats();
+        stats.timer_depth = w.depth;
+        stats.timer_peak_depth = w.peak_depth;
+        stats.timers_fired = w.fired;
+        stats.timers_cancelled = w.cancelled;
+        stats
     }
 
     /// Install a fault-injection hook ([`crate::check::chaos`]) on every
@@ -601,8 +614,8 @@ struct DagState<'a> {
 struct Exec<'e> {
     engine: &'e Engine,
     wf: &'e Workflow,
-    /// `Arc` (not a plain reference) so attempt guards can be moved into
-    /// watchdog threads that may outlive a timed-out step.
+    /// `Arc` (not a plain reference) so attempt guards, which hold a
+    /// clone, keep the run alive for as long as capacity is held.
     run: &'e Arc<WorkflowRun>,
 }
 
@@ -797,9 +810,7 @@ impl<'e> Exec<'e> {
         let ready: Vec<usize> =
             deps.iter().enumerate().filter(|(_, d)| d.is_empty()).map(|(i, _)| i).collect();
         self.engine.sched.scope(|scope| {
-            for idx in ready {
-                self.spawn_dag_task(&scope, &state, bindings, path, idx);
-            }
+            self.spawn_dag_tasks(&scope, &state, bindings, path, ready);
         });
         let err = state.first_err.lock().unwrap().take();
         match err {
@@ -829,15 +840,15 @@ impl<'e> Exec<'e> {
             .map(|e| e.trim_start_matches(": ").to_string())
     }
 
-    /// Submit one ready DAG task to the pool.
-    fn spawn_dag_task<'env>(
+    /// Build the pool job for one ready DAG task.
+    fn dag_task_job<'env>(
         &'env self,
         scope: &ScopeHandle<'env>,
         state: &'env DagState<'env>,
         bindings: &'env Bindings,
         path: &'env str,
         idx: usize,
-    ) {
+    ) -> Box<dyn FnOnce() + Send + 'env> {
         // gate only while the template is still healthy: a failing DAG's
         // remaining tasks end up Skipped, and must not burn probe locks or
         // count as placement rejections on the way there
@@ -850,7 +861,7 @@ impl<'e> Exec<'e> {
                 // infeasible continue_on_failed tasks and overflow the
                 // stack.
                 let scope2 = scope.clone();
-                scope.submit(move || {
+                return Box::new(move || {
                     let step = &state.tasks[idx];
                     let outcome = if state.failed.load(Ordering::SeqCst) {
                         StepOutcome::Skipped
@@ -859,11 +870,10 @@ impl<'e> Exec<'e> {
                     };
                     self.complete_dag_task(&scope2, state, bindings, path, idx, outcome);
                 });
-                return;
             }
         }
         let scope2 = scope.clone();
-        scope.submit(move || {
+        Box::new(move || {
             let outcome = if state.failed.load(Ordering::SeqCst) {
                 // template already failing: don't start new work
                 StepOutcome::Skipped
@@ -872,7 +882,28 @@ impl<'e> Exec<'e> {
                 self.execute_step(&state.tasks[idx], bindings, &siblings, path)
             };
             self.complete_dag_task(&scope2, state, bindings, path, idx, outcome);
-        });
+        })
+    }
+
+    /// Submit a set of ready DAG tasks as ONE batched queue publish — a
+    /// single pool-lock acquisition and condvar broadcast no matter how
+    /// wide the fan-out ([`ScopeHandle::submit_batch`]).
+    fn spawn_dag_tasks<'env>(
+        &'env self,
+        scope: &ScopeHandle<'env>,
+        state: &'env DagState<'env>,
+        bindings: &'env Bindings,
+        path: &'env str,
+        ready: Vec<usize>,
+    ) {
+        if ready.is_empty() {
+            return;
+        }
+        let jobs: Vec<Box<dyn FnOnce() + Send + 'env>> = ready
+            .into_iter()
+            .map(|idx| self.dag_task_job(scope, state, bindings, path, idx))
+            .collect();
+        scope.submit_batch(jobs);
     }
 
     /// Record a task's outcome and propagate its outputs delta to its
@@ -904,14 +935,17 @@ impl<'e> Exec<'e> {
             // previous behavior of not decrementing dependents on failure)
             return;
         }
+        let mut ready: Vec<usize> = Vec::new();
         for &dep in &state.dependents[idx] {
             state.inputs[dep].lock().unwrap().insert(name.clone(), Arc::clone(&outputs));
             // the insert above happens-before this decrement; the AcqRel
             // RMW chain makes the final decrementer see every insert
             if state.remaining[dep].fetch_sub(1, Ordering::AcqRel) == 1 {
-                self.spawn_dag_task(scope, state, bindings, path, dep);
+                ready.push(dep);
             }
         }
+        // every successor this completion made ready wakes in one batch
+        self.spawn_dag_tasks(scope, state, bindings, path, ready);
     }
 
     // -- one step ---------------------------------------------------------------
@@ -1615,8 +1649,8 @@ impl<'e> Exec<'e> {
     /// Engine-driven cleanup on step failure (ROADMAP CAS follow-up):
     /// delete the abandoned attempt's `run{}/{path}/a{n}/` artifact
     /// namespace — see [`reclaim_attempt_objects`]. Only called once the
-    /// OP has actually stopped; for timed-out attempts the watchdog
-    /// thread does it instead, when the cancelled OP finally exits.
+    /// OP has actually stopped; for timed-out attempts that is when the
+    /// wheel-cancelled OP finally returns to the attempt frame.
     fn reclaim_attempt(&self, path: &str, attempt: u32) {
         reclaim_attempt_objects(&*self.engine.storage, self.run, path, attempt);
     }
@@ -1652,9 +1686,11 @@ impl<'e> Exec<'e> {
         // (seed semantics), so the permit frees when one_attempt returns
         let _sem = SemGuard { run: &**self.run };
         // capacity acquisition — pod (legacy cluster) or backend lease
-        // (placement layer) is the backpressure (§2.6). Both guards follow
-        // the OP itself (into the watchdog thread on the timeout path):
-        // physical capacity is only returned when the OP actually stops.
+        // (placement layer) is the backpressure (§2.6). Both guards live
+        // in this frame until the OP returns (timed attempts included —
+        // the timer wheel cancels the OP in place rather than abandoning
+        // it on another thread): physical capacity is only returned when
+        // the OP actually stops.
         let mut pod_guard: Option<PodGuard> = None;
         let mut lease_guard: Option<LeaseGuard> = None;
         // node flake pre-sampled by the pod binding (either path); checked
@@ -1846,111 +1882,65 @@ impl<'e> Exec<'e> {
                 }
             }
             Some(limit) => {
-                // run the attempt on a watchdog thread so the wall-time
-                // limit can fire even for non-cooperative OPs. The POD
-                // guard moves INTO that thread: if the limit fires, the
-                // cancel token stops the OP at its next checkpoint and the
-                // pod is returned when the OP truly stops — never leaked,
-                // never released while compute is still burning. (The
-                // scheduling permit, held by the caller, frees at timeout
-                // so the workflow keeps progressing.)
-                let cancel = ctx.cancel.clone();
-                let cancel_in = cancel.clone();
-                let exec = executor.clone();
-                let ct2 = ct.clone();
-                let run2 = Arc::clone(self.run);
-                let storage2 = Arc::clone(&self.engine.storage);
-                let path2 = path.to_string();
-                let (tx, rx) = mpsc::channel();
-                std::thread::Builder::new()
-                    .name(format!("dflow-watchdog-{}", self.run.id))
-                    .spawn(move || {
-                        let r = exec.execute(&ct2, &mut ctx);
-                        // OP finished (or aborted): free the pod / backend lease
-                        drop(pod_guard);
-                        drop(lease_guard);
-                        let failed = r.is_err();
-                        tx.send(r.map(|()| StepOutputs {
-                            params: ctx.outputs,
-                            artifacts: ctx.output_artifacts,
-                        }))
-                        .ok();
-                        // the attempt's outputs are garbage when it failed
-                        // OR when the timeout already failed the step (even
-                        // an Ok result is abandoned then). The OP has truly
-                        // stopped here, so reclaiming cannot race its
-                        // writes — this is what keeps timed-out attempts
-                        // from pinning CAS chunks forever. Checked after
-                        // `send`, so a just-in-time finish is not pushed
-                        // past the deadline by cleanup I/O and a cancel
-                        // racing the deadline is still observed.
-                        if failed || cancel_in.is_cancelled() {
-                            reclaim_attempt_objects(&*storage2, &run2, &path2, attempt);
-                        }
-                    })
-                    .expect("spawn attempt watchdog");
-                match rx.recv_timeout(limit) {
-                    Ok(mut r) => {
-                        self.run.metrics.op_exec.observe(sw.elapsed());
-                        // a voided success was not reclaimed by the
-                        // watchdog (it saw a clean finish); the received
-                        // result proves the OP stopped, so reclaim here
-                        if self.failover_check(
-                            &mut r,
-                            death_watch.as_ref(),
-                            path,
-                            attempt,
-                            failed_over,
-                        ) {
-                            self.reclaim_attempt(path, attempt);
-                        }
-                        r
-                    }
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        // the watchdog thread unwound without sending: the
-                        // OP panicked (its pod was released by the unwind).
-                        // Don't misreport this as a timeout.
-                        self.run.metrics.op_exec.observe(sw.elapsed());
+                // Deadline on the engine's timing wheel: one timer thread
+                // drives every timed attempt in the process (never a
+                // watchdog thread per attempt). The wheel fires the
+                // attempt's cancel token at the limit; the cooperative OP
+                // observes it at its next checkpoint and returns — so the
+                // pod/lease guards held by THIS frame release exactly when
+                // the OP actually stops, the same capacity handshake as
+                // the un-timed path: never leaked, never released while
+                // compute is still burning.
+                let deadline = self.engine.wheel.register(limit, ctx.cancel.clone());
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    executor.execute(ct, &mut ctx)
+                }));
+                self.run.metrics.op_exec.observe(sw.elapsed());
+                // the OP has stopped; withdraw the deadline. A lost
+                // withdrawal means the wheel already fired: the limit
+                // passed while the OP was still running, and the step has
+                // officially timed out no matter what the OP returned —
+                // even a just-too-late Ok is abandoned (seed semantics).
+                let timed_out = !deadline.cancel();
+                let mut r = match caught {
+                    Ok(r) => r,
+                    Err(_) => {
+                        // the OP panicked (unwound through its frame); its
+                        // partial attempt outputs are garbage
                         self.reclaim_attempt(path, attempt);
-                        Err(OpError::Fatal("OP attempt panicked".into()))
+                        return Err(OpError::Fatal("OP attempt panicked".into()));
                     }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {
-                        cancel.cancel();
-                        // The OP may have finished in the instant between
-                        // the deadline expiring and the cancel above — its
-                        // watchdog then saw neither a failure nor a cancel
-                        // and exited without reclaiming. A late result in
-                        // the channel proves the OP has stopped, so
-                        // reclaiming the abandoned attempt here is safe
-                        // (and a no-op if the watchdog already did). With
-                        // the SeqCst cancel flag this closes the practical
-                        // window; anything that still slips through is a
-                        // gc-reclaimable leak, never a deleted live write.
-                        if rx.try_recv().is_ok() {
-                            self.reclaim_attempt(path, attempt);
-                        }
-                        self.run.metrics.timeouts.inc();
-                        self.run.trace.push(
-                            EventKind::StepTimedOut,
-                            path,
-                            format!("{limit:?}"),
-                        );
-                        let msg = format!("step timed out after {limit:?}");
-                        self.run.journal_event(|| JournalEvent::NodeCancelled {
-                            path: path.to_string(),
-                            reason: msg.clone(),
-                        });
-                        // NO reclamation on THIS thread: the cancelled OP
-                        // may still be writing into its attempt namespace
-                        // until it observes the token — deleting under it
-                        // races the CAS layer's upload/delete contract.
-                        // The watchdog thread reclaims when the OP truly
-                        // stops (see above).
-                        if policy.timeout_transient {
-                            Err(OpError::Transient(msg))
-                        } else {
-                            Err(OpError::Fatal(msg))
-                        }
+                };
+                if timed_out {
+                    // `execute` has returned, so the OP provably stopped:
+                    // reclaiming the abandoned attempt's namespace here
+                    // cannot race its writes — this is what keeps
+                    // timed-out attempts from pinning CAS chunks forever
+                    self.reclaim_attempt(path, attempt);
+                    self.run.metrics.timeouts.inc();
+                    self.run.trace.push(EventKind::StepTimedOut, path, format!("{limit:?}"));
+                    let msg = format!("step timed out after {limit:?}");
+                    self.run.journal_event(|| JournalEvent::NodeCancelled {
+                        path: path.to_string(),
+                        reason: msg.clone(),
+                    });
+                    return if policy.timeout_transient {
+                        Err(OpError::Transient(msg))
+                    } else {
+                        Err(OpError::Fatal(msg))
+                    };
+                }
+                self.failover_check(&mut r, death_watch.as_ref(), path, attempt, failed_over);
+                match r {
+                    Ok(()) => Ok(StepOutputs {
+                        params: ctx.outputs,
+                        artifacts: ctx.output_artifacts,
+                    }),
+                    Err(e) => {
+                        // the OP has stopped: its partial attempt outputs
+                        // are garbage — reclaim the namespace now
+                        self.reclaim_attempt(path, attempt);
+                        Err(e)
                     }
                 }
             }
@@ -2032,11 +2022,11 @@ impl Drop for SemGuard<'_> {
     }
 }
 
-/// Releases an attempt's cluster pod when the OP *actually* stops. For
-/// timed-out steps the guard lives inside the watchdog thread, so pod
-/// accounting returns to zero exactly when the cancelled OP exits — the
-/// timeout path can no longer leak a pod binding to an orphan thread, and
-/// it can no longer pretend capacity is free while compute still burns.
+/// Releases an attempt's cluster pod when the OP *actually* stops. Timed
+/// attempts run in place with a wheel-armed deadline, so pod accounting
+/// returns to zero exactly when the cancelled OP returns to the attempt
+/// frame — the timeout path can neither leak a pod binding nor pretend
+/// capacity is free while compute still burns.
 struct PodGuard {
     run: Arc<WorkflowRun>,
     cluster: Arc<Cluster>,
@@ -2055,8 +2045,8 @@ impl Drop for PodGuard {
 
 /// Releases an attempt's backend lease when the OP *actually* stops —
 /// the placement-layer analogue of [`PodGuard`]: on the timeout path the
-/// guard lives inside the watchdog thread, so per-backend in-flight
-/// accounting returns to zero exactly when the cancelled OP exits.
+/// per-backend in-flight accounting returns to zero exactly when the
+/// wheel-cancelled OP returns to the attempt frame.
 struct LeaseGuard {
     run: Arc<WorkflowRun>,
     lease: PlacementLease,

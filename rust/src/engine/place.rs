@@ -20,9 +20,10 @@
 //!   the backend names in the error ([`PlaceError`]) — before the step
 //!   occupies a scheduling permit or parks a pool worker.
 //! * [`PlacementLease`] — the acquired capacity. Held for exactly as long
-//!   as the OP runs (on timeout it moves into the watchdog thread with the
-//!   attempt), so per-backend in-flight accounting returns to zero when
-//!   the OP actually stops, never earlier and never leaking.
+//!   as the OP runs (a timed-out attempt keeps it until the wheel-cancelled
+//!   OP returns to the attempt frame), so per-backend in-flight accounting
+//!   returns to zero when the OP actually stops, never earlier and never
+//!   leaking.
 //!
 //! Capacity probes are *conservative*: a lease is only handed out when the
 //! probe under the placer lock says the backend has room, so no interleaving
@@ -961,9 +962,9 @@ impl Placer {
 
 /// Capacity acquired for one attempt on one backend. Dropping the lease
 /// returns the capacity (releasing the cluster pod, if any) and wakes
-/// blocked placements. On the timeout path the engine moves the lease into
-/// the attempt's watchdog thread, so the backend reads busy until the
-/// cancelled OP actually stops.
+/// blocked placements. On the timeout path the lease stays with the
+/// attempt frame until the wheel-cancelled OP returns, so the backend
+/// reads busy until the OP actually stops.
 pub struct PlacementLease {
     backend: Arc<Backend>,
     shared: Arc<PlacerShared>,

@@ -2,11 +2,12 @@
 //! observable surface behind `dflow get/watch` and `query_step` (§2.5).
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use super::place::Priority;
+use super::shard::ShardedMap;
 use crate::core::{ArtifactRef, CancelToken, Value};
 use crate::journal::{JournalEvent, JournalSink};
 use crate::jsonx::Json;
@@ -178,6 +179,24 @@ impl Semaphore {
     }
 }
 
+fn phase_to_u8(p: RunPhase) -> u8 {
+    match p {
+        RunPhase::Running => 0,
+        RunPhase::Succeeded => 1,
+        RunPhase::Failed => 2,
+        RunPhase::Cancelled => 3,
+    }
+}
+
+fn phase_from_u8(v: u8) -> RunPhase {
+    match v {
+        1 => RunPhase::Succeeded,
+        2 => RunPhase::Failed,
+        3 => RunPhase::Cancelled,
+        _ => RunPhase::Running,
+    }
+}
+
 /// Live, shared state of one workflow run.
 pub struct WorkflowRun {
     pub id: u64,
@@ -186,19 +205,26 @@ pub struct WorkflowRun {
     /// Shared (`Arc`) so the trace's journal-mirror sink can count its own
     /// append failures into `journal_errors`.
     pub metrics: Arc<Registry>,
-    pub(crate) nodes: Mutex<BTreeMap<String, NodeStatus>>,
+    /// Node statuses, lock-striped by path hash so wide fan-outs stop
+    /// serializing their per-node transitions on one mutex.
+    pub(crate) nodes: ShardedMap<String, NodeStatus>,
+    /// Authoritative phase, guarded for `wait_finished`'s condvar
+    /// protocol; reads go through the lock-free `phase_cache`.
     pub(crate) phase: Mutex<RunPhase>,
+    /// Lock-free mirror of `phase` (the hot read: every step start checks
+    /// the run is still Running). Written only inside the `phase` lock.
+    phase_cache: AtomicU8,
     /// Notified on terminal phase transitions (event-driven waiting).
     pub(crate) phase_cv: Condvar,
     /// key → outputs of completed keyed steps (feeds `query_step`).
-    pub(crate) keyed: Mutex<BTreeMap<String, StepOutputs>>,
+    pub(crate) keyed: ShardedMap<String, StepOutputs>,
     /// key → outputs injected from previous runs (`reuse_step`).
     pub(crate) reuse: BTreeMap<String, StepOutputs>,
     pub(crate) sem: Semaphore,
     /// backend name → placed attempts of this run (multi-backend dispatch
     /// observability: the per-run placement split; retries count once per
     /// attempt since each attempt is placed anew).
-    pub(crate) placements: Mutex<BTreeMap<String, u64>>,
+    pub(crate) placements: ShardedMap<String, u64>,
     /// Durable event journal (or batching appender) this run mirrors its
     /// lifecycle into (`None` = in-memory only, the pre-journal behavior).
     pub(crate) journal: Option<Arc<dyn JournalSink>>,
@@ -210,8 +236,9 @@ pub struct WorkflowRun {
     /// Cancel tokens of attempts currently executing, so a run-level
     /// cancel propagates into every in-flight OP (which releases its
     /// pod/lease when it actually stops — the same guard discipline as
-    /// timeouts).
-    pub(crate) live_tokens: Mutex<BTreeMap<u64, CancelToken>>,
+    /// timeouts). Striped: registration/unregistration is per-attempt
+    /// hot-path work.
+    pub(crate) live_tokens: ShardedMap<u64, CancelToken>,
     token_serial: AtomicU64,
     /// Placement priority class of this run's attempts (set once at
     /// submission, before the run is shared — see `Engine::new_run`).
@@ -281,17 +308,18 @@ impl WorkflowRun {
             workflow_name: workflow_name.to_string(),
             trace,
             metrics,
-            nodes: Mutex::new(BTreeMap::new()),
+            nodes: ShardedMap::new(),
             phase: Mutex::new(RunPhase::Running),
+            phase_cache: AtomicU8::new(phase_to_u8(RunPhase::Running)),
             phase_cv: Condvar::new(),
-            keyed: Mutex::new(BTreeMap::new()),
+            keyed: ShardedMap::new(),
             reuse,
             sem: Semaphore::new(parallelism),
-            placements: Mutex::new(BTreeMap::new()),
+            placements: ShardedMap::new(),
             journal,
             cancelled: AtomicBool::new(false),
             cancel_reason: Mutex::new(String::new()),
-            live_tokens: Mutex::new(BTreeMap::new()),
+            live_tokens: ShardedMap::new(),
             token_serial: AtomicU64::new(0),
             priority: Priority::default(),
         }
@@ -319,9 +347,7 @@ impl WorkflowRun {
         *self.cancel_reason.lock().unwrap() =
             if reason.is_empty() { "cancelled".to_string() } else { reason.to_string() };
         self.trace.push(EventKind::RunCancelRequested, "", reason);
-        for t in self.live_tokens.lock().unwrap().values() {
-            t.cancel();
-        }
+        self.live_tokens.for_each(|_, t| t.cancel());
         true
     }
 
@@ -342,7 +368,7 @@ impl WorkflowRun {
     /// concurrent `cancel`).
     pub(crate) fn register_cancel_token(&self, token: &CancelToken) -> TokenRegistration<'_> {
         let id = self.token_serial.fetch_add(1, Ordering::Relaxed);
-        self.live_tokens.lock().unwrap().insert(id, token.clone());
+        self.live_tokens.insert(id, token.clone());
         if self.is_cancelled() {
             token.cancel();
         }
@@ -363,12 +389,7 @@ impl WorkflowRun {
     }
 
     pub(crate) fn record_placement(&self, backend: &str) {
-        *self
-            .placements
-            .lock()
-            .unwrap()
-            .entry(backend.to_string())
-            .or_insert(0) += 1;
+        self.placements.upsert(backend.to_string(), || 0, |n| *n += 1);
     }
 
     /// Per-backend placement split of this run: backend name → number of
@@ -376,58 +397,66 @@ impl WorkflowRun {
     /// possibly on a different backend). Empty when the engine has no
     /// backends registered.
     pub fn placements(&self) -> BTreeMap<String, u64> {
-        self.placements.lock().unwrap().clone()
+        self.placements.to_sorted_pairs().into_iter().collect()
     }
 
     pub(crate) fn set_node(&self, path: &str, template: &str, phase: NodePhase, key: Option<&str>) {
-        let mut nodes = self.nodes.lock().unwrap();
         let now = epoch_ms();
-        let entry = nodes.entry(path.to_string()).or_insert_with(|| NodeStatus {
-            path: path.to_string(),
-            template: template.to_string(),
-            phase,
-            key: key.map(str::to_string),
-            started_ms: now,
-            ended_ms: 0,
-            retries: 0,
-            message: String::new(),
-        });
-        entry.phase = phase;
-        if matches!(phase, NodePhase::Running) {
-            entry.started_ms = now;
-        }
-        if matches!(
-            phase,
-            NodePhase::Succeeded | NodePhase::Failed | NodePhase::Skipped | NodePhase::Reused
-        ) {
-            entry.ended_ms = now;
-        }
+        self.nodes.upsert(
+            path.to_string(),
+            || NodeStatus {
+                path: path.to_string(),
+                template: template.to_string(),
+                phase,
+                key: key.map(str::to_string),
+                started_ms: now,
+                ended_ms: 0,
+                retries: 0,
+                message: String::new(),
+            },
+            |entry| {
+                entry.phase = phase;
+                if matches!(phase, NodePhase::Running) {
+                    entry.started_ms = now;
+                }
+                if matches!(
+                    phase,
+                    NodePhase::Succeeded
+                        | NodePhase::Failed
+                        | NodePhase::Skipped
+                        | NodePhase::Reused
+                ) {
+                    entry.ended_ms = now;
+                }
+            },
+        );
     }
 
     pub(crate) fn node_message(&self, path: &str, msg: &str) {
-        if let Some(n) = self.nodes.lock().unwrap().get_mut(path) {
-            msg.clone_into(&mut n.message);
-        }
+        self.nodes.with_mut(&path.to_string(), |n| msg.clone_into(&mut n.message));
     }
 
     pub(crate) fn node_retry(&self, path: &str) {
-        if let Some(n) = self.nodes.lock().unwrap().get_mut(path) {
-            n.retries += 1;
-        }
+        self.nodes.with_mut(&path.to_string(), |n| n.retries += 1);
     }
 
     pub(crate) fn record_keyed(&self, key: &str, outputs: &StepOutputs) {
-        self.keyed.lock().unwrap().insert(key.to_string(), outputs.clone());
+        self.keyed.insert(key.to_string(), outputs.clone());
     }
 
-    /// Current phase.
+    /// Current phase (lock-free: reads the cache `set_phase` maintains).
     pub fn phase(&self) -> RunPhase {
-        *self.phase.lock().unwrap()
+        phase_from_u8(self.phase_cache.load(Ordering::SeqCst))
     }
 
     /// Set the phase and wake anyone blocked in [`Self::wait_finished`].
+    /// The cache store happens inside the lock so `phase()` can never
+    /// observe a newer value than a concurrent `wait_finished` woke on.
     pub(crate) fn set_phase(&self, p: RunPhase) {
-        *self.phase.lock().unwrap() = p;
+        let mut guard = self.phase.lock().unwrap();
+        *guard = p;
+        self.phase_cache.store(phase_to_u8(p), Ordering::SeqCst);
+        drop(guard);
         self.phase_cv.notify_all();
     }
 
@@ -443,30 +472,33 @@ impl WorkflowRun {
 
     /// Snapshot of all node statuses (sorted by path).
     pub fn nodes(&self) -> Vec<NodeStatus> {
-        self.nodes.lock().unwrap().values().cloned().collect()
+        self.nodes.to_sorted_pairs().into_iter().map(|(_, n)| n).collect()
     }
 
     /// Count nodes in a phase.
     pub fn count_phase(&self, phase: NodePhase) -> usize {
-        self.nodes.lock().unwrap().values().filter(|n| n.phase == phase).count()
+        let mut count = 0usize;
+        self.nodes.for_each(|_, n| {
+            if n.phase == phase {
+                count += 1;
+            }
+        });
+        count
     }
 
     /// `query_step` (paper §2.5): retrieve a completed keyed step.
     pub fn query_step(&self, key: &str) -> Option<ReusedStep> {
         self.keyed
-            .lock()
-            .unwrap()
-            .get(key)
-            .map(|o| ReusedStep { key: key.to_string(), outputs: o.clone() })
+            .get_cloned(&key.to_string())
+            .map(|o| ReusedStep { key: key.to_string(), outputs: o })
     }
 
     /// All keyed outputs (for bulk reuse of a previous run).
     pub fn all_keyed(&self) -> Vec<ReusedStep> {
         self.keyed
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(k, o)| ReusedStep { key: k.clone(), outputs: o.clone() })
+            .to_sorted_pairs()
+            .into_iter()
+            .map(|(k, o)| ReusedStep { key: k, outputs: o })
             .collect()
     }
 
@@ -508,7 +540,6 @@ impl WorkflowRun {
 
     /// Status document (what `dflow get` prints).
     pub fn to_json(&self) -> Json {
-        let nodes = self.nodes.lock().unwrap();
         Json::obj(vec![
             ("id", Json::n(self.id as f64)),
             ("workflow", Json::s(self.workflow_name.clone())),
@@ -516,8 +547,8 @@ impl WorkflowRun {
             (
                 "nodes",
                 Json::Arr(
-                    nodes
-                        .values()
+                    self.nodes()
+                        .iter()
                         .map(|n| {
                             Json::obj(vec![
                                 ("path", Json::s(n.path.clone())),
@@ -538,10 +569,9 @@ impl WorkflowRun {
                 "placements",
                 Json::Obj(
                     self.placements
-                        .lock()
-                        .unwrap()
-                        .iter()
-                        .map(|(k, v)| (k.clone(), Json::n(*v as f64)))
+                        .to_sorted_pairs()
+                        .into_iter()
+                        .map(|(k, v)| (k, Json::n(v as f64)))
                         .collect(),
                 ),
             ),
@@ -557,7 +587,7 @@ pub(crate) struct TokenRegistration<'a> {
 
 impl Drop for TokenRegistration<'_> {
     fn drop(&mut self) {
-        self.run.live_tokens.lock().unwrap().remove(&self.id);
+        self.run.live_tokens.remove(&self.id);
     }
 }
 
@@ -601,7 +631,7 @@ mod tests {
         assert!(run.is_cancelled());
         assert!(!run.cancel("again"), "second cancel is a no-op");
         drop(reg);
-        assert!(run.live_tokens.lock().unwrap().is_empty(), "registration must unregister");
+        assert!(run.live_tokens.is_empty(), "registration must unregister");
         // a token registered after the cancel fires immediately
         let late = CancelToken::new();
         let _reg2 = run.register_cancel_token(&late);
@@ -643,7 +673,7 @@ mod tests {
         run.set_node("main/a", "tpl-a", NodePhase::Succeeded, Some("key-a"));
         run.set_node("main/sub/b", "tpl-b", NodePhase::Failed, None);
         run.node_message("main/sub/b", "boom");
-        *run.phase.lock().unwrap() = RunPhase::Failed;
+        run.set_phase(RunPhase::Failed);
         let root = std::env::temp_dir().join(format!("dflow-dbg-{}", crate::util::next_id()));
         let dir = run.dump_debug_dir(&root).unwrap();
         assert!(dir.join("status").exists());

@@ -115,6 +115,13 @@ struct QueueState {
     peak_spawned: usize,
     /// Monotonic counter for worker thread names.
     spawn_serial: usize,
+    /// Jobs ever queued (across all batches).
+    jobs_submitted: u64,
+    /// Queue publishes — lock-acquire + notify cycles on the submit path.
+    /// A fan-out completion that batches its newly-ready successors shows
+    /// `submit_batches` well below `jobs_submitted`; per-edge submission
+    /// would keep them equal.
+    submit_batches: u64,
     shutdown: bool,
 }
 
@@ -134,9 +141,29 @@ struct PoolInner {
 
 impl PoolInner {
     fn push(inner: &Arc<PoolInner>, job: QueuedJob) {
+        Self::push_batch(inner, vec![job]);
+    }
+
+    /// Publish a whole batch of jobs under ONE state-lock acquisition and
+    /// ONE condvar broadcast — the fan-out completion path's per-edge
+    /// lock/notify churn collapsed into a single wakeup.
+    fn push_batch(inner: &Arc<PoolInner>, jobs: Vec<QueuedJob>) {
+        if jobs.is_empty() {
+            return;
+        }
         let mut st = inner.state.lock().unwrap();
-        st.jobs.push_back(job);
-        Self::maybe_spawn_locked(inner, &mut st);
+        st.jobs_submitted += jobs.len() as u64;
+        st.submit_batches += 1;
+        st.jobs.extend(jobs);
+        // one call spawns at most one worker; repeat until the backlog no
+        // longer warrants another (bounded by pool size, not batch size)
+        loop {
+            let before = st.spawned;
+            Self::maybe_spawn_locked(inner, &mut st);
+            if st.spawned == before {
+                break;
+            }
+        }
         drop(st);
         inner.cv.notify_all();
     }
@@ -249,14 +276,31 @@ impl<'env> ScopeHandle<'env> {
     where
         F: FnOnce() + Send + 'env,
     {
-        self.batch.pending.fetch_add(1, Ordering::SeqCst);
-        let boxed: Box<dyn FnOnce() + Send + 'env> = Box::new(f);
-        // SAFETY: the scope guard drains this batch before `scope` returns,
-        // so the job never outlives the `'env` borrows it captures.
-        let job: Job = unsafe {
-            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(boxed)
-        };
-        PoolInner::push(&self.pool, QueuedJob { run: job, batch: Arc::clone(&self.batch) });
+        self.submit_batch(vec![Box::new(f)]);
+    }
+
+    /// Queue several jobs as ONE queue publish: one pending-counter bump,
+    /// one state-lock acquisition, one condvar broadcast. The DAG
+    /// completion path uses this to wake all newly-ready successors of a
+    /// finished task together instead of per-edge.
+    pub fn submit_batch(&self, fs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        if fs.is_empty() {
+            return;
+        }
+        self.batch.pending.fetch_add(fs.len(), Ordering::SeqCst);
+        let jobs: Vec<QueuedJob> = fs
+            .into_iter()
+            .map(|boxed| {
+                // SAFETY: the scope guard drains this batch before `scope`
+                // returns, so the job never outlives the `'env` borrows it
+                // captures.
+                let job: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(boxed)
+                };
+                QueuedJob { run: job, batch: Arc::clone(&self.batch) }
+            })
+            .collect();
+        PoolInner::push_batch(&self.pool, jobs);
     }
 
     /// Block until every job of this batch has completed, running queued
@@ -355,6 +399,20 @@ pub struct SchedulerStats {
     pub blocked: usize,
     /// Highest live-worker count ever observed.
     pub peak_spawned: usize,
+    /// Jobs ever queued on the pool.
+    pub jobs_submitted: u64,
+    /// Queue publishes (one lock acquisition + one broadcast each); stays
+    /// below `jobs_submitted` when completions batch their wakeups.
+    pub submit_batches: u64,
+    /// Timer-wheel deadlines currently pending (filled by
+    /// [`super::Engine::scheduler_stats`]; a bare pool reports 0).
+    pub timer_depth: u64,
+    /// Highest pending-deadline count ever observed on the wheel.
+    pub timer_peak_depth: u64,
+    /// Deadlines that fired (attempt wall-clock limits that elapsed).
+    pub timers_fired: u64,
+    /// Deadlines withdrawn before firing (attempts that finished in time).
+    pub timers_cancelled: u64,
 }
 
 /// The engine-wide bounded worker pool. See the module docs.
@@ -383,6 +441,8 @@ impl StepScheduler {
                     blocked: 0,
                     peak_spawned: 0,
                     spawn_serial: 0,
+                    jobs_submitted: 0,
+                    submit_batches: 0,
                     shutdown: false,
                 }),
                 cv: Condvar::new(),
@@ -406,7 +466,8 @@ impl StepScheduler {
         self.inner.size
     }
 
-    /// Adaptive-state snapshot.
+    /// Adaptive-state snapshot. Timer-wheel fields are zero here; the
+    /// engine merges its wheel's counters in `Engine::scheduler_stats`.
     pub fn stats(&self) -> SchedulerStats {
         let st = self.inner.state.lock().unwrap();
         SchedulerStats {
@@ -415,6 +476,12 @@ impl StepScheduler {
             spawned: st.spawned,
             blocked: st.blocked,
             peak_spawned: st.peak_spawned,
+            jobs_submitted: st.jobs_submitted,
+            submit_batches: st.submit_batches,
+            timer_depth: 0,
+            timer_peak_depth: 0,
+            timers_fired: 0,
+            timers_cancelled: 0,
         }
     }
 
@@ -614,6 +681,31 @@ mod tests {
         let p = peak.load(Ordering::SeqCst);
         assert!(p <= 4, "peak {p} exceeds hard cap 3 (+1 helping owner)");
         assert!(p >= 2, "peak {p}: pool never grew past size 1");
+    }
+
+    #[test]
+    fn batched_submission_publishes_once_per_batch() {
+        let sched = StepScheduler::new(4);
+        let count = AtomicUsize::new(0);
+        sched.scope(|scope| {
+            let count = &count;
+            let jobs: Vec<_> = (0..64)
+                .map(|_| {
+                    Box::new(move || {
+                        count.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            scope.submit_batch(jobs);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 64);
+        let stats = sched.stats();
+        assert_eq!(stats.jobs_submitted, 64);
+        assert_eq!(
+            stats.submit_batches, 1,
+            "64 batched jobs must be one queue publish, saw {}",
+            stats.submit_batches
+        );
     }
 
     #[test]

@@ -1,0 +1,365 @@
+//! Hashed timing wheel for attempt deadlines.
+//!
+//! Before this module every timed attempt parked a dedicated
+//! `dflow-watchdog-*` thread in a `recv_timeout` — O(in-flight timed
+//! attempts) OS threads, untenable at 100k nodes. The wheel owns **one**
+//! lazily-spawned timer thread for the whole engine: registering a
+//! deadline hashes it into a slot by tick, and the timer thread sweeps
+//! the slots every [`TICK_MS`], firing each due entry by cancelling the
+//! attempt's [`CancelToken`]. The cancelled OP then returns through the
+//! normal attempt frame — pod/lease guards and artifact reclamation run
+//! on the worker that owns the attempt, exactly as for an un-timed
+//! attempt, so the capacity-release handshake is unchanged.
+//!
+//! Exactly-once: each entry carries a three-state atom
+//! (pending → fired | cancelled). The sweep fires only entries it CASes
+//! out of `pending`; [`TimerHandle::cancel`] reports whether it won (the
+//! deadline will never fire) or lost (the deadline already fired — the
+//! attempt has officially timed out no matter what the OP returned).
+//!
+//! The timer thread parks on a condvar while the wheel is empty, so an
+//! engine that never uses timeouts pays nothing after the first
+//! registration's spawn — and nothing at all before it.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::core::CancelToken;
+
+/// Slot count; a deadline lands in slot `(deadline_ms / TICK_MS) % SLOTS`.
+/// Slotting exists to stripe registration against the sweep — workers
+/// registering deadlines contend on one slot mutex, not the whole wheel.
+const SLOTS: usize = 256;
+
+/// Sweep cadence and firing resolution. Attempt timeouts are wall-clock
+/// policies measured in (at least) tens of milliseconds; ±2ms of firing
+/// slack is noise against OP runtime.
+const TICK_MS: u64 = 2;
+
+const PENDING: u8 = 0;
+const FIRED: u8 = 1;
+const CANCELLED: u8 = 2;
+
+struct TimerEntry {
+    /// Absolute deadline, ms since the wheel's epoch.
+    deadline_ms: u64,
+    /// PENDING → FIRED (sweep won) | CANCELLED (withdrawal won).
+    state: AtomicU8,
+    token: CancelToken,
+}
+
+struct WheelInner {
+    epoch: Instant,
+    slots: Vec<Mutex<Vec<Arc<TimerEntry>>>>,
+    /// Registered entries still pending (not fired, not cancelled).
+    depth: AtomicU64,
+    peak_depth: AtomicU64,
+    fired: AtomicU64,
+    cancelled: AtomicU64,
+    shutdown: AtomicBool,
+    /// Parking lot for the timer thread while the wheel is empty; a
+    /// registration or shutdown notifies under this lock so the wakeup
+    /// cannot be missed between the thread's depth check and its wait.
+    park: Mutex<()>,
+    cv: Condvar,
+}
+
+impl WheelInner {
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// One pass over the wheel: fire every due pending entry, drop
+    /// fired/cancelled carcasses. A full 256-slot pass per tick is ~a
+    /// hundred thousand uncontended mutex acquisitions per second —
+    /// cheaper than any cursor bookkeeping it could replace, and immune
+    /// to wrap-around bugs.
+    fn sweep(&self) {
+        let now = self.now_ms();
+        for slot in &self.slots {
+            let mut entries = slot.lock().unwrap();
+            if entries.is_empty() {
+                continue;
+            }
+            entries.retain(|e| match e.state.load(Ordering::SeqCst) {
+                PENDING if e.deadline_ms <= now => {
+                    // CAS so a cancel racing this sweep settles the entry
+                    // exactly once; on loss the canceller already did the
+                    // bookkeeping and we just drop the carcass
+                    if e.state
+                        .compare_exchange(PENDING, FIRED, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                    {
+                        e.token.cancel();
+                        self.fired.fetch_add(1, Ordering::SeqCst);
+                        self.depth.fetch_sub(1, Ordering::SeqCst);
+                    }
+                    false
+                }
+                PENDING => true,
+                _ => false,
+            });
+        }
+    }
+}
+
+fn timer_loop(inner: Arc<WheelInner>) {
+    loop {
+        if inner.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        if inner.depth.load(Ordering::SeqCst) == 0 {
+            let guard = inner.park.lock().unwrap();
+            // re-check under the park lock: `register` bumps depth and
+            // then notifies while holding it, so a bump after this check
+            // blocks until we are actually waiting
+            if inner.depth.load(Ordering::SeqCst) == 0 && !inner.shutdown.load(Ordering::SeqCst)
+            {
+                // bounded wait as a belt against any future notify bug;
+                // an empty wheel re-parks immediately
+                let _ = inner.cv.wait_timeout(guard, Duration::from_millis(50)).unwrap();
+            }
+            continue;
+        }
+        std::thread::sleep(Duration::from_millis(TICK_MS));
+        inner.sweep();
+    }
+}
+
+/// Withdrawal handle for one registered deadline.
+pub(crate) struct TimerHandle {
+    entry: Arc<TimerEntry>,
+    inner: Arc<WheelInner>,
+}
+
+impl TimerHandle {
+    /// Withdraw the deadline. Returns `true` when the deadline will never
+    /// fire (this call — or an earlier one — won the race with the
+    /// sweep); `false` when it already fired, i.e. the attempt has
+    /// officially timed out regardless of what the OP returned.
+    pub fn cancel(&self) -> bool {
+        match self.entry.state.compare_exchange(
+            PENDING,
+            CANCELLED,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        ) {
+            Ok(_) => {
+                self.inner.cancelled.fetch_add(1, Ordering::SeqCst);
+                self.inner.depth.fetch_sub(1, Ordering::SeqCst);
+                true
+            }
+            Err(FIRED) => false,
+            Err(_) => true,
+        }
+    }
+}
+
+/// Counter snapshot (merged into [`super::SchedulerStats`] by
+/// [`super::Engine::scheduler_stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub(crate) struct WheelStats {
+    pub depth: u64,
+    pub peak_depth: u64,
+    pub fired: u64,
+    pub cancelled: u64,
+}
+
+/// The engine-owned wheel. See the module docs.
+pub(crate) struct TimerWheel {
+    inner: Arc<WheelInner>,
+    /// The single timer thread, spawned on first registration.
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl TimerWheel {
+    pub fn new() -> Self {
+        TimerWheel {
+            inner: Arc::new(WheelInner {
+                epoch: Instant::now(),
+                slots: (0..SLOTS).map(|_| Mutex::new(Vec::new())).collect(),
+                depth: AtomicU64::new(0),
+                peak_depth: AtomicU64::new(0),
+                fired: AtomicU64::new(0),
+                cancelled: AtomicU64::new(0),
+                shutdown: AtomicBool::new(false),
+                park: Mutex::new(()),
+                cv: Condvar::new(),
+            }),
+            thread: Mutex::new(None),
+        }
+    }
+
+    /// Arm a deadline `after` from now that will cancel `token` when it
+    /// fires. Never blocks on the timer thread.
+    pub fn register(&self, after: Duration, token: CancelToken) -> TimerHandle {
+        let deadline_ms = self
+            .inner
+            .now_ms()
+            .saturating_add(after.as_millis().min(u64::MAX as u128) as u64);
+        let entry = Arc::new(TimerEntry {
+            deadline_ms,
+            state: AtomicU8::new(PENDING),
+            token,
+        });
+        let slot = ((deadline_ms / TICK_MS) as usize) % SLOTS;
+        self.inner.slots[slot].lock().unwrap().push(Arc::clone(&entry));
+        let d = self.inner.depth.fetch_add(1, Ordering::SeqCst) + 1;
+        self.inner.peak_depth.fetch_max(d, Ordering::SeqCst);
+        self.ensure_thread();
+        // notify under the park lock (see WheelInner::park)
+        let guard = self.inner.park.lock().unwrap();
+        self.inner.cv.notify_all();
+        drop(guard);
+        TimerHandle { entry, inner: Arc::clone(&self.inner) }
+    }
+
+    fn ensure_thread(&self) {
+        let mut t = self.thread.lock().unwrap();
+        if t.is_none() {
+            let inner = Arc::clone(&self.inner);
+            *t = Some(
+                std::thread::Builder::new()
+                    .name("dflow-timer".to_string())
+                    .spawn(move || timer_loop(inner))
+                    .expect("spawn timer wheel thread"),
+            );
+        }
+    }
+
+    pub fn stats(&self) -> WheelStats {
+        WheelStats {
+            depth: self.inner.depth.load(Ordering::SeqCst),
+            peak_depth: self.inner.peak_depth.load(Ordering::SeqCst),
+            fired: self.inner.fired.load(Ordering::SeqCst),
+            cancelled: self.inner.cancelled.load(Ordering::SeqCst),
+        }
+    }
+}
+
+impl Drop for TimerWheel {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        let guard = self.inner.park.lock().unwrap();
+        self.inner.cv.notify_all();
+        drop(guard);
+        if let Some(h) = self.thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wait_until(limit_ms: u64, mut cond: impl FnMut() -> bool) -> bool {
+        let start = Instant::now();
+        while start.elapsed() < Duration::from_millis(limit_ms) {
+            if cond() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        cond()
+    }
+
+    #[test]
+    fn ten_thousand_racing_deadlines_settle_exactly_once() {
+        const N: usize = 10_000;
+        let wheel = Arc::new(TimerWheel::new());
+        let tokens: Vec<CancelToken> = (0..N).map(|_| CancelToken::new()).collect();
+        let handles: Vec<TimerHandle> = tokens
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                // deadlines spread over ~10–50ms: late enough that
+                // registration finishes before the first fire (peak_depth
+                // reaches N), early enough that cancels genuinely race
+                // the sweep
+                wheel.register(Duration::from_millis(10 + (i % 40) as u64), t.clone())
+            })
+            .collect();
+        assert!(wheel.stats().peak_depth >= N as u64 / 2);
+        // 8 threads race the sweep to withdraw every deadline
+        let handles = Arc::new(handles);
+        let won = Arc::new(AtomicU64::new(0));
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let (handles, won) = (Arc::clone(&handles), Arc::clone(&won));
+                std::thread::spawn(move || {
+                    for i in (t..N).step_by(8) {
+                        if handles[i].cancel() {
+                            won.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        assert!(
+            wait_until(2_000, || wheel.stats().depth == 0),
+            "wheel never drained: {:?}",
+            wheel.stats()
+        );
+        let stats = wheel.stats();
+        let won = won.load(Ordering::SeqCst);
+        // every deadline settled exactly once: cancelled by a winner or
+        // fired by the sweep, never both, never neither
+        assert_eq!(stats.cancelled, won, "cancel bookkeeping drifted: {stats:?}");
+        assert_eq!(
+            stats.fired + stats.cancelled,
+            N as u64,
+            "entries settled more or less than once: {stats:?} won={won}"
+        );
+        // a won cancel means the token must never have been fired by the
+        // wheel; a fired entry's token must be cancelled
+        for (i, t) in tokens.iter().enumerate() {
+            let fired = !handles[i].cancel();
+            assert_eq!(
+                t.is_cancelled(),
+                fired,
+                "entry {i}: token cancelled={} but fired={}",
+                t.is_cancelled(),
+                fired
+            );
+        }
+    }
+
+    #[test]
+    fn parked_wheel_wakes_for_a_late_registration() {
+        let wheel = TimerWheel::new();
+        let t0 = CancelToken::new();
+        let h = wheel.register(Duration::from_millis(5), t0.clone());
+        assert!(wait_until(2_000, || t0.is_cancelled()), "first deadline never fired");
+        assert!(!h.cancel(), "cancel after firing must report fired");
+        // the wheel is now empty and its thread parked; a fresh deadline
+        // must still fire
+        std::thread::sleep(Duration::from_millis(120));
+        let t1 = CancelToken::new();
+        let _h1 = wheel.register(Duration::from_millis(5), t1.clone());
+        assert!(
+            wait_until(2_000, || t1.is_cancelled()),
+            "parked wheel never woke for a late registration"
+        );
+        let stats = wheel.stats();
+        assert_eq!(stats.fired, 2);
+        assert_eq!(stats.depth, 0);
+    }
+
+    #[test]
+    fn cancel_before_deadline_prevents_firing() {
+        let wheel = TimerWheel::new();
+        let token = CancelToken::new();
+        let h = wheel.register(Duration::from_secs(3600), token.clone());
+        assert!(h.cancel(), "cancel of a far-future deadline must win");
+        assert!(h.cancel(), "repeat cancel stays true");
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!token.is_cancelled(), "cancelled deadline must not fire");
+        let stats = wheel.stats();
+        assert_eq!((stats.fired, stats.cancelled, stats.depth), (0, 1, 0));
+    }
+}

@@ -88,6 +88,13 @@ impl Json {
         s
     }
 
+    /// Serialize compactly into an existing buffer (appends; the caller
+    /// owns clearing). Lets hot paths reuse one allocation across
+    /// serializations instead of building a fresh `String` each time.
+    pub fn write_compact(&self, out: &mut String) {
+        write_json(self, out, None, 0);
+    }
+
     /// Serialize with 2-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();

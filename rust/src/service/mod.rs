@@ -95,9 +95,10 @@ pub struct ServiceConfig {
     /// Auto-compact closed runs' journals on the maintenance tick.
     pub auto_compact: bool,
     /// How long after a run closes before it becomes a compaction
-    /// candidate — post-terminal stragglers (watchdog threads mirroring
-    /// pod releases into the journal) must drain first, or a compact
-    /// could delete the segment their cached writer is re-uploading.
+    /// candidate — post-terminal stragglers (cancelled OP attempts still
+    /// mirroring pod releases into the journal from pool workers) must
+    /// drain first, or a compact could delete the segment their cached
+    /// writer is re-uploading.
     pub compaction_grace: Duration,
     /// Placement priority class for tenants without an override. Flows
     /// into every attempt's [`crate::engine::PlaceRequest`]: a
@@ -217,7 +218,7 @@ struct SvcState {
     starting: BTreeSet<u64>,
     live: BTreeMap<u64, LiveRun>,
     /// run id → when the reaper closed it. Auto-compaction waits out a
-    /// grace period so post-terminal stragglers (watchdog threads
+    /// grace period so post-terminal stragglers (late OP attempts
     /// journaling trace mirrors through a cached segment writer) cannot
     /// race a compact that deletes the segment under them.
     recently_closed: BTreeMap<u64, Instant>,
@@ -495,7 +496,7 @@ impl SvcInner {
                 // not have its fresh appends deleted out from under it.
                 // The gate is held only across this one compact; the
                 // grace period additionally keeps post-terminal
-                // stragglers (watchdog trace mirrors through a cached
+                // stragglers (late trace mirrors through a cached
                 // segment writer) out of the window.
                 let _gate = self.compact_gate.lock().unwrap();
                 let busy = {
@@ -922,15 +923,29 @@ impl RunWatch {
     /// queued run has no stream until it starts).
     pub fn poll(&mut self) -> Result<Vec<Recorded>, String> {
         if let WatchCursor::Tail { seg, rec } = &mut self.cursor {
-            match self.journal.tail_raw(self.run_id, seg, rec)? {
-                Some(fresh) => return Ok(fresh),
-                None => {
+            match self.journal.tail_raw(self.run_id, seg, rec) {
+                Ok(Some(fresh)) => return Ok(fresh),
+                Ok(None) => {
                     // compacted stream: fall back to full replay. A watch
                     // that already delivered raw records and then sees a
                     // compaction (possible only when no live service owns
                     // the run) re-delivers the folded history as one
                     // snapshot-seeded stream.
                     self.cursor = WatchCursor::Full { delivered: 0 };
+                }
+                Err(e) => {
+                    // a compaction can land between tail_raw's listing and
+                    // its segment download: the raw segment this watch was
+                    // tailing vanishes mid-poll. A snapshot now existing
+                    // is proof that is what happened — resume from the
+                    // snapshot-seeded stream instead of surfacing a
+                    // vanished-segment error to a live watcher. Any other
+                    // failure (including being unable to list) propagates.
+                    if self.journal.has_snapshot(self.run_id).unwrap_or(false) {
+                        self.cursor = WatchCursor::Full { delivered: 0 };
+                    } else {
+                        return Err(e);
+                    }
                 }
             }
         }

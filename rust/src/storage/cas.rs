@@ -31,13 +31,19 @@
 //!   effect, so `gc`/[`CasStore::recover`] also (re)attach a `CasStore`
 //!   to a pre-existing backing store.
 //! * **Persisted refcounts.** The chunk refcount table persists at
-//!   `.casmeta/refs` (`DCR1` encoding): the first in-flight mutation
-//!   deletes it (dirty marker) and the last one re-writes it, both under
-//!   the refcount lock, so the table exists **iff** it is consistent —
-//!   a crash mid-mutation leaves no table rather than a stale one, and an
-//!   emptied store deletes the key outright. [`CasStore::attach`] adopts
-//!   the table without scanning a single manifest; the mark-sweep rebuild
-//!   remains the fallback for legacy, dirty, or torn stores.
+//!   `.casmeta/refs` (`DCR1` encoding): the first mutation after a flush
+//!   deletes it (dirty marker) and re-writes are **debounced** — the
+//!   marker is *held between flushes*, and the table is only re-persisted
+//!   every [`CasStore::flush_refs_every`] closed mutation windows, on
+//!   [`CasStore::flush_refs`], on recover/gc, and on orderly drop. All
+//!   marker/table IO runs under the refcount lock, so the table exists
+//!   **iff** it is consistent — a crash between flushes leaves no table
+//!   rather than a stale one (the next [`CasStore::attach`] falls back to
+//!   the manifest scan), and an emptied store deletes the key outright.
+//!   `attach` adopts the table without scanning a single manifest; the
+//!   mark-sweep rebuild remains the fallback for legacy, dirty, or torn
+//!   stores. The debounce is what keeps a quiescent mutation stream from
+//!   re-serializing the whole table — O(total chunks) — per operation.
 //!
 //! Concurrency: concurrent `upload`s and `copy`s (the engine's hot paths:
 //! parallel slices writing artifacts, stacking forwarding them) are safe —
@@ -80,6 +86,9 @@ const REFS_KEY: &str = ".casmeta/refs";
 const MANIFEST_MAGIC: &[u8; 4] = b"DCM1";
 /// Refcount-table magic: `DCR1 | u32 n | n × ([32]digest | u64 count)`.
 const REFS_MAGIC: &[u8; 4] = b"DCR1";
+/// Default refcount-table flush debounce (closed mutation windows per
+/// persisted re-write); see [`CasStore::flush_refs_every`].
+const DEFAULT_FLUSH_EVERY: u64 = 64;
 
 // -- content-defined chunking --------------------------------------------------
 
@@ -326,6 +335,16 @@ pub struct CasStore {
     /// A gc pass is sweeping: new refcount mutations back off transiently
     /// until it finishes (see [`CasStore::gc`]).
     gc_active: std::sync::atomic::AtomicBool,
+    /// The on-disk table is absent (dirty marker placed) and the
+    /// in-memory refcounts have advanced past it. Only mutated under the
+    /// refcount lock.
+    dirty: std::sync::atomic::AtomicBool,
+    /// Mutation windows closed (store went quiescent) since the table was
+    /// last persisted.
+    windows_since_flush: AtomicU64,
+    /// Debounce: persist the table every N closed windows. 1 =
+    /// write-through (pre-debounce behavior).
+    flush_every: u64,
     counters: Arc<CasCounters>,
 }
 
@@ -344,7 +363,26 @@ struct MutationScope<'a> {
 impl Drop for MutationScope<'_> {
     fn drop(&mut self) {
         if self.cas.mutators.fetch_sub(1, Ordering::SeqCst) == 1 {
-            self.cas.persist_refs();
+            // debounced write-behind: the store just went quiescent, but
+            // the table is only re-persisted every `flush_every` closed
+            // windows — in between, the dirty marker stays placed, so a
+            // crash still leaves no table (attach scans) rather than a
+            // stale one
+            let n = self.cas.windows_since_flush.fetch_add(1, Ordering::SeqCst) + 1;
+            if n >= self.cas.flush_every {
+                self.cas.persist_refs();
+            }
+        }
+    }
+}
+
+/// Orderly shutdown persists the debounced table so the next attach takes
+/// the fast path; a crash skips this drop and attach falls back to the
+/// manifest scan — the exists-iff-consistent invariant, by construction.
+impl Drop for CasStore {
+    fn drop(&mut self) {
+        if self.mutators.load(Ordering::SeqCst) == 0 {
+            self.flush_refs();
         }
     }
 }
@@ -357,8 +395,21 @@ impl CasStore {
             refs: Mutex::new(BTreeMap::new()),
             mutators: AtomicU64::new(0),
             gc_active: std::sync::atomic::AtomicBool::new(false),
+            dirty: std::sync::atomic::AtomicBool::new(false),
+            windows_since_flush: AtomicU64::new(0),
+            flush_every: DEFAULT_FLUSH_EVERY,
             counters: Arc::new(CasCounters::default()),
         }
+    }
+
+    /// Set the refcount-table flush debounce: persist `.casmeta/refs`
+    /// every `every` closed mutation windows instead of after each one.
+    /// `1` restores write-through. Fewer flushes mean cheaper mutations
+    /// but a wider crash window in which the next [`CasStore::attach`]
+    /// pays the manifest-scan fallback — never an inconsistent table.
+    pub fn flush_refs_every(mut self, every: u64) -> Self {
+        self.flush_every = every.max(1);
+        self
     }
 
     /// Enter a refcount-mutation window (see [`MutationScope`]). Fails —
@@ -376,9 +427,11 @@ impl CasStore {
             self.mutators.fetch_sub(1, Ordering::SeqCst);
             return Err(StorageError::Transient("cas gc in progress; retry".into()));
         }
-        if prior == 0 {
-            // mark dirty under the refs lock so the delete cannot
-            // interleave with a finishing mutator's re-persist
+        if prior == 0 && !self.dirty.load(Ordering::SeqCst) {
+            // first mutation since the last flush: mark dirty under the
+            // refs lock so the delete cannot interleave with a finishing
+            // mutator's re-persist. While the debounce holds the marker
+            // (dirty already true), later windows skip this IO entirely.
             let refs = self.refs.lock().unwrap();
             let marked = super::with_retry(5, || match self.inner.delete(REFS_KEY) {
                 Err(StorageError::NotFound(_)) => Ok(()), // already dirty/absent
@@ -392,6 +445,7 @@ impl CasStore {
                 self.mutators.fetch_sub(1, Ordering::SeqCst);
                 return Err(e);
             }
+            self.dirty.store(true, Ordering::SeqCst);
         }
         Ok(MutationScope { cas: self })
     }
@@ -446,10 +500,26 @@ impl CasStore {
             return; // a newer mutation window is open; it persists (or stays dirty)
         }
         self.counters.ref_table_writes.fetch_add(1, Ordering::Relaxed);
-        if refs.is_empty() {
-            self.inner.delete(REFS_KEY).ok();
+        let ok = if refs.is_empty() {
+            // absent IS the consistent form of an empty table
+            matches!(self.inner.delete(REFS_KEY), Ok(()) | Err(StorageError::NotFound(_)))
         } else {
-            self.inner.upload(REFS_KEY, &encode_refs(&refs)).ok();
+            self.inner.upload(REFS_KEY, &encode_refs(&refs)).is_ok()
+        };
+        if ok {
+            self.dirty.store(false, Ordering::SeqCst);
+            self.windows_since_flush.store(0, Ordering::SeqCst);
+        }
+    }
+
+    /// Persist the debounced refcount table now, if the store is dirty
+    /// and quiescent (with mutations in flight this is a no-op — the last
+    /// one to finish keeps the debounce running). Orderly shutdown calls
+    /// this through `Drop`, so only a real crash pays the scan on
+    /// re-attach.
+    pub fn flush_refs(&self) {
+        if self.dirty.load(Ordering::SeqCst) {
+            self.persist_refs();
         }
     }
 
@@ -1185,9 +1255,11 @@ mod tests {
     fn refs_table_is_dirty_marked_while_mutations_are_in_flight() {
         // the table must exist iff the store is quiescent and consistent:
         // a crash inside a mutation window leaves NO table (attach then
-        // scans), never a stale one (which could free shared chunks)
+        // scans), never a stale one (which could free shared chunks).
+        // flush_every=1 (write-through) so each quiescent close persists
+        // and the marker semantics are observable per-window.
         let mem = Arc::new(MemStorage::new());
-        let cas = CasStore::new(mem.clone());
+        let cas = CasStore::new(mem.clone()).flush_refs_every(1);
         cas.upload("a", &blob(&mut Rng::new(43), CHUNK_MAX)).unwrap();
         assert!(mem.download(REFS_KEY).is_ok(), "quiescent store persists the table");
         {
@@ -1236,6 +1308,60 @@ mod tests {
         let cas2 = CasStore::attach(mem.clone()).unwrap();
         assert_eq!(cas2.counters().ref_table_loads.load(Ordering::Relaxed), 0);
         assert_eq!(cas2.download("b").unwrap(), data);
+    }
+
+    #[test]
+    fn debounce_holds_the_marker_and_a_crash_falls_back_to_scan() {
+        let mem = Arc::new(MemStorage::new());
+        let data = blob(&mut Rng::new(47), 2 * CHUNK_MAX);
+        {
+            let cas = CasStore::new(mem.clone()).flush_refs_every(1000);
+            cas.upload("a", &data).unwrap();
+            cas.copy("a", "b").unwrap();
+            // between flushes the dirty marker is held: no adoptable
+            // table may exist while in-memory refcounts are ahead of disk
+            assert!(
+                matches!(mem.download(REFS_KEY), Err(StorageError::NotFound(_))),
+                "debounced windows must hold the marker, not re-persist per op"
+            );
+            // crash: the process dies without the orderly Drop flush
+            std::mem::forget(cas);
+        }
+        let cas = CasStore::attach(mem.clone()).unwrap();
+        assert_eq!(
+            cas.counters().ref_table_loads.load(Ordering::Relaxed),
+            0,
+            "a crash between flushes must leave no table to adopt (scan fallback)"
+        );
+        // the mark-sweep rebuild recovered exact refcounts: shared chunks
+        // stay protected across the crash
+        cas.delete("a").unwrap();
+        assert_eq!(cas.download("b").unwrap(), data);
+    }
+
+    #[test]
+    fn debounced_mutations_skip_per_op_table_rewrites() {
+        let mem = Arc::new(MemStorage::new());
+        let cas = CasStore::new(mem.clone()).flush_refs_every(8);
+        let mut rng = Rng::new(53);
+        for i in 0..16 {
+            cas.upload(&format!("k{i}"), &blob(&mut rng, CHUNK_MAX)).unwrap();
+        }
+        let writes = cas.counters().ref_table_writes.load(Ordering::Relaxed);
+        assert_eq!(
+            writes, 2,
+            "16 mutation windows at flush_every=8 must persist exactly twice"
+        );
+        // the 16th close flushed, so the on-disk table is current and the
+        // orderly drop has nothing left to write
+        assert!(mem.download(REFS_KEY).is_ok());
+        drop(cas);
+        let cas2 = CasStore::attach(mem).unwrap();
+        assert_eq!(
+            cas2.counters().ref_table_loads.load(Ordering::Relaxed),
+            1,
+            "a flushed store must re-attach via the fast path"
+        );
     }
 
     #[test]

@@ -6,13 +6,18 @@
 //!   to zero (no orphan thread keeps a pod bound);
 //! * a 2000-node DAG split across 3 placement backends (k8s-sim + HPC
 //!   partition + slot-capped local) keeps every backend's in-flight peak
-//!   within that backend's capacity.
+//!   within that backend's capacity;
+//! * 10k timed attempts share the engine's single timer-wheel thread (OS
+//!   threads stay O(pool size), every deadline settles exactly once);
+//! * a 10k-node DAG smoke (the 100k closer lives in the c1 bench) shows
+//!   successor wakeups coalescing into per-completion batches.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use dflow::bench_util::diamond_chain_workflow;
+use dflow::check;
 use dflow::cluster::{Cluster, Resources};
 use dflow::core::{
     ContainerTemplate, Dag, FnOp, OpError, ParamType, Signature, Step, StepPolicy, Steps, Value,
@@ -248,4 +253,120 @@ fn timeout_with_queued_retries_keeps_accounting_balanced() {
         std::thread::sleep(Duration::from_millis(5));
     }
     assert!(drained, "pod accounting never rebalanced: {:?}", cluster.stats());
+}
+
+/// Current OS thread count of this process (`/proc/self/status`); 0 when
+/// the proc filesystem is unavailable (non-Linux).
+fn os_threads() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("Threads:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0)
+}
+
+/// 10k timed attempts arm, cancel and drain on the engine's single
+/// timer-wheel thread: OS threads stay bounded by the pool size plus a
+/// constant (never one watchdog thread per attempt), every deadline
+/// settles exactly once, and nothing is left armed afterwards.
+#[test]
+fn ten_thousand_timed_attempts_keep_threads_bounded_by_the_pool() {
+    const N: usize = 10_000;
+    const POOL: usize = 64;
+    let op = Arc::new(FnOp::new(
+        Signature::new().out_param("v", ParamType::Int),
+        |ctx| {
+            ctx.set("v", 1i64);
+            Ok(())
+        },
+    ));
+    let mut policy = StepPolicy::default();
+    // generous: the deadlines must all be cancelled, never fire
+    policy.timeout = Some(Duration::from_secs(30));
+    let mut dag = Dag::new("main");
+    for i in 0..N {
+        dag = dag.task(Step::new(&format!("t{i}"), "op").policy(policy.clone()));
+    }
+    let wf = Workflow::new("timed-flood")
+        .container(ContainerTemplate::new("op", op))
+        .dag(dag)
+        .entrypoint("main");
+    let engine = Engine::builder().parallelism(POOL).build();
+
+    // sample the process thread count while the flood runs: the bound
+    // must hold mid-flight, not just after the pool drains
+    let base_threads = os_threads();
+    let peak_threads = Arc::new(AtomicUsize::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let sampler = {
+        let (peak, stop) = (Arc::clone(&peak_threads), Arc::clone(&stop));
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                peak.fetch_max(os_threads(), Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        })
+    };
+    let r = engine.run(&wf).unwrap();
+    stop.store(true, Ordering::Relaxed);
+    sampler.join().unwrap();
+
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert_eq!(r.run.count_phase(NodePhase::Succeeded), N);
+
+    let stats = engine.scheduler_stats();
+    assert_eq!(
+        stats.timers_cancelled,
+        N as u64,
+        "every completed attempt must disarm its deadline exactly once: {stats:?}"
+    );
+    assert_eq!(stats.timers_fired, 0, "a 30s deadline fired under a trivial OP: {stats:?}");
+    assert!(
+        stats.timer_peak_depth <= POOL as u64,
+        "armed deadlines exceeded in-flight attempts: {stats:?}"
+    );
+    let peak = peak_threads.load(Ordering::Relaxed);
+    if peak > 0 {
+        // pool workers + main + sampler + the one timer thread + slack:
+        // the thread budget must not scale with the number of timed
+        // attempts
+        assert!(
+            peak <= base_threads + POOL + 8,
+            "thread count scaled with timed attempts: \
+             peak {peak} vs baseline {base_threads} + pool {POOL}"
+        );
+    }
+    check::assert_all_drained(&engine, None, None);
+}
+
+/// Scaled-down 100k-node smoke (the full-size closer lives in the c1
+/// bench): a 10k-node diamond chain completes on 8 pool workers, and the
+/// ready-queue counters show diamond joins waking both successors in one
+/// batch instead of one queue lock per ready task.
+#[test]
+fn ten_thousand_node_dag_smoke_coalesces_successor_wakeups() {
+    let (wf, probe, nodes) = diamond_chain_workflow(10_002, 8);
+    let engine = Engine::builder().parallelism(8).build();
+    let r = engine.run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert_eq!(r.run.count_phase(NodePhase::Succeeded), nodes);
+    assert!(
+        probe.peak() <= 8,
+        "peak live workers {} exceeded parallelism 8",
+        probe.peak()
+    );
+    let stats = engine.scheduler_stats();
+    assert!(
+        stats.jobs_submitted >= nodes as u64,
+        "every task must pass through the pool: {stats:?}"
+    );
+    assert!(
+        stats.submit_batches < stats.jobs_submitted,
+        "wakeups must coalesce (fewer queue publishes than jobs): {stats:?}"
+    );
+    check::assert_all_drained(&engine, None, None);
 }

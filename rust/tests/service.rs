@@ -18,9 +18,9 @@ use dflow::core::{
 };
 use dflow::engine::{Backend, Engine, RunPhase};
 use dflow::hpc::{HpcScheduler, PartitionSpec};
-use dflow::journal::{Appender, Journal};
-use dflow::service::{ServiceConfig, WorkflowService};
-use dflow::storage::{CountingStorage, MemStorage, StorageClient};
+use dflow::journal::{Appender, Journal, JournalEvent};
+use dflow::service::{RunWatch, ServiceConfig, WorkflowService};
+use dflow::storage::{CountingStorage, MemStorage, StorageClient, StorageError};
 
 /// A 4-node run spanning all three backend kinds: three parallel pinned
 /// tasks (k8s pod, HPC partition slot, local slot) and a join.
@@ -478,4 +478,108 @@ fn unsatisfiable_selector_is_rejected_at_submit_and_never_queued() {
         .find(|r| r.run_id == id)
         .unwrap();
     assert_eq!(row.lint_warnings, 1);
+}
+
+/// Storage decorator that, once armed, compacts a run's journal the
+/// moment a raw segment download begins — deterministically reproducing
+/// the race where a compaction lands between a live watch's segment
+/// listing and its segment download.
+struct CompactOnSegmentRead {
+    inner: MemStorage,
+    trap: Mutex<Option<(Arc<Journal>, u64)>>,
+}
+
+impl StorageClient for CompactOnSegmentRead {
+    fn upload(&self, key: &str, data: &[u8]) -> Result<(), StorageError> {
+        self.inner.upload(key, data)
+    }
+
+    fn download(&self, key: &str) -> Result<Vec<u8>, StorageError> {
+        if key.contains("/seg-") {
+            // take() first: compact() re-enters this client, and the
+            // nested segment reads must pass through untrapped
+            let armed = self.trap.lock().unwrap().take();
+            if let Some((journal, run_id)) = armed {
+                journal.compact(run_id).expect("closed run must compact");
+            }
+        }
+        self.inner.download(key)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StorageError> {
+        self.inner.list(prefix)
+    }
+
+    fn copy(&self, src: &str, dst: &str) -> Result<(), StorageError> {
+        self.inner.copy(src, dst)
+    }
+
+    fn delete(&self, key: &str) -> Result<(), StorageError> {
+        self.inner.delete(key)
+    }
+}
+
+/// Regression (PR 5 follow-up): a live `watch` whose run is compacted out
+/// from under it mid-poll — after the raw-segment listing, before the
+/// segment download — must resume from the compaction snapshot instead of
+/// surfacing a vanished-segment error to the watcher.
+#[test]
+fn live_watch_straddling_a_compaction_resumes_from_the_snapshot() {
+    let storage = Arc::new(CompactOnSegmentRead {
+        inner: MemStorage::new(),
+        trap: Mutex::new(None),
+    });
+    let journal =
+        Arc::new(Journal::open(Arc::clone(&storage) as Arc<dyn StorageClient>).unwrap());
+    let engine = Engine::builder().journal(Arc::clone(&journal)).build();
+
+    let op = Arc::new(FnOp::new(
+        Signature::new().out_param("v", ParamType::Int),
+        |ctx| {
+            ctx.set("v", 1i64);
+            Ok(())
+        },
+    ));
+    let wf = Workflow::new("watched")
+        .container(ContainerTemplate::new("op", op))
+        .steps(Steps::new("main").then(Step::new("s", "op")))
+        .entrypoint("main");
+    let done = engine.run(&wf).unwrap();
+    assert!(done.succeeded(), "{:?}", done.error);
+    let run_id = done.run.id;
+
+    // a live tail delivers the raw stream through the close
+    let mut watch = RunWatch::new(Arc::clone(&journal), run_id);
+    let first = watch.poll().unwrap();
+    assert!(
+        first.iter().any(|r| matches!(r.event, JournalEvent::RunSucceeded)),
+        "raw tail must deliver through the close"
+    );
+
+    // arm the trap: the watch's next poll re-reads the open segment, and
+    // that download now compacts the run first — the segment vanishes
+    // between the listing and the read
+    *storage.trap.lock().unwrap() = Some((Arc::clone(&journal), run_id));
+    let resumed = watch
+        .poll()
+        .expect("a watch straddling a compaction must resume, not error");
+    assert!(
+        storage.trap.lock().unwrap().is_none(),
+        "trap never fired: the poll did not reach a segment download"
+    );
+    assert!(journal.has_snapshot(run_id).unwrap(), "compaction must have landed");
+    assert!(
+        matches!(resumed.first().map(|r| &r.event), Some(JournalEvent::Snapshot { .. })),
+        "fallback must re-deliver the folded stream from its snapshot"
+    );
+    assert!(
+        resumed.iter().any(|r| match &r.event {
+            JournalEvent::Snapshot { run } => run.phase == RunPhase::Succeeded,
+            _ => false,
+        }),
+        "the folded snapshot must still close the run"
+    );
+
+    // and the stream stays quiet afterwards: nothing is re-delivered twice
+    assert!(watch.poll().unwrap().is_empty(), "fallback must not re-deliver");
 }
