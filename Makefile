@@ -1,13 +1,13 @@
 # Repo CI entrypoints. `make ci` is what a gate should run.
 
-.PHONY: ci fmt-check fmt clippy build test test-placement test-storage test-journal test-service test-lint test-chaos lint-examples tsan bench bench-smoke bench-snapshot
+.PHONY: ci fmt-check fmt clippy build test test-placement test-storage test-journal test-service test-lint test-chaos test-obs lint-examples tsan bench bench-smoke bench-snapshot
 
 # `test` runs the full suite (placement + scheduler_stress + the storage
 # battery + journal recovery + the service battery + the lint battery +
 # the chaos battery included via their Cargo.toml [[test]] entries);
 # `test-storage`/`test-journal`/`test-service`/`test-lint`/`test-chaos`
 # re-run their batteries alone as explicit gates.
-ci: fmt-check clippy test test-storage test-journal test-service test-lint test-chaos lint-examples bench-smoke
+ci: fmt-check clippy test test-storage test-journal test-service test-lint test-chaos test-obs lint-examples bench-smoke
 
 fmt-check:
 	cargo fmt --check
@@ -69,6 +69,14 @@ test-chaos: build
 	cargo test -q --test chaos
 	cargo test -q --lib check::chaos::
 
+# observability battery: end-to-end span capture through a journaled
+# engine, profile/critical-path reconciliation against run wall-clock,
+# the Prometheus line-grammar validator over both exporters, and the
+# obs unit suites (histogram, span recorder, exporter, profile folder)
+test-obs: build
+	cargo test -q --test obs
+	cargo test -q --lib obs::
+
 # gate: every built-in workflow must lint clean (errors AND warnings)
 # against the demo cluster — the same check `dflow lint` users run
 lint-examples: build
@@ -95,15 +103,18 @@ bench-smoke: build
 	BENCH_SMOKE=1 cargo bench --bench c1_scalability
 	BENCH_SMOKE=1 cargo bench --bench c5_service
 	BENCH_SMOKE=1 cargo bench --bench c6_chaos
+	BENCH_SMOKE=1 cargo bench --bench c7_obs
 
 # engine-level regression snapshot: scalability (c1, -> BENCH_sched.json),
-# the service control plane (c5, -> BENCH_service.json) and the
-# chaos/failover latency bench (c6, -> BENCH_chaos.json) — each bench
-# writes its rendered rows to its JSON file for diffing
+# the service control plane (c5, -> BENCH_service.json), the
+# chaos/failover latency bench (c6, -> BENCH_chaos.json) and the
+# telemetry overhead bench (c7, -> BENCH_obs.json) — each bench writes
+# its rendered rows to its JSON file for diffing
 bench-snapshot: build
 	cargo bench --bench c1_scalability
 	cargo bench --bench c5_service
 	cargo bench --bench c6_chaos
+	cargo bench --bench c7_obs
 
 # AOT-lower the python/compile entry points to artifacts/*.hlo.txt
 # (needed by PJRT-dependent workflows/benches; see python/compile/aot.py)

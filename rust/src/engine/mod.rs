@@ -26,7 +26,7 @@ pub(crate) mod wheel;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::cluster::{Cluster, PodBinding, PodSpec};
 use crate::core::{
@@ -35,9 +35,10 @@ use crate::core::{
 };
 use crate::executor::{Executor, LocalExecutor};
 use crate::journal::{Journal, JournalEvent, JournalSink};
-use crate::metrics::EventKind;
+use crate::metrics::{EventKind, Registry};
+use crate::obs::{ClosedSpan, MetricsDoc, Phase, SpanRecorder, SpanScope};
 use crate::storage::{copy_with_retry, CasStore, MemStorage, StorageClient};
-use crate::util::Stopwatch;
+use crate::util::{epoch_ms, Stopwatch};
 
 pub use place::{
     Backend, BackendCapacity, BackendHealth, BackendStats, DeathWatch, PlaceError, PlaceRequest,
@@ -71,6 +72,12 @@ pub struct EngineConfig {
     pub trace_cap: usize,
     /// Root for OP scratch directories.
     pub workdir_root: std::path::PathBuf,
+    /// Record causal spans (`run → node → attempt` phase segments) and
+    /// journal them as `SpanClosed` events. On by default — an attempt's
+    /// span costs a handful of clock reads plus one striped-lock push;
+    /// the c7_obs bench holds the end-to-end overhead under 5%. Off, runs
+    /// record no spans and `dflow profile` has nothing to fold.
+    pub telemetry: bool,
 }
 
 impl Default for EngineConfig {
@@ -81,6 +88,7 @@ impl Default for EngineConfig {
             default_executor: "local".to_string(),
             trace_cap: 100_000,
             workdir_root: std::env::temp_dir().join("dflow-work"),
+            telemetry: true,
         }
     }
 }
@@ -109,6 +117,10 @@ pub struct Engine {
     /// Engine-wide deadline wheel: one timer thread drives every timed
     /// attempt's wall-clock limit (no thread-per-attempt watchdogs).
     pub(crate) wheel: wheel::TimerWheel,
+    /// Engine-lifetime metric aggregate: every run folds its per-run
+    /// [`Registry`] in at its terminal transition, so `export_metrics`
+    /// reports fleet totals without walking live runs.
+    pub(crate) agg: Arc<Registry>,
 }
 
 /// Builder for [`Engine`].
@@ -218,6 +230,13 @@ impl EngineBuilder {
         self
     }
 
+    /// Record causal spans on every run (see [`EngineConfig::telemetry`];
+    /// on by default — pass `false` to strip the span layer entirely).
+    pub fn telemetry(mut self, on: bool) -> Self {
+        self.config.telemetry = on;
+        self
+    }
+
     /// Finalize.
     pub fn build(self) -> Engine {
         let sched =
@@ -238,6 +257,7 @@ impl EngineBuilder {
             journal: self.journal,
             sink: self.sink,
             wheel: wheel::TimerWheel::new(),
+            agg: Arc::new(Registry::default()),
         }
     }
 }
@@ -368,8 +388,9 @@ impl Engine {
         wf: &Workflow,
         reuse: Vec<ReusedStep>,
     ) -> Result<RunResult, String> {
+        let admit_start = Instant::now();
         let warnings = self.admit(wf)?;
-        let run = self.new_run(wf, reuse, None, false, Priority::default());
+        let run = self.new_run(wf, reuse, None, false, Priority::default(), admit_start.elapsed());
         journal_lint_warnings(&run, warnings);
         self.drive(wf, run)
     }
@@ -393,14 +414,24 @@ impl Engine {
                 rec.workflow, wf.name
             ));
         }
+        let admit_start = Instant::now();
         let warnings = self.admit(wf)?;
-        let run = self.new_run(wf, rec.reusable_steps(), Some(run_id), true, Priority::default());
+        let run = self.new_run(
+            wf,
+            rec.reusable_steps(),
+            Some(run_id),
+            true,
+            Priority::default(),
+            admit_start.elapsed(),
+        );
         journal_lint_warnings(&run, warnings);
         self.drive(wf, run)
     }
 
     /// Build the shared run state for a (re)submission, journaling the
-    /// submission marker when a journal is attached.
+    /// submission marker when a journal is attached. `admit_cost` is the
+    /// measured admission-lint time, folded into the run's telemetry as
+    /// its `admission` phase (the lint ran before the run existed).
     fn new_run(
         &self,
         wf: &Workflow,
@@ -408,6 +439,7 @@ impl Engine {
         run_id: Option<u64>,
         resubmission: bool,
         priority: Priority,
+        admit_cost: Duration,
     ) -> Arc<WorkflowRun> {
         let parallelism = wf.parallelism.unwrap_or(self.config.parallelism);
         let mut run = WorkflowRun::with_journal(
@@ -419,6 +451,11 @@ impl Engine {
             run_id,
         );
         run.priority = priority;
+        if self.config.telemetry {
+            let rec = Arc::new(SpanRecorder::new());
+            rec.accumulate(Phase::Admission, admit_cost);
+            run.set_spans(rec);
+        }
         let run = Arc::new(run);
         run.journal_event(|| {
             if resubmission {
@@ -457,8 +494,16 @@ impl Engine {
         wf: Workflow,
         opts: SubmitOptions,
     ) -> Result<Submitted, String> {
+        let admit_start = Instant::now();
         let warnings = self.admit(&wf)?;
-        let run = self.new_run(&wf, opts.reuse, opts.run_id, opts.resubmission, opts.priority);
+        let run = self.new_run(
+            &wf,
+            opts.reuse,
+            opts.run_id,
+            opts.resubmission,
+            opts.priority,
+            admit_start.elapsed(),
+        );
         journal_lint_warnings(&run, warnings);
         let engine = self.clone();
         let run2 = run.clone();
@@ -478,6 +523,7 @@ impl Engine {
     }
 
     fn drive(&self, wf: &Workflow, run: Arc<WorkflowRun>) -> Result<RunResult, String> {
+        let started_ms = epoch_ms();
         run.trace.push(EventKind::WorkflowStarted, "", "");
         let exec = Exec { engine: self, wf, run: &run };
         let bindings = Bindings {
@@ -492,6 +538,9 @@ impl Engine {
             None,
             None,
         );
+        // the run-level span bundle lands BEFORE the terminal record, so a
+        // batching appender's synchronous terminal flush carries it
+        self.close_run_telemetry(&run, started_ms);
         let (outputs, error) = match result {
             Ok(o) => {
                 run.set_phase(RunPhase::Succeeded);
@@ -516,7 +565,27 @@ impl Engine {
                 (StepOutputs::default(), Some(e))
             }
         };
+        // fold the closed run's registry into the engine-lifetime
+        // aggregate (the run keeps its own copy for `dflow get`)
+        self.agg.merge_from(&run.metrics);
         Ok(RunResult { run, outputs, error })
+    }
+
+    /// Flush a closing run's run-level span bundle — admission lint plus
+    /// the aggregate journal-append / artifact-I/O accumulators — into its
+    /// recorder and journal as one empty-path `SpanClosed` event.
+    fn close_run_telemetry(&self, run: &WorkflowRun, started_ms: u64) {
+        if let Some(rec) = run.spans() {
+            let segs = rec.accum_segs(started_ms);
+            if !segs.is_empty() {
+                run.journal_event(|| JournalEvent::SpanClosed {
+                    path: String::new(),
+                    attempt: 0,
+                    segs: segs.clone(),
+                });
+                rec.push(ClosedSpan { path: String::new(), attempt: 0, segs });
+            }
+        }
     }
 
     fn executor_named(&self, name: &str) -> Result<Arc<dyn Executor>, String> {
@@ -557,7 +626,76 @@ impl Engine {
         stats.timer_peak_depth = w.peak_depth;
         stats.timers_fired = w.fired;
         stats.timers_cancelled = w.cancelled;
+        stats.timer_fire_lag = w.fire_lag;
         stats
+    }
+
+    /// Structured metrics document — the `dflow metrics` surface. Folds
+    /// the engine-lifetime aggregate registry (every run merges in at its
+    /// terminal transition), the scheduler pool + timer wheel, and the
+    /// placement layer when present. Render with
+    /// [`MetricsDoc::to_prometheus`] or [`MetricsDoc::to_json`].
+    pub fn export_metrics(&self) -> MetricsDoc {
+        let mut doc = MetricsDoc::new();
+        self.agg.export_into(&mut doc);
+        let s = self.scheduler_stats();
+        doc.gauge("dflow_sched_workers", "Live scheduler worker threads.", s.spawned as f64);
+        doc.gauge(
+            "dflow_sched_blocked_workers",
+            "Workers parked in external capacity waits.",
+            s.blocked as f64,
+        );
+        doc.gauge("dflow_sched_peak_workers", "Peak live worker count.", s.peak_spawned as f64);
+        doc.counter("dflow_sched_jobs_total", "Jobs queued on the pool.", s.jobs_submitted);
+        doc.gauge("dflow_timer_depth", "Pending timer-wheel deadlines.", s.timer_depth as f64);
+        doc.counter("dflow_timers_fired_total", "Deadlines that fired.", s.timers_fired);
+        doc.counter(
+            "dflow_timers_cancelled_total",
+            "Deadlines withdrawn before firing.",
+            s.timers_cancelled,
+        );
+        doc.summary(
+            "dflow_sched_queue_wait_seconds",
+            "Ready-queue wait, job push to worker dequeue.",
+            &[],
+            &s.queue_wait,
+        );
+        doc.summary(
+            "dflow_timer_fire_lag_seconds",
+            "Timer-wheel fire lag past the deadline.",
+            &[],
+            &s.timer_fire_lag,
+        );
+        if let Some(p) = &self.placer {
+            doc.summary(
+                "dflow_place_wait_seconds",
+                "Backend placement wait (fast-path grants included).",
+                &[],
+                &p.place_wait(),
+            );
+            for b in p.stats() {
+                let labels = [("backend", b.name.as_str())];
+                doc.gauge_labeled(
+                    "dflow_backend_inflight",
+                    "Live leases per backend.",
+                    &labels,
+                    b.inflight as f64,
+                );
+                doc.gauge_labeled(
+                    "dflow_backend_peak_inflight",
+                    "Peak live leases per backend.",
+                    &labels,
+                    b.peak_inflight as f64,
+                );
+                doc.counter_labeled(
+                    "dflow_backend_placed_total",
+                    "Attempts placed per backend.",
+                    &labels,
+                    b.placed,
+                );
+            }
+        }
+        doc
     }
 
     /// Install a fault-injection hook ([`crate::check::chaos`]) on every
@@ -1669,6 +1807,26 @@ impl<'e> Exec<'e> {
         attempt: u32,
         failed_over: &mut bool,
     ) -> Result<StepOutputs, OpError> {
+        // Causal span: collects this attempt's phase segments locally and
+        // flushes once when the frame exits — one striped-lock recorder
+        // push plus a journaled `SpanClosed`. Telemetry off, this is a
+        // no-op shell (no clock read, no allocation beyond the enum).
+        let mut span = match self.run.spans() {
+            Some(rec) => {
+                let rec = Arc::clone(rec);
+                let run = Arc::clone(self.run);
+                let span_path = path.to_string();
+                SpanScope::begin(Instant::now(), move |segs| {
+                    run.journal_event(|| JournalEvent::SpanClosed {
+                        path: span_path.clone(),
+                        attempt,
+                        segs: segs.clone(),
+                    });
+                    rec.push(ClosedSpan { path: span_path, attempt, segs });
+                })
+            }
+            None => SpanScope::disabled(),
+        };
         // Cancellable permit wait. Deliberately NOT a `blocked_scope`:
         // the semaphore is the run's own concurrency choice, so growing
         // the pool for it would cascade-spawn threads on every DAG wider
@@ -1685,6 +1843,7 @@ impl<'e> Exec<'e> {
         // has officially failed and the workflow must keep making progress
         // (seed semantics), so the permit frees when one_attempt returns
         let _sem = SemGuard { run: &**self.run };
+        span.mark(Phase::ReadyWait);
         // capacity acquisition — pod (legacy cluster) or backend lease
         // (placement layer) is the backpressure (§2.6). Both guards live
         // in this frame until the OP returns (timed attempts included —
@@ -1740,6 +1899,7 @@ impl<'e> Exec<'e> {
                             return Err(OpError::Fatal(infeasible_pod_msg(ct)));
                         }
                     }
+                    span.mark(Phase::PodBind);
                 }
                 flaked_node = pod_guard
                     .as_ref()
@@ -1793,6 +1953,7 @@ impl<'e> Exec<'e> {
                         }
                     }
                 };
+                span.mark(Phase::PlaceWait);
                 self.run.metrics.placements.inc();
                 if let Some(node) = lease.pod_node() {
                     self.run.metrics.pods_scheduled.inc();
@@ -1867,6 +2028,7 @@ impl<'e> Exec<'e> {
             None => {
                 let mut r = executor.execute(ct, &mut ctx);
                 self.run.metrics.op_exec.observe(sw.elapsed());
+                span.mark(Phase::OpExec);
                 self.failover_check(&mut r, death_watch.as_ref(), path, attempt, failed_over);
                 match r {
                     Ok(()) => Ok(StepOutputs {
@@ -1896,6 +2058,7 @@ impl<'e> Exec<'e> {
                     executor.execute(ct, &mut ctx)
                 }));
                 self.run.metrics.op_exec.observe(sw.elapsed());
+                span.mark(Phase::OpExec);
                 // the OP has stopped; withdraw the deadline. A lost
                 // withdrawal means the wheel already fired: the limit
                 // passed while the OP was still running, and the step has
@@ -1987,6 +2150,7 @@ fn pod_spec_for(path: &str, ct: &ContainerTemplate) -> PodSpec {
 /// else touches it). Best-effort: reclamation failures must not mask the
 /// step's own error. A successful reclamation is journaled and counted.
 fn reclaim_attempt_objects(storage: &dyn StorageClient, run: &WorkflowRun, path: &str, attempt: u32) {
+    let t0 = Instant::now();
     let prefix = format!("run{}/{}/a{}/", run.id, path.replace('/', "."), attempt);
     match storage.delete_prefix(&prefix) {
         Ok(0) | Err(_) => {}
@@ -1998,6 +2162,9 @@ fn reclaim_attempt_objects(storage: &dyn StorageClient, run: &WorkflowRun, path:
                 objects: n as u64,
             });
         }
+    }
+    if let Some(rec) = run.spans() {
+        rec.accumulate(Phase::ArtifactIo, t0.elapsed());
     }
 }
 

@@ -68,12 +68,13 @@
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::cluster::{Cluster, PodBinding, PodSpec, Resources, ScheduleResult};
 use crate::core::{BackendSelector, CancelToken};
 use crate::executor::{DispatcherExecutor, Executor, LocalExecutor};
 use crate::hpc::HpcScheduler;
+use crate::obs::{HistSummary, Histogram};
 use crate::util::ChaosHook;
 
 /// A backend's administrative health. Separate from *capacity*: a full
@@ -603,6 +604,10 @@ pub struct Placer {
     rr: AtomicUsize,
     /// Chaos event-boundary hook; fired once per blocking-placement poll.
     chaos: OnceLock<ChaosHook>,
+    /// Request → resolution latency of every blocking placement (fast-path
+    /// grants included, so the distribution covers uncontended placements
+    /// too, not just the queued tail).
+    place_wait: Histogram,
 }
 
 enum Acquire {
@@ -650,7 +655,13 @@ impl Placer {
                 Arc::new(b)
             })
             .collect();
-        Placer { backends, shared, rr: AtomicUsize::new(0), chaos: OnceLock::new() }
+        Placer {
+            backends,
+            shared,
+            rr: AtomicUsize::new(0),
+            chaos: OnceLock::new(),
+            place_wait: Histogram::default(),
+        }
     }
 
     /// Install the chaos event-boundary hook (once; later calls ignored).
@@ -676,6 +687,11 @@ impl Placer {
     /// queued before acting on it).
     pub fn waiting(&self) -> usize {
         self.shared.lock.lock().unwrap().waiters.len()
+    }
+
+    /// Blocking-placement latency tails (request → lease/eviction/give-up).
+    pub fn place_wait(&self) -> HistSummary {
+        self.place_wait.summary()
     }
 
     /// Per-backend statistics snapshot.
@@ -826,6 +842,17 @@ impl Placer {
     /// registration it marks every queued strictly-lower-priority request
     /// contending for a shared backend as evicted.
     pub fn place_blocking_while(
+        &self,
+        req: &PlaceRequest,
+        keep_waiting: &dyn Fn() -> bool,
+    ) -> Result<Placed, PlaceError> {
+        let start = Instant::now();
+        let out = self.place_blocking_while_inner(req, keep_waiting);
+        self.place_wait.observe(start.elapsed());
+        out
+    }
+
+    fn place_blocking_while_inner(
         &self,
         req: &PlaceRequest,
         keep_waiting: &dyn Fn() -> bool,

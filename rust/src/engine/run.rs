@@ -3,8 +3,8 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 use super::place::Priority;
 use super::shard::ShardedMap;
@@ -12,6 +12,7 @@ use crate::core::{ArtifactRef, CancelToken, Value};
 use crate::journal::{JournalEvent, JournalSink};
 use crate::jsonx::Json;
 use crate::metrics::{Event, EventKind, Registry, Trace};
+use crate::obs::{Phase, SpanRecorder};
 use crate::util::epoch_ms;
 
 /// Argo-style node phase.
@@ -243,6 +244,9 @@ pub struct WorkflowRun {
     /// Placement priority class of this run's attempts (set once at
     /// submission, before the run is shared — see `Engine::new_run`).
     pub(crate) priority: Priority,
+    /// Causal-span recorder, attached by `Engine::new_run` when telemetry
+    /// is enabled (`None` ⇒ the span layer costs nothing on this run).
+    spans: OnceLock<Arc<SpanRecorder>>,
 }
 
 impl WorkflowRun {
@@ -322,7 +326,19 @@ impl WorkflowRun {
             live_tokens: ShardedMap::new(),
             token_serial: AtomicU64::new(0),
             priority: Priority::default(),
+            spans: OnceLock::new(),
         }
+    }
+
+    /// Attach a span recorder (telemetry enabled). Set once by
+    /// `Engine::new_run` before the run is shared; later calls are no-ops.
+    pub(crate) fn set_spans(&self, rec: Arc<SpanRecorder>) {
+        let _ = self.spans.set(rec);
+    }
+
+    /// The run's causal-span recorder, when telemetry is enabled.
+    pub fn spans(&self) -> Option<&Arc<SpanRecorder>> {
+        self.spans.get()
     }
 
     /// The run's placement priority class.
@@ -382,8 +398,14 @@ impl WorkflowRun {
     /// observability write.
     pub(crate) fn journal_event(&self, make: impl FnOnce() -> JournalEvent) {
         if let Some(j) = &self.journal {
+            let t0 = Instant::now();
             if j.append(self.id, &make()).is_err() {
                 self.metrics.journal_errors.inc();
+            }
+            let dt = t0.elapsed();
+            self.metrics.journal_append.observe(dt);
+            if let Some(rec) = self.spans.get() {
+                rec.accumulate(Phase::JournalAppend, dt);
             }
         }
     }

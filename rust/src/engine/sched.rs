@@ -73,7 +73,9 @@ use std::marker::PhantomData;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
+use std::time::Instant;
 
+use crate::obs::{HistSummary, Histogram};
 use crate::util::ChaosHook;
 
 #[allow(unused_imports)] // doc links
@@ -92,6 +94,9 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 struct QueuedJob {
     run: Job,
     batch: Arc<Batch>,
+    /// When the job entered the queue — one clock read per submitted
+    /// batch, shared by every job in it; feeds the queue-wait histogram.
+    queued_at: Instant,
 }
 
 /// Completion state of one scope's submissions.
@@ -137,13 +142,12 @@ struct PoolInner {
     /// Fault-injection hook ([`crate::check::chaos`]): fired once per
     /// dequeued job, before it runs — an event boundary chaos plans count.
     chaos: OnceLock<ChaosHook>,
+    /// Ready-queue wait: job push → worker dequeue. One `elapsed()` + one
+    /// histogram observation per job; surfaced via [`SchedulerStats`].
+    queue_wait: Histogram,
 }
 
 impl PoolInner {
-    fn push(inner: &Arc<PoolInner>, job: QueuedJob) {
-        Self::push_batch(inner, vec![job]);
-    }
-
     /// Publish a whole batch of jobs under ONE state-lock acquisition and
     /// ONE condvar broadcast — the fan-out completion path's per-edge
     /// lock/notify churn collapsed into a single wakeup.
@@ -226,7 +230,8 @@ impl PoolInner {
     /// Execute one job and publish its completion. Panics are caught so a
     /// worker survives a panicking task; the batch re-raises in `scope`.
     fn run_job(&self, job: QueuedJob) {
-        let QueuedJob { run, batch } = job;
+        let QueuedJob { run, batch, queued_at } = job;
+        self.queue_wait.observe(queued_at.elapsed());
         if let Some(h) = self.chaos.get() {
             h("sched.job");
         }
@@ -288,6 +293,7 @@ impl<'env> ScopeHandle<'env> {
             return;
         }
         self.batch.pending.fetch_add(fs.len(), Ordering::SeqCst);
+        let queued_at = Instant::now();
         let jobs: Vec<QueuedJob> = fs
             .into_iter()
             .map(|boxed| {
@@ -297,7 +303,7 @@ impl<'env> ScopeHandle<'env> {
                 let job: Job = unsafe {
                     std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(boxed)
                 };
-                QueuedJob { run: job, batch: Arc::clone(&self.batch) }
+                QueuedJob { run: job, batch: Arc::clone(&self.batch), queued_at }
             })
             .collect();
         PoolInner::push_batch(&self.pool, jobs);
@@ -413,6 +419,11 @@ pub struct SchedulerStats {
     pub timers_fired: u64,
     /// Deadlines withdrawn before firing (attempts that finished in time).
     pub timers_cancelled: u64,
+    /// Ready-queue wait (job push → worker dequeue) latency tails.
+    pub queue_wait: HistSummary,
+    /// Timer-wheel fire lag (deadline → actual sweep) tails; filled by
+    /// [`super::Engine::scheduler_stats`], zero on a bare pool.
+    pub timer_fire_lag: HistSummary,
 }
 
 /// The engine-wide bounded worker pool. See the module docs.
@@ -450,6 +461,7 @@ impl StepScheduler {
                 hard_cap: hard_cap.max(size),
                 handles: Mutex::new(Vec::new()),
                 chaos: OnceLock::new(),
+                queue_wait: Histogram::default(),
             }),
         }
     }
@@ -482,6 +494,8 @@ impl StepScheduler {
             timer_peak_depth: 0,
             timers_fired: 0,
             timers_cancelled: 0,
+            queue_wait: self.inner.queue_wait.summary(),
+            timer_fire_lag: HistSummary::default(),
         }
     }
 
@@ -706,6 +720,18 @@ mod tests {
             "64 batched jobs must be one queue publish, saw {}",
             stats.submit_batches
         );
+    }
+
+    #[test]
+    fn queue_wait_histogram_counts_every_job() {
+        let sched = StepScheduler::new(2);
+        sched.scope(|scope| {
+            for _ in 0..16 {
+                scope.submit(|| {});
+            }
+        });
+        let stats = sched.stats();
+        assert_eq!(stats.queue_wait.count, 16, "every dequeued job observes its wait");
     }
 
     #[test]

@@ -26,6 +26,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::core::CancelToken;
+use crate::obs::{HistSummary, Histogram};
 
 /// Slot count; a deadline lands in slot `(deadline_ms / TICK_MS) % SLOTS`.
 /// Slotting exists to stripe registration against the sweep — workers
@@ -58,6 +59,10 @@ struct WheelInner {
     fired: AtomicU64,
     cancelled: AtomicU64,
     shutdown: AtomicBool,
+    /// Deadline → actual-fire lag. The sweep runs on a [`TICK_MS`] cadence,
+    /// so lag should sit under ~2 ticks; a fat tail here means the timer
+    /// thread is being starved (or the host is overloaded).
+    fire_lag: Histogram,
     /// Parking lot for the timer thread while the wheel is empty; a
     /// registration or shutdown notifies under this lock so the wakeup
     /// cannot be missed between the thread's depth check and its wait.
@@ -92,6 +97,7 @@ impl WheelInner {
                         .is_ok()
                     {
                         e.token.cancel();
+                        self.fire_lag.observe_ns((now - e.deadline_ms).saturating_mul(1_000_000));
                         self.fired.fetch_add(1, Ordering::SeqCst);
                         self.depth.fetch_sub(1, Ordering::SeqCst);
                     }
@@ -164,6 +170,8 @@ pub(crate) struct WheelStats {
     pub peak_depth: u64,
     pub fired: u64,
     pub cancelled: u64,
+    /// Deadline → actual-fire lag tails.
+    pub fire_lag: HistSummary,
 }
 
 /// The engine-owned wheel. See the module docs.
@@ -184,6 +192,7 @@ impl TimerWheel {
                 fired: AtomicU64::new(0),
                 cancelled: AtomicU64::new(0),
                 shutdown: AtomicBool::new(false),
+                fire_lag: Histogram::default(),
                 park: Mutex::new(()),
                 cv: Condvar::new(),
             }),
@@ -234,6 +243,7 @@ impl TimerWheel {
             peak_depth: self.inner.peak_depth.load(Ordering::SeqCst),
             fired: self.inner.fired.load(Ordering::SeqCst),
             cancelled: self.inner.cancelled.load(Ordering::SeqCst),
+            fire_lag: self.inner.fire_lag.summary(),
         }
     }
 }
@@ -348,6 +358,7 @@ mod tests {
         let stats = wheel.stats();
         assert_eq!(stats.fired, 2);
         assert_eq!(stats.depth, 0);
+        assert_eq!(stats.fire_lag.count, 2, "every fire observes its lag");
     }
 
     #[test]

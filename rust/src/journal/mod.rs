@@ -69,6 +69,7 @@ use std::time::Duration;
 
 use crate::engine::{NodePhase, ReusedStep, RunPhase, StepOutputs};
 use crate::jsonx::Json;
+use crate::obs::{ClosedSpan, Phase, RunProfile, SpanSeg};
 use crate::storage::{validate_key, with_retry, StorageClient};
 use crate::util::{crc32, epoch_ms};
 
@@ -205,6 +206,13 @@ pub enum JournalEvent {
     NodeFailedOver { path: String, backend: String, attempt: u32, message: String },
     /// The engine reclaimed a failed attempt's artifact namespace.
     ArtifactsReclaimed { path: String, prefix: String, objects: u64 },
+    /// A closed telemetry span bundle: the phase segments of one node
+    /// attempt, or of the run itself (`path` empty — the run-level
+    /// admission span and the folded journal-append / artifact-I/O
+    /// accumulators). Compact on the wire: each segment encodes as a
+    /// `[phase, start_ms, dur_us]` triple. `dflow profile` folds these
+    /// into per-step phase breakdowns and the run's critical path.
+    SpanClosed { path: String, attempt: u32, segs: Vec<SpanSeg> },
     /// A `metrics::Trace` event mirrored into the journal (capacity
     /// events the typed variants above do not model). `seq` is the trace
     /// ring's in-lock sequence number: the sink fires outside that lock,
@@ -295,6 +303,7 @@ impl JournalEvent {
             JournalEvent::NodeEvicted { .. } => "NodeEvicted",
             JournalEvent::NodeFailedOver { .. } => "NodeFailedOver",
             JournalEvent::ArtifactsReclaimed { .. } => "ArtifactsReclaimed",
+            JournalEvent::SpanClosed { .. } => "SpanClosed",
             JournalEvent::TraceMirror { .. } => "TraceMirror",
             JournalEvent::Snapshot { .. } => "Snapshot",
         }
@@ -316,6 +325,8 @@ impl JournalEvent {
             | JournalEvent::NodeFailedOver { path, .. }
             | JournalEvent::ArtifactsReclaimed { path, .. } => Some(path),
             JournalEvent::TraceMirror { step, .. } => Some(step),
+            // run-level bundles carry an empty path — they concern no node
+            JournalEvent::SpanClosed { path, .. } if !path.is_empty() => Some(path),
             _ => None,
         }
     }
@@ -395,6 +406,24 @@ impl JournalEvent {
                 fields.push(("path", Json::s(path.clone())));
                 fields.push(("prefix", Json::s(prefix.clone())));
                 fields.push(("objects", Json::n(*objects as f64)));
+            }
+            JournalEvent::SpanClosed { path, attempt, segs } => {
+                fields.push(("path", Json::s(path.clone())));
+                fields.push(("attempt", Json::n(*attempt as f64)));
+                fields.push((
+                    "segs",
+                    Json::Arr(
+                        segs.iter()
+                            .map(|s| {
+                                Json::Arr(vec![
+                                    Json::s(s.phase.name()),
+                                    Json::n(s.start_ms as f64),
+                                    Json::n(s.dur_us as f64),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ));
             }
             JournalEvent::TraceMirror { seq, kind, step, detail } => {
                 fields.push(("seq", Json::n(*seq as f64)));
@@ -480,6 +509,27 @@ impl JournalEvent {
                 path: j_str(j, "path")?,
                 prefix: j_str(j, "prefix")?,
                 objects: j_u64(j, "objects")?,
+            },
+            "SpanClosed" => JournalEvent::SpanClosed {
+                path: j_str(j, "path")?,
+                attempt: j_u64(j, "attempt")? as u32,
+                segs: match j.get("segs")? {
+                    Json::Arr(items) => items
+                        .iter()
+                        .map(|t| {
+                            let t = t.as_arr()?;
+                            if t.len() != 3 {
+                                return None;
+                            }
+                            Some(SpanSeg {
+                                phase: Phase::parse(t[0].as_str()?)?,
+                                start_ms: t[1].as_i64()? as u64,
+                                dur_us: t[2].as_i64()? as u64,
+                            })
+                        })
+                        .collect::<Option<Vec<SpanSeg>>>()?,
+                    _ => return None,
+                },
             },
             "TraceMirror" => JournalEvent::TraceMirror {
                 seq: j_u64(j, "seq")?,
@@ -731,6 +781,7 @@ impl RecoveredRun {
             JournalEvent::NodeEvicted { .. }
             | JournalEvent::NodeFailedOver { .. }
             | JournalEvent::ArtifactsReclaimed { .. }
+            | JournalEvent::SpanClosed { .. }
             | JournalEvent::TraceMirror { .. } => {}
         }
     }
@@ -1239,13 +1290,30 @@ impl Journal {
     /// Fold a **closed** run's segments into a single snapshot record and
     /// delete them. Replay then seeds from the snapshot; appends after
     /// compaction (a later resubmission) land in fresh segments above it.
+    ///
+    /// Telemetry spans survive compaction: the run's `SpanClosed` records
+    /// are re-framed into the snapshot segment *after* the snapshot record
+    /// (replay ignores them — [`RecoveredRun::apply`] treats them as
+    /// informational — but [`Journal::events`] still returns them in their
+    /// original order, so `dflow profile` and node timelines keep working
+    /// on compacted runs).
     pub fn compact(&self, run_id: u64) -> Result<CompactReport, String> {
-        let rec = self.replay(run_id)?;
+        let (records, torn) = self.events(run_id)?;
+        let mut rec = RecoveredRun::empty(run_id);
+        rec.torn_tail = torn;
+        for r in &records {
+            rec.apply(&r.event);
+            rec.events += 1;
+        }
         if matches!(rec.phase, RunPhase::Running) {
             return Err(format!(
                 "run {run_id} has not closed; compact only folds terminal runs"
             ));
         }
+        let spans: Vec<&Recorded> = records
+            .iter()
+            .filter(|r| matches!(r.event, JournalEvent::SpanClosed { .. }))
+            .collect();
         let prefix = self.run_prefix(run_id);
         let keys = with_retry(STORAGE_RETRIES, || self.storage.list(&prefix))
             .map_err(|e| e.to_string())?;
@@ -1264,6 +1332,9 @@ impl Journal {
         };
         let mut buf = segment_header();
         buf.extend_from_slice(&frame_record(&recorded.encode()));
+        for span in &spans {
+            buf.extend_from_slice(&frame_record(&span.encode()));
+        }
         let snap = self.snap_key(run_id, max_idx);
         with_retry(STORAGE_RETRIES, || self.storage.upload(&snap, &buf))
             .map_err(|e| e.to_string())?;
@@ -1726,17 +1797,25 @@ impl RunRegistry {
 
     /// The run's full event history in journal order — the merged pre- and
     /// post-crash record when the run was resubmitted. With `path`, only
-    /// events concerning that node.
+    /// events concerning that node; a path no journaled event mentions is
+    /// an error (a typo'd node path must not read as "no events yet").
     pub fn node_timeline(
         &self,
         run_id: u64,
         path: Option<&str>,
     ) -> Result<Vec<Recorded>, String> {
         let (records, _) = self.journal.events(run_id)?;
-        Ok(match path {
-            None => records,
-            Some(p) => records.into_iter().filter(|r| r.event.path() == Some(p)).collect(),
-        })
+        match path {
+            None => Ok(records),
+            Some(p) => {
+                let filtered: Vec<Recorded> =
+                    records.into_iter().filter(|r| r.event.path() == Some(p)).collect();
+                if filtered.is_empty() {
+                    return Err(format!("run {run_id} has no events for node path '{p}'"));
+                }
+                Ok(filtered)
+            }
+        }
     }
 
     /// [`RunRegistry::list_runs`] as a JSON array.
@@ -1747,6 +1826,61 @@ impl RunRegistry {
     /// [`RunRegistry::node_timeline`] as a JSON array.
     pub fn timeline_json(&self, run_id: u64, path: Option<&str>) -> Result<Json, String> {
         Ok(Json::Arr(self.node_timeline(run_id, path)?.iter().map(Recorded::to_json).collect()))
+    }
+
+    /// Fold the run's journaled `SpanClosed` bundles into a
+    /// [`RunProfile`] — the cross-process backing of `dflow profile`.
+    ///
+    /// The wall clock is taken from the journal itself (first non-snapshot
+    /// record → last non-snapshot record); on a compacted run, where only
+    /// the snapshot and the carried span records remain, the span records'
+    /// own timestamps still bound the run, so the profile stays accurate.
+    pub fn profile(&self, run_id: u64) -> Result<RunProfile, String> {
+        let (records, _) = self.journal.events(run_id)?;
+        let mut workflow = String::new();
+        let mut spans: Vec<ClosedSpan> = Vec::new();
+        let mut first_ms = u64::MAX;
+        let mut last_ms = 0u64;
+        for r in &records {
+            match &r.event {
+                JournalEvent::SpanClosed { path, attempt, segs } => {
+                    // span segments carry original wall anchors, so they
+                    // bound the run even after compaction re-stamps at_ms
+                    for s in segs {
+                        first_ms = first_ms.min(s.start_ms);
+                        last_ms = last_ms.max(s.start_ms + s.dur_us.div_ceil(1_000));
+                    }
+                    spans.push(ClosedSpan {
+                        path: path.clone(),
+                        attempt: *attempt,
+                        segs: segs.clone(),
+                    });
+                }
+                JournalEvent::Snapshot { run } => {
+                    if workflow.is_empty() {
+                        workflow = run.workflow.clone();
+                    }
+                    // at_ms is the compaction time, not run time: skip
+                }
+                ev => {
+                    if let JournalEvent::RunSubmitted { workflow: w }
+                    | JournalEvent::RunResubmitted { workflow: w } = ev
+                    {
+                        workflow = w.clone();
+                    }
+                    first_ms = first_ms.min(r.at_ms);
+                    last_ms = last_ms.max(r.at_ms);
+                }
+            }
+        }
+        if spans.is_empty() {
+            return Err(format!(
+                "run {run_id} journaled no telemetry spans (was the engine built \
+                 with telemetry disabled?)"
+            ));
+        }
+        let first_ms = first_ms.min(last_ms);
+        Ok(RunProfile::build(run_id, &workflow, (first_ms, last_ms), &spans))
     }
 }
 
@@ -1801,6 +1935,19 @@ mod tests {
                 path: "main/b".into(),
                 prefix: "run1/main.b/a0/".into(),
                 objects: 2,
+            },
+            JournalEvent::SpanClosed {
+                path: "main/a".into(),
+                attempt: 1,
+                segs: vec![
+                    SpanSeg { phase: Phase::ReadyWait, start_ms: 1_000, dur_us: 250 },
+                    SpanSeg { phase: Phase::OpExec, start_ms: 1_001, dur_us: 42_000 },
+                ],
+            },
+            JournalEvent::SpanClosed {
+                path: String::new(), // run-level accumulator bundle
+                attempt: 0,
+                segs: vec![SpanSeg { phase: Phase::JournalAppend, start_ms: 1_000, dur_us: 90 }],
             },
             JournalEvent::TraceMirror {
                 seq: 17,
@@ -2021,6 +2168,104 @@ mod tests {
         assert_eq!(merged.resubmissions, 1);
         assert_eq!(merged.phase, RunPhase::Succeeded);
         assert_eq!(merged.keyed.len(), 12, "snapshot state survives under new events");
+    }
+
+    #[test]
+    fn timeline_filters_by_path_and_errors_on_unknowns() {
+        let mem = Arc::new(MemStorage::new());
+        let j = Journal::open(mem).unwrap();
+        let run_id = crate::util::next_id();
+        j.append(run_id, &JournalEvent::RunSubmitted { workflow: "w".into() }).unwrap();
+        j.append(run_id, &JournalEvent::NodeScheduled {
+            path: "main/a".into(),
+            template: "op".into(),
+        })
+        .unwrap();
+        j.append(run_id, &JournalEvent::NodeSucceeded {
+            path: "main/a".into(),
+            key: None,
+            outputs: StepOutputs::default(),
+        })
+        .unwrap();
+        j.append(
+            run_id,
+            &JournalEvent::NodeFailed { path: "main/b".into(), message: "boom".into() },
+        )
+        .unwrap();
+        j.append(run_id, &JournalEvent::RunFailed { message: "main/b: boom".into() }).unwrap();
+        let reg = RunRegistry::new(Arc::clone(&j));
+        // the path filter keeps only that node's events, in journal order
+        let a = reg.node_timeline(run_id, Some("main/a")).unwrap();
+        assert_eq!(a.len(), 2);
+        assert!(a.iter().all(|r| r.event.path() == Some("main/a")));
+        assert_eq!(a[0].event.kind(), "NodeScheduled");
+        assert_eq!(a[1].event.kind(), "NodeSucceeded");
+        // the JSON surface agrees
+        let arr = reg.timeline_json(run_id, Some("main/a")).unwrap();
+        assert_eq!(arr.as_arr().unwrap().len(), 2);
+        // a path no event mentions is an error, not an empty timeline
+        let err = reg.node_timeline(run_id, Some("main/zzz")).unwrap_err();
+        assert!(err.contains("no events for node path"), "{err}");
+        // an unknown run is an error too
+        let missing = crate::util::next_id();
+        let err = reg.timeline_json(missing, None).unwrap_err();
+        assert!(err.contains("no journal records"), "{err}");
+    }
+
+    #[test]
+    fn spans_survive_compaction_and_profiles_fold_them() {
+        let mem = Arc::new(MemStorage::new());
+        let j = Journal::open(mem).unwrap();
+        let run_id = crate::util::next_id();
+        let seg = |phase, start_ms, dur_us| SpanSeg { phase, start_ms, dur_us };
+        j.append(run_id, &JournalEvent::RunSubmitted { workflow: "w".into() }).unwrap();
+        j.append(run_id, &JournalEvent::SpanClosed {
+            path: "main/a".into(),
+            attempt: 0,
+            segs: vec![seg(Phase::OpExec, 1_000, 100_000)],
+        })
+        .unwrap();
+        j.append(run_id, &JournalEvent::SpanClosed {
+            path: "main/b".into(),
+            attempt: 0,
+            segs: vec![seg(Phase::ReadyWait, 1_100, 2_000), seg(Phase::OpExec, 1_102, 98_000)],
+        })
+        .unwrap();
+        j.append(run_id, &JournalEvent::RunSucceeded).unwrap();
+        let reg = RunRegistry::new(Arc::clone(&j));
+        let span_paths = |recs: &[Recorded]| -> Vec<String> {
+            recs.iter()
+                .filter_map(|r| match &r.event {
+                    JournalEvent::SpanClosed { path, .. } => Some(path.clone()),
+                    _ => None,
+                })
+                .collect()
+        };
+        let before = reg.node_timeline(run_id, None).unwrap();
+        let profile_before = reg.profile(run_id).unwrap();
+        j.compact(run_id).unwrap();
+        // spans are carried into the snapshot segment, original order kept
+        let after = reg.node_timeline(run_id, None).unwrap();
+        assert_eq!(span_paths(&before), span_paths(&after));
+        assert_eq!(span_paths(&after), ["main/a", "main/b"]);
+        // and the profile still folds them: same steps, same critical path
+        let p = reg.profile(run_id).unwrap();
+        assert_eq!(p.workflow, "w");
+        assert_eq!(p.steps.len(), 2);
+        let crit: Vec<&str> = p.critical.iter().map(|c| c.path.as_str()).collect();
+        assert_eq!(crit, ["main/a", "main/b"]);
+        assert_eq!(p.critical_us, profile_before.critical_us);
+    }
+
+    #[test]
+    fn profile_without_spans_is_a_clear_error() {
+        let mem = Arc::new(MemStorage::new());
+        let j = Journal::open(mem).unwrap();
+        let run_id = crate::util::next_id();
+        j.append(run_id, &JournalEvent::RunSubmitted { workflow: "w".into() }).unwrap();
+        j.append(run_id, &JournalEvent::RunSucceeded).unwrap();
+        let err = RunRegistry::new(Arc::clone(&j)).profile(run_id).unwrap_err();
+        assert!(err.contains("no telemetry spans"), "{err}");
     }
 
     #[test]

@@ -39,6 +39,10 @@
 //!   (cancel/retry/watch), and service-owned maintenance (durable cancel
 //!   markers, auto-compaction of closed runs) — the `dflow` CLI's server
 //!   side.
+//! * [`obs`] — end-to-end run telemetry: causal `run → node → attempt`
+//!   phase spans, log-linear latency histograms (p50/p90/p99/max),
+//!   Prometheus/JSON metric exporters, and derived run profiles with
+//!   critical-path reconstruction (`dflow metrics` / `profile` / `top`).
 //! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt` produced by
 //!   the python compile path and executes them on the request path.
 //! * [`science`] — the AOT compute payloads (MD, NN-potential training,
@@ -61,6 +65,7 @@ pub mod hpc;
 pub mod journal;
 pub mod jsonx;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod science;
 pub mod service;

@@ -15,6 +15,10 @@
 //! dflow cancel <run_id> [reason]        # durable cancel marker (applied by a live service)
 //! dflow retry <name> <run_id> [seed]    # resubmit: only the non-succeeded suffix re-runs
 //! dflow compact <run_id>|--all          # fold closed runs into snapshots
+//! dflow profile <run_id> [--json]       # per-phase latency breakdown + critical path
+//! dflow top [--json]                    # live fleet view over the shared store
+//! dflow metrics [name [seed]] [--json]  # Prometheus-text (or JSON) metrics export,
+//!                                       # optionally running one workflow first
 //! dflow artifacts | dflow cluster       # AOT inventory / demo topology
 //! ```
 //!
@@ -414,6 +418,119 @@ fn cmd_compact(arg: &str, store: &str) -> Result<(), String> {
     Ok(())
 }
 
+/// `dflow profile`: fold a run's journaled telemetry spans into a
+/// per-step phase breakdown plus the critical path — works on any process'
+/// runs sharing the store, live or closed, compacted or not.
+fn cmd_profile(run_id: u64, store: &str, json: bool) -> Result<(), String> {
+    let journal = open_journal(store)?;
+    let registry = RunRegistry::new(journal);
+    let profile = registry.profile(run_id)?;
+    if json {
+        println!("{}", profile.to_json().to_string_pretty());
+    } else {
+        print!("{}", profile.render_text());
+    }
+    Ok(())
+}
+
+/// `dflow top`: fleet view over the shared store — every run whose journal
+/// stream is still open, with node-phase progress and stream age.
+/// Cross-process by construction: it reads the same durable registry any
+/// live service is appending to.
+fn cmd_top(store: &str, json: bool) -> Result<(), String> {
+    let journal = open_journal(store)?;
+    let registry = RunRegistry::new(Arc::clone(&journal));
+    let all = registry.list_runs()?;
+    let live: Vec<_> = all
+        .iter()
+        .filter(|r| matches!(r.phase, dflow::engine::RunPhase::Running))
+        .collect();
+    let now = dflow::util::epoch_ms();
+    let mut rows: Vec<dflow::jsonx::Json> = Vec::new();
+    if !json {
+        if live.is_empty() {
+            println!("no live runs under '{store}' ({} journaled)", all.len());
+            return Ok(());
+        }
+        println!(
+            "{:<22} {:<18} {:>6} {:>5} {:>5} {:>8} {:>10}",
+            "RUN", "WORKFLOW", "NODES", "OK", "RUN", "FAIL", "LAST-EVENT"
+        );
+    }
+    for r in &live {
+        let rec = journal.replay(r.run_id)?;
+        let running = rec.count_phase(dflow::engine::NodePhase::Running);
+        let (records, _torn) = journal.events(r.run_id)?;
+        let last_ms = records.last().map(|x| x.at_ms).unwrap_or(now);
+        let age_ms = now.saturating_sub(last_ms);
+        if json {
+            rows.push(dflow::jsonx::Json::obj(vec![
+                ("run_id", dflow::jsonx::Json::n(r.run_id as f64)),
+                ("workflow", dflow::jsonx::Json::s(r.workflow.clone())),
+                ("nodes", dflow::jsonx::Json::n(r.nodes as f64)),
+                ("succeeded", dflow::jsonx::Json::n(r.succeeded as f64)),
+                ("running", dflow::jsonx::Json::n(running as f64)),
+                ("failed", dflow::jsonx::Json::n(r.failed as f64)),
+                ("last_event_ms_ago", dflow::jsonx::Json::n(age_ms as f64)),
+            ]));
+        } else {
+            println!(
+                "{:<22} {:<18} {:>6} {:>5} {:>5} {:>8} {:>8.1}s",
+                r.run_id,
+                r.workflow,
+                r.nodes,
+                r.succeeded,
+                running,
+                r.failed,
+                age_ms as f64 / 1e3,
+            );
+        }
+    }
+    if json {
+        println!(
+            "{}",
+            dflow::jsonx::Json::obj(vec![
+                ("live", dflow::jsonx::Json::Arr(rows)),
+                ("journaled", dflow::jsonx::Json::n(all.len() as f64)),
+            ])
+            .to_string_pretty()
+        );
+    } else {
+        println!("{} live of {} journaled run(s)", live.len(), all.len());
+    }
+    Ok(())
+}
+
+/// `dflow metrics`: the scrape surface. Starts an in-process service over
+/// the store — optionally running one workflow first so counters and
+/// latency summaries are populated — and prints the full metrics document
+/// as Prometheus text (default) or JSON (`--json`).
+fn cmd_metrics(
+    name: Option<&str>,
+    seed: i64,
+    tenant: &str,
+    store: &str,
+    json: bool,
+) -> Result<(), String> {
+    let (service, _journal) = start_service(name.unwrap_or("demo-fanout"), store)?;
+    if let Some(name) = name {
+        let wf = build(name, seed)
+            .ok_or_else(|| format!("unknown workflow '{name}' — see `dflow workflows`"))?;
+        let run_id = service.submit(tenant, wf)?;
+        eprintln!("running '{name}' as run {run_id} to populate the export...");
+        if !service.wait_idle(Duration::from_secs(600)) {
+            return Err(format!("run {run_id} did not finish within 600s"));
+        }
+    }
+    let doc = service.export_metrics();
+    if json {
+        println!("{}", doc.to_json().to_string_pretty());
+    } else {
+        print!("{}", doc.to_prometheus());
+    }
+    Ok(())
+}
+
 fn cmd_artifacts() -> Result<(), String> {
     let rt = Runtime::global()
         .ok_or("artifacts/ not built — run `make artifacts` first".to_string())?;
@@ -466,6 +583,8 @@ fn main() {
     let tenant =
         take_flag_value(&mut args, "--tenant").unwrap_or_else(|| "default".to_string());
     let json = take_flag(&mut args, "--json");
+    // `--prom` is metrics' default output; accepted so scripts can be explicit
+    let _prom = take_flag(&mut args, "--prom");
     let deny_warnings = take_flag(&mut args, "--deny-warnings");
     let arg = |i: usize| args.get(i).map(String::as_str);
     let result = match arg(0) {
@@ -516,6 +635,17 @@ fn main() {
             Some(a) => cmd_compact(a, &store),
             None => Err("usage: dflow compact <run_id>|--all".to_string()),
         },
+        Some("profile") => match arg(1).map(parse_run_id) {
+            Some(Ok(id)) => cmd_profile(id, &store, json),
+            Some(Err(e)) => Err(e),
+            None => Err("usage: dflow profile <run_id> [--json]".to_string()),
+        },
+        Some("top") => cmd_top(&store, json),
+        Some("metrics") => {
+            let name = arg(1).map(str::to_string);
+            let seed = arg(2).and_then(|s| s.parse().ok()).unwrap_or(0);
+            cmd_metrics(name.as_deref(), seed, &tenant, &store, json)
+        }
         Some("artifacts") => cmd_artifacts(),
         Some("cluster") => {
             println!("{}", demo_cluster().to_json().to_string_pretty());
@@ -523,7 +653,7 @@ fn main() {
         }
         Some(other) => Err(format!(
             "unknown command '{other}' (try: workflows, lint, submit, list, get, timeline, \
-             watch, cancel, retry, compact, artifacts, cluster)"
+             watch, cancel, retry, compact, profile, top, metrics, artifacts, cluster)"
         )),
     };
     if let Err(e) = result {

@@ -12,6 +12,8 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::jsonx::Json;
+use crate::obs::hist::saturating_fetch_add;
+use crate::obs::{Histogram, MetricsDoc};
 use crate::util::epoch_ms;
 
 /// A monotonically increasing counter.
@@ -36,6 +38,10 @@ impl Counter {
 }
 
 /// Nanosecond-resolution duration accumulator (sum + count → mean).
+///
+/// Legacy mean/max-only surface; the registry's latency metrics are
+/// [`Histogram`]s now (tail quantiles, mergeable), but `Timer` remains for
+/// callers that only need a cheap mean.
 #[derive(Default)]
 pub struct Timer {
     total_ns: AtomicU64,
@@ -44,10 +50,13 @@ pub struct Timer {
 }
 
 impl Timer {
-    /// Record one observation.
+    /// Record one observation. The nanosecond sum saturates instead of
+    /// wrapping: a long-lived daemon (~585 years of observed nanoseconds,
+    /// but far less with double-counted or adversarial durations) pins at
+    /// `u64::MAX` rather than resetting the mean to garbage.
     pub fn observe(&self, d: Duration) {
-        let ns = d.as_nanos() as u64;
-        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        saturating_fetch_add(&self.total_ns, ns);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.max_ns.fetch_max(ns, Ordering::Relaxed);
     }
@@ -110,13 +119,16 @@ pub struct Registry {
     /// Journal appends that failed (the run keeps going, but its durable
     /// history has a gap — surfaced so operators notice).
     pub journal_errors: Counter,
-    /// Engine dispatch latency (ready → running).
-    pub dispatch: Timer,
+    /// Engine dispatch latency (ready → running) — log-linear histogram
+    /// (p50/p90/p99/max), mergeable across runs for fleet aggregation.
+    pub dispatch: Histogram,
     /// OP execution wall time.
-    pub op_exec: Timer,
+    pub op_exec: Histogram,
     /// PJRT execute calls on the request path.
     pub pjrt_calls: Counter,
-    pub pjrt_time: Timer,
+    pub pjrt_time: Histogram,
+    /// Journal append latency as observed by the run's event writes.
+    pub journal_append: Histogram,
 }
 
 impl Registry {
@@ -138,11 +150,134 @@ impl Registry {
             ("artifacts_reclaimed", Json::n(self.artifacts_reclaimed.get() as f64)),
             ("journal_errors", Json::n(self.journal_errors.get() as f64)),
             ("dispatch_mean_us", Json::n(self.dispatch.mean().as_secs_f64() * 1e6)),
+            ("dispatch_p99_us", Json::n(self.dispatch.p99().as_secs_f64() * 1e6)),
             ("dispatch_max_us", Json::n(self.dispatch.max().as_secs_f64() * 1e6)),
             ("op_exec_mean_ms", Json::n(self.op_exec.mean().as_secs_f64() * 1e3)),
+            ("op_exec_p50_ms", Json::n(self.op_exec.p50().as_secs_f64() * 1e3)),
+            ("op_exec_p99_ms", Json::n(self.op_exec.p99().as_secs_f64() * 1e3)),
             ("pjrt_calls", Json::n(self.pjrt_calls.get() as f64)),
             ("pjrt_mean_ms", Json::n(self.pjrt_time.mean().as_secs_f64() * 1e3)),
+            ("journal_append_p99_us", Json::n(self.journal_append.p99().as_secs_f64() * 1e6)),
         ])
+    }
+
+    /// Fold `other` into `self`: counters add, histograms merge
+    /// bucket-wise. The engine folds every closed run's registry into an
+    /// engine-lifetime aggregate this way, and `export_metrics` merges the
+    /// still-live runs on top.
+    pub fn merge_from(&self, other: &Registry) {
+        self.steps_succeeded.add(other.steps_succeeded.get());
+        self.steps_failed.add(other.steps_failed.get());
+        self.steps_skipped.add(other.steps_skipped.get());
+        self.steps_reused.add(other.steps_reused.get());
+        self.retries.add(other.retries.get());
+        self.timeouts.add(other.timeouts.get());
+        self.pods_scheduled.add(other.pods_scheduled.get());
+        self.pods_rejected.add(other.pods_rejected.get());
+        self.placements.add(other.placements.get());
+        self.placement_rejected.add(other.placement_rejected.get());
+        self.evictions.add(other.evictions.get());
+        self.failovers.add(other.failovers.get());
+        self.artifacts_reclaimed.add(other.artifacts_reclaimed.get());
+        self.journal_errors.add(other.journal_errors.get());
+        self.pjrt_calls.add(other.pjrt_calls.get());
+        self.dispatch.merge_from(&other.dispatch);
+        self.op_exec.merge_from(&other.op_exec);
+        self.pjrt_time.merge_from(&other.pjrt_time);
+        self.journal_append.merge_from(&other.journal_append);
+    }
+
+    /// Render every counter and latency summary into a [`MetricsDoc`]
+    /// under the `dflow_` prefix (durations in seconds — Prometheus
+    /// convention; `dflow metrics` exposes the result).
+    pub fn export_into(&self, doc: &mut MetricsDoc) {
+        doc.counter(
+            "dflow_steps_succeeded_total",
+            "Steps that reached Succeeded.",
+            self.steps_succeeded.get(),
+        );
+        doc.counter(
+            "dflow_steps_failed_total",
+            "Steps that reached Failed.",
+            self.steps_failed.get(),
+        );
+        doc.counter(
+            "dflow_steps_skipped_total",
+            "Steps skipped by when-conditions.",
+            self.steps_skipped.get(),
+        );
+        doc.counter(
+            "dflow_steps_reused_total",
+            "Steps spliced in from previous runs.",
+            self.steps_reused.get(),
+        );
+        doc.counter("dflow_retries_total", "Retry attempts consumed.", self.retries.get());
+        doc.counter("dflow_timeouts_total", "Attempts killed by timeout.", self.timeouts.get());
+        doc.counter(
+            "dflow_pods_scheduled_total",
+            "Pods bound on the cluster.",
+            self.pods_scheduled.get(),
+        );
+        doc.counter(
+            "dflow_pods_rejected_total",
+            "Pod requests rejected as infeasible.",
+            self.pods_rejected.get(),
+        );
+        doc.counter(
+            "dflow_placements_total",
+            "Attempts placed on a backend.",
+            self.placements.get(),
+        );
+        doc.counter(
+            "dflow_placements_rejected_total",
+            "Placement requests failed as infeasible.",
+            self.placement_rejected.get(),
+        );
+        doc.counter(
+            "dflow_evictions_total",
+            "Queued placements preempted by priority.",
+            self.evictions.get(),
+        );
+        doc.counter(
+            "dflow_failovers_total",
+            "Attempts re-placed after backend death.",
+            self.failovers.get(),
+        );
+        doc.counter(
+            "dflow_artifacts_reclaimed_total",
+            "Objects deleted reclaiming failed attempts.",
+            self.artifacts_reclaimed.get(),
+        );
+        doc.counter(
+            "dflow_journal_errors_total",
+            "Journal appends that failed.",
+            self.journal_errors.get(),
+        );
+        doc.counter("dflow_pjrt_calls_total", "PJRT execute calls.", self.pjrt_calls.get());
+        doc.summary(
+            "dflow_dispatch_seconds",
+            "Dispatch latency, ready to running.",
+            &[],
+            &self.dispatch.summary(),
+        );
+        doc.summary(
+            "dflow_op_exec_seconds",
+            "OP execution wall time.",
+            &[],
+            &self.op_exec.summary(),
+        );
+        doc.summary(
+            "dflow_pjrt_seconds",
+            "PJRT execute wall time.",
+            &[],
+            &self.pjrt_time.summary(),
+        );
+        doc.summary(
+            "dflow_journal_append_seconds",
+            "Journal append latency.",
+            &[],
+            &self.journal_append.summary(),
+        );
     }
 }
 
@@ -404,6 +539,39 @@ mod tests {
         assert_eq!(t.count(), 2);
         assert_eq!(t.mean(), Duration::from_millis(20));
         assert_eq!(t.max(), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn timer_sum_saturates_instead_of_wrapping() {
+        // regression: two near-u64::MAX observations used to wrap the
+        // nanosecond sum back to ~0, resetting the mean to garbage
+        let t = Timer::default();
+        let near_max = Duration::from_nanos(u64::MAX - 10);
+        t.observe(near_max);
+        t.observe(near_max);
+        assert_eq!(t.count(), 2);
+        assert_eq!(t.total(), Duration::from_nanos(u64::MAX), "sum must pin, not wrap");
+        assert_eq!(t.max(), near_max);
+        assert!(t.mean() >= Duration::from_nanos(u64::MAX / 2), "mean stays sane after pinning");
+    }
+
+    #[test]
+    fn registry_merge_folds_counters_and_histograms() {
+        let a = Registry::default();
+        let b = Registry::default();
+        a.steps_succeeded.add(2);
+        b.steps_succeeded.add(3);
+        b.retries.inc();
+        a.dispatch.observe(Duration::from_micros(100));
+        b.dispatch.observe(Duration::from_micros(300));
+        a.merge_from(&b);
+        assert_eq!(a.steps_succeeded.get(), 5);
+        assert_eq!(a.retries.get(), 1);
+        assert_eq!(a.dispatch.count(), 2);
+        assert!(a.dispatch.max() >= Duration::from_micros(300));
+        // `b` is untouched
+        assert_eq!(b.steps_succeeded.get(), 3);
+        assert_eq!(b.dispatch.count(), 1);
     }
 
     #[test]

@@ -1,0 +1,315 @@
+//! Log-linear latency histograms (HDR-style, fixed 64-bucket layout).
+//!
+//! The seed `metrics::Timer` keeps sum/count/max — enough for a mean, far
+//! too little for "what is p99 dispatch latency under the admission
+//! wave?". This histogram keeps the same lock-free write discipline (three
+//! relaxed atomics per observation) but buckets observations on a fixed
+//! log-linear grid, so tails are queryable and two histograms — e.g. the
+//! per-run registries of every live run — merge by bucket addition.
+//!
+//! ## Bucket layout (fixed; merge-compatible across processes)
+//!
+//! * bucket `0`: `< 128 ns` (sub-resolution noise floor)
+//! * buckets `1..=62`: log-linear — two sub-buckets per power of two,
+//!   covering `[2^7, 2^38)` ns, i.e. 128 ns up to ~4.6 minutes, with a
+//!   worst-case relative quantile error of 25% (half a sub-bucket)
+//! * bucket `63`: `>= 2^38` ns (overflow; quantiles report the exact max)
+//!
+//! Sums saturate instead of wrapping: a long-lived daemon accumulating
+//! nanoseconds pins at `u64::MAX` rather than resetting to a tiny total.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::jsonx::Json;
+
+/// Number of buckets; fixed so snapshots from different processes merge.
+pub const BUCKETS: usize = 64;
+
+/// First bucketed power of two: values below `2^BASE_SHIFT` ns land in
+/// bucket 0.
+const BASE_SHIFT: u32 = 7;
+
+/// Saturating add on an atomic accumulator (CAS loop; contention on a
+/// metrics sum is negligible against the observed work itself).
+pub(crate) fn saturating_fetch_add(a: &AtomicU64, n: u64) {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let next = cur.saturating_add(n);
+        match a.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// Bucket index for a nanosecond value (see the module docs for layout).
+fn bucket_of(ns: u64) -> usize {
+    if ns < (1u64 << BASE_SHIFT) {
+        return 0;
+    }
+    let octave = 63 - ns.leading_zeros();
+    let sub = ((ns >> (octave - 1)) & 1) as usize;
+    (1 + 2 * (octave - BASE_SHIFT) as usize + sub).min(BUCKETS - 1)
+}
+
+/// Exclusive upper bound of bucket `i` in nanoseconds (`u64::MAX` for the
+/// overflow bucket).
+pub fn bucket_upper_ns(i: usize) -> u64 {
+    if i == 0 {
+        return 1u64 << BASE_SHIFT;
+    }
+    if i >= BUCKETS - 1 {
+        return u64::MAX;
+    }
+    let k = (i - 1) as u32;
+    let octave = BASE_SHIFT + k / 2;
+    (1u64 << octave) + ((k % 2) as u64 + 1) * (1u64 << (octave - 1))
+}
+
+/// Mergeable log-linear latency histogram. All writes are relaxed atomics;
+/// snapshots are racy-by-design (observability, not accounting).
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    /// Saturating nanosecond sum (never wraps).
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one observation.
+    pub fn observe(&self, d: Duration) {
+        self.observe_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record one observation given in nanoseconds.
+    pub fn observe_ns(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        saturating_fetch_add(&self.sum_ns, ns);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Total accumulated time (saturating).
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed))
+    }
+
+    /// Mean observation, or zero if empty.
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
+    }
+
+    /// Maximum observation (exact, not bucketed).
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns.load(Ordering::Relaxed))
+    }
+
+    /// The `q`-quantile (`0.0 < q <= 1.0`) as a bucket-midpoint estimate,
+    /// clamped to the exact observed max. Zero if empty.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let count = self.count();
+        if count == 0 {
+            return Duration::ZERO;
+        }
+        let max = self.max_ns.load(Ordering::Relaxed);
+        let rank = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut cum = 0u64;
+        for i in 0..BUCKETS {
+            cum += self.buckets[i].load(Ordering::Relaxed);
+            if cum >= rank {
+                let lower = if i == 0 { 0 } else { bucket_upper_ns(i - 1) };
+                let upper = bucket_upper_ns(i).min(max);
+                let mid = lower + upper.saturating_sub(lower) / 2;
+                return Duration::from_nanos(mid.min(max));
+            }
+        }
+        Duration::from_nanos(max)
+    }
+
+    /// Median.
+    pub fn p50(&self) -> Duration {
+        self.quantile(0.50)
+    }
+
+    /// 90th percentile.
+    pub fn p90(&self) -> Duration {
+        self.quantile(0.90)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> Duration {
+        self.quantile(0.99)
+    }
+
+    /// Fold `other`'s observations into `self` (bucket-wise addition; the
+    /// fixed layout makes snapshots from any process merge-compatible).
+    pub fn merge_from(&self, other: &Histogram) {
+        for i in 0..BUCKETS {
+            let n = other.buckets[i].load(Ordering::Relaxed);
+            if n > 0 {
+                self.buckets[i].fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        saturating_fetch_add(&self.sum_ns, other.sum_ns.load(Ordering::Relaxed));
+        self.max_ns.fetch_max(other.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Plain-value summary (count/sum/tails) for stats structs and
+    /// exporters.
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count(),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            p50_ns: self.p50().as_nanos() as u64,
+            p90_ns: self.p90().as_nanos() as u64,
+            p99_ns: self.p99().as_nanos() as u64,
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Copyable summary of a [`Histogram`] (embedded in stats snapshots like
+/// `SchedulerStats`, and the exporters' input).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub sum_ns: u64,
+    pub p50_ns: u64,
+    pub p90_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+}
+
+impl HistSummary {
+    /// Mean in nanoseconds (zero if empty).
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum_ns / self.count
+        }
+    }
+
+    /// JSON object with microsecond-resolution fields.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::n(self.count as f64)),
+            ("mean_us", Json::n(self.mean_ns() as f64 / 1e3)),
+            ("p50_us", Json::n(self.p50_ns as f64 / 1e3)),
+            ("p90_us", Json::n(self.p90_ns as f64 / 1e3)),
+            ("p99_us", Json::n(self.p99_ns as f64 / 1e3)),
+            ("max_us", Json::n(self.max_ns as f64 / 1e3)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_are_monotonic_and_cover_u64() {
+        let mut prev = 0u64;
+        for i in 0..BUCKETS {
+            let upper = bucket_upper_ns(i);
+            assert!(upper > prev, "bucket {i}: {upper} <= {prev}");
+            prev = upper;
+        }
+        assert_eq!(bucket_upper_ns(BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn every_value_lands_in_the_bucket_that_bounds_it() {
+        for ns in [0, 1, 127, 128, 191, 192, 255, 256, 1_000, 1_000_000, u64::MAX] {
+            let i = bucket_of(ns);
+            assert!(ns < bucket_upper_ns(i), "value {ns} above bucket {i} upper");
+            if i > 0 {
+                assert!(ns >= bucket_upper_ns(i - 1), "value {ns} below bucket {i} lower");
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_track_a_known_distribution() {
+        let h = Histogram::default();
+        // 100 observations: 1..=100 ms
+        for ms in 1..=100u64 {
+            h.observe(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.max(), Duration::from_millis(100));
+        // log-linear resolution is 25% worst-case; check the estimates
+        // stay within that of the exact quantiles
+        let p50 = h.p50().as_secs_f64();
+        assert!((0.035..=0.065).contains(&p50), "p50 {p50}");
+        let p99 = h.p99().as_secs_f64();
+        assert!((0.074..=0.100).contains(&p99), "p99 {p99}");
+        // quantile never exceeds the exact max
+        assert!(h.quantile(1.0) <= h.max());
+    }
+
+    #[test]
+    fn merge_is_bucket_addition() {
+        let (a, b) = (Histogram::default(), Histogram::default());
+        for _ in 0..10 {
+            a.observe(Duration::from_micros(100));
+            b.observe(Duration::from_millis(10));
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), 20);
+        assert_eq!(a.max(), Duration::from_millis(10));
+        assert!(a.p99() >= Duration::from_millis(5), "merged tail lost: {:?}", a.p99());
+        assert!(a.p50() <= Duration::from_millis(1), "merged median shifted: {:?}", a.p50());
+    }
+
+    #[test]
+    fn sum_saturates_instead_of_wrapping() {
+        let h = Histogram::default();
+        h.observe_ns(u64::MAX - 10);
+        h.observe_ns(u64::MAX - 10);
+        assert_eq!(h.total(), Duration::from_nanos(u64::MAX), "sum must pin, not wrap");
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+        let s = h.summary();
+        assert_eq!(s, HistSummary::default());
+        assert_eq!(s.mean_ns(), 0);
+    }
+
+    #[test]
+    fn summary_json_has_tail_keys() {
+        let h = Histogram::default();
+        h.observe(Duration::from_millis(2));
+        let j = h.summary().to_json();
+        assert_eq!(j.get("count").unwrap().as_i64(), Some(1));
+        assert!(j.get("p99_us").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,31 @@
+//! End-to-end run telemetry (ISSUE 9 tentpole).
+//!
+//! Three layers, threaded through the whole stack:
+//!
+//! * [`hist`] — log-linear latency histograms (fixed 64-bucket layout,
+//!   mergeable, p50/p90/p99/max) that replace the sum/count `Timer`
+//!   in `metrics::Registry` and back every latency surface in
+//!   `SchedulerStats` and `ServiceMetrics`;
+//! * [`span`] — causal `run → node → attempt` phase spans (admission,
+//!   ready-queue wait, placement wait, pod bind, OP execution, artifact
+//!   I/O, journal append), collected locally per attempt and flushed
+//!   once per bundle into a lock-striped per-run recorder, mirrored to
+//!   the journal as compact `SpanClosed` events;
+//! * [`export`] / [`profile`] — a Prometheus text-format + JSON metrics
+//!   document (`Engine::export_metrics`, `WorkflowService::
+//!   export_metrics`, `dflow metrics`) and derived run profiles with
+//!   critical-path reconstruction (`dflow profile`, `dflow top`).
+//!
+//! Telemetry is on by default and costs ≤5% wall-clock on the 10k-node
+//! DAG bench (`benches/c7_obs.rs` asserts it); `EngineConfig::telemetry
+//! = false` turns the span layer off entirely.
+
+pub mod export;
+pub mod hist;
+pub mod profile;
+pub mod span;
+
+pub use export::{Family, MetricKind, MetricsDoc, Sample};
+pub use hist::{bucket_upper_ns, HistSummary, Histogram, BUCKETS};
+pub use profile::{CritStep, PhaseTotal, RunProfile, StepProfile};
+pub use span::{ClosedSpan, Phase, SpanRecorder, SpanScope, SpanSeg, DEFAULT_SPAN_CAP, PHASES};

@@ -1,0 +1,411 @@
+//! Derived run profiles: fold journaled `SpanClosed` bundles into a
+//! per-step phase breakdown and the run's critical path.
+//!
+//! The critical path is reconstructed from span intervals alone (no DAG
+//! required, so it works on any journaled run, cross-process): starting
+//! from the latest-ending node span, repeatedly chain to the predecessor
+//! whose interval ends latest at-or-before the current span begins. The
+//! chained durations sum to the run's journaled wall-clock (within
+//! rounding + untracked engine overhead) — `dflow profile` asserts this
+//! reconciliation in the e2e battery.
+
+use std::collections::BTreeMap;
+
+use crate::jsonx::Json;
+
+use super::span::{ClosedSpan, Phase, PHASES};
+
+/// Aggregate time one phase consumed (per step, or run-wide).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseTotal {
+    pub phase: Phase,
+    pub count: u64,
+    pub total_us: u64,
+    pub max_us: u64,
+}
+
+/// Per-step phase breakdown across all of its attempts.
+#[derive(Debug, Clone)]
+pub struct StepProfile {
+    pub path: String,
+    /// Attempts observed (highest attempt index + 1).
+    pub attempts: u32,
+    pub start_ms: u64,
+    pub end_ms: u64,
+    pub phases: Vec<PhaseTotal>,
+    /// Sum of every measured segment of this step, µs.
+    pub total_us: u64,
+}
+
+/// One link of the critical path, in time order.
+#[derive(Debug, Clone)]
+pub struct CritStep {
+    pub path: String,
+    pub attempt: u32,
+    pub start_ms: u64,
+    pub end_ms: u64,
+    pub dur_us: u64,
+}
+
+/// A run's folded telemetry profile.
+#[derive(Debug, Clone)]
+pub struct RunProfile {
+    pub run_id: u64,
+    pub workflow: String,
+    /// Journaled wall-clock: first record → terminal record, ms.
+    pub wall_ms: u64,
+    /// Run-wide phase totals (node spans + run-level bundles).
+    pub phases: Vec<PhaseTotal>,
+    /// Per-step breakdowns, hottest (largest `total_us`) first.
+    pub steps: Vec<StepProfile>,
+    /// The critical path, earliest link first.
+    pub critical: Vec<CritStep>,
+    /// Sum of the critical path links' measured durations, µs.
+    pub critical_us: u64,
+}
+
+/// Scratch per-(path, attempt) interval used by the chain reconstruction.
+struct Interval {
+    path: String,
+    attempt: u32,
+    start_ms: u64,
+    end_ms: u64,
+    dur_us: u64,
+}
+
+impl RunProfile {
+    /// Fold closed span bundles into a profile. `wall` is the journaled
+    /// (start, end) of the run in epoch ms.
+    pub fn build(
+        run_id: u64,
+        workflow: &str,
+        wall: (u64, u64),
+        spans: &[ClosedSpan],
+    ) -> RunProfile {
+        let mut phase_tot = [(0u64, 0u64, 0u64); PHASES]; // count, total, max
+        let mut steps: BTreeMap<String, StepProfile> = BTreeMap::new();
+        let mut intervals: Vec<Interval> = Vec::new();
+
+        for span in spans {
+            let mut span_start = u64::MAX;
+            let mut span_end = 0u64;
+            let mut span_dur = 0u64;
+            for seg in &span.segs {
+                let t = &mut phase_tot[seg.phase as usize];
+                t.0 += 1;
+                t.1 += seg.dur_us;
+                t.2 = t.2.max(seg.dur_us);
+                span_start = span_start.min(seg.start_ms);
+                span_end = span_end.max(seg.start_ms + seg.dur_us.div_ceil(1_000));
+                span_dur += seg.dur_us;
+            }
+            if span.path.is_empty() || span.segs.is_empty() {
+                continue; // run-level bundle: counted in phase totals only
+            }
+            let step = steps.entry(span.path.clone()).or_insert_with(|| StepProfile {
+                path: span.path.clone(),
+                attempts: 0,
+                start_ms: span_start,
+                end_ms: span_end,
+                phases: Vec::new(),
+                total_us: 0,
+            });
+            step.attempts = step.attempts.max(span.attempt + 1);
+            step.start_ms = step.start_ms.min(span_start);
+            step.end_ms = step.end_ms.max(span_end);
+            step.total_us += span_dur;
+            for seg in &span.segs {
+                match step.phases.iter_mut().find(|p| p.phase == seg.phase) {
+                    Some(p) => {
+                        p.count += 1;
+                        p.total_us += seg.dur_us;
+                        p.max_us = p.max_us.max(seg.dur_us);
+                    }
+                    None => step.phases.push(PhaseTotal {
+                        phase: seg.phase,
+                        count: 1,
+                        total_us: seg.dur_us,
+                        max_us: seg.dur_us,
+                    }),
+                }
+            }
+            intervals.push(Interval {
+                path: span.path.clone(),
+                attempt: span.attempt,
+                start_ms: span_start,
+                end_ms: span_end,
+                dur_us: span_dur,
+            });
+        }
+
+        let critical = chain(&intervals);
+        let critical_us = critical.iter().map(|c| c.dur_us).sum();
+
+        let mut steps: Vec<StepProfile> = steps.into_values().collect();
+        steps.sort_by(|a, b| b.total_us.cmp(&a.total_us).then(a.path.cmp(&b.path)));
+        for s in &mut steps {
+            s.phases.sort_by(|a, b| b.total_us.cmp(&a.total_us));
+        }
+
+        let phases = Phase::ALL
+            .iter()
+            .filter_map(|&p| {
+                let (count, total_us, max_us) = phase_tot[p as usize];
+                (count > 0).then_some(PhaseTotal { phase: p, count, total_us, max_us })
+            })
+            .collect();
+
+        RunProfile {
+            run_id,
+            workflow: workflow.to_string(),
+            wall_ms: wall.1.saturating_sub(wall.0),
+            phases,
+            steps,
+            critical,
+            critical_us,
+        }
+    }
+
+    /// JSON rendering (for `dflow profile --json`).
+    pub fn to_json(&self) -> Json {
+        let phase_json = |ps: &[PhaseTotal]| {
+            Json::Arr(
+                ps.iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("phase", Json::s(p.phase.name())),
+                            ("count", Json::n(p.count as f64)),
+                            ("total_us", Json::n(p.total_us as f64)),
+                            ("max_us", Json::n(p.max_us as f64)),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            ("run_id", Json::n(self.run_id as f64)),
+            ("workflow", Json::s(self.workflow.clone())),
+            ("wall_ms", Json::n(self.wall_ms as f64)),
+            ("critical_path_us", Json::n(self.critical_us as f64)),
+            ("phases", phase_json(&self.phases)),
+            (
+                "steps",
+                Json::Arr(
+                    self.steps
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("path", Json::s(s.path.clone())),
+                                ("attempts", Json::n(s.attempts as f64)),
+                                ("start_ms", Json::n(s.start_ms as f64)),
+                                ("end_ms", Json::n(s.end_ms as f64)),
+                                ("total_us", Json::n(s.total_us as f64)),
+                                ("phases", phase_json(&s.phases)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "critical_path",
+                Json::Arr(
+                    self.critical
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("path", Json::s(c.path.clone())),
+                                ("attempt", Json::n(c.attempt as f64)),
+                                ("start_ms", Json::n(c.start_ms as f64)),
+                                ("end_ms", Json::n(c.end_ms as f64)),
+                                ("dur_us", Json::n(c.dur_us as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable rendering (for `dflow profile`).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        let pct = if self.wall_ms > 0 {
+            self.critical_us as f64 / 10.0 / self.wall_ms as f64
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "run {} '{}' — wall {} ms, critical path {:.1} ms ({:.0}% of wall, {} steps)\n",
+            self.run_id,
+            self.workflow,
+            self.wall_ms,
+            self.critical_us as f64 / 1e3,
+            pct,
+            self.critical.len()
+        ));
+        out.push_str("\nphase totals:\n");
+        for p in &self.phases {
+            out.push_str(&format!(
+                "  {:<14} {:>10.1} ms × {:<6} (max {:.1} ms)\n",
+                p.phase.name(),
+                p.total_us as f64 / 1e3,
+                p.count,
+                p.max_us as f64 / 1e3
+            ));
+        }
+        out.push_str("\nhottest steps:\n");
+        for s in self.steps.iter().take(10) {
+            let phases = s
+                .phases
+                .iter()
+                .map(|p| format!("{} {:.1} ms", p.phase.name(), p.total_us as f64 / 1e3))
+                .collect::<Vec<_>>()
+                .join(", ");
+            out.push_str(&format!(
+                "  {:<28} {:>10.1} ms  x{}  [{}]\n",
+                s.path,
+                s.total_us as f64 / 1e3,
+                s.attempts,
+                phases
+            ));
+        }
+        if self.steps.len() > 10 {
+            out.push_str(&format!("  … {} more steps\n", self.steps.len() - 10));
+        }
+        out.push_str("\ncritical path:\n");
+        let t0 = self.critical.first().map(|c| c.start_ms).unwrap_or(0);
+        for c in &self.critical {
+            out.push_str(&format!(
+                "  +{:<8} {:<28} attempt {}  {:.1} ms\n",
+                format!("{} ms", c.start_ms.saturating_sub(t0)),
+                c.path,
+                c.attempt,
+                c.dur_us as f64 / 1e3
+            ));
+        }
+        out
+    }
+}
+
+/// Backwards interval chaining: start at the latest-ending span; the
+/// predecessor is the span with the greatest end at-or-before (±1 ms of
+/// rounding slack) the current span's start.
+fn chain(intervals: &[Interval]) -> Vec<CritStep> {
+    let mut out = Vec::new();
+    let mut cur = match intervals.iter().max_by_key(|i| (i.end_ms, i.start_ms)) {
+        Some(i) => i,
+        None => return out,
+    };
+    loop {
+        out.push(CritStep {
+            path: cur.path.clone(),
+            attempt: cur.attempt,
+            start_ms: cur.start_ms,
+            end_ms: cur.end_ms,
+            dur_us: cur.dur_us,
+        });
+        let pred = intervals
+            .iter()
+            .filter(|i| i.end_ms <= cur.start_ms + 1 && !std::ptr::eq(*i, cur))
+            .max_by_key(|i| (i.end_ms, i.start_ms));
+        match pred {
+            Some(p) => cur = p,
+            None => break,
+        }
+    }
+    out.reverse();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::SpanSeg;
+
+    fn bundle(path: &str, attempt: u32, segs: Vec<(Phase, u64, u64)>) -> ClosedSpan {
+        ClosedSpan {
+            path: path.into(),
+            attempt,
+            segs: segs
+                .into_iter()
+                .map(|(phase, start_ms, dur_us)| SpanSeg { phase, start_ms, dur_us })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn serial_chain_reconstructs_and_reconciles_with_wall() {
+        // three serial steps, 100 ms each, back to back
+        let spans = vec![
+            bundle(
+                "main/a",
+                0,
+                vec![(Phase::ReadyWait, 1_000, 2_000), (Phase::OpExec, 1_002, 98_000)],
+            ),
+            bundle(
+                "main/b",
+                0,
+                vec![(Phase::ReadyWait, 1_100, 1_000), (Phase::OpExec, 1_101, 99_000)],
+            ),
+            bundle("main/c", 0, vec![(Phase::OpExec, 1_200, 100_000)]),
+        ];
+        let p = RunProfile::build(7, "wf", (1_000, 1_300), &spans);
+        assert_eq!(p.wall_ms, 300);
+        let path: Vec<&str> = p.critical.iter().map(|c| c.path.as_str()).collect();
+        assert_eq!(path, ["main/a", "main/b", "main/c"]);
+        assert_eq!(p.critical_us, 300_000);
+        // reconciliation: critical path sums to the wall clock
+        assert!((p.critical_us as f64 / 1e3 - p.wall_ms as f64).abs() <= 30.0);
+    }
+
+    #[test]
+    fn parallel_branches_pick_the_longer_arm() {
+        let spans = vec![
+            bundle("main/seed", 0, vec![(Phase::OpExec, 0, 50_000)]),
+            bundle("main/fast", 0, vec![(Phase::OpExec, 50, 10_000)]),
+            bundle("main/slow", 0, vec![(Phase::OpExec, 50, 200_000)]),
+            bundle("main/join", 0, vec![(Phase::OpExec, 250, 30_000)]),
+        ];
+        let p = RunProfile::build(1, "wf", (0, 280), &spans);
+        let path: Vec<&str> = p.critical.iter().map(|c| c.path.as_str()).collect();
+        assert_eq!(path, ["main/seed", "main/slow", "main/join"]);
+    }
+
+    #[test]
+    fn run_level_bundles_count_in_phase_totals_but_not_the_chain() {
+        let spans = vec![
+            bundle("", 0, vec![(Phase::Admission, 0, 500), (Phase::JournalAppend, 0, 1_500)]),
+            bundle("main/a", 0, vec![(Phase::OpExec, 1, 5_000)]),
+        ];
+        let p = RunProfile::build(1, "wf", (0, 6), &spans);
+        assert_eq!(p.critical.len(), 1);
+        assert_eq!(p.critical[0].path, "main/a");
+        let adm = p.phases.iter().find(|t| t.phase == Phase::Admission).unwrap();
+        assert_eq!(adm.total_us, 500);
+        assert!(p.steps.iter().all(|s| !s.path.is_empty()));
+    }
+
+    #[test]
+    fn retries_fold_into_one_step_profile() {
+        let spans = vec![
+            bundle("main/flaky", 0, vec![(Phase::OpExec, 0, 10_000)]),
+            bundle("main/flaky", 1, vec![(Phase::OpExec, 20, 12_000)]),
+        ];
+        let p = RunProfile::build(1, "wf", (0, 40), &spans);
+        assert_eq!(p.steps.len(), 1);
+        assert_eq!(p.steps[0].attempts, 2);
+        assert_eq!(p.steps[0].total_us, 22_000);
+        let exec = &p.steps[0].phases[0];
+        assert_eq!((exec.count, exec.max_us), (2, 12_000));
+    }
+
+    #[test]
+    fn json_rendering_parses_and_keeps_key_fields() {
+        let spans = vec![bundle("main/a", 0, vec![(Phase::OpExec, 0, 1_000)])];
+        let p = RunProfile::build(9, "wf", (0, 1), &spans);
+        let j = Json::parse(&p.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.get("run_id").unwrap().as_i64(), Some(9));
+        assert_eq!(j.get("critical_path").unwrap().as_arr().unwrap().len(), 1);
+        assert!(!p.render_text().is_empty());
+    }
+}

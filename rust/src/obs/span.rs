@@ -1,0 +1,339 @@
+//! Causal run telemetry: `run → node → attempt` phase spans.
+//!
+//! Every node attempt is decomposed into phase segments — ready-queue
+//! wait, placement wait / pod bind, OP execution — and each run carries
+//! two run-level bundles: admission/lint cost and aggregate journal-append
+//! / artifact-I/O time. Segments are cheap by construction:
+//!
+//! * a [`SpanScope`] accumulates an attempt's segments **locally** (one
+//!   `Instant` read per segment boundary, zero shared state), and
+//! * flushes the whole bundle once, on drop, into the run's
+//!   [`SpanRecorder`] — a 16-way lock-striped buffer in the
+//!   `engine::shard::ShardedMap` mold, so concurrent attempts pay one
+//!   short uncontended lock per *attempt*, not per segment.
+//!
+//! The engine mirrors each flushed bundle into the journal as a compact
+//! `SpanClosed` event, so `dflow profile` reconstructs phase breakdowns
+//! and the run's critical path cross-process and after restarts.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::epoch_ms;
+
+/// Number of span-buffer stripes (mirrors `engine::shard::SHARDS`).
+const SPAN_SHARDS: usize = 16;
+
+/// Default cap on buffered span bundles per run (~a few hundred bytes
+/// each; 100k-node runs fit comfortably, runaway recursion cannot OOM the
+/// recorder — overflow is counted, not stored).
+pub const DEFAULT_SPAN_CAP: usize = 1 << 20;
+
+/// Phase of a node attempt (or run-level bundle) a segment measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Admission lint of the workflow (run-level, before any node).
+    Admission = 0,
+    /// Ready → scheduling permit acquired (the run's own parallelism cap).
+    ReadyWait = 1,
+    /// Backend placement wait on the multi-backend layer.
+    PlaceWait = 2,
+    /// Legacy cluster pod bind wait.
+    PodBind = 3,
+    /// OP execution wall time.
+    OpExec = 4,
+    /// Artifact I/O the engine performs on behalf of the attempt
+    /// (abandoned-attempt namespace reclamation).
+    ArtifactIo = 5,
+    /// Journal appends issued by the run (run-level aggregate).
+    JournalAppend = 6,
+}
+
+/// Number of phases (accumulator array size).
+pub const PHASES: usize = 7;
+
+impl Phase {
+    /// Every phase, in discriminant order.
+    pub const ALL: [Phase; PHASES] = [
+        Phase::Admission,
+        Phase::ReadyWait,
+        Phase::PlaceWait,
+        Phase::PodBind,
+        Phase::OpExec,
+        Phase::ArtifactIo,
+        Phase::JournalAppend,
+    ];
+
+    /// Stable wire/display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Admission => "admission",
+            Phase::ReadyWait => "ready_wait",
+            Phase::PlaceWait => "place_wait",
+            Phase::PodBind => "pod_bind",
+            Phase::OpExec => "op_exec",
+            Phase::ArtifactIo => "artifact_io",
+            Phase::JournalAppend => "journal_append",
+        }
+    }
+
+    /// Inverse of [`Phase::name`] (journal decode).
+    pub fn parse(s: &str) -> Option<Phase> {
+        Phase::ALL.iter().copied().find(|p| p.name() == s)
+    }
+}
+
+/// One measured phase segment: wall-clock anchor (epoch ms) + duration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanSeg {
+    pub phase: Phase,
+    pub start_ms: u64,
+    pub dur_us: u64,
+}
+
+/// A closed span bundle: every segment of one node attempt, or of a
+/// run-level scope (`path` empty, e.g. admission).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClosedSpan {
+    pub path: String,
+    pub attempt: u32,
+    pub segs: Vec<SpanSeg>,
+}
+
+/// Per-run span buffer: lock-striped bundle storage plus per-phase
+/// run-level accumulators for high-frequency costs (journal appends,
+/// artifact reclaims) that would bloat the buffer as individual bundles.
+#[derive(Default)]
+pub struct SpanRecorder {
+    shards: [Mutex<Vec<ClosedSpan>>; SPAN_SHARDS],
+    pick: AtomicUsize,
+    len: AtomicUsize,
+    dropped: AtomicU64,
+    accum_ns: [AtomicU64; PHASES],
+    accum_n: [AtomicU64; PHASES],
+}
+
+impl SpanRecorder {
+    pub fn new() -> Self {
+        SpanRecorder::default()
+    }
+
+    /// Buffer a closed bundle (one striped lock + push). Bundles beyond
+    /// [`DEFAULT_SPAN_CAP`] are counted as dropped, not stored.
+    pub fn push(&self, span: ClosedSpan) {
+        if self.len.load(Ordering::Relaxed) >= DEFAULT_SPAN_CAP {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.len.fetch_add(1, Ordering::Relaxed);
+        let shard = self.pick.fetch_add(1, Ordering::Relaxed) % SPAN_SHARDS;
+        self.shards[shard].lock().unwrap().push(span);
+    }
+
+    /// Fold one duration into a run-level phase accumulator (one atomic
+    /// add — the hot path for journal-append / artifact-I/O timing).
+    pub fn accumulate(&self, phase: Phase, d: Duration) {
+        super::hist::saturating_fetch_add(
+            &self.accum_ns[phase as usize],
+            d.as_nanos().min(u64::MAX as u128) as u64,
+        );
+        self.accum_n[phase as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Buffered bundles (unordered across shards; profiles sort).
+    pub fn snapshot(&self) -> Vec<ClosedSpan> {
+        let mut out = Vec::with_capacity(self.len.load(Ordering::Relaxed));
+        for s in &self.shards {
+            out.extend(s.lock().unwrap().iter().cloned());
+        }
+        out
+    }
+
+    /// Bundles dropped because the buffer was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Drain the run-level accumulators into segments anchored at
+    /// `base_ms` (the run's start), one per phase that saw any time.
+    pub fn accum_segs(&self, base_ms: u64) -> Vec<SpanSeg> {
+        Phase::ALL
+            .iter()
+            .filter_map(|&p| {
+                let ns = self.accum_ns[p as usize].load(Ordering::Relaxed);
+                if self.accum_n[p as usize].load(Ordering::Relaxed) == 0 {
+                    return None;
+                }
+                Some(SpanSeg { phase: p, start_ms: base_ms, dur_us: ns / 1_000 })
+            })
+            .collect()
+    }
+}
+
+/// Local segment collector for one attempt (or run-level scope). Marking
+/// a phase reads the clock once and closes the segment since the previous
+/// boundary; on drop the bundle is handed to the flush closure (recorder
+/// push + journal mirror). A disabled scope is a no-op shell: telemetry
+/// off costs two null checks per attempt.
+pub struct SpanScope {
+    inner: Option<ScopeInner>,
+}
+
+struct ScopeInner {
+    t0: Instant,
+    base_ms: u64,
+    last: Instant,
+    segs: Vec<SpanSeg>,
+    flush: Box<dyn FnOnce(Vec<SpanSeg>) + Send>,
+}
+
+impl SpanScope {
+    /// Telemetry off: every call is a no-op, no clock is ever read.
+    pub fn disabled() -> SpanScope {
+        SpanScope { inner: None }
+    }
+
+    /// Open a scope whose first segment starts at `start` (e.g. the
+    /// attempt's ready timestamp). `flush` receives the collected
+    /// segments exactly once, on drop, if any were recorded.
+    pub fn begin(start: Instant, flush: impl FnOnce(Vec<SpanSeg>) + Send + 'static) -> SpanScope {
+        let base_ms = epoch_ms().saturating_sub(start.elapsed().as_millis() as u64);
+        SpanScope {
+            inner: Some(ScopeInner {
+                t0: start,
+                base_ms,
+                last: start,
+                segs: Vec::with_capacity(4),
+                flush: Box::new(flush),
+            }),
+        }
+    }
+
+    /// Is this scope recording?
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Close the segment running since the previous boundary as `phase`
+    /// (one clock read).
+    pub fn mark(&mut self, phase: Phase) {
+        if let Some(i) = &mut self.inner {
+            let now = Instant::now();
+            let dur = now.duration_since(i.last);
+            i.segs.push(SpanSeg {
+                phase,
+                start_ms: i.base_ms + i.last.duration_since(i.t0).as_millis() as u64,
+                dur_us: dur.as_micros().min(u64::MAX as u128) as u64,
+            });
+            i.last = now;
+        }
+    }
+}
+
+impl Drop for SpanScope {
+    fn drop(&mut self) {
+        if let Some(i) = self.inner.take() {
+            if !i.segs.is_empty() {
+                (i.flush)(i.segs);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn scope_closes_contiguous_segments_and_flushes_once() {
+        let rec = Arc::new(SpanRecorder::new());
+        let r2 = Arc::clone(&rec);
+        let start = Instant::now();
+        {
+            let mut scope = SpanScope::begin(start, move |segs| {
+                r2.push(ClosedSpan { path: "main/a".into(), attempt: 0, segs });
+            });
+            std::thread::sleep(Duration::from_millis(5));
+            scope.mark(Phase::ReadyWait);
+            std::thread::sleep(Duration::from_millis(5));
+            scope.mark(Phase::OpExec);
+        }
+        let spans = rec.snapshot();
+        assert_eq!(spans.len(), 1);
+        let s = &spans[0];
+        assert_eq!((s.path.as_str(), s.attempt), ("main/a", 0));
+        assert_eq!(s.segs.len(), 2);
+        assert_eq!(s.segs[0].phase, Phase::ReadyWait);
+        assert_eq!(s.segs[1].phase, Phase::OpExec);
+        // contiguity: segment 1 starts where segment 0 ends (ms rounding)
+        let end0 = s.segs[0].start_ms + s.segs[0].dur_us / 1_000;
+        assert!(s.segs[1].start_ms.abs_diff(end0) <= 2, "segments not contiguous");
+        assert!(s.segs[0].dur_us >= 4_000, "ready wait too short: {}", s.segs[0].dur_us);
+    }
+
+    #[test]
+    fn disabled_scope_records_nothing() {
+        let mut scope = SpanScope::disabled();
+        assert!(!scope.enabled());
+        scope.mark(Phase::OpExec); // must not panic or record
+    }
+
+    #[test]
+    fn recorder_caps_and_counts_drops() {
+        let rec = SpanRecorder::new();
+        // cap is large; emulate overflow by filling len artificially is
+        // not possible from outside — push two and check accounting only
+        rec.push(ClosedSpan { path: "a".into(), attempt: 0, segs: vec![] });
+        rec.push(ClosedSpan { path: "b".into(), attempt: 1, segs: vec![] });
+        assert_eq!(rec.snapshot().len(), 2);
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn accumulators_fold_into_run_level_segments() {
+        let rec = SpanRecorder::new();
+        rec.accumulate(Phase::JournalAppend, Duration::from_micros(500));
+        rec.accumulate(Phase::JournalAppend, Duration::from_micros(500));
+        rec.accumulate(Phase::ArtifactIo, Duration::from_millis(2));
+        let segs = rec.accum_segs(1_000);
+        assert_eq!(segs.len(), 2);
+        let j = segs.iter().find(|s| s.phase == Phase::JournalAppend).unwrap();
+        assert_eq!(j.dur_us, 1_000);
+        assert_eq!(j.start_ms, 1_000);
+        let a = segs.iter().find(|s| s.phase == Phase::ArtifactIo).unwrap();
+        assert_eq!(a.dur_us, 2_000);
+    }
+
+    #[test]
+    fn phase_names_roundtrip() {
+        for p in Phase::ALL {
+            assert_eq!(Phase::parse(p.name()), Some(p));
+        }
+        assert_eq!(Phase::parse("bogus"), None);
+    }
+
+    #[test]
+    fn concurrent_pushes_land_across_shards() {
+        let rec = Arc::new(SpanRecorder::new());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let rec = Arc::clone(&rec);
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        rec.push(ClosedSpan {
+                            path: format!("t{t}/{i}"),
+                            attempt: 0,
+                            segs: vec![],
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(rec.snapshot().len(), 800);
+    }
+}

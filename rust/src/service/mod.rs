@@ -71,11 +71,12 @@ use std::time::{Duration, Instant};
 
 use crate::core::Workflow;
 use crate::engine::{
-    Engine, Priority, ReusedStep, RunPhase, SubmitOptions, Submitted, WorkflowRun,
+    Engine, NodePhase, Priority, ReusedStep, RunPhase, SubmitOptions, Submitted, WorkflowRun,
 };
 use crate::journal::{Journal, JournalEvent, Recorded, RunRegistry};
 use crate::jsonx::Json;
 use crate::metrics::{Counter, LabelCounters};
+use crate::obs::{Histogram, MetricsDoc};
 
 /// Control-plane configuration.
 #[derive(Clone)]
@@ -174,6 +175,12 @@ pub struct ServiceMetrics {
     pub compactions: Counter,
     /// Durable cancel markers picked up by the maintenance tick.
     pub cancel_requests: Counter,
+    /// Admission-queue wait: submission accepted → dispatcher started the
+    /// run. The control-plane half of end-to-end latency (the engine's
+    /// spans cover everything after the start).
+    pub queue_wait: Histogram,
+    /// Run wall-clock: dispatcher start → reaper observed the close.
+    pub run_duration: Histogram,
 }
 
 impl ServiceMetrics {
@@ -189,6 +196,8 @@ impl ServiceMetrics {
             ("live_peak", self.live_peak.to_json()),
             ("compactions", Json::n(self.compactions.get() as f64)),
             ("cancel_requests", Json::n(self.cancel_requests.get() as f64)),
+            ("queue_wait", self.queue_wait.summary().to_json()),
+            ("run_duration", self.run_duration.summary().to_json()),
         ])
     }
 }
@@ -201,12 +210,18 @@ struct Pending {
     reuse: Vec<ReusedStep>,
     resubmission: bool,
     priority: Priority,
+    /// When the submission entered the queue (feeds
+    /// [`ServiceMetrics::queue_wait`] at dispatch).
+    queued_at: Instant,
 }
 
 /// One executing run.
 struct LiveRun {
     tenant: String,
     run: Arc<WorkflowRun>,
+    /// When the dispatcher started the run (feeds `dflow top`'s age column
+    /// and [`ServiceMetrics::run_duration`] at reap).
+    started_at: Instant,
 }
 
 struct SvcState {
@@ -315,6 +330,7 @@ impl SvcInner {
             let run_id = pending.run_id;
             let wf_name = pending.wf.name.clone();
             let resubmission = pending.resubmission;
+            let queued_at = pending.queued_at;
             let opts = SubmitOptions {
                 reuse: pending.reuse,
                 run_id: Some(run_id),
@@ -324,11 +340,16 @@ impl SvcInner {
             match self.engine.submit_with_options(pending.wf, opts) {
                 Ok(sub) => {
                     self.metrics.started.inc(&tenant);
+                    self.metrics.queue_wait.observe(queued_at.elapsed());
                     let mut st = self.state.lock().unwrap();
                     st.starting.remove(&run_id);
                     st.live.insert(
                         run_id,
-                        LiveRun { tenant: tenant.clone(), run: Arc::clone(&sub.run) },
+                        LiveRun {
+                            tenant: tenant.clone(),
+                            run: Arc::clone(&sub.run),
+                            started_at: Instant::now(),
+                        },
                     );
                     st.start_log.push((tenant.clone(), run_id));
                     drop(st);
@@ -375,7 +396,9 @@ impl SvcInner {
             _ => self.metrics.failed.inc(&tenant),
         }
         let mut st = self.state.lock().unwrap();
-        st.live.remove(&run_id);
+        if let Some(lr) = st.live.remove(&run_id) {
+            self.metrics.run_duration.observe(lr.started_at.elapsed());
+        }
         st.recently_closed.insert(run_id, Instant::now());
         if let Some(n) = st.tenant_live.get_mut(&tenant) {
             *n = n.saturating_sub(1);
@@ -712,6 +735,7 @@ impl WorkflowService {
             reuse,
             resubmission,
             priority: self.inner.config.priority_for(tenant),
+            queued_at: Instant::now(),
         });
         st.queue_peak = st.queue_peak.max(st.queue.len());
         self.inner.metrics.submitted.inc(tenant);
@@ -813,6 +837,121 @@ impl WorkflowService {
             ("live", Json::Arr(live)),
             ("queue_peak", Json::n(st.queue_peak as f64)),
             ("metrics", self.inner.metrics.to_json()),
+        ])
+    }
+
+    /// Full metrics export: the engine's families (fleet-merged run
+    /// registries, scheduler, timer wheel, placement) plus the service's
+    /// control-plane families. Render with
+    /// [`crate::obs::MetricsDoc::to_prometheus`] for a scrape endpoint or
+    /// `to_json` for dashboards — this is the document behind
+    /// `dflow metrics`.
+    pub fn export_metrics(&self) -> MetricsDoc {
+        let mut doc = self.inner.engine.export_metrics();
+        let m = &self.inner.metrics;
+        let tenant_families: [(&str, &str, &LabelCounters); 6] = [
+            (
+                "dflow_svc_submitted_total",
+                "Submissions accepted into the admission queue.",
+                &m.submitted,
+            ),
+            (
+                "dflow_svc_rejected_total",
+                "Submissions rejected at admission (queue full, draining, lint errors).",
+                &m.rejected,
+            ),
+            ("dflow_svc_started_total", "Runs started by the dispatcher.", &m.started),
+            ("dflow_svc_succeeded_total", "Runs reaped as succeeded.", &m.succeeded),
+            ("dflow_svc_failed_total", "Runs reaped as failed.", &m.failed),
+            ("dflow_svc_cancelled_total", "Runs reaped as cancelled.", &m.cancelled),
+        ];
+        for (name, help, counters) in tenant_families {
+            for (tenant, v) in counters.snapshot() {
+                doc.counter_labeled(name, help, &[("tenant", tenant.as_str())], v);
+            }
+        }
+        for (tenant, v) in m.live_peak.snapshot() {
+            doc.gauge_labeled(
+                "dflow_svc_live_peak_runs",
+                "High-water mark of concurrently live runs per tenant.",
+                &[("tenant", tenant.as_str())],
+                v as f64,
+            );
+        }
+        doc.counter(
+            "dflow_svc_compactions_total",
+            "Closed-run journal compactions performed by the maintenance tick.",
+            m.compactions.get(),
+        );
+        doc.counter(
+            "dflow_svc_cancel_requests_total",
+            "Durable cancel markers applied by the maintenance tick.",
+            m.cancel_requests.get(),
+        );
+        doc.summary(
+            "dflow_svc_queue_wait_seconds",
+            "Admission-queue wait: submission accepted to dispatcher start.",
+            &[],
+            &m.queue_wait.summary(),
+        );
+        doc.summary(
+            "dflow_svc_run_seconds",
+            "Run wall-clock: dispatcher start to reaped close.",
+            &[],
+            &m.run_duration.summary(),
+        );
+        let st = self.inner.state.lock().unwrap();
+        doc.gauge(
+            "dflow_svc_queue_depth",
+            "Queued submissions awaiting dispatch.",
+            st.queue.len() as f64,
+        );
+        doc.gauge(
+            "dflow_svc_live_runs",
+            "Currently executing runs (mid-dispatch included).",
+            (st.live.len() + st.starting.len()) as f64,
+        );
+        doc.gauge(
+            "dflow_svc_queue_peak",
+            "High-water mark of the admission queue.",
+            st.queue_peak as f64,
+        );
+        doc
+    }
+
+    /// Live fleet view (the `dflow top` surface): every executing run with
+    /// its node-phase breakdown and age, plus queue pressure and the
+    /// control-plane latency summaries.
+    pub fn top_json(&self) -> Json {
+        let st = self.inner.state.lock().unwrap();
+        let live: Vec<Json> = st
+            .live
+            .iter()
+            .map(|(id, lr)| {
+                let nodes = Json::obj(vec![
+                    ("pending", Json::n(lr.run.count_phase(NodePhase::Pending) as f64)),
+                    ("running", Json::n(lr.run.count_phase(NodePhase::Running) as f64)),
+                    ("succeeded", Json::n(lr.run.count_phase(NodePhase::Succeeded) as f64)),
+                    ("failed", Json::n(lr.run.count_phase(NodePhase::Failed) as f64)),
+                    ("skipped", Json::n(lr.run.count_phase(NodePhase::Skipped) as f64)),
+                    ("reused", Json::n(lr.run.count_phase(NodePhase::Reused) as f64)),
+                ]);
+                Json::obj(vec![
+                    ("run_id", Json::n(*id as f64)),
+                    ("tenant", Json::s(lr.tenant.clone())),
+                    ("workflow", Json::s(lr.run.workflow_name.clone())),
+                    ("elapsed_ms", Json::n(lr.started_at.elapsed().as_millis() as f64)),
+                    ("nodes", nodes),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("live", Json::Arr(live)),
+            ("starting", Json::n(st.starting.len() as f64)),
+            ("queued", Json::n(st.queue.len() as f64)),
+            ("queue_peak", Json::n(st.queue_peak as f64)),
+            ("queue_wait", self.inner.metrics.queue_wait.summary().to_json()),
+            ("run_duration", self.inner.metrics.run_duration.summary().to_json()),
         ])
     }
 

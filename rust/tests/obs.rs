@@ -1,0 +1,392 @@
+//! Observability battery (ISSUE 9): end-to-end span capture through a
+//! journaled engine, `dflow profile` critical-path reconciliation against
+//! the journaled run wall-clock, cross-process profiles after a journal
+//! reopen + compaction, and a hand-written Prometheus text-format
+//! line-grammar validator over both exporters (engine and service).
+//!
+//! Run via `make test-obs` (part of `make ci`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dflow::core::{ContainerTemplate, FnOp, ParamType, Signature, Step, Steps, Workflow};
+use dflow::engine::Engine;
+use dflow::journal::{Journal, JournalEvent, RunRegistry};
+use dflow::obs::Phase;
+use dflow::service::{ServiceConfig, WorkflowService};
+use dflow::storage::MemStorage;
+
+/// A serial 3-step chain, each step sleeping `step_ms` — the critical
+/// path IS the whole workflow, so profile reconciliation is exact.
+fn serial_chain(step_ms: u64) -> Workflow {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
+        move |ctx| {
+            let x = ctx.get_int("x")?;
+            std::thread::sleep(Duration::from_millis(step_ms));
+            ctx.set("y", x + 1);
+            Ok(())
+        },
+    ));
+    Workflow::new("chain")
+        .container(ContainerTemplate::new("op", op))
+        .steps(
+            Steps::new("main")
+                .then(Step::new("a", "op").param("x", 0i64))
+                .then(Step::new("b", "op").param_from_step("x", "a", "y"))
+                .then(Step::new("c", "op").param_from_step("x", "b", "y"))
+                .out_param_from("r", "c", "y"),
+        )
+        .entrypoint("main")
+}
+
+#[test]
+fn spans_flow_end_to_end_through_a_journaled_engine() {
+    let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+    let engine = Engine::builder().journal(Arc::clone(&journal)).build();
+    let r = engine.run(&serial_chain(5)).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+
+    // telemetry is on by default: every attempt closed a span bundle
+    let rec = r.run.spans().expect("telemetry must be on by default");
+    let spans = rec.snapshot();
+    let node_spans: Vec<_> = spans.iter().filter(|s| !s.path.is_empty()).collect();
+    assert_eq!(node_spans.len(), 3, "one bundle per attempt: {spans:?}");
+    for s in &node_spans {
+        let phases: Vec<Phase> = s.segs.iter().map(|g| g.phase).collect();
+        assert!(phases.contains(&Phase::ReadyWait), "missing ready_wait: {phases:?}");
+        assert!(phases.contains(&Phase::OpExec), "missing op_exec: {phases:?}");
+        let exec = s.segs.iter().find(|g| g.phase == Phase::OpExec).unwrap();
+        assert!(exec.dur_us >= 4_000, "5ms sleep measured as {}µs", exec.dur_us);
+    }
+    // the run-level accumulator bundle carries admission + journal appends
+    let run_bundle = spans.iter().find(|s| s.path.is_empty()).expect("run-level bundle");
+    let phases: Vec<Phase> = run_bundle.segs.iter().map(|g| g.phase).collect();
+    assert!(phases.contains(&Phase::Admission), "admission cost missing: {phases:?}");
+    assert!(phases.contains(&Phase::JournalAppend), "append cost missing: {phases:?}");
+
+    // every bundle was mirrored into the journal as SpanClosed
+    let (events, torn) = journal.events(r.run.id).unwrap();
+    assert!(!torn);
+    let journaled: Vec<_> = events
+        .iter()
+        .filter(|e| matches!(e.event, JournalEvent::SpanClosed { .. }))
+        .collect();
+    assert_eq!(journaled.len(), spans.len(), "journal mirror count");
+}
+
+#[test]
+fn telemetry_off_records_nothing() {
+    let engine = Engine::builder().telemetry(false).build();
+    let r = engine.run(&serial_chain(1)).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert!(r.run.spans().is_none(), "telemetry(false) must not record spans");
+}
+
+/// The acceptance criterion: `dflow profile` critical-path duration
+/// reconciles with the journaled run wall-clock within 10%.
+#[test]
+fn profile_critical_path_reconciles_with_run_wall_clock() {
+    let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+    let engine = Engine::builder().journal(Arc::clone(&journal)).build();
+    let r = engine.run(&serial_chain(100)).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+
+    let registry = RunRegistry::new(Arc::clone(&journal));
+    let p = registry.profile(r.run.id).unwrap();
+    assert_eq!(p.run_id, r.run.id);
+    assert_eq!(p.workflow, "chain");
+    assert_eq!(p.steps.len(), 3);
+
+    // the chain reconstruction finds the serial a → b → c spine
+    let crit: Vec<&str> = p.critical.iter().map(|c| c.path.as_str()).collect();
+    assert_eq!(crit, ["main/a", "main/b", "main/c"], "critical path");
+
+    // reconciliation: 3 × 100ms of measured spans vs the journaled wall
+    let crit_ms = p.critical_us as f64 / 1e3;
+    let wall_ms = p.wall_ms as f64;
+    assert!(wall_ms >= 300.0, "wall below payload time: {wall_ms}");
+    assert!(
+        (crit_ms - wall_ms).abs() <= wall_ms * 0.10,
+        "critical path {crit_ms:.1}ms vs wall {wall_ms:.1}ms diverges >10%"
+    );
+
+    // phase totals: op_exec dominates a sleep-bound chain
+    let exec = p.phases.iter().find(|t| t.phase == Phase::OpExec).unwrap();
+    assert!(exec.total_us >= 300_000, "op_exec total {}µs", exec.total_us);
+    assert_eq!(exec.count, 3);
+
+    // both renderings carry the reconciled numbers
+    let j = p.to_json();
+    assert_eq!(j.get("critical_path").unwrap().as_arr().unwrap().len(), 3);
+    assert!(p.render_text().contains("critical path"));
+}
+
+#[test]
+fn profiles_survive_journal_reopen_and_compaction() {
+    let storage = Arc::new(MemStorage::new());
+    let run_id = {
+        let journal = Arc::new(Journal::open(Arc::clone(&storage)).unwrap());
+        let engine = Engine::builder().journal(journal).build();
+        let r = engine.run(&serial_chain(20)).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        r.run.id
+    };
+
+    // a fresh process sharing the store: reopen, profile, compact, profile
+    let journal = Arc::new(Journal::open(storage).unwrap());
+    let registry = RunRegistry::new(Arc::clone(&journal));
+    let before = registry.profile(run_id).unwrap();
+    assert_eq!(before.steps.len(), 3);
+
+    journal.compact(run_id).unwrap();
+    let after = registry.profile(run_id).unwrap();
+    assert_eq!(after.critical_us, before.critical_us, "compaction changed the profile");
+    assert_eq!(after.steps.len(), 3);
+    let crit: Vec<&str> = after.critical.iter().map(|c| c.path.as_str()).collect();
+    assert_eq!(crit, ["main/a", "main/b", "main/c"]);
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition format: hand-written line-grammar validator
+// (no deps). Checks: HELP/TYPE headers are well-formed and unique, every
+// sample line parses (name, optional escaped label set, float value),
+// every sample belongs to a TYPE'd family (summary `_sum`/`_count`
+// suffixes resolve to their base family), and counters are non-negative.
+// ---------------------------------------------------------------------------
+
+fn is_metric_name(s: &str) -> bool {
+    !s.is_empty()
+        && !s.starts_with(|c: char| c.is_ascii_digit())
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Split a sample line into (name, labels, value-text).
+fn parse_sample(line: &str) -> Result<(String, Vec<(String, String)>, String), String> {
+    let name_end = line
+        .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_' || c == ':'))
+        .unwrap_or(line.len());
+    let name = &line[..name_end];
+    if !is_metric_name(name) {
+        return Err(format!("bad metric name in: {line}"));
+    }
+    let mut rest = &line[name_end..];
+    let mut labels = Vec::new();
+    if let Some(stripped) = rest.strip_prefix('{') {
+        // scan to the closing brace, honoring \" escapes inside values
+        let (mut in_quotes, mut escaped, mut end) = (false, false, None);
+        for (i, c) in stripped.char_indices() {
+            match (in_quotes, escaped, c) {
+                (true, true, _) => escaped = false,
+                (true, false, '\\') => escaped = true,
+                (true, false, '"') => in_quotes = false,
+                (false, _, '"') => in_quotes = true,
+                (false, _, '}') => {
+                    end = Some(i);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let end = end.ok_or_else(|| format!("unclosed label set in: {line}"))?;
+        for pair in split_label_pairs(&stripped[..end])? {
+            let (k, v) = pair;
+            if !is_metric_name(&k) {
+                return Err(format!("bad label name '{k}' in: {line}"));
+            }
+            labels.push((k, v));
+        }
+        rest = &stripped[end + 1..];
+    }
+    let value = rest
+        .strip_prefix(' ')
+        .ok_or_else(|| format!("missing value separator in: {line}"))?;
+    Ok((name.to_string(), labels, value.to_string()))
+}
+
+/// Split `k1="v1",k2="v2"` into pairs (values keep escapes resolved).
+fn split_label_pairs(s: &str) -> Result<Vec<(String, String)>, String> {
+    let mut out = Vec::new();
+    let mut rest = s;
+    while !rest.is_empty() {
+        let eq = rest.find('=').ok_or_else(|| format!("label without '=': {s}"))?;
+        let key = rest[..eq].to_string();
+        let after = rest[eq + 1..]
+            .strip_prefix('"')
+            .ok_or_else(|| format!("unquoted label value: {s}"))?;
+        let (mut val, mut escaped, mut close) = (String::new(), false, None);
+        for (i, c) in after.char_indices() {
+            if escaped {
+                val.push(c);
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                close = Some(i);
+                break;
+            } else {
+                val.push(c);
+            }
+        }
+        let close = close.ok_or_else(|| format!("unterminated label value: {s}"))?;
+        out.push((key, val));
+        rest = &after[close + 1..];
+        if let Some(r) = rest.strip_prefix(',') {
+            rest = r;
+        } else if !rest.is_empty() {
+            return Err(format!("junk between labels: {s}"));
+        }
+    }
+    Ok(out)
+}
+
+/// Validate a whole exposition document; returns family → sample count.
+fn validate_prometheus(text: &str) -> Result<BTreeMap<String, usize>, String> {
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split(' ').next().unwrap_or("");
+            if !is_metric_name(name) {
+                return Err(format!("bad HELP name: {line}"));
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let name = it.next().unwrap_or("");
+            let kind = it.next().unwrap_or("");
+            if !is_metric_name(name) {
+                return Err(format!("bad TYPE name: {line}"));
+            }
+            if !["counter", "gauge", "summary", "histogram", "untyped"].contains(&kind) {
+                return Err(format!("unknown TYPE kind: {line}"));
+            }
+            if types.insert(name.to_string(), kind.to_string()).is_some() {
+                return Err(format!("duplicate TYPE for {name}"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            return Err(format!("unexpected comment line: {line}"));
+        }
+        let (name, labels, value) = parse_sample(line)?;
+        let v: f64 = value.parse().map_err(|_| format!("bad value in: {line}"))?;
+        // resolve the sample to its family (summaries emit _sum/_count)
+        let family = if types.contains_key(&name) {
+            name.clone()
+        } else {
+            let base = name
+                .strip_suffix("_sum")
+                .or_else(|| name.strip_suffix("_count"))
+                .ok_or_else(|| format!("sample without TYPE header: {line}"))?;
+            if types.get(base).map(String::as_str) != Some("summary") {
+                return Err(format!("suffix sample outside a summary family: {line}"));
+            }
+            base.to_string()
+        };
+        let kind = types[&family].as_str();
+        if kind == "counter" && v < 0.0 {
+            return Err(format!("negative counter: {line}"));
+        }
+        if labels.iter().any(|(k, _)| k == "quantile") && kind != "summary" {
+            return Err(format!("quantile label outside a summary: {line}"));
+        }
+        *counts.entry(family).or_insert(0) += 1;
+    }
+    if counts.is_empty() {
+        return Err("no samples".to_string());
+    }
+    Ok(counts)
+}
+
+#[test]
+fn grammar_validator_rejects_malformed_documents() {
+    assert!(validate_prometheus("").is_err(), "empty doc has no samples");
+    assert!(
+        validate_prometheus("# TYPE x counter\nx{tenant=\"a} 1\n").is_err(),
+        "unclosed label value"
+    );
+    assert!(validate_prometheus("x 1\n").is_err(), "sample without TYPE");
+    assert!(
+        validate_prometheus("# TYPE x counter\nx -1\n").is_err(),
+        "negative counter"
+    );
+    assert!(
+        validate_prometheus("# TYPE x counter\n# TYPE x counter\nx 1\n").is_err(),
+        "duplicate TYPE"
+    );
+    assert!(
+        validate_prometheus("# TYPE x gauge\nx{quantile=\"0.5\"} 1\n").is_err(),
+        "quantile on a gauge"
+    );
+    let ok = "# HELP x help text\n# TYPE x summary\nx{quantile=\"0.5\"} 0.1\nx_sum 1\nx_count 2\n";
+    assert_eq!(validate_prometheus(ok).unwrap()["x"], 3);
+}
+
+#[test]
+fn engine_export_is_valid_prometheus_with_live_latency_tails() {
+    let engine = Engine::builder().build();
+    let r = engine.run(&serial_chain(5)).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+
+    let text = engine.export_metrics().to_prometheus();
+    let families = validate_prometheus(&text).unwrap_or_else(|e| panic!("invalid export: {e}"));
+
+    // the run's counters and latency summaries are all present
+    for name in [
+        "dflow_steps_succeeded_total",
+        "dflow_op_exec_seconds",
+        "dflow_dispatch_seconds",
+        "dflow_sched_jobs_total",
+        "dflow_sched_queue_wait_seconds",
+    ] {
+        assert!(families.contains_key(name), "family {name} missing:\n{text}");
+    }
+    assert!(text.contains("dflow_steps_succeeded_total 3\n"), "fleet counter:\n{text}");
+    // op_exec saw 3 × 5ms sleeps: the summary's _count says so
+    assert!(text.contains("dflow_op_exec_seconds_count 3\n"), "summary count:\n{text}");
+
+    // JSON rendering parses and mirrors the same families
+    let json = engine.export_metrics().to_json().to_string_pretty();
+    let parsed = dflow::jsonx::Json::parse(&json).unwrap();
+    let fams = parsed.get("families").unwrap().as_arr().unwrap();
+    assert!(fams.len() >= families.len());
+}
+
+#[test]
+fn service_export_and_top_reflect_the_fleet() {
+    let journal = Arc::new(Journal::open(Arc::new(MemStorage::new())).unwrap());
+    let engine = Arc::new(Engine::builder().journal(journal).build());
+    let svc = WorkflowService::start(engine, ServiceConfig::default()).unwrap();
+    for tenant in ["alice", "bob"] {
+        svc.submit(tenant, serial_chain(5)).unwrap();
+    }
+    assert!(svc.wait_idle(Duration::from_secs(30)), "service never drained");
+
+    let text = svc.export_metrics().to_prometheus();
+    let families = validate_prometheus(&text).unwrap_or_else(|e| panic!("invalid export: {e}"));
+    // per-tenant labeled series share one family
+    assert_eq!(families["dflow_svc_submitted_total"], 2, "one series per tenant:\n{text}");
+    assert!(text.contains("dflow_svc_submitted_total{tenant=\"alice\"} 1\n"), "{text}");
+    assert!(text.contains("dflow_svc_succeeded_total{tenant=\"bob\"} 1\n"), "{text}");
+    // control-plane latency summaries observed both runs
+    assert!(text.contains("dflow_svc_queue_wait_seconds_count 2\n"), "{text}");
+    assert!(text.contains("dflow_svc_run_seconds_count 2\n"), "{text}");
+    // the engine families ride along in the same document
+    assert!(families.contains_key("dflow_steps_succeeded_total"), "{text}");
+
+    // `dflow top`: fleet is idle again, but the latency summaries persist
+    let top = svc.top_json();
+    assert_eq!(top.get("live").unwrap().as_arr().unwrap().len(), 0);
+    assert_eq!(top.get("queued").unwrap().as_i64(), Some(0));
+    let qw = top.get("queue_wait").unwrap();
+    assert_eq!(qw.get("count").unwrap().as_i64(), Some(2));
+    // the per-tenant JSON surface gained the same summaries
+    let mj = svc.metrics().to_json();
+    assert_eq!(mj.get("run_duration").unwrap().get("count").unwrap().as_i64(), Some(2));
+}
