@@ -1,13 +1,13 @@
 # Repo CI entrypoints. `make ci` is what a gate should run.
 
-.PHONY: ci fmt-check fmt clippy build test test-placement test-storage test-journal test-service test-lint test-chaos test-obs lint-examples tsan bench bench-smoke bench-snapshot
+.PHONY: ci fmt-check fmt clippy build test test-placement test-storage test-journal test-service test-lint test-chaos test-obs test-logs lint-examples tsan bench bench-smoke bench-snapshot bench-check
 
 # `test` runs the full suite (placement + scheduler_stress + the storage
 # battery + journal recovery + the service battery + the lint battery +
 # the chaos battery included via their Cargo.toml [[test]] entries);
 # `test-storage`/`test-journal`/`test-service`/`test-lint`/`test-chaos`
 # re-run their batteries alone as explicit gates.
-ci: fmt-check clippy test test-storage test-journal test-service test-lint test-chaos test-obs lint-examples bench-smoke
+ci: fmt-check clippy test test-storage test-journal test-service test-lint test-chaos test-obs test-logs lint-examples bench-smoke
 
 fmt-check:
 	cargo fmt --check
@@ -77,6 +77,16 @@ test-obs: build
 	cargo test -q --test obs
 	cargo test -q --lib obs::
 
+# flight-recorder battery: attempt-level log capture end to end — the
+# fail-after-logging acceptance path (post-hoc + post-compaction reads,
+# forensic tails in journaled failures), reclamation exemption,
+# resubmit-after-crash durability, the cross-process --follow pattern,
+# the off-switch, and the per-tenant service export — plus the log
+# buffer/codec unit suite in the lib
+test-logs: build
+	cargo test -q --test logs
+	cargo test -q --lib obs::logs::
+
 # gate: every built-in workflow must lint clean (errors AND warnings)
 # against the demo cluster — the same check `dflow lint` users run
 lint-examples: build
@@ -115,6 +125,13 @@ bench-snapshot: build
 	cargo bench --bench c5_service
 	cargo bench --bench c6_chaos
 	cargo bench --bench c7_obs
+
+# validate the shape of every checked-in BENCH_*.json against the
+# snapshot schema (non-empty array of {title, rows: [[name, value]...]}
+# groups) — catches truncated or hand-mangled snapshots without running
+# any bench; zero checked-in snapshots passes
+bench-check: build
+	cargo test -q --lib bench_util:: -- --nocapture
 
 # AOT-lower the python/compile entry points to artifacts/*.hlo.txt
 # (needed by PJRT-dependent workflows/benches; see python/compile/aot.py)

@@ -7,6 +7,12 @@
 //! best-of-N on-time stays within 5% (plus a small absolute slack for
 //! timer noise) of the best-of-N off-time.
 //!
+//! The same contract covers the attempt flight recorder: with
+//! `log_capture` on (the default) every attempt gets a log sink, and the
+//! silent case — OPs that never log — must also stay within the 5%
+//! budget of `log_capture(false)` (silence is free: no flush, no I/O, no
+//! journal record).
+//!
 //! `make bench-snapshot` checks the rendered rows into `BENCH_obs.json`;
 //! `BENCH_SMOKE=1` shrinks the DAG and loosens the ratio (tiny runs are
 //! noise-dominated) without writing a snapshot.
@@ -87,6 +93,59 @@ fn main() {
         (rel - 1.0) * 100.0,
         slack
     );
+
+    // flight-recorder overhead: capture on (per-attempt sink armed, no OP
+    // logs a line) vs off, same interleaved best-of-N discipline and the
+    // same acceptance budget — the recorder must cost nothing when silent
+    {
+        let run_logs = |capture: bool| {
+            let (wf, _probe, nodes) = diamond_chain_workflow(target, pool);
+            let engine = Engine::builder()
+                .parallelism(pool)
+                .telemetry(false) // isolate the recorder from the span layer
+                .log_capture(capture)
+                .build();
+            let t0 = Instant::now();
+            let r = engine.run(&wf).unwrap();
+            let dt = t0.elapsed();
+            assert!(r.succeeded(), "{:?}", r.error);
+            assert_eq!(r.run.nodes().len(), nodes);
+            assert_eq!(
+                r.run.metrics.log_flushes.get(),
+                0,
+                "silent OPs must never trigger a flush"
+            );
+            dt
+        };
+        let (mut cap_on, mut cap_off) = (Duration::MAX, Duration::MAX);
+        for _ in 0..iters {
+            cap_off = cap_off.min(run_logs(false));
+            cap_on = cap_on.min(run_logs(true));
+        }
+        b.row(
+            "log capture off (best of N)",
+            &format!("{:>10.2} ms", cap_off.as_secs_f64() * 1e3),
+        );
+        b.row(
+            "log capture on  (best of N)",
+            &format!("{:>10.2} ms", cap_on.as_secs_f64() * 1e3),
+        );
+        b.metric(
+            "  silent-recorder cost/step",
+            (cap_on.as_secs_f64() - cap_off.as_secs_f64()).max(0.0) * 1e9 / nodes as f64,
+            "ns (on minus off)",
+        );
+        let ratio = cap_on.as_secs_f64() / cap_off.as_secs_f64().max(1e-9);
+        b.metric("  capture overhead ratio", ratio, "x (acceptance: <= 1.05 + slack)");
+        assert!(
+            cap_on.as_secs_f64() <= cap_off.as_secs_f64() * rel + slack.as_secs_f64(),
+            "log-capture overhead out of budget: on {:?} vs off {:?} (allowed {:.0}% + {:?})",
+            cap_on,
+            cap_off,
+            (rel - 1.0) * 100.0,
+            slack
+        );
+    }
 
     // exporter cost: rendering the full engine document (counters +
     // summaries + per-backend families) must be scrape-friendly

@@ -84,14 +84,82 @@ impl Bench {
 
     /// Write one or more groups to `path` as a pretty-printed JSON array
     /// (`make bench-snapshot` checks these in for regression diffing).
+    /// The document is validated against [`validate_snapshot`] before it
+    /// touches disk, so a malformed snapshot can never be produced.
     pub fn write_snapshot(path: &str, groups: &[&Bench]) -> Result<(), String> {
         use crate::jsonx::Json;
         let doc = Json::Arr(groups.iter().map(|b| b.to_json()).collect());
-        std::fs::write(path, doc.to_string_pretty() + "\n")
-            .map_err(|e| format!("write {path}: {e}"))?;
+        let text = doc.to_string_pretty() + "\n";
+        validate_snapshot(&text).map_err(|e| format!("refusing to write {path}: {e}"))?;
+        std::fs::write(path, &text).map_err(|e| format!("write {path}: {e}"))?;
         println!("snapshot -> {path}");
         Ok(())
     }
+}
+
+/// Validate a `BENCH_*.json` snapshot document (what
+/// [`Bench::write_snapshot`] produces): a non-empty JSON array of bench
+/// groups, each `{"title": <non-empty string>, "rows": [[name, value],
+/// ...]}` with string pairs. `make bench-check` runs this over every
+/// checked-in snapshot, so a truncated or hand-mangled file fails the
+/// gate instead of silently poisoning a regression diff.
+pub fn validate_snapshot(text: &str) -> Result<(), String> {
+    use crate::jsonx::Json;
+    let doc = Json::parse(text).map_err(|e| format!("not valid JSON: {e}"))?;
+    let Json::Arr(groups) = &doc else {
+        return Err("snapshot must be a JSON array of bench groups".into());
+    };
+    if groups.is_empty() {
+        return Err("snapshot must contain at least one bench group".into());
+    }
+    for (i, g) in groups.iter().enumerate() {
+        match g.get("title").and_then(|t| t.as_str()) {
+            Some(t) if !t.is_empty() => {}
+            _ => return Err(format!("group {i}: missing or empty \"title\"")),
+        }
+        let rows = match g.get("rows").and_then(|r| r.as_arr()) {
+            Some(rows) => rows,
+            None => return Err(format!("group {i}: missing \"rows\" array")),
+        };
+        if rows.is_empty() {
+            return Err(format!("group {i}: \"rows\" must not be empty"));
+        }
+        for (j, row) in rows.iter().enumerate() {
+            let ok = row.as_arr().is_some_and(|pair| {
+                pair.len() == 2
+                    && pair[0].as_str().is_some_and(|n| !n.is_empty())
+                    && pair[1].as_str().is_some()
+            });
+            if !ok {
+                return Err(format!(
+                    "group {i} row {j}: expected a [name, value] string pair"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validate every `BENCH_*.json` checked in at the repo root, returning
+/// the validated file names. Zero snapshots is fine (a fresh clone before
+/// any `make bench-snapshot` run) — the point is that whatever IS checked
+/// in parses as a real snapshot.
+pub fn validate_checked_in_snapshots() -> Result<Vec<String>, String> {
+    let mut seen = Vec::new();
+    let entries = std::fs::read_dir(".").map_err(|e| format!("read_dir .: {e}"))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| e.to_string())?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !(name.starts_with("BENCH_") && name.ends_with(".json")) {
+            continue;
+        }
+        let text =
+            std::fs::read_to_string(entry.path()).map_err(|e| format!("read {name}: {e}"))?;
+        validate_snapshot(&text).map_err(|e| format!("{name}: {e}"))?;
+        seen.push(name);
+    }
+    seen.sort();
+    Ok(seen)
 }
 
 /// Live/peak concurrency tracker for OP bodies (the peak-tracking pattern
@@ -261,5 +329,41 @@ mod tests {
         let per = b.case_n("x", 10, || std::thread::sleep(Duration::from_millis(1)));
         assert!(per >= Duration::from_millis(1));
         assert!(per < Duration::from_millis(20));
+    }
+
+    #[test]
+    fn snapshot_roundtrip_validates() {
+        let mut b = Bench::new("group");
+        b.row("case a", "10.00 ms");
+        b.metric("ratio", 1.01, "x");
+        let text =
+            crate::jsonx::Json::Arr(vec![b.to_json()]).to_string_pretty() + "\n";
+        validate_snapshot(&text).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_malformed_snapshots() {
+        // every rejection names the structural problem
+        for (bad, why) in [
+            ("not json", "parse"),
+            ("{}", "array"),
+            ("[]", "empty"),
+            (r#"[{"rows": [["a","b"]]}]"#, "title"),
+            (r#"[{"title": "t"}]"#, "rows"),
+            (r#"[{"title": "t", "rows": []}]"#, "rows"),
+            (r#"[{"title": "t", "rows": [["only-name"]]}]"#, "pair"),
+            (r#"[{"title": "t", "rows": [["a", 3]]}]"#, "pair"),
+        ] {
+            assert!(validate_snapshot(bad).is_err(), "accepted malformed ({why}): {bad}");
+        }
+    }
+
+    /// `make bench-check` backing: whatever `BENCH_*.json` files are
+    /// checked in must parse as real snapshots. Zero files passes — the
+    /// gate protects the files that exist.
+    #[test]
+    fn checked_in_snapshots_are_well_formed() {
+        let seen = validate_checked_in_snapshots().unwrap();
+        println!("validated {} checked-in snapshot(s): {seen:?}", seen.len());
     }
 }

@@ -210,6 +210,11 @@ pub struct OpCtx {
     pub artifact_prefix: String,
     /// Cooperative cancellation (timeouts).
     pub cancel: CancelToken,
+    /// Attempt-level flight recorder ([`OpCtx::log`]). Script OPs get
+    /// stdout/stderr captured into it automatically; the engine flushes
+    /// it to the store at attempt exit. Disabled (free) unless the
+    /// engine's `log_capture` is on.
+    pub logs: crate::obs::logs::LogSink,
 }
 
 impl OpCtx {
@@ -225,7 +230,16 @@ impl OpCtx {
             workdir: std::env::temp_dir().join(format!("dflow-op-{}", crate::util::next_id())),
             artifact_prefix: format!("test/{}", crate::util::next_id()),
             cancel: CancelToken::new(),
+            logs: crate::obs::logs::LogSink::disabled(),
         }
+    }
+
+    /// Record a structured log line into the attempt's flight recorder.
+    /// No-op when capture is disabled; captured lines are flushed to the
+    /// durable `.logs/` namespace at attempt exit and the tail is
+    /// attached to the journaled failure if this attempt fails.
+    pub fn log(&self, level: crate::obs::logs::LogLevel, msg: &str) {
+        self.logs.push(level, msg);
     }
 
     /// Typed getter: i64.
@@ -566,6 +580,9 @@ impl Op for ShellOp {
             cmd.env(format!("DF_PARAM_{}", k.to_uppercase()), v.display());
         }
         let out = cmd.output().map_err(|e| OpError::Transient(format!("spawn: {e}")))?;
+        // flight recorder: capture both streams BEFORE the status check,
+        // so a failed script keeps the output that explains the failure
+        ctx.logs.capture_streams(&out.stdout, &out.stderr);
         if !out.status.success() {
             return Err(OpError::Fatal(format!(
                 "script exited with {}: {}",

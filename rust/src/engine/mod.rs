@@ -36,8 +36,9 @@ use crate::core::{
 use crate::executor::{Executor, LocalExecutor};
 use crate::journal::{Journal, JournalEvent, JournalSink};
 use crate::metrics::{EventKind, Registry};
+use crate::obs::logs::{failure_tail, log_key, LogChunk, LogLevel, LogSink};
 use crate::obs::{ClosedSpan, MetricsDoc, Phase, SpanRecorder, SpanScope};
-use crate::storage::{copy_with_retry, CasStore, MemStorage, StorageClient};
+use crate::storage::{copy_with_retry, with_retry, CasStore, MemStorage, StorageClient};
 use crate::util::{epoch_ms, Stopwatch};
 
 pub use place::{
@@ -78,6 +79,16 @@ pub struct EngineConfig {
     /// the c7_obs bench holds the end-to-end overhead under 5%. Off, runs
     /// record no spans and `dflow profile` has nothing to fold.
     pub telemetry: bool,
+    /// Attempt-level flight recorder (`obs::logs`): give every attempt a
+    /// bounded log buffer (`ctx.log`, script stdout/stderr, panic
+    /// payloads) and flush it to the journal's store at attempt exit. On
+    /// by default — an attempt that never logs costs one small
+    /// allocation and no I/O; c7_obs holds the end-to-end overhead under
+    /// 5%. Off, sinks are inert and `dflow logs` has nothing to read.
+    pub log_capture: bool,
+    /// Byte cap of each attempt's log ring; overflow evicts the oldest
+    /// lines and flags the flush as truncated.
+    pub log_buffer_bytes: usize,
 }
 
 impl Default for EngineConfig {
@@ -89,6 +100,8 @@ impl Default for EngineConfig {
             trace_cap: 100_000,
             workdir_root: std::env::temp_dir().join("dflow-work"),
             telemetry: true,
+            log_capture: true,
+            log_buffer_bytes: 64 * 1024,
         }
     }
 }
@@ -234,6 +247,13 @@ impl EngineBuilder {
     /// on by default — pass `false` to strip the span layer entirely).
     pub fn telemetry(mut self, on: bool) -> Self {
         self.config.telemetry = on;
+        self
+    }
+
+    /// Capture per-attempt OP logs (see [`EngineConfig::log_capture`]; on
+    /// by default — pass `false` to strip the flight recorder entirely).
+    pub fn log_capture(mut self, on: bool) -> Self {
+        self.config.log_capture = on;
         self
     }
 
@@ -1976,6 +1996,10 @@ impl<'e> Exec<'e> {
                     lease.pod_flake().then(|| lease.pod_node().unwrap_or("?").to_string());
                 death_watch = Some(lease.death_watch());
                 _backend_watch = Some(lease.backend().register_watch(&attempt_cancel));
+                // slot accounting for `dflow_svc_backend_slots`: held from
+                // here until the LeaseGuard drops (quota groundwork —
+                // measure slots before enforcing them)
+                self.run.slot_acquired(lease.backend_name());
                 lease_guard = Some(LeaseGuard {
                     run: Arc::clone(self.run),
                     lease,
@@ -2012,6 +2036,11 @@ impl<'e> Exec<'e> {
                 attempt
             ),
             cancel: attempt_cancel.clone(),
+            logs: if self.engine.config.log_capture {
+                LogSink::buffered(self.engine.config.log_buffer_bytes)
+            } else {
+                LogSink::disabled()
+            },
         };
 
         // a run-level cancel reaches this attempt through its token: if
@@ -2030,6 +2059,10 @@ impl<'e> Exec<'e> {
                 self.run.metrics.op_exec.observe(sw.elapsed());
                 span.mark(Phase::OpExec);
                 self.failover_check(&mut r, death_watch.as_ref(), path, attempt, failed_over);
+                // the OP has stopped — flush its flight recorder. The
+                // `.logs/` namespace is disjoint from the attempt
+                // namespace, so the reclamation below never undoes this.
+                let logs = self.flush_attempt_logs(&ctx, path, attempt);
                 match r {
                     Ok(()) => Ok(StepOutputs {
                         params: ctx.outputs,
@@ -2039,7 +2072,7 @@ impl<'e> Exec<'e> {
                         // the OP has stopped: its partial attempt outputs
                         // are garbage — reclaim the namespace now
                         self.reclaim_attempt(path, attempt);
-                        Err(e)
+                        Err(with_log_tail(e, logs.as_ref()))
                     }
                 }
             }
@@ -2067,11 +2100,23 @@ impl<'e> Exec<'e> {
                 let timed_out = !deadline.cancel();
                 let mut r = match caught {
                     Ok(r) => r,
-                    Err(_) => {
+                    Err(payload) => {
                         // the OP panicked (unwound through its frame); its
-                        // partial attempt outputs are garbage
+                        // partial attempt outputs are garbage. The payload
+                        // is the last thing the attempt "said" — record it
+                        // before the frame is torn down.
+                        let what = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| (*s).to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "opaque panic payload".to_string());
+                        ctx.logs.push(LogLevel::Error, &format!("OP panicked: {what}"));
+                        let logs = self.flush_attempt_logs(&ctx, path, attempt);
                         self.reclaim_attempt(path, attempt);
-                        return Err(OpError::Fatal("OP attempt panicked".into()));
+                        return Err(with_log_tail(
+                            OpError::Fatal(format!("OP attempt panicked: {what}")),
+                            logs.as_ref(),
+                        ));
                     }
                 };
                 if timed_out {
@@ -2082,7 +2127,12 @@ impl<'e> Exec<'e> {
                     self.reclaim_attempt(path, attempt);
                     self.run.metrics.timeouts.inc();
                     self.run.trace.push(EventKind::StepTimedOut, path, format!("{limit:?}"));
-                    let msg = format!("step timed out after {limit:?}");
+                    let logs = self.flush_attempt_logs(&ctx, path, attempt);
+                    let mut msg = format!("step timed out after {limit:?}");
+                    // forensics: what the attempt said before the deadline
+                    if let Some(tail) = logs.as_ref().and_then(failure_tail) {
+                        msg = format!("{msg}\n{tail}");
+                    }
                     self.run.journal_event(|| JournalEvent::NodeCancelled {
                         path: path.to_string(),
                         reason: msg.clone(),
@@ -2094,6 +2144,10 @@ impl<'e> Exec<'e> {
                     };
                 }
                 self.failover_check(&mut r, death_watch.as_ref(), path, attempt, failed_over);
+                // the OP has stopped — flush its flight recorder. The
+                // `.logs/` namespace is disjoint from the attempt
+                // namespace, so the reclamation below never undoes this.
+                let logs = self.flush_attempt_logs(&ctx, path, attempt);
                 match r {
                     Ok(()) => Ok(StepOutputs {
                         params: ctx.outputs,
@@ -2103,11 +2157,59 @@ impl<'e> Exec<'e> {
                         // the OP has stopped: its partial attempt outputs
                         // are garbage — reclaim the namespace now
                         self.reclaim_attempt(path, attempt);
-                        Err(e)
+                        Err(with_log_tail(e, logs.as_ref()))
                     }
                 }
             }
         }
+    }
+
+    /// Flush the attempt's flight-recorder buffer to the journal's store
+    /// (the durable, cross-process-visible side — the engine's own
+    /// artifact store may be process-local) and journal a `NodeLogs`
+    /// pointer. Called once per attempt, on every exit path, after the OP
+    /// has provably stopped. Returns the drained chunk so failure paths
+    /// can attach its tail to their message; `None` when capture is off
+    /// or the attempt never logged (no allocation, no I/O, no journal
+    /// record — silence stays free).
+    fn flush_attempt_logs(&self, ctx: &OpCtx, path: &str, attempt: u32) -> Option<LogChunk> {
+        let chunk = ctx.logs.take_chunk()?;
+        if let Some(journal) = &self.engine.journal {
+            let t0 = Instant::now();
+            let key = log_key(self.run.id, path, attempt);
+            let encoded = chunk.encode();
+            let len = encoded.len() as u64;
+            let truncated = chunk.truncated_bytes > 0;
+            let storage = Arc::clone(journal.storage());
+            // best-effort: losing a log flush must not fail the attempt
+            if with_retry(5, || storage.upload(&key, &encoded)).is_ok() {
+                self.run.metrics.log_bytes.add(len);
+                self.run.metrics.log_flushes.inc();
+                self.run.journal_event(|| JournalEvent::NodeLogs {
+                    path: path.to_string(),
+                    attempt,
+                    key: key.clone(),
+                    bytes: len,
+                    truncated,
+                });
+            }
+            if let Some(rec) = self.run.spans() {
+                rec.accumulate(Phase::ArtifactIo, t0.elapsed());
+            }
+        }
+        Some(chunk)
+    }
+}
+
+/// Append the flight recorder's failure tail to an attempt error, so the
+/// journaled `NodeFailed` carries the last lines the attempt logged and
+/// `dflow get`/`timeline` show them inline. Transiency is preserved — the
+/// retry policy must not change because forensics rode along.
+fn with_log_tail(e: OpError, chunk: Option<&LogChunk>) -> OpError {
+    let Some(tail) = chunk.and_then(failure_tail) else { return e };
+    match e {
+        OpError::Transient(m) => OpError::Transient(format!("{m}\n{tail}")),
+        OpError::Fatal(m) => OpError::Fatal(format!("{m}\n{tail}")),
     }
 }
 
@@ -2234,6 +2336,7 @@ impl Drop for LeaseGuard {
             &self.path,
             self.lease.backend_name().to_string(),
         );
+        self.run.slot_released(self.lease.backend_name());
     }
 }
 

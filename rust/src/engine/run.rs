@@ -226,6 +226,11 @@ pub struct WorkflowRun {
     /// observability: the per-run placement split; retries count once per
     /// attempt since each attempt is placed anew).
     pub(crate) placements: ShardedMap<String, u64>,
+    /// backend name → slots this run's in-flight attempts hold right now
+    /// (lease acquired, guard not yet dropped). Quota groundwork: the
+    /// service exports these as `dflow_svc_backend_slots` gauges so slot
+    /// pressure is measured before it is enforced.
+    pub(crate) slots: ShardedMap<String, u64>,
     /// Durable event journal (or batching appender) this run mirrors its
     /// lifecycle into (`None` = in-memory only, the pre-journal behavior).
     pub(crate) journal: Option<Arc<dyn JournalSink>>,
@@ -320,6 +325,7 @@ impl WorkflowRun {
             reuse,
             sem: Semaphore::new(parallelism),
             placements: ShardedMap::new(),
+            slots: ShardedMap::new(),
             journal,
             cancelled: AtomicBool::new(false),
             cancel_reason: Mutex::new(String::new()),
@@ -420,6 +426,22 @@ impl WorkflowRun {
     /// backends registered.
     pub fn placements(&self) -> BTreeMap<String, u64> {
         self.placements.to_sorted_pairs().into_iter().collect()
+    }
+
+    pub(crate) fn slot_acquired(&self, backend: &str) {
+        self.slots.upsert(backend.to_string(), || 0, |n| *n += 1);
+    }
+
+    pub(crate) fn slot_released(&self, backend: &str) {
+        self.slots.upsert(backend.to_string(), || 0, |n| *n = n.saturating_sub(1));
+    }
+
+    /// backend name → slots currently held by this run's in-flight
+    /// attempts (acquired at lease grant, returned when the attempt's
+    /// lease guard drops). Zero rows are omitted; a closed run reports
+    /// empty.
+    pub fn backend_slots(&self) -> BTreeMap<String, u64> {
+        self.slots.to_sorted_pairs().into_iter().filter(|(_, n)| *n > 0).collect()
     }
 
     pub(crate) fn set_node(&self, path: &str, template: &str, phase: NodePhase, key: Option<&str>) {

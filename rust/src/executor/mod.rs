@@ -123,6 +123,10 @@ impl Executor for DispatcherExecutor {
             workdir: ctx.workdir.clone(),
             artifact_prefix: ctx.artifact_prefix.clone(),
             cancel: ctx.cancel.clone(),
+            // the flight recorder is shared, not cloned-empty: lines the
+            // dispatched job logs land in the engine-side buffer and get
+            // flushed with the attempt
+            logs: ctx.logs.clone(),
         };
         let (tx, rx) = mpsc::channel::<Json>();
         let id = self

@@ -206,6 +206,13 @@ pub enum JournalEvent {
     NodeFailedOver { path: String, backend: String, attempt: u32, message: String },
     /// The engine reclaimed a failed attempt's artifact namespace.
     ArtifactsReclaimed { path: String, prefix: String, objects: u64 },
+    /// An attempt's captured log buffer was flushed to the store. `key`
+    /// names the object in the reclamation-exempt `.logs/` namespace,
+    /// `bytes` is the encoded size, and `truncated` flags a buffer that
+    /// overflowed its ring (the stream leads with a truncation marker).
+    /// Carried across compaction like [`JournalEvent::SpanClosed`], so
+    /// `RunRegistry::logs` can locate chunks cross-process forever.
+    NodeLogs { path: String, attempt: u32, key: String, bytes: u64, truncated: bool },
     /// A closed telemetry span bundle: the phase segments of one node
     /// attempt, or of the run itself (`path` empty — the run-level
     /// admission span and the folded journal-append / artifact-I/O
@@ -303,6 +310,7 @@ impl JournalEvent {
             JournalEvent::NodeEvicted { .. } => "NodeEvicted",
             JournalEvent::NodeFailedOver { .. } => "NodeFailedOver",
             JournalEvent::ArtifactsReclaimed { .. } => "ArtifactsReclaimed",
+            JournalEvent::NodeLogs { .. } => "NodeLogs",
             JournalEvent::SpanClosed { .. } => "SpanClosed",
             JournalEvent::TraceMirror { .. } => "TraceMirror",
             JournalEvent::Snapshot { .. } => "Snapshot",
@@ -323,7 +331,8 @@ impl JournalEvent {
             | JournalEvent::NodeCancelled { path, .. }
             | JournalEvent::NodeEvicted { path, .. }
             | JournalEvent::NodeFailedOver { path, .. }
-            | JournalEvent::ArtifactsReclaimed { path, .. } => Some(path),
+            | JournalEvent::ArtifactsReclaimed { path, .. }
+            | JournalEvent::NodeLogs { path, .. } => Some(path),
             JournalEvent::TraceMirror { step, .. } => Some(step),
             // run-level bundles carry an empty path — they concern no node
             JournalEvent::SpanClosed { path, .. } if !path.is_empty() => Some(path),
@@ -406,6 +415,13 @@ impl JournalEvent {
                 fields.push(("path", Json::s(path.clone())));
                 fields.push(("prefix", Json::s(prefix.clone())));
                 fields.push(("objects", Json::n(*objects as f64)));
+            }
+            JournalEvent::NodeLogs { path, attempt, key, bytes, truncated } => {
+                fields.push(("path", Json::s(path.clone())));
+                fields.push(("attempt", Json::n(*attempt as f64)));
+                fields.push(("key", Json::s(key.clone())));
+                fields.push(("bytes", Json::n(*bytes as f64)));
+                fields.push(("truncated", Json::Bool(*truncated)));
             }
             JournalEvent::SpanClosed { path, attempt, segs } => {
                 fields.push(("path", Json::s(path.clone())));
@@ -509,6 +525,13 @@ impl JournalEvent {
                 path: j_str(j, "path")?,
                 prefix: j_str(j, "prefix")?,
                 objects: j_u64(j, "objects")?,
+            },
+            "NodeLogs" => JournalEvent::NodeLogs {
+                path: j_str(j, "path")?,
+                attempt: j_u64(j, "attempt")? as u32,
+                key: j_str(j, "key")?,
+                bytes: j_u64(j, "bytes")?,
+                truncated: matches!(j.get("truncated"), Some(Json::Bool(true))),
             },
             "SpanClosed" => JournalEvent::SpanClosed {
                 path: j_str(j, "path")?,
@@ -674,6 +697,12 @@ pub struct RecoveredRun {
     pub keyed: BTreeMap<String, StepOutputs>,
     /// Rendered admission-lint warning lines (`RunLinted`), when any.
     pub lint: Vec<String>,
+    /// Journaled `NodeFailedOver` count — attempts re-placed after a
+    /// backend died mid-flight. Surfaced by `dflow get`/`timeline`.
+    pub failovers: u64,
+    /// Journaled `NodeEvicted` count — placements preempted by higher
+    /// priority. Surfaced by `dflow get`/`timeline`.
+    pub evictions: u64,
     /// Records folded into this state (snapshot counts as one).
     pub events: usize,
     /// True when replay truncated a torn tail.
@@ -691,6 +720,8 @@ impl RecoveredRun {
             nodes: BTreeMap::new(),
             keyed: BTreeMap::new(),
             lint: Vec::new(),
+            failovers: 0,
+            evictions: 0,
             events: 0,
             torn_tail: false,
         }
@@ -776,11 +807,17 @@ impl RecoveredRun {
             JournalEvent::NodeCancelled { path, reason } => {
                 self.node(path).message = reason.clone();
             }
-            // informational: evictions/failovers re-queue the attempt, so
-            // the node's phase is whatever later events say it became
-            JournalEvent::NodeEvicted { .. }
-            | JournalEvent::NodeFailedOver { .. }
-            | JournalEvent::ArtifactsReclaimed { .. }
+            // evictions/failovers re-queue the attempt, so the node's
+            // phase is whatever later events say it became — but the
+            // counts are worth surfacing (`dflow get`/`timeline`)
+            JournalEvent::NodeEvicted { .. } => self.evictions += 1,
+            JournalEvent::NodeFailedOver { .. } => self.failovers += 1,
+            // informational; NodeLogs pointers are read straight off the
+            // journal records by `RunRegistry::logs` (they are carried
+            // across compaction, so folding them into the snapshot too
+            // would double them up on replay)
+            JournalEvent::ArtifactsReclaimed { .. }
+            | JournalEvent::NodeLogs { .. }
             | JournalEvent::SpanClosed { .. }
             | JournalEvent::TraceMirror { .. } => {}
         }
@@ -816,6 +853,8 @@ impl RecoveredRun {
                 Json::Obj(self.keyed.iter().map(|(k, o)| (k.clone(), o.to_json())).collect()),
             ),
             ("lint", Json::Arr(self.lint.iter().map(|w| Json::s(w.clone())).collect())),
+            ("failovers", Json::n(self.failovers as f64)),
+            ("evictions", Json::n(self.evictions as f64)),
         ])
     }
 
@@ -844,6 +883,9 @@ impl RecoveredRun {
                 rec.lint.push(w.as_str()?.to_string());
             }
         }
+        // absent in pre-flight-recorder snapshots — tolerate likewise
+        rec.failovers = j_u64(j, "failovers").unwrap_or(0);
+        rec.evictions = j_u64(j, "evictions").unwrap_or(0);
         Some(rec)
     }
 }
@@ -1310,9 +1352,17 @@ impl Journal {
                 "run {run_id} has not closed; compact only folds terminal runs"
             ));
         }
-        let spans: Vec<&Recorded> = records
+        // span bundles and log pointers ride along verbatim: neither folds
+        // into `RecoveredRun`, but `dflow profile` / `RunRegistry::logs`
+        // must keep finding them after the raw segments are gone
+        let carried: Vec<&Recorded> = records
             .iter()
-            .filter(|r| matches!(r.event, JournalEvent::SpanClosed { .. }))
+            .filter(|r| {
+                matches!(
+                    r.event,
+                    JournalEvent::SpanClosed { .. } | JournalEvent::NodeLogs { .. }
+                )
+            })
             .collect();
         let prefix = self.run_prefix(run_id);
         let keys = with_retry(STORAGE_RETRIES, || self.storage.list(&prefix))
@@ -1332,8 +1382,8 @@ impl Journal {
         };
         let mut buf = segment_header();
         buf.extend_from_slice(&frame_record(&recorded.encode()));
-        for span in &spans {
-            buf.extend_from_slice(&frame_record(&span.encode()));
+        for rec in &carried {
+            buf.extend_from_slice(&frame_record(&rec.encode()));
         }
         let snap = self.snap_key(run_id, max_idx);
         with_retry(STORAGE_RETRIES, || self.storage.upload(&snap, &buf))
@@ -1369,6 +1419,19 @@ impl Journal {
         let keys = with_retry(STORAGE_RETRIES, || self.storage.list(&prefix))
             .map_err(|e| e.to_string())?;
         Ok(keys.iter().filter_map(|k| parse_entry(k, &prefix)).any(|(_, snap)| snap))
+    }
+
+    /// Delete every log object of a run from the reclamation-exempt
+    /// `.logs/` namespace. Log retention is **deliberate**: neither
+    /// [`Journal::compact`] nor attempt reclamation nor `CasStore::gc`
+    /// ever touches these objects — aging them out is this call (surfaced
+    /// as `dflow compact --purge-logs`). The journaled `NodeLogs`
+    /// pointers stay behind; readers report purged chunks as unreadable
+    /// instead of silently showing nothing was ever logged.
+    pub fn purge_logs(&self, run_id: u64) -> Result<usize, String> {
+        let prefix = crate::obs::logs::run_logs_prefix(run_id);
+        with_retry(STORAGE_RETRIES, || self.storage.delete_prefix(&prefix))
+            .map_err(|e| e.to_string())
     }
 
     fn cancel_key(&self, run_id: u64) -> String {
@@ -1882,6 +1945,109 @@ impl RunRegistry {
         let first_ms = first_ms.min(last_ms);
         Ok(RunProfile::build(run_id, &workflow, (first_ms, last_ms), &spans))
     }
+
+    /// Fold the run's journaled `NodeLogs` pointers into readable streams
+    /// — the cross-process backing of `dflow logs`. Pointers are read
+    /// straight off the journal records (they are carried across
+    /// compaction), so this works live, post-hoc, and post-compaction.
+    /// A pointer whose object is gone (purged retention) still yields an
+    /// entry, with `error` set — evidence that logs existed must not
+    /// silently read as "nothing was logged".
+    ///
+    /// With `path`, only that node's attempts; a path no pointer mentions
+    /// is an error unless the run simply never logged (typo protection,
+    /// mirroring [`RunRegistry::node_timeline`]).
+    pub fn logs(
+        &self,
+        run_id: u64,
+        path: Option<&str>,
+        attempt: Option<u32>,
+    ) -> Result<Vec<AttemptLogs>, String> {
+        let (records, _) = self.journal.events(run_id)?;
+        let mut any_pointer = false;
+        let mut out = Vec::new();
+        for r in &records {
+            let JournalEvent::NodeLogs { path: p, attempt: a, key, bytes, truncated } =
+                &r.event
+            else {
+                continue;
+            };
+            any_pointer = true;
+            if path.is_some_and(|want| want != p.as_str())
+                || attempt.is_some_and(|want| want != *a)
+            {
+                continue;
+            }
+            let (lines, error) = match self.journal.storage().download(key) {
+                Ok(b) => (crate::obs::logs::decode(&b), None),
+                Err(e) => (Vec::new(), Some(e.to_string())),
+            };
+            out.push(AttemptLogs {
+                path: p.clone(),
+                attempt: *a,
+                key: key.clone(),
+                bytes: *bytes,
+                truncated: *truncated,
+                lines,
+                error,
+            });
+        }
+        if out.is_empty() && any_pointer {
+            if let Some(p) = path {
+                return Err(format!("run {run_id} journaled no logs for node path '{p}'"));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One attempt's flushed log chunk, located via its journaled `NodeLogs`
+/// pointer and decoded from the store ([`RunRegistry::logs`]).
+#[derive(Debug, Clone)]
+pub struct AttemptLogs {
+    pub path: String,
+    pub attempt: u32,
+    /// Store key of the encoded chunk (`.logs/run<id>/<path>/a<n>`).
+    pub key: String,
+    /// Encoded size the pointer recorded at flush time.
+    pub bytes: u64,
+    /// The ring overflowed before flush; the stream leads with an
+    /// explicit truncation marker line.
+    pub truncated: bool,
+    pub lines: Vec<crate::obs::logs::LogLine>,
+    /// Set when the pointer exists but the object could not be read
+    /// (e.g. logs were purged by retention).
+    pub error: Option<String>,
+}
+
+impl AttemptLogs {
+    /// JSON encoding (`dflow logs --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("path", Json::s(self.path.clone())),
+            ("attempt", Json::n(self.attempt as f64)),
+            ("key", Json::s(self.key.clone())),
+            ("bytes", Json::n(self.bytes as f64)),
+            ("truncated", Json::Bool(self.truncated)),
+            ("error", opt_str_json(&self.error)),
+            (
+                "lines",
+                Json::Arr(
+                    self.lines
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("seq", Json::n(l.seq as f64)),
+                                ("ts_ms", Json::n(l.ts_ms as f64)),
+                                ("level", Json::s(l.level.as_str())),
+                                ("msg", Json::s(l.msg.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -1935,6 +2101,13 @@ mod tests {
                 path: "main/b".into(),
                 prefix: "run1/main.b/a0/".into(),
                 objects: 2,
+            },
+            JournalEvent::NodeLogs {
+                path: "main/b".into(),
+                attempt: 0,
+                key: ".logs/run1/main.b/a0".into(),
+                bytes: 96,
+                truncated: true,
             },
             JournalEvent::SpanClosed {
                 path: "main/a".into(),

@@ -12,9 +12,13 @@
 //! dflow get <run_id>                    # recovered run state as JSON
 //! dflow timeline <run_id> [node-path]   # full event history of a run
 //! dflow watch <run_id>                  # tail a run's journal live
+//! dflow logs <run_id> [node-path] [--attempt N] [--follow] [--level L] [--json]
+//!                                       # captured OP logs: live tail, post-hoc,
+//!                                       # cross-process — survives compaction
 //! dflow cancel <run_id> [reason]        # durable cancel marker (applied by a live service)
 //! dflow retry <name> <run_id> [seed]    # resubmit: only the non-succeeded suffix re-runs
-//! dflow compact <run_id>|--all          # fold closed runs into snapshots
+//! dflow compact <run_id>|--all [--purge-logs]
+//!                                       # fold closed runs into snapshots
 //! dflow profile <run_id> [--json]       # per-phase latency breakdown + critical path
 //! dflow top [--json]                    # live fleet view over the shared store
 //! dflow metrics [name [seed]] [--json]  # Prometheus-text (or JSON) metrics export,
@@ -77,15 +81,20 @@ fn demo_fanout(seed: i64) -> Workflow {
 }
 
 /// Slow cooperative fan-out (~10 s): each slice checkpoints between
-/// sleeps, so `dflow cancel` from another terminal stops it mid-flight.
+/// sleeps, so `dflow cancel` from another terminal stops it mid-flight —
+/// and logs as it goes, so `dflow logs <id> --follow` has something to tail.
 fn demo_slow(seed: i64) -> Workflow {
     let op = Arc::new(FnOp::new(
         Signature::new().in_param("x", ParamType::Int).out_param("y", ParamType::Int),
         move |ctx| {
             let x = ctx.get_int("x")?;
-            for _ in 0..40 {
+            ctx.log(dflow::obs::LogLevel::Info, &format!("slice x={x}: starting 2s of work"));
+            for i in 0..40 {
                 ctx.checkpoint()?; // observes run-level cancel
                 std::thread::sleep(Duration::from_millis(50));
+                if i % 10 == 9 {
+                    ctx.log(dflow::obs::LogLevel::Debug, &format!("slice x={x}: {}/40 ticks", i + 1));
+                }
             }
             ctx.set("y", x + seed);
             Ok(())
@@ -210,10 +219,45 @@ fn cmd_lint(names: &[String], json: bool, deny_warnings: bool) -> Result<(), Str
     Ok(())
 }
 
+/// One-line human summary of the event payload: the failure/cancel
+/// message head, the backend a placement landed on, who evicted whom,
+/// lint warning counts, log-flush pointers. Empty for events whose kind
+/// plus path already says everything.
+fn event_detail(ev: &dflow::journal::JournalEvent) -> String {
+    use dflow::journal::JournalEvent as E;
+    let s = match ev {
+        E::RunFailed { message }
+        | E::NodeFailed { message, .. }
+        | E::NodeRetrying { message, .. } => message.clone(),
+        E::RunCancelled { reason } | E::NodeCancelled { reason, .. } => reason.clone(),
+        E::RunLinted { warnings } => format!("{} lint warning(s)", warnings.len()),
+        E::NodePlaced { backend, .. } => format!("-> {backend}"),
+        E::NodeEvicted { by, .. } => format!("evicted by {by}"),
+        E::NodeFailedOver { backend, message, .. } => format!("from {backend}: {message}"),
+        E::NodeLogs { key, bytes, truncated, .. } => {
+            format!("{bytes}B -> {key}{}", if *truncated { " (truncated)" } else { "" })
+        }
+        _ => String::new(),
+    };
+    // first line only (failure messages carry multi-line log tails), capped
+    let first = s.lines().next().unwrap_or("");
+    if first.chars().count() > 72 {
+        let head: String = first.chars().take(71).collect();
+        format!("{head}…")
+    } else {
+        first.to_string()
+    }
+}
+
 fn event_line(rec: &dflow::journal::Recorded) -> String {
     let ev = &rec.event;
     let path = ev.path().unwrap_or("");
-    format!("{:>13}  {:<19} {}", rec.at_ms, ev.kind(), path)
+    let detail = event_detail(ev);
+    if detail.is_empty() {
+        format!("{:>13}  {:<19} {}", rec.at_ms, ev.kind(), path)
+    } else {
+        format!("{:>13}  {:<19} {:<24} {detail}", rec.at_ms, ev.kind(), path)
+    }
 }
 
 /// One in-process service over the shared store: demo cluster + batched
@@ -301,11 +345,55 @@ fn parse_run_id(s: &str) -> Result<u64, String> {
     s.parse::<u64>().map_err(|_| format!("'{s}' is not a run id (u64)"))
 }
 
-fn cmd_get(arg: &str, store: &str) -> Result<(), String> {
+fn cmd_get(arg: &str, store: &str, json: bool) -> Result<(), String> {
     if let Ok(run_id) = arg.parse::<u64>() {
         let journal = open_journal(store)?;
         let rec = journal.replay(run_id)?;
-        println!("{}", rec.to_json().to_string_pretty());
+        if json {
+            println!("{}", rec.to_json().to_string_pretty());
+            return Ok(());
+        }
+        println!("run {run_id} — workflow '{}' — {:?}", rec.workflow, rec.phase);
+        if rec.resubmissions > 0 {
+            println!("  resubmissions: {}", rec.resubmissions);
+        }
+        if rec.failovers > 0 || rec.evictions > 0 {
+            println!("  {} failover(s), {} eviction(s)", rec.failovers, rec.evictions);
+        }
+        if !rec.lint.is_empty() {
+            println!("  {} lint warning(s) at admission:", rec.lint.len());
+            for w in &rec.lint {
+                println!("    {w}");
+            }
+        }
+        if !rec.message.is_empty() {
+            // terminal failure message; carries the captured log tail
+            for line in rec.message.lines() {
+                println!("  {line}");
+            }
+        }
+        for (path, n) in &rec.nodes {
+            println!(
+                "  {:<9} {:<32} attempts={}{}{}",
+                format!("{:?}", n.phase),
+                path,
+                n.attempts,
+                n.backend.as_deref().map(|b| format!(" on {b}")).unwrap_or_default(),
+                n.key.as_deref().map(|k| format!(" key={k}")).unwrap_or_default(),
+            );
+            // failure forensics: the journaled message ends with the last
+            // captured log lines of the failing attempt — show them inline
+            if matches!(n.phase, dflow::engine::NodePhase::Failed) && !n.message.is_empty() {
+                for line in n.message.lines() {
+                    println!("      {line}");
+                }
+            }
+        }
+        println!(
+            "  {} event(s) journaled{}  (logs: dflow logs {run_id} --store {store})",
+            rec.events,
+            if rec.torn_tail { ", torn tail truncated" } else { "" },
+        );
         return Ok(());
     }
     // legacy: pretty-print a saved status JSON file
@@ -333,10 +421,28 @@ fn cmd_get(arg: &str, store: &str) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_timeline(run_id: u64, path: Option<&str>, store: &str) -> Result<(), String> {
+fn cmd_timeline(run_id: u64, path: Option<&str>, store: &str, json: bool) -> Result<(), String> {
     let journal = open_journal(store)?;
-    let registry = RunRegistry::new(journal);
-    println!("{}", registry.timeline_json(run_id, path)?.to_string_pretty());
+    let registry = RunRegistry::new(Arc::clone(&journal));
+    if json {
+        println!("{}", registry.timeline_json(run_id, path)?.to_string_pretty());
+        return Ok(());
+    }
+    let rec = journal.replay(run_id)?;
+    println!(
+        "run {run_id} — '{}' — {:?}; {} failover(s), {} eviction(s), {} lint warning(s)",
+        rec.workflow,
+        rec.phase,
+        rec.failovers,
+        rec.evictions,
+        rec.lint.len(),
+    );
+    for w in &rec.lint {
+        println!("  lint: {w}");
+    }
+    for r in registry.node_timeline(run_id, path)? {
+        println!("{}", event_line(&r));
+    }
     Ok(())
 }
 
@@ -355,6 +461,122 @@ fn cmd_watch(run_id: u64, store: &str) -> Result<(), String> {
     let phase = RunWatch::new(journal, run_id)
         .follow(Duration::from_millis(250), |rec| println!("{}", event_line(rec)))?;
     println!("run {run_id} closed: {phase:?}");
+    Ok(())
+}
+
+/// Print one decoded log line (follow mode), honoring the level floor.
+fn print_follow_line(
+    path: &str,
+    attempt: u32,
+    l: &dflow::obs::LogLine,
+    min: Option<dflow::obs::LogLevel>,
+    json: bool,
+) {
+    if min.is_some_and(|m| l.level < m) {
+        return;
+    }
+    if json {
+        println!(
+            "{}",
+            dflow::jsonx::Json::obj(vec![
+                ("path", dflow::jsonx::Json::s(path)),
+                ("attempt", dflow::jsonx::Json::n(attempt as f64)),
+                ("seq", dflow::jsonx::Json::n(l.seq as f64)),
+                ("ts_ms", dflow::jsonx::Json::n(l.ts_ms as f64)),
+                ("level", dflow::jsonx::Json::s(l.level.as_str())),
+                ("msg", dflow::jsonx::Json::s(l.msg.clone())),
+            ])
+            .to_string_compact()
+        );
+    } else {
+        println!("[{path} a{attempt}] {}", dflow::obs::logs::render_line(l));
+    }
+}
+
+/// `dflow logs`: the flight recorder's read side. Post-hoc it folds the
+/// run's journaled `NodeLogs` pointers into readable streams (works
+/// cross-process and after compaction — the pointers are carried into
+/// snapshots). With `--follow` it tails the journal like `dflow watch`,
+/// downloading each chunk the moment its pointer lands, so a second
+/// terminal sees OP output near-live.
+fn cmd_logs(
+    run_id: u64,
+    path: Option<&str>,
+    attempt: Option<u32>,
+    follow: bool,
+    min_level: Option<dflow::obs::LogLevel>,
+    store: &str,
+    json: bool,
+) -> Result<(), String> {
+    let journal = open_journal(store)?;
+    if follow {
+        if !journal.run_ids()?.contains(&run_id) {
+            return Err(format!(
+                "run {run_id} has no journal records under '{store}' — check the id (`dflow \
+                 list`) and the --store directory"
+            ));
+        }
+        if !json {
+            println!("following run {run_id} logs (ctrl-c to stop; chunks are durable either way)");
+        }
+        let storage = Arc::clone(journal.storage());
+        let phase = RunWatch::new(Arc::clone(&journal), run_id).follow(
+            Duration::from_millis(250),
+            |rec| {
+                let dflow::journal::JournalEvent::NodeLogs { path: p, attempt: a, key, .. } =
+                    &rec.event
+                else {
+                    return;
+                };
+                if path.is_some_and(|want| want != p.as_str())
+                    || attempt.is_some_and(|want| want != *a)
+                {
+                    return;
+                }
+                // chunk may be gone if `compact --purge-logs` raced us
+                let Ok(bytes) = storage.download(key) else { return };
+                for l in dflow::obs::logs::decode(&bytes) {
+                    print_follow_line(p, *a, &l, min_level, json);
+                }
+            },
+        )?;
+        if !json {
+            println!("run {run_id} closed: {phase:?}");
+        }
+        return Ok(());
+    }
+    let registry = RunRegistry::new(journal);
+    let chunks = registry.logs(run_id, path, attempt)?;
+    if json {
+        let arr = dflow::jsonx::Json::Arr(chunks.iter().map(|c| c.to_json()).collect());
+        println!("{}", arr.to_string_pretty());
+        return Ok(());
+    }
+    if chunks.is_empty() {
+        println!(
+            "run {run_id} journaled no log chunks — the OPs logged nothing, or the engine \
+             ran with log capture off"
+        );
+        return Ok(());
+    }
+    for c in &chunks {
+        println!(
+            "== {} a{} — {} byte(s){}",
+            c.path,
+            c.attempt,
+            c.bytes,
+            if c.truncated { ", ring overflowed (oldest lines dropped)" } else { "" },
+        );
+        if let Some(e) = &c.error {
+            println!("   chunk unreadable ({e}) — purged by `dflow compact --purge-logs`?");
+        }
+        for l in &c.lines {
+            if min_level.is_some_and(|m| l.level < m) {
+                continue;
+            }
+            println!("{}", dflow::obs::logs::render_line(l));
+        }
+    }
     Ok(())
 }
 
@@ -393,7 +615,7 @@ fn cmd_retry(name: &str, run_id: u64, seed: i64, tenant: &str, store: &str) -> R
     Ok(())
 }
 
-fn cmd_compact(arg: &str, store: &str) -> Result<(), String> {
+fn cmd_compact(arg: &str, purge_logs: bool, store: &str) -> Result<(), String> {
     let journal = open_journal(store)?;
     let ids: Vec<u64> = if arg == "--all" {
         let registry = RunRegistry::new(Arc::clone(&journal));
@@ -413,6 +635,15 @@ fn cmd_compact(arg: &str, store: &str) -> Result<(), String> {
                 report.events_folded, report.segments_removed
             ),
             Err(e) => println!("run {id}: not compacted ({e})"),
+        }
+        if purge_logs {
+            // log retention is deliberate: chunks outlive compaction until
+            // the operator asks for them to go
+            match journal.purge_logs(id) {
+                Ok(0) => {}
+                Ok(n) => println!("run {id}: purged {n} captured log object(s)"),
+                Err(e) => println!("run {id}: logs not purged ({e})"),
+            }
         }
     }
     Ok(())
@@ -586,6 +817,10 @@ fn main() {
     // `--prom` is metrics' default output; accepted so scripts can be explicit
     let _prom = take_flag(&mut args, "--prom");
     let deny_warnings = take_flag(&mut args, "--deny-warnings");
+    let follow = take_flag(&mut args, "--follow");
+    let attempt = take_flag_value(&mut args, "--attempt").and_then(|s| s.parse::<u32>().ok());
+    let level = take_flag_value(&mut args, "--level");
+    let purge_logs = take_flag(&mut args, "--purge-logs");
     let arg = |i: usize| args.get(i).map(String::as_str);
     let result = match arg(0) {
         Some("workflows") | None => {
@@ -599,9 +834,9 @@ fn main() {
             let seed = arg(2).and_then(|s| s.parse().ok()).unwrap_or(0);
             cmd_submit(&name, seed, &tenant, &store)
         }
-        Some("get") => cmd_get(arg(1).unwrap_or(""), &store),
+        Some("get") => cmd_get(arg(1).unwrap_or(""), &store, json),
         Some("timeline") => match arg(1).map(parse_run_id) {
-            Some(Ok(id)) => cmd_timeline(id, arg(2), &store),
+            Some(Ok(id)) => cmd_timeline(id, arg(2), &store, json),
             Some(Err(e)) => Err(e),
             None => Err("usage: dflow timeline <run_id> [node-path]".to_string()),
         },
@@ -609,6 +844,24 @@ fn main() {
             Some(Ok(id)) => cmd_watch(id, &store),
             Some(Err(e)) => Err(e),
             None => Err("usage: dflow watch <run_id>".to_string()),
+        },
+        Some("logs") => match arg(1).map(parse_run_id) {
+            Some(Ok(id)) => {
+                match level.as_deref().map(|s| {
+                    dflow::obs::LogLevel::parse(s)
+                        .ok_or_else(|| format!("unknown --level '{s}' (debug|info|warn|error)"))
+                }) {
+                    Some(Err(e)) => Err(e),
+                    Some(Ok(l)) => cmd_logs(id, arg(2), attempt, follow, Some(l), &store, json),
+                    None => cmd_logs(id, arg(2), attempt, follow, None, &store, json),
+                }
+            }
+            Some(Err(e)) => Err(e),
+            None => Err(
+                "usage: dflow logs <run_id> [node-path] [--attempt N] [--follow] [--level L] \
+                 [--json]"
+                    .to_string(),
+            ),
         },
         Some("cancel") => match arg(1).map(parse_run_id) {
             Some(Ok(id)) => {
@@ -632,8 +885,8 @@ fn main() {
             }
         }
         Some("compact") => match arg(1) {
-            Some(a) => cmd_compact(a, &store),
-            None => Err("usage: dflow compact <run_id>|--all".to_string()),
+            Some(a) => cmd_compact(a, purge_logs, &store),
+            None => Err("usage: dflow compact <run_id>|--all [--purge-logs]".to_string()),
         },
         Some("profile") => match arg(1).map(parse_run_id) {
             Some(Ok(id)) => cmd_profile(id, &store, json),
@@ -653,7 +906,7 @@ fn main() {
         }
         Some(other) => Err(format!(
             "unknown command '{other}' (try: workflows, lint, submit, list, get, timeline, \
-             watch, cancel, retry, compact, profile, top, metrics, artifacts, cluster)"
+             watch, logs, cancel, retry, compact, profile, top, metrics, artifacts, cluster)"
         )),
     };
     if let Err(e) = result {

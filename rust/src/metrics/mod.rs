@@ -119,6 +119,11 @@ pub struct Registry {
     /// Journal appends that failed (the run keeps going, but its durable
     /// history has a gap — surfaced so operators notice).
     pub journal_errors: Counter,
+    /// Encoded log bytes flushed to the `.logs/` namespace (flight
+    /// recorder).
+    pub log_bytes: Counter,
+    /// Log-buffer flushes (one per attempt that logged anything).
+    pub log_flushes: Counter,
     /// Engine dispatch latency (ready → running) — log-linear histogram
     /// (p50/p90/p99/max), mergeable across runs for fleet aggregation.
     pub dispatch: Histogram,
@@ -149,6 +154,8 @@ impl Registry {
             ("failovers", Json::n(self.failovers.get() as f64)),
             ("artifacts_reclaimed", Json::n(self.artifacts_reclaimed.get() as f64)),
             ("journal_errors", Json::n(self.journal_errors.get() as f64)),
+            ("log_bytes", Json::n(self.log_bytes.get() as f64)),
+            ("log_flushes", Json::n(self.log_flushes.get() as f64)),
             ("dispatch_mean_us", Json::n(self.dispatch.mean().as_secs_f64() * 1e6)),
             ("dispatch_p99_us", Json::n(self.dispatch.p99().as_secs_f64() * 1e6)),
             ("dispatch_max_us", Json::n(self.dispatch.max().as_secs_f64() * 1e6)),
@@ -180,6 +187,8 @@ impl Registry {
         self.failovers.add(other.failovers.get());
         self.artifacts_reclaimed.add(other.artifacts_reclaimed.get());
         self.journal_errors.add(other.journal_errors.get());
+        self.log_bytes.add(other.log_bytes.get());
+        self.log_flushes.add(other.log_flushes.get());
         self.pjrt_calls.add(other.pjrt_calls.get());
         self.dispatch.merge_from(&other.dispatch);
         self.op_exec.merge_from(&other.op_exec);
@@ -252,6 +261,16 @@ impl Registry {
             "dflow_journal_errors_total",
             "Journal appends that failed.",
             self.journal_errors.get(),
+        );
+        doc.counter(
+            "dflow_log_bytes_total",
+            "Encoded log bytes flushed to the .logs/ namespace.",
+            self.log_bytes.get(),
+        );
+        doc.counter(
+            "dflow_log_flushes_total",
+            "Attempt log-buffer flushes.",
+            self.log_flushes.get(),
         );
         doc.counter("dflow_pjrt_calls_total", "PJRT execute calls.", self.pjrt_calls.get());
         doc.summary(

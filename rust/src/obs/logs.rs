@@ -1,0 +1,478 @@
+//! Attempt-level flight recorder: bounded in-memory log capture with
+//! store-backed durability.
+//!
+//! Every OP attempt gets a [`LogSink`] on its `OpCtx`. OPs write structured
+//! lines through `ctx.log(level, msg)`; script OPs additionally get their
+//! stdout/stderr captured line-by-line, and panicking Fn OPs get the panic
+//! payload recorded before the attempt frame is torn down. Lines accumulate
+//! in a bounded ring ([`LogBuffer`]) — when the byte cap is exceeded the
+//! *oldest* lines are dropped and an explicit `…truncated N bytes…` marker
+//! is emitted on flush, so readers always know evidence went missing rather
+//! than silently reading a hole.
+//!
+//! Durability is deliberate, not incidental:
+//!
+//! * at attempt exit the engine encodes the buffer ([`LogChunk::encode`])
+//!   and uploads it to the **journal's** store under the
+//!   [`run_logs_prefix`] namespace (`.logs/run<id>/<path>/a<n>`). That
+//!   namespace is disjoint from the per-attempt artifact namespace
+//!   (`run<id>/<path>/a<n>/`), so attempt reclamation after a failure or
+//!   timeout never touches it — failed attempts keep their logs, which is
+//!   the whole point;
+//! * a compact [`crate::journal::JournalEvent::NodeLogs`] pointer record is
+//!   journaled per flush and carried across `Journal::compact` (same
+//!   mechanism as `SpanClosed`), so a cold process can locate every chunk
+//!   from the journal alone;
+//! * log objects age out only via `Journal::purge_logs` (surfaced as
+//!   `dflow compact --purge-logs`) — never as a side effect of compaction
+//!   or CAS garbage collection.
+//!
+//! The whole layer is gated by `EngineConfig::log_capture`: a disabled sink
+//! is a `None` and every call on it is a no-op; an enabled-but-idle sink
+//! holds empty buffers, so there is no per-line heap traffic until
+//! something actually logs.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::util::epoch_ms;
+
+/// How many trailing lines get attached to a journaled failure message.
+pub const FAILURE_TAIL_LINES: usize = 8;
+
+/// Per-line bookkeeping overhead charged against the buffer's byte cap, so
+/// a flood of tiny lines cannot hold an unbounded number of entries.
+const LINE_OVERHEAD: usize = 32;
+
+/// Severity of a captured log line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LogLevel {
+    Debug,
+    Info,
+    Warn,
+    Error,
+}
+
+impl LogLevel {
+    /// Stable uppercase tag used in the encoded stream and CLI output.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LogLevel::Debug => "DEBUG",
+            LogLevel::Info => "INFO",
+            LogLevel::Warn => "WARN",
+            LogLevel::Error => "ERROR",
+        }
+    }
+
+    /// Case-insensitive parse; accepts the common long/short spellings.
+    pub fn parse(s: &str) -> Option<LogLevel> {
+        match s.to_ascii_lowercase().as_str() {
+            "debug" | "dbg" => Some(LogLevel::Debug),
+            "info" => Some(LogLevel::Info),
+            "warn" | "warning" => Some(LogLevel::Warn),
+            "error" | "err" => Some(LogLevel::Error),
+            _ => None,
+        }
+    }
+}
+
+/// One captured line: monotonic per-attempt sequence, wall-clock
+/// timestamp in ms, severity, and the message text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogLine {
+    /// 1-based per-attempt sequence. Sequence 0 is reserved for the
+    /// synthetic truncation marker.
+    pub seq: u64,
+    pub ts_ms: u64,
+    pub level: LogLevel,
+    pub msg: String,
+}
+
+impl LogLine {
+    fn cost(&self) -> usize {
+        self.msg.len() + LINE_OVERHEAD
+    }
+}
+
+/// Render a line the way `dflow logs` prints it.
+pub fn render_line(l: &LogLine) -> String {
+    format!("{:>5} {:>13} {:<5} {}", l.seq, l.ts_ms, l.level.as_str(), l.msg)
+}
+
+struct BufferInner {
+    lines: VecDeque<LogLine>,
+    bytes: usize,
+    truncated_bytes: u64,
+    next_seq: u64,
+}
+
+/// Bounded ring of [`LogLine`]s. Oldest lines are evicted once the byte
+/// cap is exceeded; the evicted volume is accounted so the flush can emit
+/// an explicit truncation marker.
+pub struct LogBuffer {
+    cap_bytes: usize,
+    inner: Mutex<BufferInner>,
+}
+
+impl LogBuffer {
+    pub fn new(cap_bytes: usize) -> LogBuffer {
+        LogBuffer {
+            cap_bytes: cap_bytes.max(LINE_OVERHEAD * 2),
+            inner: Mutex::new(BufferInner {
+                lines: VecDeque::new(),
+                bytes: 0,
+                truncated_bytes: 0,
+                next_seq: 1,
+            }),
+        }
+    }
+
+    /// Append a line, evicting from the front if the cap is exceeded. The
+    /// newest line always survives, even when it alone exceeds the cap.
+    pub fn push(&self, level: LogLevel, msg: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        let line = LogLine { seq: inner.next_seq, ts_ms: epoch_ms(), level, msg: to_line(msg) };
+        inner.next_seq += 1;
+        inner.bytes += line.cost();
+        inner.lines.push_back(line);
+        while inner.bytes > self.cap_bytes && inner.lines.len() > 1 {
+            let dropped = inner.lines.pop_front().expect("len > 1");
+            inner.bytes -= dropped.cost();
+            inner.truncated_bytes += dropped.cost() as u64;
+        }
+    }
+
+    /// Drain the buffer into a flushable chunk; `None` when nothing was
+    /// ever logged. The buffer is reusable afterwards (sequence keeps
+    /// climbing), though the engine flushes once per attempt.
+    pub fn take_chunk(&self) -> Option<LogChunk> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.lines.is_empty() && inner.truncated_bytes == 0 {
+            return None;
+        }
+        let lines: Vec<LogLine> = inner.lines.drain(..).collect();
+        inner.bytes = 0;
+        let truncated_bytes = inner.truncated_bytes;
+        inner.truncated_bytes = 0;
+        Some(LogChunk { lines, truncated_bytes })
+    }
+}
+
+/// Collapse interior newlines so one `push` is always one encoded line.
+fn to_line(msg: &str) -> String {
+    if msg.contains('\n') {
+        msg.replace('\n', " ⏎ ")
+    } else {
+        msg.to_string()
+    }
+}
+
+/// Handle the engine threads onto an attempt's buffer. `Clone` is cheap
+/// (an `Arc`), and the disabled variant makes every operation free.
+#[derive(Clone, Default)]
+pub struct LogSink(Option<Arc<LogBuffer>>);
+
+impl LogSink {
+    /// A sink that drops everything — capture disabled.
+    pub fn disabled() -> LogSink {
+        LogSink(None)
+    }
+
+    /// A live sink with the given byte cap.
+    pub fn buffered(cap_bytes: usize) -> LogSink {
+        LogSink(Some(Arc::new(LogBuffer::new(cap_bytes))))
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Record one line. No-op (and allocation-free) when disabled.
+    pub fn push(&self, level: LogLevel, msg: &str) {
+        if let Some(buf) = &self.0 {
+            buf.push(level, msg);
+        }
+    }
+
+    /// Capture a finished process's stdout (as `INFO`) and stderr (as
+    /// `WARN`), line by line. Blank lines are skipped; `DF_OUT` output
+    /// parameter markers are control traffic, not logs.
+    pub fn capture_streams(&self, stdout: &[u8], stderr: &[u8]) {
+        let Some(buf) = &self.0 else { return };
+        for line in String::from_utf8_lossy(stdout).lines() {
+            let line = line.trim_end();
+            if line.is_empty() || line.starts_with("DF_OUT ") {
+                continue;
+            }
+            buf.push(LogLevel::Info, line);
+        }
+        for line in String::from_utf8_lossy(stderr).lines() {
+            let line = line.trim_end();
+            if line.is_empty() {
+                continue;
+            }
+            buf.push(LogLevel::Warn, line);
+        }
+    }
+
+    /// Drain the buffer for flushing; `None` when disabled or idle.
+    pub fn take_chunk(&self) -> Option<LogChunk> {
+        self.0.as_ref()?.take_chunk()
+    }
+}
+
+/// A drained, flush-ready batch of lines.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogChunk {
+    pub lines: Vec<LogLine>,
+    /// Bytes evicted from the ring before this flush; > 0 means the
+    /// encoded stream starts with a truncation marker.
+    pub truncated_bytes: u64,
+}
+
+impl LogChunk {
+    /// Encode as a tab-separated text stream, one line per record:
+    /// `seq \t ts_ms \t LEVEL \t msg` with `\`, tab and newline escaped.
+    /// Truncation is a synthetic seq-0 WARN record so decoders need no
+    /// side channel.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = String::new();
+        if self.truncated_bytes > 0 {
+            let ts = self.lines.first().map(|l| l.ts_ms).unwrap_or(0);
+            out.push_str(&format!(
+                "0\t{ts}\tWARN\t…truncated {} bytes…\n",
+                self.truncated_bytes
+            ));
+        }
+        for l in &self.lines {
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\n",
+                l.seq,
+                l.ts_ms,
+                l.level.as_str(),
+                escape(&l.msg)
+            ));
+        }
+        out.into_bytes()
+    }
+
+    /// Last-K lines for inline failure forensics.
+    pub fn tail(&self) -> &[LogLine] {
+        let n = self.lines.len();
+        &self.lines[n.saturating_sub(FAILURE_TAIL_LINES)..]
+    }
+}
+
+/// Render the forensic tail attached to journaled failure messages.
+/// Empty chunks render to `None` so messages stay clean when the OP was
+/// silent.
+pub fn failure_tail(chunk: &LogChunk) -> Option<String> {
+    let tail = chunk.tail();
+    if tail.is_empty() {
+        return None;
+    }
+    let mut out = format!("--- last {} captured log line(s) ---", tail.len());
+    for l in tail {
+        out.push_str(&format!("\n[{} {}] {}", l.seq, l.level.as_str(), l.msg));
+    }
+    Some(out)
+}
+
+fn escape(s: &str) -> String {
+    if !s.contains(['\\', '\t', '\n']) {
+        return s.to_string();
+    }
+    s.replace('\\', "\\\\").replace('\t', "\\t").replace('\n', "\\n")
+}
+
+fn unescape(s: &str) -> String {
+    if !s.contains('\\') {
+        return s.to_string();
+    }
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('t') => out.push('\t'),
+            Some('n') => out.push('\n'),
+            Some('\\') => out.push('\\'),
+            Some(other) => {
+                out.push('\\');
+                out.push(other);
+            }
+            None => out.push('\\'),
+        }
+    }
+    out
+}
+
+/// Decode a stream produced by [`LogChunk::encode`]. Malformed lines are
+/// skipped rather than failing the whole read — a torn tail must not make
+/// the intact prefix unreadable.
+pub fn decode(bytes: &[u8]) -> Vec<LogLine> {
+    let mut out = Vec::new();
+    for raw in String::from_utf8_lossy(bytes).lines() {
+        let mut parts = raw.splitn(4, '\t');
+        let (Some(seq), Some(ts), Some(level), Some(msg)) =
+            (parts.next(), parts.next(), parts.next(), parts.next())
+        else {
+            continue;
+        };
+        let (Ok(seq), Ok(ts_ms), Some(level)) =
+            (seq.parse::<u64>(), ts.parse::<u64>(), LogLevel::parse(level))
+        else {
+            continue;
+        };
+        out.push(LogLine { seq, ts_ms, level, msg: unescape(msg) });
+    }
+    out
+}
+
+/// Storage key for one attempt's log object, in the reclamation-exempt
+/// `.logs/` namespace (attempt reclamation deletes
+/// `run<id>/<path>/a<n>/` prefixes and never looks here).
+pub fn log_key(run_id: u64, path: &str, attempt: u32) -> String {
+    format!(".logs/run{run_id}/{}/a{attempt}", path.replace('/', "."))
+}
+
+/// Prefix holding every log object of a run — the unit of deliberate
+/// retention (`Journal::purge_logs`).
+pub fn run_logs_prefix(run_id: u64) -> String {
+    format!(".logs/run{run_id}/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_roundtrip_and_order() {
+        for l in [LogLevel::Debug, LogLevel::Info, LogLevel::Warn, LogLevel::Error] {
+            assert_eq!(LogLevel::parse(l.as_str()), Some(l));
+        }
+        assert_eq!(LogLevel::parse("warning"), Some(LogLevel::Warn));
+        assert_eq!(LogLevel::parse("nope"), None);
+        assert!(LogLevel::Debug < LogLevel::Info);
+        assert!(LogLevel::Warn < LogLevel::Error);
+    }
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        let sink = LogSink::disabled();
+        assert!(!sink.is_enabled());
+        sink.push(LogLevel::Info, "dropped");
+        sink.capture_streams(b"out\n", b"err\n");
+        assert!(sink.take_chunk().is_none());
+    }
+
+    #[test]
+    fn idle_sink_flushes_nothing() {
+        let sink = LogSink::buffered(4096);
+        assert!(sink.is_enabled());
+        assert!(sink.take_chunk().is_none());
+    }
+
+    #[test]
+    fn lines_get_monotonic_sequence_and_roundtrip() {
+        let sink = LogSink::buffered(4096);
+        sink.push(LogLevel::Info, "first");
+        sink.push(LogLevel::Error, "with\ttab and \\slash");
+        let chunk = sink.take_chunk().expect("chunk");
+        assert_eq!(chunk.truncated_bytes, 0);
+        assert_eq!(chunk.lines.len(), 2);
+        assert_eq!(chunk.lines[0].seq, 1);
+        assert_eq!(chunk.lines[1].seq, 2);
+        let decoded = decode(&chunk.encode());
+        assert_eq!(decoded, chunk.lines);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_marks_truncation() {
+        let sink = LogSink::buffered(200);
+        for i in 0..50 {
+            sink.push(LogLevel::Info, &format!("line {i}"));
+        }
+        let chunk = sink.take_chunk().expect("chunk");
+        assert!(chunk.truncated_bytes > 0, "small cap must evict");
+        // the newest line always survives
+        assert_eq!(chunk.lines.last().unwrap().msg, "line 49");
+        // sequences stay monotonic across the eviction hole
+        let seqs: Vec<u64> = chunk.lines.iter().map(|l| l.seq).collect();
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]));
+        // encoded stream leads with the synthetic marker
+        let decoded = decode(&chunk.encode());
+        assert_eq!(decoded[0].seq, 0);
+        assert_eq!(decoded[0].level, LogLevel::Warn);
+        assert!(decoded[0].msg.contains("truncated"));
+        assert!(decoded[0].msg.contains("bytes"));
+    }
+
+    #[test]
+    fn oversized_single_line_survives() {
+        let sink = LogSink::buffered(64);
+        sink.push(LogLevel::Warn, &"x".repeat(500));
+        let chunk = sink.take_chunk().expect("chunk");
+        assert_eq!(chunk.lines.len(), 1);
+        assert_eq!(chunk.lines[0].msg.len(), 500);
+    }
+
+    #[test]
+    fn stream_capture_levels_and_df_out_filter() {
+        let sink = LogSink::buffered(4096);
+        sink.capture_streams(
+            b"progress 1\nDF_OUT x=1\n\nprogress 2\n",
+            b"warning: drift\n",
+        );
+        let chunk = sink.take_chunk().expect("chunk");
+        let msgs: Vec<(&str, LogLevel)> =
+            chunk.lines.iter().map(|l| (l.msg.as_str(), l.level)).collect();
+        assert_eq!(
+            msgs,
+            vec![
+                ("progress 1", LogLevel::Info),
+                ("progress 2", LogLevel::Info),
+                ("warning: drift", LogLevel::Warn),
+            ]
+        );
+    }
+
+    #[test]
+    fn multiline_push_becomes_one_line() {
+        let sink = LogSink::buffered(4096);
+        sink.push(LogLevel::Info, "a\nb");
+        let chunk = sink.take_chunk().expect("chunk");
+        assert_eq!(chunk.lines.len(), 1);
+        assert!(!chunk.lines[0].msg.contains('\n'));
+    }
+
+    #[test]
+    fn failure_tail_keeps_last_k() {
+        let sink = LogSink::buffered(1 << 20);
+        for i in 0..20 {
+            sink.push(LogLevel::Info, &format!("step {i}"));
+        }
+        let chunk = sink.take_chunk().expect("chunk");
+        let tail = failure_tail(&chunk).expect("tail");
+        assert!(tail.contains(&format!("last {FAILURE_TAIL_LINES} captured")));
+        assert!(tail.contains("step 19"));
+        assert!(!tail.contains("step 11\n") && !tail.contains("step 0\n"));
+    }
+
+    #[test]
+    fn decode_skips_malformed_lines() {
+        let decoded = decode(b"garbage\n1\t2\tINFO\tok\nnot\tanumber\tINFO\tx\n");
+        assert_eq!(decoded.len(), 1);
+        assert_eq!(decoded[0].msg, "ok");
+    }
+
+    #[test]
+    fn keys_live_in_dot_logs_namespace() {
+        assert_eq!(log_key(7, "main/s2", 1), ".logs/run7/main.s2/a1");
+        assert_eq!(run_logs_prefix(7), ".logs/run7/");
+        assert!(log_key(7, "main/s2", 1).starts_with(&run_logs_prefix(7)));
+    }
+}

@@ -14,18 +14,26 @@
 //! * [`export`] / [`profile`] — a Prometheus text-format + JSON metrics
 //!   document (`Engine::export_metrics`, `WorkflowService::
 //!   export_metrics`, `dflow metrics`) and derived run profiles with
-//!   critical-path reconstruction (`dflow profile`, `dflow top`).
+//!   critical-path reconstruction (`dflow profile`, `dflow top`);
+//! * [`logs`] — the attempt-level flight recorder (ISSUE 10): bounded
+//!   per-attempt log capture (`ctx.log`, script stdout/stderr, panic
+//!   payloads) flushed to a reclamation-exempt `.logs/` namespace with
+//!   journaled `NodeLogs` pointers, failure tails, and the live
+//!   `dflow logs --follow` stream.
 //!
 //! Telemetry is on by default and costs ≤5% wall-clock on the 10k-node
 //! DAG bench (`benches/c7_obs.rs` asserts it); `EngineConfig::telemetry
-//! = false` turns the span layer off entirely.
+//! = false` turns the span layer off entirely, and
+//! `EngineConfig::log_capture = false` does the same for log capture.
 
 pub mod export;
 pub mod hist;
+pub mod logs;
 pub mod profile;
 pub mod span;
 
 pub use export::{Family, MetricKind, MetricsDoc, Sample};
 pub use hist::{bucket_upper_ns, HistSummary, Histogram, BUCKETS};
+pub use logs::{LogBuffer, LogChunk, LogLevel, LogLine, LogSink, FAILURE_TAIL_LINES};
 pub use profile::{CritStep, PhaseTotal, RunProfile, StepProfile};
 pub use span::{ClosedSpan, Phase, SpanRecorder, SpanScope, SpanSeg, DEFAULT_SPAN_CAP, PHASES};

@@ -171,6 +171,11 @@ pub struct ServiceMetrics {
     /// High-water mark of concurrently live runs, per tenant (the quota
     /// invariant: never exceeds `quota_for(tenant)`).
     pub live_peak: LabelCounters,
+    /// Encoded log bytes the tenant's runs flushed to the `.logs/`
+    /// namespace (flight recorder), folded in at reap.
+    pub log_bytes: LabelCounters,
+    /// Attempt log-buffer flushes per tenant, folded in at reap.
+    pub log_flushes: LabelCounters,
     /// Closed-run journal compactions performed by the maintenance tick.
     pub compactions: Counter,
     /// Durable cancel markers picked up by the maintenance tick.
@@ -194,6 +199,8 @@ impl ServiceMetrics {
             ("failed", self.failed.to_json()),
             ("cancelled", self.cancelled.to_json()),
             ("live_peak", self.live_peak.to_json()),
+            ("log_bytes", self.log_bytes.to_json()),
+            ("log_flushes", self.log_flushes.to_json()),
             ("compactions", Json::n(self.compactions.get() as f64)),
             ("cancel_requests", Json::n(self.cancel_requests.get() as f64)),
             ("queue_wait", self.queue_wait.summary().to_json()),
@@ -395,6 +402,9 @@ impl SvcInner {
             RunPhase::Cancelled => self.metrics.cancelled.inc(&tenant),
             _ => self.metrics.failed.inc(&tenant),
         }
+        // fold the run's flight-recorder traffic into the tenant families
+        self.metrics.log_bytes.add(&tenant, result.run.metrics.log_bytes.get());
+        self.metrics.log_flushes.add(&tenant, result.run.metrics.log_flushes.get());
         let mut st = self.state.lock().unwrap();
         if let Some(lr) = st.live.remove(&run_id) {
             self.metrics.run_duration.observe(lr.started_at.elapsed());
@@ -849,7 +859,7 @@ impl WorkflowService {
     pub fn export_metrics(&self) -> MetricsDoc {
         let mut doc = self.inner.engine.export_metrics();
         let m = &self.inner.metrics;
-        let tenant_families: [(&str, &str, &LabelCounters); 6] = [
+        let tenant_families: [(&str, &str, &LabelCounters); 8] = [
             (
                 "dflow_svc_submitted_total",
                 "Submissions accepted into the admission queue.",
@@ -864,6 +874,16 @@ impl WorkflowService {
             ("dflow_svc_succeeded_total", "Runs reaped as succeeded.", &m.succeeded),
             ("dflow_svc_failed_total", "Runs reaped as failed.", &m.failed),
             ("dflow_svc_cancelled_total", "Runs reaped as cancelled.", &m.cancelled),
+            (
+                "dflow_svc_log_bytes_total",
+                "Flight-recorder bytes flushed by the tenant's reaped runs.",
+                &m.log_bytes,
+            ),
+            (
+                "dflow_svc_log_flushes_total",
+                "Attempt log-buffer flushes by the tenant's reaped runs.",
+                &m.log_flushes,
+            ),
         ];
         for (name, help, counters) in tenant_families {
             for (tenant, v) in counters.snapshot() {
@@ -916,6 +936,23 @@ impl WorkflowService {
             "High-water mark of the admission queue.",
             st.queue_peak as f64,
         );
+        // current backend-slot usage, summed over the tenant's live runs
+        // (quota groundwork: today's quota counts runs, not slots — these
+        // gauges measure slot pressure before it gets enforced)
+        let mut slots: BTreeMap<(String, String), u64> = BTreeMap::new();
+        for lr in st.live.values() {
+            for (backend, n) in lr.run.backend_slots() {
+                *slots.entry((lr.tenant.clone(), backend)).or_insert(0) += n;
+            }
+        }
+        for ((tenant, backend), n) in slots {
+            doc.gauge_labeled(
+                "dflow_svc_backend_slots",
+                "Backend slots currently held by the tenant's live runs.",
+                &[("tenant", tenant.as_str()), ("backend", backend.as_str())],
+                n as f64,
+            );
+        }
         doc
     }
 

@@ -1,0 +1,484 @@
+//! Flight-recorder battery: attempt-level OP log capture end to end.
+//!
+//! Covers the PR's acceptance path (a 3-step run whose middle step fails
+//! after logging — the logs must be readable post-hoc, after compaction,
+//! and inline in the journaled failure), the durability edges (reclaimed
+//! attempts, resubmit-after-crash, deliberate purge), the cross-process
+//! tail (`dflow logs --follow`'s RunWatch pattern), the off-switch, and
+//! the service-level per-tenant export.
+//!
+//! Run via `make test-logs` (part of `make ci`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use dflow::check;
+use dflow::core::{
+    ContainerTemplate, FnOp, OpError, ParamType, ShellOp, Signature, Step, StepPolicy, Steps,
+    Workflow,
+};
+use dflow::engine::{Engine, NodePhase, RunPhase};
+use dflow::journal::{Appender, Journal, JournalEvent, RunRegistry};
+use dflow::obs::LogLevel;
+use dflow::service::{RunWatch, ServiceConfig, WorkflowService};
+use dflow::storage::{MemStorage, StorageClient};
+
+/// Serial n-step chain `main/s1 .. main/sn`; every step logs two lines,
+/// and step `fail_at` (1-based, if any) logs an ERROR then fails fatally.
+fn logging_chain(n: usize, fail_at: Option<usize>) -> Workflow {
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int),
+        move |ctx| {
+            let i = ctx.get_int("i")?;
+            ctx.log(LogLevel::Info, &format!("step {i}: preparing inputs"));
+            ctx.log(LogLevel::Debug, &format!("step {i}: scratch dir ready"));
+            if fail_at == Some(i as usize) {
+                ctx.log(LogLevel::Error, "giving up: input checksum mismatch");
+                return Err(OpError::Fatal("input checksum mismatch".into()));
+            }
+            Ok(())
+        },
+    ));
+    let mut steps = Steps::new("main");
+    for i in 1..=n {
+        steps = steps.then(Step::new(&format!("s{i}"), "op").param("i", i as i64));
+    }
+    Workflow::new("logging-chain")
+        .container(ContainerTemplate::new("op", op))
+        .steps(steps)
+        .entrypoint("main")
+}
+
+/// The acceptance scenario: 3 steps, step 2 fails after logging. The
+/// captured lines must be readable through `RunRegistry::logs` (the
+/// `dflow logs` backing) post-hoc, still readable after
+/// `Journal::compact` (pointers are carried), show up inline in the
+/// journaled `NodeFailed` message (`dflow get` forensics), and only a
+/// deliberate `purge_logs` removes the chunks — leaving honest
+/// error-marked entries behind.
+#[test]
+fn failing_step_logs_survive_failure_compaction_and_only_purge_removes_them() {
+    let mem = Arc::new(MemStorage::new());
+    let storage: Arc<dyn StorageClient> = mem.clone();
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let engine = Engine::builder().storage(storage).journal(journal.clone()).build();
+    let r = engine.run(&logging_chain(3, Some(2))).unwrap();
+    assert!(!r.succeeded());
+    assert!(r.error.as_deref().unwrap().contains("input checksum mismatch"));
+    assert!(r.run.metrics.log_flushes.get() >= 2, "s1 and s2 both flushed");
+    assert!(r.run.metrics.log_bytes.get() > 0);
+
+    // post-hoc: the failing step's chunk decodes, in capture order
+    let registry = RunRegistry::new(Arc::clone(&journal));
+    let read_s2 = |reg: &RunRegistry| reg.logs(r.run.id, Some("main/s2"), None).unwrap();
+    let chunks = read_s2(&registry);
+    assert_eq!(chunks.len(), 1);
+    let c = &chunks[0];
+    assert_eq!((c.attempt, c.truncated, &c.error), (0, false, &None));
+    assert!(c.key.starts_with(".logs/"), "log namespace must be dot-prefixed: {}", c.key);
+    let msgs: Vec<&str> = c.lines.iter().map(|l| l.msg.as_str()).collect();
+    assert_eq!(
+        msgs,
+        vec![
+            "step 2: preparing inputs",
+            "step 2: scratch dir ready",
+            "giving up: input checksum mismatch"
+        ]
+    );
+    assert!(c.lines.windows(2).all(|w| w[0].seq < w[1].seq), "seq must be monotonic");
+    // the step that never ran has no logs — and saying so is an error,
+    // not an empty success (typo protection)
+    assert!(registry.logs(r.run.id, Some("main/s3"), None).is_err());
+
+    // forensics: the journaled failure carries the last captured lines
+    let rec = journal.replay(r.run.id).unwrap();
+    let failed = &rec.nodes["main/s2"];
+    assert_eq!(failed.phase, NodePhase::Failed);
+    assert!(failed.message.contains("--- last"), "no log tail in: {}", failed.message);
+    assert!(failed.message.contains("giving up: input checksum mismatch"));
+    assert!(failed.message.contains("input checksum mismatch"), "original error kept");
+
+    // compaction folds events into a snapshot but carries the pointers
+    let report = journal.compact(r.run.id).unwrap();
+    assert!(report.events_folded > 0);
+    let registry = RunRegistry::new(Arc::clone(&journal));
+    let after = read_s2(&registry);
+    assert_eq!(after[0].lines, c.lines, "chunks must survive compaction");
+    // ... and the folded failure message still shows the tail
+    let rec = journal.replay(r.run.id).unwrap();
+    assert!(rec.nodes["main/s2"].message.contains("giving up: input checksum mismatch"));
+
+    // retention is deliberate: purge removes chunks, pointers stay behind
+    // as evidence with an explicit read error
+    let purged = journal.purge_logs(r.run.id).unwrap();
+    assert!(purged >= 2, "s1 + s2 chunks should be purged, got {purged}");
+    let gone = read_s2(&registry);
+    assert_eq!(gone.len(), 1);
+    assert!(gone[0].error.is_some(), "purged chunk must be marked unreadable");
+    assert!(gone[0].lines.is_empty());
+
+    check::assert_all_drained(&engine, None, Some(&journal));
+}
+
+/// A failed attempt's artifact namespace is reclaimed, but its log chunk
+/// lives in the disjoint `.logs/` namespace and must survive.
+#[test]
+fn reclaimed_attempt_keeps_its_logs() {
+    let mem = Arc::new(MemStorage::new());
+    let storage: Arc<dyn StorageClient> = mem.clone();
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let engine = Engine::builder().storage(storage).journal(journal.clone()).build();
+    let op = Arc::new(FnOp::new(Signature::new(), |ctx| {
+        ctx.log(LogLevel::Info, "writing partial output");
+        ctx.write_artifact("junk", b"partial output")?;
+        Err(OpError::Fatal("boom after writing".into()))
+    }));
+    let wf = Workflow::new("w")
+        .container(ContainerTemplate::new("boom", op))
+        .steps(Steps::new("main").then(Step::new("s", "boom")))
+        .entrypoint("main");
+    let r = engine.run(&wf).unwrap();
+    assert!(!r.succeeded());
+    let leftovers = mem.list(&format!("run{}/", r.run.id)).unwrap();
+    assert!(leftovers.is_empty(), "attempt artifacts must be reclaimed: {leftovers:?}");
+    let log_keys = mem.list(&format!(".logs/run{}/", r.run.id)).unwrap();
+    assert_eq!(log_keys.len(), 1, "the log chunk must NOT be reclaimed");
+    let logs = RunRegistry::new(journal).logs(r.run.id, Some("main/s"), None).unwrap();
+    assert_eq!(logs[0].lines[0].msg, "writing partial output");
+}
+
+/// Kill-and-recover: the pre-crash failing attempt's logs remain readable
+/// after a fresh process resubmits the run to success — the flight
+/// recorder is part of the durable history, not of engine memory.
+#[test]
+fn resubmit_after_crash_preserves_pre_crash_logs() {
+    let mem = Arc::new(MemStorage::new());
+    let storage: Arc<dyn StorageClient> = mem.clone();
+    let gate = Arc::new(AtomicBool::new(true));
+    let g = Arc::clone(&gate);
+    let op = Arc::new(FnOp::new(
+        Signature::new().in_param("i", ParamType::Int),
+        move |ctx| {
+            let i = ctx.get_int("i")?;
+            ctx.log(LogLevel::Info, &format!("step {i}: running"));
+            if g.load(Ordering::SeqCst) && i == 2 {
+                ctx.log(LogLevel::Error, "pre-crash: power failure imminent");
+                return Err(OpError::Fatal("simulated crash".into()));
+            }
+            Ok(())
+        },
+    ));
+    let wf = Workflow::new("crashy")
+        .container(ContainerTemplate::new("op", op))
+        .steps(
+            Steps::new("main")
+                .then(Step::new("s1", "op").param("i", 1i64).key("s1"))
+                .then(Step::new("s2", "op").param("i", 2i64).key("s2"))
+                .then(Step::new("s3", "op").param("i", 3i64).key("s3")),
+        )
+        .entrypoint("main");
+
+    // "process" 1 dies after s2 fails
+    let run_id = {
+        let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+        let engine = Engine::builder().storage(storage.clone()).journal(journal).build();
+        let r = engine.run(&wf).unwrap();
+        assert!(!r.succeeded());
+        r.run.id
+    };
+
+    // "process" 2 recovers and finishes
+    gate.store(false, Ordering::SeqCst);
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let engine = Engine::builder().storage(storage).journal(journal.clone()).build();
+    let r2 = engine.resubmit(&wf, run_id).unwrap();
+    assert!(r2.succeeded(), "{:?}", r2.error);
+
+    let registry = RunRegistry::new(Arc::clone(&journal));
+    let all = registry.logs(run_id, Some("main/s2"), None).unwrap();
+    // attempt 0 (pre-crash, failed) and attempt 0 of the resubmission both
+    // flushed under the same path; the pre-crash ERROR line must be there
+    let flat: Vec<&str> =
+        all.iter().flat_map(|c| c.lines.iter().map(|l| l.msg.as_str())).collect();
+    assert!(
+        flat.contains(&"pre-crash: power failure imminent"),
+        "pre-crash logs lost: {flat:?}"
+    );
+    let rec = journal.replay(run_id).unwrap();
+    assert_eq!(rec.phase, RunPhase::Succeeded);
+    assert_eq!(rec.resubmissions, 1);
+    check::assert_all_drained(&engine, None, Some(&journal));
+}
+
+/// The `dflow logs --follow` pattern: a second "process" opens the same
+/// store, tails the journal with `RunWatch`, and materializes every
+/// `NodeLogs` pointer it sees by downloading the chunk — ending with
+/// exactly the lines the registry serves post-hoc.
+#[test]
+fn run_watch_tails_log_pointers_cross_process() {
+    let mem = Arc::new(MemStorage::new());
+    let storage: Arc<dyn StorageClient> = mem.clone();
+    let run_id = {
+        let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+        let engine = Engine::builder().storage(storage.clone()).journal(journal).build();
+        let r = engine.run(&logging_chain(3, None)).unwrap();
+        assert!(r.succeeded(), "{:?}", r.error);
+        r.run.id
+    };
+
+    // fresh handles = a different process sharing the store
+    let journal = Arc::new(Journal::open(storage).unwrap());
+    let store = Arc::clone(journal.storage());
+    let tailed: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = Arc::clone(&tailed);
+    let phase = RunWatch::new(Arc::clone(&journal), run_id)
+        .follow(Duration::from_millis(10), move |rec| {
+            if let JournalEvent::NodeLogs { key, .. } = &rec.event {
+                let bytes = store.download(key).unwrap();
+                for l in dflow::obs::logs::decode(&bytes) {
+                    sink.lock().unwrap().push(l.msg);
+                }
+            }
+        })
+        .unwrap();
+    assert_eq!(phase, RunPhase::Succeeded);
+
+    let expected: Vec<String> = RunRegistry::new(journal)
+        .logs(run_id, None, None)
+        .unwrap()
+        .iter()
+        .flat_map(|c| c.lines.iter().map(|l| l.msg.clone()))
+        .collect();
+    assert_eq!(*tailed.lock().unwrap(), expected);
+    assert_eq!(expected.len(), 6, "3 steps x 2 lines each");
+}
+
+/// The off-switch: with `log_capture(false)` every `ctx.log` is a no-op —
+/// no `NodeLogs` records, no `.logs/` objects, no metrics, and the run is
+/// otherwise unchanged.
+#[test]
+fn capture_off_is_fully_silent() {
+    let mem = Arc::new(MemStorage::new());
+    let storage: Arc<dyn StorageClient> = mem.clone();
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let engine = Engine::builder()
+        .storage(storage)
+        .journal(journal.clone())
+        .log_capture(false)
+        .build();
+    let r = engine.run(&logging_chain(2, None)).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+    assert_eq!(r.run.metrics.log_flushes.get(), 0);
+    assert_eq!(r.run.metrics.log_bytes.get(), 0);
+    assert!(mem.list(".logs/").unwrap().is_empty());
+    let registry = RunRegistry::new(journal);
+    assert!(registry.logs(r.run.id, None, None).unwrap().is_empty());
+    let timeline = registry.node_timeline(r.run.id, None).unwrap();
+    assert!(!timeline.iter().any(|rec| matches!(rec.event, JournalEvent::NodeLogs { .. })));
+}
+
+/// A timed-out attempt keeps what it said: the flush happens after the
+/// deadline fires, and the journaled `NodeCancelled` reason carries the
+/// captured tail.
+#[test]
+fn timed_out_attempt_flushes_logs_and_reason_carries_tail() {
+    let mem = Arc::new(MemStorage::new());
+    let storage: Arc<dyn StorageClient> = mem.clone();
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let engine = Engine::builder().storage(storage).journal(journal.clone()).build();
+    let op = Arc::new(FnOp::new(Signature::new(), |ctx| {
+        ctx.log(LogLevel::Info, "halfway through the long computation");
+        for _ in 0..200 {
+            ctx.checkpoint()?;
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        Ok(())
+    }));
+    let mut policy = StepPolicy::default();
+    policy.timeout = Some(Duration::from_millis(40));
+    let wf = Workflow::new("w")
+        .container(ContainerTemplate::new("slow", op))
+        .steps(Steps::new("main").then(Step::new("s", "slow").policy(policy)))
+        .entrypoint("main");
+    let r = engine.run(&wf).unwrap();
+    assert!(!r.succeeded());
+    assert!(r.error.as_deref().unwrap().contains("timed out"));
+
+    let registry = RunRegistry::new(Arc::clone(&journal));
+    let logs = registry.logs(r.run.id, Some("main/s"), None).unwrap();
+    assert_eq!(logs[0].lines[0].msg, "halfway through the long computation");
+    let timeline = registry.node_timeline(r.run.id, None).unwrap();
+    let reason = timeline
+        .iter()
+        .find_map(|rec| match &rec.event {
+            JournalEvent::NodeCancelled { reason, .. } => Some(reason.clone()),
+            _ => None,
+        })
+        .expect("a NodeCancelled record");
+    assert!(reason.contains("timed out"));
+    assert!(
+        reason.contains("halfway through the long computation"),
+        "no tail in cancel reason: {reason}"
+    );
+}
+
+/// A panicking OP's payload is recorded as the attempt's last log line
+/// and surfaces in the failure message.
+#[test]
+fn panic_payload_lands_in_logs_and_failure_message() {
+    let mem = Arc::new(MemStorage::new());
+    let storage: Arc<dyn StorageClient> = mem.clone();
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let engine = Engine::builder().storage(storage).journal(journal.clone()).build();
+    let op = Arc::new(FnOp::new(Signature::new(), |ctx| {
+        ctx.log(LogLevel::Info, "loading shard 7");
+        panic!("index out of range in shard 7");
+    }));
+    // panics are caught on the timed attempt path
+    let mut policy = StepPolicy::default();
+    policy.timeout = Some(Duration::from_secs(30));
+    let wf = Workflow::new("w")
+        .container(ContainerTemplate::new("p", op))
+        .steps(Steps::new("main").then(Step::new("s", "p").policy(policy)))
+        .entrypoint("main");
+    let r = engine.run(&wf).unwrap();
+    assert!(!r.succeeded());
+    let err = r.error.as_deref().unwrap();
+    assert!(err.contains("panicked"), "{err}");
+    assert!(err.contains("index out of range in shard 7"), "{err}");
+
+    let logs = RunRegistry::new(journal).logs(r.run.id, Some("main/s"), None).unwrap();
+    let msgs: Vec<&str> = logs[0].lines.iter().map(|l| l.msg.as_str()).collect();
+    assert_eq!(msgs, vec!["loading shard 7", "OP panicked: index out of range in shard 7"]);
+}
+
+/// Script OPs get capture for free: stdout lines land as INFO, stderr as
+/// WARN, and a failing script's output explains the failure.
+#[test]
+fn shell_op_streams_are_captured() {
+    let mem = Arc::new(MemStorage::new());
+    let storage: Arc<dyn StorageClient> = mem.clone();
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let engine = Engine::builder().storage(storage).journal(journal.clone()).build();
+    let op = ShellOp::new(
+        Signature::new(),
+        r#"
+echo "scanning 42 input files"
+echo "warning: checksum file missing" >&2
+exit 3
+"#,
+    );
+    let wf = Workflow::new("w")
+        .container(ContainerTemplate::new("sh", Arc::new(op)))
+        .steps(Steps::new("main").then(Step::new("s", "sh")))
+        .entrypoint("main");
+    let r = engine.run(&wf).unwrap();
+    assert!(!r.succeeded());
+
+    let logs = RunRegistry::new(Arc::clone(&journal)).logs(r.run.id, Some("main/s"), None).unwrap();
+    let lines = &logs[0].lines;
+    let info: Vec<&str> = lines
+        .iter()
+        .filter(|l| l.level == LogLevel::Info)
+        .map(|l| l.msg.as_str())
+        .collect();
+    let warn: Vec<&str> = lines
+        .iter()
+        .filter(|l| l.level == LogLevel::Warn)
+        .map(|l| l.msg.as_str())
+        .collect();
+    assert!(info.contains(&"scanning 42 input files"), "{info:?}");
+    assert!(warn.contains(&"warning: checksum file missing"), "{warn:?}");
+    // the forensic tail in the journaled failure includes the stderr line
+    let rec = journal.replay(r.run.id).unwrap();
+    assert!(rec.nodes["main/s"].message.contains("warning: checksum file missing"));
+}
+
+/// Ring-buffer truncation end to end: a chatty OP overflows its byte cap,
+/// the flushed stream leads with the explicit truncation marker, keeps
+/// the newest lines, and both the pointer and the registry agree.
+#[test]
+fn overflowing_buffer_truncates_oldest_with_explicit_marker() {
+    let mem = Arc::new(MemStorage::new());
+    let storage: Arc<dyn StorageClient> = mem.clone();
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let mut config = dflow::engine::EngineConfig::default();
+    config.log_buffer_bytes = 512; // tiny ring
+    let engine = Engine::builder()
+        .storage(storage)
+        .journal(journal.clone())
+        .config(config)
+        .build();
+    let op = Arc::new(FnOp::new(Signature::new(), |ctx| {
+        for i in 0..200 {
+            ctx.log(LogLevel::Info, &format!("progress line {i} with some padding text"));
+        }
+        Ok(())
+    }));
+    let wf = Workflow::new("w")
+        .container(ContainerTemplate::new("chatty", op))
+        .steps(Steps::new("main").then(Step::new("s", "chatty")))
+        .entrypoint("main");
+    let r = engine.run(&wf).unwrap();
+    assert!(r.succeeded(), "{:?}", r.error);
+
+    let logs = RunRegistry::new(journal).logs(r.run.id, Some("main/s"), None).unwrap();
+    let c = &logs[0];
+    assert!(c.truncated, "512-byte ring must overflow under 200 lines");
+    assert_eq!(c.lines[0].seq, 0, "stream must lead with the marker line");
+    assert!(c.lines[0].msg.contains("truncated"), "{}", c.lines[0].msg);
+    assert_eq!(
+        c.lines.last().unwrap().msg,
+        "progress line 199 with some padding text",
+        "the newest line always survives"
+    );
+}
+
+/// Service layer: per-tenant log byte/flush counters are folded at reap
+/// and exported under `dflow_svc_*` with tenant labels.
+#[test]
+fn service_exports_per_tenant_log_counters() {
+    let mem = Arc::new(MemStorage::new());
+    let storage: Arc<dyn StorageClient> = mem.clone();
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let engine = Arc::new(
+        Engine::builder()
+            .storage(storage)
+            .journal_appender(Appender::spawn(Arc::clone(&journal)))
+            .build(),
+    );
+    let svc = WorkflowService::start(engine, ServiceConfig::default()).unwrap();
+    svc.submit("acme", logging_chain(2, None)).unwrap();
+    assert!(svc.wait_idle(Duration::from_secs(30)), "service never drained");
+    assert!(svc.metrics().log_flushes.get("acme") >= 2, "reap must fold log counters");
+    assert!(svc.metrics().log_bytes.get("acme") > 0);
+    let text = svc.export_metrics().to_prometheus();
+    assert!(text.contains("dflow_svc_log_bytes_total"), "missing family:\n{text}");
+    assert!(text.contains("dflow_svc_log_flushes_total"));
+    assert!(text.contains(r#"tenant="acme""#));
+}
+
+/// Every `NodeLogs` pointer names a distinct `.logs/` object keyed by
+/// run, node path, and attempt — two runs never collide.
+#[test]
+fn log_keys_are_namespaced_per_run_and_attempt() {
+    let mem = Arc::new(MemStorage::new());
+    let storage: Arc<dyn StorageClient> = mem.clone();
+    let journal = Arc::new(Journal::open(storage.clone()).unwrap());
+    let engine = Engine::builder().storage(storage).journal(journal.clone()).build();
+    let a = engine.run(&logging_chain(2, None)).unwrap();
+    let b = engine.run(&logging_chain(2, None)).unwrap();
+    assert!(a.succeeded() && b.succeeded());
+    let registry = RunRegistry::new(journal);
+    let mut keys: BTreeMap<String, u64> = BTreeMap::new();
+    for id in [a.run.id, b.run.id] {
+        for c in registry.logs(id, None, None).unwrap() {
+            assert!(c.key.starts_with(&format!(".logs/run{id}/")), "{}", c.key);
+            *keys.entry(c.key).or_insert(0) += 1;
+        }
+    }
+    assert_eq!(keys.len(), 4, "2 runs x 2 steps");
+    assert!(keys.values().all(|&n| n == 1), "keys must be unique: {keys:?}");
+}
